@@ -1,0 +1,74 @@
+//! Multi-LoRA serving scenario (the paper's §1 motivation): many LoRA
+//! functions fine-tuned from few backbones, under a realistic mixed
+//! workload — shows how the coordinator shares backbones, plans
+//! pre-loading by arrival rate, and what it costs vs the baselines.
+//!
+//! Run: `cargo run --release --example multi_lora_serving`
+
+use serverless_lora::cluster::Cluster;
+use serverless_lora::cost::relative_cost_effectiveness;
+use serverless_lora::sim::workloads::{paper_workload, series_13b, series_7b};
+use serverless_lora::sim::{Engine, SystemConfig};
+use serverless_lora::trace::Pattern;
+use serverless_lora::util::table::{f, ms, Table};
+
+fn main() {
+    let duration = 3600.0;
+    println!("8 LoRA functions (4x Llama2-7B, 4x Llama2-13B) on 16 GPUs, 1h Normal trace\n");
+
+    let w = paper_workload(Pattern::Normal, duration, 42);
+    println!(
+        "workload: {} requests across {} functions",
+        w.requests.len(),
+        w.functions.len()
+    );
+
+    // vLLM is the cost-effectiveness baseline (= 1).
+    let (vm, vc, _) = Engine::new(
+        SystemConfig::vllm(),
+        Cluster::paper_multinode(),
+        w.clone(),
+        1,
+    )
+    .run();
+
+    let mut t = Table::new(
+        "Multi-LoRA serving comparison",
+        &["system", "TTFT-7B", "TTFT-13B", "E2E", "cost($)", "rel-cost-eff"],
+    );
+    for cfg in [
+        SystemConfig::vllm(),
+        SystemConfig::dlora(),
+        SystemConfig::serverless_llm(),
+        SystemConfig::instainfer(Pattern::Normal),
+        SystemConfig::serverless_lora(),
+    ] {
+        let name = cfg.name;
+        let (m, c, stats) =
+            Engine::new(cfg, Cluster::paper_multinode(), w.clone(), 1).run();
+        t.row(vec![
+            name.into(),
+            ms(m.subset(&series_7b()).ttft().mean),
+            ms(m.subset(&series_13b()).ttft().mean),
+            ms(m.e2e().mean),
+            f(c.total_usd()),
+            f(relative_cost_effectiveness(
+                m.e2e().mean,
+                c.total_usd(),
+                vm.e2e().mean,
+                vc.total_usd(),
+            )),
+        ]);
+        if name == "ServerlessLoRA" {
+            println!(
+                "ServerlessLoRA internals: {} preload decisions, {} offload events ({:.1} GB), {}/{} warm dispatches",
+                stats.preload_decisions,
+                stats.offload_events,
+                stats.offloaded_gb,
+                stats.warm_dispatches,
+                stats.warm_dispatches + stats.cold_dispatches,
+            );
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,26 @@
+//! Runtime hot-path profile: decode-step cost split (execute vs host
+//! round-trip of the KV cache) — feeds EXPERIMENTS.md §Perf.
+use serverless_lora::runtime::{Engine, Manifest};
+use std::time::Instant;
+fn main() -> anyhow::Result<()> {
+    let e = Engine::load(Manifest::default_dir("llama-tiny"))?;
+    println!("engine: compile {:.1}s for {} executables, backbone upload {:.3}s ({} MB)",
+        e.profile.compile_s, e.profile.n_executables, e.profile.backbone_upload_s,
+        e.profile.backbone_bytes / 1_000_000);
+    let inst = e.instance(0)?;
+    for b in [1usize, 8] {
+        let prompts: Vec<Vec<i32>> = (0..b).map(|i| vec![(i as i32)%100; 16]).collect();
+        let t0 = Instant::now();
+        let (logits, mut kv) = e.prefill(&inst, &prompts)?;
+        let prefill_ms = t0.elapsed().as_secs_f64()*1e3;
+        let mut next: Vec<i32> = logits.iter().map(|l| {
+            let mut bi = 0; for (i,&x) in l.iter().enumerate() { if x > l[bi] { bi = i; } } bi as i32
+        }).collect();
+        let n = 32;
+        let t0 = Instant::now();
+        for _ in 0..n { let l = e.decode(&inst, &next, &mut kv)?; next = l.iter().map(|v| { let mut bi=0; for (i,&x) in v.iter().enumerate() { if x > v[bi] { bi=i; } } bi as i32}).collect(); }
+        let tpot_ms = t0.elapsed().as_secs_f64()*1e3 / n as f64;
+        println!("batch {b}: prefill {prefill_ms:.1} ms, decode {tpot_ms:.2} ms/step");
+    }
+    Ok(())
+}

@@ -1,0 +1,21 @@
+use serverless_lora::cluster::Cluster;
+use serverless_lora::sim::workloads::{paper_workload, throughput_workload};
+use serverless_lora::sim::{Engine, SystemConfig};
+use serverless_lora::trace::Pattern;
+use std::time::Instant;
+fn main() {
+    // Saturating: 43k requests
+    let w = throughput_workload(900.0, 3);
+    let n = w.requests.len();
+    let t0 = Instant::now();
+    let (m, _, _) = Engine::new(SystemConfig::serverless_lora(), Cluster::new(1, 2, 8), w, 2).run();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("saturating sim: {} requests in {:.3}s = {:.0} req/s sim-throughput (served {})", n, dt, n as f64/dt, m.outcomes.len());
+    // 4h full-scale paper workload
+    let w = paper_workload(Pattern::Bursty, 4.0*3600.0, 11);
+    let n = w.requests.len();
+    let t0 = Instant::now();
+    let (m, _, _) = Engine::new(SystemConfig::serverless_lora(), Cluster::paper_multinode(), w, 1).run();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("4h bursty sim: {} requests in {:.3}s (served {})", n, dt, m.outcomes.len());
+}

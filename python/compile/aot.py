@@ -1,0 +1,217 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts for the Rust
+runtime, export weights, and write golden outputs for cross-language tests.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Outputs (under ``artifacts/``):
+
+    <model>/prefill_b{B}_s{S}.hlo.txt   prefill graph per (batch, seq) bucket
+    <model>/decode_b{B}.hlo.txt         lock-step decode graph per batch bucket
+    <model>/backbone.bin                backbone weights, f32 LE, manifest order
+    <model>/adapter_{i}.bin             one per LoRA adapter (4, as the paper)
+    <model>/manifest.json               shapes, buckets, artifact inventory
+    <model>/golden.json                 prefill/decode logits for fixed prompts
+
+Run via ``make artifacts`` (no-op when inputs are unchanged) — Python never
+runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import CONFIGS, LoraConfig
+from . import model as M
+
+try:  # jax moved the private xla_client around across versions
+    from jax._src.lib import xla_client as xc
+except ImportError:  # pragma: no cover
+    from jax.lib import xla_client as xc  # type: ignore
+
+BATCH_BUCKETS = [1, 2, 4, 8]
+SEQ_BUCKETS = [16, 64]
+N_ADAPTERS = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    ``as_hlo_text(True)`` = print_large_constants. CRITICAL: the default
+    elides big constant literals as ``{...}``, which xla_extension 0.5.1's
+    text parser silently turns into garbage — e.g. the RoPE angle tables
+    (baked as constants by jax's constant folding) came back as zeros and
+    corrupted every attention layer. Always print constants in full.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _write_flat(path, params):
+    """Concatenate f32 arrays little-endian in spec order."""
+    with open(path, "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+
+
+def lower_prefill(cfg, lora, batch, seq):
+    fn = lambda bb, ad, toks: M.prefill(cfg, lora, bb, ad, toks)
+    bb_specs = [_spec(s) for _, s in M.backbone_param_specs(cfg)]
+    ad_specs = [_spec(s) for _, s in M.adapter_param_specs(cfg, lora)]
+    return jax.jit(fn).lower(bb_specs, ad_specs, _spec((batch, seq), jnp.int32))
+
+
+def lower_decode(cfg, lora, batch):
+    fn = lambda bb, ad, tok, kc, vc, pos: M.decode_step(
+        cfg, lora, bb, ad, tok, kc, vc, pos
+    )
+    bb_specs = [_spec(s) for _, s in M.backbone_param_specs(cfg)]
+    ad_specs = [_spec(s) for _, s in M.adapter_param_specs(cfg, lora)]
+    kv = _spec(
+        (cfg.n_layers, batch, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+    )
+    return jax.jit(fn).lower(
+        bb_specs, ad_specs, _spec((batch,), jnp.int32), kv, kv,
+        _spec((), jnp.int32),
+    )
+
+
+def golden_prompt(batch, seq, vocab, adapter_id):
+    """Deterministic prompt, reproduced bit-exactly by the Rust tests."""
+    # Simple LCG so the Rust side can regenerate without numpy.
+    state = 0x9E3779B9 ^ (batch * 1000003 + seq * 101 + adapter_id)
+    toks = []
+    for _ in range(batch * seq):
+        state = (state * 1664525 + 1013904223) % (1 << 32)
+        toks.append(state % vocab)
+    return np.asarray(toks, np.int32).reshape(batch, seq)
+
+
+def build(model_name: str, out_root: str, quick: bool) -> None:
+    cfg = CONFIGS[model_name]
+    lora = LoraConfig()
+    out = os.path.join(out_root, model_name)
+    os.makedirs(out, exist_ok=True)
+
+    batches = [1, 2] if quick else BATCH_BUCKETS
+    seqs = [16] if quick else SEQ_BUCKETS
+
+    backbone = M.init_backbone(cfg)
+    adapters = [init for init in (
+        M.init_adapter(cfg, lora, i) for i in range(N_ADAPTERS)
+    )]
+
+    _write_flat(os.path.join(out, "backbone.bin"), backbone)
+    for i, ad in enumerate(adapters):
+        _write_flat(os.path.join(out, f"adapter_{i}.bin"), ad)
+
+    artifacts = []
+    for b in batches:
+        for s in seqs:
+            name = f"prefill_b{b}_s{s}"
+            t0 = time.time()
+            text = to_hlo_text(lower_prefill(cfg, lora, b, s))
+            path = os.path.join(out, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            artifacts.append({
+                "name": name, "kind": "prefill", "batch": b, "seq": s,
+                "file": f"{name}.hlo.txt",
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            })
+            print(f"lowered {name}: {len(text)} chars in {time.time()-t0:.1f}s")
+        name = f"decode_b{b}"
+        t0 = time.time()
+        text = to_hlo_text(lower_decode(cfg, lora, b))
+        path = os.path.join(out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append({
+            "name": name, "kind": "decode", "batch": b, "seq": cfg.max_seq,
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        print(f"lowered {name}: {len(text)} chars in {time.time()-t0:.1f}s")
+
+    # Goldens: prefill logits (+ one decode step) for fixed prompts, one per
+    # adapter, smallest bucket — cross-checked by rust/tests/runtime_golden.rs.
+    goldens = []
+    b, s = batches[0], seqs[0]
+    pf = jax.jit(lambda bb, ad, t: M.prefill(cfg, lora, bb, ad, t))
+    dc = jax.jit(
+        lambda bb, ad, t, kc, vc, p: M.decode_step(cfg, lora, bb, ad, t, kc, vc, p)
+    )
+    for ai in range(min(2, N_ADAPTERS) if quick else N_ADAPTERS):
+        toks = golden_prompt(b, s, cfg.vocab, ai)
+        logits, kc, vc = pf(backbone, adapters[ai], jnp.asarray(toks))
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        l2, _, _ = dc(backbone, adapters[ai], nxt, kc, vc,
+                      jnp.asarray(s, jnp.int32))
+        goldens.append({
+            "adapter": ai, "batch": b, "seq": s,
+            "prefill_logits_head": np.asarray(logits)[0, :8].tolist(),
+            "prefill_argmax": np.asarray(jnp.argmax(logits, -1)).tolist(),
+            "decode_logits_head": np.asarray(l2)[0, :8].tolist(),
+            "decode_argmax": np.asarray(jnp.argmax(l2, -1)).tolist(),
+        })
+
+    bb_specs = [
+        {"name": n, "shape": list(s)} for n, s in M.backbone_param_specs(cfg)
+    ]
+    ad_specs = [
+        {"name": n, "shape": list(s)}
+        for n, s in M.adapter_param_specs(cfg, lora)
+    ]
+    manifest = {
+        "model": model_name,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq, "head_dim": cfg.head_dim,
+            "param_count": cfg.param_count(),
+        },
+        "lora": {"rank": lora.rank, "alpha": lora.alpha, "scale": lora.scale},
+        "n_adapters": N_ADAPTERS,
+        "batch_buckets": batches,
+        "seq_buckets": seqs,
+        "backbone_params": bb_specs,
+        "adapter_params": ad_specs,
+        "artifacts": artifacts,
+        "goldens": goldens,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out}/manifest.json ({len(artifacts)} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="llama-tiny", choices=list(CONFIGS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small bucket set (CI / smoke)")
+    args = ap.parse_args()
+    build(args.model, args.out, args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Model configurations (see DESIGN.md §5).
+
+``llama-tiny`` is the real serving model (PJRT CPU path, e2e example,
+tests). ``llama-100m`` is the larger end-to-end driver. The 7B/13B entries
+exist so the L3 simulator and the artifact model share one source of truth
+for parameter counts and memory sizes; they are never AOT-compiled here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Exact parameter count of the backbone (tied-free lm head)."""
+        c = self
+        per_layer = (
+            c.d_model * c.d_model  # wq
+            + 2 * c.d_model * (c.n_kv_heads * self.head_dim)  # wk, wv
+            + c.d_model * c.d_model  # wo
+            + 3 * c.d_model * c.d_ff  # gate, up, down
+            + 2 * c.d_model  # two RMSNorm gammas
+        )
+        return c.vocab * c.d_model * 2 + c.d_model + c.n_layers * per_layer
+
+    def bytes_fp16(self) -> int:
+        return 2 * self.param_count()
+
+    def bytes_fp32(self) -> int:
+        return 4 * self.param_count()
+
+
+@dataclasses.dataclass(frozen=True)
+class LoraConfig:
+    """LoRA adapter hyper-parameters. Targets q/k/v/o as in the common
+    Llama2 adapter recipe the paper pulls from HuggingFace."""
+
+    rank: int = 8
+    alpha: float = 16.0
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+
+CONFIGS = {
+    "llama-tiny": ModelConfig(
+        name="llama-tiny", vocab=512, d_model=256, n_layers=4,
+        n_heads=8, n_kv_heads=4, d_ff=688, max_seq=256,
+    ),
+    "llama-100m": ModelConfig(
+        name="llama-100m", vocab=4096, d_model=768, n_layers=12,
+        n_heads=12, n_kv_heads=4, d_ff=2048, max_seq=512,
+    ),
+    # Modeled only (simulator coefficients) — never compiled in this repo.
+    "llama2-7b": ModelConfig(
+        name="llama2-7b", vocab=32000, d_model=4096, n_layers=32,
+        n_heads=32, n_kv_heads=32, d_ff=11008, max_seq=4096,
+    ),
+    "llama2-13b": ModelConfig(
+        name="llama2-13b", vocab=32000, d_model=5120, n_layers=40,
+        n_heads=40, n_kv_heads=40, d_ff=13824, max_seq=4096,
+    ),
+}

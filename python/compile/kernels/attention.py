@@ -1,0 +1,83 @@
+"""Causal attention as a Pallas kernel (prefill hot loop).
+
+A single-pass softmax-attention kernel over one (batch, head) slice.  The
+grid walks query blocks; for each query block the full K/V stripe is
+resident in VMEM (sequence lengths in this repo are small enough — the
+serving path buckets prefill at <= 256 tokens — that a [S, D] stripe fits
+comfortably; a production TPU kernel would add an inner KV-block loop with
+online softmax, which interpret mode would obscure without exercising any
+additional HLO structure).
+
+Hardware adaptation: the CUDA version of this loop (FlashAttention) tiles
+over shared memory per threadblock; here BlockSpec expresses the same
+HBM->VMEM schedule, and the MXU consumes the [bq, D] @ [D, S] score matmul.
+
+interpret=True everywhere — see lora_matmul.py for why.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale, causal, kv_len):
+    """One query block against the full KV stripe.
+
+    q_ref [bq, D]; k_ref [S, D]; v_ref [S, D]; o_ref [bq, D].
+    """
+    qi = pl.program_id(0)
+    bq = q_ref.shape[0]
+    q = q_ref[...]
+    k = k_ref[...]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+    if causal:
+        # Global query index of each row in this block.
+        row = qi * bq + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        # Standard causal offset: query i attends keys j <= i + (Sk - Sq_total)
+        # handled by the caller always passing aligned prefill (Sk == Sq).
+        scores = jnp.where(col <= row, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    z = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot((p / z).astype(v_ref.dtype), v_ref[...])
+
+
+def attention(q, k, v, *, causal=True, block_q=None):
+    """Causal attention for one (batch, head) slice: [Sq,D],[Sk,D],[Sk,D]->[Sq,D].
+
+    For causal masking Sq must equal Sk (prefill); decode (Sq=1) uses
+    ``causal=False`` against the valid prefix, matching ref.attention_ref.
+    """
+    sq, d = q.shape
+    sk = k.shape[0]
+    if causal:
+        assert sq == sk, "causal prefill kernel expects aligned Q/K lengths"
+    bq = block_q or min(64, sq)
+    while sq % bq:
+        bq -= 1
+    kernel = functools.partial(
+        _attn_kernel, sm_scale=1.0 / (d**0.5), causal=causal, kv_len=sk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(sq // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((sk, d), lambda i: (0, 0)),
+            pl.BlockSpec((sk, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def attention_bh(q, k, v, *, causal=True):
+    """Batched-heads wrapper: q [B, H, S, D], k/v [B, H, S, D] -> [B, H, S, D]."""
+    fn = functools.partial(attention, causal=causal)
+    return jax.vmap(jax.vmap(fn))(q, k, v)

@@ -1,0 +1,110 @@
+"""Fused unmerged-LoRA projection as a Pallas kernel (L1 hot spot).
+
+The paper (§4.4) keeps backbone and adapter computation *separate* so the
+shared backbone weight stays read-only:
+
+    y = x @ W  +  scale * (x @ A) @ B
+
+The naive formulation launches three matmuls and reads the activation tile
+``x`` from HBM twice.  This kernel fuses all three into one Pallas grid so
+each ``x`` tile is loaded into VMEM once and reused for both the backbone
+matmul (MXU-shaped tiles) and the low-rank adapter pair.  This is the
+TPU-side analogue of Punica's SGMV trick on CUDA: the adapter matmuls are
+tiny and memory-bound, so their cost disappears entirely once they ride on
+the backbone tile schedule.
+
+Hardware adaptation (DESIGN.md §2): CUDA threadblock tiling becomes a Pallas
+grid over (M/bm, N/bn); the K-reduction runs as the innermost grid axis with
+an accumulator held in the output ref (VMEM-resident across the K loop).
+The LoRA rank r is small (8–64) so ``A``'s [bk, r] slice and ``B``'s [r, bn]
+slice both fit beside the backbone tiles in VMEM.
+
+All `pallas_call`s use ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers to plain HLO that any backend
+executes (and that `aot.py` can export as HLO text for the Rust runtime).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lora_matmul_kernel(x_ref, w_ref, a_ref, b_ref, o_ref, *, scale, nsteps):
+    """One (bm, bn) output tile; grid axis 2 walks the K reduction.
+
+    x_ref [bm, bk] — activation tile, read ONCE per grid step and reused by
+                     both the backbone and adapter products.
+    w_ref [bk, bn] — backbone tile (shared, read-only).
+    a_ref [bk, r]  — LoRA down-projection slice for this K step.
+    b_ref [r, bn]  — LoRA up-projection slice for this N tile (K-invariant).
+    o_ref [bm, bn] — accumulator, VMEM-resident across the K loop.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    # Backbone partial product: MXU-shaped [bm, bk] @ [bk, bn].
+    acc = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    # Adapter partial product over the same K slice: (x @ A_k) @ B.
+    # Distributing the K-sum through the low-rank pair is exact:
+    #   sum_k (x_k A_k) B == (x A) B.
+    xa = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + scale * jnp.dot(xa, b_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def lora_matmul(x, w, a, b, scale, *, block_m=None, block_n=None, block_k=None):
+    """Fused y = x @ W + scale * (x @ A) @ B via a single Pallas kernel.
+
+    Shapes: x [M, K], w [K, N], a [K, r], b [r, N] -> [M, N].
+    Block sizes default to MXU-friendly tiles clamped to the problem size.
+    Dimensions must be divisible by the chosen blocks (the AOT path always
+    pads to multiples of 8; tests exercise ragged shapes via the clamping).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    r = a.shape[1]
+    assert a.shape == (k, r) and b.shape == (r, n), (a.shape, b.shape)
+
+    bm = block_m or min(128, m)
+    bn = block_n or min(128, n)
+    bk = block_k or min(128, k)
+    # Clamp to divisors so ragged test shapes still work.
+    while m % bm:
+        bm -= 1
+    while n % bn:
+        bn -= 1
+    while k % bk:
+        bk -= 1
+    nsteps = k // bk
+
+    kernel = functools.partial(_lora_matmul_kernel, scale=scale, nsteps=nsteps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nsteps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),  # x: row tile walks K
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),  # w: K x N tile
+            pl.BlockSpec((bk, r), lambda i, j, s: (s, 0)),   # a: K slice, full rank
+            pl.BlockSpec((r, bn), lambda i, j, s: (0, j)),   # b: full rank, N tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, a, b)
+
+
+def lora_matmul_batched(x, w, a, b, scale):
+    """vmap-free batched wrapper: flattens [..., K] leading dims to M."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    y = lora_matmul(x.reshape(-1, k), w, a, b, scale)
+    return y.reshape(*lead, w.shape[1])

@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only.  The pytest suite asserts
+``assert_allclose(kernel(...), ref(...))`` over a hypothesis sweep of
+shapes, ranks and dtypes — this is the core correctness signal for L1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, scale):
+    """Unmerged LoRA projection:  y = x @ W + scale * (x @ A) @ B.
+
+    This is the paper's §4.4 "unmerged inference": the backbone matmul and
+    the low-rank adapter matmul are computed separately and summed, so the
+    shared backbone weight ``W`` stays read-only.
+
+    Shapes: x [M, K], w [K, N], a [K, r], b [r, N]  ->  [M, N].
+    """
+    return jnp.matmul(x, w) + scale * jnp.matmul(jnp.matmul(x, a), b)
+
+
+def attention_ref(q, k, v, causal=True):
+    """Scaled dot-product attention over a single (batch, head) slice.
+
+    Shapes: q [Sq, D], k [Sk, D], v [Sk, D]  ->  [Sq, D].
+    ``causal`` masks position j > i + (Sk - Sq) (standard causal offset so a
+    decode step with Sq=1 attends to the full prefix).
+    """
+    d = q.shape[-1]
+    scores = jnp.matmul(q, k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if causal:
+        sq, sk = q.shape[0], k.shape[0]
+        offset = sk - sq
+        i = jnp.arange(sq)[:, None]
+        j = jnp.arange(sk)[None, :]
+        mask = j <= i + offset
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.matmul(p, v)
+
+
+def rmsnorm_ref(x, gamma, eps=1e-5):
+    """RMSNorm: x * gamma / rms(x)."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * gamma * (1.0 / jnp.sqrt(ms + eps))
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """Llama SwiGLU MLP: (silu(x Wg) * (x Wu)) Wd."""
+    g = jnp.matmul(x, w_gate)
+    u = jnp.matmul(x, w_up)
+    return jnp.matmul(g * (1.0 / (1.0 + jnp.exp(-g))) * u, w_down)

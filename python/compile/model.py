@@ -1,0 +1,321 @@
+"""L2: Llama-architecture transformer with unmerged LoRA (JAX, build-time).
+
+The forward graphs defined here — ``prefill`` and ``decode_step`` — are the
+compute the Rust coordinator serves.  They call the L1 Pallas kernels
+(`kernels.lora_matmul`, `kernels.attention`) so the kernels lower into the
+same HLO module that `aot.py` exports as text for the PJRT runtime.
+
+Design points that mirror the paper:
+
+* **Unmerged LoRA** (§4.4): every attention projection computes
+  ``x @ W + scale * (x @ A) @ B`` with the backbone ``W`` untouched — the
+  exact property that lets the Rust runtime share one set of backbone
+  buffers (read-only) across many isolated function instances while each
+  instance supplies its own adapter buffers.
+* **Backbone / adapter parameter split**: ``prefill``/``decode_step`` take
+  the backbone parameter list and the adapter parameter list as *separate
+  runtime inputs* (never baked as constants), so the Rust side can bind the
+  shared backbone buffers and per-function adapter buffers independently.
+* **Function-level batching** (§4.2): all requests in a batch enter prefill
+  together and decode in lockstep, so a single scalar ``pos`` suffices.
+
+Parameter layout (positional, mirrored by `aot.py`'s manifest and the Rust
+loader `rust/src/runtime/weights.rs`):
+
+    backbone: embed,
+              [per layer] rms_attn, wq, wk, wv, wo, rms_mlp, w_gate, w_up, w_down,
+              rms_final, lm_head
+    adapter:  [per layer] a_q, b_q, a_k, b_k, a_v, b_v, a_o, b_o
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import CONFIGS, LoraConfig, ModelConfig
+from .kernels.attention import attention_bh
+from .kernels.lora_matmul import lora_matmul_batched
+from .kernels.ref import rmsnorm_ref
+
+# ---------------------------------------------------------------------------
+# Parameter plumbing
+
+
+def backbone_param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) list for the backbone. Single source of truth
+    for model.py, aot.py's manifest, and (via the manifest) the Rust loader."""
+    d, kv = cfg.d_model, cfg.n_kv_heads * cfg.head_dim
+    specs = [("embed", (cfg.vocab, d))]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.rms_attn", (d,)),
+            (f"l{l}.wq", (d, d)),
+            (f"l{l}.wk", (d, kv)),
+            (f"l{l}.wv", (d, kv)),
+            (f"l{l}.wo", (d, d)),
+            (f"l{l}.rms_mlp", (d,)),
+            (f"l{l}.w_gate", (d, cfg.d_ff)),
+            (f"l{l}.w_up", (d, cfg.d_ff)),
+            (f"l{l}.w_down", (cfg.d_ff, d)),
+        ]
+    specs += [("rms_final", (d,)), ("lm_head", (d, cfg.vocab))]
+    return specs
+
+
+def adapter_param_specs(cfg: ModelConfig, lora: LoraConfig):
+    """Ordered (name, shape) list for one LoRA adapter (q/k/v/o targets)."""
+    d, kv, r = cfg.d_model, cfg.n_kv_heads * cfg.head_dim, lora.rank
+    specs = []
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.a_q", (d, r)), (f"l{l}.b_q", (r, d)),
+            (f"l{l}.a_k", (d, r)), (f"l{l}.b_k", (r, kv)),
+            (f"l{l}.a_v", (d, r)), (f"l{l}.b_v", (r, kv)),
+            (f"l{l}.a_o", (d, r)), (f"l{l}.b_o", (r, d)),
+        ]
+    return specs
+
+
+def init_backbone(cfg: ModelConfig, seed: int = 0):
+    """Deterministic random backbone weights (scaled for stable logits)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in backbone_param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("rms_attn", "rms_mlp", "rms_final")):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return params
+
+
+def init_adapter(cfg: ModelConfig, lora: LoraConfig, seed: int):
+    """Deterministic adapter weights. B starts non-zero (a *trained* adapter:
+    freshly-initialised LoRA has B=0, which would make every adapter a
+    no-op and hide sharing bugs)."""
+    key = jax.random.PRNGKey(1000 + seed)
+    params = []
+    for name, shape in adapter_param_specs(cfg, lora):
+        key, sub = jax.random.split(key)
+        params.append(
+            jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(shape[0])
+        )
+    return params
+
+
+def _unflatten(cfg: ModelConfig, backbone):
+    it = iter(backbone)
+    embed = next(it)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append([next(it) for _ in range(9)])
+    rms_final = next(it)
+    lm_head = next(it)
+    return embed, layers, rms_final, lm_head
+
+
+def _unflatten_adapter(cfg: ModelConfig, adapter):
+    it = iter(adapter)
+    return [[next(it) for _ in range(8)] for _ in range(cfg.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def _rope(x, positions, theta):
+    """Rotary embedding. x [B, H, S, D]; positions [S] (absolute)."""
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[:, None].astype(jnp.float32) * inv[None, :]  # [S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+
+
+def _proj(x, w, a, b, scale):
+    """Unmerged LoRA projection via the fused Pallas kernel."""
+    return lora_matmul_batched(x, w, a, b, scale)
+
+
+def _heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)  # [B, H, S, hd]
+
+
+def _attn_block(cfg, lora_scale, layer, adapter, x, positions, kv_slot):
+    """Attention with unmerged LoRA on q/k/v/o.
+
+    Returns (out [B,S,d], k_new [B,KVH,S,hd], v_new [B,KVH,S,hd]).
+    ``kv_slot`` is None for prefill (self-attend over x) or
+    (k_cache, v_cache, pos) for decode (attend over prefix <= pos).
+    """
+    rms_attn, wq, wk, wv, wo, *_ = layer
+    a_q, b_q, a_k, b_k, a_v, b_v, a_o, b_o = adapter
+    h = rmsnorm_ref(x, rms_attn, cfg.norm_eps)
+    q = _proj(h, wq, a_q, b_q, lora_scale)
+    k = _proj(h, wk, a_k, b_k, lora_scale)
+    v = _proj(h, wv, a_v, b_v, lora_scale)
+    hd = cfg.head_dim
+    q = _heads(q, cfg.n_heads, hd)
+    k = _heads(k, cfg.n_kv_heads, hd)
+    v = _heads(v, cfg.n_kv_heads, hd)
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+
+    rep = cfg.n_heads // cfg.n_kv_heads
+    if kv_slot is None:
+        # Prefill: causal attention over the (aligned) sequence via the
+        # Pallas flash-style kernel.
+        kx = jnp.repeat(k, rep, axis=1)
+        vx = jnp.repeat(v, rep, axis=1)
+        o = attention_bh(q, kx, vx, causal=True)  # [B, H, S, hd]
+    else:
+        # Decode: masked attention over the static-length cache.
+        k_cache, v_cache, pos = kv_slot  # [B, KVH, Smax, hd], scalar pos
+        kx = jnp.repeat(k_cache, rep, axis=1)
+        vx = jnp.repeat(v_cache, rep, axis=1)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, kx) / jnp.sqrt(
+            jnp.asarray(hd, jnp.float32)
+        )
+        idx = jnp.arange(kx.shape[2])
+        mask = idx[None, None, None, :] <= pos
+        scores = jnp.where(mask, scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+
+    bsz, _, s, _ = o.shape
+    o = o.transpose(0, 2, 1, 3).reshape(bsz, s, cfg.d_model)
+    out = _proj(o, wo, a_o, b_o, lora_scale)
+    return out, k, v
+
+
+def _mlp_block(cfg, layer, x):
+    rms_mlp, w_gate, w_up, w_down = layer[5], layer[6], layer[7], layer[8]
+    h = rmsnorm_ref(x, rms_mlp, cfg.norm_eps)
+    g = jnp.matmul(h, w_gate)
+    u = jnp.matmul(h, w_up)
+    return jnp.matmul(jax.nn.silu(g) * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Public graphs (AOT entry points)
+
+
+def prefill(cfg: ModelConfig, lora: LoraConfig, backbone, adapter, tokens):
+    """Prefill a batch of aligned prompts.
+
+    tokens [B, S] int32  ->  (logits [B, vocab] for the last position,
+                              k_cache [L, B, KVH, Smax, hd],
+                              v_cache [L, B, KVH, Smax, hd])
+
+    The caches are padded to ``cfg.max_seq`` so `decode_step` consumes them
+    without reshaping; positions past S are zero and masked off by pos.
+    """
+    embed, layers, rms_final, lm_head = _unflatten(cfg, backbone)
+    adapters = _unflatten_adapter(cfg, adapter)
+    bsz, s = tokens.shape
+    x = jnp.take(embed, tokens, axis=0)  # [B, S, d]
+    positions = jnp.arange(s)
+    k_caches, v_caches = [], []
+    for layer, ad in zip(layers, adapters):
+        attn, k, v = _attn_block(cfg, lora.scale, layer, ad, x, positions, None)
+        x = x + attn
+        x = x + _mlp_block(cfg, layer, x)
+        pad = cfg.max_seq - s
+        k_caches.append(jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        v_caches.append(jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))))
+    x = rmsnorm_ref(x, rms_final, cfg.norm_eps)
+    logits = jnp.matmul(x[:, -1, :], lm_head)  # [B, vocab]
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def decode_step(cfg: ModelConfig, lora: LoraConfig, backbone, adapter,
+                token, k_cache, v_cache, pos):
+    """One lock-step decode step for a batch.
+
+    token [B] int32; k_cache/v_cache [L, B, KVH, Smax, hd]; pos scalar int32
+    (index the new token is written at; it attends to positions <= pos).
+    Returns (logits [B, vocab], k_cache', v_cache').
+    """
+    embed, layers, rms_final, lm_head = _unflatten(cfg, backbone)
+    adapters = _unflatten_adapter(cfg, adapter)
+    x = jnp.take(embed, token[:, None], axis=0)  # [B, 1, d]
+    positions = jnp.atleast_1d(pos).astype(jnp.int32)
+    new_k, new_v = [], []
+    for li, (layer, ad) in enumerate(zip(layers, adapters)):
+        kc, vc = k_cache[li], v_cache[li]
+        # Write the new K/V at pos first, then attend over the prefix.
+        rms_attn, wq, wk, wv, wo, *_ = layer
+        # _attn_block computes k,v for the new token; do the cache insert here
+        # so the block sees the updated cache.
+        h = rmsnorm_ref(x, layer[0], cfg.norm_eps)
+        a_q, b_q, a_k, b_k, a_v, b_v, a_o, b_o = ad
+        k1 = _proj(h, wk, a_k, b_k, lora.scale)
+        v1 = _proj(h, wv, a_v, b_v, lora.scale)
+        k1 = _heads(k1, cfg.n_kv_heads, cfg.head_dim)
+        k1 = _rope(k1, positions, cfg.rope_theta)
+        v1 = _heads(v1, cfg.n_kv_heads, cfg.head_dim)
+        kc = jax.lax.dynamic_update_slice(kc, k1, (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v1, (0, 0, pos, 0))
+        attn, _, _ = _attn_block(
+            cfg, lora.scale, layer, ad, x, positions, (kc, vc, pos)
+        )
+        x = x + attn
+        x = x + _mlp_block(cfg, layer, x)
+        new_k.append(kc)
+        new_v.append(vc)
+    x = rmsnorm_ref(x, rms_final, cfg.norm_eps)
+    logits = jnp.matmul(x[:, -1, :], lm_head)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def prefill_ref(cfg, lora, backbone, adapter, tokens):
+    """Reference prefill using only jnp ops (no Pallas) — the L2 oracle."""
+    from .kernels import ref as R
+
+    embed, layers, rms_final, lm_head = _unflatten(cfg, backbone)
+    adapters = _unflatten_adapter(cfg, adapter)
+    bsz, s = tokens.shape
+    x = jnp.take(embed, tokens, axis=0)
+    positions = jnp.arange(s)
+    for layer, ad in zip(layers, adapters):
+        rms_attn, wq, wk, wv, wo, rms_mlp, w_gate, w_up, w_down = layer
+        a_q, b_q, a_k, b_k, a_v, b_v, a_o, b_o = ad
+        h = R.rmsnorm_ref(x, rms_attn, cfg.norm_eps)
+        sc = lora.scale
+        q = R.lora_matmul_ref(h.reshape(-1, cfg.d_model), wq, a_q, b_q, sc)
+        k = R.lora_matmul_ref(h.reshape(-1, cfg.d_model), wk, a_k, b_k, sc)
+        v = R.lora_matmul_ref(h.reshape(-1, cfg.d_model), wv, a_v, b_v, sc)
+        hd = cfg.head_dim
+        q = _heads(q.reshape(bsz, s, -1), cfg.n_heads, hd)
+        k = _heads(k.reshape(bsz, s, -1), cfg.n_kv_heads, hd)
+        v = _heads(v.reshape(bsz, s, -1), cfg.n_kv_heads, hd)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        rep = cfg.n_heads // cfg.n_kv_heads
+        kx, vx = jnp.repeat(k, rep, axis=1), jnp.repeat(v, rep, axis=1)
+        o = jnp.stack([
+            jnp.stack([
+                R.attention_ref(q[bi, hi], kx[bi, hi], vx[bi, hi], causal=True)
+                for hi in range(cfg.n_heads)
+            ])
+            for bi in range(bsz)
+        ])
+        o = o.transpose(0, 2, 1, 3).reshape(bsz, s, cfg.d_model)
+        o = R.lora_matmul_ref(o.reshape(-1, cfg.d_model), wo, a_o, b_o, sc)
+        x = x + o.reshape(bsz, s, cfg.d_model)
+        h2 = R.rmsnorm_ref(x, rms_mlp, cfg.norm_eps)
+        x = x + R.swiglu_ref(h2, w_gate, w_up, w_down)
+    x = R.rmsnorm_ref(x, rms_final, cfg.norm_eps)
+    return jnp.matmul(x[:, -1, :], lm_head)

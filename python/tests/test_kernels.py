@@ -1,0 +1,186 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/ranks/scales; assert_allclose against the oracle is
+THE core correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref as R
+from compile.kernels.attention import attention, attention_bh
+from compile.kernels.lora_matmul import lora_matmul, lora_matmul_batched
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------- LoRA
+
+
+class TestLoraMatmul:
+    def test_matches_ref_basic(self):
+        x, w = _arr(32, 64), _arr(64, 48)
+        a, b = _arr(64, 8), _arr(8, 48)
+        assert_allclose(
+            lora_matmul(x, w, a, b, 2.0), R.lora_matmul_ref(x, w, a, b, 2.0),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_zero_adapter_is_backbone_only(self):
+        """With B = 0 the output must equal the plain backbone matmul —
+        the 'fresh adapter is a no-op' property of LoRA."""
+        x, w, a = _arr(16, 32), _arr(32, 24), _arr(32, 4)
+        b = jnp.zeros((4, 24), jnp.float32)
+        assert_allclose(
+            lora_matmul(x, w, a, b, 2.0), jnp.matmul(x, w), rtol=1e-5, atol=1e-6
+        )
+
+    def test_zero_scale_is_backbone_only(self):
+        x, w = _arr(16, 32), _arr(32, 24)
+        a, b = _arr(32, 4), _arr(4, 24)
+        assert_allclose(
+            lora_matmul(x, w, a, b, 0.0), jnp.matmul(x, w), rtol=1e-5, atol=1e-6
+        )
+
+    def test_equivalent_to_merged_weights(self):
+        """Unmerged LoRA must equal inference with W' = W + scale*A@B.
+        This is the §4.4 claim that separation does not change accuracy."""
+        x, w = _arr(16, 32), _arr(32, 24)
+        a, b = _arr(32, 4), _arr(4, 24)
+        merged = w + 1.5 * (a @ b)
+        assert_allclose(
+            lora_matmul(x, w, a, b, 1.5), jnp.matmul(x, merged),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_batched_wrapper(self):
+        x = _arr(2, 5, 32)
+        w, a, b = _arr(32, 24), _arr(32, 4), _arr(4, 24)
+        y = lora_matmul_batched(x, w, a, b, 2.0)
+        assert y.shape == (2, 5, 24)
+        yr = R.lora_matmul_ref(x.reshape(-1, 32), w, a, b, 2.0).reshape(2, 5, 24)
+        assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 48),
+        k=st.integers(1, 64),
+        n=st.integers(1, 48),
+        r=st.integers(1, 16),
+        scale=st.floats(0.0, 4.0),
+    )
+    def test_hypothesis_shapes(self, m, k, n, r, scale):
+        rng = np.random.default_rng(m * 1000 + k * 100 + n * 10 + r)
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        a = jnp.asarray(rng.normal(size=(k, r)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(r, n)).astype(np.float32))
+        assert_allclose(
+            lora_matmul(x, w, a, b, scale),
+            R.lora_matmul_ref(x, w, a, b, scale),
+            rtol=2e-4, atol=2e-4,
+        )
+
+    @pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 64), (128, 128, 128)])
+    def test_explicit_blocks(self, bm, bn, bk):
+        x, w = _arr(128, 128), _arr(128, 128)
+        a, b = _arr(128, 8), _arr(8, 128)
+        y = lora_matmul(x, w, a, b, 1.0, block_m=bm, block_n=bn, block_k=bk)
+        assert_allclose(
+            y, R.lora_matmul_ref(x, w, a, b, 1.0), rtol=1e-4, atol=1e-4
+        )
+
+    def test_under_jit(self):
+        """The kernel must be jittable — it lowers into the AOT module."""
+        x, w = _arr(16, 32), _arr(32, 24)
+        a, b = _arr(32, 4), _arr(4, 24)
+        y = jax.jit(lambda *t: lora_matmul(*t, 1.0))(x, w, a, b)
+        assert_allclose(y, R.lora_matmul_ref(x, w, a, b, 1.0), rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------- attention
+
+
+class TestAttention:
+    def test_causal_matches_ref(self):
+        q, k, v = _arr(32, 16), _arr(32, 16), _arr(32, 16)
+        assert_allclose(
+            attention(q, k, v, causal=True), R.attention_ref(q, k, v, True),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_non_causal_matches_ref(self):
+        q, k, v = _arr(8, 16), _arr(24, 16), _arr(24, 16)
+        assert_allclose(
+            attention(q, k, v, causal=False), R.attention_ref(q, k, v, False),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_causal_first_row_is_v0(self):
+        """Causal row 0 can only attend position 0 ⇒ output == v[0]."""
+        q, k, v = _arr(8, 8), _arr(8, 8), _arr(8, 8)
+        out = attention(q, k, v, causal=True)
+        assert_allclose(out[0], v[0], rtol=1e-5, atol=1e-6)
+
+    def test_softmax_rows_convex(self):
+        """Output rows live in the convex hull of V rows: bounded by V."""
+        q, k = _arr(16, 8), _arr(16, 8)
+        v = jnp.asarray(RNG.uniform(0.0, 1.0, size=(16, 8)).astype(np.float32))
+        out = attention(q, k, v, causal=False)
+        assert float(out.min()) >= float(v.min()) - 1e-5
+        assert float(out.max()) <= float(v.max()) + 1e-5
+
+    @settings(max_examples=20, deadline=None)
+    @given(s=st.integers(1, 40), d=st.sampled_from([4, 8, 16, 32]))
+    def test_hypothesis_causal(self, s, d):
+        rng = np.random.default_rng(s * 100 + d)
+        q = jnp.asarray(rng.normal(size=(s, d)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(s, d)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(s, d)).astype(np.float32))
+        assert_allclose(
+            attention(q, k, v, causal=True), R.attention_ref(q, k, v, True),
+            rtol=2e-4, atol=2e-4,
+        )
+
+    def test_batched_heads(self):
+        q, k, v = _arr(2, 3, 16, 8), _arr(2, 3, 16, 8), _arr(2, 3, 16, 8)
+        out = attention_bh(q, k, v)
+        assert out.shape == (2, 3, 16, 8)
+        for bi in range(2):
+            for hi in range(3):
+                assert_allclose(
+                    out[bi, hi], R.attention_ref(q[bi, hi], k[bi, hi], v[bi, hi]),
+                    rtol=1e-4, atol=1e-4,
+                )
+
+    @pytest.mark.parametrize("block_q", [4, 8, 16])
+    def test_query_blocking(self, block_q):
+        q, k, v = _arr(32, 8), _arr(32, 8), _arr(32, 8)
+        assert_allclose(
+            attention(q, k, v, causal=True, block_q=block_q),
+            R.attention_ref(q, k, v, True), rtol=1e-4, atol=1e-4,
+        )
+
+
+# --------------------------------------------------------------- micro-ops
+
+
+class TestMicroOps:
+    def test_rmsnorm_unit_gamma_unit_norm(self):
+        x = _arr(4, 16)
+        y = R.rmsnorm_ref(x, jnp.ones(16))
+        rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+        assert_allclose(rms, jnp.ones(4), rtol=1e-3)
+
+    def test_swiglu_zero_gate(self):
+        x = jnp.zeros((4, 8))
+        y = R.swiglu_ref(x, _arr(8, 16), _arr(8, 16), _arr(16, 8))
+        assert_allclose(y, jnp.zeros((4, 8)), atol=1e-7)

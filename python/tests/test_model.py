@@ -1,0 +1,169 @@
+"""L2 correctness: tiny-Llama prefill/decode graphs.
+
+Checks: Pallas path vs pure-jnp oracle, KV-cache consistency (prefill(n)+
+decode == prefill(n+1)), adapter isolation (different adapters ⇒ different
+logits; same backbone bytes), and shape contracts the Rust runtime relies on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.configs import CONFIGS, LoraConfig, ModelConfig
+
+CFG = ModelConfig(
+    name="test-micro", vocab=64, d_model=32, n_layers=2,
+    n_heads=4, n_kv_heads=2, d_ff=48, max_seq=32,
+)
+LORA = LoraConfig(rank=4, alpha=8.0)
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    return M.init_backbone(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def adapter():
+    return M.init_adapter(CFG, LORA, seed=0)
+
+
+def _toks(b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(b, s)), jnp.int32)
+
+
+class TestParamSpecs:
+    def test_backbone_spec_count(self):
+        specs = M.backbone_param_specs(CFG)
+        assert len(specs) == 1 + 9 * CFG.n_layers + 2
+
+    def test_adapter_spec_count(self):
+        assert len(M.adapter_param_specs(CFG, LORA)) == 8 * CFG.n_layers
+
+    def test_param_count_matches_specs(self):
+        total = sum(
+            int(np.prod(s)) for _, s in M.backbone_param_specs(CFG)
+        )
+        assert total == CFG.param_count()
+
+    def test_init_matches_specs(self, backbone, adapter):
+        for p, (_, s) in zip(backbone, M.backbone_param_specs(CFG)):
+            assert p.shape == s
+        for p, (_, s) in zip(adapter, M.adapter_param_specs(CFG, LORA)):
+            assert p.shape == s
+
+    def test_7b_param_count_close_to_7b(self):
+        c = CONFIGS["llama2-7b"]
+        assert 6.5e9 < c.param_count() < 7.5e9
+
+    def test_13b_param_count(self):
+        c = CONFIGS["llama2-13b"]
+        assert 12.5e9 < c.param_count() < 13.5e9
+
+
+class TestPrefill:
+    def test_shapes(self, backbone, adapter):
+        logits, kc, vc = M.prefill(CFG, LORA, backbone, adapter, _toks(2, 8))
+        assert logits.shape == (2, CFG.vocab)
+        assert kc.shape == (CFG.n_layers, 2, CFG.n_kv_heads, CFG.max_seq,
+                            CFG.head_dim)
+        assert vc.shape == kc.shape
+
+    def test_matches_pure_jnp_oracle(self, backbone, adapter):
+        toks = _toks(1, 8)
+        logits, _, _ = M.prefill(CFG, LORA, backbone, adapter, toks)
+        ref = M.prefill_ref(CFG, LORA, backbone, adapter, toks)
+        assert_allclose(np.asarray(logits), np.asarray(ref), rtol=1e-3, atol=1e-3)
+
+    def test_cache_padding_zero(self, backbone, adapter):
+        _, kc, _ = M.prefill(CFG, LORA, backbone, adapter, _toks(1, 8))
+        assert float(jnp.abs(kc[:, :, :, 8:, :]).max()) == 0.0
+
+    def test_batch_rows_independent(self, backbone, adapter):
+        """Row i of a batched prefill equals the same prompt alone."""
+        toks = _toks(3, 8, seed=7)
+        lb, _, _ = M.prefill(CFG, LORA, backbone, adapter, toks)
+        l0, _, _ = M.prefill(CFG, LORA, backbone, adapter, toks[1:2])
+        assert_allclose(np.asarray(lb[1]), np.asarray(l0[0]), rtol=1e-4,
+                        atol=1e-4)
+
+    def test_deterministic(self, backbone, adapter):
+        t = _toks(1, 8)
+        l1, _, _ = M.prefill(CFG, LORA, backbone, adapter, t)
+        l2, _, _ = M.prefill(CFG, LORA, backbone, adapter, t)
+        assert_allclose(np.asarray(l1), np.asarray(l2), rtol=0, atol=0)
+
+
+class TestDecode:
+    def test_kv_consistency_with_prefill(self, backbone, adapter):
+        """prefill(S) + decode_step == prefill(S+1): the contract that lets
+        the Rust serving loop alternate artifacts."""
+        toks = _toks(2, 8, seed=3)
+        logits, kc, vc = M.prefill(CFG, LORA, backbone, adapter, toks)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        l2, _, _ = M.decode_step(CFG, LORA, backbone, adapter, nxt, kc, vc,
+                                 jnp.asarray(8, jnp.int32))
+        toks9 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+        l9, _, _ = M.prefill(CFG, LORA, backbone, adapter, toks9)
+        assert_allclose(np.asarray(l2), np.asarray(l9), rtol=2e-3, atol=2e-3)
+
+    def test_multi_step_chain(self, backbone, adapter):
+        """Three greedy decode steps equal prefill of the full sequence."""
+        toks = _toks(1, 4, seed=11)
+        logits, kc, vc = M.prefill(CFG, LORA, backbone, adapter, toks)
+        seq = toks
+        pos = 4
+        for _ in range(3):
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
+            logits, kc, vc = M.decode_step(
+                CFG, LORA, backbone, adapter, nxt, kc, vc,
+                jnp.asarray(pos, jnp.int32),
+            )
+            pos += 1
+        lf, _, _ = M.prefill(CFG, LORA, backbone, adapter, seq)
+        assert_allclose(np.asarray(logits), np.asarray(lf), rtol=5e-3, atol=5e-3)
+
+    def test_updates_cache_at_pos(self, backbone, adapter):
+        toks = _toks(1, 8)
+        logits, kc, vc = M.prefill(CFG, LORA, backbone, adapter, toks)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        _, kc2, _ = M.decode_step(CFG, LORA, backbone, adapter, nxt, kc, vc,
+                                  jnp.asarray(8, jnp.int32))
+        # pos 8 now non-zero, later slots still zero.
+        assert float(jnp.abs(kc2[:, :, :, 8, :]).max()) > 0.0
+        assert float(jnp.abs(kc2[:, :, :, 9:, :]).max()) == 0.0
+
+
+class TestAdapterSemantics:
+    def test_adapters_change_output(self, backbone):
+        """Two different adapters over one shared backbone must produce
+        different logits — the multi-tenant property."""
+        a0 = M.init_adapter(CFG, LORA, seed=0)
+        a1 = M.init_adapter(CFG, LORA, seed=1)
+        t = _toks(1, 8)
+        l0, _, _ = M.prefill(CFG, LORA, backbone, a0, t)
+        l1, _, _ = M.prefill(CFG, LORA, backbone, a1, t)
+        assert float(jnp.abs(l0 - l1).max()) > 1e-3
+
+    def test_zero_adapter_equals_base_model(self, backbone):
+        """An all-zero adapter must reproduce the raw backbone — sharing
+        never perturbs the backbone weights (read-only property)."""
+        zeros = [jnp.zeros_like(p) for p in
+                 M.init_adapter(CFG, LORA, seed=0)]
+        t = _toks(1, 8)
+        lz, _, _ = M.prefill(CFG, LORA, backbone, zeros, t)
+        # Oracle with scale 0 ≡ no adapter at all.
+        lb = M.prefill_ref(CFG, LoraConfig(rank=4, alpha=0.0), backbone,
+                           zeros, t)
+        assert_allclose(np.asarray(lz), np.asarray(lb), rtol=1e-3, atol=1e-3)
+
+    def test_adapter_init_deterministic(self):
+        a = M.init_adapter(CFG, LORA, seed=5)
+        b = M.init_adapter(CFG, LORA, seed=5)
+        for x, y in zip(a, b):
+            assert_allclose(np.asarray(x), np.asarray(y), rtol=0, atol=0)

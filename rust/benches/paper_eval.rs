@@ -1,0 +1,46 @@
+//! `cargo bench` — the paper-evaluation harness.
+//!
+//! Regenerates every table and figure from the paper's §6 (the experiment
+//! registry in `serverless_lora::exp`) and prints the same rows/series the
+//! paper reports, plus wall-clock per experiment. `criterion` is not
+//! vendored in this environment, so this is a plain `harness = false`
+//! bench binary.
+//!
+//! Usage:
+//!   cargo bench                 quick mode (1-hour traces)
+//!   cargo bench -- --full       full mode (the paper's 4-hour traces)
+//!   cargo bench -- fig6 tab2    run a subset
+
+use std::time::Instant;
+
+use serverless_lora::exp;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let ids: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with("--"))
+        .map(String::as_str)
+        .filter(|a| exp::ALL_EXPERIMENTS.contains(a))
+        .collect();
+    let ids: Vec<&str> = if ids.is_empty() {
+        exp::ALL_EXPERIMENTS.to_vec()
+    } else {
+        ids
+    };
+
+    println!(
+        "ServerlessLoRA paper-evaluation bench ({} mode, {} experiments)\n",
+        if full { "FULL 4h" } else { "quick 1h" },
+        ids.len()
+    );
+    let t_all = Instant::now();
+    for id in ids {
+        let t0 = Instant::now();
+        let report = exp::run_experiment(id, !full);
+        print!("{report}");
+        println!("[{id} took {:.1}s]\n", t0.elapsed().as_secs_f64());
+    }
+    println!("total bench time: {:.1}s", t_all.elapsed().as_secs_f64());
+}

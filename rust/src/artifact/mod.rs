@@ -1,0 +1,226 @@
+//! LLM artifact model (paper §2.2, §4.1).
+//!
+//! ServerlessLoRA manages four classes of artifacts per function — user
+//! libraries, the backbone LLM, the LoRA adapter, and (JIT-compiled) CUDA
+//! kernels — each with a size, a home (container RAM and/or GPU memory),
+//! a load path, and a precedence position (libraries before models before
+//! kernels).  The pre-loading scheduler, the offloader and the simulator
+//! all consume the same `ArtifactSpec`s defined here.
+
+pub mod params;
+
+pub use params::ModelProfile;
+
+/// The four artifact classes of §4.1, plus container initialisation which
+/// the paper's time-breakdown figures (Fig. 1, Fig. 8) track as its own
+/// phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ArtifactKind {
+    /// Runtime container (process sandbox) — phase only, not preloadable
+    /// as data; "preloading" it means keeping a warm container.
+    Container,
+    /// User libraries (PyTorch, Transformers, CUDA userspace, ...).
+    /// Preloadable **only into container memory**.
+    Library,
+    /// Backbone LLM weights. Preloadable into container RAM or GPU HBM;
+    /// shareable read-only across functions (§4.4).
+    Backbone,
+    /// LoRA adapter weights. Preloadable into container RAM or GPU HBM;
+    /// must be coupled to a GPU that hosts (or will host) its backbone.
+    Adapter,
+    /// JIT-compiled CUDA kernels (+ CUDA context warmup). Preloadable
+    /// **only on the GPU** and only after the model is resident.
+    CudaKernel,
+}
+
+impl ArtifactKind {
+    pub const ALL: [ArtifactKind; 5] = [
+        ArtifactKind::Container,
+        ArtifactKind::Library,
+        ArtifactKind::Backbone,
+        ArtifactKind::Adapter,
+        ArtifactKind::CudaKernel,
+    ];
+
+    /// Can this artifact be pre-loaded into container (host) memory?
+    pub fn container_placeable(self) -> bool {
+        matches!(
+            self,
+            ArtifactKind::Library | ArtifactKind::Backbone | ArtifactKind::Adapter
+        )
+    }
+
+    /// Can this artifact be pre-loaded into GPU memory?
+    pub fn gpu_placeable(self) -> bool {
+        matches!(
+            self,
+            ArtifactKind::Backbone | ArtifactKind::Adapter | ArtifactKind::CudaKernel
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactKind::Container => "container",
+            ArtifactKind::Library => "library",
+            ArtifactKind::Backbone => "backbone",
+            ArtifactKind::Adapter => "adapter",
+            ArtifactKind::CudaKernel => "cuda-kernel",
+        }
+    }
+}
+
+/// Where a (copy of an) artifact currently lives.  The load path walks
+/// Remote → ContainerRam → Gpu; each hop has its own bandwidth (params.rs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Remote object storage (S3-like).
+    Remote,
+    /// Local NVMe SSD on the worker node.
+    Ssd,
+    /// Container / host DRAM.
+    ContainerRam,
+    /// GPU HBM.
+    Gpu,
+}
+
+/// One concrete artifact of one function.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    /// Size in GB at its destination tier.
+    pub size_gb: f64,
+    /// Latency (s) to make it GPU-ready from each source tier, including
+    /// any fixed overheads (deserialization, cudaMalloc, JIT compile).
+    pub load_from_remote_s: f64,
+    pub load_from_ssd_s: f64,
+    pub load_from_ram_s: f64,
+}
+
+/// A deployed serverless function: one LoRA adapter over one backbone.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub id: usize,
+    pub name: String,
+    /// Which backbone model (index into the deployment's model profiles).
+    pub model: ModelProfile,
+    /// Which adapter of that backbone this function serves.
+    pub adapter_id: usize,
+    /// TTFT SLO in seconds (paper §6.8: 5 × first warm-start TTFT).
+    pub slo_ttft_s: f64,
+}
+
+impl FunctionSpec {
+    pub fn new(id: usize, model: ModelProfile, adapter_id: usize) -> Self {
+        let slo = model.slo_ttft_s();
+        Self {
+            id,
+            name: format!("{}-lora{}", model.name, adapter_id),
+            model,
+            adapter_id,
+            slo_ttft_s: slo,
+        }
+    }
+
+    /// The artifact set of this function, in precedence order.
+    pub fn artifacts(&self) -> Vec<ArtifactSpec> {
+        let m = &self.model;
+        vec![
+            ArtifactSpec {
+                kind: ArtifactKind::Library,
+                size_gb: m.library_gb,
+                load_from_remote_s: m.library_gb / params::BW_REMOTE_GBPS
+                    + params::LIBRARY_IMPORT_S,
+                load_from_ssd_s: m.library_gb / params::BW_SSD_GBPS
+                    + params::LIBRARY_IMPORT_S,
+                // Libraries already in container RAM are imported (=mapped);
+                // only the residual python-import cost remains.
+                load_from_ram_s: params::LIBRARY_WARM_IMPORT_S,
+            },
+            ArtifactSpec {
+                kind: ArtifactKind::Backbone,
+                size_gb: m.weights_gb,
+                load_from_remote_s: m.weights_gb / params::BW_REMOTE_GBPS,
+                load_from_ssd_s: m.weights_gb / params::BW_SSD_GBPS,
+                load_from_ram_s: m.weights_gb / params::BW_PCIE_GBPS,
+            },
+            ArtifactSpec {
+                kind: ArtifactKind::Adapter,
+                size_gb: m.adapter_gb,
+                load_from_remote_s: m.adapter_gb / params::BW_REMOTE_GBPS
+                    + params::ADAPTER_ATTACH_S,
+                load_from_ssd_s: m.adapter_gb / params::BW_SSD_GBPS
+                    + params::ADAPTER_ATTACH_S,
+                load_from_ram_s: m.adapter_gb / params::BW_PCIE_GBPS
+                    + params::ADAPTER_ATTACH_S,
+            },
+            ArtifactSpec {
+                kind: ArtifactKind::CudaKernel,
+                size_gb: m.kernel_gb,
+                // Kernels are *compiled*, not copied: all tiers cost the JIT
+                // time; a warm kernel cache (SSD/RAM) only skips codegen.
+                load_from_remote_s: m.kernel_jit_s,
+                load_from_ssd_s: m.kernel_cache_load_s,
+                load_from_ram_s: m.kernel_cache_load_s,
+            },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_rules_match_paper() {
+        // §4.1: "libraries can only be pre-loaded on containers, CUDA
+        // kernels on GPUs, and backbones and adapters on both".
+        assert!(ArtifactKind::Library.container_placeable());
+        assert!(!ArtifactKind::Library.gpu_placeable());
+        assert!(!ArtifactKind::CudaKernel.container_placeable());
+        assert!(ArtifactKind::CudaKernel.gpu_placeable());
+        for k in [ArtifactKind::Backbone, ArtifactKind::Adapter] {
+            assert!(k.container_placeable() && k.gpu_placeable());
+        }
+    }
+
+    #[test]
+    fn artifacts_in_precedence_order() {
+        let f = FunctionSpec::new(0, ModelProfile::llama2_7b(), 0);
+        let kinds: Vec<ArtifactKind> =
+            f.artifacts().iter().map(|a| a.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ArtifactKind::Library,
+                ArtifactKind::Backbone,
+                ArtifactKind::Adapter,
+                ArtifactKind::CudaKernel
+            ]
+        );
+    }
+
+    #[test]
+    fn faster_tiers_load_faster() {
+        let f = FunctionSpec::new(0, ModelProfile::llama2_13b(), 1);
+        for a in f.artifacts() {
+            assert!(a.load_from_remote_s >= a.load_from_ssd_s);
+            assert!(a.load_from_ssd_s >= a.load_from_ram_s * 0.99);
+        }
+    }
+
+    #[test]
+    fn backbone_dominates_size() {
+        // Observation 1: ~99% of weights are the backbone.
+        let f = FunctionSpec::new(0, ModelProfile::llama2_7b(), 0);
+        let arts = f.artifacts();
+        let backbone = arts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Backbone)
+            .unwrap();
+        let adapter = arts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Adapter)
+            .unwrap();
+        assert!(backbone.size_gb / (backbone.size_gb + adapter.size_gb) > 0.97);
+    }
+}

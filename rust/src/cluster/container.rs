@@ -1,0 +1,162 @@
+//! Container (host-side) memory ledger.
+//!
+//! Paper §4.1 principle 2: serverless functions are habitually
+//! over-allocated, so idle containers have a running/idle memory gap the
+//! pre-loader can fill — and a container may host *multiple* functions'
+//! pre-loaded artifacts (shared container in the pre-loading stage).
+
+use std::collections::BTreeMap;
+
+use crate::artifact::{params, ArtifactKind};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ContainerId {
+    pub node: usize,
+    pub index: usize,
+}
+
+impl std::fmt::Display for ContainerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ctr{}.{}", self.node, self.index)
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ContainerError {
+    #[error("container {ctr} out of memory: need {need_gb:.2}, free {free_gb:.2}")]
+    OutOfMemory { ctr: String, need_gb: f64, free_gb: f64 },
+    #[error("function {0} artifact {1:?} not present")]
+    Missing(usize, ArtifactKind),
+}
+
+/// Warm container slot with a host-memory ledger.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: ContainerId,
+    pub mem_gb: f64,
+    /// (function, kind) → GB pre-loaded in this container's RAM.
+    items: BTreeMap<(usize, ArtifactKind), f64>,
+    /// Warm container slots avoid the cold `CONTAINER_INIT_S`.
+    pub warm: bool,
+}
+
+impl Container {
+    pub fn new(id: ContainerId) -> Self {
+        Container {
+            id,
+            mem_gb: params::CONTAINER_MEM_GB,
+            items: BTreeMap::new(),
+            warm: true,
+        }
+    }
+
+    pub fn used_gb(&self) -> f64 {
+        self.items.values().sum()
+    }
+
+    pub fn free_gb(&self) -> f64 {
+        self.mem_gb - self.used_gb()
+    }
+
+    pub fn place(
+        &mut self,
+        function: usize,
+        kind: ArtifactKind,
+        size_gb: f64,
+    ) -> Result<(), ContainerError> {
+        debug_assert!(
+            kind.container_placeable(),
+            "{kind:?} is not container-placeable"
+        );
+        let key = (function, kind);
+        let already = self.items.get(&key).copied().unwrap_or(0.0);
+        if already >= size_gb {
+            return Ok(());
+        }
+        if size_gb - already > self.free_gb() + 1e-9 {
+            return Err(ContainerError::OutOfMemory {
+                ctr: self.id.to_string(),
+                need_gb: size_gb - already,
+                free_gb: self.free_gb(),
+            });
+        }
+        self.items.insert(key, size_gb);
+        Ok(())
+    }
+
+    pub fn has(&self, function: usize, kind: ArtifactKind) -> bool {
+        self.items.contains_key(&(function, kind))
+    }
+
+    pub fn evict(
+        &mut self,
+        function: usize,
+        kind: ArtifactKind,
+    ) -> Result<f64, ContainerError> {
+        self.items
+            .remove(&(function, kind))
+            .ok_or(ContainerError::Missing(function, kind))
+    }
+
+    /// All (function, kind, GB) triples currently resident.
+    pub fn items(&self) -> impl Iterator<Item = (usize, ArtifactKind, f64)> + '_ {
+        self.items.iter().map(|(&(f, k), &gb)| (f, k, gb))
+    }
+
+    pub fn functions_hosted(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.items.keys().map(|&(f, _)| f).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctr() -> Container {
+        Container::new(ContainerId { node: 0, index: 0 })
+    }
+
+    #[test]
+    fn ledger_basics() {
+        let mut c = ctr();
+        c.place(1, ArtifactKind::Library, 2.5).unwrap();
+        c.place(1, ArtifactKind::Backbone, 13.5).unwrap();
+        assert!((c.used_gb() - 16.0).abs() < 1e-9);
+        assert_eq!(c.evict(1, ArtifactKind::Backbone).unwrap(), 13.5);
+        assert!((c.used_gb() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multiple_functions_share_one_container() {
+        // §4.1 principle 2.
+        let mut c = ctr();
+        c.place(1, ArtifactKind::Library, 2.5).unwrap();
+        c.place(2, ArtifactKind::Adapter, 0.2).unwrap();
+        assert_eq!(c.functions_hosted(), vec![1, 2]);
+    }
+
+    #[test]
+    fn oom_checked() {
+        let mut c = ctr();
+        let e = c.place(1, ArtifactKind::Backbone, 1e9);
+        assert!(matches!(e, Err(ContainerError::OutOfMemory { .. })));
+        assert_eq!(c.used_gb(), 0.0);
+    }
+
+    #[test]
+    fn idempotent_place() {
+        let mut c = ctr();
+        c.place(1, ArtifactKind::Library, 2.5).unwrap();
+        c.place(1, ArtifactKind::Library, 2.5).unwrap();
+        assert!((c.used_gb() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_evict_is_error() {
+        let mut c = ctr();
+        assert!(c.evict(9, ArtifactKind::Library).is_err());
+    }
+}

@@ -1,0 +1,390 @@
+//! GPU memory ledger: shared backbones (refcounted), per-function
+//! artifacts, CUDA contexts, and KV-cache reservations.
+//!
+//! This is the accounting substrate under the pre-loading scheduler
+//! (§4.1), the offloader (§4.3) and the sharing registry (§4.4): every
+//! byte that the paper's policies reason about is tracked here explicitly,
+//! and over-commit is a hard error (the policies must *prevent* it).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::artifact::{params, ArtifactKind};
+
+/// Identifier of a GPU within the cluster: (node, local index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GpuId {
+    pub node: usize,
+    pub index: usize,
+}
+
+impl std::fmt::Display for GpuId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "gpu{}.{}", self.node, self.index)
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum GpuError {
+    #[error("GPU {gpu} out of memory: need {need_gb:.2} GB, free {free_gb:.2} GB")]
+    OutOfMemory { gpu: String, need_gb: f64, free_gb: f64 },
+    #[error("backbone {0} not resident")]
+    BackboneMissing(String),
+    #[error("function {0} artifact {1:?} not resident")]
+    ArtifactMissing(usize, ArtifactKind),
+    #[error("refcount underflow for backbone {0}")]
+    RefcountUnderflow(String),
+}
+
+/// A shared backbone segment: one copy, many readers (§4.4). The refcount
+/// counts attached function instances (IPC handle holders).
+#[derive(Debug, Clone)]
+pub struct SharedSegment {
+    pub size_gb: f64,
+    pub refcount: usize,
+}
+
+/// Per-function artifact bytes resident on this GPU.
+#[derive(Debug, Clone, Default)]
+pub struct FunctionResidency {
+    pub kinds: BTreeMap<ArtifactKind, f64>, // kind → GB
+    pub has_cuda_context: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Gpu {
+    pub id: GpuId,
+    pub total_gb: f64,
+    reserved_gb: f64,
+    /// model-name → shared backbone segment.
+    shared: BTreeMap<String, SharedSegment>,
+    /// function-id → residency.
+    functions: BTreeMap<usize, FunctionResidency>,
+    /// KV-cache reservations: batch-id → GB.
+    kv: BTreeMap<u64, f64>,
+    /// Incrementally-maintained sum of shared + per-function + KV bytes
+    /// (billing runs on every simulator event; re-summing the maps there
+    /// dominated the profile).
+    used_cache_gb: f64,
+}
+
+impl Gpu {
+    pub fn new(id: GpuId) -> Self {
+        Self::with_capacity(id, params::GPU_MEM_GB)
+    }
+
+    pub fn with_capacity(id: GpuId, total_gb: f64) -> Self {
+        Gpu {
+            id,
+            total_gb,
+            reserved_gb: params::GPU_RESERVED_GB,
+            shared: BTreeMap::new(),
+            functions: BTreeMap::new(),
+            kv: BTreeMap::new(),
+            used_cache_gb: 0.0,
+        }
+    }
+
+    pub fn used_gb(&self) -> f64 {
+        debug_assert!({
+            let shared: f64 = self.shared.values().map(|s| s.size_gb).sum();
+            let func: f64 = self
+                .functions
+                .values()
+                .map(|f| {
+                    f.kinds.values().sum::<f64>()
+                        + if f.has_cuda_context { params::CUDA_CONTEXT_GB } else { 0.0 }
+                })
+                .sum();
+            let kv: f64 = self.kv.values().sum();
+            (shared + func + kv - self.used_cache_gb).abs() < 1e-6
+        });
+        self.reserved_gb + self.used_cache_gb
+    }
+
+    pub fn free_gb(&self) -> f64 {
+        self.total_gb - self.used_gb()
+    }
+
+    fn check(&self, need_gb: f64) -> Result<(), GpuError> {
+        // Tolerate f64 rounding at the nanobyte level.
+        if need_gb > self.free_gb() + 1e-9 {
+            Err(GpuError::OutOfMemory {
+                gpu: self.id.to_string(),
+                need_gb,
+                free_gb: self.free_gb(),
+            })
+        } else {
+            Ok(())
+        }
+    }
+
+    // ----------------------------------------------------------- backbones
+
+    /// Load a shared backbone copy (first loader pays the bytes).
+    pub fn load_shared_backbone(
+        &mut self,
+        model: &str,
+        size_gb: f64,
+    ) -> Result<(), GpuError> {
+        if self.shared.contains_key(model) {
+            return Ok(());
+        }
+        self.check(size_gb)?;
+        self.shared
+            .insert(model.to_string(), SharedSegment { size_gb, refcount: 0 });
+        self.used_cache_gb += size_gb;
+        Ok(())
+    }
+
+    pub fn has_shared_backbone(&self, model: &str) -> bool {
+        self.shared.contains_key(model)
+    }
+
+    /// Attach a function instance to the shared backbone (IPC-handle open).
+    pub fn attach_backbone(&mut self, model: &str) -> Result<(), GpuError> {
+        self.shared
+            .get_mut(model)
+            .ok_or_else(|| GpuError::BackboneMissing(model.into()))?
+            .refcount += 1;
+        Ok(())
+    }
+
+    pub fn detach_backbone(&mut self, model: &str) -> Result<(), GpuError> {
+        let seg = self
+            .shared
+            .get_mut(model)
+            .ok_or_else(|| GpuError::BackboneMissing(model.into()))?;
+        if seg.refcount == 0 {
+            return Err(GpuError::RefcountUnderflow(model.into()));
+        }
+        seg.refcount -= 1;
+        Ok(())
+    }
+
+    pub fn backbone_refcount(&self, model: &str) -> usize {
+        self.shared.get(model).map(|s| s.refcount).unwrap_or(0)
+    }
+
+    /// Unload a shared backbone. Only legal at refcount 0 (§4.4 safety:
+    /// never yank memory under a live reader).
+    pub fn unload_shared_backbone(&mut self, model: &str) -> Result<f64, GpuError> {
+        match self.shared.get(model) {
+            None => Err(GpuError::BackboneMissing(model.into())),
+            Some(seg) if seg.refcount > 0 => {
+                Err(GpuError::RefcountUnderflow(model.into()))
+            }
+            Some(seg) => {
+                let gb = seg.size_gb;
+                self.shared.remove(model);
+                self.used_cache_gb -= gb;
+                Ok(gb)
+            }
+        }
+    }
+
+    pub fn shared_models(&self) -> impl Iterator<Item = (&String, &SharedSegment)> {
+        self.shared.iter()
+    }
+
+    // ------------------------------------------------- per-function bytes
+
+    /// Place a per-function artifact (adapter bytes, kernel workspace, or a
+    /// *private* unshared backbone for the no-sharing baselines).
+    pub fn place_artifact(
+        &mut self,
+        function: usize,
+        kind: ArtifactKind,
+        size_gb: f64,
+    ) -> Result<(), GpuError> {
+        debug_assert!(kind.gpu_placeable(), "{kind:?} is not GPU-placeable");
+        let already = self
+            .functions
+            .get(&function)
+            .and_then(|f| f.kinds.get(&kind))
+            .copied()
+            .unwrap_or(0.0);
+        if already >= size_gb {
+            return Ok(());
+        }
+        self.check(size_gb - already)?;
+        self.functions
+            .entry(function)
+            .or_default()
+            .kinds
+            .insert(kind, size_gb);
+        self.used_cache_gb += size_gb - already;
+        Ok(())
+    }
+
+    pub fn has_artifact(&self, function: usize, kind: ArtifactKind) -> bool {
+        self.functions
+            .get(&function)
+            .map(|f| f.kinds.contains_key(&kind))
+            .unwrap_or(false)
+    }
+
+    /// Evict one per-function artifact; returns the bytes freed.
+    pub fn evict_artifact(
+        &mut self,
+        function: usize,
+        kind: ArtifactKind,
+    ) -> Result<f64, GpuError> {
+        let f = self
+            .functions
+            .get_mut(&function)
+            .ok_or(GpuError::ArtifactMissing(function, kind))?;
+        let gb = f
+            .kinds
+            .remove(&kind)
+            .ok_or(GpuError::ArtifactMissing(function, kind))?;
+        self.used_cache_gb -= gb;
+        Ok(gb)
+    }
+
+    /// Create the per-process CUDA context (billed 473 MB, §6.9).
+    pub fn create_cuda_context(&mut self, function: usize) -> Result<(), GpuError> {
+        if self
+            .functions
+            .get(&function)
+            .map(|f| f.has_cuda_context)
+            .unwrap_or(false)
+        {
+            return Ok(());
+        }
+        self.check(params::CUDA_CONTEXT_GB)?;
+        self.functions.entry(function).or_default().has_cuda_context = true;
+        self.used_cache_gb += params::CUDA_CONTEXT_GB;
+        Ok(())
+    }
+
+    pub fn has_cuda_context(&self, function: usize) -> bool {
+        self.functions
+            .get(&function)
+            .map(|f| f.has_cuda_context)
+            .unwrap_or(false)
+    }
+
+    pub fn destroy_cuda_context(&mut self, function: usize) {
+        if let Some(f) = self.functions.get_mut(&function) {
+            if f.has_cuda_context {
+                self.used_cache_gb -= params::CUDA_CONTEXT_GB;
+            }
+            f.has_cuda_context = false;
+        }
+    }
+
+    /// Functions with any residency on this GPU.
+    pub fn resident_functions(&self) -> BTreeSet<usize> {
+        self.functions
+            .iter()
+            .filter(|(_, f)| !f.kinds.is_empty() || f.has_cuda_context)
+            .map(|(id, _)| *id)
+            .collect()
+    }
+
+    pub fn function_residency(&self, function: usize) -> Option<&FunctionResidency> {
+        self.functions.get(&function)
+    }
+
+    // ------------------------------------------------------------ KV cache
+
+    /// Reserve KV-cache memory for an in-flight batch.
+    pub fn reserve_kv(&mut self, batch_id: u64, gb: f64) -> Result<(), GpuError> {
+        self.check(gb)?;
+        *self.kv.entry(batch_id).or_insert(0.0) += gb;
+        self.used_cache_gb += gb;
+        Ok(())
+    }
+
+    pub fn release_kv(&mut self, batch_id: u64) -> f64 {
+        let gb = self.kv.remove(&batch_id).unwrap_or(0.0);
+        self.used_cache_gb -= gb;
+        gb
+    }
+
+    pub fn kv_reserved_gb(&self) -> f64 {
+        self.kv.values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu() -> Gpu {
+        Gpu::with_capacity(GpuId { node: 0, index: 0 }, 48.0)
+    }
+
+    #[test]
+    fn ledger_accounting() {
+        let mut g = gpu();
+        let base = g.used_gb();
+        g.load_shared_backbone("7b", 13.5).unwrap();
+        g.place_artifact(1, ArtifactKind::Adapter, 0.16).unwrap();
+        g.create_cuda_context(1).unwrap();
+        g.reserve_kv(100, 2.0).unwrap();
+        let used = g.used_gb();
+        assert!((used - base - 13.5 - 0.16 - params::CUDA_CONTEXT_GB - 2.0).abs() < 1e-9);
+        assert_eq!(g.release_kv(100), 2.0);
+        assert_eq!(g.evict_artifact(1, ArtifactKind::Adapter).unwrap(), 0.16);
+    }
+
+    #[test]
+    fn shared_backbone_loaded_once() {
+        let mut g = gpu();
+        g.load_shared_backbone("7b", 13.5).unwrap();
+        let used = g.used_gb();
+        g.load_shared_backbone("7b", 13.5).unwrap(); // idempotent
+        assert_eq!(g.used_gb(), used);
+    }
+
+    #[test]
+    fn refcount_protects_unload() {
+        let mut g = gpu();
+        g.load_shared_backbone("7b", 13.5).unwrap();
+        g.attach_backbone("7b").unwrap();
+        assert!(matches!(
+            g.unload_shared_backbone("7b"),
+            Err(GpuError::RefcountUnderflow(_))
+        ));
+        g.detach_backbone("7b").unwrap();
+        assert_eq!(g.unload_shared_backbone("7b").unwrap(), 13.5);
+    }
+
+    #[test]
+    fn refcount_underflow_detected() {
+        let mut g = gpu();
+        g.load_shared_backbone("7b", 13.5).unwrap();
+        assert!(g.detach_backbone("7b").is_err());
+    }
+
+    #[test]
+    fn oom_is_an_error_not_a_panic() {
+        let mut g = gpu();
+        assert!(g.load_shared_backbone("huge", 100.0).is_err());
+        assert!(g.reserve_kv(1, 100.0).is_err());
+        // Failed ops must not leak partial state.
+        assert!(!g.has_shared_backbone("huge"));
+        assert_eq!(g.kv_reserved_gb(), 0.0);
+    }
+
+    #[test]
+    fn artifact_upsize_charges_delta_only() {
+        let mut g = gpu();
+        g.place_artifact(1, ArtifactKind::CudaKernel, 0.5).unwrap();
+        let used = g.used_gb();
+        g.place_artifact(1, ArtifactKind::CudaKernel, 0.5).unwrap();
+        assert_eq!(g.used_gb(), used);
+    }
+
+    #[test]
+    fn resident_functions_tracked() {
+        let mut g = gpu();
+        g.place_artifact(3, ArtifactKind::Adapter, 0.1).unwrap();
+        g.create_cuda_context(7).unwrap();
+        let r = g.resident_functions();
+        assert!(r.contains(&3) && r.contains(&7));
+        g.destroy_cuda_context(7);
+        assert!(!g.resident_functions().contains(&7));
+    }
+}

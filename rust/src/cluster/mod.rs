@@ -1,0 +1,136 @@
+//! Simulated GPU cluster substrate: worker nodes with GPUs and warm
+//! container slots, mirroring the paper's AWS testbeds (8× L40S single
+//! node / 16× L40S four-node). All memory movements the scheduler reasons
+//! about are tracked by the per-device ledgers in `gpu.rs`/`container.rs`.
+
+pub mod container;
+pub mod gpu;
+
+pub use container::{Container, ContainerError, ContainerId};
+pub use gpu::{Gpu, GpuError, GpuId};
+
+/// One worker node: a set of GPUs plus warm container slots.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub gpus: Vec<Gpu>,
+    pub containers: Vec<Container>,
+}
+
+impl Node {
+    pub fn new(id: usize, n_gpus: usize, n_containers: usize) -> Self {
+        Node {
+            id,
+            gpus: (0..n_gpus)
+                .map(|i| Gpu::new(GpuId { node: id, index: i }))
+                .collect(),
+            containers: (0..n_containers)
+                .map(|i| Container::new(ContainerId { node: id, index: i }))
+                .collect(),
+        }
+    }
+}
+
+/// The whole deployment.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+}
+
+impl Cluster {
+    /// `n_nodes` × `gpus_per_node`, with `containers_per_node` warm slots.
+    pub fn new(n_nodes: usize, gpus_per_node: usize, containers_per_node: usize) -> Self {
+        Cluster {
+            nodes: (0..n_nodes)
+                .map(|i| Node::new(i, gpus_per_node, containers_per_node))
+                .collect(),
+        }
+    }
+
+    /// The paper's multi-node testbed: 4 nodes × 4 L40S.
+    pub fn paper_multinode() -> Self {
+        Cluster::new(4, 4, 8)
+    }
+
+    /// The paper's single-node testbed: 1 node × 8 L40S.
+    pub fn paper_singlenode() -> Self {
+        Cluster::new(1, 8, 16)
+    }
+
+    pub fn gpu(&self, id: GpuId) -> &Gpu {
+        &self.nodes[id.node].gpus[id.index]
+    }
+
+    pub fn gpu_mut(&mut self, id: GpuId) -> &mut Gpu {
+        &mut self.nodes[id.node].gpus[id.index]
+    }
+
+    pub fn container(&self, id: ContainerId) -> &Container {
+        &self.nodes[id.node].containers[id.index]
+    }
+
+    pub fn container_mut(&mut self, id: ContainerId) -> &mut Container {
+        &mut self.nodes[id.node].containers[id.index]
+    }
+
+    pub fn gpus(&self) -> impl Iterator<Item = &Gpu> {
+        self.nodes.iter().flat_map(|n| n.gpus.iter())
+    }
+
+    pub fn gpu_ids(&self) -> Vec<GpuId> {
+        self.nodes
+            .iter()
+            .flat_map(|n| n.gpus.iter().map(|g| g.id))
+            .collect()
+    }
+
+    pub fn container_ids(&self) -> Vec<ContainerId> {
+        self.nodes
+            .iter()
+            .flat_map(|n| n.containers.iter().map(|c| c.id))
+            .collect()
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.gpus.len()).sum()
+    }
+
+    pub fn total_gpu_mem_gb(&self) -> f64 {
+        self.gpus().map(|g| g.total_gb).sum()
+    }
+
+    pub fn total_gpu_free_gb(&self) -> f64 {
+        self.gpus().map(|g| g.free_gb()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbeds() {
+        assert_eq!(Cluster::paper_multinode().n_gpus(), 16);
+        assert_eq!(Cluster::paper_singlenode().n_gpus(), 8);
+    }
+
+    #[test]
+    fn ids_address_correctly() {
+        let c = Cluster::new(2, 3, 2);
+        assert_eq!(c.n_gpus(), 6);
+        let ids = c.gpu_ids();
+        assert_eq!(ids.len(), 6);
+        for id in ids {
+            assert_eq!(c.gpu(id).id, id);
+        }
+        for id in c.container_ids() {
+            assert_eq!(c.container(id).id, id);
+        }
+    }
+
+    #[test]
+    fn total_memory_sums() {
+        let c = Cluster::new(2, 2, 1);
+        assert!((c.total_gpu_mem_gb() - 4.0 * 48.0).abs() < 1e-9);
+    }
+}

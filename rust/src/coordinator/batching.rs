@@ -1,0 +1,324 @@
+//! Adaptive Batching Scheduler (paper §4.2): two-layer batching.
+//!
+//! Local layer — per-function *fill-or-expire*: with the linear prefill
+//! model T_i(b) = T0 + α(b−1) (Eq. 2), offline profiling bounds the max
+//! batch B_i within the SLO; the batch delay adapts to the current fill,
+//! d_i = SLO_i − T_i(N_i) (Eq. 3): small batches wait longer to collect
+//! future requests, full batches fire immediately.
+//!
+//! Global layer — contention-aware dispatch: M concurrent batches on one
+//! GPU stretch every batch to M·T_i(b) (Eq. 4); batches are prioritised by
+//! *deadline margin* Δ_i = SLO_i − (w_i + M·T_i(b)) (Eq. 5): the tightest
+//! margin dispatches first, loose margins keep collecting.
+
+use crate::artifact::ModelProfile;
+
+/// One queued request (the batcher only needs ids and arrival times).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Queued {
+    pub request: u64,
+    pub arrival_s: f64,
+}
+
+/// Debounce window for idle-GPU dispatch: a queue is "settled" once no
+/// new request arrived for this long. Near-concurrent burst members
+/// (tens of ms apart) coalesce into one batch instead of splitting into
+/// instance-churning waves; a lone request pays only +150 ms — which is
+/// also what puts warm TTFT at T0 + ~0.15 s, the paper's ~576 ms regime.
+pub const DEBOUNCE_S: f64 = 0.15;
+
+/// Per-function batch queue with the Eq. 2/3 policy.
+#[derive(Debug, Clone)]
+pub struct BatchQueue {
+    pub function: usize,
+    /// SLO for TTFT, seconds.
+    pub slo_s: f64,
+    /// Eq. 2 coefficients.
+    pub t0_s: f64,
+    pub alpha_s: f64,
+    /// Offline-profiled max batch within SLO (then clamped by memory).
+    pub max_batch: usize,
+    /// Arrival time of the most recent request (debounce input).
+    pub last_arrival_s: f64,
+    queue: Vec<Queued>,
+}
+
+impl BatchQueue {
+    pub fn new(function: usize, profile: &ModelProfile) -> Self {
+        BatchQueue {
+            function,
+            slo_s: profile.slo_ttft_s(),
+            t0_s: profile.t0_prefill_s,
+            alpha_s: profile.alpha_prefill_s,
+            max_batch: profile.slo_max_batch(),
+            last_arrival_s: f64::NEG_INFINITY,
+            queue: Vec::new(),
+        }
+    }
+
+    /// Has the arrival stream paused long enough that dispatching now
+    /// would not split an in-flight burst?
+    pub fn settled(&self, now_s: f64) -> bool {
+        now_s - self.last_arrival_s >= DEBOUNCE_S
+    }
+
+    /// Fixed-size variant for the NAB ablation / baseline systems.
+    pub fn fixed(function: usize, profile: &ModelProfile, batch: usize, delay_s: f64) -> FixedBatchQueue {
+        FixedBatchQueue {
+            inner: BatchQueue::new(function, profile),
+            batch_size: batch.max(1),
+            delay_s,
+        }
+    }
+
+    pub fn push(&mut self, q: Queued) {
+        self.last_arrival_s = self.last_arrival_s.max(q.arrival_s);
+        self.queue.push(q);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Eq. 2: predicted prefill latency at batch size b.
+    pub fn predicted_ttft(&self, b: usize) -> f64 {
+        self.t0_s + self.alpha_s * (b.max(1) - 1) as f64
+    }
+
+    /// Eq. 3: adaptive batch delay at the current fill — how much longer
+    /// the *oldest* queued request can afford to wait.
+    pub fn batch_delay(&self, now_s: f64) -> f64 {
+        let n = self.queue.len();
+        if n == 0 {
+            return f64::INFINITY;
+        }
+        let waited = now_s - self.oldest_arrival().unwrap();
+        (self.slo_s - self.predicted_ttft(n) - waited).max(0.0)
+    }
+
+    pub fn oldest_arrival(&self) -> Option<f64> {
+        self.queue
+            .iter()
+            .map(|q| q.arrival_s)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Eq. 5 deadline margin under M-way contention.
+    pub fn deadline_margin(&self, now_s: f64, contention_m: usize) -> f64 {
+        let n = self.queue.len().min(self.max_batch).max(1);
+        let waited = now_s - self.oldest_arrival().unwrap_or(now_s);
+        self.slo_s - (waited + contention_m.max(1) as f64 * self.predicted_ttft(n))
+    }
+
+    /// Fill-or-expire: should this queue dispatch now?
+    /// Fires when full (N ≥ B_i) or when the adaptive delay has expired.
+    pub fn should_dispatch(&self, now_s: f64) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.queue.len() >= self.max_batch || self.batch_delay(now_s) <= 0.0
+    }
+
+    /// Earliest future time at which this queue would time out (for the
+    /// event-driven simulator to schedule a wakeup).
+    pub fn expiry_time(&self) -> Option<f64> {
+        let n = self.queue.len();
+        if n == 0 {
+            return None;
+        }
+        Some(self.oldest_arrival().unwrap() + self.slo_s - self.predicted_ttft(n))
+    }
+
+    /// Take up to `memory_cap` requests as one batch (FIFO).
+    pub fn take_batch(&mut self, memory_cap: usize) -> Vec<Queued> {
+        let take = self.queue.len().min(self.max_batch).min(memory_cap.max(1));
+        self.queue
+            .sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        self.queue.drain(..take).collect()
+    }
+}
+
+/// Fixed batching for the NAB ablation (#1 b=1; #2 b=10,d=500ms;
+/// #3 b=20,d=1000ms) and the baselines' static batchers.
+#[derive(Debug, Clone)]
+pub struct FixedBatchQueue {
+    inner: BatchQueue,
+    pub batch_size: usize,
+    pub delay_s: f64,
+}
+
+impl FixedBatchQueue {
+    pub fn push(&mut self, q: Queued) {
+        self.inner.push(q);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn should_dispatch(&self, now_s: f64) -> bool {
+        if self.inner.is_empty() {
+            return false;
+        }
+        if self.inner.len() >= self.batch_size {
+            return true;
+        }
+        now_s - self.inner.oldest_arrival().unwrap() >= self.delay_s
+    }
+
+    pub fn expiry_time(&self) -> Option<f64> {
+        self.inner.oldest_arrival().map(|t| t + self.delay_s)
+    }
+
+    pub fn take_batch(&mut self, memory_cap: usize) -> Vec<Queued> {
+        let take = self.inner.queue.len().min(self.batch_size).min(memory_cap.max(1));
+        self.inner
+            .queue
+            .sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        self.inner.queue.drain(..take).collect()
+    }
+}
+
+/// Global contention-aware selector (Eq. 4/5): among dispatchable queues,
+/// pick the one with the smallest deadline margin.
+pub fn select_by_deadline_margin<'a>(
+    queues: impl Iterator<Item = &'a BatchQueue>,
+    now_s: f64,
+    contention_m: usize,
+) -> Option<usize> {
+    queues
+        .filter(|q| !q.is_empty())
+        .map(|q| (q.function, q.deadline_margin(now_s, contention_m)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(f, _)| f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::ModelProfile;
+
+    fn queue() -> BatchQueue {
+        BatchQueue::new(0, &ModelProfile::llama2_7b())
+    }
+
+    #[test]
+    fn max_batch_bounded_by_slo() {
+        let q = queue();
+        assert!(q.predicted_ttft(q.max_batch) <= q.slo_s + 1e-9);
+        assert!(q.predicted_ttft(q.max_batch + 1) > q.slo_s);
+    }
+
+    #[test]
+    fn eq3_delay_shrinks_as_batch_fills() {
+        let mut q = queue();
+        q.push(Queued { request: 1, arrival_s: 0.0 });
+        let d1 = q.batch_delay(0.0);
+        for i in 2..=10 {
+            q.push(Queued { request: i, arrival_s: 0.0 });
+        }
+        let d10 = q.batch_delay(0.0);
+        // d = SLO − T(N) − waited; T grows with N ⇒ delay shrinks.
+        assert!(d10 < d1);
+        assert!((d1 - d10 - 9.0 * q.alpha_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dispatches_when_full() {
+        let mut q = queue();
+        for i in 0..q.max_batch as u64 {
+            q.push(Queued { request: i, arrival_s: 0.0 });
+        }
+        assert!(q.should_dispatch(0.0));
+    }
+
+    #[test]
+    fn dispatches_on_expiry_never_violating_slo() {
+        let mut q = queue();
+        q.push(Queued { request: 1, arrival_s: 0.0 });
+        let expiry = q.expiry_time().unwrap();
+        assert!(!q.should_dispatch(expiry - 0.01));
+        assert!(q.should_dispatch(expiry + 0.001));
+        // Dispatching exactly at expiry still meets the SLO prediction:
+        // waited + T(N) == SLO.
+        let waited = expiry;
+        assert!((waited + q.predicted_ttft(1) - q.slo_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_batches_wait_longer() {
+        // §4.2: "the Batch Scheduler tends to wait longer when the batch
+        // size is small".
+        let mut q1 = queue();
+        q1.push(Queued { request: 1, arrival_s: 0.0 });
+        let mut q5 = queue();
+        for i in 0..20 {
+            q5.push(Queued { request: i, arrival_s: 0.0 });
+        }
+        assert!(q1.batch_delay(0.0) > q5.batch_delay(0.0));
+    }
+
+    #[test]
+    fn take_batch_fifo_and_capped() {
+        let mut q = queue();
+        for i in 0..50u64 {
+            q.push(Queued { request: i, arrival_s: i as f64 * 0.01 });
+        }
+        let b = q.take_batch(8);
+        assert_eq!(b.len(), 8); // memory cap binds before max_batch
+        assert_eq!(b[0].request, 0);
+        assert_eq!(b[7].request, 7);
+        assert_eq!(q.len(), 42);
+    }
+
+    #[test]
+    fn margin_shrinks_under_contention() {
+        let mut q = queue();
+        q.push(Queued { request: 1, arrival_s: 0.0 });
+        let m1 = q.deadline_margin(0.1, 1);
+        let m4 = q.deadline_margin(0.1, 4);
+        assert!(m4 < m1);
+        // Eq. 5 exactly: Δ = SLO − (w + M·T(b)).
+        assert!((m4 - (q.slo_s - (0.1 + 4.0 * q.predicted_ttft(1)))).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tightest_margin_selected() {
+        let mut a = BatchQueue::new(0, &ModelProfile::llama2_7b());
+        let mut b = BatchQueue::new(1, &ModelProfile::llama2_7b());
+        a.push(Queued { request: 1, arrival_s: 0.0 });
+        b.push(Queued { request: 2, arrival_s: 1.5 }); // waited less
+        let sel = select_by_deadline_margin([&a, &b].into_iter(), 2.0, 1);
+        assert_eq!(sel, Some(0)); // a has waited longer ⇒ smaller margin
+    }
+
+    #[test]
+    fn fixed_queue_matches_nab_variants() {
+        let m = ModelProfile::llama2_7b();
+        // NAB #2: batch 10, delay 500 ms.
+        let mut q = BatchQueue::fixed(0, &m, 10, 0.5);
+        q.push(Queued { request: 1, arrival_s: 0.0 });
+        assert!(!q.should_dispatch(0.4));
+        assert!(q.should_dispatch(0.51));
+        for i in 2..=10 {
+            q.push(Queued { request: i, arrival_s: 0.1 });
+        }
+        assert!(q.should_dispatch(0.11)); // full fires immediately
+        assert_eq!(q.take_batch(usize::MAX).len(), 10);
+    }
+
+    #[test]
+    fn empty_queue_never_dispatches() {
+        let q = queue();
+        assert!(!q.should_dispatch(1e9));
+        assert_eq!(q.expiry_time(), None);
+        assert_eq!(
+            select_by_deadline_margin([&q].into_iter(), 0.0, 1),
+            None
+        );
+    }
+}

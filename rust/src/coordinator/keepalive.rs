@@ -1,0 +1,117 @@
+//! Keep-alive policy (§2.2): serverless platforms keep an invoked
+//! function's instance (and its artifacts) for a fixed window after
+//! execution. Keep-alive is what makes baseline LoRA serving expensive
+//! (idle full backbones bill GPU GB-seconds) and, for ServerlessLoRA,
+//! what creates the idle capacity the pre-loader exploits (§2.4).
+
+use std::collections::BTreeMap;
+
+/// Default industry keep-alive window (Azure Functions: 10 min; we use
+/// the common 5-minute setting the serverless-inference literature uses).
+pub const DEFAULT_KEEPALIVE_S: f64 = 300.0;
+
+/// Tracks the keep-alive expiry of warm function instances.
+#[derive(Debug, Clone)]
+pub struct KeepAlive {
+    pub window_s: f64,
+    /// function → expiry time.
+    expiry: BTreeMap<usize, f64>,
+}
+
+impl Default for KeepAlive {
+    fn default() -> Self {
+        Self::new(DEFAULT_KEEPALIVE_S)
+    }
+}
+
+impl KeepAlive {
+    pub fn new(window_s: f64) -> Self {
+        KeepAlive { window_s, expiry: BTreeMap::new() }
+    }
+
+    /// A function finished serving at `now` — (re)arm its window.
+    pub fn touch(&mut self, function: usize, now_s: f64) {
+        self.expiry.insert(function, now_s + self.window_s);
+    }
+
+    pub fn is_warm(&self, function: usize, now_s: f64) -> bool {
+        self.expiry.get(&function).map(|&e| e > now_s).unwrap_or(false)
+    }
+
+    /// Functions whose window expired by `now` (to be torn down + billed
+    /// until their expiry instant).
+    pub fn expired(&mut self, now_s: f64) -> Vec<(usize, f64)> {
+        let out: Vec<(usize, f64)> = self
+            .expiry
+            .iter()
+            .filter(|(_, &e)| e <= now_s)
+            .map(|(&f, &e)| (f, e))
+            .collect();
+        for (f, _) in &out {
+            self.expiry.remove(f);
+        }
+        out
+    }
+
+    /// Next expiry instant (simulator wakeup).
+    pub fn next_expiry(&self) -> Option<f64> {
+        self.expiry.values().cloned().fold(None, |acc, e| {
+            Some(acc.map_or(e, |a: f64| a.min(e)))
+        })
+    }
+
+    pub fn warm_functions(&self, now_s: f64) -> Vec<usize> {
+        self.expiry
+            .iter()
+            .filter(|(_, &e)| e > now_s)
+            .map(|(&f, _)| f)
+            .collect()
+    }
+
+    pub fn drop(&mut self, function: usize) {
+        self.expiry.remove(&function);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_arms_and_expires() {
+        let mut k = KeepAlive::new(300.0);
+        k.touch(1, 100.0);
+        assert!(k.is_warm(1, 350.0));
+        assert!(!k.is_warm(1, 400.01));
+        let ex = k.expired(401.0);
+        assert_eq!(ex, vec![(1, 400.0)]);
+        assert!(!k.is_warm(1, 100.0)); // removed
+    }
+
+    #[test]
+    fn touch_extends() {
+        let mut k = KeepAlive::new(300.0);
+        k.touch(1, 0.0);
+        k.touch(1, 200.0);
+        assert!(k.is_warm(1, 450.0));
+        assert_eq!(k.next_expiry(), Some(500.0));
+    }
+
+    #[test]
+    fn warm_set_and_drop() {
+        let mut k = KeepAlive::new(10.0);
+        k.touch(1, 0.0);
+        k.touch(2, 5.0);
+        let mut warm = k.warm_functions(7.0);
+        warm.sort_unstable();
+        assert_eq!(warm, vec![1, 2]);
+        k.drop(1);
+        assert_eq!(k.warm_functions(7.0), vec![2]);
+    }
+
+    #[test]
+    fn unknown_function_is_cold() {
+        let k = KeepAlive::default();
+        assert!(!k.is_warm(9, 0.0));
+    }
+}

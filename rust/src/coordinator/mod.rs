@@ -1,0 +1,19 @@
+//! The paper's L3 coordination contribution: the Pre-Loading Scheduler
+//! (§4.1, PCKP greedy), the two-layer Adaptive Batching Scheduler (§4.2),
+//! the Dynamic Offloader (§4.3), and the locality-aware request router
+//! (§3.3 step 4). The backbone-sharing registry they coordinate over
+//! lives in `crate::sharing`; the ledgers in `crate::cluster`.
+
+pub mod batching;
+pub mod keepalive;
+pub mod offload;
+pub mod preload;
+pub mod router;
+
+pub use batching::{BatchQueue, FixedBatchQueue, Queued};
+pub use keepalive::KeepAlive;
+pub use offload::{DynamicOffloader, OffloadPlan};
+pub use preload::{
+    exact_plan, Decision, FunctionDemand, Placement, PreloadPlan, PreloadScheduler,
+};
+pub use router::{Readiness, Route, Router};

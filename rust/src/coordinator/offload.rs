@@ -1,0 +1,296 @@
+//! Dynamic GPU Offloader (paper §4.3).
+//!
+//! When a GPU needs Q_g additional memory (KV cache for an arriving
+//! batch), evict *unrelated* pre-loaded artifacts — per-function models
+//! (x_Mg) and CUDA kernels (x_Kg), Eq. 6 — minimising the total future
+//! value lost (Eq. 7).  NP-hard like the pre-loading problem; solved with
+//! the same value-density greedy (lowest ρ = v/w evicted first), which
+//! "executes within microseconds".
+//!
+//! Eviction destinations: per-function artifacts fall back to container
+//! RAM (cheap reload over PCIe) or are dropped entirely; shared backbones
+//! are only evictable at refcount 0 and only when no protected function
+//! needs them.
+
+use crate::artifact::ArtifactKind;
+use crate::cluster::{Cluster, GpuId};
+use crate::sharing::BackboneRegistry;
+
+/// One evictable item on a GPU, with its §4.1-style value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evictable {
+    pub function: Option<usize>, // None = shared backbone
+    pub model: Option<String>,   // Some for shared backbones
+    pub kind: ArtifactKind,
+    pub size_gb: f64,
+    /// Future-acceleration value v (loading delay × arrival rate).
+    pub value: f64,
+}
+
+impl Evictable {
+    pub fn density(&self) -> f64 {
+        self.value / self.size_gb.max(1e-9)
+    }
+}
+
+/// The eviction plan for one request for Q_g GB.
+#[derive(Debug, Clone, Default)]
+pub struct OffloadPlan {
+    pub evictions: Vec<Evictable>,
+    pub freed_gb: f64,
+    /// True iff freed_gb ≥ requested Q_g.
+    pub satisfied: bool,
+}
+
+impl OffloadPlan {
+    pub fn value_lost(&self) -> f64 {
+        self.evictions.iter().map(|e| e.value).sum()
+    }
+}
+
+pub struct DynamicOffloader;
+
+impl DynamicOffloader {
+    /// Enumerate evictable items on `gpu`, excluding `protected` functions
+    /// (the ones the incoming batch belongs to) and any backbone still
+    /// referenced by live instances.
+    pub fn evictable(
+        cluster: &Cluster,
+        registry: &BackboneRegistry,
+        gpu: GpuId,
+        protected: &[usize],
+        value_of: impl Fn(Option<usize>, ArtifactKind) -> f64,
+    ) -> Vec<Evictable> {
+        let g = cluster.gpu(gpu);
+        let mut out = Vec::new();
+        for f in g.resident_functions() {
+            if protected.contains(&f) {
+                continue;
+            }
+            if let Some(res) = g.function_residency(f) {
+                for (&kind, &gb) in &res.kinds {
+                    // Eq. 6/7 variables: models (x_Mg) and kernels (x_Kg).
+                    if matches!(
+                        kind,
+                        ArtifactKind::Backbone
+                            | ArtifactKind::Adapter
+                            | ArtifactKind::CudaKernel
+                    ) {
+                        out.push(Evictable {
+                            function: Some(f),
+                            model: None,
+                            kind,
+                            size_gb: gb,
+                            value: value_of(Some(f), kind),
+                        });
+                    }
+                }
+            }
+        }
+        // Shared backbones: evictable only with zero attached readers.
+        for (model, seg) in g.shared_models() {
+            if seg.refcount == 0 && registry.is_hosted_on(model, gpu) {
+                out.push(Evictable {
+                    function: None,
+                    model: Some(model.clone()),
+                    kind: ArtifactKind::Backbone,
+                    size_gb: seg.size_gb,
+                    value: value_of(None, ArtifactKind::Backbone),
+                });
+            }
+        }
+        out
+    }
+
+    /// Value-density greedy (Eq. 7): evict lowest-ρ first until Q_g is
+    /// freed (or nothing evictable remains).
+    pub fn plan(mut evictable: Vec<Evictable>, need_gb: f64) -> OffloadPlan {
+        evictable.sort_by(|a, b| a.density().partial_cmp(&b.density()).unwrap());
+        let mut plan = OffloadPlan::default();
+        for e in evictable {
+            if plan.freed_gb >= need_gb {
+                break;
+            }
+            plan.freed_gb += e.size_gb;
+            plan.evictions.push(e);
+        }
+        plan.satisfied = plan.freed_gb >= need_gb;
+        plan
+    }
+
+    /// Execute a plan against the ledgers. Per-function artifacts move to
+    /// container RAM when `spill_to` is given (and has room), else drop.
+    pub fn apply(
+        plan: &OffloadPlan,
+        cluster: &mut Cluster,
+        registry: &mut BackboneRegistry,
+        gpu: GpuId,
+        spill_to: Option<crate::cluster::ContainerId>,
+    ) {
+        for e in &plan.evictions {
+            match (e.function, &e.model) {
+                (Some(f), _) => {
+                    if cluster.gpu_mut(gpu).evict_artifact(f, e.kind).is_ok() {
+                        if let Some(cid) = spill_to {
+                            if e.kind.container_placeable() {
+                                // Best-effort spill; dropping is also legal.
+                                let _ = cluster
+                                    .container_mut(cid)
+                                    .place(f, e.kind, e.size_gb);
+                            }
+                        }
+                    }
+                }
+                (None, Some(model)) => {
+                    let _ = registry.unload(cluster, model, gpu);
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    /// Convenience: free `need_gb` on `gpu` end-to-end. Returns the plan.
+    pub fn free(
+        cluster: &mut Cluster,
+        registry: &mut BackboneRegistry,
+        gpu: GpuId,
+        need_gb: f64,
+        protected: &[usize],
+        value_of: impl Fn(Option<usize>, ArtifactKind) -> f64,
+        spill_to: Option<crate::cluster::ContainerId>,
+    ) -> OffloadPlan {
+        let already = cluster.gpu(gpu).free_gb();
+        if already >= need_gb {
+            return OffloadPlan { evictions: vec![], freed_gb: 0.0, satisfied: true };
+        }
+        let evictable =
+            Self::evictable(cluster, registry, gpu, protected, value_of);
+        let plan = Self::plan(evictable, need_gb - already);
+        Self::apply(&plan, cluster, registry, gpu, spill_to);
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuId;
+
+    fn gid() -> GpuId {
+        GpuId { node: 0, index: 0 }
+    }
+
+    fn setup() -> (Cluster, BackboneRegistry) {
+        let mut c = Cluster::new(1, 1, 1);
+        let mut r = BackboneRegistry::new();
+        // Resident: fn0 adapter+kernel, fn1 adapter+kernel, idle shared 13B.
+        r.load(&mut c, "llama2-13b", 26.0, gid()).unwrap();
+        let g = c.gpu_mut(gid());
+        g.place_artifact(0, ArtifactKind::Adapter, 0.2).unwrap();
+        g.place_artifact(0, ArtifactKind::CudaKernel, 0.5).unwrap();
+        g.place_artifact(1, ArtifactKind::Adapter, 0.2).unwrap();
+        g.place_artifact(1, ArtifactKind::CudaKernel, 0.5).unwrap();
+        (c, r)
+    }
+
+    fn values(f: Option<usize>, k: ArtifactKind) -> f64 {
+        // fn0 is hot (high future value), fn1 cold, idle backbone coldest
+        // per GB.
+        match (f, k) {
+            (Some(0), _) => 10.0,
+            (Some(1), _) => 1.0,
+            (None, _) => 5.0,
+            _ => 1.0,
+        }
+    }
+
+    #[test]
+    fn evicts_lowest_density_first() {
+        let (c, r) = setup();
+        let ev = DynamicOffloader::evictable(&c, &r, gid(), &[], values);
+        let plan = DynamicOffloader::plan(ev, 0.3);
+        assert!(plan.satisfied);
+        // fn1's artifacts (ρ=1/0.2, 1/0.5) and the idle backbone
+        // (ρ=5/26≈0.19) are cheapest per GB ⇒ backbone goes first.
+        assert_eq!(plan.evictions[0].model.as_deref(), Some("llama2-13b"));
+    }
+
+    #[test]
+    fn frees_at_least_q(/* Eq. 6 */) {
+        let (mut c, mut r) = setup();
+        let before = c.gpu(gid()).free_gb();
+        let plan = DynamicOffloader::free(
+            &mut c, &mut r, gid(), before + 2.0, &[], values, None,
+        );
+        assert!(plan.satisfied);
+        assert!(c.gpu(gid()).free_gb() >= before + 2.0 - 1e-9);
+    }
+
+    #[test]
+    fn protected_functions_untouched() {
+        let (c, r) = setup();
+        let ev = DynamicOffloader::evictable(&c, &r, gid(), &[0], values);
+        assert!(ev.iter().all(|e| e.function != Some(0)));
+    }
+
+    #[test]
+    fn live_backbone_not_evictable() {
+        let (mut c, mut r) = setup();
+        r.attach(&mut c, "llama2-13b", gid(), 0).unwrap();
+        let ev = DynamicOffloader::evictable(&c, &r, gid(), &[], values);
+        assert!(ev.iter().all(|e| e.model.is_none()));
+    }
+
+    #[test]
+    fn unsatisfiable_reported_not_panicked() {
+        let (c, r) = setup();
+        let ev = DynamicOffloader::evictable(&c, &r, gid(), &[], values);
+        let plan = DynamicOffloader::plan(ev, 1e9);
+        assert!(!plan.satisfied);
+        assert!(plan.freed_gb > 0.0); // evicted everything it could
+    }
+
+    #[test]
+    fn spills_to_container_ram() {
+        let (mut c, mut r) = setup();
+        let cid = c.container_ids()[0];
+        // Need more than fn1's kernel alone (0.5 GB) so its adapter —
+        // the container-placeable artifact — must also be evicted.
+        let need = c.gpu(gid()).free_gb() + 0.6;
+        // Value function that makes the idle backbone precious, so the
+        // greedy reaches for fn1's per-function artifacts instead.
+        let v = |f: Option<usize>, k: ArtifactKind| match (f, k) {
+            (None, _) => 1e6,
+            (Some(0), _) => 10.0,
+            _ => 0.1,
+        };
+        DynamicOffloader::free(&mut c, &mut r, gid(), need, &[], v, Some(cid));
+        // The evicted adapter (container-placeable) landed in host RAM.
+        let spilled = c.container(cid).used_gb();
+        assert!(spilled > 0.0, "expected spill, container empty");
+        assert!(c.container(cid).has(1, ArtifactKind::Adapter));
+    }
+
+    #[test]
+    fn noop_when_memory_already_free() {
+        let (mut c, mut r) = setup();
+        let plan = DynamicOffloader::free(
+            &mut c, &mut r, gid(), 1.0, &[], values, None,
+        );
+        assert!(plan.satisfied);
+        assert!(plan.evictions.is_empty());
+    }
+
+    #[test]
+    fn minimises_value_lost_vs_alternative() {
+        // Greedy by density must not evict the hot fn0 artifacts while
+        // cold fn1 artifacts suffice.
+        let (c, r) = setup();
+        let ev = DynamicOffloader::evictable(&c, &r, gid(), &[], values);
+        let plan = DynamicOffloader::plan(ev, 0.6);
+        assert!(plan
+            .evictions
+            .iter()
+            .all(|e| e.function != Some(0)), "evicted hot artifacts: {plan:?}");
+    }
+}

@@ -1,0 +1,691 @@
+//! Pre-Loading Scheduler (paper §4.1): which artifacts of which functions
+//! to pre-load into which idle container / GPU.
+//!
+//! Formulated as a Precedence-Constrained Knapsack Problem (PCKP):
+//! maximise Σ v_i^f x_i^{f,target} subject to
+//!   * capacity of each container and GPU,
+//!   * placement rules (libraries → container only; CUDA kernels → GPU
+//!     only; backbones/adapters → either),
+//!   * precedence (models need libraries; kernels need the model on GPU),
+//!   * backbone–adapter GPU coupling.
+//!
+//! PCKP is NP-hard; exact DP is O(2^(|F|·(|C|+|G|))) — infeasible at
+//! serverless scheduling latencies.  We implement the paper's greedy by
+//! *value density* ρ = v/w (O(|F|²·(|C|+|G|)) worst case), plus an exact
+//! brute-force oracle (`exact_plan`) used by tests to verify the greedy is
+//! near-optimal on small instances.
+
+use std::collections::BTreeMap;
+
+use crate::artifact::{ArtifactKind, FunctionSpec, Tier};
+use crate::cluster::{Cluster, ContainerId, GpuId};
+use crate::sharing::BackboneRegistry;
+
+/// GPU memory the planner refuses to fill with pre-loaded artifacts, so
+/// serving always has KV-cache headroom (≈ a 20-request 7B batch).
+pub const KV_PRELOAD_RESERVE_GB: f64 = 10.0;
+
+/// Where one artifact is pre-loaded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    Container(ContainerId),
+    Gpu(GpuId),
+}
+
+/// One pre-loading decision.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub function: usize,
+    pub kind: ArtifactKind,
+    pub placement: Placement,
+    pub size_gb: f64,
+    /// Benefit v = (latency saved) × (arrival rate), §4.1.
+    pub value: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PreloadPlan {
+    pub decisions: Vec<Decision>,
+}
+
+impl PreloadPlan {
+    pub fn total_value(&self) -> f64 {
+        self.decisions.iter().map(|d| d.value).sum()
+    }
+
+    pub fn has(&self, function: usize, kind: ArtifactKind) -> bool {
+        self.decisions
+            .iter()
+            .any(|d| d.function == function && d.kind == kind)
+    }
+
+    pub fn placement_of(&self, function: usize, kind: ArtifactKind) -> Option<Placement> {
+        self.decisions
+            .iter()
+            .find(|d| d.function == function && d.kind == kind)
+            .map(|d| d.placement)
+    }
+}
+
+/// Scheduler inputs per function: its spec and the estimated arrival rate
+/// (req/s) from the controller's sliding-window history.
+#[derive(Debug, Clone)]
+pub struct FunctionDemand {
+    pub spec: FunctionSpec,
+    pub rate: f64,
+}
+
+/// Candidate (artifact, target) with value/weight, before capacity checks.
+#[derive(Debug, Clone)]
+struct Candidate {
+    function: usize,
+    kind: ArtifactKind,
+    placement: Placement,
+    size_gb: f64,
+    value: f64,
+    density: f64,
+}
+
+pub struct PreloadScheduler {
+    /// Cold-start source tier for non-preloaded artifacts (Remote for a
+    /// fresh deployment, Ssd once checkpoints are cached node-locally).
+    pub cold_tier: Tier,
+}
+
+impl Default for PreloadScheduler {
+    fn default() -> Self {
+        PreloadScheduler { cold_tier: Tier::Ssd }
+    }
+}
+
+impl PreloadScheduler {
+    pub fn new(cold_tier: Tier) -> Self {
+        PreloadScheduler { cold_tier }
+    }
+
+    fn cold_load_s(&self, a: &crate::artifact::ArtifactSpec) -> f64 {
+        match self.cold_tier {
+            Tier::Remote => a.load_from_remote_s,
+            Tier::Ssd => a.load_from_ssd_s,
+            Tier::ContainerRam => a.load_from_ram_s,
+            Tier::Gpu => 0.0,
+        }
+    }
+
+    /// Enumerate placement candidates with §4.1 values:
+    /// * GPU placement of X saves the full cold load of X;
+    /// * container placement of a model saves (cold − PCIe-up) time;
+    /// * libraries are only container-placeable, kernels only GPU-placeable.
+    fn candidates(
+        &self,
+        demands: &[FunctionDemand],
+        cluster: &Cluster,
+        registry: &BackboneRegistry,
+    ) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for d in demands {
+            let arts = d.spec.artifacts();
+            for a in &arts {
+                let cold = self.cold_load_s(a);
+                // Value of having it GPU-resident: full cold load avoided.
+                let v_gpu = cold * d.rate;
+                // Value of container residency: cold load reduced to the
+                // RAM→GPU hop.
+                let v_ram = (cold - a.load_from_ram_s).max(0.0) * d.rate;
+                if a.kind.container_placeable() && v_ram > 0.0 {
+                    for cid in cluster.container_ids() {
+                        out.push(Candidate {
+                            function: d.spec.id,
+                            kind: a.kind,
+                            placement: Placement::Container(cid),
+                            size_gb: a.size_gb,
+                            value: v_ram,
+                            density: v_ram / a.size_gb.max(1e-6),
+                        });
+                    }
+                }
+                if a.kind.gpu_placeable() && v_gpu > 0.0 {
+                    // Backbone GPU placement is *shared*: skip if some GPU
+                    // already hosts it (value collapses to attach ≈ 0).
+                    if a.kind == ArtifactKind::Backbone
+                        && !registry.hosts(d.spec.model.name).is_empty()
+                    {
+                        continue;
+                    }
+                    for gid in cluster.gpu_ids() {
+                        out.push(Candidate {
+                            function: d.spec.id,
+                            kind: a.kind,
+                            placement: Placement::Gpu(gid),
+                            size_gb: a.size_gb,
+                            value: v_gpu,
+                            density: v_gpu / a.size_gb.max(1e-6),
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The §4.1 greedy: sort all candidates by value density, place in
+    /// order while respecting capacity + precedence + coupling. Runs in
+    /// multiple passes so a high-density kernel skipped for a missing
+    /// prerequisite is retried once its backbone lands.
+    ///
+    /// Target selection within a placement class is *least-loaded first*:
+    /// every per-GPU (per-container) duplicate of a candidate has the same
+    /// density, so the tie is broken toward the target with the most
+    /// remaining planning capacity — spreading models across the cluster
+    /// instead of packing one GPU solid.
+    pub fn plan(
+        &self,
+        demands: &[FunctionDemand],
+        cluster: &Cluster,
+        registry: &BackboneRegistry,
+    ) -> PreloadPlan {
+        let mut cands = self.candidates(demands, cluster, registry);
+        cands.sort_by(|a, b| b.density.partial_cmp(&a.density).unwrap());
+
+        let model_of: BTreeMap<usize, &FunctionSpec> =
+            demands.iter().map(|d| (d.spec.id, &d.spec)).collect();
+
+        // Remaining capacities (planning view — nothing is mutated yet).
+        // Each GPU keeps `KV_PRELOAD_RESERVE_GB` un-planned: pre-loaded
+        // artifacts must never starve serving of KV-cache room (§4.3's
+        // offloader is the *emergency* path, not the steady state).
+        let mut gpu_free: BTreeMap<GpuId, f64> = cluster
+            .gpu_ids()
+            .iter()
+            .map(|&g| {
+                (g, (cluster.gpu(g).free_gb() - KV_PRELOAD_RESERVE_GB).max(0.0))
+            })
+            .collect();
+        let mut ctr_free: BTreeMap<ContainerId, f64> = cluster
+            .container_ids()
+            .iter()
+            .map(|&c| (c, cluster.container(c).free_gb()))
+            .collect();
+
+        let mut plan = PreloadPlan::default();
+        // (function,kind) placed once at most (first = highest density).
+        let mut placed: BTreeMap<(usize, ArtifactKind), Placement> = BTreeMap::new();
+        // model-name → GPU chosen for the shared backbone in this plan.
+        let mut planned_backbone_gpu: BTreeMap<&str, GpuId> = BTreeMap::new();
+
+        let max_passes = 4;
+        for _ in 0..max_passes {
+            let mut progressed = false;
+            for c in &cands {
+                // A GPU placement strictly dominates a container placement
+                // of the same artifact (it saves the PCIe hop too): when a
+                // GPU candidate becomes admissible after its backbone
+                // landed in a later pass, upgrade the earlier container
+                // decision instead of skipping.
+                if let Some(Placement::Container(prev)) =
+                    placed.get(&(c.function, c.kind)).copied()
+                {
+                    if matches!(c.placement, Placement::Gpu(_))
+                        && self.admissible(
+                            c,
+                            model_of[&c.function],
+                            &placed,
+                            &planned_backbone_gpu,
+                            registry,
+                            cluster,
+                        )
+                    {
+                        let fits = match c.placement {
+                            Placement::Gpu(g) => gpu_free[&g] + 1e-9 >= c.size_gb,
+                            _ => false,
+                        };
+                        if fits {
+                            // Refund the container bytes, drop the old
+                            // decision, and fall through to place on GPU.
+                            *ctr_free.get_mut(&prev).unwrap() += c.size_gb;
+                            placed.remove(&(c.function, c.kind));
+                            plan.decisions.retain(|d| {
+                                !(d.function == c.function && d.kind == c.kind)
+                            });
+                        }
+                    }
+                }
+                if placed.contains_key(&(c.function, c.kind)) {
+                    continue;
+                }
+                let spec = model_of[&c.function];
+                let model = spec.model.name;
+                if !self.admissible(
+                    c, spec, &placed, &planned_backbone_gpu, registry, cluster,
+                ) {
+                    continue;
+                }
+                match c.placement {
+                    Placement::Gpu(_) => {
+                        // Shared backbone: if another function already
+                        // planned this model's backbone, ride that GPU —
+                        // free of charge (no extra bytes).
+                        if c.kind == ArtifactKind::Backbone {
+                            if let Some(&pg) = planned_backbone_gpu.get(model) {
+                                placed
+                                    .insert((c.function, c.kind), Placement::Gpu(pg));
+                                plan.decisions.push(Decision {
+                                    function: c.function,
+                                    kind: c.kind,
+                                    placement: Placement::Gpu(pg),
+                                    size_gb: 0.0, // shared, already paid
+                                    value: c.value,
+                                });
+                                progressed = true;
+                                continue;
+                            }
+                        }
+                        // Least-loaded admissible GPU that fits.
+                        let best = gpu_free
+                            .iter()
+                            .filter(|(&g, &free)| {
+                                free + 1e-9 >= c.size_gb
+                                    && self.admissible(
+                                        &Candidate {
+                                            placement: Placement::Gpu(g),
+                                            ..c.clone()
+                                        },
+                                        spec,
+                                        &placed,
+                                        &planned_backbone_gpu,
+                                        registry,
+                                        cluster,
+                                    )
+                            })
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(&g, _)| g);
+                        let Some(g) = best else { continue };
+                        *gpu_free.get_mut(&g).unwrap() -= c.size_gb;
+                        if c.kind == ArtifactKind::Backbone {
+                            planned_backbone_gpu.insert(model, g);
+                        }
+                        placed.insert((c.function, c.kind), Placement::Gpu(g));
+                        plan.decisions.push(Decision {
+                            function: c.function,
+                            kind: c.kind,
+                            placement: Placement::Gpu(g),
+                            size_gb: c.size_gb,
+                            value: c.value,
+                        });
+                        progressed = true;
+                    }
+                    Placement::Container(_) => {
+                        let best = ctr_free
+                            .iter()
+                            .filter(|(&cid, &free)| {
+                                free + 1e-9 >= c.size_gb
+                                    && self.admissible(
+                                        &Candidate {
+                                            placement: Placement::Container(cid),
+                                            ..c.clone()
+                                        },
+                                        spec,
+                                        &placed,
+                                        &planned_backbone_gpu,
+                                        registry,
+                                        cluster,
+                                    )
+                            })
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(&cid, _)| cid);
+                        let Some(cid) = best else { continue };
+                        *ctr_free.get_mut(&cid).unwrap() -= c.size_gb;
+                        placed.insert((c.function, c.kind), Placement::Container(cid));
+                        plan.decisions.push(Decision {
+                            function: c.function,
+                            kind: c.kind,
+                            placement: Placement::Container(cid),
+                            size_gb: c.size_gb,
+                            value: c.value,
+                        });
+                        progressed = true;
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        plan
+    }
+
+    /// Precedence + coupling checks for one candidate against the current
+    /// partial plan.
+    fn admissible(
+        &self,
+        c: &Candidate,
+        spec: &FunctionSpec,
+        placed: &BTreeMap<(usize, ArtifactKind), Placement>,
+        planned_backbone_gpu: &BTreeMap<&str, GpuId>,
+        registry: &BackboneRegistry,
+        _cluster: &Cluster,
+    ) -> bool {
+        let model = spec.model.name;
+        let backbone_gpu = |g: GpuId| -> bool {
+            planned_backbone_gpu.get(model).copied() == Some(g)
+                || registry.is_hosted_on(model, g)
+        };
+        match (c.kind, c.placement) {
+            // Libraries: container only, no prerequisites.
+            (ArtifactKind::Library, Placement::Container(_)) => true,
+            (ArtifactKind::Library, Placement::Gpu(_)) => false,
+            // Models on GPU require libraries placed (any container) —
+            // §4.1 "models require libraries first".
+            (ArtifactKind::Backbone, Placement::Gpu(_)) => placed
+                .contains_key(&(c.function, ArtifactKind::Library)),
+            (ArtifactKind::Backbone, Placement::Container(_)) => true,
+            // Adapter GPU placement must ride a GPU with (a plan for) its
+            // backbone — §4.1 backbone–adapter coupling.
+            (ArtifactKind::Adapter, Placement::Gpu(g)) => backbone_gpu(g),
+            // Adapter in container: coupled to the node of the backbone's
+            // GPU when one exists; otherwise free (it is host RAM).
+            (ArtifactKind::Adapter, Placement::Container(cid)) => {
+                match planned_backbone_gpu.get(model) {
+                    Some(g) => g.node == cid.node,
+                    None => registry.hosts(model).is_empty()
+                        || registry.hosts(model).iter().any(|h| h.node == cid.node),
+                }
+            }
+            // Kernels: GPU only, and only where the model is resident —
+            // §4.1 "CUDA kernels require models on GPU first".
+            (ArtifactKind::CudaKernel, Placement::Gpu(g)) => backbone_gpu(g),
+            (ArtifactKind::CudaKernel, Placement::Container(_)) => false,
+            (ArtifactKind::Container, _) => false,
+        }
+    }
+
+    /// Apply a plan to the cluster ledgers (Pre-Loading Agent, step 3).
+    pub fn apply(
+        &self,
+        plan: &PreloadPlan,
+        demands: &[FunctionDemand],
+        cluster: &mut Cluster,
+        registry: &mut BackboneRegistry,
+    ) {
+        let spec_of: BTreeMap<usize, &FunctionSpec> =
+            demands.iter().map(|d| (d.spec.id, &d.spec)).collect();
+        for d in &plan.decisions {
+            let spec = spec_of[&d.function];
+            match (d.kind, d.placement) {
+                (ArtifactKind::Backbone, Placement::Gpu(g)) => {
+                    registry
+                        .load(cluster, spec.model.name, spec.model.weights_gb, g)
+                        .expect("planned backbone placement must fit");
+                }
+                (k, Placement::Gpu(g)) => {
+                    cluster
+                        .gpu_mut(g)
+                        .place_artifact(d.function, k, d.size_gb)
+                        .expect("planned GPU placement must fit");
+                }
+                (k, Placement::Container(cid)) => {
+                    cluster
+                        .container_mut(cid)
+                        .place(d.function, k, d.size_gb)
+                        .expect("planned container placement must fit");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exact oracle for tests: brute-force over candidate subsets (tiny inputs).
+
+/// Exact PCKP optimum by exhaustive search. Only usable for instances with
+/// ≤ ~14 candidate decisions; tests use it to bound the greedy's gap.
+pub fn exact_plan(
+    sched: &PreloadScheduler,
+    demands: &[FunctionDemand],
+    cluster: &Cluster,
+    registry: &BackboneRegistry,
+) -> f64 {
+    let cands = sched.candidates(demands, cluster, registry);
+    // Deduplicate to one candidate per (function, kind, placement).
+    assert!(cands.len() <= 20, "exact oracle is exponential; {} too many", cands.len());
+
+    let model_of: BTreeMap<usize, &FunctionSpec> =
+        demands.iter().map(|d| (d.spec.id, &d.spec)).collect();
+
+    let mut best = 0.0f64;
+    let n = cands.len();
+    'subset: for mask in 0u32..(1 << n) {
+        let chosen: Vec<&Candidate> =
+            (0..n).filter(|i| mask & (1 << i) != 0).map(|i| &cands[i]).collect();
+        // At most one placement per (function, kind).
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &chosen {
+            if !seen.insert((c.function, c.kind)) {
+                continue 'subset;
+            }
+        }
+        // Capacity (with backbone sharing: one model's backbone bytes are
+        // paid once per GPU).
+        let mut gpu_used: BTreeMap<GpuId, f64> = BTreeMap::new();
+        let mut ctr_used: BTreeMap<ContainerId, f64> = BTreeMap::new();
+        let mut backbone_on: BTreeMap<(&str, GpuId), bool> = BTreeMap::new();
+        for c in &chosen {
+            let model = model_of[&c.function].model.name;
+            match c.placement {
+                Placement::Gpu(g) => {
+                    let pay = if c.kind == ArtifactKind::Backbone {
+                        !backbone_on.insert((model, g), true).unwrap_or(false)
+                    } else {
+                        true
+                    };
+                    if pay {
+                        *gpu_used.entry(g).or_insert(0.0) += c.size_gb;
+                    }
+                }
+                Placement::Container(cid) => {
+                    *ctr_used.entry(cid).or_insert(0.0) += c.size_gb;
+                }
+            }
+        }
+        for (g, used) in &gpu_used {
+            if *used > cluster.gpu(*g).free_gb() + 1e-9 {
+                continue 'subset;
+            }
+        }
+        for (cid, used) in &ctr_used {
+            if *used > cluster.container(*cid).free_gb() + 1e-9 {
+                continue 'subset;
+            }
+        }
+        // Precedence & coupling.
+        let placed: BTreeMap<(usize, ArtifactKind), Placement> = chosen
+            .iter()
+            .map(|c| ((c.function, c.kind), c.placement))
+            .collect();
+        let mut planned_backbone: BTreeMap<&str, GpuId> = BTreeMap::new();
+        for c in &chosen {
+            if c.kind == ArtifactKind::Backbone {
+                if let Placement::Gpu(g) = c.placement {
+                    let model = model_of[&c.function].model.name;
+                    if let Some(&pg) = planned_backbone.get(model) {
+                        if pg != g {
+                            continue 'subset; // split backbone placement
+                        }
+                    }
+                    planned_backbone.insert(model, g);
+                }
+            }
+        }
+        for c in &chosen {
+            if !sched.admissible(
+                c, model_of[&c.function], &placed, &planned_backbone, registry, cluster,
+            ) {
+                continue 'subset;
+            }
+        }
+        let value: f64 = chosen.iter().map(|c| c.value).sum();
+        best = best.max(value);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::ModelProfile;
+
+    fn demand(id: usize, rate: f64) -> FunctionDemand {
+        FunctionDemand {
+            spec: FunctionSpec::new(id, ModelProfile::llama2_7b(), id),
+            rate,
+        }
+    }
+
+    fn setup(n_fns: usize) -> (Vec<FunctionDemand>, Cluster, BackboneRegistry) {
+        let demands = (0..n_fns).map(|i| demand(i, 0.5)).collect();
+        (demands, Cluster::new(1, 2, 2), BackboneRegistry::new())
+    }
+
+    #[test]
+    fn respects_placement_rules() {
+        let (d, c, r) = setup(2);
+        let plan = PreloadScheduler::default().plan(&d, &c, &r);
+        for dec in &plan.decisions {
+            match dec.kind {
+                ArtifactKind::Library => {
+                    assert!(matches!(dec.placement, Placement::Container(_)))
+                }
+                ArtifactKind::CudaKernel => {
+                    assert!(matches!(dec.placement, Placement::Gpu(_)))
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_only_where_backbone_planned() {
+        let (d, c, r) = setup(4);
+        let plan = PreloadScheduler::default().plan(&d, &c, &r);
+        for dec in &plan.decisions {
+            if dec.kind == ArtifactKind::CudaKernel {
+                let Placement::Gpu(g) = dec.placement else { panic!() };
+                // Some function of the same model placed its backbone there.
+                let ok = plan.decisions.iter().any(|b| {
+                    b.kind == ArtifactKind::Backbone && b.placement == Placement::Gpu(g)
+                });
+                assert!(ok, "kernel without backbone on {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn backbone_shared_single_copy() {
+        // Four 7B functions: only ONE decision pays backbone bytes; the
+        // rest ride the shared copy (size_gb == 0).
+        let (d, c, r) = setup(4);
+        let plan = PreloadScheduler::default().plan(&d, &c, &r);
+        let paid: Vec<&Decision> = plan
+            .decisions
+            .iter()
+            .filter(|x| x.kind == ArtifactKind::Backbone && x.size_gb > 0.0)
+            .collect();
+        let free: Vec<&Decision> = plan
+            .decisions
+            .iter()
+            .filter(|x| x.kind == ArtifactKind::Backbone && x.size_gb == 0.0)
+            .collect();
+        assert_eq!(paid.len(), 1, "exactly one paid backbone copy");
+        assert_eq!(free.len(), 3, "other functions share it");
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        // Tiny GPU: backbones don't fit; plan must not overcommit.
+        let (d, _, r) = setup(6);
+        let mut c = Cluster::new(1, 1, 1);
+        // Shrink the GPU to 10 GB (7B backbone is 13.5).
+        c.nodes[0].gpus[0] =
+            crate::cluster::Gpu::with_capacity(GpuId { node: 0, index: 0 }, 10.0);
+        let plan = PreloadScheduler::default().plan(&d, &c, &r);
+        let gpu_bytes: f64 = plan
+            .decisions
+            .iter()
+            .filter(|x| matches!(x.placement, Placement::Gpu(_)))
+            .map(|x| x.size_gb)
+            .sum();
+        assert!(gpu_bytes <= c.gpu(c.gpu_ids()[0]).free_gb() + 1e-9);
+        assert!(!plan.has(0, ArtifactKind::Backbone) || gpu_bytes < 10.0);
+    }
+
+    #[test]
+    fn apply_writes_ledgers() {
+        let (d, mut c, mut r) = setup(2);
+        let sched = PreloadScheduler::default();
+        let plan = sched.plan(&d, &c, &r);
+        sched.apply(&plan, &d, &mut c, &mut r);
+        assert_eq!(r.hosts("llama2-7b").len(), 1);
+        // Every applied artifact is findable.
+        for dec in &plan.decisions {
+            match (dec.kind, dec.placement) {
+                (ArtifactKind::Backbone, Placement::Gpu(g)) => {
+                    assert!(c.gpu(g).has_shared_backbone("llama2-7b"))
+                }
+                (k, Placement::Gpu(g)) => assert!(c.gpu(g).has_artifact(dec.function, k)),
+                (k, Placement::Container(id)) => {
+                    assert!(c.container(id).has(dec.function, k))
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn higher_rate_functions_preferred() {
+        // One GPU that fits one backbone; the hot function should win it.
+        let demands = vec![demand(0, 0.05), demand(1, 5.0)];
+        let mut c = Cluster::new(1, 1, 2);
+        c.nodes[0].gpus[0] =
+            crate::cluster::Gpu::with_capacity(GpuId { node: 0, index: 0 }, 18.0);
+        let r = BackboneRegistry::new();
+        let plan = PreloadScheduler::default().plan(&demands, &c, &r);
+        // Both share one backbone (same model) — but kernels/adapters are
+        // per-function; fn 1 must be at least as preloaded as fn 0.
+        let v1: f64 = plan
+            .decisions
+            .iter()
+            .filter(|d| d.function == 1)
+            .map(|d| d.value)
+            .sum();
+        let v0: f64 = plan
+            .decisions
+            .iter()
+            .filter(|d| d.function == 0)
+            .map(|d| d.value)
+            .sum();
+        assert!(v1 >= v0, "hot function value {v1} < cold {v0}");
+    }
+
+    #[test]
+    fn greedy_close_to_exact_on_small_instances() {
+        // Small instance the oracle can enumerate: 1 function, 1 GPU,
+        // 1 container.
+        let demands = vec![demand(0, 1.0)];
+        let c = Cluster::new(1, 1, 1);
+        let r = BackboneRegistry::new();
+        let sched = PreloadScheduler::default();
+        let g = sched.plan(&demands, &c, &r).total_value();
+        let opt = exact_plan(&sched, &demands, &c, &r);
+        assert!(g >= 0.75 * opt, "greedy {g} vs exact {opt}");
+    }
+
+    #[test]
+    fn scheduling_latency_under_1ms() {
+        // §6.9: "The Pre-Loading Scheduler ... 1 ms additional latency".
+        let (d, c, r) = setup(8);
+        let sched = PreloadScheduler::default();
+        let t0 = std::time::Instant::now();
+        let _ = sched.plan(&d, &c, &r);
+        let el = t0.elapsed();
+        assert!(el.as_millis() < 50, "plan took {el:?}"); // debug-build slack
+    }
+}

@@ -1,0 +1,155 @@
+//! Request router / instance selection (workflow step 4, §3.3): pick the
+//! function instance / GPU with the best pre-loaded state for an arriving
+//! batch, locality-aware (§3.1 challenge 3: "function instances should
+//! reside on GPUs that have already loaded corresponding backbone LLMs").
+
+use crate::artifact::{ArtifactKind, FunctionSpec};
+use crate::cluster::{Cluster, GpuId};
+use crate::sharing::BackboneRegistry;
+
+/// What the chosen GPU already has for this function — determines which
+/// cold-start phases remain (the router's score and the simulator's
+/// latency both derive from this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Readiness {
+    pub backbone_on_gpu: bool,
+    pub adapter_on_gpu: bool,
+    pub kernel_on_gpu: bool,
+    pub cuda_context: bool,
+}
+
+impl Readiness {
+    pub fn fully_warm(&self) -> bool {
+        self.backbone_on_gpu && self.adapter_on_gpu && self.kernel_on_gpu && self.cuda_context
+    }
+}
+
+/// Router decision for one batch.
+#[derive(Debug, Clone, Copy)]
+pub struct Route {
+    pub gpu: GpuId,
+    pub readiness: Readiness,
+    /// Estimated KV headroom (in requests) at the chosen GPU.
+    pub kv_headroom: usize,
+}
+
+pub struct Router;
+
+impl Router {
+    pub fn readiness(cluster: &Cluster, spec: &FunctionSpec, gpu: GpuId) -> Readiness {
+        let g = cluster.gpu(gpu);
+        Readiness {
+            backbone_on_gpu: g.has_shared_backbone(spec.model.name)
+                || g.has_artifact(spec.id, ArtifactKind::Backbone),
+            adapter_on_gpu: g.has_artifact(spec.id, ArtifactKind::Adapter),
+            kernel_on_gpu: g.has_artifact(spec.id, ArtifactKind::CudaKernel),
+            cuda_context: g.has_cuda_context(spec.id),
+        }
+    }
+
+    /// Score a GPU for this function: prefer warm artifacts (locality),
+    /// then KV headroom. Higher is better.
+    fn score(cluster: &Cluster, spec: &FunctionSpec, gpu: GpuId) -> f64 {
+        let r = Self::readiness(cluster, spec, gpu);
+        let g = cluster.gpu(gpu);
+        // Weights mirror relative load costs: backbone ≫ kernel > adapter.
+        let warm = (r.backbone_on_gpu as u32 as f64) * spec.model.weights_gb
+            + (r.kernel_on_gpu as u32 as f64) * 3.0
+            + (r.adapter_on_gpu as u32 as f64) * 1.0
+            + (r.cuda_context as u32 as f64) * 0.5;
+        warm + g.free_gb() / 1000.0 // free memory as tie-break
+    }
+
+    /// Pick the best GPU for a batch of `batch` requests of `spec`.
+    /// `registry` narrows the search to backbone hosts when any exist.
+    pub fn route(
+        cluster: &Cluster,
+        registry: &BackboneRegistry,
+        spec: &FunctionSpec,
+        batch: usize,
+    ) -> Option<Route> {
+        let hosts = registry.hosts(spec.model.name);
+        let candidates: Vec<GpuId> = if hosts.is_empty() {
+            cluster.gpu_ids()
+        } else {
+            hosts.to_vec()
+        };
+        let kv_need = spec.model.kv_per_request_gb * batch as f64;
+        let best = candidates
+            .into_iter()
+            .max_by(|&a, &b| {
+                let sa = Self::score(cluster, spec, a)
+                    // Penalise GPUs that cannot even fit the KV after full
+                    // offload (offloader handles partial shortfalls).
+                    - if cluster.gpu(a).total_gb < kv_need { 1e6 } else { 0.0 };
+                let sb = Self::score(cluster, spec, b)
+                    - if cluster.gpu(b).total_gb < kv_need { 1e6 } else { 0.0 };
+                sa.partial_cmp(&sb).unwrap()
+            })?;
+        let readiness = Self::readiness(cluster, spec, best);
+        let headroom = (cluster.gpu(best).free_gb()
+            / spec.model.kv_per_request_gb.max(1e-9))
+            .floor()
+            .max(0.0) as usize;
+        Some(Route { gpu: best, readiness, kv_headroom: headroom })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::ModelProfile;
+
+    fn spec(id: usize) -> FunctionSpec {
+        FunctionSpec::new(id, ModelProfile::llama2_7b(), id)
+    }
+
+    #[test]
+    fn prefers_backbone_host() {
+        let mut c = Cluster::new(1, 4, 2);
+        let mut r = BackboneRegistry::new();
+        let target = c.gpu_ids()[2];
+        r.load(&mut c, "llama2-7b", 13.5, target).unwrap();
+        let route = Router::route(&c, &r, &spec(0), 4).unwrap();
+        assert_eq!(route.gpu, target);
+        assert!(route.readiness.backbone_on_gpu);
+    }
+
+    #[test]
+    fn prefers_fully_warm_over_backbone_only() {
+        let mut c = Cluster::new(1, 2, 2);
+        let mut r = BackboneRegistry::new();
+        let [g0, g1] = [c.gpu_ids()[0], c.gpu_ids()[1]];
+        r.load(&mut c, "llama2-7b", 13.5, g0).unwrap();
+        r.load(&mut c, "llama2-7b", 13.5, g1).unwrap();
+        c.gpu_mut(g1).place_artifact(0, ArtifactKind::Adapter, 0.16).unwrap();
+        c.gpu_mut(g1).place_artifact(0, ArtifactKind::CudaKernel, 0.5).unwrap();
+        c.gpu_mut(g1).create_cuda_context(0).unwrap();
+        let route = Router::route(&c, &r, &spec(0), 4).unwrap();
+        assert_eq!(route.gpu, g1);
+        assert!(route.readiness.fully_warm());
+    }
+
+    #[test]
+    fn cold_cluster_routes_somewhere() {
+        let c = Cluster::new(2, 2, 2);
+        let r = BackboneRegistry::new();
+        let route = Router::route(&c, &r, &spec(0), 1).unwrap();
+        assert!(!route.readiness.backbone_on_gpu);
+        assert!(route.kv_headroom > 0);
+    }
+
+    #[test]
+    fn headroom_reflects_free_memory() {
+        let mut c = Cluster::new(1, 1, 1);
+        let r = BackboneRegistry::new();
+        let g = c.gpu_ids()[0];
+        let free_before = c.gpu(g).free_gb();
+        let route = Router::route(&c, &r, &spec(0), 1).unwrap();
+        let expect = (free_before / 0.45).floor() as usize;
+        assert_eq!(route.kv_headroom, expect);
+        c.gpu_mut(g).reserve_kv(1, 20.0).unwrap();
+        let route2 = Router::route(&c, &r, &spec(0), 1).unwrap();
+        assert!(route2.kv_headroom < route.kv_headroom);
+    }
+}

@@ -1,0 +1,150 @@
+//! Monetary cost model (paper §6.1, Alibaba Cloud Function Compute GPU
+//! pricing) and the paper's cost-effectiveness metric
+//! `1 / (E2E_latency × Monetary_Cost)` (footnote 3 / §6.4).
+
+use crate::artifact::params;
+
+/// Accumulates billable resource-time for one simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct CostTracker {
+    /// Active GPU memory × time (GB·s) — execution + artifact loading.
+    pub gpu_active_gb_s: f64,
+    /// Idle (keep-alive) GPU memory × time (GB·s).
+    pub gpu_idle_gb_s: f64,
+    /// vCPU core seconds.
+    pub cpu_core_s: f64,
+    /// Host memory GB seconds.
+    pub mem_gb_s: f64,
+    /// Serverful: dedicated whole-GPU seconds (billed regardless of use).
+    pub serverful_gpu_s: f64,
+}
+
+impl CostTracker {
+    pub fn add_active(&mut self, gpu_gb: f64, dur_s: f64, cpu_cores: f64, mem_gb: f64) {
+        debug_assert!(dur_s >= 0.0);
+        self.gpu_active_gb_s += gpu_gb * dur_s;
+        self.cpu_core_s += cpu_cores * dur_s;
+        self.mem_gb_s += mem_gb * dur_s;
+    }
+
+    pub fn add_idle(&mut self, gpu_gb: f64, dur_s: f64, mem_gb: f64) {
+        debug_assert!(dur_s >= 0.0);
+        self.gpu_idle_gb_s += gpu_gb * dur_s;
+        self.mem_gb_s += mem_gb * dur_s;
+    }
+
+    pub fn add_serverful(&mut self, n_gpus: f64, dur_s: f64) {
+        self.serverful_gpu_s += n_gpus * dur_s;
+    }
+
+    /// Total monetary cost in dollars.
+    pub fn total_usd(&self) -> f64 {
+        self.gpu_active_gb_s * params::PRICE_GPU_GB_S
+            + self.gpu_idle_gb_s * params::PRICE_GPU_IDLE_GB_S
+            + self.cpu_core_s * params::PRICE_CPU_CORE_S
+            + self.mem_gb_s * params::PRICE_MEM_GB_S
+            + self.serverful_gpu_s * params::PRICE_SERVERFUL_GPU_S
+    }
+
+    /// Share of the bill attributable to GPU resources — the paper states
+    /// ~90% for LLM functions; exposed so tests can sanity-check the model.
+    pub fn gpu_share(&self) -> f64 {
+        let gpu = self.gpu_active_gb_s * params::PRICE_GPU_GB_S
+            + self.gpu_idle_gb_s * params::PRICE_GPU_IDLE_GB_S
+            + self.serverful_gpu_s * params::PRICE_SERVERFUL_GPU_S;
+        let t = self.total_usd();
+        if t == 0.0 {
+            0.0
+        } else {
+            gpu / t
+        }
+    }
+
+    pub fn merge(&mut self, other: &CostTracker) {
+        self.gpu_active_gb_s += other.gpu_active_gb_s;
+        self.gpu_idle_gb_s += other.gpu_idle_gb_s;
+        self.cpu_core_s += other.cpu_core_s;
+        self.mem_gb_s += other.mem_gb_s;
+        self.serverful_gpu_s += other.serverful_gpu_s;
+    }
+}
+
+/// Paper footnote 3: cost-effectiveness = 1/(E2E_latency × Monetary_Cost).
+/// Reported *relative to a baseline* (vLLM = 1) in Figs. 2 & 9 / Table 1.
+pub fn cost_effectiveness(mean_e2e_s: f64, cost_usd: f64) -> f64 {
+    if mean_e2e_s <= 0.0 || cost_usd <= 0.0 {
+        return 0.0;
+    }
+    1.0 / (mean_e2e_s * cost_usd)
+}
+
+pub fn relative_cost_effectiveness(
+    mean_e2e_s: f64,
+    cost_usd: f64,
+    base_e2e_s: f64,
+    base_cost_usd: f64,
+) -> f64 {
+    cost_effectiveness(mean_e2e_s, cost_usd)
+        / cost_effectiveness(base_e2e_s, base_cost_usd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invocation_cost_magnitude() {
+        // One 7B invocation: ~20 GB for ~3 s ⇒ around a tenth of a cent.
+        let mut c = CostTracker::default();
+        c.add_active(20.0, 3.0, 4.0, 16.0);
+        let usd = c.total_usd();
+        assert!(usd > 2e-4 && usd < 3e-3, "usd={usd}");
+    }
+
+    #[test]
+    fn gpu_dominates_invocation_cost() {
+        // §2.2: "GPU costs constitute approximately 90% of an invocation's
+        // total monetary expense".
+        let mut c = CostTracker::default();
+        c.add_active(20.0, 3.0, 4.0, 16.0);
+        assert!(c.gpu_share() > 0.75, "share={}", c.gpu_share());
+    }
+
+    #[test]
+    fn serverful_hour_is_dollars() {
+        let mut c = CostTracker::default();
+        c.add_serverful(1.0, 3600.0);
+        let usd = c.total_usd();
+        assert!((usd - 1.86).abs() < 0.1, "usd={usd}");
+    }
+
+    #[test]
+    fn cost_effectiveness_ordering() {
+        // Faster and cheaper ⇒ strictly better.
+        let better = cost_effectiveness(2.0, 5.0);
+        let worse = cost_effectiveness(4.0, 20.0);
+        assert!(better > worse);
+        assert_eq!(
+            relative_cost_effectiveness(2.0, 5.0, 2.0, 5.0),
+            1.0
+        );
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = CostTracker::default();
+        a.add_active(10.0, 1.0, 1.0, 1.0);
+        let mut b = CostTracker::default();
+        b.add_idle(5.0, 2.0, 1.0);
+        let ta = a.total_usd();
+        let tb = b.total_usd();
+        a.merge(&b);
+        assert!((a.total_usd() - ta - tb).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_zero() {
+        assert_eq!(cost_effectiveness(0.0, 1.0), 0.0);
+        assert_eq!(cost_effectiveness(1.0, 0.0), 0.0);
+    }
+}

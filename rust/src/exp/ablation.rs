@@ -1,0 +1,136 @@
+//! §6.6 ablation study: Fig. 10b (cost-effectiveness of each variant) and
+//! Table 3 (TTFT / E2E / monetary cost, including the NAB #1–#3 fixed
+//! batching strategies).
+
+use crate::cluster::Cluster;
+use crate::cost::cost_effectiveness;
+use crate::sim::workloads::paper_workload;
+use crate::sim::{Engine, SystemConfig};
+use crate::trace::Pattern;
+use crate::util::table::{f, ms, Table};
+
+/// The ablation runs on a TIGHT cluster (4 GPUs for 8 functions): the
+/// paper's §6.6 setting where pre-loaded artifacts and KV demand actually
+/// contend, so Dynamic Offloading and batching policy have bite.
+fn tight_run(
+    cfg: SystemConfig,
+    w: crate::sim::Workload,
+) -> (crate::metrics::RunMetrics, crate::cost::CostTracker) {
+    let (m, c, _) = Engine::new(cfg, Cluster::new(1, 4, 8), w, 1).run();
+    (m, c)
+}
+
+pub fn variants() -> Vec<SystemConfig> {
+    vec![
+        SystemConfig::serverless_lora(),
+        SystemConfig::nbs(),
+        SystemConfig::npl(),
+        SystemConfig::ndo(),
+        SystemConfig::nab(1),
+        SystemConfig::nab(2),
+        SystemConfig::nab(3),
+    ]
+}
+
+pub fn fig10b(quick: bool) -> String {
+    let w = paper_workload(Pattern::Normal, super::horizon(quick), 11);
+    let mut t = Table::new(
+        "Fig 10b — Ablation: cost-effectiveness (full ServerlessLoRA = 1)",
+        &["variant", "rel-cost-eff"],
+    );
+    let (fm, fc) = tight_run(SystemConfig::serverless_lora(), w.clone());
+    let base = cost_effectiveness(fm.e2e().mean, fc.total_usd());
+    for cfg in variants() {
+        let name = cfg.name;
+        let (m, c) = tight_run(cfg, w.clone());
+        let ce = cost_effectiveness(m.e2e().mean, c.total_usd());
+        t.row(vec![name.into(), f(ce / base)]);
+    }
+    t.render()
+}
+
+pub fn tab3(quick: bool) -> String {
+    let w = paper_workload(Pattern::Normal, super::horizon(quick), 11);
+    let mut t = Table::new(
+        "Table 3 — Ablation study (Normal workload, 8 fns)",
+        &["variant", "TTFT (ms)", "E2E (ms)", "cost ($)"],
+    );
+    for cfg in variants() {
+        let name = cfg.name;
+        let (m, c) = tight_run(cfg, w.clone());
+        t.row(vec![
+            name.into(),
+            ms(m.ttft().mean),
+            ms(m.e2e().mean),
+            f(c.total_usd()),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn measure(cfg: SystemConfig) -> (f64, f64, f64) {
+        let w = paper_workload(Pattern::Normal, 1800.0, 3);
+        let (m, c) = tight_run(cfg, w);
+        (m.ttft().mean, m.e2e().mean, c.total_usd())
+    }
+
+    /// Table 3 ordering: the full system has the lowest TTFT of the
+    /// structural ablations (NBS / NPL — sharing and pre-loading are the
+    /// big levers).
+    #[test]
+    fn full_system_beats_structural_ablations_on_ttft() {
+        let (full_ttft, _, _) = measure(SystemConfig::serverless_lora());
+        for cfg in [SystemConfig::nbs(), SystemConfig::npl()] {
+            let name = cfg.name;
+            let (ttft, _, _) = measure(cfg);
+            assert!(
+                full_ttft <= ttft * 1.05,
+                "{name}: full {full_ttft} vs variant {ttft}"
+            );
+        }
+    }
+
+    /// §4.2 / §6.6: no-batching (NAB#1) loses where batching matters —
+    /// bursty traffic — by churning new instances per concurrent request
+    /// (worse TTFT) and paying contention (worse E2E).
+    #[test]
+    fn nab1_loses_under_bursts() {
+        let w = paper_workload(Pattern::Bursty, 1800.0, 3);
+        let (full, _, _) =
+            super::super::run_system(SystemConfig::serverless_lora(), w.clone(), 1);
+        let (nab1, _, _) = super::super::run_system(SystemConfig::nab(1), w, 1);
+        assert!(
+            full.ttft().mean < nab1.ttft().mean,
+            "full {} vs NAB#1 {}",
+            full.ttft().mean,
+            nab1.ttft().mean
+        );
+        assert!(
+            full.e2e().mean < nab1.e2e().mean,
+            "E2E full {} vs NAB#1 {}",
+            full.e2e().mean,
+            nab1.e2e().mean
+        );
+    }
+
+    #[test]
+    fn nbs_is_the_most_expensive_variant() {
+        let (_, _, full) = measure(SystemConfig::serverless_lora());
+        let (_, _, nbs) = measure(SystemConfig::nbs());
+        let (_, _, npl) = measure(SystemConfig::npl());
+        assert!(nbs > full, "NBS ${nbs} should exceed full ${full}");
+        assert!(nbs > npl * 0.9, "NBS ${nbs} should be among the worst (NPL ${npl})");
+    }
+
+    /// NPL loses to the full system on TTFT (pre-loading matters).
+    #[test]
+    fn npl_slower_than_full() {
+        let (full, _, _) = measure(SystemConfig::serverless_lora());
+        let (npl, _, _) = measure(SystemConfig::npl());
+        assert!(npl >= full, "npl {npl} vs full {full}");
+    }
+}

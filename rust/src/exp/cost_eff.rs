@@ -1,0 +1,257 @@
+//! Fig. 2 (motivation: serverless vs serverful cost-effectiveness),
+//! Fig. 9 (cost-effectiveness vs all four baselines) and Table 1
+//! (E2E latency / cost / relative cost-effectiveness, 7B & 13B series).
+
+use crate::artifact::{FunctionSpec, ModelProfile};
+use crate::cost::relative_cost_effectiveness;
+use crate::sim::workloads::{paper_workload, series_13b, series_7b, RATE_TIERS};
+use crate::sim::{SystemConfig, Workload};
+use crate::trace::{merge, Pattern, TraceSpec};
+use crate::util::table::{f, ms, Table};
+
+fn all_systems(pattern: Pattern) -> Vec<SystemConfig> {
+    vec![
+        SystemConfig::vllm(),
+        SystemConfig::dlora(),
+        SystemConfig::instainfer(pattern),
+        SystemConfig::serverless_llm(),
+        SystemConfig::serverless_lora(),
+    ]
+}
+
+/// Fig. 2a workload: ONE Llama2-7B function (general LLM serving) —
+/// serverless wins on pay-per-use. Fig. 2b: the SAME total demand split
+/// across four 7B LoRA functions — naive serverless loses its edge to
+/// backbone redundancy (4 idle backbones, 4× the cold starts).
+fn small_workload(n_fns: usize, duration_s: f64) -> Workload {
+    let functions: Vec<FunctionSpec> = (0..n_fns)
+        .map(|i| FunctionSpec::new(i, ModelProfile::llama2_7b(), i))
+        .collect();
+    let total = RATE_TIERS[0];
+    let rates: Vec<f64> = (0..n_fns).map(|_| total / n_fns as f64).collect();
+    let traces = functions
+        .iter()
+        .map(|fx| {
+            TraceSpec::new(fx.id, Pattern::Normal, rates[fx.id], 5 + fx.id as u64)
+                .generate(duration_s)
+        })
+        .collect();
+    Workload { functions, requests: merge(traces), duration_s, rates }
+}
+
+pub fn fig2(quick: bool) -> String {
+    let dur = super::horizon(quick);
+    let mut out = String::new();
+    for (n_fns, label) in [(1, "a: one Llama2-7B LLM"), (4, "b: four Llama2-7B LoRA fns")] {
+        let w = small_workload(n_fns, dur);
+        let (vm, vc, _) = super::run_system(SystemConfig::vllm(), w.clone(), 1);
+        let (base_e2e, base_cost) = (vm.e2e().mean, vc.total_usd());
+        let mut t = Table::new(
+            &format!("Fig 2{label} — cost-effectiveness (vLLM = 1)"),
+            &["system", "E2E(ms)", "cost($)", "rel-cost-eff"],
+        );
+        for cfg in [
+            SystemConfig::vllm(),
+            SystemConfig::dlora(),
+            SystemConfig::serverless_llm(),
+            SystemConfig::instainfer(Pattern::Normal),
+            SystemConfig::serverless_lora(),
+        ] {
+            let name = cfg.name;
+            let (m, c, _) = super::run_system(cfg, w.clone(), 1);
+            t.row(vec![
+                name.into(),
+                ms(m.e2e().mean),
+                f(c.total_usd()),
+                f(relative_cost_effectiveness(
+                    m.e2e().mean,
+                    c.total_usd(),
+                    base_e2e,
+                    base_cost,
+                )),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+pub fn fig9(quick: bool) -> String {
+    let mut t = Table::new(
+        "Fig 9 — Cost-effectiveness vs baselines (vLLM = 1), 8 fns / 16 GPUs",
+        &["pattern", "system", "E2E(ms)", "cost($)", "rel-cost-eff"],
+    );
+    for pattern in Pattern::ALL {
+        let w = paper_workload(pattern, super::horizon(quick), 11);
+        let (vm, vc, _) = super::run_system(SystemConfig::vllm(), w.clone(), 1);
+        let (base_e2e, base_cost) = (vm.e2e().mean, vc.total_usd());
+        for cfg in all_systems(pattern) {
+            let name = cfg.name;
+            let (m, c, _) = super::run_system(cfg, w.clone(), 1);
+            t.row(vec![
+                pattern.name().into(),
+                name.into(),
+                ms(m.e2e().mean),
+                f(c.total_usd()),
+                f(relative_cost_effectiveness(
+                    m.e2e().mean,
+                    c.total_usd(),
+                    base_e2e,
+                    base_cost,
+                )),
+            ]);
+        }
+    }
+    t.render()
+}
+
+pub fn tab1(quick: bool) -> String {
+    // The paper's Table 1 splits 7B and 13B series; cost is attributed by
+    // the series' share of GPU-time (approximated by its E2E×requests).
+    let mut t = Table::new(
+        "Table 1 — E2E (ms), cost ($) and relative cost-effectiveness, 7B (13B)",
+        &["pattern", "system", "E2E 7B(13B)", "cost 7B(13B)", "rel-CE 7B(13B)"],
+    );
+    for pattern in Pattern::ALL {
+        let w = paper_workload(pattern, super::horizon(quick), 11);
+        // vLLM baseline per series.
+        let (vm, vc, _) = super::run_system(SystemConfig::vllm(), w.clone(), 1);
+        let (v7, v13) = (vm.subset(&series_7b()), vm.subset(&series_13b()));
+        let (vc7, vc13) = split_cost(&vm, vc.total_usd());
+        for cfg in all_systems(pattern) {
+            let name = cfg.name;
+            let (m, c, _) = super::run_system(cfg, w.clone(), 1);
+            let (m7, m13) = (m.subset(&series_7b()), m.subset(&series_13b()));
+            let (c7, c13) = split_cost(&m, c.total_usd());
+            t.row(vec![
+                pattern.name().into(),
+                name.into(),
+                format!("{} ({})", ms(m7.e2e().mean), ms(m13.e2e().mean)),
+                format!("{} ({})", f(c7), f(c13)),
+                format!(
+                    "{} ({})",
+                    f(relative_cost_effectiveness(
+                        m7.e2e().mean, c7, v7.e2e().mean, vc7
+                    )),
+                    f(relative_cost_effectiveness(
+                        m13.e2e().mean, c13, v13.e2e().mean, vc13
+                    ))
+                ),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Attribute total run cost to the 7B/13B series by their share of
+/// GPU-seconds (busy-time × memory-weight approximation).
+fn split_cost(m: &crate::metrics::RunMetrics, total: f64) -> (f64, f64) {
+    let busy = |fns: &[usize], weight: f64| -> f64 {
+        m.subset(fns)
+            .outcomes
+            .iter()
+            .map(|o| o.e2e_s * weight)
+            .sum::<f64>()
+    };
+    let b7 = busy(&series_7b(), 14.0); // ~GB-weight of a 7B instance
+    let b13 = busy(&series_13b(), 27.0);
+    let tot = (b7 + b13).max(1e-9);
+    (total * b7 / tot, total * b13 / tot)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 2a: for ONE general LLM, serverless beats serverful
+    /// cost-effectiveness (pay-per-use vs idle GPUs).
+    #[test]
+    fn fig2a_serverless_wins_single_llm() {
+        let w = small_workload(1, 3600.0);
+        let (vm, vc, _) = super::super::run_system(SystemConfig::vllm(), w.clone(), 1);
+        let (sm, sc, _) =
+            super::super::run_system(SystemConfig::serverless_llm(), w, 1);
+        let rel = relative_cost_effectiveness(
+            sm.e2e().mean,
+            sc.total_usd(),
+            vm.e2e().mean,
+            vc.total_usd(),
+        );
+        assert!(rel > 1.0, "serverless rel-CE {rel} <= 1");
+    }
+
+    /// Fig. 2b: with FOUR LoRA functions, the naive serverless baseline's
+    /// advantage erodes (backbone redundancy: 4 idle backbones + per-fn
+    /// cold starts), while ServerlessLoRA's sharing keeps its edge — the
+    /// gap between them is what the paper's Fig. 2b motivates.
+    ///
+    /// NOTE: the paper's absolute "serverless < vLLM" in 2b depends on an
+    /// unstated resource normalisation for the serverful baseline; we
+    /// assert the normalisation-free ordering instead (see EXPERIMENTS.md).
+    #[test]
+    fn fig2b_sharing_beats_naive_serverless_on_multi_lora() {
+        let w4 = small_workload(4, 3600.0);
+        let (vm, vc, _) = super::super::run_system(SystemConfig::vllm(), w4.clone(), 1);
+        let rel = |cfg: SystemConfig| {
+            let (m, c, _) = super::super::run_system(cfg, w4.clone(), 1);
+            relative_cost_effectiveness(
+                m.e2e().mean,
+                c.total_usd(),
+                vm.e2e().mean,
+                vc.total_usd(),
+            )
+        };
+        let naive = rel(SystemConfig::serverless_llm());
+        let lora = rel(SystemConfig::serverless_lora());
+        assert!(
+            lora > 1.5 * naive,
+            "sharing should decisively beat naive serverless: {lora} vs {naive}"
+        );
+    }
+
+    /// Fig. 9 / Table 1 headline: ServerlessLoRA has the best relative
+    /// cost-effectiveness of all five systems.
+    #[test]
+    fn serverless_lora_best_cost_effectiveness() {
+        let pattern = Pattern::Normal;
+        let w = paper_workload(pattern, 1800.0, 3);
+        let (vm, vc, _) = super::super::run_system(SystemConfig::vllm(), w.clone(), 1);
+        let rel = |cfg: SystemConfig| {
+            let (m, c, _) = super::super::run_system(cfg, w.clone(), 1);
+            relative_cost_effectiveness(
+                m.e2e().mean,
+                c.total_usd(),
+                vm.e2e().mean,
+                vc.total_usd(),
+            )
+        };
+        let lora = rel(SystemConfig::serverless_lora());
+        for cfg in [
+            SystemConfig::dlora(),
+            SystemConfig::serverless_llm(),
+            SystemConfig::instainfer(pattern),
+        ] {
+            let name = cfg.name;
+            let other = rel(cfg);
+            assert!(lora > other, "{name}: {other} >= lora {lora}");
+        }
+        assert!(lora > 1.0, "lora must beat vLLM: {lora}");
+    }
+
+    /// The paper's cost claim: ServerlessLoRA cuts monetary cost several
+    /// times vs serverless baselines.
+    #[test]
+    fn serverless_lora_cheapest_serverless() {
+        let w = paper_workload(Pattern::Normal, 1800.0, 3);
+        let (_, lc, _) =
+            super::super::run_system(SystemConfig::serverless_lora(), w.clone(), 1);
+        let (_, sc, _) =
+            super::super::run_system(SystemConfig::serverless_llm(), w, 1);
+        assert!(
+            lc.total_usd() < sc.total_usd(),
+            "lora ${} vs sllm ${}",
+            lc.total_usd(),
+            sc.total_usd()
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Fig. 6 (average TTFT), Fig. 7 (average TPOT), Fig. 12 (TTFT CDF +
+//! SLO violation) across Predictable / Normal / Bursty workloads for the
+//! three serverless systems.
+
+use crate::sim::workloads::{paper_workload, series_13b, series_7b};
+use crate::sim::SystemConfig;
+use crate::trace::Pattern;
+use crate::util::table::{f, ms, Table};
+
+fn serverless_systems(pattern: Pattern) -> Vec<SystemConfig> {
+    vec![
+        SystemConfig::serverless_lora(),
+        SystemConfig::serverless_llm(),
+        SystemConfig::instainfer(pattern),
+    ]
+}
+
+pub fn fig6(quick: bool) -> String {
+    let mut t = Table::new(
+        "Fig 6 — Average TTFT (ms), 8 LoRA functions on 16 GPUs",
+        &["pattern", "system", "TTFT-7B", "TTFT-13B", "p99-7B", "p99-13B"],
+    );
+    for pattern in Pattern::ALL {
+        let w = paper_workload(pattern, super::horizon(quick), 11);
+        for cfg in serverless_systems(pattern) {
+            let name = cfg.name;
+            let (m, _, _) = super::run_system(cfg, w.clone(), 1);
+            let m7 = m.subset(&series_7b());
+            let m13 = m.subset(&series_13b());
+            t.row(vec![
+                pattern.name().into(),
+                name.into(),
+                ms(m7.ttft().mean),
+                ms(m13.ttft().mean),
+                ms(m7.ttft().p99),
+                ms(m13.ttft().p99),
+            ]);
+        }
+    }
+    t.render()
+}
+
+pub fn fig7(quick: bool) -> String {
+    let mut t = Table::new(
+        "Fig 7 — Average TPOT (ms)",
+        &["pattern", "system", "TPOT-7B", "TPOT-13B"],
+    );
+    for pattern in Pattern::ALL {
+        let w = paper_workload(pattern, super::horizon(quick), 11);
+        for cfg in serverless_systems(pattern) {
+            let name = cfg.name;
+            let (m, _, _) = super::run_system(cfg, w.clone(), 1);
+            t.row(vec![
+                pattern.name().into(),
+                name.into(),
+                ms(m.subset(&series_7b()).tpot().mean),
+                ms(m.subset(&series_13b()).tpot().mean),
+            ]);
+        }
+    }
+    t.render()
+}
+
+pub fn fig12(quick: bool) -> String {
+    // CDF thresholds in seconds; SLOs: 2.5 s (7B), 4.0 s (13B) — §6.8.
+    let thresholds = [0.25, 0.5, 1.0, 2.0, 2.5, 4.0, 8.0, 16.0];
+    let mut out = String::new();
+    for (series, label, slo) in
+        [(series_7b(), "7B", 2.5), (series_13b(), "13B", 4.0)]
+    {
+        let mut t = Table::new(
+            &format!("Fig 12 — TTFT CDF, Llama2-{label} series (SLO {slo} s)"),
+            &[
+                "pattern", "system", "<=0.25s", "<=0.5s", "<=1s", "<=2s",
+                "<=2.5s", "<=4s", "<=8s", "<=16s", "SLO-viol%",
+            ],
+        );
+        for pattern in Pattern::ALL {
+            let w = paper_workload(pattern, super::horizon(quick), 11);
+            for cfg in serverless_systems(pattern) {
+                let name = cfg.name;
+                let (m, _, _) = super::run_system(cfg, w.clone(), 1);
+                let cdf = m.ttft_cdf(&series, &thresholds);
+                let viol = m
+                    .subset(&series)
+                    .slo_violation_rate(|_| slo);
+                let mut row = vec![pattern.name().to_string(), name.into()];
+                row.extend(cdf.iter().map(|c| format!("{:.2}", c)));
+                row.push(f(viol * 100.0));
+                t.row(row);
+            }
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workloads::paper_workload;
+
+    /// The headline claim behind Fig. 6: ServerlessLoRA's TTFT beats both
+    /// serverless baselines on every pattern.
+    #[test]
+    fn serverless_lora_wins_ttft_on_all_patterns() {
+        for pattern in Pattern::ALL {
+            let w = paper_workload(pattern, 1800.0, 3);
+            let (lora, _, _) =
+                super::super::run_system(SystemConfig::serverless_lora(), w.clone(), 1);
+            let (sllm, _, _) =
+                super::super::run_system(SystemConfig::serverless_llm(), w.clone(), 1);
+            let (insta, _, _) =
+                super::super::run_system(SystemConfig::instainfer(pattern), w, 1);
+            assert!(
+                lora.ttft().mean < sllm.ttft().mean,
+                "{}: lora {} vs sllm {}",
+                pattern.name(),
+                lora.ttft().mean,
+                sllm.ttft().mean
+            );
+            assert!(
+                lora.ttft().mean < insta.ttft().mean,
+                "{}: lora {} vs insta {}",
+                pattern.name(),
+                lora.ttft().mean,
+                insta.ttft().mean
+            );
+        }
+    }
+
+    /// §6.2: ServerlessLoRA's TPOT is moderately higher (larger batches)
+    /// but within ~25% of the fixed-batch baselines.
+    #[test]
+    fn tpot_penalty_is_moderate() {
+        let w = paper_workload(Pattern::Bursty, 1800.0, 3);
+        let (lora, _, _) =
+            super::super::run_system(SystemConfig::serverless_lora(), w.clone(), 1);
+        let (sllm, _, _) =
+            super::super::run_system(SystemConfig::serverless_llm(), w, 1);
+        let ratio = lora.tpot().mean / sllm.tpot().mean;
+        assert!(ratio < 1.4, "TPOT ratio {ratio}");
+    }
+
+    /// §6.8: ServerlessLoRA has the lowest SLO violation rate.
+    #[test]
+    fn slo_violations_lowest_for_serverless_lora() {
+        let w = paper_workload(Pattern::Bursty, 1800.0, 3);
+        let slo = |f: usize| if f < 4 { 2.5 } else { 4.0 };
+        let (lora, _, _) =
+            super::super::run_system(SystemConfig::serverless_lora(), w.clone(), 1);
+        let (sllm, _, _) =
+            super::super::run_system(SystemConfig::serverless_llm(), w, 1);
+        assert!(lora.slo_violation_rate(slo) <= sllm.slo_violation_rate(slo));
+    }
+}

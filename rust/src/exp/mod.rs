@@ -1,0 +1,98 @@
+//! Experiment registry: one entry per table and figure in the paper's
+//! evaluation (§6). Each function regenerates the corresponding rows /
+//! series on the simulated testbed and returns them as rendered tables.
+//!
+//! Invoked by `cargo bench` (rust/benches/paper_eval.rs) and by the CLI
+//! (`serverless-lora simulate --exp <id>`). See DESIGN.md §4 for the
+//! experiment ↔ module index and EXPERIMENTS.md for recorded results.
+
+pub mod ablation;
+pub mod breakdown;
+pub mod cost_eff;
+pub mod latency;
+pub mod overhead;
+pub mod scaling;
+pub mod throughput;
+pub mod traces;
+
+use crate::cluster::Cluster;
+use crate::cost::CostTracker;
+use crate::metrics::RunMetrics;
+use crate::sim::{Engine, RunStats, SystemConfig, Workload};
+
+/// Simulated horizon. The paper runs 4-hour traces; `quick` mode runs one
+/// hour, which preserves every ordering at a quarter of the wall time.
+pub fn horizon(quick: bool) -> f64 {
+    if quick {
+        3600.0
+    } else {
+        4.0 * 3600.0
+    }
+}
+
+/// The paper's 16-GPU evaluation cluster (4 × g6e.24xlarge).
+pub fn paper_cluster() -> Cluster {
+    Cluster::paper_multinode()
+}
+
+/// Run one system over one workload on a fresh paper cluster.
+pub fn run_system(
+    cfg: SystemConfig,
+    workload: Workload,
+    seed: u64,
+) -> (RunMetrics, CostTracker, RunStats) {
+    Engine::new(cfg, paper_cluster(), workload, seed).run()
+}
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: [&str; 14] = [
+    "fig1", "fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "tab1", "tab2",
+    "fig10", "tab3", "fig11", "fig12", "overhead",
+];
+
+/// Dispatch an experiment by id. Returns the rendered report.
+pub fn run_experiment(id: &str, quick: bool) -> String {
+    match id {
+        "fig1" => breakdown::fig1(quick),
+        "fig2" => cost_eff::fig2(quick),
+        "fig5" => traces::fig5(quick),
+        "fig6" => latency::fig6(quick),
+        "fig7" => latency::fig7(quick),
+        "fig8" => breakdown::fig8(quick),
+        "fig9" => cost_eff::fig9(quick),
+        "tab1" => cost_eff::tab1(quick),
+        "tab2" => throughput::tab2(quick),
+        "fig10" => {
+            let mut s = throughput::fig10a(quick);
+            s.push_str(&ablation::fig10b(quick));
+            s
+        }
+        "tab3" => ablation::tab3(quick),
+        "fig11" => scaling::fig11(quick),
+        "fig12" => latency::fig12(quick),
+        "overhead" => overhead::report(),
+        other => format!("unknown experiment '{other}'; known: {ALL_EXPERIMENTS:?}\n"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_reports_cleanly() {
+        assert!(run_experiment("nope", true).contains("unknown experiment"));
+    }
+
+    #[test]
+    fn registry_lists_every_paper_artifact() {
+        // Tables 1–3 and data Figures 1, 2, 5–12 (Figs 3/4 are
+        // architecture diagrams with no data series).
+        for id in ["tab1", "tab2", "tab3"] {
+            assert!(ALL_EXPERIMENTS.contains(&id));
+        }
+        for f in [1, 2, 5, 6, 7, 8, 9, 10, 11, 12] {
+            assert!(ALL_EXPERIMENTS.contains(&format!("fig{f}").as_str()));
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! §6.7 scalability: Fig. 11a strong scaling (fixed workload, more GPUs)
+//! and Fig. 11b weak scaling (workload and GPUs grow proportionally).
+
+use crate::cluster::Cluster;
+use crate::sim::workloads::{paper_workload, scaled_workload};
+use crate::sim::{Engine, SystemConfig};
+use crate::trace::Pattern;
+use crate::util::table::{ms, Table};
+
+pub fn fig11(quick: bool) -> String {
+    let dur = if quick { 1800.0 } else { 3600.0 };
+    let mut out = String::new();
+
+    // (a) strong scaling: all 8 functions, 2 → 16 GPUs.
+    let mut t = Table::new(
+        "Fig 11a — Strong scaling (8 fns, fixed workload)",
+        &["GPUs", "system", "E2E (ms)", "TTFT (ms)"],
+    );
+    for n_gpus in [2usize, 4, 8, 16] {
+        let w = paper_workload(Pattern::Normal, dur, 11);
+        for cfg in [
+            SystemConfig::serverless_lora(),
+            SystemConfig::serverless_llm(),
+            SystemConfig::instainfer(Pattern::Normal),
+        ] {
+            let name = cfg.name;
+            let cluster = Cluster::new(1, n_gpus, 2 * n_gpus);
+            let (m, _, _) = Engine::new(cfg, cluster, w.clone(), 1).run();
+            t.row(vec![
+                n_gpus.to_string(),
+                name.into(),
+                ms(m.e2e().mean),
+                ms(m.ttft().mean),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+
+    // (b) weak scaling: workload ∝ GPUs (scale× 8 fns on scale× 4 GPUs).
+    let mut t = Table::new(
+        "Fig 11b — Weak scaling (workload ∝ GPUs)",
+        &["scale", "GPUs", "fns", "system", "E2E (ms)"],
+    );
+    for scale in [1usize, 2, 4] {
+        let w = scaled_workload(Pattern::Normal, dur, scale, 13);
+        for cfg in [
+            SystemConfig::serverless_lora(),
+            SystemConfig::instainfer(Pattern::Normal),
+        ] {
+            let name = cfg.name;
+            let cluster = Cluster::new(scale, 4, 8);
+            let (m, _, _) = Engine::new(cfg, cluster, w.clone(), 1).run();
+            t.row(vec![
+                scale.to_string(),
+                (scale * 4).to_string(),
+                (scale * 8).to_string(),
+                name.into(),
+                ms(m.e2e().mean),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 11a: ServerlessLoRA converts added GPU memory into lower (or
+    /// equal) latency, and outperforms baselines at every cluster size.
+    #[test]
+    fn strong_scaling_monotone_and_winning() {
+        let w = paper_workload(Pattern::Normal, 1200.0, 3);
+        let e2e = |cfg: SystemConfig, n: usize| {
+            let cluster = Cluster::new(1, n, 2 * n);
+            let (m, _, _) = Engine::new(cfg, cluster, w.clone(), 1).run();
+            m.e2e().mean
+        };
+        let lora2 = e2e(SystemConfig::serverless_lora(), 2);
+        let lora16 = e2e(SystemConfig::serverless_lora(), 16);
+        assert!(lora16 <= lora2 * 1.1, "more GPUs slower: {lora2} -> {lora16}");
+        let sllm16 = e2e(SystemConfig::serverless_llm(), 16);
+        assert!(lora16 < sllm16, "lora {lora16} vs sllm {sllm16}");
+    }
+
+    /// Fig. 11b: under weak scaling ServerlessLoRA's E2E stays stable
+    /// (within 25% across 1×→4×).
+    #[test]
+    fn weak_scaling_stable_e2e() {
+        let e2e = |scale: usize| {
+            let w = scaled_workload(Pattern::Normal, 1200.0, scale, 13);
+            let cluster = Cluster::new(scale, 4, 8);
+            let (m, _, _) =
+                Engine::new(SystemConfig::serverless_lora(), cluster, w, 1).run();
+            m.e2e().mean
+        };
+        let s1 = e2e(1);
+        let s4 = e2e(4);
+        assert!(
+            (s4 - s1).abs() / s1 < 0.25,
+            "weak scaling drift: {s1} -> {s4}"
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! §6.5 throughput: Table 2 (peak token/request throughput + peak batch)
+//! and Fig. 10a (completion time at max batch under contention).
+//!
+//! Setup per the paper: four Llama2-7B LoRA functions on TWO GPUs (each
+//! GPU can hold two full 7B models *or* one shared backbone + KV room).
+
+use crate::cluster::Cluster;
+use crate::sim::workloads::throughput_workload;
+use crate::sim::{Engine, SystemConfig};
+use crate::trace::Pattern;
+use crate::util::table::{f, Table};
+
+fn two_gpu_cluster() -> Cluster {
+    Cluster::new(1, 2, 8)
+}
+
+fn run_throughput(cfg: SystemConfig, dur: f64) -> (f64, usize, f64) {
+    let w = throughput_workload(dur, 21);
+    let (m, _, _) = Engine::new(cfg, two_gpu_cluster(), w, 2).run();
+    (m.token_throughput(), m.peak_batch(), m.request_throughput())
+}
+
+pub fn tab2(quick: bool) -> String {
+    let dur = if quick { 300.0 } else { 900.0 };
+    let mut t = Table::new(
+        "Table 2 — Peak throughput, 4× Llama2-7B fns on 2 GPUs",
+        &["system", "tokens/s", "peak batch", "requests/s"],
+    );
+    for cfg in [
+        SystemConfig::serverless_lora(),
+        SystemConfig::serverless_llm(),
+        SystemConfig::instainfer(Pattern::Predictable),
+    ] {
+        let name = cfg.name;
+        let (tok, batch, req) = run_throughput(cfg, dur);
+        t.row(vec![name.into(), f(tok), batch.to_string(), f(req)]);
+    }
+    t.render()
+}
+
+pub fn fig10a(quick: bool) -> String {
+    let dur = if quick { 300.0 } else { 900.0 };
+    let mut t = Table::new(
+        "Fig 10a — Completion time at max batch (same saturating workload)",
+        &["system", "mean E2E (s)", "p99 E2E (s)", "completed"],
+    );
+    for cfg in [
+        SystemConfig::serverless_lora(),
+        SystemConfig::serverless_llm(),
+        SystemConfig::instainfer(Pattern::Predictable),
+    ] {
+        let name = cfg.name;
+        let w = throughput_workload(dur, 21);
+        let (m, _, _) = Engine::new(cfg, two_gpu_cluster(), w, 2).run();
+        t.row(vec![
+            name.into(),
+            f(m.e2e().mean),
+            f(m.e2e().p99),
+            m.outcomes.len().to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2 headline: backbone sharing frees KV memory ⇒ larger peak
+    /// batches and higher token/request throughput than both baselines.
+    #[test]
+    fn sharing_lifts_peak_batch_and_throughput() {
+        let (tok_l, batch_l, req_l) =
+            run_throughput(SystemConfig::serverless_lora(), 240.0);
+        let (tok_s, batch_s, req_s) =
+            run_throughput(SystemConfig::serverless_llm(), 240.0);
+        assert!(
+            batch_l > batch_s,
+            "peak batch: lora {batch_l} vs sllm {batch_s}"
+        );
+        assert!(tok_l > tok_s, "tokens/s: lora {tok_l} vs sllm {tok_s}");
+        assert!(req_l > req_s, "req/s: lora {req_l} vs sllm {req_s}");
+    }
+
+    /// Fig. 10a: even at its larger peak batch (max contention),
+    /// ServerlessLoRA completes the same workload sooner.
+    #[test]
+    fn completion_time_shortest_despite_contention() {
+        let w = throughput_workload(240.0, 21);
+        let (ml, _, _) = Engine::new(
+            SystemConfig::serverless_lora(),
+            two_gpu_cluster(),
+            w.clone(),
+            2,
+        )
+        .run();
+        let (ms_, _, _) = Engine::new(
+            SystemConfig::serverless_llm(),
+            two_gpu_cluster(),
+            w,
+            2,
+        )
+        .run();
+        // Same offered load; compare completions and mean E2E.
+        assert!(
+            ml.outcomes.len() >= ms_.outcomes.len(),
+            "completions: {} vs {}",
+            ml.outcomes.len(),
+            ms_.outcomes.len()
+        );
+        assert!(
+            ml.e2e().mean < ms_.e2e().mean,
+            "E2E: {} vs {}",
+            ml.e2e().mean,
+            ms_.e2e().mean
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! Fig. 5 — the three arrival patterns: verify the generator lands each
+//! pattern in its CoV band and report the burstiness profile.
+
+use crate::trace::{stream_cov, Pattern, TraceSpec};
+use crate::util::table::{f, Table};
+
+pub fn fig5(quick: bool) -> String {
+    let dur = if quick { 3600.0 } else { 4.0 * 3600.0 };
+    let mut t = Table::new(
+        "Fig 5 — Arrival patterns by inter-arrival CoV",
+        &["pattern", "band", "measured CoV", "requests", "peak/valley (per-min)"],
+    );
+    for p in Pattern::ALL {
+        let reqs = TraceSpec::new(0, p, 1.0 / 30.0, 42).generate(dur);
+        let cov = stream_cov(&reqs);
+        let (lo, hi) = p.cov_band();
+        // Per-minute counts for the peak/valley ratio (the Azure LLM
+        // trace shows up to 34.6×).
+        let mut counts = vec![0usize; (dur / 60.0).ceil() as usize];
+        for r in &reqs {
+            counts[(r.arrival_s / 60.0) as usize] += 1;
+        }
+        let peak = *counts.iter().max().unwrap() as f64;
+        let valley = counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .min()
+            .copied()
+            .unwrap_or(1) as f64;
+        t.row(vec![
+            p.name().into(),
+            if hi.is_finite() {
+                format!("({lo}, {hi}]")
+            } else {
+                format!("> {lo}")
+            },
+            f(cov),
+            reqs.len().to_string(),
+            f(peak / valley),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_includes_all_patterns() {
+        let r = fig5(true);
+        for p in Pattern::ALL {
+            assert!(r.contains(p.name()), "{r}");
+        }
+    }
+
+    #[test]
+    fn bursty_has_big_peak_valley_ratio() {
+        let reqs = TraceSpec::new(0, Pattern::Bursty, 1.0 / 30.0, 42)
+            .generate(4.0 * 3600.0);
+        let mut counts = vec![0usize; 240];
+        for r in &reqs {
+            counts[(r.arrival_s / 60.0) as usize] += 1;
+        }
+        let peak = *counts.iter().max().unwrap() as f64;
+        let mean = reqs.len() as f64 / 240.0;
+        assert!(peak / mean > 4.0, "peak {peak} vs mean {mean}");
+    }
+}

@@ -1,0 +1,30 @@
+//! # ServerlessLoRA
+//!
+//! A reproduction of *ServerlessLoRA: Minimizing Latency and Cost in
+//! Serverless Inference for LoRA-Based LLMs* as a three-layer
+//! Rust + JAX + Pallas system (see DESIGN.md).
+//!
+//! * `coordinator` — the paper's contribution: PCKP pre-loading (§4.1),
+//!   two-layer adaptive batching (§4.2), dynamic GPU offloading (§4.3),
+//!   locality-aware routing.
+//! * `sharing` — backbone-sharing registry (§4.4, CUDA-IPC analogue).
+//! * `cluster` — simulated GPU/container substrate with strict ledgers.
+//! * `trace`, `cost`, `metrics` — workload, pricing and measurement.
+//! * `sim` — discrete-event simulator + the four baseline systems.
+//! * `runtime` — real PJRT data plane: loads the AOT HLO-text artifacts
+//!   and serves the tiny-Llama model with genuinely shared backbone
+//!   buffers and isolated per-function state.
+//! * `exp` — one entry per paper table/figure (the bench harness calls
+//!   these).
+
+pub mod artifact;
+pub mod cluster;
+pub mod coordinator;
+pub mod cost;
+pub mod exp;
+pub mod metrics;
+pub mod runtime;
+pub mod sharing;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,154 @@
+//! ServerlessLoRA launcher.
+//!
+//! ```text
+//! serverless-lora simulate --exp fig6 [--full]     regenerate a paper table/figure
+//! serverless-lora simulate --all [--full]          regenerate everything
+//! serverless-lora serve [--model llama-tiny] [--requests N] [--batch B]
+//!                                                  real PJRT serving demo
+//! serverless-lora info [--model llama-tiny]        artifact/manifest inventory
+//! ```
+//!
+//! (CLI is hand-rolled: `clap` is not vendored in this build environment.)
+
+use std::collections::BTreeMap;
+
+use serverless_lora::exp;
+use serverless_lora::runtime::{server, Manifest};
+
+fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let next_is_value =
+                i + 1 < args.len() && !args[i + 1].starts_with("--");
+            if next_is_value {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: serverless-lora <simulate|serve|info> [options]\n\
+         \n\
+         simulate --exp <id>|--all [--full]   ids: {}\n\
+         serve    [--model llama-tiny] [--requests 16] [--batch 4]\n\
+         info     [--model llama-tiny]",
+        exp::ALL_EXPERIMENTS.join(", ")
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    match pos.first().map(String::as_str) {
+        Some("simulate") => {
+            let quick = !flags.contains_key("full");
+            if flags.contains_key("all") {
+                for id in exp::ALL_EXPERIMENTS {
+                    print!("{}", exp::run_experiment(id, quick));
+                }
+            } else if let Some(id) = flags.get("exp") {
+                print!("{}", exp::run_experiment(id, quick));
+            } else {
+                usage()
+            }
+        }
+        Some("serve") => {
+            let model = flags
+                .get("model")
+                .cloned()
+                .unwrap_or_else(|| "llama-tiny".into());
+            let n: usize = flags
+                .get("requests")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(16);
+            let batch: usize =
+                flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(4);
+            serve_demo(&model, n, batch)?;
+        }
+        Some("info") => {
+            let model = flags
+                .get("model")
+                .cloned()
+                .unwrap_or_else(|| "llama-tiny".into());
+            let m = Manifest::load(Manifest::default_dir(&model))?;
+            println!(
+                "model={} params={} layers={} d_model={} adapters={}",
+                m.model,
+                m.dims.param_count,
+                m.dims.n_layers,
+                m.dims.d_model,
+                m.n_adapters
+            );
+            for a in &m.artifacts {
+                println!("  artifact {} (batch={}, seq={})", a.name, a.batch, a.seq);
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}
+
+/// Minimal real-serving demo: spin up the PJRT server, push a burst of
+/// requests across all adapters, report latencies.
+fn serve_demo(model: &str, n: usize, batch: usize) -> anyhow::Result<()> {
+    let dir = Manifest::default_dir(model);
+    let manifest = Manifest::load(&dir)?;
+    println!(
+        "serving {} ({} params, {} adapters) — PJRT CPU, shared backbone",
+        manifest.model, manifest.dims.param_count, manifest.n_adapters
+    );
+    let (tx, rx) = server::spawn(
+        dir,
+        server::ServerConfig {
+            max_batch: batch,
+            batch_delay: std::time::Duration::from_millis(20),
+        },
+    );
+    for i in 0..n as u64 {
+        tx.send(server::LiveRequest {
+            id: i,
+            adapter: (i as usize) % manifest.n_adapters,
+            prompt: (0..12).map(|t| ((i as i32) * 7 + t) % 100).collect(),
+            max_new_tokens: 8,
+        })?;
+    }
+    drop(tx);
+    let mut ttfts = Vec::new();
+    while let Ok(r) = rx.recv_timeout(std::time::Duration::from_secs(300)) {
+        println!(
+            "  req {} adapter={} batch={} ttft={:.1}ms tpot={:.1}ms e2e={:.1}ms",
+            r.id,
+            r.adapter,
+            r.batch_size,
+            r.ttft.as_secs_f64() * 1000.0,
+            r.tpot.as_secs_f64() * 1000.0,
+            r.e2e.as_secs_f64() * 1000.0
+        );
+        ttfts.push(r.ttft.as_secs_f64());
+        if ttfts.len() == n {
+            break;
+        }
+    }
+    let s = serverless_lora::util::stats::summarize(&ttfts);
+    println!(
+        "served {} requests: TTFT mean {:.1} ms p99 {:.1} ms",
+        s.count,
+        s.mean * 1000.0,
+        s.p99 * 1000.0
+    );
+    Ok(())
+}

@@ -1,0 +1,315 @@
+//! Request-level metrics and aggregation: TTFT, TPOT, E2E latency,
+//! cold-start breakdown, SLO violation, throughput (paper §6.1 metrics).
+
+use std::collections::BTreeMap;
+
+use crate::trace::Request;
+use crate::util::stats::{self, Summary};
+
+/// The cold-start / serving phases the paper's breakdown figures track
+/// (Fig. 1, Fig. 8). Order matters: it is the loading precedence order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Phase {
+    Queue,
+    ContainerInit,
+    LibraryLoad,
+    BackboneLoad,
+    AdapterLoad,
+    KernelCompile,
+    Prefill,
+    Decode,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 8] = [
+        Phase::Queue,
+        Phase::ContainerInit,
+        Phase::LibraryLoad,
+        Phase::BackboneLoad,
+        Phase::AdapterLoad,
+        Phase::KernelCompile,
+        Phase::Prefill,
+        Phase::Decode,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Queue => "queue",
+            Phase::ContainerInit => "container-init",
+            Phase::LibraryLoad => "library-load",
+            Phase::BackboneLoad => "backbone-load",
+            Phase::AdapterLoad => "adapter-load",
+            Phase::KernelCompile => "kernel-compile",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+
+    pub fn is_cold_start(self) -> bool {
+        matches!(
+            self,
+            Phase::ContainerInit
+                | Phase::LibraryLoad
+                | Phase::BackboneLoad
+                | Phase::AdapterLoad
+                | Phase::KernelCompile
+        )
+    }
+}
+
+/// Completed-request record.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub function: usize,
+    pub arrival_s: f64,
+    /// Per-phase durations (seconds).
+    pub phases: BTreeMap<Phase, f64>,
+    /// Time to first token (arrival → first token emitted).
+    pub ttft_s: f64,
+    /// Average time per output token over the decode.
+    pub tpot_s: f64,
+    /// Arrival → last token.
+    pub e2e_s: f64,
+    pub output_tokens: usize,
+    pub batch_size: usize,
+}
+
+impl RequestOutcome {
+    pub fn cold_start_s(&self) -> f64 {
+        self.phases
+            .iter()
+            .filter(|(p, _)| p.is_cold_start())
+            .map(|(_, d)| d)
+            .sum()
+    }
+}
+
+/// Aggregated metrics for one run of one system.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub outcomes: Vec<RequestOutcome>,
+    pub duration_s: f64,
+}
+
+impl RunMetrics {
+    pub fn record(&mut self, o: RequestOutcome) {
+        self.outcomes.push(o);
+    }
+
+    pub fn ttfts(&self) -> Vec<f64> {
+        self.outcomes.iter().map(|o| o.ttft_s).collect()
+    }
+
+    pub fn e2es(&self) -> Vec<f64> {
+        self.outcomes.iter().map(|o| o.e2e_s).collect()
+    }
+
+    pub fn tpots(&self) -> Vec<f64> {
+        self.outcomes.iter().map(|o| o.tpot_s).collect()
+    }
+
+    pub fn ttft(&self) -> Summary {
+        stats::summarize(&self.ttfts())
+    }
+
+    pub fn e2e(&self) -> Summary {
+        stats::summarize(&self.e2es())
+    }
+
+    pub fn tpot(&self) -> Summary {
+        stats::summarize(&self.tpots())
+    }
+
+    /// Mean seconds spent in each phase per request (Fig. 8a-style).
+    pub fn phase_means(&self) -> BTreeMap<Phase, f64> {
+        let mut sums: BTreeMap<Phase, f64> = BTreeMap::new();
+        for o in &self.outcomes {
+            for (&p, &d) in &o.phases {
+                *sums.entry(p).or_insert(0.0) += d;
+            }
+        }
+        let n = self.outcomes.len().max(1) as f64;
+        sums.into_iter().map(|(p, s)| (p, s / n)).collect()
+    }
+
+    /// Cumulative seconds per phase over the whole workload (Fig. 8b-style).
+    pub fn phase_totals(&self) -> BTreeMap<Phase, f64> {
+        let mut sums: BTreeMap<Phase, f64> = BTreeMap::new();
+        for o in &self.outcomes {
+            for (&p, &d) in &o.phases {
+                *sums.entry(p).or_insert(0.0) += d;
+            }
+        }
+        sums
+    }
+
+    /// Fraction of requests whose TTFT exceeds the given per-function SLO.
+    pub fn slo_violation_rate(&self, slo_of: impl Fn(usize) -> f64) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        let viol = self
+            .outcomes
+            .iter()
+            .filter(|o| o.ttft_s > slo_of(o.function))
+            .count();
+        viol as f64 / self.outcomes.len() as f64
+    }
+
+    /// Output-token throughput over the run (tokens/s).
+    pub fn token_throughput(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.outcomes
+            .iter()
+            .map(|o| o.output_tokens as f64)
+            .sum::<f64>()
+            / self.duration_s
+    }
+
+    /// Completed-request throughput (req/s).
+    pub fn request_throughput(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.outcomes.len() as f64 / self.duration_s
+    }
+
+    /// Largest batch observed (Table 2 "peak batch size").
+    pub fn peak_batch(&self) -> usize {
+        self.outcomes.iter().map(|o| o.batch_size).max().unwrap_or(0)
+    }
+
+    /// TTFT CDF at thresholds (Fig. 12), restricted to one set of functions.
+    pub fn ttft_cdf(&self, functions: &[usize], thresholds: &[f64]) -> Vec<f64> {
+        let xs: Vec<f64> = self
+            .outcomes
+            .iter()
+            .filter(|o| functions.contains(&o.function))
+            .map(|o| o.ttft_s)
+            .collect();
+        stats::cdf_at(&xs, thresholds)
+    }
+
+    /// Filter outcomes to a set of functions (e.g. "7B-series" rows).
+    pub fn subset(&self, functions: &[usize]) -> RunMetrics {
+        RunMetrics {
+            outcomes: self
+                .outcomes
+                .iter()
+                .filter(|o| functions.contains(&o.function))
+                .cloned()
+                .collect(),
+            duration_s: self.duration_s,
+        }
+    }
+}
+
+/// Helper to assemble an outcome from phase durations.
+pub fn outcome_from_phases(
+    req: &Request,
+    phases: BTreeMap<Phase, f64>,
+    tpot_s: f64,
+    batch_size: usize,
+) -> RequestOutcome {
+    let before_first_token: f64 = phases
+        .iter()
+        .filter(|(p, _)| !matches!(p, Phase::Decode))
+        .map(|(_, d)| d)
+        .sum();
+    let decode: f64 = phases.get(&Phase::Decode).copied().unwrap_or(0.0);
+    RequestOutcome {
+        id: req.id,
+        function: req.function,
+        arrival_s: req.arrival_s,
+        ttft_s: before_first_token,
+        tpot_s,
+        e2e_s: before_first_token + decode,
+        output_tokens: req.output_tokens,
+        batch_size,
+        phases,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(f: usize, ttft: f64, e2e: f64) -> RequestOutcome {
+        RequestOutcome {
+            id: 0,
+            function: f,
+            arrival_s: 0.0,
+            phases: BTreeMap::new(),
+            ttft_s: ttft,
+            tpot_s: 0.03,
+            e2e_s: e2e,
+            output_tokens: 100,
+            batch_size: 4,
+        }
+    }
+
+    #[test]
+    fn slo_violation_rate_per_function() {
+        let mut m = RunMetrics::default();
+        m.record(outcome(0, 1.0, 3.0));
+        m.record(outcome(0, 3.0, 5.0)); // violates 2.5
+        m.record(outcome(1, 3.0, 5.0)); // within 4.0
+        let rate = m.slo_violation_rate(|f| if f == 0 { 2.5 } else { 4.0 });
+        assert!((rate - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughputs() {
+        let mut m = RunMetrics::default();
+        m.duration_s = 50.0;
+        for _ in 0..10 {
+            m.record(outcome(0, 1.0, 2.0));
+        }
+        assert!((m.token_throughput() - 20.0).abs() < 1e-9);
+        assert!((m.request_throughput() - 0.2).abs() < 1e-9);
+        assert_eq!(m.peak_batch(), 4);
+    }
+
+    #[test]
+    fn phase_accounting() {
+        let req = Request {
+            id: 1,
+            function: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 60,
+            output_tokens: 100,
+        };
+        let mut phases = BTreeMap::new();
+        phases.insert(Phase::Queue, 0.2);
+        phases.insert(Phase::BackboneLoad, 1.0);
+        phases.insert(Phase::Prefill, 0.5);
+        phases.insert(Phase::Decode, 3.0);
+        let o = outcome_from_phases(&req, phases, 0.03, 2);
+        assert!((o.ttft_s - 1.7).abs() < 1e-9);
+        assert!((o.e2e_s - 4.7).abs() < 1e-9);
+        assert!((o.cold_start_s() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn subset_filters() {
+        let mut m = RunMetrics::default();
+        m.record(outcome(0, 1.0, 2.0));
+        m.record(outcome(5, 9.0, 9.5));
+        let s = m.subset(&[5]);
+        assert_eq!(s.outcomes.len(), 1);
+        assert_eq!(s.outcomes[0].function, 5);
+    }
+
+    #[test]
+    fn cdf_shape() {
+        let mut m = RunMetrics::default();
+        for t in [0.5, 1.0, 1.5, 2.0] {
+            m.record(outcome(0, t, t + 1.0));
+        }
+        let c = m.ttft_cdf(&[0], &[1.0, 2.0]);
+        assert_eq!(c, vec![0.5, 1.0]);
+    }
+}

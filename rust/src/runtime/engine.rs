@@ -1,0 +1,433 @@
+//! The PJRT data plane: load the AOT HLO-text artifacts, compile them once
+//! on the CPU PJRT client, and serve prefill/decode with a **shared
+//! backbone** and **isolated per-function state** — the runtime
+//! realisation of §4.4:
+//!
+//! * the backbone weight buffers are uploaded once and shared (`Arc`)
+//!   across all function instances (zero-copy, read-only);
+//! * each `FunctionInstance` owns its adapter buffers and its KV caches —
+//!   nothing dynamic is shared between functions;
+//! * compiling the HLO executables here is this stack's "CUDA kernel JIT"
+//!   artifact: the measured `compile_s` feeds the artifact model.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactKind, Manifest};
+use super::weights::{read_flat_f32, to_device_buffers, SharedBackbone};
+
+/// Key for the executable cache: (is_decode, batch, seq).
+type ExeKey = (bool, usize, usize);
+
+/// Per-function isolated state: adapter weights + KV caches. Holding a
+/// `SharedBackbone` clone is the IPC-handle analogue — it pins the shared
+/// weights but cannot mutate them.
+pub struct FunctionInstance {
+    pub adapter_id: usize,
+    adapter: Vec<xla::PjRtBuffer>,
+    backbone: SharedBackbone,
+}
+
+impl FunctionInstance {
+    pub fn backbone_refcount(&self) -> usize {
+        self.backbone.refcount()
+    }
+}
+
+/// KV cache for one in-flight batch of one function (never shared).
+pub struct KvState {
+    k: Literal,
+    v: Literal,
+    pub pos: usize,
+    pub batch: usize,
+    /// Batch bucket the caches are shaped for.
+    pub bucket: usize,
+}
+
+/// Timing profile measured at engine start (feeds the simulator's
+/// `llama-tiny` ModelProfile and EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Default)]
+pub struct EngineProfile {
+    pub compile_s: f64,
+    pub n_executables: usize,
+    pub backbone_upload_s: f64,
+    pub backbone_bytes: usize,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    exes: BTreeMap<ExeKey, PjRtLoadedExecutable>,
+    backbone: SharedBackbone,
+    pub profile: EngineProfile,
+}
+
+impl Engine {
+    /// Load + compile everything under an artifact directory
+    /// (`artifacts/llama-tiny`). This is the once-per-deployment cost —
+    /// Python is never involved at or after this point.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu()?;
+
+        let t0 = Instant::now();
+        let flat = read_flat_f32(
+            &manifest.dir.join("backbone.bin"),
+            manifest.backbone_elements(),
+        )?;
+        let backbone =
+            SharedBackbone::new(to_device_buffers(&client, &flat, &manifest.backbone_params)?);
+        let backbone_upload_s = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let mut exes = BTreeMap::new();
+        for a in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                a.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", a.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", a.name))?;
+            let key = (a.kind == ArtifactKind::Decode, a.batch, a.seq);
+            exes.insert(key, exe);
+        }
+        let compile_s = t0.elapsed().as_secs_f64();
+
+        let profile = EngineProfile {
+            compile_s,
+            n_executables: exes.len(),
+            backbone_upload_s,
+            backbone_bytes: flat.len() * 4,
+        };
+        Ok(Engine { client, manifest, exes, backbone, profile })
+    }
+
+    /// Spawn an isolated function instance for one LoRA adapter. The
+    /// backbone is *attached* (Arc clone), the adapter is loaded privately.
+    pub fn instance(&self, adapter_id: usize) -> Result<FunctionInstance> {
+        if adapter_id >= self.manifest.n_adapters {
+            return Err(anyhow!(
+                "adapter {adapter_id} out of range ({} available)",
+                self.manifest.n_adapters
+            ));
+        }
+        let flat = read_flat_f32(
+            &self.manifest.dir.join(format!("adapter_{adapter_id}.bin")),
+            self.manifest.adapter_elements(),
+        )?;
+        let adapter = to_device_buffers(&self.client, &flat, &self.manifest.adapter_params)?;
+        Ok(FunctionInstance {
+            adapter_id,
+            adapter,
+            backbone: self.backbone.clone(),
+        })
+    }
+
+    /// Live shared-backbone handle count (engine's own + instances).
+    pub fn backbone_refcount(&self) -> usize {
+        self.backbone.refcount()
+    }
+
+    fn exe(&self, decode: bool, batch: usize, seq: usize) -> Result<&PjRtLoadedExecutable> {
+        self.exes
+            .get(&(decode, batch, seq))
+            .ok_or_else(|| anyhow!("no artifact for decode={decode} b={batch} s={seq}"))
+    }
+
+    /// Prefill a batch of prompts (all padded/truncated to one seq
+    /// bucket). Returns per-request logits and the KV state.
+    ///
+    /// Prompts shorter than the bucket are right-padded with token 0;
+    /// the synthetic-workload semantics treat the padded prompt as the
+    /// prompt (no attention masking in the tiny model — see DESIGN.md).
+    pub fn prefill(
+        &self,
+        inst: &FunctionInstance,
+        prompts: &[Vec<i32>],
+    ) -> Result<(Vec<Vec<f32>>, KvState)> {
+        let n = prompts.len();
+        if n == 0 {
+            return Err(anyhow!("empty batch"));
+        }
+        let bucket = self
+            .manifest
+            .batch_bucket(n)
+            .ok_or_else(|| anyhow!("batch {n} exceeds largest bucket"))?;
+        let longest = prompts.iter().map(|p| p.len()).max().unwrap();
+        let seq = self
+            .manifest
+            .seq_bucket(longest)
+            .ok_or_else(|| anyhow!("prompt len {longest} exceeds largest bucket"))?;
+
+        let mut toks = vec![0i32; bucket * seq];
+        for (i, p) in prompts.iter().enumerate() {
+            toks[i * seq..i * seq + p.len()].copy_from_slice(p);
+        }
+        // Pad rows replicate row 0 so padded lanes stay numerically tame.
+        for i in n..bucket {
+            let (head, tail) = toks.split_at_mut(i * seq);
+            tail[..seq].copy_from_slice(&head[..seq]);
+        }
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&toks, &[bucket, seq], None)?;
+
+        let exe = self.exe(false, bucket, seq)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+            self.backbone.len() + inst.adapter.len() + 1,
+        );
+        args.extend(self.backbone.buffers());
+        args.extend(inst.adapter.iter());
+        args.push(&tok_buf);
+        let result = exe.execute_b(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let (logits_l, k, v) = tuple.to_tuple3()?;
+        let logits = split_logits(&logits_l, bucket, self.manifest.dims.vocab, n)?;
+        Ok((
+            logits,
+            KvState { k, v, pos: seq, batch: n, bucket },
+        ))
+    }
+
+    /// One lock-step decode step: feed one token per request, get logits.
+    /// The KV cache advances in place (positions beyond `pos` are unused).
+    pub fn decode(
+        &self,
+        inst: &FunctionInstance,
+        tokens: &[i32],
+        kv: &mut KvState,
+    ) -> Result<Vec<Vec<f32>>> {
+        if tokens.len() != kv.batch {
+            return Err(anyhow!("token count {} != batch {}", tokens.len(), kv.batch));
+        }
+        if kv.pos >= self.manifest.dims.max_seq {
+            return Err(anyhow!("KV cache exhausted at pos {}", kv.pos));
+        }
+        let bucket = kv.bucket;
+        let mut padded = vec![0i32; bucket];
+        padded[..tokens.len()].copy_from_slice(tokens);
+        let tok_buf = self.client.buffer_from_host_buffer(&padded, &[bucket], None)?;
+        let k_buf = self.client.buffer_from_host_literal(None, &kv.k)?;
+        let v_buf = self.client.buffer_from_host_literal(None, &kv.v)?;
+        let pos_l = Literal::scalar(kv.pos as i32);
+        let pos_buf = self.client.buffer_from_host_literal(None, &pos_l)?;
+
+        let exe = self.exe(true, bucket, self.manifest.dims.max_seq)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+            self.backbone.len() + inst.adapter.len() + 4,
+        );
+        args.extend(self.backbone.buffers());
+        args.extend(inst.adapter.iter());
+        args.push(&tok_buf);
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.push(&pos_buf);
+        let result = exe.execute_b(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let (logits_l, k, v) = tuple.to_tuple3()?;
+        kv.k = k;
+        kv.v = v;
+        kv.pos += 1;
+        split_logits(&logits_l, bucket, self.manifest.dims.vocab, kv.batch)
+    }
+
+    /// Greedy generation: prefill + `max_new` lock-step decode steps.
+    /// Returns the generated token ids per request.
+    pub fn generate(
+        &self,
+        inst: &FunctionInstance,
+        prompts: &[Vec<i32>],
+        max_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let (logits, mut kv) = self.prefill(inst, prompts)?;
+        let mut out: Vec<Vec<i32>> = vec![Vec::with_capacity(max_new); prompts.len()];
+        let mut next: Vec<i32> = logits.iter().map(|l| argmax(l)).collect();
+        for (i, &t) in next.iter().enumerate() {
+            out[i].push(t);
+        }
+        for _ in 1..max_new {
+            if kv.pos >= self.manifest.dims.max_seq {
+                break;
+            }
+            let logits = self.decode(inst, &next, &mut kv)?;
+            next = logits.iter().map(|l| argmax(l)).collect();
+            for (i, &t) in next.iter().enumerate() {
+                out[i].push(t);
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+fn split_logits(
+    l: &Literal,
+    bucket: usize,
+    vocab: usize,
+    n: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let flat: Vec<f32> = l.to_vec()?;
+    if flat.len() != bucket * vocab {
+        return Err(anyhow!("logits shape mismatch: {} != {}", flat.len(), bucket * vocab));
+    }
+    Ok((0..n).map(|i| flat[i * vocab..(i + 1) * vocab].to_vec()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = Manifest::default_dir("llama-tiny");
+        if !dir.join("manifest.json").exists() {
+            return None; // artifacts not built in this checkout
+        }
+        Some(Engine::load(dir).expect("engine loads"))
+    }
+
+    #[test]
+    fn golden_prompt_matches_python() {
+        // Mirror of aot.golden_prompt's LCG.
+        let toks = golden_prompt(1, 16, 512, 0);
+        assert_eq!(toks.len(), 16);
+        assert!(toks.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    pub fn golden_prompt(batch: usize, seq: usize, vocab: usize, adapter: usize) -> Vec<i32> {
+        let mut state: u64 =
+            (0x9E3779B9u64) ^ (batch as u64 * 1000003 + seq as u64 * 101 + adapter as u64);
+        let mut out = Vec::with_capacity(batch * seq);
+        for _ in 0..batch * seq {
+            state = (state.wrapping_mul(1664525).wrapping_add(1013904223)) % (1 << 32);
+            out.push((state % vocab as u64) as i32);
+        }
+        out
+    }
+
+    #[test]
+    fn prefill_matches_python_golden() {
+        let Some(e) = engine() else { return };
+        let g = &e.manifest.goldens[0];
+        let inst = e.instance(g.adapter).unwrap();
+        let prompt = golden_prompt(g.batch, g.seq, e.manifest.dims.vocab, g.adapter);
+        let prompts: Vec<Vec<i32>> =
+            prompt.chunks(g.seq).map(|c| c.to_vec()).collect();
+        let (logits, kv) = e.prefill(&inst, &prompts).unwrap();
+        assert_eq!(kv.pos, g.seq);
+        for (i, expect) in g.prefill_logits_head.iter().enumerate() {
+            let got = logits[0][i] as f64;
+            assert!(
+                (got - expect).abs() < 1e-3 * expect.abs().max(1.0),
+                "logit[{i}] {got} != {expect}"
+            );
+        }
+        // Argmax agreement per batch row.
+        for (row, &am) in g.prefill_argmax.iter().enumerate() {
+            assert_eq!(argmax(&logits[row]) as usize, am, "row {row}");
+        }
+    }
+
+    #[test]
+    fn decode_matches_python_golden() {
+        let Some(e) = engine() else { return };
+        let g = &e.manifest.goldens[0];
+        let inst = e.instance(g.adapter).unwrap();
+        let prompt = golden_prompt(g.batch, g.seq, e.manifest.dims.vocab, g.adapter);
+        let prompts: Vec<Vec<i32>> =
+            prompt.chunks(g.seq).map(|c| c.to_vec()).collect();
+        let (logits, mut kv) = e.prefill(&inst, &prompts).unwrap();
+        let next: Vec<i32> = logits.iter().map(|l| argmax(l)).collect();
+        let l2 = e.decode(&inst, &next, &mut kv).unwrap();
+        for (i, expect) in g.decode_logits_head.iter().enumerate() {
+            let got = l2[0][i] as f64;
+            assert!(
+                (got - expect).abs() < 2e-3 * expect.abs().max(1.0),
+                "decode logit[{i}] {got} != {expect}"
+            );
+        }
+        for (row, &am) in g.decode_argmax.iter().enumerate() {
+            assert_eq!(argmax(&l2[row]) as usize, am, "row {row}");
+        }
+    }
+
+    #[test]
+    fn backbone_shared_across_instances() {
+        let Some(e) = engine() else { return };
+        let before = e.backbone_refcount();
+        let i0 = e.instance(0).unwrap();
+        let i1 = e.instance(1).unwrap();
+        assert_eq!(e.backbone_refcount(), before + 2);
+        assert_eq!(i0.backbone_refcount(), before + 2);
+        drop(i0);
+        drop(i1);
+        assert_eq!(e.backbone_refcount(), before);
+    }
+
+    #[test]
+    fn adapters_produce_different_logits() {
+        let Some(e) = engine() else { return };
+        let i0 = e.instance(0).unwrap();
+        let i1 = e.instance(1).unwrap();
+        let prompt = vec![vec![5i32; 16]];
+        let (l0, _) = e.prefill(&i0, &prompt).unwrap();
+        let (l1, _) = e.prefill(&i1, &prompt).unwrap();
+        let max_diff = l0[0]
+            .iter()
+            .zip(&l1[0])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff > 1e-3, "adapters indistinguishable: {max_diff}");
+    }
+
+    #[test]
+    fn generate_produces_tokens() {
+        let Some(e) = engine() else { return };
+        let inst = e.instance(0).unwrap();
+        let out = e.generate(&inst, &[vec![1, 2, 3, 4]], 8).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 8);
+        assert!(out[0].iter().all(|&t| (t as usize) < e.manifest.dims.vocab));
+    }
+
+    #[test]
+    fn batch_rows_match_single_row() {
+        // Isolation check: request 0's logits must not depend on request 1
+        // sharing the batch.
+        let Some(e) = engine() else { return };
+        let inst = e.instance(0).unwrap();
+        let p0: Vec<i32> = (0..16).collect();
+        let p1: Vec<i32> = (16..32).collect();
+        let (lb, _) = e.prefill(&inst, &[p0.clone(), p1]).unwrap();
+        let (ls, _) = e.prefill(&inst, &[p0]).unwrap();
+        let max_diff = lb[0]
+            .iter()
+            .zip(&ls[0])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "batching changed numerics: {max_diff}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let Some(e) = engine() else { return };
+        assert!(e.instance(99).is_err());
+        let inst = e.instance(0).unwrap();
+        assert!(e.prefill(&inst, &[]).is_err());
+        let too_long = vec![vec![0i32; 4096]];
+        assert!(e.prefill(&inst, &too_long).is_err());
+    }
+}

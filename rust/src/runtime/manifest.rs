@@ -1,0 +1,297 @@
+//! Parse `artifacts/<model>/manifest.json` written by `python/compile/aot.py`
+//! — the single source of truth the Rust runtime shares with the L2 code:
+//! model config, parameter layout (order + shapes), artifact inventory
+//! (HLO-text files per batch/seq bucket) and cross-language goldens.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Prefill,
+    Decode,
+}
+
+#[derive(Debug, Clone)]
+pub struct HloArtifact {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub batch: usize,
+    pub seq: usize,
+    pub file: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub adapter: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub prefill_logits_head: Vec<f64>,
+    pub prefill_argmax: Vec<usize>,
+    pub decode_logits_head: Vec<f64>,
+    pub decode_argmax: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub lora_rank: usize,
+    pub lora_scale: f64,
+    pub n_adapters: usize,
+    pub batch_buckets: Vec<usize>,
+    pub seq_buckets: Vec<usize>,
+    pub backbone_params: Vec<ParamSpec>,
+    pub adapter_params: Vec<ParamSpec>,
+    pub artifacts: Vec<HloArtifact>,
+    pub goldens: Vec<Golden>,
+}
+
+fn specs(j: &Json) -> Result<Vec<ParamSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array of param specs"))?
+        .iter()
+        .map(|s| {
+            Ok(ParamSpec {
+                name: s
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("param name"))?
+                    .to_string(),
+                shape: s
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("param shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+            })
+        })
+        .collect()
+}
+
+fn f64s(j: &Json) -> Vec<f64> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default()
+}
+
+fn usizes(j: &Json) -> Vec<usize> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("missing config"))?;
+        let u = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("config.{k}"))
+        };
+        let dims = ModelDims {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            n_kv_heads: u("n_kv_heads")?,
+            d_ff: u("d_ff")?,
+            max_seq: u("max_seq")?,
+            head_dim: u("head_dim")?,
+            param_count: u("param_count")?,
+        };
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifacts"))?
+            .iter()
+            .map(|a| {
+                let kind = match a.get("kind").and_then(Json::as_str) {
+                    Some("prefill") => ArtifactKind::Prefill,
+                    Some("decode") => ArtifactKind::Decode,
+                    k => return Err(anyhow!("unknown artifact kind {k:?}")),
+                };
+                Ok(HloArtifact {
+                    name: a
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    kind,
+                    batch: a.get("batch").and_then(Json::as_usize).unwrap_or(1),
+                    seq: a.get("seq").and_then(Json::as_usize).unwrap_or(0),
+                    file: dir.join(a.get("file").and_then(Json::as_str).unwrap_or("")),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let goldens = j
+            .get("goldens")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(|g| Golden {
+                adapter: g.get("adapter").and_then(Json::as_usize).unwrap_or(0),
+                batch: g.get("batch").and_then(Json::as_usize).unwrap_or(1),
+                seq: g.get("seq").and_then(Json::as_usize).unwrap_or(16),
+                prefill_logits_head: g
+                    .get("prefill_logits_head")
+                    .map(f64s)
+                    .unwrap_or_default(),
+                prefill_argmax: g.get("prefill_argmax").map(usizes).unwrap_or_default(),
+                decode_logits_head: g
+                    .get("decode_logits_head")
+                    .map(f64s)
+                    .unwrap_or_default(),
+                decode_argmax: g.get("decode_argmax").map(usizes).unwrap_or_default(),
+            })
+            .collect();
+        Ok(Manifest {
+            model: j
+                .get("model")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            dims,
+            lora_rank: j
+                .get("lora")
+                .and_then(|l| l.get("rank"))
+                .and_then(Json::as_usize)
+                .unwrap_or(8),
+            lora_scale: j
+                .get("lora")
+                .and_then(|l| l.get("scale"))
+                .and_then(Json::as_f64)
+                .unwrap_or(2.0),
+            n_adapters: j.get("n_adapters").and_then(Json::as_usize).unwrap_or(0),
+            batch_buckets: j.get("batch_buckets").map(usizes).unwrap_or_default(),
+            seq_buckets: j.get("seq_buckets").map(usizes).unwrap_or_default(),
+            backbone_params: specs(j.get("backbone_params").ok_or_else(|| anyhow!("bb"))?)?,
+            adapter_params: specs(j.get("adapter_params").ok_or_else(|| anyhow!("ad"))?)?,
+            artifacts,
+            goldens,
+            dir,
+        })
+    }
+
+    /// Default artifact directory for a model name, resolved relative to
+    /// the crate root (works from tests, benches and examples).
+    pub fn default_dir(model: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(model)
+    }
+
+    pub fn find(&self, kind: ArtifactKind, batch: usize, seq: Option<usize>) -> Option<&HloArtifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.batch == batch && seq.map_or(true, |s| a.seq == s))
+    }
+
+    /// Smallest batch bucket that fits `n` requests.
+    pub fn batch_bucket(&self, n: usize) -> Option<usize> {
+        self.batch_buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Smallest seq bucket that fits `len` tokens.
+    pub fn seq_bucket(&self, len: usize) -> Option<usize> {
+        self.seq_buckets.iter().copied().find(|&s| s >= len)
+    }
+
+    pub fn backbone_elements(&self) -> usize {
+        self.backbone_params.iter().map(|p| p.elements()).sum()
+    }
+
+    pub fn adapter_elements(&self) -> usize {
+        self.adapter_params.iter().map(|p| p.elements()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir("llama-tiny");
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).expect("manifest parses"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.model, "llama-tiny");
+        assert_eq!(m.dims.d_model, 256);
+        assert_eq!(m.dims.n_layers, 4);
+        assert_eq!(m.backbone_params.len(), 1 + 9 * 4 + 2);
+        assert_eq!(m.adapter_params.len(), 8 * 4);
+        assert_eq!(m.n_adapters, 4);
+        assert!(!m.goldens.is_empty());
+    }
+
+    #[test]
+    fn param_count_consistent() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.backbone_elements(), m.dims.param_count);
+    }
+
+    #[test]
+    fn artifact_files_exist() {
+        let Some(m) = manifest() else { return };
+        for a in &m.artifacts {
+            assert!(a.file.exists(), "{} missing", a.file.display());
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.batch_bucket(1), Some(1));
+        assert_eq!(m.batch_bucket(3), Some(4));
+        assert_eq!(m.batch_bucket(1000), None);
+        assert_eq!(m.seq_bucket(10), Some(16));
+        assert_eq!(m.seq_bucket(17), Some(64));
+    }
+
+    #[test]
+    fn find_artifacts() {
+        let Some(m) = manifest() else { return };
+        assert!(m.find(ArtifactKind::Prefill, 1, Some(16)).is_some());
+        assert!(m.find(ArtifactKind::Decode, 1, None).is_some());
+        assert!(m.find(ArtifactKind::Prefill, 999, None).is_none());
+    }
+}

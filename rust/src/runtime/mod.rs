@@ -1,0 +1,14 @@
+//! Real PJRT data plane (never simulated): loads the HLO-text artifacts
+//! produced by `python/compile/aot.py`, compiles them on the PJRT CPU
+//! client, and serves the tiny-Llama LoRA model with a genuinely shared
+//! backbone (one buffer set, Arc-refcounted) and isolated per-function
+//! adapter buffers + KV caches — the §4.4 design running for real.
+
+pub mod engine;
+pub mod manifest;
+pub mod server;
+pub mod weights;
+
+pub use engine::{Engine, EngineProfile, FunctionInstance, KvState};
+pub use manifest::{ArtifactKind, Manifest};
+pub use weights::SharedBackbone;

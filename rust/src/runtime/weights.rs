@@ -1,0 +1,124 @@
+//! Load the AOT-exported weight blobs (`backbone.bin`, `adapter_<i>.bin`)
+//! — raw little-endian f32 in manifest parameter order — and stage them as
+//! PJRT device buffers.
+//!
+//! The backbone buffer set is created **once** and shared (`Arc`) across
+//! every function instance: this is the data-plane realisation of §4.4's
+//! CUDA-IPC sharing — one read-only copy, many isolated readers, each
+//! function bringing only its own adapter buffers and KV state.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{PjRtBuffer, PjRtClient};
+
+use super::manifest::ParamSpec;
+
+/// Read a `.bin` blob into f32s, validating the total element count.
+pub fn read_flat_f32(path: &Path, expect_elements: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expect_elements * 4 {
+        return Err(anyhow!(
+            "{}: {} bytes, expected {} (= {} f32)",
+            path.display(),
+            bytes.len(),
+            expect_elements * 4,
+            expect_elements
+        ));
+    }
+    let mut out = Vec::with_capacity(expect_elements);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(out)
+}
+
+/// Split a flat weight vector into per-parameter device buffers following
+/// the manifest order.
+pub fn to_device_buffers(
+    client: &PjRtClient,
+    flat: &[f32],
+    specs: &[ParamSpec],
+) -> Result<Vec<PjRtBuffer>> {
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0usize;
+    for s in specs {
+        let n = s.elements();
+        let data = flat
+            .get(off..off + n)
+            .ok_or_else(|| anyhow!("weight blob too short at {}", s.name))?;
+        let buf = client
+            .buffer_from_host_buffer(data, &s.shape, None)
+            .with_context(|| format!("uploading {}", s.name))?;
+        out.push(buf);
+        off += n;
+    }
+    if off != flat.len() {
+        return Err(anyhow!("weight blob has {} trailing elements", flat.len() - off));
+    }
+    Ok(out)
+}
+
+/// The shared, read-only backbone weights: one device copy, refcounted by
+/// `Arc` — function instances clone the handle, never the bytes.
+#[derive(Clone)]
+pub struct SharedBackbone {
+    buffers: Arc<Vec<PjRtBuffer>>,
+}
+
+impl SharedBackbone {
+    pub fn new(buffers: Vec<PjRtBuffer>) -> Self {
+        SharedBackbone { buffers: Arc::new(buffers) }
+    }
+
+    pub fn buffers(&self) -> &[PjRtBuffer] {
+        &self.buffers
+    }
+
+    /// Number of live handles (≈ attached function instances + the engine).
+    pub fn refcount(&self) -> usize {
+        Arc::strong_count(&self.buffers)
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_flat_validates_length() {
+        let dir = std::env::temp_dir().join("sl_weights_test.bin");
+        std::fs::write(&dir, [0u8; 16]).unwrap();
+        assert_eq!(read_flat_f32(&dir, 4).unwrap(), vec![0.0; 4]);
+        assert!(read_flat_f32(&dir, 5).is_err());
+        let _ = std::fs::remove_file(&dir);
+    }
+
+    #[test]
+    fn read_flat_little_endian() {
+        let dir = std::env::temp_dir().join("sl_weights_le.bin");
+        std::fs::write(&dir, 1.5f32.to_le_bytes()).unwrap();
+        assert_eq!(read_flat_f32(&dir, 1).unwrap(), vec![1.5]);
+        let _ = std::fs::remove_file(&dir);
+    }
+
+    #[test]
+    fn shared_backbone_refcounts() {
+        let b = SharedBackbone::new(vec![]);
+        assert_eq!(b.refcount(), 1);
+        let c = b.clone();
+        assert_eq!(b.refcount(), 2);
+        drop(c);
+        assert_eq!(b.refcount(), 1);
+    }
+}

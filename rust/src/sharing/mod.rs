@@ -1,0 +1,181 @@
+//! Backbone-sharing registry (paper §4.4).
+//!
+//! Tracks, cluster-wide, which GPUs host which shared backbone segment and
+//! mediates attach/detach of isolated function instances.  This is the
+//! control-plane analogue of the paper's CUDA-IPC design: the *data*-plane
+//! equivalent lives in `runtime::engine`, where one set of PJRT backbone
+//! buffers is shared zero-copy (Arc) across per-function states while each
+//! function keeps its own adapter buffers and KV cache — the same
+//! "read-only shared weights, isolated dynamic state" split.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{Cluster, GpuError, GpuId};
+
+/// An opaque capability to read a shared backbone segment — the analogue
+/// of a CUDA IPC handle. Holding one pins the segment (refcounted).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IpcHandle {
+    pub model: String,
+    pub gpu: GpuId,
+    pub function: usize,
+}
+
+/// Cluster-wide registry of shared backbone segments.
+#[derive(Debug, Default, Clone)]
+pub struct BackboneRegistry {
+    /// model → GPUs currently hosting a shared copy.
+    hosts: BTreeMap<String, Vec<GpuId>>,
+}
+
+impl BackboneRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// GPUs hosting this backbone (locality candidates for the router).
+    pub fn hosts(&self, model: &str) -> &[GpuId] {
+        self.hosts.get(model).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn is_hosted_on(&self, model: &str, gpu: GpuId) -> bool {
+        self.hosts(model).contains(&gpu)
+    }
+
+    /// Load a shared copy onto `gpu` (first function pays the bytes once;
+    /// later functions attach for free — Observation 1's fix).
+    pub fn load(
+        &mut self,
+        cluster: &mut Cluster,
+        model: &str,
+        size_gb: f64,
+        gpu: GpuId,
+    ) -> Result<(), GpuError> {
+        cluster.gpu_mut(gpu).load_shared_backbone(model, size_gb)?;
+        let v = self.hosts.entry(model.to_string()).or_default();
+        if !v.contains(&gpu) {
+            v.push(gpu);
+        }
+        Ok(())
+    }
+
+    /// Attach an isolated function instance; returns its IPC handle.
+    pub fn attach(
+        &mut self,
+        cluster: &mut Cluster,
+        model: &str,
+        gpu: GpuId,
+        function: usize,
+    ) -> Result<IpcHandle, GpuError> {
+        if !self.is_hosted_on(model, gpu) {
+            return Err(GpuError::BackboneMissing(model.to_string()));
+        }
+        cluster.gpu_mut(gpu).attach_backbone(model)?;
+        Ok(IpcHandle { model: model.to_string(), gpu, function })
+    }
+
+    /// Release a handle.
+    pub fn detach(
+        &mut self,
+        cluster: &mut Cluster,
+        handle: &IpcHandle,
+    ) -> Result<(), GpuError> {
+        cluster.gpu_mut(handle.gpu).detach_backbone(&handle.model)
+    }
+
+    /// Unload the shared copy from one GPU (offloader path). Fails while
+    /// any handle is open — memory is never yanked under a live reader.
+    pub fn unload(
+        &mut self,
+        cluster: &mut Cluster,
+        model: &str,
+        gpu: GpuId,
+    ) -> Result<f64, GpuError> {
+        let freed = cluster.gpu_mut(gpu).unload_shared_backbone(model)?;
+        if let Some(v) = self.hosts.get_mut(model) {
+            v.retain(|&g| g != gpu);
+        }
+        Ok(freed)
+    }
+
+    /// Total GPU memory saved relative to per-function private copies:
+    /// (attached_instances − hosted_copies) × size (Observation 1's 99%).
+    pub fn savings_gb(&self, cluster: &Cluster, model: &str, size_gb: f64) -> f64 {
+        let attached: usize = self
+            .hosts(model)
+            .iter()
+            .map(|&g| cluster.gpu(g).backbone_refcount(model))
+            .sum();
+        let copies = self.hosts(model).len();
+        (attached.saturating_sub(copies)) as f64 * size_gb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Cluster, BackboneRegistry) {
+        (Cluster::new(1, 2, 2), BackboneRegistry::new())
+    }
+
+    #[test]
+    fn attach_requires_hosted() {
+        let (mut c, mut r) = setup();
+        let g = c.gpu_ids()[0];
+        assert!(r.attach(&mut c, "7b", g, 0).is_err());
+        r.load(&mut c, "7b", 13.5, g).unwrap();
+        let h = r.attach(&mut c, "7b", g, 0).unwrap();
+        assert_eq!(c.gpu(g).backbone_refcount("7b"), 1);
+        r.detach(&mut c, &h).unwrap();
+        assert_eq!(c.gpu(g).backbone_refcount("7b"), 0);
+    }
+
+    #[test]
+    fn hundreds_of_functions_one_copy() {
+        // §4.4: "A GPU can hold hundreds of LoRA functions simultaneously
+        // using one backbone LLM."
+        let (mut c, mut r) = setup();
+        let g = c.gpu_ids()[0];
+        r.load(&mut c, "7b", 13.5, g).unwrap();
+        let before = c.gpu(g).free_gb();
+        for f in 0..200 {
+            r.attach(&mut c, "7b", g, f).unwrap();
+        }
+        // Attaching costs zero backbone bytes.
+        assert_eq!(c.gpu(g).free_gb(), before);
+        assert!((r.savings_gb(&c, "7b", 13.5) - 199.0 * 13.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unload_blocked_by_open_handles() {
+        let (mut c, mut r) = setup();
+        let g = c.gpu_ids()[0];
+        r.load(&mut c, "7b", 13.5, g).unwrap();
+        let h = r.attach(&mut c, "7b", g, 0).unwrap();
+        assert!(r.unload(&mut c, "7b", g).is_err());
+        r.detach(&mut c, &h).unwrap();
+        assert_eq!(r.unload(&mut c, "7b", g).unwrap(), 13.5);
+        assert!(r.hosts("7b").is_empty());
+    }
+
+    #[test]
+    fn multiple_hosts_tracked() {
+        let (mut c, mut r) = setup();
+        let ids = c.gpu_ids();
+        r.load(&mut c, "7b", 13.5, ids[0]).unwrap();
+        r.load(&mut c, "7b", 13.5, ids[1]).unwrap();
+        assert_eq!(r.hosts("7b").len(), 2);
+        r.unload(&mut c, "7b", ids[0]).unwrap();
+        assert_eq!(r.hosts("7b"), &[ids[1]]);
+    }
+
+    #[test]
+    fn load_idempotent_in_registry() {
+        let (mut c, mut r) = setup();
+        let g = c.gpu_ids()[0];
+        r.load(&mut c, "7b", 13.5, g).unwrap();
+        r.load(&mut c, "7b", 13.5, g).unwrap();
+        assert_eq!(r.hosts("7b").len(), 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! Processor-sharing GPU executor — the generalisation of Eq. 4.
+//!
+//! The paper models contention as: M batches sharing a GPU each stretch to
+//! M·T_i(b).  A discrete-event simulator needs the continuous version: the
+//! GPU is a processor-sharing server; each active job owns `work` seconds
+//! of dedicated GPU time and progresses at rate 1/M while M jobs are
+//! active.  With a constant job set this reduces exactly to Eq. 4.
+
+use std::collections::BTreeMap;
+
+/// Processor-sharing executor for one GPU, with per-job weights.
+///
+/// Weighted generalisation: job i progresses at rate w_i / Σw. With all
+/// weights 1 this is exactly Eq. 4. The engine gives decode jobs a lower
+/// weight than prefill jobs (`DECODE_WEIGHT`): decode is memory-bound and
+/// interleaves with an incoming prefill at iteration granularity, so it
+/// contends far less than a second compute-bound prefill would.
+#[derive(Debug, Clone, Default)]
+pub struct GpuExec {
+    /// job id → (remaining dedicated-GPU seconds, weight).
+    jobs: BTreeMap<u64, (f64, f64)>,
+    last_update_s: f64,
+    /// Bumped on every add/remove: events scheduled against an older
+    /// version are stale and must be ignored by the engine.
+    pub version: u64,
+}
+
+/// Relative PS weight of a decode-phase job vs a prefill-phase job.
+pub const DECODE_WEIGHT: f64 = 0.4;
+
+impl GpuExec {
+    fn total_weight(&self) -> f64 {
+        self.jobs.values().map(|&(_, w)| w).sum()
+    }
+
+    /// Advance all jobs' progress to `now`.
+    fn advance(&mut self, now_s: f64) {
+        let total = self.total_weight();
+        if total > 0.0 {
+            let dt = (now_s - self.last_update_s).max(0.0);
+            for (r, w) in self.jobs.values_mut() {
+                *r -= dt * *w / total;
+            }
+        }
+        self.last_update_s = now_s;
+    }
+
+    /// Add a job with `work` seconds of dedicated GPU time at weight 1.
+    pub fn add(&mut self, now_s: f64, job: u64, work_s: f64) {
+        self.add_weighted(now_s, job, work_s, 1.0);
+    }
+
+    pub fn add_weighted(&mut self, now_s: f64, job: u64, work_s: f64, weight: f64) {
+        debug_assert!(weight > 0.0);
+        self.advance(now_s);
+        self.jobs.insert(job, (work_s.max(0.0), weight));
+        self.version += 1;
+    }
+
+    /// Remove a job (completion or cancellation).
+    pub fn remove(&mut self, now_s: f64, job: u64) -> Option<f64> {
+        self.advance(now_s);
+        let r = self.jobs.remove(&job).map(|(r, _)| r);
+        self.version += 1;
+        r
+    }
+
+    /// Number of active jobs (the instantaneous contention M).
+    pub fn contention(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_active(&self) -> bool {
+        !self.jobs.is_empty()
+    }
+
+    /// The next job to finish and its wall-clock completion time, under
+    /// the current job set.
+    pub fn next_completion(&self) -> Option<(u64, f64)> {
+        let total = self.total_weight();
+        self.jobs
+            .iter()
+            .min_by(|a, b| {
+                (a.1 .0 / a.1 .1).partial_cmp(&(b.1 .0 / b.1 .1)).unwrap()
+            })
+            .map(|(&id, &(rem, w))| {
+                (id, self.last_update_s + (rem.max(0.0) / w) * total)
+            })
+    }
+
+    /// Jobs whose remaining work is ~zero at `now` (completion sweep).
+    pub fn finished_at(&mut self, now_s: f64) -> Vec<u64> {
+        self.advance(now_s);
+        let done: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|(_, &(r, _))| r <= 1e-9)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &done {
+            self.jobs.remove(id);
+        }
+        if !done.is_empty() {
+            self.version += 1;
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_job_runs_at_full_rate() {
+        let mut e = GpuExec::default();
+        e.add(0.0, 1, 2.0);
+        assert_eq!(e.next_completion(), Some((1, 2.0)));
+        assert_eq!(e.finished_at(2.0), vec![1]);
+        assert!(!e.is_active());
+    }
+
+    #[test]
+    fn eq4_two_jobs_double_latency() {
+        // Two equal jobs started together: each takes 2 × its work.
+        let mut e = GpuExec::default();
+        e.add(0.0, 1, 1.0);
+        e.add(0.0, 2, 1.0);
+        let (_, t) = e.next_completion().unwrap();
+        assert!((t - 2.0).abs() < 1e-9, "t={t}");
+        let done = e.finished_at(2.0);
+        assert_eq!(done.len(), 2); // both finish together
+    }
+
+    #[test]
+    fn eq4_m_jobs_m_x_latency() {
+        let mut e = GpuExec::default();
+        for i in 0..4 {
+            e.add(0.0, i, 1.0);
+        }
+        assert!((e.next_completion().unwrap().1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn late_arrival_slows_survivor() {
+        // Job 1 (2 s) alone for 1 s, then job 2 (0.5 s) joins:
+        // job1 has 1 s left, runs at 1/2 ⇒ job2 (0.5 left at 1/2 = 1 s
+        // wall) finishes at t=2; job1 then has 0.5 left alone ⇒ t=2.5.
+        let mut e = GpuExec::default();
+        e.add(0.0, 1, 2.0);
+        e.add(1.0, 2, 0.5);
+        let (id, t) = e.next_completion().unwrap();
+        assert_eq!(id, 2);
+        assert!((t - 2.0).abs() < 1e-9, "t={t}");
+        assert_eq!(e.finished_at(2.0), vec![2]);
+        let (id, t) = e.next_completion().unwrap();
+        assert_eq!(id, 1);
+        assert!((t - 2.5).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn version_bumps_on_change() {
+        let mut e = GpuExec::default();
+        let v0 = e.version;
+        e.add(0.0, 1, 1.0);
+        assert!(e.version > v0);
+        let v1 = e.version;
+        e.remove(0.5, 1);
+        assert!(e.version > v1);
+    }
+
+    #[test]
+    fn weighted_sharing_favors_heavy_job() {
+        // Prefill (w=1) beside a decode (w=0.4): prefill runs at
+        // 1/1.4 ≈ 0.71 of full rate, not 0.5.
+        let mut e = GpuExec::default();
+        e.add_weighted(0.0, 1, 1.0, 1.0);
+        e.add_weighted(0.0, 2, 10.0, DECODE_WEIGHT);
+        let (id, t) = e.next_completion().unwrap();
+        assert_eq!(id, 1);
+        assert!((t - 1.4).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn work_conservation() {
+        // Total wall time to drain any job set equals total work,
+        // regardless of arrival interleaving (single server, no idling).
+        let mut e = GpuExec::default();
+        e.add(0.0, 1, 1.0);
+        e.add(0.0, 2, 2.0);
+        e.add(0.0, 3, 3.0);
+        let mut now = 0.0;
+        let mut drained = vec![];
+        while let Some((_, t)) = e.next_completion() {
+            now = t;
+            drained.extend(e.finished_at(t));
+        }
+        assert!((now - 6.0).abs() < 1e-9, "drain time {now}");
+        assert_eq!(drained, vec![1, 2, 3]); // shortest-first under PS
+    }
+}

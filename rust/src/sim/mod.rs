@@ -1,0 +1,11 @@
+//! Discrete-event simulation of the serving systems: engine, GPU
+//! processor-sharing executor (Eq. 4), and the system/baseline configs.
+
+pub mod config;
+pub mod engine;
+pub mod exec;
+pub mod workloads;
+
+pub use config::{BatchingMode, PreloadMode, SystemConfig};
+pub use engine::{Engine, RunStats, Workload};
+pub use exec::GpuExec;

@@ -1,0 +1,166 @@
+//! The paper's standard workloads (§6.1): eight LoRA functions — four on
+//! Llama2-7B, four on Llama2-13B — driven by 4-hour CoV-classed traces
+//! with heterogeneous per-function rates (Azure functions are wildly
+//! skewed: some fire every few seconds, some a few times an hour).
+
+use crate::artifact::{FunctionSpec, ModelProfile};
+use crate::sim::engine::Workload;
+use crate::trace::{merge, Pattern, Request, TraceSpec};
+
+/// Heterogeneous per-function mean rates (req/s). Means chosen so that the
+/// hottest function stays keep-alive-warm while the coldest almost always
+/// cold-starts — the regime where the paper's Fig. 6 gaps appear.
+pub const RATE_TIERS: [f64; 4] = [1.0 / 45.0, 1.0 / 90.0, 1.0 / 180.0, 1.0 / 420.0];
+
+/// The paper's 8-function deployment: functions 0..4 are 7B-series,
+/// 4..8 are 13B-series; adapter ids 0..4 within each series.
+pub fn paper_functions() -> Vec<FunctionSpec> {
+    let mut v = Vec::new();
+    for i in 0..4 {
+        v.push(FunctionSpec::new(i, ModelProfile::llama2_7b(), i));
+    }
+    for i in 0..4 {
+        v.push(FunctionSpec::new(4 + i, ModelProfile::llama2_13b(), i));
+    }
+    v
+}
+
+pub fn series_7b() -> Vec<usize> {
+    (0..4).collect()
+}
+
+pub fn series_13b() -> Vec<usize> {
+    (4..8).collect()
+}
+
+/// Standard evaluation workload: 8 functions, one arrival pattern,
+/// heterogeneous rates, `duration_s` horizon.
+pub fn paper_workload(pattern: Pattern, duration_s: f64, seed: u64) -> Workload {
+    let functions = paper_functions();
+    let rates: Vec<f64> = (0..functions.len())
+        .map(|i| RATE_TIERS[i % RATE_TIERS.len()])
+        .collect();
+    let traces: Vec<Vec<Request>> = functions
+        .iter()
+        .map(|f| {
+            TraceSpec::new(f.id, pattern, rates[f.id], seed + f.id as u64)
+                .generate(duration_s)
+        })
+        .collect();
+    Workload { functions, requests: merge(traces), duration_s, rates }
+}
+
+/// §6.5 throughput setup: four 7B functions saturating two GPUs.
+/// High offered load so each system runs at its peak batch size.
+pub fn throughput_workload(duration_s: f64, seed: u64) -> Workload {
+    let functions: Vec<FunctionSpec> = (0..4)
+        .map(|i| FunctionSpec::new(i, ModelProfile::llama2_7b(), i))
+        .collect();
+    let rate = 12.0; // req/s per function — far above service capacity
+    let traces: Vec<Vec<Request>> = functions
+        .iter()
+        .map(|f| {
+            TraceSpec::new(f.id, Pattern::Predictable, rate, seed + f.id as u64)
+                .generate(duration_s)
+        })
+        .collect();
+    Workload {
+        functions,
+        requests: merge(traces),
+        duration_s,
+        rates: vec![rate; 4],
+    }
+}
+
+/// §6.3 single-invocation breakdown: one function, one request.
+pub fn single_invocation(model: ModelProfile) -> Workload {
+    let f = FunctionSpec::new(0, model, 0);
+    let req = Request {
+        id: 1,
+        function: 0,
+        arrival_s: 1.0,
+        prompt_tokens: 60,
+        output_tokens: 110,
+    };
+    Workload {
+        functions: vec![f],
+        requests: vec![req],
+        duration_s: 30.0,
+        rates: vec![0.05],
+    }
+}
+
+/// Weak-scaling workload: `scale` × the base deployment (8·scale
+/// functions), same per-function rates.
+pub fn scaled_workload(pattern: Pattern, duration_s: f64, scale: usize, seed: u64) -> Workload {
+    let mut functions = Vec::new();
+    for s in 0..scale {
+        for i in 0..4 {
+            functions.push(FunctionSpec::new(
+                s * 8 + i,
+                ModelProfile::llama2_7b(),
+                i,
+            ));
+        }
+        for i in 0..4 {
+            functions.push(FunctionSpec::new(
+                s * 8 + 4 + i,
+                ModelProfile::llama2_13b(),
+                i,
+            ));
+        }
+    }
+    let rates: Vec<f64> = (0..functions.len())
+        .map(|i| RATE_TIERS[i % RATE_TIERS.len()])
+        .collect();
+    let traces: Vec<Vec<Request>> = functions
+        .iter()
+        .map(|f| {
+            TraceSpec::new(f.id, pattern, rates[f.id], seed + 31 * f.id as u64)
+                .generate(duration_s)
+        })
+        .collect();
+    Workload { functions, requests: merge(traces), duration_s, rates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_workload_shape() {
+        let w = paper_workload(Pattern::Normal, 3600.0, 1);
+        assert_eq!(w.functions.len(), 8);
+        assert_eq!(w.functions[0].model.name, "llama2-7b");
+        assert_eq!(w.functions[7].model.name, "llama2-13b");
+        assert!(!w.requests.is_empty());
+        // Sorted stream.
+        for p in w.requests.windows(2) {
+            assert!(p[1].arrival_s >= p[0].arrival_s);
+        }
+    }
+
+    #[test]
+    fn rates_are_heterogeneous() {
+        let w = paper_workload(Pattern::Normal, 3600.0, 1);
+        assert!(w.rates[0] > w.rates[3] * 5.0);
+    }
+
+    #[test]
+    fn throughput_workload_saturates() {
+        let w = throughput_workload(120.0, 1);
+        // 4 fns × 3 req/s × 120 s ≈ 1440 requests.
+        assert!(w.requests.len() > 1000);
+    }
+
+    #[test]
+    fn scaled_workload_multiplies_functions() {
+        let w = scaled_workload(Pattern::Normal, 600.0, 3, 1);
+        assert_eq!(w.functions.len(), 24);
+        // ids unique
+        let mut ids: Vec<usize> = w.functions.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 24);
+    }
+}

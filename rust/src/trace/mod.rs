@@ -1,0 +1,277 @@
+//! Workload / trace generation (paper §6.1).
+//!
+//! The paper drives its evaluation with Azure Functions production traces,
+//! classified purely by the coefficient of variation (CoV) of request
+//! inter-arrival times: Predictable (CoV ≤ 1), Normal (1 < CoV ≤ 4),
+//! Bursty (CoV > 4).  We reproduce exactly that statistic with a renewal
+//! process whose inter-arrival law is chosen per class:
+//!
+//! * Predictable — Gamma with shape 1/CoV² > 1 (sub-exponential spread);
+//! * Normal      — hyper-exponential ON/OFF mixture tuned to the target CoV;
+//! * Bursty      — ON/OFF bursts: long idle gaps, tight in-burst spacing —
+//!                 the 34.6× peak/valley swing the Azure LLM traces show.
+//!
+//! Prompt/output token lengths follow a GSM8K-like distribution (§6.1:
+//! GSM8K prompts; chain-of-thought-length answers).
+
+use crate::util::rng::Pcg64;
+
+/// Arrival-pattern class, by inter-arrival CoV (paper Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    /// CoV ≤ 1
+    Predictable,
+    /// 1 < CoV ≤ 4
+    Normal,
+    /// CoV > 4
+    Bursty,
+}
+
+impl Pattern {
+    pub const ALL: [Pattern; 3] =
+        [Pattern::Predictable, Pattern::Normal, Pattern::Bursty];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Pattern::Predictable => "Predictable",
+            Pattern::Normal => "Normal",
+            Pattern::Bursty => "Bursty",
+        }
+    }
+
+    /// The CoV band this class must land in (used by calibration tests
+    /// and the fig5 bench).
+    pub fn cov_band(self) -> (f64, f64) {
+        match self {
+            Pattern::Predictable => (0.0, 1.0),
+            Pattern::Normal => (1.0, 4.0),
+            Pattern::Bursty => (4.0, f64::INFINITY),
+        }
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub function: usize,
+    /// Arrival time, seconds from workload start.
+    pub arrival_s: f64,
+    /// Prompt length in tokens.
+    pub prompt_tokens: usize,
+    /// Number of tokens to generate.
+    pub output_tokens: usize,
+}
+
+/// GSM8K-like prompt/answer length sampler. GSM8K problems average ≈60
+/// tokens; chain-of-thought answers average ≈120 tokens with a long tail.
+#[derive(Debug, Clone)]
+pub struct GsmLengths;
+
+impl GsmLengths {
+    pub fn prompt(rng: &mut Pcg64) -> usize {
+        (rng.lognormal(55.0, 0.35).round() as usize).clamp(8, 512)
+    }
+
+    pub fn output(rng: &mut Pcg64) -> usize {
+        // Median ≈ 70 tokens, clamped tail: GSM8K chain-of-thought answers
+        // are short; an unclamped tail would make one 500-token request
+        // hold its whole batch hostage in the lock-step decode model
+        // (real engines release finished requests iteration-by-iteration).
+        (rng.lognormal(70.0, 0.35).round() as usize).clamp(16, 192)
+    }
+}
+
+/// Generator for one function's arrival stream.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub function: usize,
+    pub pattern: Pattern,
+    /// Long-run mean request rate (req/s).
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    pub fn new(function: usize, pattern: Pattern, rate: f64, seed: u64) -> Self {
+        TraceSpec { function, pattern, rate, seed }
+    }
+
+    /// Generate all requests in [0, duration_s).
+    pub fn generate(&self, duration_s: f64) -> Vec<Request> {
+        let mut rng = Pcg64::with_stream(self.seed, 0x7ace ^ self.function as u64);
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        let mean_gap = 1.0 / self.rate;
+        let mut id = (self.function as u64) << 40;
+
+        match self.pattern {
+            Pattern::Predictable => {
+                // Gamma renewal, CoV ≈ 0.5 ⇒ shape 4.
+                let shape = 4.0;
+                let scale = mean_gap / shape;
+                while t < duration_s {
+                    t += rng.gamma(shape, scale);
+                    if t >= duration_s {
+                        break;
+                    }
+                    out.push(self.request(&mut rng, &mut id, t));
+                }
+            }
+            Pattern::Normal => {
+                // Hyper-exponential H2 (balanced means): CoV² = 2/p − 1 with
+                // branch probability p of the "slow" branch. Target CoV ≈ 2.5
+                // ⇒ p = 2/(1+CoV²) ≈ 0.275.
+                let target_cov2 = 2.5f64 * 2.5;
+                let p = 2.0 / (1.0 + target_cov2);
+                // Balanced-means H2: branch i has rate λ_i = 2 p_i / mean.
+                let r1 = 2.0 * p / mean_gap;
+                let r2 = 2.0 * (1.0 - p) / mean_gap;
+                while t < duration_s {
+                    let gap = if rng.f64() < p { rng.exp(r1) } else { rng.exp(r2) };
+                    t += gap;
+                    if t >= duration_s {
+                        break;
+                    }
+                    out.push(self.request(&mut rng, &mut id, t));
+                }
+            }
+            Pattern::Bursty => {
+                // ON/OFF: bursts of k requests with tight spacing, separated
+                // by long idle gaps. Parameters chosen so the overall mean
+                // rate is preserved and CoV lands > 4.
+                let burst_size_mean = 12.0;
+                // In-burst spacing is near-concurrent regardless of the
+                // mean rate: Azure bursts are API fan-outs that land
+                // within tens of milliseconds.
+                let tight = (mean_gap / 40.0).min(0.05);
+                // idle gap so that total mean matches `rate`:
+                // E[T_burst_cycle] = burst_size · mean_gap.
+                let idle = burst_size_mean * mean_gap
+                    - (burst_size_mean - 1.0) * tight;
+                while t < duration_s {
+                    t += rng.exp(1.0 / idle);
+                    let k = 1 + rng.below(2 * burst_size_mean as usize - 1);
+                    for _ in 0..k {
+                        if t >= duration_s {
+                            break;
+                        }
+                        out.push(self.request(&mut rng, &mut id, t));
+                        t += rng.exp(1.0 / tight);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn request(&self, rng: &mut Pcg64, id: &mut u64, t: f64) -> Request {
+        *id += 1;
+        Request {
+            id: *id,
+            function: self.function,
+            arrival_s: t,
+            prompt_tokens: GsmLengths::prompt(rng),
+            output_tokens: GsmLengths::output(rng),
+        }
+    }
+}
+
+/// Merge several functions' traces into one time-ordered stream.
+pub fn merge(traces: Vec<Vec<Request>>) -> Vec<Request> {
+    let mut all: Vec<Request> = traces.into_iter().flatten().collect();
+    all.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    all
+}
+
+/// Inter-arrival CoV of a stream (the classification statistic).
+pub fn stream_cov(reqs: &[Request]) -> f64 {
+    if reqs.len() < 3 {
+        return 0.0;
+    }
+    let gaps: Vec<f64> = reqs
+        .windows(2)
+        .map(|w| w[1].arrival_s - w[0].arrival_s)
+        .collect();
+    crate::util::stats::cov(&gaps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(pattern: Pattern) -> Vec<Request> {
+        TraceSpec::new(0, pattern, 0.5, 42).generate(4.0 * 3600.0)
+    }
+
+    #[test]
+    fn covs_land_in_their_bands() {
+        for p in Pattern::ALL {
+            let reqs = gen(p);
+            let cov = stream_cov(&reqs);
+            let (lo, hi) = p.cov_band();
+            assert!(
+                cov > lo && cov <= hi.min(1e9),
+                "{}: cov={cov} not in ({lo}, {hi})",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn mean_rate_approximately_preserved() {
+        for p in Pattern::ALL {
+            let reqs = gen(p);
+            let rate = reqs.len() as f64 / (4.0 * 3600.0);
+            assert!(
+                (rate - 0.5).abs() < 0.2,
+                "{}: rate={rate}",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn arrivals_sorted_and_in_range() {
+        for p in Pattern::ALL {
+            let reqs = gen(p);
+            for w in reqs.windows(2) {
+                assert!(w[1].arrival_s >= w[0].arrival_s);
+            }
+            assert!(reqs.iter().all(|r| r.arrival_s < 4.0 * 3600.0));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TraceSpec::new(1, Pattern::Bursty, 1.0, 7).generate(600.0);
+        let b = TraceSpec::new(1, Pattern::Bursty, 1.0, 7).generate(600.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        }
+    }
+
+    #[test]
+    fn lengths_in_gsm8k_like_range() {
+        let reqs = gen(Pattern::Normal);
+        let pm: f64 = reqs.iter().map(|r| r.prompt_tokens as f64).sum::<f64>()
+            / reqs.len() as f64;
+        let om: f64 = reqs.iter().map(|r| r.output_tokens as f64).sum::<f64>()
+            / reqs.len() as f64;
+        assert!((45.0..80.0).contains(&pm), "prompt mean {pm}");
+        assert!((55.0..100.0).contains(&om), "output mean {om}");
+    }
+
+    #[test]
+    fn merge_sorts_globally() {
+        let a = TraceSpec::new(0, Pattern::Normal, 0.5, 1).generate(100.0);
+        let b = TraceSpec::new(1, Pattern::Bursty, 0.5, 2).generate(100.0);
+        let m = merge(vec![a.clone(), b.clone()]);
+        assert_eq!(m.len(), a.len() + b.len());
+        for w in m.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+    }
+}

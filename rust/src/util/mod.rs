@@ -1,0 +1,9 @@
+//! Dependency-free utilities: deterministic RNG, statistics, JSON, tables.
+//! (The sandbox vendors only the `xla` crate tree, so the usual helpers —
+//! `rand`, `serde`, `criterion` — are reimplemented here at the scale this
+//! project needs.)
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,135 @@
+//! Streaming/summary statistics used by the metrics layer and the
+//! trace-generator calibration tests: mean, variance, CoV, percentiles, CDF.
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Percentile by linear interpolation on the sorted sample (inclusive).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+    Summary {
+        count: xs.len(),
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        p50: percentile(&sorted, 0.50),
+        p90: percentile(&sorted, 0.90),
+        p95: percentile(&sorted, 0.95),
+        p99: percentile(&sorted, 0.99),
+    }
+}
+
+/// Coefficient of variation (std/mean) — the statistic the paper uses to
+/// classify Azure traces into Predictable / Normal / Bursty.
+pub fn cov(xs: &[f64]) -> f64 {
+    let s = summarize(xs);
+    if s.mean == 0.0 {
+        0.0
+    } else {
+        s.std / s.mean
+    }
+}
+
+/// Empirical CDF evaluated at the given thresholds: fraction of samples <= t.
+pub fn cdf_at(xs: &[f64], thresholds: &[f64]) -> Vec<f64> {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    thresholds
+        .iter()
+        .map(|t| {
+            let k = sorted.partition_point(|x| x <= t);
+            k as f64 / sorted.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// Fraction of samples strictly above the threshold (e.g. SLO violations).
+pub fn frac_above(xs: &[f64], threshold: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().filter(|&&x| x > threshold).count() as f64 / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert!((percentile(&xs, 0.25) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_constant_series() {
+        let s = summarize(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p99, 2.0);
+    }
+
+    #[test]
+    fn cov_exponential_is_one() {
+        use crate::util::rng::Pcg64;
+        let mut r = Pcg64::new(1);
+        let xs: Vec<f64> = (0..30_000).map(|_| r.exp(3.0)).collect();
+        assert!((cov(&xs) - 1.0).abs() < 0.03, "cov={}", cov(&xs));
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let xs = [1.0, 2.0, 3.0];
+        let c = cdf_at(&xs, &[0.5, 1.5, 2.5, 3.5]);
+        assert_eq!(c, vec![0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0]);
+    }
+
+    #[test]
+    fn frac_above_works() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(frac_above(&xs, 2.5), 0.5);
+        assert_eq!(frac_above(&xs, 10.0), 0.0);
+        assert_eq!(frac_above(&[], 1.0), 0.0);
+    }
+
+    #[test]
+    fn empty_summary_is_default() {
+        assert_eq!(summarize(&[]).count, 0);
+    }
+}

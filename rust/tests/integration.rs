@@ -1,0 +1,318 @@
+//! Cross-module integration tests: full simulations at reduced scale
+//! asserting the paper's *ordering* claims end-to-end, plus invariant
+//! checks that span coordinator + cluster + sim.
+
+use serverless_lora::artifact::{ArtifactKind, FunctionSpec, ModelProfile};
+use serverless_lora::cluster::Cluster;
+use serverless_lora::coordinator::{
+    DynamicOffloader, FunctionDemand, Placement, PreloadScheduler,
+};
+use serverless_lora::cost::relative_cost_effectiveness;
+use serverless_lora::sharing::BackboneRegistry;
+use serverless_lora::sim::workloads::{paper_workload, throughput_workload};
+use serverless_lora::sim::{Engine, SystemConfig, Workload};
+use serverless_lora::trace::Pattern;
+use serverless_lora::util::rng::Pcg64;
+
+fn run(cfg: SystemConfig, w: Workload, gpus: usize) -> (
+    serverless_lora::metrics::RunMetrics,
+    serverless_lora::cost::CostTracker,
+    serverless_lora::sim::RunStats,
+) {
+    Engine::new(cfg, Cluster::new(1, gpus, 2 * gpus), w, 7).run()
+}
+
+// ---------------------------------------------------------------- headline
+
+/// The abstract's headline: TTFT reduced up to ~86% (≈ 4.7–7.1×) vs the
+/// serverless baselines. At our reduced scale we require ≥ 2× on the mean.
+#[test]
+fn headline_ttft_reduction() {
+    let w = paper_workload(Pattern::Normal, 2400.0, 5);
+    let (lora, _, _) = run(SystemConfig::serverless_lora(), w.clone(), 16);
+    let (sllm, _, _) = run(SystemConfig::serverless_llm(), w.clone(), 16);
+    let (insta, _, _) = run(SystemConfig::instainfer(Pattern::Normal), w, 16);
+    assert!(
+        sllm.ttft().mean / lora.ttft().mean > 2.0,
+        "vs ServerlessLLM: {:.2}x",
+        sllm.ttft().mean / lora.ttft().mean
+    );
+    assert!(
+        insta.ttft().mean / lora.ttft().mean > 2.0,
+        "vs InstaInfer: {:.2}x",
+        insta.ttft().mean / lora.ttft().mean
+    );
+}
+
+/// The abstract's cost headline: monetary cost cut by a multiple vs the
+/// serverless baselines.
+#[test]
+fn headline_cost_reduction() {
+    let w = paper_workload(Pattern::Normal, 2400.0, 5);
+    let (_, lc, _) = run(SystemConfig::serverless_lora(), w.clone(), 16);
+    let (_, sc, _) = run(SystemConfig::serverless_llm(), w.clone(), 16);
+    let (_, ic, _) = run(SystemConfig::instainfer(Pattern::Normal), w, 16);
+    assert!(
+        sc.total_usd() / lc.total_usd() > 1.5,
+        "vs ServerlessLLM: {:.2}x",
+        sc.total_usd() / lc.total_usd()
+    );
+    assert!(
+        ic.total_usd() / lc.total_usd() > 1.5,
+        "vs InstaInfer: {:.2}x",
+        ic.total_usd() / lc.total_usd()
+    );
+}
+
+/// Fig. 9 / Table 1: ServerlessLoRA's relative cost-effectiveness beats
+/// every baseline on every arrival pattern.
+#[test]
+fn cost_effectiveness_wins_every_pattern() {
+    for pattern in Pattern::ALL {
+        let w = paper_workload(pattern, 2400.0, 5);
+        let (vm, vc, _) = run(SystemConfig::vllm(), w.clone(), 16);
+        let rel = |cfg: SystemConfig| {
+            let (m, c, _) = run(cfg, w.clone(), 16);
+            relative_cost_effectiveness(
+                m.e2e().mean,
+                c.total_usd(),
+                vm.e2e().mean,
+                vc.total_usd(),
+            )
+        };
+        let lora = rel(SystemConfig::serverless_lora());
+        assert!(lora > 1.0, "{}: lora rel-CE {lora}", pattern.name());
+        for cfg in [
+            SystemConfig::dlora(),
+            SystemConfig::serverless_llm(),
+            SystemConfig::instainfer(pattern),
+        ] {
+            let name = cfg.name;
+            let other = rel(cfg);
+            assert!(
+                lora > other,
+                "{}: {name} {other} >= lora {lora}",
+                pattern.name()
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------- conservation
+
+/// Request conservation across every system and pattern: arrived ==
+/// completed (the simulator must never lose or duplicate requests).
+#[test]
+fn request_conservation_all_systems() {
+    let w = paper_workload(Pattern::Bursty, 1200.0, 9);
+    let n = w.requests.len();
+    for cfg in [
+        SystemConfig::serverless_lora(),
+        SystemConfig::serverless_llm(),
+        SystemConfig::instainfer(Pattern::Bursty),
+        SystemConfig::vllm(),
+        SystemConfig::dlora(),
+        SystemConfig::nbs(),
+        SystemConfig::npl(),
+        SystemConfig::ndo(),
+        SystemConfig::nab(1),
+        SystemConfig::nab(2),
+        SystemConfig::nab(3),
+    ] {
+        let name = cfg.name;
+        let (m, _, _) = run(cfg, w.clone(), 16);
+        assert_eq!(m.outcomes.len(), n, "{name} lost requests");
+        let mut ids: Vec<u64> = m.outcomes.iter().map(|o| o.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "{name} duplicated requests");
+    }
+}
+
+/// Memory safety under sustained saturation: the ledgers' OOM checks
+/// never fire as panics (over-commit is impossible by construction).
+#[test]
+fn saturation_never_overcommits() {
+    let w = throughput_workload(180.0, 3);
+    for cfg in [SystemConfig::serverless_lora(), SystemConfig::serverless_llm()] {
+        let (m, _, _) = run(cfg, w.clone(), 2);
+        assert!(!m.outcomes.is_empty());
+    }
+}
+
+// ---------------------------------------------------- property-based sweeps
+
+/// Property sweep: random small deployments — the preload plan NEVER
+/// exceeds any capacity and NEVER violates placement rules.
+#[test]
+fn preload_plan_invariants_random_sweep() {
+    let mut rng = Pcg64::new(0xBEEF);
+    for trial in 0..40 {
+        let n_fns = 1 + rng.below(10);
+        let n_gpus = 1 + rng.below(4);
+        let n_ctrs = 1 + rng.below(4);
+        let demands: Vec<FunctionDemand> = (0..n_fns)
+            .map(|i| {
+                let model = if rng.f64() < 0.5 {
+                    ModelProfile::llama2_7b()
+                } else {
+                    ModelProfile::llama2_13b()
+                };
+                FunctionDemand {
+                    spec: FunctionSpec::new(i, model, i % 4),
+                    rate: rng.uniform(0.001, 0.5),
+                }
+            })
+            .collect();
+        let cluster = Cluster::new(1, n_gpus, n_ctrs);
+        let registry = BackboneRegistry::new();
+        let plan = PreloadScheduler::default().plan(&demands, &cluster, &registry);
+
+        // Capacity per GPU (shared backbones paid once per model).
+        for g in cluster.gpu_ids() {
+            let mut used = 0.0;
+            let mut paid_models = std::collections::BTreeSet::new();
+            for d in &plan.decisions {
+                if d.placement == Placement::Gpu(g) {
+                    if d.kind == ArtifactKind::Backbone {
+                        let model = demands
+                            .iter()
+                            .find(|x| x.spec.id == d.function)
+                            .unwrap()
+                            .spec
+                            .model
+                            .name;
+                        if paid_models.insert(model) {
+                            used += d.size_gb;
+                        }
+                    } else {
+                        used += d.size_gb;
+                    }
+                }
+            }
+            assert!(
+                used <= cluster.gpu(g).free_gb() + 1e-6,
+                "trial {trial}: GPU {g} overcommitted {used}"
+            );
+        }
+        // Placement rules.
+        for d in &plan.decisions {
+            match (d.kind, d.placement) {
+                (ArtifactKind::Library, Placement::Gpu(_)) => {
+                    panic!("trial {trial}: library on GPU")
+                }
+                (ArtifactKind::CudaKernel, Placement::Container(_)) => {
+                    panic!("trial {trial}: kernel in container")
+                }
+                _ => {}
+            }
+        }
+        // Apply must succeed exactly as planned (no panic).
+        let mut c2 = Cluster::new(1, n_gpus, n_ctrs);
+        let mut r2 = BackboneRegistry::new();
+        PreloadScheduler::default().apply(&plan, &demands, &mut c2, &mut r2);
+    }
+}
+
+/// Property sweep: the offloader frees at least the requested amount or
+/// exhausts every evictable artifact, never touching protected functions.
+#[test]
+fn offloader_invariants_random_sweep() {
+    let mut rng = Pcg64::new(0xF00D);
+    for trial in 0..60 {
+        let mut cluster = Cluster::new(1, 1, 1);
+        let mut registry = BackboneRegistry::new();
+        let g = cluster.gpu_ids()[0];
+        let n_fns = 1 + rng.below(8);
+        for f in 0..n_fns {
+            let _ = cluster.gpu_mut(g).place_artifact(
+                f,
+                ArtifactKind::Adapter,
+                rng.uniform(0.05, 0.4),
+            );
+            let _ = cluster.gpu_mut(g).place_artifact(
+                f,
+                ArtifactKind::CudaKernel,
+                rng.uniform(0.2, 0.8),
+            );
+        }
+        if rng.f64() < 0.5 {
+            registry
+                .load(&mut cluster, "llama2-7b", 13.5, g)
+                .unwrap();
+        }
+        let protected = vec![0usize];
+        let free_before = cluster.gpu(g).free_gb();
+        let need = free_before + rng.uniform(0.1, 5.0);
+        let evictable_total: f64 = DynamicOffloader::evictable(
+            &cluster, &registry, g, &protected, |_, _| 1.0,
+        )
+        .iter()
+        .map(|e| e.size_gb)
+        .sum();
+        let noise = rng.uniform(0.1, 10.0);
+        let plan = DynamicOffloader::free(
+            &mut cluster,
+            &mut registry,
+            g,
+            need,
+            &protected,
+            move |f, _| noise * (1.0 + f.unwrap_or(0) as f64),
+            None,
+        );
+        let free_after = cluster.gpu(g).free_gb();
+        if plan.satisfied {
+            assert!(
+                free_after >= need - 1e-6,
+                "trial {trial}: satisfied but {free_after} < {need}"
+            );
+        } else {
+            assert!(
+                (free_after - (free_before + evictable_total)).abs() < 1e-6,
+                "trial {trial}: unsatisfied but not fully drained"
+            );
+        }
+        // Protected artifacts intact.
+        assert!(cluster.gpu(g).has_artifact(0, ArtifactKind::Adapter));
+        assert!(cluster.gpu(g).has_artifact(0, ArtifactKind::CudaKernel));
+    }
+}
+
+/// Property sweep: the batcher never admits a batch whose predicted TTFT
+/// (Eq. 2) violates the SLO, for random queue states.
+#[test]
+fn batcher_never_plans_slo_violation() {
+    use serverless_lora::coordinator::{BatchQueue, Queued};
+    let mut rng = Pcg64::new(0xCAFE);
+    for _ in 0..200 {
+        let model = if rng.f64() < 0.5 {
+            ModelProfile::llama2_7b()
+        } else {
+            ModelProfile::llama2_13b()
+        };
+        let mut q = BatchQueue::new(0, &model);
+        let n = 1 + rng.below(120);
+        for i in 0..n {
+            q.push(Queued { request: i as u64, arrival_s: rng.uniform(0.0, 2.0) });
+        }
+        let batch = q.take_batch(usize::MAX);
+        assert!(
+            q.predicted_ttft(batch.len()) <= q.slo_s + 1e-9,
+            "batch {} exceeds SLO plan",
+            batch.len()
+        );
+    }
+}
+
+/// Simulator determinism across systems: same seed ⇒ identical metrics.
+#[test]
+fn determinism_sweep() {
+    let w = paper_workload(Pattern::Bursty, 900.0, 11);
+    for cfg in [SystemConfig::serverless_lora(), SystemConfig::instainfer(Pattern::Bursty)] {
+        let (m1, c1, _) = run(cfg.clone(), w.clone(), 8);
+        let (m2, c2, _) = run(cfg, w.clone(), 8);
+        assert_eq!(m1.outcomes.len(), m2.outcomes.len());
+        assert_eq!(m1.ttft().mean.to_bits(), m2.ttft().mean.to_bits());
+        assert_eq!(c1.total_usd().to_bits(), c2.total_usd().to_bits());
+    }
+}
