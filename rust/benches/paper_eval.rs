@@ -6,22 +6,50 @@
 //! vendored in this environment, so this is a plain `harness = false`
 //! bench binary.
 //!
+//! Alongside the printed tables it writes `BENCH_sim.json`: per-experiment
+//! wall-clock, output digests, and headline metrics, so the perf
+//! trajectory is tracked across PRs by machines as well as humans.
+//!
 //! Usage:
 //!   cargo bench                 quick mode (1-hour traces)
 //!   cargo bench -- --full       full mode (the paper's 4-hour traces)
 //!   cargo bench -- fig6 tab2    run a subset
+//!   cargo bench -- --jobs 4     fan independent sim runs over 4 threads
+//!                               (identical tables, lower wall-clock)
 
 use std::time::Instant;
 
 use serverless_lora::exp;
+use serverless_lora::util::hash::fnv1a;
+use serverless_lora::util::json::{arr, num, obj, s, Json};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let full = args.iter().any(|a| a == "--full");
+    let jobs: usize = args
+        .iter()
+        .position(|a| a == "--jobs")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .or_else(|| {
+            args.iter()
+                .find_map(|a| a.strip_prefix("--jobs=").and_then(|v| v.parse().ok()))
+        })
+        .unwrap_or(1);
+    exp::runner::set_jobs(jobs);
+    // Experiment ids are the bare tokens, minus the value consumed by a
+    // space-separated `--jobs N` (it would otherwise be dropped by the
+    // registry filter anyway, but skipping it keeps the intent explicit).
+    let jobs_value_idx = args
+        .iter()
+        .position(|a| a == "--jobs")
+        .map(|i| i + 1)
+        .unwrap_or(usize::MAX);
     let ids: Vec<&str> = args
         .iter()
-        .filter(|a| !a.starts_with("--"))
-        .map(String::as_str)
+        .enumerate()
+        .filter(|&(i, a)| i != jobs_value_idx && !a.starts_with("--"))
+        .map(|(_, a)| a.as_str())
         .filter(|a| exp::ALL_EXPERIMENTS.contains(a))
         .collect();
     let ids: Vec<&str> = if ids.is_empty() {
@@ -31,16 +59,40 @@ fn main() {
     };
 
     println!(
-        "ServerlessLoRA paper-evaluation bench ({} mode, {} experiments)\n",
+        "ServerlessLoRA paper-evaluation bench ({} mode, {} experiments, {} job{})\n",
         if full { "FULL 4h" } else { "quick 1h" },
-        ids.len()
+        ids.len(),
+        jobs,
+        if jobs == 1 { "" } else { "s" }
     );
     let t_all = Instant::now();
+    let mut records: Vec<Json> = Vec::new();
     for id in ids {
         let t0 = Instant::now();
         let report = exp::run_experiment(id, !full);
+        let wall = t0.elapsed().as_secs_f64();
         print!("{report}");
-        println!("[{id} took {:.1}s]\n", t0.elapsed().as_secs_f64());
+        println!("[{id} took {wall:.1}s]\n");
+        records.push(obj(vec![
+            ("id", s(id)),
+            ("wall_s", num(wall)),
+            ("out_bytes", num(report.len() as f64)),
+            ("digest", s(&format!("{:016x}", fnv1a(report.as_bytes())))),
+        ]));
     }
-    println!("total bench time: {:.1}s", t_all.elapsed().as_secs_f64());
+    let total = t_all.elapsed().as_secs_f64();
+    println!("total bench time: {total:.1}s");
+
+    let doc = obj(vec![
+        ("mode", s(if full { "full" } else { "quick" })),
+        ("jobs", num(jobs as f64)),
+        ("total_s", num(total)),
+        ("experiments", arr(records)),
+        ("headline", exp::headline_json()),
+    ]);
+    let path = "BENCH_sim.json";
+    match std::fs::write(path, doc.dump() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

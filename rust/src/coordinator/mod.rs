@@ -7,12 +7,19 @@
 pub mod batching;
 pub mod keepalive;
 pub mod offload;
+pub mod policy;
 pub mod preload;
 pub mod router;
 
 pub use batching::{BatchQueue, FixedBatchQueue, Queued};
 pub use keepalive::KeepAlive;
 pub use offload::{DynamicOffloader, OffloadPlan};
+pub use policy::{
+    AdaptiveBatching, BatchingPolicy, BillingModel, DynamicOffload, FastCheckpointPreload,
+    FixedBatching, FullPreload, GpuBillSample, LoadQuery, NoOffload, NoPreload,
+    OffloadPolicy, OpportunisticPreload, PolicyBundle, PolicyEnv, PredictivePreload,
+    PreloadPolicy, ServerfulBilling, ServerfulResident, ServerlessBilling,
+};
 pub use preload::{
     exact_plan, Decision, FunctionDemand, Placement, PreloadPlan, PreloadScheduler,
 };

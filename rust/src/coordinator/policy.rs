@@ -1,0 +1,1120 @@
+//! Pluggable scheduling-policy layer.
+//!
+//! The paper's contribution is a set of *policies* — PCKP pre-loading
+//! (§4.1), two-layer adaptive batching (§4.2), dynamic offloading (§4.3),
+//! event-integrated billing (§6.1/§6.4) — layered over a serving
+//! substrate. This module turns each of those into a trait so that every
+//! system under test (ServerlessLoRA, the baselines, the NBS/NPL/NDO/NAB
+//! ablations, and new systems like the predictive pre-loader) is a
+//! *policy bundle* constructed by `sim::config::SystemConfig::bundle`,
+//! and the discrete-event engine core contains no per-system branches.
+//!
+//! Layering: policies sit between the coordinator algorithms they wrap
+//! (`PreloadScheduler`, `BatchQueue`, `DynamicOffloader`) and the engine
+//! that consults them. They mutate the substrate only through
+//! [`PolicyEnv`], never through the event loop. See DESIGN.md §3.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::artifact::{params, ArtifactKind, FunctionSpec, ModelProfile};
+use crate::cluster::{Cluster, ContainerId, GpuId};
+use crate::coordinator::batching::BatchQueue;
+use crate::coordinator::offload::{DynamicOffloader, OffloadPlan};
+use crate::coordinator::preload::{FunctionDemand, Placement, PreloadScheduler};
+use crate::coordinator::router::{Readiness, Router};
+use crate::cost::CostTracker;
+use crate::metrics::{Phase, RunStats};
+use crate::sharing::BackboneRegistry;
+use crate::util::rng::Pcg64;
+
+// ---------------------------------------------------------------- contexts
+
+/// Mutable view over the substrate for deployment-time and runtime policy
+/// hooks. Policies stage artifacts and record stats through this; the
+/// engine's event loop never appears in a policy signature.
+pub struct PolicyEnv<'a> {
+    pub cluster: &'a mut Cluster,
+    pub registry: &'a mut BackboneRegistry,
+    pub functions: &'a [FunctionSpec],
+    /// Mean arrival rate per function (the §4.1 benefit input).
+    pub rates: &'a [f64],
+    /// §4.4 backbone sharing — a substrate property (how memory is
+    /// accounted), not a per-event decision, hence carried here.
+    pub sharing: bool,
+    /// Serverful function → dedicated GPU map (filled by resident
+    /// deployment policies; consulted by the router).
+    pub dedicated: &'a mut BTreeMap<usize, GpuId>,
+    pub stats: &'a mut RunStats,
+}
+
+/// Everything a pre-load policy may consult when pricing one cold start.
+/// All fields are plain values — the dispatch layer snapshots the ledger
+/// state so policies stay side-effect-free here.
+pub struct LoadQuery<'a> {
+    pub function: usize,
+    pub model: &'a ModelProfile,
+    pub ready: Readiness,
+    /// Instance is warm: keep-alive-warm with a live CUDA context, or
+    /// pre-warmed by the policy (see [`PreloadPolicy::prewarmed`]).
+    pub warm_instance: bool,
+    /// Some container holds this function's libraries.
+    pub container_has_library: bool,
+    /// Some container holds this function's adapter.
+    pub container_has_adapter: bool,
+    /// Some container holds this function's *own* backbone copy
+    /// (InstaInfer-style per-slot staging).
+    pub container_has_own_backbone: bool,
+    /// Some container holds a backbone copy of this *model* (staging
+    /// copies are per-model: any same-model function can read them).
+    pub container_has_model_backbone: bool,
+}
+
+// ------------------------------------------------------------------ traits
+
+/// §4.1 artifact staging: what is resident before an invocation arrives,
+/// and what latency each remaining cold-start phase costs.
+pub trait PreloadPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Deployment-time staging, before the first arrival.
+    fn deploy(&mut self, env: &mut PolicyEnv);
+
+    /// Runtime hook on every request arrival (forecast updates for
+    /// predictive policies). Default: nothing.
+    fn on_arrival(&mut self, _function: usize, _now_s: f64, _env: &mut PolicyEnv) {}
+
+    /// Do this function's artifacts survive the keep-alive teardown of
+    /// its instance? True when they belong to the provider-side agent
+    /// (§2.4), not to the user instance.
+    fn retains_artifacts(&self, _function: usize) -> bool {
+        false
+    }
+
+    /// A fully pre-staged process runs at warm speed — the §6.3 claim
+    /// that a pre-loaded cold start matches a warm start.
+    fn prewarmed(&self, _ready: Readiness) -> bool {
+        false
+    }
+
+    /// Kernel-state latency a scale-out instance pays (a dispatch while
+    /// the function already has in-flight batches starts a new process:
+    /// fresh CUDA context, fresh per-context kernel handles).
+    fn scaleout_kernel_s(&self, _function: usize, m: &ModelProfile) -> f64 {
+        m.kernel_jit_s
+    }
+
+    /// Cold-start phase → latency map for one dispatch. Ledger mutation
+    /// (making artifacts resident) is done by the dispatch layer from the
+    /// same `Readiness`; this prices it.
+    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64>;
+}
+
+/// §4.2 batching: when a queue fires and how large a batch it wants.
+/// Policies are stateless deciders over the engine-owned [`BatchQueue`]s.
+pub trait BatchingPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Fire-now decision for one queue. `target_idle` lazily reports
+    /// whether the GPU this function routes to has a free prefill slot.
+    fn should_dispatch(&self, q: &BatchQueue, now_s: f64, target_idle: &dyn Fn() -> bool) -> bool;
+
+    /// Earliest future instant at which the queue would time out (event
+    /// wakeup scheduling).
+    fn expiry_time(&self, q: &BatchQueue) -> Option<f64>;
+
+    /// Desired batch size before the memory cap.
+    fn desired_batch(&self, q: &BatchQueue) -> usize;
+
+    /// Eq. 5 deadline-margin prioritisation (adaptive) vs plain FIFO.
+    fn prioritise_by_margin(&self) -> bool;
+}
+
+/// §4.3 memory-pressure resolution at dispatch time.
+pub trait OffloadPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Try to free `need_gb` on `gpu` without touching `protect`.
+    /// `None` ⇒ this policy never evicts; the caller blocks until
+    /// completions free memory (the NDO ablation / baselines).
+    #[allow(clippy::too_many_arguments)]
+    fn try_free(
+        &mut self,
+        cluster: &mut Cluster,
+        registry: &mut BackboneRegistry,
+        gpu: GpuId,
+        need_gb: f64,
+        protect: &[usize],
+        functions: &[FunctionSpec],
+        rates: &[f64],
+        spill: Option<ContainerId>,
+    ) -> Option<OffloadPlan>;
+}
+
+/// One GPU's billable state over an inter-event interval.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuBillSample {
+    /// Resident GB above the runtime reserve.
+    pub used_gb: f64,
+    pub total_gb: f64,
+    /// Executing or loading during the interval.
+    pub active: bool,
+    /// Hosts at least one keep-alive-warm function.
+    pub warm_resident: bool,
+}
+
+/// How resource-time turns into dollars (§6.1 pricing rules).
+pub trait BillingModel: Send {
+    fn name(&self) -> &'static str;
+
+    /// Whether per-interval GPU sampling is needed at all (serverful
+    /// billing is flat and skips the event-integrated path).
+    fn needs_interval(&self) -> bool {
+        true
+    }
+
+    /// Integrate one GPU's cost over a `dt_s`-second interval.
+    fn bill_gpu(&self, s: &GpuBillSample, dt_s: f64, cost: &mut CostTracker);
+
+    /// End-of-run settlement (serverful: dedicated GPU-hours).
+    fn finalize(&self, dedicated_gpus: usize, end_s: f64, cost: &mut CostTracker);
+}
+
+/// The full policy complement one engine run is driven by.
+pub struct PolicyBundle {
+    pub preload: Box<dyn PreloadPolicy>,
+    pub batching: Box<dyn BatchingPolicy>,
+    pub offload: Box<dyn OffloadPolicy>,
+    pub billing: Box<dyn BillingModel>,
+}
+
+// ------------------------------------------------- shared phase helpers
+
+/// Container + process (CUDA context) initialisation phase. Policies that
+/// keep warm containers (`container_cold = false`) pay only the context.
+fn init_phase(q: &LoadQuery, container_cold: bool, phases: &mut BTreeMap<Phase, f64>) {
+    if !q.warm_instance && !q.ready.cuda_context {
+        let mut t = params::CUDA_CONTEXT_INIT_S;
+        if container_cold {
+            t += params::CONTAINER_INIT_S;
+        }
+        phases.insert(Phase::ContainerInit, t);
+    }
+}
+
+/// Adapter load phase — identical across policies: PCIe from a container
+/// copy, SSD otherwise, plus the PEFT-style attach cost.
+fn adapter_phase(q: &LoadQuery, phases: &mut BTreeMap<Phase, f64>) {
+    if !q.ready.adapter_on_gpu {
+        let bw = if q.container_has_adapter {
+            params::BW_PCIE_GBPS
+        } else {
+            params::BW_SSD_GBPS
+        };
+        phases.insert(
+            Phase::AdapterLoad,
+            q.model.adapter_gb / bw + params::ADAPTER_ATTACH_S,
+        );
+    }
+}
+
+// ------------------------------------------------------ preload policies
+
+/// No pre-loading at all (the NPL ablation): every cold start walks the
+/// full path — container, libraries, backbone from SSD (PCIe when a
+/// staging copy exists), adapter, JIT.
+pub struct NoPreload;
+
+impl PreloadPolicy for NoPreload {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn deploy(&mut self, _env: &mut PolicyEnv) {}
+
+    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+        let m = q.model;
+        let mut phases = BTreeMap::new();
+        init_phase(q, true, &mut phases);
+        if !q.warm_instance {
+            phases.insert(
+                Phase::LibraryLoad,
+                m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S,
+            );
+        }
+        if !q.ready.backbone_on_gpu {
+            let t = if q.container_has_model_backbone {
+                m.weights_gb / params::BW_PCIE_GBPS
+            } else {
+                m.weights_gb / params::BW_SSD_GBPS
+            };
+            phases.insert(Phase::BackboneLoad, t);
+        }
+        adapter_phase(q, &mut phases);
+        if !q.ready.kernel_on_gpu && !q.warm_instance {
+            phases.insert(Phase::KernelCompile, m.kernel_jit_s);
+        }
+        phases
+    }
+}
+
+/// ServerlessLLM: no artifact pre-loading, but the multi-tier checkpoint
+/// store makes backbone loads run at PCIe speed.
+pub struct FastCheckpointPreload;
+
+impl PreloadPolicy for FastCheckpointPreload {
+    fn name(&self) -> &'static str {
+        "fast-checkpoint"
+    }
+
+    fn deploy(&mut self, _env: &mut PolicyEnv) {}
+
+    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+        let m = q.model;
+        let mut phases = BTreeMap::new();
+        init_phase(q, true, &mut phases);
+        if !q.warm_instance {
+            phases.insert(
+                Phase::LibraryLoad,
+                m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S,
+            );
+        }
+        if !q.ready.backbone_on_gpu {
+            phases.insert(Phase::BackboneLoad, m.weights_gb / params::BW_PCIE_GBPS);
+        }
+        adapter_phase(q, &mut phases);
+        if !q.ready.kernel_on_gpu && !q.warm_instance {
+            phases.insert(Phase::KernelCompile, m.kernel_jit_s);
+        }
+        phases
+    }
+}
+
+/// InstaInfer: opportunistically pre-loads libraries + models into idle
+/// containers' RAM. Its time-series predictor churns: a mispredicted cold
+/// start first waits out the in-flight preload of *another* function.
+pub struct OpportunisticPreload {
+    pub hit_rate: f64,
+    rng: Pcg64,
+}
+
+impl OpportunisticPreload {
+    /// The rng stream constant matches the engine's historical insta-churn
+    /// stream, preserving bit-exact metrics across the policy refactor.
+    pub fn new(hit_rate: f64, seed: u64) -> Self {
+        OpportunisticPreload { hit_rate, rng: Pcg64::with_stream(seed, 0x51f7) }
+    }
+}
+
+impl PreloadPolicy for OpportunisticPreload {
+    fn name(&self) -> &'static str {
+        "container-opportunistic"
+    }
+
+    /// Libraries + backbone + adapter into idle containers' RAM (one
+    /// function per container slot, round-robin).
+    fn deploy(&mut self, env: &mut PolicyEnv) {
+        let cids = env.cluster.container_ids();
+        for (i, spec) in env.functions.iter().enumerate() {
+            let cid = cids[i % cids.len()];
+            let c = env.cluster.container_mut(cid);
+            let _ = c.place(spec.id, ArtifactKind::Library, spec.model.library_gb);
+            let _ = c.place(spec.id, ArtifactKind::Backbone, spec.model.weights_gb);
+            let _ = c.place(spec.id, ArtifactKind::Adapter, spec.model.adapter_gb);
+        }
+    }
+
+    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+        let m = q.model;
+        let mut phases = BTreeMap::new();
+        // Predictor outcome for this cold start (one draw per cold start,
+        // in dispatch order — the determinism contract).
+        let mut insta_hit = true;
+        if !q.warm_instance {
+            insta_hit = self.rng.f64() < self.hit_rate;
+            if !insta_hit {
+                *phases.entry(Phase::Queue).or_insert(0.0) +=
+                    m.weights_gb / params::BW_SSD_GBPS;
+            }
+        }
+        init_phase(q, false, &mut phases);
+        if !q.warm_instance {
+            let t = if insta_hit && q.container_has_library {
+                params::LIBRARY_WARM_IMPORT_S
+            } else {
+                m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S
+            };
+            phases.insert(Phase::LibraryLoad, t);
+        }
+        if !q.ready.backbone_on_gpu {
+            let t = if insta_hit && q.container_has_own_backbone {
+                m.weights_gb / params::BW_PCIE_GBPS
+            } else {
+                m.weights_gb / params::BW_SSD_GBPS + m.weights_gb / params::BW_PCIE_GBPS
+            };
+            phases.insert(Phase::BackboneLoad, t);
+        }
+        adapter_phase(q, &mut phases);
+        if !q.ready.kernel_on_gpu && !q.warm_instance {
+            // InstaInfer never pre-compiles kernels.
+            phases.insert(Phase::KernelCompile, m.kernel_jit_s);
+        }
+        phases
+    }
+}
+
+/// ServerlessLoRA §4.1: full PCKP pre-loading at deployment time —
+/// libraries into containers, backbone + adapter + kernels onto GPUs,
+/// CUDA contexts pre-warmed by the Pre-Loading Agent.
+pub struct FullPreload;
+
+impl FullPreload {
+    /// Stage one container copy of each model's backbone so on-demand
+    /// *replicas* (contention relief) load over PCIe rather than SSD.
+    fn stage_backbone_copies(env: &mut PolicyEnv) {
+        let mut staged: BTreeSet<&str> = BTreeSet::new();
+        let cids = env.cluster.container_ids();
+        for (i, spec) in env.functions.iter().enumerate() {
+            if staged.insert(spec.model.name) {
+                let cid = cids[i % cids.len()];
+                let _ = env.cluster.container_mut(cid).place(
+                    spec.id,
+                    ArtifactKind::Backbone,
+                    spec.model.weights_gb,
+                );
+            }
+        }
+    }
+}
+
+impl PreloadPolicy for FullPreload {
+    fn name(&self) -> &'static str {
+        "full-pckp"
+    }
+
+    fn deploy(&mut self, env: &mut PolicyEnv) {
+        let demands: Vec<FunctionDemand> = env
+            .functions
+            .iter()
+            .zip(env.rates)
+            .map(|(spec, &rate)| FunctionDemand { spec: spec.clone(), rate })
+            .collect();
+        let sched = PreloadScheduler::default();
+        let plan = sched.plan(&demands, env.cluster, env.registry);
+        if env.sharing {
+            sched.apply(&plan, &demands, env.cluster, env.registry);
+        } else {
+            // NBS ablation: the same plan, but every function pays for a
+            // *private* backbone copy (best-effort under memory).
+            for d in &plan.decisions {
+                let spec = &env.functions[d.function];
+                match (d.kind, d.placement) {
+                    (ArtifactKind::Backbone, Placement::Gpu(g)) => {
+                        let _ = env.cluster.gpu_mut(g).place_artifact(
+                            d.function,
+                            ArtifactKind::Backbone,
+                            spec.model.weights_gb,
+                        );
+                    }
+                    (k, Placement::Gpu(g)) => {
+                        let _ = env.cluster.gpu_mut(g).place_artifact(d.function, k, d.size_gb);
+                    }
+                    (k, Placement::Container(cid)) => {
+                        let _ = env.cluster.container_mut(cid).place(d.function, k, d.size_gb);
+                    }
+                }
+            }
+        }
+        env.stats.preload_decisions = plan.decisions.len();
+        Self::stage_backbone_copies(env);
+        // Pre-warm the process (CUDA context) where each kernel landed.
+        for d in &plan.decisions {
+            if let (ArtifactKind::CudaKernel, Placement::Gpu(g)) = (d.kind, d.placement) {
+                let _ = env.cluster.gpu_mut(g).create_cuda_context(d.function);
+            }
+        }
+    }
+
+    /// Artifacts belong to the Pre-Loading Agent and survive instance
+    /// keep-alive expiry (§2.4 "pre-loading without extra wastage").
+    fn retains_artifacts(&self, _function: usize) -> bool {
+        true
+    }
+
+    /// Kernels compiled + context created ⇒ warm-start speed (§6.3).
+    fn prewarmed(&self, ready: Readiness) -> bool {
+        ready.cuda_context && ready.kernel_on_gpu
+    }
+
+    /// Full pre-loading keeps a warm kernel cache even for a scale-out
+    /// process instance.
+    fn scaleout_kernel_s(&self, _function: usize, m: &ModelProfile) -> f64 {
+        m.kernel_cache_load_s
+    }
+
+    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+        let m = q.model;
+        let mut phases = BTreeMap::new();
+        init_phase(q, false, &mut phases);
+        if !q.warm_instance {
+            phases.insert(Phase::LibraryLoad, params::LIBRARY_WARM_IMPORT_S);
+        }
+        if !q.ready.backbone_on_gpu {
+            // Replica loads come from the staged host-RAM copy when one
+            // exists (PCIe), else from SSD.
+            let t = if q.container_has_model_backbone {
+                m.weights_gb / params::BW_PCIE_GBPS
+            } else {
+                m.weights_gb / params::BW_SSD_GBPS
+            };
+            phases.insert(Phase::BackboneLoad, t);
+        }
+        adapter_phase(q, &mut phases);
+        if !q.ready.kernel_on_gpu && !q.warm_instance {
+            phases.insert(Phase::KernelCompile, m.kernel_cache_load_s);
+        }
+        phases
+    }
+}
+
+/// Serverful deployment (vLLM / dLoRA): dedicate GPUs and make everything
+/// resident up-front. vLLM: one deployment per function. dLoRA: one per
+/// backbone model (its adapters share the backbone in-process).
+pub struct ServerfulResident;
+
+impl PreloadPolicy for ServerfulResident {
+    fn name(&self) -> &'static str {
+        "serverful-resident"
+    }
+
+    fn deploy(&mut self, env: &mut PolicyEnv) {
+        let gpu_ids = env.cluster.gpu_ids();
+        if env.sharing {
+            // dLoRA: GPU per distinct model.
+            let mut model_gpu: BTreeMap<&str, GpuId> = BTreeMap::new();
+            let mut next = 0;
+            for spec in env.functions {
+                let m = &spec.model;
+                let g = *model_gpu.entry(m.name).or_insert_with(|| {
+                    let g = gpu_ids[next % gpu_ids.len()];
+                    next += 1;
+                    g
+                });
+                env.registry.load(env.cluster, m.name, m.weights_gb, g).unwrap();
+                let gpu = env.cluster.gpu_mut(g);
+                gpu.place_artifact(spec.id, ArtifactKind::Adapter, m.adapter_gb).unwrap();
+                gpu.place_artifact(spec.id, ArtifactKind::CudaKernel, m.kernel_gb).unwrap();
+                gpu.create_cuda_context(spec.id).unwrap();
+                env.dedicated.insert(spec.id, g);
+            }
+        } else {
+            // vLLM: GPU per function, private backbone.
+            for (i, spec) in env.functions.iter().enumerate() {
+                let m = &spec.model;
+                let g = gpu_ids[i % gpu_ids.len()];
+                let gpu = env.cluster.gpu_mut(g);
+                gpu.place_artifact(spec.id, ArtifactKind::Backbone, m.weights_gb).unwrap();
+                gpu.place_artifact(spec.id, ArtifactKind::Adapter, m.adapter_gb).unwrap();
+                gpu.place_artifact(spec.id, ArtifactKind::CudaKernel, m.kernel_gb).unwrap();
+                gpu.create_cuda_context(spec.id).unwrap();
+                env.dedicated.insert(spec.id, g);
+            }
+        }
+    }
+
+    fn retains_artifacts(&self, _function: usize) -> bool {
+        true // moot: serverful instances never expire
+    }
+
+    /// Everything is resident; dispatch never pays a load phase.
+    fn load_phases(&mut self, _q: &LoadQuery) -> BTreeMap<Phase, f64> {
+        BTreeMap::new()
+    }
+}
+
+/// Predictive pre-loading — the plug-in proof of the policy API, in the
+/// spirit of Predictive-LoRA: a per-function EWMA arrival-rate forecast;
+/// functions whose forecast crosses a threshold are pre-staged (backbone,
+/// adapter, kernels, CUDA context) ahead of the predicted burst, and fall
+/// back to the ordinary keep-alive lifecycle when demand fades.
+pub struct PredictivePreload {
+    /// EWMA smoothing factor for instantaneous-rate samples.
+    pub alpha: f64,
+    /// Forecast rate (req/s) above which a function is pre-staged.
+    pub threshold: f64,
+    ewma: BTreeMap<usize, f64>,
+    last_arrival: BTreeMap<usize, f64>,
+    staged: BTreeSet<usize>,
+}
+
+impl Default for PredictivePreload {
+    fn default() -> Self {
+        // Threshold sits between the 2nd and 3rd RATE_TIERS of the paper
+        // workload (1/90 ≈ 0.011 and 1/180 ≈ 0.0056 req/s): the hot half
+        // of a deployment is staged, the cold tail is not.
+        PredictivePreload {
+            alpha: 0.3,
+            threshold: 0.008,
+            ewma: BTreeMap::new(),
+            last_arrival: BTreeMap::new(),
+            staged: BTreeSet::new(),
+        }
+    }
+}
+
+impl PredictivePreload {
+    pub fn forecast(&self, function: usize) -> f64 {
+        self.ewma.get(&function).copied().unwrap_or(0.0)
+    }
+
+    pub fn is_staged(&self, function: usize) -> bool {
+        self.staged.contains(&function)
+    }
+
+    /// Best-effort staging of one function's artifacts on its best GPU.
+    fn stage(&mut self, f: usize, env: &mut PolicyEnv) {
+        let spec = env.functions[f].clone();
+        let m = &spec.model;
+        // Per-model host-RAM staging copy: replica/backbone reloads go
+        // over PCIe instead of SSD.
+        let cids = env.cluster.container_ids();
+        let has_copy = cids.iter().any(|&c| {
+            env.functions
+                .iter()
+                .filter(|s| s.model.name == m.name)
+                .any(|s| env.cluster.container(c).has(s.id, ArtifactKind::Backbone))
+        });
+        if !has_copy {
+            if let Some(&cid) = cids.get(f % cids.len().max(1)) {
+                let _ = env.cluster.container_mut(cid).place(
+                    f,
+                    ArtifactKind::Backbone,
+                    m.weights_gb,
+                );
+            }
+        }
+        let Some(route) = Router::route(env.cluster, env.registry, &spec, 1) else {
+            return;
+        };
+        let g = route.gpu;
+        let ready = route.readiness;
+        if !ready.backbone_on_gpu {
+            let placed = if env.sharing {
+                env.registry.load(env.cluster, m.name, m.weights_gb, g).is_ok()
+            } else {
+                env.cluster
+                    .gpu_mut(g)
+                    .place_artifact(f, ArtifactKind::Backbone, m.weights_gb)
+                    .is_ok()
+            };
+            if !placed {
+                return; // no room: stay unstaged, retry on a later arrival
+            }
+        }
+        let gpu = env.cluster.gpu_mut(g);
+        if !ready.adapter_on_gpu {
+            let _ = gpu.place_artifact(f, ArtifactKind::Adapter, m.adapter_gb);
+        }
+        if !ready.kernel_on_gpu {
+            let _ = gpu.place_artifact(f, ArtifactKind::CudaKernel, m.kernel_gb);
+        }
+        if !ready.cuda_context {
+            let _ = gpu.create_cuda_context(f);
+        }
+        self.staged.insert(f);
+        env.stats.preload_decisions += 1;
+    }
+}
+
+impl PreloadPolicy for PredictivePreload {
+    fn name(&self) -> &'static str {
+        "predictive-ewma"
+    }
+
+    /// Seed forecasts from the controller's deployment-time rate
+    /// estimates and stage everything already above threshold.
+    fn deploy(&mut self, env: &mut PolicyEnv) {
+        for (i, &r) in env.rates.iter().enumerate() {
+            self.ewma.insert(i, r);
+        }
+        for f in 0..env.functions.len() {
+            if self.forecast(f) >= self.threshold {
+                self.stage(f, env);
+            }
+        }
+    }
+
+    /// EWMA update on every arrival; stage on upward crossings, release
+    /// (back to the keep-alive lifecycle) when the forecast halves.
+    fn on_arrival(&mut self, f: usize, now_s: f64, env: &mut PolicyEnv) {
+        if let Some(prev) = self.last_arrival.insert(f, now_s) {
+            let inst = 1.0 / (now_s - prev).max(1e-3);
+            let e = self.ewma.entry(f).or_insert(0.0);
+            *e = self.alpha * inst + (1.0 - self.alpha) * *e;
+        }
+        let fc = self.forecast(f);
+        if fc >= self.threshold && !self.staged.contains(&f) {
+            self.stage(f, env);
+        } else if fc < self.threshold / 2.0 {
+            self.staged.remove(&f);
+        }
+    }
+
+    /// Staged artifacts belong to the agent; unstaged functions tear down
+    /// with their instance like any serverless function.
+    fn retains_artifacts(&self, function: usize) -> bool {
+        self.staged.contains(&function)
+    }
+
+    fn prewarmed(&self, ready: Readiness) -> bool {
+        ready.cuda_context && ready.kernel_on_gpu
+    }
+
+    fn scaleout_kernel_s(&self, function: usize, m: &ModelProfile) -> f64 {
+        if self.staged.contains(&function) {
+            m.kernel_cache_load_s
+        } else {
+            m.kernel_jit_s
+        }
+    }
+
+    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+        let m = q.model;
+        let hot = self.staged.contains(&q.function);
+        let mut phases = BTreeMap::new();
+        init_phase(q, !hot, &mut phases);
+        if !q.warm_instance {
+            let t = if hot {
+                params::LIBRARY_WARM_IMPORT_S
+            } else {
+                m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S
+            };
+            phases.insert(Phase::LibraryLoad, t);
+        }
+        if !q.ready.backbone_on_gpu {
+            let t = if q.container_has_model_backbone {
+                m.weights_gb / params::BW_PCIE_GBPS
+            } else {
+                m.weights_gb / params::BW_SSD_GBPS
+            };
+            phases.insert(Phase::BackboneLoad, t);
+        }
+        adapter_phase(q, &mut phases);
+        if !q.ready.kernel_on_gpu && !q.warm_instance {
+            let t = if hot { m.kernel_cache_load_s } else { m.kernel_jit_s };
+            phases.insert(Phase::KernelCompile, t);
+        }
+        phases
+    }
+}
+
+// ----------------------------------------------------- batching policies
+
+/// Two-layer adaptive batching (Eq. 2–5): fill-or-expire locally, and
+/// fire early when the arrival stream settles and the target GPU has a
+/// free prefill slot.
+pub struct AdaptiveBatching;
+
+impl BatchingPolicy for AdaptiveBatching {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn should_dispatch(&self, q: &BatchQueue, now_s: f64, target_idle: &dyn Fn() -> bool) -> bool {
+        if q.is_empty() {
+            return false;
+        }
+        q.should_dispatch(now_s) || (q.settled(now_s) && target_idle())
+    }
+
+    fn expiry_time(&self, q: &BatchQueue) -> Option<f64> {
+        q.expiry_time()
+    }
+
+    fn desired_batch(&self, q: &BatchQueue) -> usize {
+        q.len().min(q.max_batch).max(1)
+    }
+
+    fn prioritise_by_margin(&self) -> bool {
+        true
+    }
+}
+
+/// Fixed batch size + fixed delay (the NAB ablations and the baselines'
+/// static batchers) — FixedBatchQueue semantics over the engine's queues.
+pub struct FixedBatching {
+    pub size: usize,
+    pub delay_s: f64,
+}
+
+impl BatchingPolicy for FixedBatching {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn should_dispatch(&self, q: &BatchQueue, now_s: f64, _target_idle: &dyn Fn() -> bool) -> bool {
+        if q.is_empty() {
+            return false;
+        }
+        q.len() >= self.size || now_s - q.oldest_arrival().unwrap() >= self.delay_s - 1e-9
+    }
+
+    fn expiry_time(&self, q: &BatchQueue) -> Option<f64> {
+        q.oldest_arrival().map(|a| a + self.delay_s)
+    }
+
+    fn desired_batch(&self, q: &BatchQueue) -> usize {
+        q.len().min(self.size).max(1)
+    }
+
+    fn prioritise_by_margin(&self) -> bool {
+        false
+    }
+}
+
+// ------------------------------------------------------ offload policies
+
+/// §4.3 dynamic offloading: free Q_g by evicting the least-valuable
+/// unrelated artifacts, value = reload latency × arrival rate.
+pub struct DynamicOffload;
+
+impl OffloadPolicy for DynamicOffload {
+    fn name(&self) -> &'static str {
+        "dynamic"
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn try_free(
+        &mut self,
+        cluster: &mut Cluster,
+        registry: &mut BackboneRegistry,
+        gpu: GpuId,
+        need_gb: f64,
+        protect: &[usize],
+        functions: &[FunctionSpec],
+        rates: &[f64],
+        spill: Option<ContainerId>,
+    ) -> Option<OffloadPlan> {
+        let plan = DynamicOffloader::free(
+            cluster,
+            registry,
+            gpu,
+            need_gb,
+            protect,
+            |of, kind| {
+                let rate = of.map(|x| rates[x]).unwrap_or(0.05);
+                let reload = match kind {
+                    ArtifactKind::Backbone => of
+                        .map(|x| functions[x].model.weights_gb / params::BW_SSD_GBPS)
+                        .unwrap_or(3.0),
+                    ArtifactKind::Adapter => 0.3,
+                    ArtifactKind::CudaKernel => 2.5,
+                    _ => 0.5,
+                };
+                reload * rate
+            },
+            spill,
+        );
+        Some(plan)
+    }
+}
+
+/// Block until completions free memory (NDO ablation / baselines).
+pub struct NoOffload;
+
+impl OffloadPolicy for NoOffload {
+    fn name(&self) -> &'static str {
+        "block"
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn try_free(
+        &mut self,
+        _cluster: &mut Cluster,
+        _registry: &mut BackboneRegistry,
+        _gpu: GpuId,
+        _need_gb: f64,
+        _protect: &[usize],
+        _functions: &[FunctionSpec],
+        _rates: &[f64],
+        _spill: Option<ContainerId>,
+    ) -> Option<OffloadPlan> {
+        None
+    }
+}
+
+// ------------------------------------------------------- billing models
+
+/// Serverless event-integrated billing: between events every GPU bills
+/// its resident GB at the active rate while it has work, else at the
+/// keep-alive idle rate — and only while a keep-alive-warm function
+/// resides there (§2.4: agent-staged artifacts are not billed to users).
+pub struct ServerlessBilling {
+    /// Without backbone sharing a function occupies its GPU *exclusively*
+    /// (§1): the platform bills the whole allocated GPU, not the bytes
+    /// touched. Sharing enables fractional allocation — the cost win.
+    pub sharing: bool,
+}
+
+impl BillingModel for ServerlessBilling {
+    fn name(&self) -> &'static str {
+        "serverless"
+    }
+
+    fn bill_gpu(&self, s: &GpuBillSample, dt_s: f64, cost: &mut CostTracker) {
+        if s.used_gb <= 0.0 {
+            return;
+        }
+        let billed = if self.sharing { s.used_gb } else { s.total_gb };
+        if s.active {
+            // CPU/host-mem of the functions actively executing there.
+            cost.add_active(billed, dt_s, 4.0, 16.0);
+        } else if s.warm_resident {
+            cost.add_idle(billed, dt_s, 4.0);
+        }
+    }
+
+    fn finalize(&self, _dedicated_gpus: usize, _end_s: f64, _cost: &mut CostTracker) {}
+}
+
+/// Serverful flat billing: dedicated GPUs bill wall-clock regardless of
+/// utilisation; nothing accrues per-interval.
+pub struct ServerfulBilling;
+
+impl BillingModel for ServerfulBilling {
+    fn name(&self) -> &'static str {
+        "serverful"
+    }
+
+    fn needs_interval(&self) -> bool {
+        false
+    }
+
+    fn bill_gpu(&self, _s: &GpuBillSample, _dt_s: f64, _cost: &mut CostTracker) {}
+
+    fn finalize(&self, dedicated_gpus: usize, end_s: f64, cost: &mut CostTracker) {
+        cost.add_serverful(dedicated_gpus as f64, end_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::ModelProfile;
+    use crate::coordinator::batching::Queued;
+
+    fn queue_with(n: usize, t: f64) -> BatchQueue {
+        let mut q = BatchQueue::new(0, &ModelProfile::llama2_7b());
+        for i in 0..n as u64 {
+            q.push(Queued { request: i, arrival_s: t });
+        }
+        q
+    }
+
+    fn env_fixture() -> (Cluster, BackboneRegistry, Vec<FunctionSpec>, Vec<f64>) {
+        let cluster = Cluster::new(1, 2, 4);
+        let registry = BackboneRegistry::new();
+        let functions: Vec<FunctionSpec> = (0..4)
+            .map(|i| FunctionSpec::new(i, ModelProfile::llama2_7b(), i))
+            .collect();
+        let rates = vec![0.02, 0.02, 0.002, 0.002];
+        (cluster, registry, functions, rates)
+    }
+
+    fn query<'a>(m: &'a ModelProfile, warm: bool, ready: Readiness) -> LoadQuery<'a> {
+        LoadQuery {
+            function: 0,
+            model: m,
+            ready,
+            warm_instance: warm,
+            container_has_library: false,
+            container_has_adapter: false,
+            container_has_own_backbone: false,
+            container_has_model_backbone: false,
+        }
+    }
+
+    const COLD: Readiness = Readiness {
+        backbone_on_gpu: false,
+        adapter_on_gpu: false,
+        kernel_on_gpu: false,
+        cuda_context: false,
+    };
+
+    #[test]
+    fn adaptive_matches_batch_queue_semantics() {
+        let p = AdaptiveBatching;
+        let q = queue_with(1, 0.0);
+        let never = || false;
+        let always = || true;
+        // Not expired, not settled ⇒ no dispatch even with an idle GPU.
+        assert!(!p.should_dispatch(&q, 0.05, &always));
+        // Settled + idle GPU ⇒ dispatch before expiry.
+        assert!(p.should_dispatch(&q, 0.2, &always));
+        assert!(!p.should_dispatch(&q, 0.2, &never));
+        // Expiry fires regardless of the GPU.
+        let t = p.expiry_time(&q).unwrap();
+        assert!(p.should_dispatch(&q, t + 1e-3, &never));
+        assert!(p.prioritise_by_margin());
+    }
+
+    #[test]
+    fn fixed_matches_fixed_queue_semantics() {
+        let p = FixedBatching { size: 10, delay_s: 0.5 };
+        let idle = || true;
+        let q1 = queue_with(1, 0.0);
+        assert!(!p.should_dispatch(&q1, 0.4, &idle));
+        assert!(p.should_dispatch(&q1, 0.51, &idle));
+        let q10 = queue_with(10, 0.0);
+        assert!(p.should_dispatch(&q10, 0.0, &idle));
+        assert_eq!(p.desired_batch(&q10), 10);
+        assert_eq!(p.expiry_time(&q1), Some(0.5));
+        assert!(!p.prioritise_by_margin());
+    }
+
+    #[test]
+    fn empty_queue_never_fires() {
+        let q = BatchQueue::new(0, &ModelProfile::llama2_7b());
+        let idle = || true;
+        assert!(!AdaptiveBatching.should_dispatch(&q, 1e9, &idle));
+        assert!(!FixedBatching { size: 1, delay_s: 0.0 }.should_dispatch(&q, 1e9, &idle));
+    }
+
+    #[test]
+    fn no_offload_blocks_dynamic_frees() {
+        let (mut c, mut r, functions, rates) = env_fixture();
+        let g = c.gpu_ids()[0];
+        c.gpu_mut(g).place_artifact(1, ArtifactKind::Adapter, 0.2).unwrap();
+        let need = c.gpu(g).free_gb() + 0.1;
+        assert!(NoOffload
+            .try_free(&mut c, &mut r, g, need, &[0], &functions, &rates, None)
+            .is_none());
+        let plan = DynamicOffload
+            .try_free(&mut c, &mut r, g, need, &[0], &functions, &rates, None)
+            .unwrap();
+        assert!(plan.freed_gb > 0.0);
+    }
+
+    #[test]
+    fn billing_models_split_active_idle_flat() {
+        let sample = GpuBillSample {
+            used_gb: 20.0,
+            total_gb: 48.0,
+            active: true,
+            warm_resident: true,
+        };
+        let mut c = CostTracker::default();
+        ServerlessBilling { sharing: true }.bill_gpu(&sample, 2.0, &mut c);
+        assert!((c.gpu_active_gb_s - 40.0).abs() < 1e-9);
+        // Unshared bills the whole GPU.
+        let mut c2 = CostTracker::default();
+        ServerlessBilling { sharing: false }.bill_gpu(&sample, 2.0, &mut c2);
+        assert!((c2.gpu_active_gb_s - 96.0).abs() < 1e-9);
+        // Idle GPU with a warm resident bills idle GB·s.
+        let idle = GpuBillSample { active: false, ..sample };
+        let mut c3 = CostTracker::default();
+        ServerlessBilling { sharing: true }.bill_gpu(&idle, 2.0, &mut c3);
+        assert!((c3.gpu_idle_gb_s - 40.0).abs() < 1e-9);
+        // Serverful: nothing per-interval, flat at finalize.
+        let mut c4 = CostTracker::default();
+        let sf = ServerfulBilling;
+        assert!(!sf.needs_interval());
+        sf.bill_gpu(&sample, 2.0, &mut c4);
+        assert_eq!(c4.total_usd(), 0.0);
+        sf.finalize(2, 3600.0, &mut c4);
+        assert!((c4.serverful_gpu_s - 7200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_preload_prices_warm_start() {
+        let m = ModelProfile::llama2_7b();
+        let mut p = FullPreload;
+        let ready = Readiness {
+            backbone_on_gpu: true,
+            adapter_on_gpu: true,
+            kernel_on_gpu: true,
+            cuda_context: true,
+        };
+        // Pre-warmed ⇒ warm-instance ⇒ zero load phases (§6.3).
+        assert!(p.prewarmed(ready));
+        let phases = p.load_phases(&query(&m, true, ready));
+        assert!(phases.is_empty());
+        // Cold replica with a staged host copy loads backbone over PCIe.
+        let q = LoadQuery {
+            container_has_model_backbone: true,
+            ..query(&m, false, COLD)
+        };
+        let phases = p.load_phases(&q);
+        let bb = phases[&Phase::BackboneLoad];
+        assert!((bb - m.weights_gb / params::BW_PCIE_GBPS).abs() < 1e-9);
+        assert!((phases[&Phase::KernelCompile] - m.kernel_cache_load_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn opportunistic_miss_adds_churn_wait() {
+        let m = ModelProfile::llama2_7b();
+        // hit_rate 0 forces a miss deterministically.
+        let mut p = OpportunisticPreload::new(0.0, 1);
+        let phases = p.load_phases(&query(&m, false, COLD));
+        let churn = phases[&Phase::Queue];
+        assert!((churn - m.weights_gb / params::BW_SSD_GBPS).abs() < 1e-9);
+        // A miss pays SSD + PCIe for the backbone.
+        let bb = phases[&Phase::BackboneLoad];
+        let expect = m.weights_gb / params::BW_SSD_GBPS + m.weights_gb / params::BW_PCIE_GBPS;
+        assert!((bb - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn predictive_stages_hot_functions_at_deploy() {
+        let (mut cluster, mut registry, functions, rates) = env_fixture();
+        let mut dedicated = BTreeMap::new();
+        let mut stats = RunStats::default();
+        let mut p = PredictivePreload::default();
+        {
+            let mut env = PolicyEnv {
+                cluster: &mut cluster,
+                registry: &mut registry,
+                functions: &functions,
+                rates: &rates,
+                sharing: true,
+                dedicated: &mut dedicated,
+                stats: &mut stats,
+            };
+            p.deploy(&mut env);
+        }
+        // The two hot functions (0.02 req/s) staged; cold tail not.
+        assert!(p.is_staged(0) && p.is_staged(1));
+        assert!(!p.is_staged(2) && !p.is_staged(3));
+        assert_eq!(stats.preload_decisions, 2);
+        assert!(p.retains_artifacts(0));
+        assert!(!p.retains_artifacts(2));
+        // Staged artifacts are actually resident somewhere.
+        let resident = cluster.gpu_ids().iter().any(|&g| {
+            cluster.gpu(g).has_artifact(0, ArtifactKind::Adapter)
+                && cluster.gpu(g).has_cuda_context(0)
+        });
+        assert!(resident, "staging left no residue on any GPU");
+    }
+
+    #[test]
+    fn predictive_ewma_reacts_to_bursts() {
+        let (mut cluster, mut registry, functions, rates) = env_fixture();
+        let mut dedicated = BTreeMap::new();
+        let mut stats = RunStats::default();
+        let mut p = PredictivePreload::default();
+        let mut env = PolicyEnv {
+            cluster: &mut cluster,
+            registry: &mut registry,
+            functions: &functions,
+            rates: &rates,
+            sharing: true,
+            dedicated: &mut dedicated,
+            stats: &mut stats,
+        };
+        // Cold function 3 gets a burst: 1 req/s for 20 arrivals.
+        for i in 0..20 {
+            p.on_arrival(3, i as f64, &mut env);
+        }
+        assert!(p.forecast(3) > p.threshold, "forecast {}", p.forecast(3));
+        assert!(p.is_staged(3));
+    }
+}

@@ -1,6 +1,6 @@
 //! §6.6 ablation study: Fig. 10b (cost-effectiveness of each variant) and
 //! Table 3 (TTFT / E2E / monetary cost, including the NAB #1–#3 fixed
-//! batching strategies).
+//! batching strategies and the Predictive-LoRA pre-loading plug-in).
 
 use crate::cluster::Cluster;
 use crate::cost::cost_effectiveness;
@@ -23,6 +23,7 @@ fn tight_run(
 pub fn variants() -> Vec<SystemConfig> {
     vec![
         SystemConfig::serverless_lora(),
+        SystemConfig::predictive(),
         SystemConfig::nbs(),
         SystemConfig::npl(),
         SystemConfig::ndo(),
@@ -32,32 +33,42 @@ pub fn variants() -> Vec<SystemConfig> {
     ]
 }
 
+/// One tight-cluster run per variant, fanned out over `--jobs` workers.
+fn variant_grid(
+    quick: bool,
+) -> Vec<(&'static str, crate::metrics::RunMetrics, crate::cost::CostTracker)> {
+    let dur = super::horizon(quick);
+    super::runner::parallel_map(variants(), move |cfg| {
+        let name = cfg.name;
+        let w = paper_workload(Pattern::Normal, dur, 11);
+        let (m, c) = tight_run(cfg, w);
+        (name, m, c)
+    })
+}
+
 pub fn fig10b(quick: bool) -> String {
-    let w = paper_workload(Pattern::Normal, super::horizon(quick), 11);
     let mut t = Table::new(
         "Fig 10b — Ablation: cost-effectiveness (full ServerlessLoRA = 1)",
         &["variant", "rel-cost-eff"],
     );
-    let (fm, fc) = tight_run(SystemConfig::serverless_lora(), w.clone());
+    let grid = variant_grid(quick);
+    // The first variant IS the full system — its run doubles as baseline.
+    assert_eq!(grid[0].0, "ServerlessLoRA", "baseline must lead `variants`");
+    let (fm, fc) = (&grid[0].1, &grid[0].2);
     let base = cost_effectiveness(fm.e2e().mean, fc.total_usd());
-    for cfg in variants() {
-        let name = cfg.name;
-        let (m, c) = tight_run(cfg, w.clone());
+    for (name, m, c) in &grid {
         let ce = cost_effectiveness(m.e2e().mean, c.total_usd());
-        t.row(vec![name.into(), f(ce / base)]);
+        t.row(vec![(*name).into(), f(ce / base)]);
     }
     t.render()
 }
 
 pub fn tab3(quick: bool) -> String {
-    let w = paper_workload(Pattern::Normal, super::horizon(quick), 11);
     let mut t = Table::new(
         "Table 3 — Ablation study (Normal workload, 8 fns)",
         &["variant", "TTFT (ms)", "E2E (ms)", "cost ($)"],
     );
-    for cfg in variants() {
-        let name = cfg.name;
-        let (m, c) = tight_run(cfg, w.clone());
+    for (name, m, c) in variant_grid(quick) {
         t.row(vec![
             name.into(),
             ms(m.ttft().mean),
@@ -132,5 +143,21 @@ mod tests {
         let (full, _, _) = measure(SystemConfig::serverless_lora());
         let (npl, _, _) = measure(SystemConfig::npl());
         assert!(npl >= full, "npl {npl} vs full {full}");
+    }
+
+    /// The predictive plug-in is a sane ablation row: it conserves
+    /// requests on the tight cluster and never loses to no-preloading.
+    #[test]
+    fn predictive_variant_sane_on_tight_cluster() {
+        let w = paper_workload(Pattern::Normal, 1800.0, 3);
+        let n = w.requests.len();
+        let (pm, _) = tight_run(SystemConfig::predictive(), w);
+        assert_eq!(pm.outcomes.len(), n, "predictive lost requests");
+        let (pred, _, _) = measure(SystemConfig::predictive());
+        let (npl, _, _) = measure(SystemConfig::npl());
+        assert!(
+            pred <= npl * 1.05,
+            "predictive {pred} vs npl {npl}"
+        );
     }
 }

@@ -41,18 +41,22 @@ fn fig1_workload(duration_s: f64) -> Workload {
 }
 
 pub fn fig1(quick: bool) -> String {
-    let w = fig1_workload(super::horizon(quick));
+    let dur = super::horizon(quick);
     let mut t = Table::new(
         "Fig 1 — Mean per-request time breakdown (ms), 3× Llama2-13B LoRA fns",
         &header(),
     );
-    for cfg in [
+    let systems = vec![
         SystemConfig::instainfer(Pattern::Normal),
         SystemConfig::serverless_llm(),
         SystemConfig::serverless_lora(),
-    ] {
+    ];
+    let rows = super::runner::parallel_map(systems, move |cfg| {
         let name = cfg.name;
-        let (m, _, _) = super::run_system(cfg, w.clone(), 1);
+        let (m, _, _) = super::run_system(cfg, fig1_workload(dur), 1);
+        (name, m)
+    });
+    for (name, m) in rows {
         let mut row = vec![name.to_string()];
         row.extend(phase_row(&m, true));
         t.row(row);
@@ -98,18 +102,22 @@ pub fn fig8(quick: bool) -> String {
     }
 
     // (b) cumulative over the whole Normal workload.
-    let w = paper_workload(Pattern::Normal, super::horizon(quick), 11);
+    let dur = super::horizon(quick);
     let mut t = Table::new(
         "Fig 8b — Cumulative time breakdown (ms) over the Normal workload",
         &header(),
     );
-    for cfg in [
+    let systems = vec![
         SystemConfig::instainfer(Pattern::Normal),
         SystemConfig::serverless_llm(),
         SystemConfig::serverless_lora(),
-    ] {
+    ];
+    let rows = super::runner::parallel_map(systems, move |cfg| {
         let name = cfg.name;
-        let (m, _, _) = super::run_system(cfg, w.clone(), 1);
+        let (m, _, _) = super::run_system(cfg, paper_workload(Pattern::Normal, dur, 11), 1);
+        (name, m)
+    });
+    for (name, m) in rows {
         let mut row = vec![name.to_string()];
         row.extend(phase_row(&m, false));
         t.row(row);

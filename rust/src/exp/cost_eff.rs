@@ -19,6 +19,25 @@ fn all_systems(pattern: Pattern) -> Vec<SystemConfig> {
     ]
 }
 
+/// Run `systems` over per-task copies of the same deterministic workload
+/// in parallel, returning names + results in order. The first system must
+/// be the vLLM baseline — the figures normalise against row 0.
+fn baseline_grid(
+    systems: Vec<SystemConfig>,
+    make_workload: impl Fn() -> Workload,
+) -> (
+    Vec<&'static str>,
+    Vec<(crate::metrics::RunMetrics, crate::cost::CostTracker, crate::sim::RunStats)>,
+) {
+    let tasks: Vec<(SystemConfig, Workload, u64)> = systems
+        .into_iter()
+        .map(|cfg| (cfg, make_workload(), 1))
+        .collect();
+    let names: Vec<&'static str> = tasks.iter().map(|(c, _, _)| c.name).collect();
+    assert_eq!(names[0], "vLLM", "baseline must lead the system list");
+    (names, super::run_systems(tasks))
+}
+
 /// Fig. 2a workload: ONE Llama2-7B function (general LLM serving) —
 /// serverless wins on pay-per-use. Fig. 2b: the SAME total demand split
 /// across four 7B LoRA functions — naive serverless loses its edge to
@@ -43,22 +62,21 @@ pub fn fig2(quick: bool) -> String {
     let dur = super::horizon(quick);
     let mut out = String::new();
     for (n_fns, label) in [(1, "a: one Llama2-7B LLM"), (4, "b: four Llama2-7B LoRA fns")] {
-        let w = small_workload(n_fns, dur);
-        let (vm, vc, _) = super::run_system(SystemConfig::vllm(), w.clone(), 1);
-        let (base_e2e, base_cost) = (vm.e2e().mean, vc.total_usd());
-        let mut t = Table::new(
-            &format!("Fig 2{label} — cost-effectiveness (vLLM = 1)"),
-            &["system", "E2E(ms)", "cost($)", "rel-cost-eff"],
-        );
-        for cfg in [
+        let systems = vec![
             SystemConfig::vllm(),
             SystemConfig::dlora(),
             SystemConfig::serverless_llm(),
             SystemConfig::instainfer(Pattern::Normal),
             SystemConfig::serverless_lora(),
-        ] {
-            let name = cfg.name;
-            let (m, c, _) = super::run_system(cfg, w.clone(), 1);
+        ];
+        let (names, results) = baseline_grid(systems, || small_workload(n_fns, dur));
+        // vLLM is the first row: its run doubles as the baseline.
+        let (base_e2e, base_cost) = (results[0].0.e2e().mean, results[0].1.total_usd());
+        let mut t = Table::new(
+            &format!("Fig 2{label} — cost-effectiveness (vLLM = 1)"),
+            &["system", "E2E(ms)", "cost($)", "rel-cost-eff"],
+        );
+        for (name, (m, c, _)) in names.into_iter().zip(&results) {
             t.row(vec![
                 name.into(),
                 ms(m.e2e().mean),
@@ -77,17 +95,17 @@ pub fn fig2(quick: bool) -> String {
 }
 
 pub fn fig9(quick: bool) -> String {
+    let dur = super::horizon(quick);
     let mut t = Table::new(
         "Fig 9 — Cost-effectiveness vs baselines (vLLM = 1), 8 fns / 16 GPUs",
         &["pattern", "system", "E2E(ms)", "cost($)", "rel-cost-eff"],
     );
     for pattern in Pattern::ALL {
-        let w = paper_workload(pattern, super::horizon(quick), 11);
-        let (vm, vc, _) = super::run_system(SystemConfig::vllm(), w.clone(), 1);
-        let (base_e2e, base_cost) = (vm.e2e().mean, vc.total_usd());
-        for cfg in all_systems(pattern) {
-            let name = cfg.name;
-            let (m, c, _) = super::run_system(cfg, w.clone(), 1);
+        let (names, results) =
+            baseline_grid(all_systems(pattern), || paper_workload(pattern, dur, 11));
+        // vLLM leads `all_systems`: its run doubles as the baseline.
+        let (base_e2e, base_cost) = (results[0].0.e2e().mean, results[0].1.total_usd());
+        for (name, (m, c, _)) in names.into_iter().zip(&results) {
             t.row(vec![
                 pattern.name().into(),
                 name.into(),
@@ -113,16 +131,16 @@ pub fn tab1(quick: bool) -> String {
         &["pattern", "system", "E2E 7B(13B)", "cost 7B(13B)", "rel-CE 7B(13B)"],
     );
     for pattern in Pattern::ALL {
-        let w = paper_workload(pattern, super::horizon(quick), 11);
-        // vLLM baseline per series.
-        let (vm, vc, _) = super::run_system(SystemConfig::vllm(), w.clone(), 1);
+        let dur = super::horizon(quick);
+        let (names, results) =
+            baseline_grid(all_systems(pattern), || paper_workload(pattern, dur, 11));
+        // vLLM baseline per series (first row of `all_systems`).
+        let vm = &results[0].0;
         let (v7, v13) = (vm.subset(&series_7b()), vm.subset(&series_13b()));
-        let (vc7, vc13) = split_cost(&vm, vc.total_usd());
-        for cfg in all_systems(pattern) {
-            let name = cfg.name;
-            let (m, c, _) = super::run_system(cfg, w.clone(), 1);
+        let (vc7, vc13) = split_cost(vm, results[0].1.total_usd());
+        for (name, (m, c, _)) in names.into_iter().zip(&results) {
             let (m7, m13) = (m.subset(&series_7b()), m.subset(&series_13b()));
-            let (c7, c13) = split_cost(&m, c.total_usd());
+            let (c7, c13) = split_cost(m, c.total_usd());
             t.row(vec![
                 pattern.name().into(),
                 name.into(),

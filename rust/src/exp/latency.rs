@@ -1,7 +1,11 @@
 //! Fig. 6 (average TTFT), Fig. 7 (average TPOT), Fig. 12 (TTFT CDF +
 //! SLO violation) across Predictable / Normal / Bursty workloads for the
-//! three serverless systems.
+//! serverless systems (plus the Predictive-LoRA policy plug-in).
+//!
+//! Each figure's (pattern × system) grid is independent, so the runs fan
+//! out through `exp::runner` and the rows render in grid order.
 
+use crate::metrics::RunMetrics;
 use crate::sim::workloads::{paper_workload, series_13b, series_7b};
 use crate::sim::SystemConfig;
 use crate::trace::Pattern;
@@ -10,9 +14,26 @@ use crate::util::table::{f, ms, Table};
 fn serverless_systems(pattern: Pattern) -> Vec<SystemConfig> {
     vec![
         SystemConfig::serverless_lora(),
+        SystemConfig::predictive(),
         SystemConfig::serverless_llm(),
         SystemConfig::instainfer(pattern),
     ]
+}
+
+/// Run the (pattern × serverless system) grid for one horizon, in
+/// parallel, returning `(pattern, system name, metrics)` in grid order.
+fn pattern_grid(quick: bool) -> Vec<(Pattern, &'static str, RunMetrics)> {
+    let dur = super::horizon(quick);
+    let tasks: Vec<(Pattern, SystemConfig)> = Pattern::ALL
+        .iter()
+        .flat_map(|&p| serverless_systems(p).into_iter().map(move |cfg| (p, cfg)))
+        .collect();
+    super::runner::parallel_map(tasks, |(p, cfg)| {
+        let name = cfg.name;
+        let w = paper_workload(p, dur, 11);
+        let (m, _, _) = super::run_system(cfg, w, 1);
+        (p, name, m)
+    })
 }
 
 pub fn fig6(quick: bool) -> String {
@@ -20,22 +41,17 @@ pub fn fig6(quick: bool) -> String {
         "Fig 6 — Average TTFT (ms), 8 LoRA functions on 16 GPUs",
         &["pattern", "system", "TTFT-7B", "TTFT-13B", "p99-7B", "p99-13B"],
     );
-    for pattern in Pattern::ALL {
-        let w = paper_workload(pattern, super::horizon(quick), 11);
-        for cfg in serverless_systems(pattern) {
-            let name = cfg.name;
-            let (m, _, _) = super::run_system(cfg, w.clone(), 1);
-            let m7 = m.subset(&series_7b());
-            let m13 = m.subset(&series_13b());
-            t.row(vec![
-                pattern.name().into(),
-                name.into(),
-                ms(m7.ttft().mean),
-                ms(m13.ttft().mean),
-                ms(m7.ttft().p99),
-                ms(m13.ttft().p99),
-            ]);
-        }
+    for (pattern, name, m) in pattern_grid(quick) {
+        let m7 = m.subset(&series_7b());
+        let m13 = m.subset(&series_13b());
+        t.row(vec![
+            pattern.name().into(),
+            name.into(),
+            ms(m7.ttft().mean),
+            ms(m13.ttft().mean),
+            ms(m7.ttft().p99),
+            ms(m13.ttft().p99),
+        ]);
     }
     t.render()
 }
@@ -45,18 +61,13 @@ pub fn fig7(quick: bool) -> String {
         "Fig 7 — Average TPOT (ms)",
         &["pattern", "system", "TPOT-7B", "TPOT-13B"],
     );
-    for pattern in Pattern::ALL {
-        let w = paper_workload(pattern, super::horizon(quick), 11);
-        for cfg in serverless_systems(pattern) {
-            let name = cfg.name;
-            let (m, _, _) = super::run_system(cfg, w.clone(), 1);
-            t.row(vec![
-                pattern.name().into(),
-                name.into(),
-                ms(m.subset(&series_7b()).tpot().mean),
-                ms(m.subset(&series_13b()).tpot().mean),
-            ]);
-        }
+    for (pattern, name, m) in pattern_grid(quick) {
+        t.row(vec![
+            pattern.name().into(),
+            name.into(),
+            ms(m.subset(&series_7b()).tpot().mean),
+            ms(m.subset(&series_13b()).tpot().mean),
+        ]);
     }
     t.render()
 }
@@ -64,6 +75,8 @@ pub fn fig7(quick: bool) -> String {
 pub fn fig12(quick: bool) -> String {
     // CDF thresholds in seconds; SLOs: 2.5 s (7B), 4.0 s (13B) — §6.8.
     let thresholds = [0.25, 0.5, 1.0, 2.0, 2.5, 4.0, 8.0, 16.0];
+    // One run per (pattern, system), shared by both series tables.
+    let grid = pattern_grid(quick);
     let mut out = String::new();
     for (series, label, slo) in
         [(series_7b(), "7B", 2.5), (series_13b(), "13B", 4.0)]
@@ -75,20 +88,13 @@ pub fn fig12(quick: bool) -> String {
                 "<=2.5s", "<=4s", "<=8s", "<=16s", "SLO-viol%",
             ],
         );
-        for pattern in Pattern::ALL {
-            let w = paper_workload(pattern, super::horizon(quick), 11);
-            for cfg in serverless_systems(pattern) {
-                let name = cfg.name;
-                let (m, _, _) = super::run_system(cfg, w.clone(), 1);
-                let cdf = m.ttft_cdf(&series, &thresholds);
-                let viol = m
-                    .subset(&series)
-                    .slo_violation_rate(|_| slo);
-                let mut row = vec![pattern.name().to_string(), name.into()];
-                row.extend(cdf.iter().map(|c| format!("{:.2}", c)));
-                row.push(f(viol * 100.0));
-                t.row(row);
-            }
+        for (pattern, name, m) in &grid {
+            let cdf = m.ttft_cdf(&series, &thresholds);
+            let viol = m.subset(&series).slo_violation_rate(|_| slo);
+            let mut row = vec![pattern.name().to_string(), (*name).into()];
+            row.extend(cdf.iter().map(|c| format!("{:.2}", c)));
+            row.push(f(viol * 100.0));
+            t.row(row);
         }
         out.push_str(&t.render());
     }
@@ -152,5 +158,31 @@ mod tests {
         let (sllm, _, _) =
             super::super::run_system(SystemConfig::serverless_llm(), w, 1);
         assert!(lora.slo_violation_rate(slo) <= sllm.slo_violation_rate(slo));
+    }
+
+    /// The predictive plug-in slots into the same grid: on the
+    /// predictable pattern (EWMA's best case) it must land between the
+    /// full pre-loader and the no-preload serverless baseline.
+    #[test]
+    fn predictive_between_full_and_baseline() {
+        let w = paper_workload(Pattern::Predictable, 1800.0, 3);
+        let (lora, _, _) =
+            super::super::run_system(SystemConfig::serverless_lora(), w.clone(), 1);
+        let (pred, _, _) =
+            super::super::run_system(SystemConfig::predictive(), w.clone(), 1);
+        let (sllm, _, _) =
+            super::super::run_system(SystemConfig::serverless_llm(), w, 1);
+        assert!(
+            pred.ttft().mean <= sllm.ttft().mean * 1.02,
+            "predictive {} vs sllm {}",
+            pred.ttft().mean,
+            sllm.ttft().mean
+        );
+        assert!(
+            lora.ttft().mean <= pred.ttft().mean * 1.02,
+            "full {} vs predictive {}",
+            lora.ttft().mean,
+            pred.ttft().mean
+        );
     }
 }

@@ -11,6 +11,7 @@ pub mod breakdown;
 pub mod cost_eff;
 pub mod latency;
 pub mod overhead;
+pub mod runner;
 pub mod scaling;
 pub mod throughput;
 pub mod traces;
@@ -19,6 +20,7 @@ use crate::cluster::Cluster;
 use crate::cost::CostTracker;
 use crate::metrics::RunMetrics;
 use crate::sim::{Engine, RunStats, SystemConfig, Workload};
+use crate::util::json::{num, obj, Json};
 
 /// Simulated horizon. The paper runs 4-hour traces; `quick` mode runs one
 /// hour, which preserves every ordering at a quarter of the wall time.
@@ -42,6 +44,31 @@ pub fn run_system(
     seed: u64,
 ) -> (RunMetrics, CostTracker, RunStats) {
     Engine::new(cfg, paper_cluster(), workload, seed).run()
+}
+
+/// Fan a grid of independent `(config, workload, seed)` runs out across
+/// the configured `--jobs` workers (order-preserving; see `runner`).
+pub fn run_systems(
+    tasks: Vec<(SystemConfig, Workload, u64)>,
+) -> Vec<(RunMetrics, CostTracker, RunStats)> {
+    runner::parallel_map(tasks, |(cfg, w, seed)| run_system(cfg, w, seed))
+}
+
+/// Headline metrics for the machine-readable bench record
+/// (BENCH_sim.json): a short Normal-pattern run of the flagship vs the
+/// strongest serverless baseline, tracked across PRs.
+pub fn headline_json() -> Json {
+    let w = crate::sim::workloads::paper_workload(crate::trace::Pattern::Normal, 900.0, 11);
+    let (lm, lc, _) = run_system(SystemConfig::serverless_lora(), w.clone(), 1);
+    let (sm, sc, _) = run_system(SystemConfig::serverless_llm(), w, 1);
+    obj(vec![
+        ("lora_ttft_ms", num(lm.ttft().mean * 1000.0)),
+        ("sllm_ttft_ms", num(sm.ttft().mean * 1000.0)),
+        ("ttft_speedup", num(sm.ttft().mean / lm.ttft().mean.max(1e-12))),
+        ("lora_cost_usd", num(lc.total_usd())),
+        ("sllm_cost_usd", num(sc.total_usd())),
+        ("cost_ratio", num(sc.total_usd() / lc.total_usd().max(1e-12))),
+    ])
 }
 
 /// All experiment ids, in paper order.

@@ -1,0 +1,111 @@
+//! Parallel experiment runner: order-preserving scoped-thread fan-out for
+//! independent simulator runs.
+//!
+//! Every `Engine` run is independent and seed-deterministic, so the
+//! experiment suites fan their (config, workload) grids out across
+//! threads and still render bit-identical tables in the same order as a
+//! sequential run. The job count is a process-wide setting (`--jobs N` on
+//! the bench harness and the `simulate` CLI); `jobs() == 1` (the default)
+//! runs inline with zero threading overhead.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+static JOBS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the process-wide worker count for experiment fan-out.
+pub fn set_jobs(n: usize) {
+    JOBS.store(n.max(1), Ordering::SeqCst);
+}
+
+pub fn jobs() -> usize {
+    JOBS.load(Ordering::SeqCst)
+}
+
+/// Map `f` over `items` with the process-wide job count, preserving input
+/// order in the output.
+pub fn parallel_map<I, T, F>(items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(I) -> T + Sync,
+{
+    parallel_map_with(jobs(), items, f)
+}
+
+/// Same, with an explicit worker count (used by tests to compare the
+/// parallel and sequential paths without touching the global setting).
+pub fn parallel_map_with<I, T, F>(n_jobs: usize, items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(I) -> T + Sync,
+{
+    let n = items.len();
+    let workers = n_jobs.max(1).min(n.max(1));
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Work-stealing by atomic index: each worker claims the next
+    // unclaimed item, computes, and writes into its dedicated slot —
+    // output order equals input order no matter the interleaving.
+    let tasks: Vec<Mutex<Option<I>>> =
+        items.into_iter().map(|i| Mutex::new(Some(i))).collect();
+    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let item = tasks[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("task claimed twice");
+                let r = f(item);
+                *out[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker died before writing"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = parallel_map_with(8, xs.clone(), |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_path_equals_parallel_path() {
+        let xs: Vec<u64> = (0..37).collect();
+        let seq = parallel_map_with(1, xs.clone(), |x| x.wrapping_mul(0x9E37).rotate_left(7));
+        let par = parallel_map_with(4, xs, |x| x.wrapping_mul(0x9E37).rotate_left(7));
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let e: Vec<u32> = parallel_map_with(4, Vec::<u32>::new(), |x| x);
+        assert!(e.is_empty());
+        assert_eq!(parallel_map_with(4, vec![9], |x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn jobs_setting_clamps_to_one() {
+        let before = jobs();
+        set_jobs(0);
+        assert_eq!(jobs(), 1);
+        set_jobs(before);
+    }
+}

@@ -16,23 +16,32 @@ pub fn fig11(quick: bool) -> String {
         "Fig 11a — Strong scaling (8 fns, fixed workload)",
         &["GPUs", "system", "E2E (ms)", "TTFT (ms)"],
     );
-    for n_gpus in [2usize, 4, 8, 16] {
+    let strong_tasks: Vec<(usize, SystemConfig)> = [2usize, 4, 8, 16]
+        .into_iter()
+        .flat_map(|n_gpus| {
+            [
+                SystemConfig::serverless_lora(),
+                SystemConfig::serverless_llm(),
+                SystemConfig::instainfer(Pattern::Normal),
+            ]
+            .into_iter()
+            .map(move |cfg| (n_gpus, cfg))
+        })
+        .collect();
+    let rows = super::runner::parallel_map(strong_tasks, move |(n_gpus, cfg)| {
+        let name = cfg.name;
         let w = paper_workload(Pattern::Normal, dur, 11);
-        for cfg in [
-            SystemConfig::serverless_lora(),
-            SystemConfig::serverless_llm(),
-            SystemConfig::instainfer(Pattern::Normal),
-        ] {
-            let name = cfg.name;
-            let cluster = Cluster::new(1, n_gpus, 2 * n_gpus);
-            let (m, _, _) = Engine::new(cfg, cluster, w.clone(), 1).run();
-            t.row(vec![
-                n_gpus.to_string(),
-                name.into(),
-                ms(m.e2e().mean),
-                ms(m.ttft().mean),
-            ]);
-        }
+        let cluster = Cluster::new(1, n_gpus, 2 * n_gpus);
+        let (m, _, _) = Engine::new(cfg, cluster, w, 1).run();
+        (n_gpus, name, m)
+    });
+    for (n_gpus, name, m) in rows {
+        t.row(vec![
+            n_gpus.to_string(),
+            name.into(),
+            ms(m.e2e().mean),
+            ms(m.ttft().mean),
+        ]);
     }
     out.push_str(&t.render());
 
@@ -41,23 +50,32 @@ pub fn fig11(quick: bool) -> String {
         "Fig 11b — Weak scaling (workload ∝ GPUs)",
         &["scale", "GPUs", "fns", "system", "E2E (ms)"],
     );
-    for scale in [1usize, 2, 4] {
+    let weak_tasks: Vec<(usize, SystemConfig)> = [1usize, 2, 4]
+        .into_iter()
+        .flat_map(|scale| {
+            [
+                SystemConfig::serverless_lora(),
+                SystemConfig::instainfer(Pattern::Normal),
+            ]
+            .into_iter()
+            .map(move |cfg| (scale, cfg))
+        })
+        .collect();
+    let rows = super::runner::parallel_map(weak_tasks, move |(scale, cfg)| {
+        let name = cfg.name;
         let w = scaled_workload(Pattern::Normal, dur, scale, 13);
-        for cfg in [
-            SystemConfig::serverless_lora(),
-            SystemConfig::instainfer(Pattern::Normal),
-        ] {
-            let name = cfg.name;
-            let cluster = Cluster::new(scale, 4, 8);
-            let (m, _, _) = Engine::new(cfg, cluster, w.clone(), 1).run();
-            t.row(vec![
-                scale.to_string(),
-                (scale * 4).to_string(),
-                (scale * 8).to_string(),
-                name.into(),
-                ms(m.e2e().mean),
-            ]);
-        }
+        let cluster = Cluster::new(scale, 4, 8);
+        let (m, _, _) = Engine::new(cfg, cluster, w, 1).run();
+        (scale, name, m)
+    });
+    for (scale, name, m) in rows {
+        t.row(vec![
+            scale.to_string(),
+            (scale * 4).to_string(),
+            (scale * 8).to_string(),
+            name.into(),
+            ms(m.e2e().mean),
+        ]);
     }
     out.push_str(&t.render());
     out

@@ -20,19 +20,26 @@ fn run_throughput(cfg: SystemConfig, dur: f64) -> (f64, usize, f64) {
     (m.token_throughput(), m.peak_batch(), m.request_throughput())
 }
 
+fn saturating_systems() -> Vec<SystemConfig> {
+    vec![
+        SystemConfig::serverless_lora(),
+        SystemConfig::serverless_llm(),
+        SystemConfig::instainfer(Pattern::Predictable),
+    ]
+}
+
 pub fn tab2(quick: bool) -> String {
     let dur = if quick { 300.0 } else { 900.0 };
     let mut t = Table::new(
         "Table 2 — Peak throughput, 4× Llama2-7B fns on 2 GPUs",
         &["system", "tokens/s", "peak batch", "requests/s"],
     );
-    for cfg in [
-        SystemConfig::serverless_lora(),
-        SystemConfig::serverless_llm(),
-        SystemConfig::instainfer(Pattern::Predictable),
-    ] {
+    let rows = super::runner::parallel_map(saturating_systems(), move |cfg| {
         let name = cfg.name;
         let (tok, batch, req) = run_throughput(cfg, dur);
+        (name, tok, batch, req)
+    });
+    for (name, tok, batch, req) in rows {
         t.row(vec![name.into(), f(tok), batch.to_string(), f(req)]);
     }
     t.render()
@@ -44,14 +51,13 @@ pub fn fig10a(quick: bool) -> String {
         "Fig 10a — Completion time at max batch (same saturating workload)",
         &["system", "mean E2E (s)", "p99 E2E (s)", "completed"],
     );
-    for cfg in [
-        SystemConfig::serverless_lora(),
-        SystemConfig::serverless_llm(),
-        SystemConfig::instainfer(Pattern::Predictable),
-    ] {
+    let rows = super::runner::parallel_map(saturating_systems(), move |cfg| {
         let name = cfg.name;
         let w = throughput_workload(dur, 21);
         let (m, _, _) = Engine::new(cfg, two_gpu_cluster(), w, 2).run();
+        (name, m)
+    });
+    for (name, m) in rows {
         t.row(vec![
             name.into(),
             f(m.e2e().mean),

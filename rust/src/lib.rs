@@ -10,12 +10,18 @@
 //! * `sharing` — backbone-sharing registry (§4.4, CUDA-IPC analogue).
 //! * `cluster` — simulated GPU/container substrate with strict ledgers.
 //! * `trace`, `cost`, `metrics` — workload, pricing and measurement.
-//! * `sim` — discrete-event simulator + the four baseline systems.
+//! * `sim` — discrete-event simulator (engine core + events + dispatch +
+//!   billing) and the system configs that build policy bundles.
 //! * `runtime` — real PJRT data plane: loads the AOT HLO-text artifacts
 //!   and serves the tiny-Llama model with genuinely shared backbone
-//!   buffers and isolated per-function state.
+//!   buffers and isolated per-function state. Behind the `pjrt` feature
+//!   (needs the external `xla` crate).
 //! * `exp` — one entry per paper table/figure (the bench harness calls
-//!   these).
+//!   these), plus the parallel experiment runner.
+//!
+//! The policy layer (`coordinator::policy`) is the extension point: a new
+//! serving system is a policy bundle registered in `sim::config`, never
+//! an engine edit. See DESIGN.md.
 
 pub mod artifact;
 pub mod cluster;
@@ -23,6 +29,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod exp;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sharing;
 pub mod sim;

@@ -1,10 +1,12 @@
 //! ServerlessLoRA launcher.
 //!
 //! ```text
-//! serverless-lora simulate --exp fig6 [--full]     regenerate a paper table/figure
-//! serverless-lora simulate --all [--full]          regenerate everything
+//! serverless-lora simulate --exp fig6 [--full] [--jobs N]
+//!                                                  regenerate a paper table/figure
+//! serverless-lora simulate --all [--full] [--jobs N]
+//!                                                  regenerate everything
 //! serverless-lora serve [--model llama-tiny] [--requests N] [--batch B]
-//!                                                  real PJRT serving demo
+//!                                                  real PJRT serving demo (`pjrt` feature)
 //! serverless-lora info [--model llama-tiny]        artifact/manifest inventory
 //! ```
 //!
@@ -13,25 +15,59 @@
 use std::collections::BTreeMap;
 
 use serverless_lora::exp;
-use serverless_lora::runtime::{server, Manifest};
 
-fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
+/// Flags that never take a value: their presence means "true", and the
+/// token after them is a positional argument, not their value.
+const BOOL_FLAGS: &[&str] = &["full", "all", "quick"];
+
+/// Hand-rolled flag parser.
+///
+/// Rules, in order:
+/// * `--name=value` binds explicitly.
+/// * `--name` for a declared boolean flag is `true` and never consumes
+///   the next token (`--all simulate` keeps `simulate` positional).
+/// * `--name <tok>` binds `<tok>` unless it is another `--flag`; a
+///   single-dash token is a value, so negatives work (`--delay -0.5`).
+/// * A bare `--` ends flag parsing; everything after is positional.
+fn parse_flags(
+    args: &[String],
+    bool_flags: &[&str],
+) -> (Vec<String>, BTreeMap<String, String>) {
+    let looks_like_flag = |tok: &str| tok.starts_with("--") && tok.len() > 2;
     let mut pos = Vec::new();
     let mut flags = BTreeMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(name) = args[i].strip_prefix("--") {
-            let next_is_value =
-                i + 1 < args.len() && !args[i + 1].starts_with("--");
-            if next_is_value {
-                flags.insert(name.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(name.to_string(), "true".to_string());
-                i += 1;
-            }
+        let a = &args[i];
+        let Some(name) = a.strip_prefix("--") else {
+            pos.push(a.clone());
+            i += 1;
+            continue;
+        };
+        if name.is_empty() {
+            // `--` separator: the rest is positional.
+            pos.extend(args[i + 1..].iter().cloned());
+            break;
+        }
+        if let Some((k, v)) = name.split_once('=') {
+            flags.insert(k.to_string(), v.to_string());
+            i += 1;
+            continue;
+        }
+        if bool_flags.contains(&name) {
+            flags.insert(name.to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
+        let next_is_value = args
+            .get(i + 1)
+            .map(|n| !looks_like_flag(n))
+            .unwrap_or(false);
+        if next_is_value {
+            flags.insert(name.to_string(), args[i + 1].clone());
+            i += 2;
         } else {
-            pos.push(args[i].clone());
+            flags.insert(name.to_string(), "true".to_string());
             i += 1;
         }
     }
@@ -42,7 +78,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: serverless-lora <simulate|serve|info> [options]\n\
          \n\
-         simulate --exp <id>|--all [--full]   ids: {}\n\
+         simulate --exp <id>|--all [--full] [--jobs N]   ids: {}\n\
          serve    [--model llama-tiny] [--requests 16] [--batch 4]\n\
          info     [--model llama-tiny]",
         exp::ALL_EXPERIMENTS.join(", ")
@@ -52,7 +88,10 @@ fn usage() -> ! {
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (pos, flags) = parse_flags(&args);
+    let (pos, flags) = parse_flags(&args, BOOL_FLAGS);
+    if let Some(jobs) = flags.get("jobs").and_then(|v| v.parse::<usize>().ok()) {
+        exp::runner::set_jobs(jobs);
+    }
     match pos.first().map(String::as_str) {
         Some("simulate") => {
             let quick = !flags.contains_key("full");
@@ -77,78 +116,173 @@ fn main() -> anyhow::Result<()> {
                 .unwrap_or(16);
             let batch: usize =
                 flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(4);
-            serve_demo(&model, n, batch)?;
+            pjrt::serve_demo(&model, n, batch)?;
         }
         Some("info") => {
             let model = flags
                 .get("model")
                 .cloned()
                 .unwrap_or_else(|| "llama-tiny".into());
-            let m = Manifest::load(Manifest::default_dir(&model))?;
-            println!(
-                "model={} params={} layers={} d_model={} adapters={}",
-                m.model,
-                m.dims.param_count,
-                m.dims.n_layers,
-                m.dims.d_model,
-                m.n_adapters
-            );
-            for a in &m.artifacts {
-                println!("  artifact {} (batch={}, seq={})", a.name, a.batch, a.seq);
-            }
+            pjrt::info(&model)?;
         }
         _ => usage(),
     }
     Ok(())
 }
 
-/// Minimal real-serving demo: spin up the PJRT server, push a burst of
-/// requests across all adapters, report latencies.
-fn serve_demo(model: &str, n: usize, batch: usize) -> anyhow::Result<()> {
-    let dir = Manifest::default_dir(model);
-    let manifest = Manifest::load(&dir)?;
-    println!(
-        "serving {} ({} params, {} adapters) — PJRT CPU, shared backbone",
-        manifest.model, manifest.dims.param_count, manifest.n_adapters
-    );
-    let (tx, rx) = server::spawn(
-        dir,
-        server::ServerConfig {
-            max_batch: batch,
-            batch_delay: std::time::Duration::from_millis(20),
-        },
-    );
-    for i in 0..n as u64 {
-        tx.send(server::LiveRequest {
-            id: i,
-            adapter: (i as usize) % manifest.n_adapters,
-            prompt: (0..12).map(|t| ((i as i32) * 7 + t) % 100).collect(),
-            max_new_tokens: 8,
-        })?;
-    }
-    drop(tx);
-    let mut ttfts = Vec::new();
-    while let Ok(r) = rx.recv_timeout(std::time::Duration::from_secs(300)) {
+/// Real-runtime subcommands, only compiled with the `pjrt` feature (the
+/// data plane needs the external `xla` crate).
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use serverless_lora::runtime::{server, Manifest};
+
+    pub fn info(model: &str) -> anyhow::Result<()> {
+        let m = Manifest::load(Manifest::default_dir(model))?;
         println!(
-            "  req {} adapter={} batch={} ttft={:.1}ms tpot={:.1}ms e2e={:.1}ms",
-            r.id,
-            r.adapter,
-            r.batch_size,
-            r.ttft.as_secs_f64() * 1000.0,
-            r.tpot.as_secs_f64() * 1000.0,
-            r.e2e.as_secs_f64() * 1000.0
+            "model={} params={} layers={} d_model={} adapters={}",
+            m.model,
+            m.dims.param_count,
+            m.dims.n_layers,
+            m.dims.d_model,
+            m.n_adapters
         );
-        ttfts.push(r.ttft.as_secs_f64());
-        if ttfts.len() == n {
-            break;
+        for a in &m.artifacts {
+            println!("  artifact {} (batch={}, seq={})", a.name, a.batch, a.seq);
         }
+        Ok(())
     }
-    let s = serverless_lora::util::stats::summarize(&ttfts);
-    println!(
-        "served {} requests: TTFT mean {:.1} ms p99 {:.1} ms",
-        s.count,
-        s.mean * 1000.0,
-        s.p99 * 1000.0
-    );
-    Ok(())
+
+    /// Minimal real-serving demo: spin up the PJRT server, push a burst
+    /// of requests across all adapters, report latencies.
+    pub fn serve_demo(model: &str, n: usize, batch: usize) -> anyhow::Result<()> {
+        let dir = Manifest::default_dir(model);
+        let manifest = Manifest::load(&dir)?;
+        println!(
+            "serving {} ({} params, {} adapters) — PJRT CPU, shared backbone",
+            manifest.model, manifest.dims.param_count, manifest.n_adapters
+        );
+        let (tx, rx) = server::spawn(
+            dir,
+            server::ServerConfig {
+                max_batch: batch,
+                batch_delay: std::time::Duration::from_millis(20),
+            },
+        );
+        for i in 0..n as u64 {
+            tx.send(server::LiveRequest {
+                id: i,
+                adapter: (i as usize) % manifest.n_adapters,
+                prompt: (0..12).map(|t| ((i as i32) * 7 + t) % 100).collect(),
+                max_new_tokens: 8,
+            })?;
+        }
+        drop(tx);
+        let mut ttfts = Vec::new();
+        while let Ok(r) = rx.recv_timeout(std::time::Duration::from_secs(300)) {
+            println!(
+                "  req {} adapter={} batch={} ttft={:.1}ms tpot={:.1}ms e2e={:.1}ms",
+                r.id,
+                r.adapter,
+                r.batch_size,
+                r.ttft.as_secs_f64() * 1000.0,
+                r.tpot.as_secs_f64() * 1000.0,
+                r.e2e.as_secs_f64() * 1000.0
+            );
+            ttfts.push(r.ttft.as_secs_f64());
+            if ttfts.len() == n {
+                break;
+            }
+        }
+        let s = serverless_lora::util::stats::summarize(&ttfts);
+        println!(
+            "served {} requests: TTFT mean {:.1} ms p99 {:.1} ms",
+            s.count,
+            s.mean * 1000.0,
+            s.p99 * 1000.0
+        );
+        Ok(())
+    }
+}
+
+/// Without the `pjrt` feature the real-runtime subcommands explain how to
+/// enable themselves instead of failing to link.
+#[cfg(not(feature = "pjrt"))]
+mod pjrt {
+    pub fn info(_model: &str) -> anyhow::Result<()> {
+        unavailable()
+    }
+
+    pub fn serve_demo(_model: &str, _n: usize, _batch: usize) -> anyhow::Result<()> {
+        unavailable()
+    }
+
+    fn unavailable() -> anyhow::Result<()> {
+        Err(anyhow::anyhow!(
+            "this binary was built without the `pjrt` feature. To serve the \
+             real model: on a networked machine, add `xla = \"0.1\"` to \
+             rust/Cargo.toml [dependencies], then `cargo build --features pjrt` \
+             (see the feature note in Cargo.toml)"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(args: &[&str]) -> (Vec<String>, BTreeMap<String, String>) {
+        let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        parse_flags(&v, BOOL_FLAGS)
+    }
+
+    #[test]
+    fn negative_number_binds_as_value() {
+        let (pos, flags) = p(&["simulate", "--delay", "-0.5"]);
+        assert_eq!(pos, vec!["simulate"]);
+        assert_eq!(flags.get("delay").map(String::as_str), Some("-0.5"));
+    }
+
+    #[test]
+    fn boolean_flag_before_positional_keeps_positional() {
+        // The old parser swallowed `simulate` as the value of `--all`.
+        let (pos, flags) = p(&["--all", "simulate"]);
+        assert_eq!(pos, vec!["simulate"]);
+        assert_eq!(flags.get("all").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let (pos, flags) = p(&["simulate", "--full"]);
+        assert_eq!(pos, vec!["simulate"]);
+        assert_eq!(flags.get("full").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn equals_syntax_binds() {
+        let (_, flags) = p(&["--exp=fig6", "--jobs=4"]);
+        assert_eq!(flags.get("exp").map(String::as_str), Some("fig6"));
+        assert_eq!(flags.get("jobs").map(String::as_str), Some("4"));
+    }
+
+    #[test]
+    fn value_flag_followed_by_flag_stays_boolean() {
+        let (_, flags) = p(&["--exp", "--all"]);
+        assert_eq!(flags.get("exp").map(String::as_str), Some("true"));
+        assert_eq!(flags.get("all").map(String::as_str), Some("true"));
+    }
+
+    #[test]
+    fn double_dash_ends_flag_parsing() {
+        let (pos, flags) = p(&["--jobs", "2", "--", "--weird-positional"]);
+        assert_eq!(flags.get("jobs").map(String::as_str), Some("2"));
+        assert_eq!(pos, vec!["--weird-positional"]);
+    }
+
+    #[test]
+    fn normal_value_flags_still_work() {
+        let (pos, flags) = p(&["simulate", "--exp", "fig6", "--jobs", "4"]);
+        assert_eq!(pos, vec!["simulate"]);
+        assert_eq!(flags.get("exp").map(String::as_str), Some("fig6"));
+        assert_eq!(flags.get("jobs").map(String::as_str), Some("4"));
+    }
 }

@@ -85,6 +85,18 @@ impl RequestOutcome {
     }
 }
 
+/// Extra run statistics beyond per-request metrics: counters the engine
+/// and the policy layer (coordinator::policy) both write to.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub offload_events: usize,
+    pub offloaded_gb: f64,
+    pub preload_decisions: usize,
+    pub blocked_dispatches: usize,
+    pub cold_dispatches: usize,
+    pub warm_dispatches: usize,
+}
+
 /// Aggregated metrics for one run of one system.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {

@@ -1,0 +1,59 @@
+//! Event-integrated billing: between two events the engine samples every
+//! GPU's billable state (resident GB, active vs idle, warm residents) and
+//! hands the sample to the bundle's `BillingModel`. The engine never
+//! decides *how* resource-time prices — serverless GB·s vs serverful flat
+//! billing is entirely the policy's call.
+
+use std::collections::BTreeSet;
+
+use crate::artifact::params;
+use crate::cluster::GpuId;
+use crate::coordinator::policy::GpuBillSample;
+use crate::sim::dispatch::BatchState;
+use crate::sim::engine::Engine;
+
+impl Engine {
+    /// Integrate cost over `[last_bill_t, until)`.
+    pub(super) fn bill_interval(&mut self, until: f64) {
+        let dt = until - self.last_bill_t;
+        if dt <= 0.0 || !self.policies.billing.needs_interval() {
+            self.last_bill_t = until.max(self.last_bill_t);
+            return;
+        }
+        // GPUs with an in-flight artifact load count as active: loading
+        // bills like execution (the instance is allocated and working).
+        let loading: BTreeSet<GpuId> = self
+            .batches
+            .values()
+            .filter(|b| b.state == BatchState::Loading)
+            .map(|b| b.gpu)
+            .collect();
+        for g in self.cluster.gpu_ids() {
+            let gpu = self.cluster.gpu(g);
+            let used = gpu.used_gb() - params::GPU_RESERVED_GB;
+            let active = self.execs[&g].is_active() || loading.contains(&g);
+            // Idle (keep-alive) billing applies to *user instances* kept
+            // warm after an invocation. Artifacts staged by a pre-loading
+            // agent in the provider's idle pool are not billed to the
+            // user (§2.4: "pre-loading without extra wastage") — so idle
+            // GB·s accrue only while some keep-alive-warm function
+            // resides on this GPU. Only the idle, non-empty case reads
+            // this flag, so skip the resident scan everywhere else (this
+            // runs between every pair of events).
+            let warm_resident = !active
+                && used > 0.0
+                && gpu
+                    .resident_functions()
+                    .iter()
+                    .any(|&f| self.keepalive.is_warm(f, self.last_bill_t));
+            let sample = GpuBillSample {
+                used_gb: used,
+                total_gb: gpu.total_gb,
+                active,
+                warm_resident,
+            };
+            self.policies.billing.bill_gpu(&sample, dt, &mut self.cost);
+        }
+        self.last_bill_t = until;
+    }
+}

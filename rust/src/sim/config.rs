@@ -1,8 +1,21 @@
 //! System configurations: ServerlessLoRA, its ablation variants (§6.6),
-//! and the four baselines (§6.1) — all expressed as policy knobs over the
-//! same cluster substrate, so every comparison is policy-vs-policy on
-//! equal hardware (see DESIGN.md §1 "Substitutions").
+//! the four baselines (§6.1), and plug-in systems (Predictive-LoRA) — all
+//! expressed as policy knobs over the same cluster substrate, so every
+//! comparison is policy-vs-policy on equal hardware (see DESIGN.md §1
+//! "Substitutions").
+//!
+//! A `SystemConfig` is a *builder of policy bundles*: [`SystemConfig::bundle`]
+//! turns the declarative knobs into the trait objects
+//! (`coordinator::policy::{PreloadPolicy, BatchingPolicy, OffloadPolicy,
+//! BillingModel}`) the engine actually consults. Adding a new system means
+//! adding a bundle constructor here — never touching the engine core.
 
+use crate::coordinator::policy::{
+    AdaptiveBatching, BatchingPolicy, BillingModel, DynamicOffload, FastCheckpointPreload,
+    FixedBatching, FullPreload, NoOffload, NoPreload, OffloadPolicy, OpportunisticPreload,
+    PolicyBundle, PredictivePreload, PreloadPolicy, ServerfulBilling, ServerfulResident,
+    ServerlessBilling,
+};
 use crate::trace::Pattern;
 
 /// How cold artifacts are staged before an invocation.
@@ -26,6 +39,10 @@ pub enum PreloadMode {
     /// ServerlessLoRA §4.1: full PCKP pre-loading of libraries (container),
     /// backbone+adapter+kernels (GPU), CUDA context pre-warmed.
     Full,
+    /// Predictive pre-loading (Predictive-LoRA-style): per-function EWMA
+    /// arrival-rate forecast; artifacts are staged ahead of predicted
+    /// bursts instead of exhaustively at deploy time.
+    Predictive,
 }
 
 /// Batching policy (§4.2 / §6.6 NAB variants).
@@ -127,6 +144,17 @@ impl SystemConfig {
         }
     }
 
+    /// Predictive-LoRA: a pure policy plug-in — ServerlessLoRA's substrate
+    /// (sharing, adaptive batching, dynamic offload) with forecast-driven
+    /// pre-staging instead of exhaustive deploy-time PCKP.
+    pub fn predictive() -> Self {
+        SystemConfig {
+            name: "Predictive-LoRA",
+            preload: PreloadMode::Predictive,
+            ..Self::serverless_lora()
+        }
+    }
+
     // ---------------------------------------------------------- ablations
 
     /// NBS: no backbone sharing — each function holds a private backbone.
@@ -175,6 +203,44 @@ impl SystemConfig {
     pub fn is_serverless(&self) -> bool {
         !self.serverful
     }
+
+    // ------------------------------------------------------ policy bundles
+
+    /// Build the policy bundle this configuration describes. `seed` feeds
+    /// policy-internal randomness (InstaInfer's predictor churn keeps the
+    /// engine's historical rng stream, so metrics are bit-stable).
+    pub fn bundle(&self, seed: u64) -> PolicyBundle {
+        let preload: Box<dyn PreloadPolicy> = if self.serverful {
+            Box::new(ServerfulResident)
+        } else {
+            match self.preload {
+                PreloadMode::None => Box::new(NoPreload),
+                PreloadMode::FastCheckpoint => Box::new(FastCheckpointPreload),
+                PreloadMode::ContainerOpportunistic { hit_rate } => {
+                    Box::new(OpportunisticPreload::new(hit_rate, seed))
+                }
+                PreloadMode::Full => Box::new(FullPreload),
+                PreloadMode::Predictive => Box::new(PredictivePreload::default()),
+            }
+        };
+        let batching: Box<dyn BatchingPolicy> = match self.batching {
+            BatchingMode::Adaptive => Box::new(AdaptiveBatching),
+            BatchingMode::Fixed { size, delay_s } => {
+                Box::new(FixedBatching { size, delay_s })
+            }
+        };
+        let offload: Box<dyn OffloadPolicy> = if self.dynamic_offload {
+            Box::new(DynamicOffload)
+        } else {
+            Box::new(NoOffload)
+        };
+        let billing: Box<dyn BillingModel> = if self.serverful {
+            Box::new(ServerfulBilling)
+        } else {
+            Box::new(ServerlessBilling { sharing: self.backbone_sharing })
+        };
+        PolicyBundle { preload, batching, offload, billing }
+    }
 }
 
 #[cfg(test)]
@@ -214,5 +280,44 @@ mod tests {
     #[should_panic]
     fn nab_out_of_range_panics() {
         SystemConfig::nab(4);
+    }
+
+    #[test]
+    fn predictive_differs_only_in_preload() {
+        let p = SystemConfig::predictive();
+        let full = SystemConfig::serverless_lora();
+        assert_eq!(p.preload, PreloadMode::Predictive);
+        assert_eq!(p.backbone_sharing, full.backbone_sharing);
+        assert_eq!(p.dynamic_offload, full.dynamic_offload);
+        assert!(matches!(p.batching, BatchingMode::Adaptive));
+        assert!(p.is_serverless());
+    }
+
+    #[test]
+    fn bundles_map_knobs_to_policies() {
+        let b = SystemConfig::serverless_lora().bundle(1);
+        assert_eq!(b.preload.name(), "full-pckp");
+        assert_eq!(b.batching.name(), "adaptive");
+        assert_eq!(b.offload.name(), "dynamic");
+        assert_eq!(b.billing.name(), "serverless");
+
+        let b = SystemConfig::serverless_llm().bundle(1);
+        assert_eq!(b.preload.name(), "fast-checkpoint");
+        assert_eq!(b.batching.name(), "fixed");
+        assert_eq!(b.offload.name(), "block");
+
+        let b = SystemConfig::instainfer(Pattern::Normal).bundle(1);
+        assert_eq!(b.preload.name(), "container-opportunistic");
+
+        let b = SystemConfig::vllm().bundle(1);
+        assert_eq!(b.preload.name(), "serverful-resident");
+        assert_eq!(b.billing.name(), "serverful");
+
+        let b = SystemConfig::npl().bundle(1);
+        assert_eq!(b.preload.name(), "none");
+        let b = SystemConfig::ndo().bundle(1);
+        assert_eq!(b.offload.name(), "block");
+        let b = SystemConfig::predictive().bundle(1);
+        assert_eq!(b.preload.name(), "predictive-ewma");
     }
 }

@@ -1,0 +1,542 @@
+//! Batch lifecycle: arrival → queueing → routing → artifact loading →
+//! prefill → decode → finalisation. The mechanism half of the dispatch
+//! path; every policy decision (fire-now, desired size, cold-start
+//! pricing, memory-pressure resolution) is delegated to the
+//! `coordinator::policy` traits in the engine's [`PolicyBundle`].
+
+use std::collections::BTreeMap;
+
+use crate::artifact::{params, ArtifactKind, FunctionSpec};
+use crate::cluster::{ContainerId, GpuId};
+use crate::coordinator::policy::{LoadQuery, PolicyEnv};
+use crate::coordinator::{Queued, Readiness, Router};
+use crate::metrics::{Phase, RequestOutcome};
+use crate::sim::engine::Engine;
+use crate::sim::events::EventKind;
+use crate::trace::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(super) enum BatchState {
+    Loading,
+    Prefill,
+    Decode,
+}
+
+#[derive(Debug, Clone)]
+pub(super) struct Batch {
+    pub(super) function: usize,
+    pub(super) gpu: GpuId,
+    pub(super) requests: Vec<Request>,
+    pub(super) load_phases: BTreeMap<Phase, f64>,
+    pub(super) t_dispatch: f64,
+    pub(super) t_exec_start: f64,
+    pub(super) prefill_wall: f64,
+    pub(super) state: BatchState,
+    /// Reserved KV GB (kept for observability / debug assertions).
+    #[allow(dead_code)]
+    pub(super) kv_gb: f64,
+    pub(super) attached_backbone: bool,
+}
+
+impl Engine {
+    // ---------------------------------------------------------- arrivals
+
+    pub(super) fn on_arrival(&mut self, i: usize) {
+        let req = self.requests[i].clone();
+        let f = req.function;
+        self.queues[f].push(Queued { request: req.id, arrival_s: req.arrival_s });
+        self.try_dispatch_all(Some(f));
+        // Forecast hooks fire AFTER this arrival's dispatch attempt: a
+        // predictive agent stages in the background, so its work becomes
+        // visible to *later* arrivals — the triggering request must not
+        // skip load phases via a physically instantaneous preload.
+        {
+            let mut env = PolicyEnv {
+                cluster: &mut self.cluster,
+                registry: &mut self.registry,
+                functions: &self.functions,
+                rates: &self.rates,
+                sharing: self.cfg.backbone_sharing,
+                dedicated: &mut self.dedicated,
+                stats: &mut self.stats,
+            };
+            self.policies.preload.on_arrival(f, req.arrival_s, &mut env);
+        }
+        // Wakeups: debounce settle-point and the Eq. 3 expiry.
+        if !self.queues[f].is_empty() {
+            self.events.push(
+                self.now + crate::coordinator::batching::DEBOUNCE_S + 1e-3,
+                EventKind::QueueCheck(f),
+            );
+        }
+        if let Some(t) = self.policies.batching.expiry_time(&self.queues[f]) {
+            if t.is_finite() && t > self.now {
+                self.events.push(t, EventKind::QueueCheck(f));
+            }
+        }
+    }
+
+    pub(super) fn should_dispatch(&self, f: usize) -> bool {
+        let target_idle = || self.target_gpu_idle(f);
+        self.policies
+            .batching
+            .should_dispatch(&self.queues[f], self.now, &target_idle)
+    }
+
+    /// Is the GPU this function would route to free to take a prefill now?
+    /// Decode-phase jobs do not defer dispatch (decode is memory-bound and
+    /// overlaps an incoming prefill well — the reason iteration-level
+    /// batching works); loading batches and prefill-phase batches do.
+    pub(super) fn target_gpu_idle(&self, f: usize) -> bool {
+        let gpu = match self.dedicated.get(&f) {
+            Some(&g) => Some(g),
+            None => Router::route(&self.cluster, &self.registry, self.spec(f), 1)
+                .map(|r| r.gpu),
+        };
+        let Some(g) = gpu else { return false };
+        !self.batches.values().any(|b| {
+            b.gpu == g && matches!(b.state, BatchState::Loading | BatchState::Prefill)
+        })
+    }
+
+    /// Global dispatch loop: repeatedly pick the dispatchable queue with
+    /// the tightest Eq. 5 deadline margin and dispatch it.
+    ///
+    /// With a `hint`, only that function is considered — an arrival can
+    /// only change its own queue's dispatchability (GPU state is
+    /// untouched), so scanning all queues on every arrival would be
+    /// wasted work. Completion/offload events pass `None` for the full
+    /// margin-ordered scan.
+    pub(super) fn try_dispatch_all(&mut self, hint: Option<usize>) {
+        if let Some(f) = hint {
+            while self.should_dispatch(f)
+                && !self.blocked.contains(&f)
+                && self.dispatch(f)
+            {}
+            if self.should_dispatch(f) && !self.blocked.contains(&f) {
+                self.blocked.push(f);
+                self.stats.blocked_dispatches += 1;
+            }
+            return;
+        }
+        loop {
+            let mut ready: Vec<usize> = (0..self.queues.len())
+                .filter(|&f| self.should_dispatch(f) && !self.blocked.contains(&f))
+                .collect();
+            if ready.is_empty() {
+                return;
+            }
+            // Eq. 5 prioritisation (adaptive policies; fixed mode FIFO).
+            if self.policies.batching.prioritise_by_margin() {
+                ready.sort_by(|&a, &b| {
+                    let ma = self.margin(a);
+                    let mb = self.margin(b);
+                    ma.partial_cmp(&mb).unwrap()
+                });
+            }
+            let f = ready[0];
+            if !self.dispatch(f) {
+                self.blocked.push(f);
+                self.stats.blocked_dispatches += 1;
+            }
+        }
+    }
+
+    pub(super) fn margin(&self, f: usize) -> f64 {
+        let gpu_hint = self
+            .dedicated
+            .get(&f)
+            .copied()
+            .or_else(|| self.registry.hosts(self.spec(f).model.name).first().copied());
+        let m = gpu_hint
+            .map(|g| self.execs[&g].contention() + 1)
+            .unwrap_or(1);
+        self.queues[f].deadline_margin(self.now, m)
+    }
+
+    // ---------------------------------------------------------- dispatch
+
+    /// Dispatch one batch for function `f`. Returns false when blocked on
+    /// GPU memory (a blocking offload policy waits; dynamic offloading
+    /// avoids this).
+    pub(super) fn dispatch(&mut self, f: usize) -> bool {
+        let spec = self.spec(f).clone();
+        let gpu = match self.dedicated.get(&f) {
+            Some(&g) => g,
+            None => match Router::route(&self.cluster, &self.registry, &spec, 1) {
+                Some(r) => self.maybe_replicate(&spec, r.gpu),
+                None => return false,
+            },
+        };
+
+        // Desired batch under the policy's sizing rule (Eq. 2 SLO bound
+        // for adaptive, the fixed size otherwise).
+        let want = self.policies.batching.desired_batch(&self.queues[f]);
+
+        // Memory needed: KV for the batch + any artifacts still missing.
+        let readiness = Router::readiness(&self.cluster, &spec, gpu);
+        let mut need_gb = spec.model.kv_per_request_gb * want as f64;
+        if !readiness.backbone_on_gpu {
+            need_gb += spec.model.weights_gb;
+        }
+        if !readiness.adapter_on_gpu {
+            need_gb += spec.model.adapter_gb;
+        }
+        if !readiness.kernel_on_gpu {
+            need_gb += spec.model.kernel_gb;
+        }
+        if !readiness.cuda_context {
+            need_gb += params::CUDA_CONTEXT_GB;
+        }
+
+        if self.cluster.gpu(gpu).free_gb() < need_gb {
+            let spill = self.cluster_spill_target(gpu);
+            let plan = self.policies.offload.try_free(
+                &mut self.cluster,
+                &mut self.registry,
+                gpu,
+                need_gb,
+                &[f],
+                &self.functions,
+                &self.rates,
+                spill,
+            );
+            match plan {
+                Some(plan) => {
+                    self.stats.offload_events += 1;
+                    self.stats.offloaded_gb += plan.freed_gb;
+                    if self.cluster.gpu(gpu).free_gb() < need_gb {
+                        // Even full eviction can't fit: shrink the batch.
+                        let kv_free = self.cluster.gpu(gpu).free_gb()
+                            - (need_gb - spec.model.kv_per_request_gb * want as f64);
+                        let fit = (kv_free / spec.model.kv_per_request_gb).floor() as i64;
+                        if fit < 1 {
+                            return false;
+                        }
+                    }
+                }
+                None => {
+                    // Blocking policy: wait until completions free memory.
+                    let kv_free = self.cluster.gpu(gpu).free_gb()
+                        - (need_gb - spec.model.kv_per_request_gb * want as f64);
+                    if (kv_free / spec.model.kv_per_request_gb).floor() < 1.0 {
+                        return false;
+                    }
+                }
+            }
+        }
+
+        // Final batch size bounded by what actually fits.
+        let fixed_gb = need_gb - spec.model.kv_per_request_gb * want as f64;
+        let kv_budget = self.cluster.gpu(gpu).free_gb() - fixed_gb;
+        let cap = (kv_budget / spec.model.kv_per_request_gb).floor().max(0.0) as usize;
+        if cap == 0 {
+            return false;
+        }
+        let taken = self.queues[f].take_batch(cap.min(want));
+        debug_assert!(!taken.is_empty());
+        let reqs: Vec<Request> = taken
+            .iter()
+            .map(|q| self.requests[self.request_index[&q.request]].clone())
+            .collect();
+        let b = reqs.len();
+
+        // Mutate ledgers: make everything resident, reserve KV.
+        let batch_id = self.next_batch;
+        self.next_batch += 1;
+        let mut load_phases = self.make_resident(f, &spec, gpu, readiness);
+        let kv_gb = spec.model.kv_per_request_gb * b as f64;
+        self.cluster
+            .gpu_mut(gpu)
+            .reserve_kv(batch_id, kv_gb)
+            .expect("kv sized to fit");
+        let attached = if self.cfg.backbone_sharing {
+            self.registry
+                .attach(&mut self.cluster, spec.model.name, gpu, f)
+                .is_ok()
+        } else {
+            false
+        };
+
+        // §4.2: batching "avoid[s] creating new instances". A dispatch
+        // while this function already has in-flight batches forces the
+        // platform to scale out a NEW process instance: it pays its own
+        // CUDA context plus per-context kernel handles (contexts are
+        // per-process; pre-loaded artifacts shortcut the JIT but not the
+        // context). This is what makes no-batching (NAB#1) slow under
+        // concurrency even when everything is pre-loaded.
+        let concurrent = self.batches.values().any(|b| b.function == f);
+        if concurrent && !self.cfg.serverful {
+            *load_phases.entry(Phase::ContainerInit).or_insert(0.0) +=
+                params::CUDA_CONTEXT_INIT_S;
+            *load_phases.entry(Phase::KernelCompile).or_insert(0.0) +=
+                self.policies.preload.scaleout_kernel_s(f, &spec.model);
+        }
+
+        let total_load: f64 = load_phases.values().sum();
+        if total_load > 0.0 {
+            self.stats.cold_dispatches += 1;
+        } else {
+            self.stats.warm_dispatches += 1;
+        }
+        self.batches.insert(
+            batch_id,
+            Batch {
+                function: f,
+                gpu,
+                requests: reqs,
+                load_phases,
+                t_dispatch: self.now,
+                t_exec_start: 0.0,
+                prefill_wall: 0.0,
+                state: BatchState::Loading,
+                kv_gb,
+                attached_backbone: attached,
+            },
+        );
+        self.events.push(self.now + total_load, EventKind::LoadDone(batch_id));
+        true
+    }
+
+    /// Locality-vs-contention trade (§3.1 challenge 3): the router prefers
+    /// GPUs that already host the backbone, but when every host is
+    /// congested and a colder GPU has room for another shared copy, pay
+    /// the one-time replica load — all later functions of this model
+    /// attach to it for free.
+    pub(super) fn maybe_replicate(&self, spec: &FunctionSpec, routed: GpuId) -> GpuId {
+        if !self.cfg.backbone_sharing {
+            return routed;
+        }
+        let contention = self.execs[&routed].contention();
+        if contention < 2 {
+            return routed;
+        }
+        let need = spec.model.gpu_resident_gb() + spec.model.kv_per_request_gb;
+        self.cluster
+            .gpu_ids()
+            .into_iter()
+            .filter(|&g| {
+                self.execs[&g].contention() == 0 && self.cluster.gpu(g).free_gb() >= need
+            })
+            .max_by(|&a, &b| {
+                self.cluster
+                    .gpu(a)
+                    .free_gb()
+                    .partial_cmp(&self.cluster.gpu(b).free_gb())
+                    .unwrap()
+            })
+            .unwrap_or(routed)
+    }
+
+    pub(super) fn cluster_spill_target(&self, gpu: GpuId) -> Option<ContainerId> {
+        self.cluster
+            .nodes
+            .get(gpu.node)
+            .and_then(|n| n.containers.first())
+            .map(|c| c.id)
+    }
+
+    /// Make all artifacts of `f` resident on `gpu`, returning the phase →
+    /// latency map for whatever had to be loaded (§6.3 breakdown). The
+    /// preload policy prices the phases; the ledger mutations below are
+    /// mechanism, identical for every policy.
+    pub(super) fn make_resident(
+        &mut self,
+        f: usize,
+        spec: &FunctionSpec,
+        gpu: GpuId,
+        ready: Readiness,
+    ) -> BTreeMap<Phase, f64> {
+        let m = &spec.model;
+        // A pre-warmed instance (policy-staged kernels + CUDA context) is
+        // as good as a keep-alive-warm one — the §6.3 claim that fully
+        // pre-loaded cold starts run at warm-start speed.
+        let warm_instance = self.policies.preload.prewarmed(ready)
+            || (self.keepalive.is_warm(f, self.now) && ready.cuda_context);
+        let container_has = |kind: ArtifactKind| {
+            self.cluster
+                .container_ids()
+                .iter()
+                .any(|&c| self.cluster.container(c).has(f, kind))
+        };
+        // Backbone staging copies are per-model, not per-function: any
+        // function of the same model can read the host-RAM copy.
+        let container_has_model_backbone = {
+            let same_model: Vec<usize> = self
+                .functions
+                .iter()
+                .filter(|s| s.model.name == m.name)
+                .map(|s| s.id)
+                .collect();
+            self.cluster.container_ids().iter().any(|&c| {
+                same_model
+                    .iter()
+                    .any(|&fid| self.cluster.container(c).has(fid, ArtifactKind::Backbone))
+            })
+        };
+        let query = LoadQuery {
+            function: f,
+            model: m,
+            ready,
+            warm_instance,
+            container_has_library: container_has(ArtifactKind::Library),
+            container_has_adapter: container_has(ArtifactKind::Adapter),
+            container_has_own_backbone: container_has(ArtifactKind::Backbone),
+            container_has_model_backbone,
+        };
+        let phases = self.policies.preload.load_phases(&query);
+
+        // Ledger mutations, driven by readiness alone.
+        if !ready.backbone_on_gpu {
+            if self.cfg.backbone_sharing {
+                self.registry
+                    .load(&mut self.cluster, m.name, m.weights_gb, gpu)
+                    .expect("sized in dispatch");
+            } else {
+                self.cluster
+                    .gpu_mut(gpu)
+                    .place_artifact(f, ArtifactKind::Backbone, m.weights_gb)
+                    .expect("sized in dispatch");
+            }
+        }
+        if !ready.adapter_on_gpu {
+            self.cluster
+                .gpu_mut(gpu)
+                .place_artifact(f, ArtifactKind::Adapter, m.adapter_gb)
+                .expect("sized in dispatch");
+        }
+        if !ready.kernel_on_gpu {
+            self.cluster
+                .gpu_mut(gpu)
+                .place_artifact(f, ArtifactKind::CudaKernel, m.kernel_gb)
+                .expect("sized in dispatch");
+        }
+        if !ready.cuda_context {
+            self.cluster
+                .gpu_mut(gpu)
+                .create_cuda_context(f)
+                .expect("sized in dispatch");
+        }
+        phases
+    }
+
+    // ------------------------------------------------------- exec events
+
+    pub(super) fn on_load_done(&mut self, batch_id: u64) {
+        let (gpu, f, b) = {
+            let batch = self.batches.get_mut(&batch_id).expect("batch exists");
+            batch.state = BatchState::Prefill;
+            batch.t_exec_start = self.now;
+            (batch.gpu, batch.function, batch.requests.len())
+        };
+        let work = self.spec(f).model.prefill_s(b);
+        let exec = self.execs.get_mut(&gpu).unwrap();
+        exec.add(self.now, batch_id, work);
+        self.schedule_tick(gpu);
+    }
+
+    pub(super) fn schedule_tick(&mut self, gpu: GpuId) {
+        let exec = &self.execs[&gpu];
+        if let Some((_, t)) = exec.next_completion() {
+            let v = exec.version;
+            self.events.push(t.max(self.now), EventKind::GpuTick(gpu, v));
+        }
+    }
+
+    pub(super) fn on_gpu_tick(&mut self, gpu: GpuId, version: u64) {
+        if self.execs[&gpu].version != version {
+            return; // stale
+        }
+        let finished = self.execs.get_mut(&gpu).unwrap().finished_at(self.now);
+        for id in finished {
+            self.on_job_done(id);
+        }
+        self.schedule_tick(gpu);
+    }
+
+    pub(super) fn on_job_done(&mut self, batch_id: u64) {
+        let state = self.batches[&batch_id].state;
+        match state {
+            BatchState::Prefill => {
+                let (gpu, f, b, max_out) = {
+                    let batch = self.batches.get_mut(&batch_id).unwrap();
+                    batch.prefill_wall = self.now - batch.t_exec_start;
+                    batch.state = BatchState::Decode;
+                    (
+                        batch.gpu,
+                        batch.function,
+                        batch.requests.len(),
+                        batch.requests.iter().map(|r| r.output_tokens).max().unwrap(),
+                    )
+                };
+                let work = self.spec(f).model.tpot_at(b) * max_out as f64;
+                let exec = self.execs.get_mut(&gpu).unwrap();
+                exec.add_weighted(
+                    self.now,
+                    batch_id,
+                    work,
+                    crate::sim::exec::DECODE_WEIGHT,
+                );
+                self.schedule_tick(gpu);
+                // Prefill slot freed: queues waiting on this GPU may go.
+                self.try_dispatch_all(None);
+            }
+            BatchState::Decode => self.finalize_batch(batch_id),
+            BatchState::Loading => unreachable!("loading batches are not exec jobs"),
+        }
+    }
+
+    pub(super) fn finalize_batch(&mut self, batch_id: u64) {
+        let batch = self.batches.remove(&batch_id).expect("batch exists");
+        let f = batch.function;
+        let b = batch.requests.len();
+        let decode_start = batch.t_exec_start + batch.prefill_wall;
+        let decode_wall = self.now - decode_start;
+        let max_out = batch
+            .requests
+            .iter()
+            .map(|r| r.output_tokens)
+            .max()
+            .unwrap()
+            .max(1) as f64;
+
+        for r in &batch.requests {
+            let mut phases = batch.load_phases.clone();
+            let queue_wait = batch.t_dispatch - r.arrival_s;
+            *phases.entry(Phase::Queue).or_insert(0.0) += queue_wait.max(0.0);
+            phases.insert(Phase::Prefill, batch.prefill_wall);
+            // Requests stop decoding at their own length; wall time scales
+            // proportionally under processor sharing.
+            let own_decode = decode_wall * r.output_tokens as f64 / max_out;
+            phases.insert(Phase::Decode, own_decode);
+            let tpot = own_decode / r.output_tokens.max(1) as f64;
+            let outcome: RequestOutcome =
+                crate::metrics::outcome_from_phases(r, phases, tpot, b);
+            self.metrics.record(outcome);
+        }
+
+        // Release resources.
+        self.cluster.gpu_mut(batch.gpu).release_kv(batch_id);
+        if batch.attached_backbone {
+            let model = self.spec(f).model.name.to_string();
+            let _ = self
+                .registry
+                .detach(&mut self.cluster, &crate::sharing::IpcHandle {
+                    model,
+                    gpu: batch.gpu,
+                    function: f,
+                });
+        }
+        // Keep-alive (serverless) and wakeup for its expiry.
+        if !self.cfg.serverful {
+            self.keepalive.touch(f, self.now);
+            let t = self.now + self.keepalive.window_s;
+            if t.is_finite() {
+                self.events.push(t, EventKind::KeepaliveCheck);
+            }
+        }
+        // Memory freed: retry blocked + any dispatchable queues.
+        self.blocked.clear();
+        self.try_dispatch_all(None);
+    }
+}

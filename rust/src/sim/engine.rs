@@ -1,27 +1,30 @@
-//! Discrete-event serving simulator.
+//! Discrete-event serving simulator — the thin orchestrator.
 //!
-//! Drives one `SystemConfig` (ServerlessLoRA, an ablation, or a baseline)
-//! over a trace on the simulated cluster: arrivals → batching → routing →
-//! artifact loading → prefill → decode, with processor-sharing GPU
-//! contention (Eq. 4), strict memory ledgers, keep-alive, dynamic
-//! offloading, and event-integrated billing.
+//! Drives one `SystemConfig` over a trace on the simulated cluster. The
+//! engine core owns *mechanism only*: the event loop (`sim::events`), the
+//! batch lifecycle (`sim::dispatch`: arrival → load → prefill → decode),
+//! and event-integrated billing (`sim::billing`). Every *policy* decision
+//! — what is pre-staged and what a cold start costs, when a batch fires,
+//! how memory pressure is resolved, how resource-time turns into dollars
+//! — is routed through the `coordinator::policy` traits carried in the
+//! [`PolicyBundle`] that `SystemConfig::bundle` builds. Adding a system
+//! touches the config layer, never this file.
 
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 
-use crate::artifact::{params, ArtifactKind, FunctionSpec};
+use crate::artifact::{ArtifactKind, FunctionSpec};
 use crate::cluster::{Cluster, GpuId};
-use crate::coordinator::{
-    BatchQueue, DynamicOffloader, FunctionDemand, KeepAlive, PreloadScheduler,
-    Queued, Router,
-};
+use crate::coordinator::policy::{PolicyBundle, PolicyEnv};
+use crate::coordinator::{BatchQueue, KeepAlive};
 use crate::cost::CostTracker;
-use crate::metrics::{Phase, RequestOutcome, RunMetrics};
+use crate::metrics::RunMetrics;
+pub use crate::metrics::RunStats;
 use crate::sharing::BackboneRegistry;
-use crate::sim::config::{BatchingMode, PreloadMode, SystemConfig};
+use crate::sim::config::SystemConfig;
+use crate::sim::dispatch::Batch;
+use crate::sim::events::{EventKind, EventQueue};
 use crate::sim::exec::GpuExec;
 use crate::trace::Request;
-use crate::util::rng::Pcg64;
 
 /// A workload: functions + merged time-ordered request stream.
 #[derive(Debug, Clone)]
@@ -33,99 +36,32 @@ pub struct Workload {
     pub rates: Vec<f64>,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum BatchState {
-    Loading,
-    Prefill,
-    Decode,
-}
-
-#[derive(Debug, Clone)]
-struct Batch {
-    function: usize,
-    gpu: GpuId,
-    requests: Vec<Request>,
-    load_phases: BTreeMap<Phase, f64>,
-    t_dispatch: f64,
-    t_exec_start: f64,
-    prefill_wall: f64,
-    state: BatchState,
-    /// Reserved KV GB (kept for observability / debug assertions).
-    #[allow(dead_code)]
-    kv_gb: f64,
-    attached_backbone: bool,
-}
-
-#[derive(Debug, Clone, PartialEq)]
-enum EventKind {
-    Arrival(usize),
-    QueueCheck(usize),
-    LoadDone(u64),
-    GpuTick(GpuId, u64),
-    KeepaliveCheck,
-}
-
-#[derive(Debug, Clone, PartialEq)]
-struct Event {
-    t: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t
-            .total_cmp(&other.t)
-            .then(self.seq.cmp(&other.seq))
-    }
-}
-
-/// Extra run statistics beyond per-request metrics.
-#[derive(Debug, Clone, Default)]
-pub struct RunStats {
-    pub offload_events: usize,
-    pub offloaded_gb: f64,
-    pub preload_decisions: usize,
-    pub blocked_dispatches: usize,
-    pub cold_dispatches: usize,
-    pub warm_dispatches: usize,
-}
-
 pub struct Engine {
-    cfg: SystemConfig,
-    cluster: Cluster,
-    registry: BackboneRegistry,
-    keepalive: KeepAlive,
-    functions: Vec<FunctionSpec>,
-    rates: Vec<f64>,
-    queues: Vec<BatchQueue>,
-    /// Fixed-mode per-function dispatch params (None ⇒ adaptive).
-    fixed: Option<(usize, f64)>,
-    execs: BTreeMap<GpuId, GpuExec>,
-    events: BinaryHeap<Reverse<Event>>,
-    seq: u64,
-    now: f64,
-    batches: BTreeMap<u64, Batch>,
-    next_batch: u64,
+    pub(super) cfg: SystemConfig,
+    pub(super) policies: PolicyBundle,
+    pub(super) cluster: Cluster,
+    pub(super) registry: BackboneRegistry,
+    pub(super) keepalive: KeepAlive,
+    pub(super) functions: Vec<FunctionSpec>,
+    pub(super) rates: Vec<f64>,
+    pub(super) queues: Vec<BatchQueue>,
+    pub(super) execs: BTreeMap<GpuId, GpuExec>,
+    pub(super) events: EventQueue,
+    pub(super) now: f64,
+    pub(super) batches: BTreeMap<u64, Batch>,
+    pub(super) next_batch: u64,
     /// Functions blocked on GPU memory (NDO): retried on completions.
-    blocked: Vec<usize>,
-    rng: Pcg64,
+    pub(super) blocked: Vec<usize>,
     pub metrics: RunMetrics,
     pub cost: CostTracker,
     pub stats: RunStats,
-    last_bill_t: f64,
+    pub(super) last_bill_t: f64,
     /// Serverful: function → dedicated GPU.
-    dedicated: BTreeMap<usize, GpuId>,
-    requests: Vec<Request>,
+    pub(super) dedicated: BTreeMap<usize, GpuId>,
+    pub(super) requests: Vec<Request>,
     /// request id → index in `requests` (dispatch-path lookup).
-    request_index: std::collections::HashMap<u64, usize>,
-    duration_s: f64,
+    pub(super) request_index: HashMap<u64, usize>,
+    pub(super) duration_s: f64,
 }
 
 impl Engine {
@@ -135,28 +71,26 @@ impl Engine {
             .iter()
             .map(|f| BatchQueue::new(f.id, &f.model))
             .collect();
-        let fixed = match cfg.batching {
-            BatchingMode::Adaptive => None,
-            BatchingMode::Fixed { size, delay_s } => Some((size, delay_s)),
-        };
-        let execs = cluster.gpu_ids().into_iter().map(|g| (g, GpuExec::default())).collect();
+        let execs = cluster
+            .gpu_ids()
+            .into_iter()
+            .map(|g| (g, GpuExec::default()))
+            .collect();
         let mut e = Engine {
             keepalive: KeepAlive::new(cfg.keepalive_s.min(1e12)),
+            policies: cfg.bundle(seed),
             cfg,
             cluster,
             registry: BackboneRegistry::new(),
             functions: workload.functions,
             rates: workload.rates,
             queues,
-            fixed,
             execs,
-            events: BinaryHeap::new(),
-            seq: 0,
+            events: EventQueue::new(),
             now: 0.0,
             batches: BTreeMap::new(),
             next_batch: 1,
             blocked: Vec::new(),
-            rng: Pcg64::with_stream(seed, 0x51f7),
             metrics: RunMetrics::default(),
             cost: CostTracker::default(),
             stats: RunStats::default(),
@@ -176,177 +110,31 @@ impl Engine {
         e
     }
 
-    fn push_event(&mut self, t: f64, kind: EventKind) {
-        self.seq += 1;
-        self.events.push(Reverse(Event { t, seq: self.seq, kind }));
-    }
-
-    fn spec(&self, f: usize) -> &FunctionSpec {
+    pub(super) fn spec(&self, f: usize) -> &FunctionSpec {
         &self.functions[f]
     }
 
-    // ------------------------------------------------------------- setup
-
+    /// Schedule all arrivals, then let the preload policy stage the
+    /// deployment (PCKP plan, serverful residency, container staging, …).
     fn setup(&mut self) {
         for i in 0..self.requests.len() {
             let t = self.requests[i].arrival_s;
-            self.push_event(t, EventKind::Arrival(i));
+            self.events.push(t, EventKind::Arrival(i));
         }
-        if self.cfg.serverful {
-            self.setup_serverful();
-        } else if self.cfg.preload == PreloadMode::Full {
-            self.run_preloader();
-        } else if let PreloadMode::ContainerOpportunistic { .. } = self.cfg.preload {
-            self.setup_instainfer_containers();
-        }
+        let mut env = PolicyEnv {
+            cluster: &mut self.cluster,
+            registry: &mut self.registry,
+            functions: &self.functions,
+            rates: &self.rates,
+            sharing: self.cfg.backbone_sharing,
+            dedicated: &mut self.dedicated,
+            stats: &mut self.stats,
+        };
+        self.policies.preload.deploy(&mut env);
     }
-
-    /// Serverful: dedicate GPUs and make everything resident up-front.
-    /// vLLM: one deployment per function. dLoRA: one per backbone model
-    /// (its adapters share the backbone in-process).
-    fn setup_serverful(&mut self) {
-        let gpu_ids = self.cluster.gpu_ids();
-        if self.cfg.backbone_sharing {
-            // dLoRA: GPU per distinct model.
-            let mut model_gpu: BTreeMap<&str, GpuId> = BTreeMap::new();
-            let mut next = 0;
-            let specs: Vec<(usize, &'static str, f64, f64, f64)> = self
-                .functions
-                .iter()
-                .map(|f| {
-                    (f.id, f.model.name, f.model.weights_gb, f.model.adapter_gb, f.model.kernel_gb)
-                })
-                .collect();
-            for (id, model, wgb, agb, kgb) in specs {
-                let g = *model_gpu.entry(model).or_insert_with(|| {
-                    let g = gpu_ids[next % gpu_ids.len()];
-                    next += 1;
-                    g
-                });
-                self.registry.load(&mut self.cluster, model, wgb, g).unwrap();
-                let gpu = self.cluster.gpu_mut(g);
-                gpu.place_artifact(id, ArtifactKind::Adapter, agb).unwrap();
-                gpu.place_artifact(id, ArtifactKind::CudaKernel, kgb).unwrap();
-                gpu.create_cuda_context(id).unwrap();
-                self.dedicated.insert(id, g);
-            }
-        } else {
-            // vLLM: GPU per function, private backbone.
-            let specs: Vec<(usize, f64, f64, f64)> = self
-                .functions
-                .iter()
-                .map(|f| (f.id, f.model.weights_gb, f.model.adapter_gb, f.model.kernel_gb))
-                .collect();
-            for (i, (id, wgb, agb, kgb)) in specs.into_iter().enumerate() {
-                let g = gpu_ids[i % gpu_ids.len()];
-                let gpu = self.cluster.gpu_mut(g);
-                gpu.place_artifact(id, ArtifactKind::Backbone, wgb).unwrap();
-                gpu.place_artifact(id, ArtifactKind::Adapter, agb).unwrap();
-                gpu.place_artifact(id, ArtifactKind::CudaKernel, kgb).unwrap();
-                gpu.create_cuda_context(id).unwrap();
-                self.dedicated.insert(id, g);
-            }
-        }
-    }
-
-    /// §4.1 pre-loading at deployment time (Full mode). Also pre-warms
-    /// CUDA contexts on the chosen GPUs (the Agent's pre-warming duty).
-    fn run_preloader(&mut self) {
-        let demands: Vec<FunctionDemand> = self
-            .functions
-            .iter()
-            .zip(&self.rates)
-            .map(|(spec, &rate)| FunctionDemand { spec: spec.clone(), rate })
-            .collect();
-        let sched = PreloadScheduler::default();
-        let plan = sched.plan(&demands, &self.cluster, &self.registry);
-        if self.cfg.backbone_sharing {
-            sched.apply(&plan, &demands, &mut self.cluster, &mut self.registry);
-        } else {
-            // NBS ablation: the same plan, but every function pays for a
-            // *private* backbone copy (best-effort under memory).
-            for d in &plan.decisions {
-                let spec = &self.functions[d.function];
-                match (d.kind, d.placement) {
-                    (ArtifactKind::Backbone, crate::coordinator::Placement::Gpu(g)) => {
-                        let _ = self.cluster.gpu_mut(g).place_artifact(
-                            d.function,
-                            ArtifactKind::Backbone,
-                            spec.model.weights_gb,
-                        );
-                    }
-                    (k, crate::coordinator::Placement::Gpu(g)) => {
-                        let _ = self.cluster.gpu_mut(g).place_artifact(
-                            d.function, k, d.size_gb,
-                        );
-                    }
-                    (k, crate::coordinator::Placement::Container(cid)) => {
-                        let _ = self.cluster.container_mut(cid).place(
-                            d.function, k, d.size_gb,
-                        );
-                    }
-                }
-            }
-        }
-        self.stats.preload_decisions = plan.decisions.len();
-        // Staging copies: one container copy of each model's backbone so
-        // on-demand *replicas* (contention relief) load over PCIe rather
-        // than from SSD. Host RAM is cheap; the PCKP plan covered the
-        // GPU-side placements.
-        let models: Vec<(usize, &'static str, f64)> = self
-            .functions
-            .iter()
-            .map(|s| (s.id, s.model.name, s.model.weights_gb))
-            .collect();
-        let mut staged: std::collections::BTreeSet<&str> = Default::default();
-        let cids = self.cluster.container_ids();
-        for (i, (fid, model, wgb)) in models.into_iter().enumerate() {
-            if staged.insert(model) {
-                let cid = cids[i % cids.len()];
-                let _ = self
-                    .cluster
-                    .container_mut(cid)
-                    .place(fid, ArtifactKind::Backbone, wgb);
-            }
-        }
-        // Pre-warm the process (CUDA context) where the kernel landed.
-        let kernel_sites: Vec<(usize, GpuId)> = plan
-            .decisions
-            .iter()
-            .filter_map(|d| match (d.kind, d.placement) {
-                (ArtifactKind::CudaKernel, crate::coordinator::Placement::Gpu(g)) => {
-                    Some((d.function, g))
-                }
-                _ => None,
-            })
-            .collect();
-        for (f, g) in kernel_sites {
-            let _ = self.cluster.gpu_mut(g).create_cuda_context(f);
-        }
-    }
-
-    /// InstaInfer: libraries + backbone + adapter into idle containers'
-    /// RAM (one function per container slot, round-robin).
-    fn setup_instainfer_containers(&mut self) {
-        let cids = self.cluster.container_ids();
-        let specs: Vec<(usize, f64, f64, f64)> = self
-            .functions
-            .iter()
-            .map(|f| (f.id, f.model.library_gb, f.model.weights_gb, f.model.adapter_gb))
-            .collect();
-        for (i, (id, lib, w, a)) in specs.into_iter().enumerate() {
-            let cid = cids[i % cids.len()];
-            let c = self.cluster.container_mut(cid);
-            let _ = c.place(id, ArtifactKind::Library, lib);
-            let _ = c.place(id, ArtifactKind::Backbone, w);
-            let _ = c.place(id, ArtifactKind::Adapter, a);
-        }
-    }
-
-    // -------------------------------------------------------------- run
 
     pub fn run(mut self) -> (RunMetrics, CostTracker, RunStats) {
-        while let Some(Reverse(ev)) = self.events.pop() {
+        while let Some(ev) = self.events.pop() {
             debug_assert!(ev.t >= self.now - 1e-6, "time went backwards");
             self.bill_interval(ev.t);
             self.now = ev.t;
@@ -358,14 +146,12 @@ impl Engine {
                 EventKind::KeepaliveCheck => self.on_keepalive(),
             }
         }
-        // Final billing to the end of the workload window.
+        // Final billing to the end of the workload window, then the
+        // billing model's settlement (serverful: flat GPU-hours).
         let end = self.duration_s.max(self.now);
         self.bill_interval(end);
-        if self.cfg.serverful {
-            let n: std::collections::BTreeSet<GpuId> =
-                self.dedicated.values().cloned().collect();
-            self.cost.add_serverful(n.len() as f64, end);
-        }
+        let dedicated: BTreeSet<GpuId> = self.dedicated.values().cloned().collect();
+        self.policies.billing.finalize(dedicated.len(), end, &mut self.cost);
         // Throughput denominators use the makespan (last completion),
         // not the arrival window — saturating workloads drain past it.
         let makespan = self
@@ -378,672 +164,13 @@ impl Engine {
         (self.metrics, self.cost, self.stats)
     }
 
-    /// Event-integrated billing (serverless only): between events every
-    /// GPU bills its resident GB at the active rate while it has work,
-    /// else at the keep-alive idle rate.
-    fn bill_interval(&mut self, until: f64) {
-        let dt = until - self.last_bill_t;
-        if dt <= 0.0 || self.cfg.serverful {
-            self.last_bill_t = until.max(self.last_bill_t);
-            return;
-        }
-        let mut loading_gpus: BTreeMap<GpuId, usize> = BTreeMap::new();
-        for b in self.batches.values() {
-            if b.state == BatchState::Loading {
-                *loading_gpus.entry(b.gpu).or_insert(0) += 1;
-            }
-        }
-        for g in self.cluster.gpu_ids() {
-            let gpu = self.cluster.gpu(g);
-            let used = gpu.used_gb() - params::GPU_RESERVED_GB;
-            if used <= 0.0 {
-                continue;
-            }
-            // Without backbone sharing a function occupies its GPU
-            // *exclusively* (§1 Observation: "exclusive GPU occupation") —
-            // serverless platforms bill the whole allocated GPU, not the
-            // bytes actually touched. Sharing is what enables fractional
-            // allocation (and is where the cost win comes from).
-            let billed = if self.cfg.backbone_sharing {
-                used
-            } else {
-                gpu.total_gb
-            };
-            let active = self.execs[&g].is_active() || loading_gpus.contains_key(&g);
-            if active {
-                // CPU/host-mem of the functions actively executing there.
-                self.cost.add_active(billed, dt, 4.0, 16.0);
-            } else {
-                // Idle (keep-alive) billing applies to *user instances*
-                // kept warm after an invocation. Artifacts staged by the
-                // Pre-Loading Agent in the provider's idle pool are not
-                // billed to the user (§2.4: "pre-loading without extra
-                // wastage") — so idle GB-s accrue only while some
-                // keep-alive-warm function resides on this GPU.
-                let warm_resident = self
-                    .cluster
-                    .gpu(g)
-                    .resident_functions()
-                    .iter()
-                    .any(|&f| self.keepalive.is_warm(f, self.last_bill_t));
-                if warm_resident {
-                    self.cost.add_idle(billed, dt, 4.0);
-                }
-            }
-        }
-        self.last_bill_t = until;
-    }
-
-    // ---------------------------------------------------------- arrivals
-
-    fn on_arrival(&mut self, i: usize) {
-        let req = self.requests[i].clone();
-        let f = req.function;
-        self.queues[f].push(Queued { request: req.id, arrival_s: req.arrival_s });
-        self.try_dispatch_all(Some(f));
-        // Wakeups: debounce settle-point and the Eq. 3 expiry.
-        if !self.queues[f].is_empty() {
-            self.push_event(
-                self.now + crate::coordinator::batching::DEBOUNCE_S + 1e-3,
-                EventKind::QueueCheck(f),
-            );
-        }
-        if let Some(t) = self.queue_expiry(f) {
-            if t.is_finite() && t > self.now {
-                self.push_event(t, EventKind::QueueCheck(f));
-            }
-        }
-    }
-
-    fn queue_expiry(&self, f: usize) -> Option<f64> {
-        match self.fixed {
-            None => self.queues[f].expiry_time(),
-            Some((_, delay)) => self.queues[f].oldest_arrival().map(|a| a + delay),
-        }
-    }
-
-    fn should_dispatch(&self, f: usize) -> bool {
-        let q = &self.queues[f];
-        if q.is_empty() {
-            return false;
-        }
-        match self.fixed {
-            // Adaptive (§4.2): fire when full or expired — or once the
-            // arrival stream settles (debounce) and the target GPU has a
-            // free prefill slot. Waiting longer only buys anything under
-            // contention (Eq. 4/5); on a free GPU with a settled queue,
-            // serving now strictly dominates.
-            None => {
-                q.should_dispatch(self.now)
-                    || (q.settled(self.now) && self.target_gpu_idle(f))
-            }
-            Some((size, delay)) => {
-                q.len() >= size
-                    || self.now - q.oldest_arrival().unwrap() >= delay - 1e-9
-            }
-        }
-    }
-
-    /// Is the GPU this function would route to free to take a prefill now?
-    /// Decode-phase jobs do not defer dispatch (decode is memory-bound and
-    /// overlaps an incoming prefill well — the reason iteration-level
-    /// batching works); loading batches and prefill-phase batches do.
-    fn target_gpu_idle(&self, f: usize) -> bool {
-        let gpu = match self.dedicated.get(&f) {
-            Some(&g) => Some(g),
-            None => Router::route(&self.cluster, &self.registry, self.spec(f), 1)
-                .map(|r| r.gpu),
-        };
-        let Some(g) = gpu else { return false };
-        !self.batches.values().any(|b| {
-            b.gpu == g && matches!(b.state, BatchState::Loading | BatchState::Prefill)
-        })
-    }
-
-    /// Global dispatch loop: repeatedly pick the dispatchable queue with
-    /// the tightest Eq. 5 deadline margin and dispatch it.
-    ///
-    /// With a `hint`, only that function is considered — an arrival can
-    /// only change its own queue's dispatchability (GPU state is
-    /// untouched), so scanning all queues on every arrival would be
-    /// wasted work. Completion/offload events pass `None` for the full
-    /// margin-ordered scan.
-    fn try_dispatch_all(&mut self, hint: Option<usize>) {
-        if let Some(f) = hint {
-            while self.should_dispatch(f)
-                && !self.blocked.contains(&f)
-                && self.dispatch(f)
-            {}
-            if self.should_dispatch(f) && !self.blocked.contains(&f) {
-                self.blocked.push(f);
-                self.stats.blocked_dispatches += 1;
-            }
-            return;
-        }
-        loop {
-            let mut ready: Vec<usize> = (0..self.queues.len())
-                .filter(|&f| self.should_dispatch(f) && !self.blocked.contains(&f))
-                .collect();
-            if ready.is_empty() {
-                return;
-            }
-            // Eq. 5 prioritisation (adaptive mode only; fixed mode FIFO).
-            if self.fixed.is_none() {
-                ready.sort_by(|&a, &b| {
-                    let ma = self.margin(a);
-                    let mb = self.margin(b);
-                    ma.partial_cmp(&mb).unwrap()
-                });
-            }
-            let f = ready[0];
-            if !self.dispatch(f) {
-                self.blocked.push(f);
-                self.stats.blocked_dispatches += 1;
-            }
-        }
-    }
-
-    fn margin(&self, f: usize) -> f64 {
-        let gpu_hint = self
-            .dedicated
-            .get(&f)
-            .copied()
-            .or_else(|| self.registry.hosts(self.spec(f).model.name).first().copied());
-        let m = gpu_hint
-            .map(|g| self.execs[&g].contention() + 1)
-            .unwrap_or(1);
-        self.queues[f].deadline_margin(self.now, m)
-    }
-
-    // ---------------------------------------------------------- dispatch
-
-    /// Dispatch one batch for function `f`. Returns false when blocked on
-    /// GPU memory (NDO mode waits; dynamic offloading avoids this).
-    fn dispatch(&mut self, f: usize) -> bool {
-        let spec = self.spec(f).clone();
-        let gpu = match self.dedicated.get(&f) {
-            Some(&g) => g,
-            None => match Router::route(&self.cluster, &self.registry, &spec, 1) {
-                Some(r) => self.maybe_replicate(&spec, r.gpu),
-                None => return false,
-            },
-        };
-
-        // Desired batch under the SLO bound (Eq. 2) / fixed size.
-        let queued = self.queues[f].len();
-        let want = match self.fixed {
-            None => queued.min(self.queues[f].max_batch),
-            Some((size, _)) => queued.min(size),
-        }
-        .max(1);
-
-        // Memory needed: KV for the batch + any artifacts still missing.
-        let readiness = Router::readiness(&self.cluster, &spec, gpu);
-        let mut need_gb = spec.model.kv_per_request_gb * want as f64;
-        if !readiness.backbone_on_gpu {
-            need_gb += spec.model.weights_gb;
-        }
-        if !readiness.adapter_on_gpu {
-            need_gb += spec.model.adapter_gb;
-        }
-        if !readiness.kernel_on_gpu {
-            need_gb += spec.model.kernel_gb;
-        }
-        if !readiness.cuda_context {
-            need_gb += params::CUDA_CONTEXT_GB;
-        }
-
-        if self.cluster.gpu(gpu).free_gb() < need_gb {
-            if self.cfg.dynamic_offload {
-                // §4.3: free Q_g by evicting the least-valuable unrelated
-                // artifacts. Value = reload latency × that fn's rate.
-                let rates = self.rates.clone();
-                let functions = self.functions.clone();
-                let spill = self.cluster_spill_target(gpu);
-                let plan = DynamicOffloader::free(
-                    &mut self.cluster,
-                    &mut self.registry,
-                    gpu,
-                    need_gb,
-                    &[f],
-                    |of, kind| {
-                        let rate = of.map(|x| rates[x]).unwrap_or(0.05);
-                        let reload = match kind {
-                            ArtifactKind::Backbone => of
-                                .map(|x| functions[x].model.weights_gb / params::BW_SSD_GBPS)
-                                .unwrap_or(3.0),
-                            ArtifactKind::Adapter => 0.3,
-                            ArtifactKind::CudaKernel => 2.5,
-                            _ => 0.5,
-                        };
-                        reload * rate
-                    },
-                    spill,
-                );
-                self.stats.offload_events += 1;
-                self.stats.offloaded_gb += plan.freed_gb;
-                if self.cluster.gpu(gpu).free_gb() < need_gb {
-                    // Even full eviction can't fit: shrink the batch.
-                    let kv_free = self.cluster.gpu(gpu).free_gb()
-                        - (need_gb - spec.model.kv_per_request_gb * want as f64);
-                    let fit = (kv_free / spec.model.kv_per_request_gb).floor() as i64;
-                    if fit < 1 {
-                        return false;
-                    }
-                }
-            } else {
-                // NDO / baselines: block until completions free memory.
-                let kv_free = self.cluster.gpu(gpu).free_gb()
-                    - (need_gb - spec.model.kv_per_request_gb * want as f64);
-                if (kv_free / spec.model.kv_per_request_gb).floor() < 1.0 {
-                    return false;
-                }
-            }
-        }
-
-        // Final batch size bounded by what actually fits.
-        let fixed_gb = need_gb - spec.model.kv_per_request_gb * want as f64;
-        let kv_budget = self.cluster.gpu(gpu).free_gb() - fixed_gb;
-        let cap = (kv_budget / spec.model.kv_per_request_gb).floor().max(0.0) as usize;
-        if cap == 0 {
-            return false;
-        }
-        let taken = self.queues[f].take_batch(cap.min(want));
-        debug_assert!(!taken.is_empty());
-        let reqs: Vec<Request> = taken
-            .iter()
-            .map(|q| self.requests[self.request_index[&q.request]].clone())
-            .collect();
-        let b = reqs.len();
-
-        // Mutate ledgers: make everything resident, reserve KV.
-        let batch_id = self.next_batch;
-        self.next_batch += 1;
-        let load_phases = self.make_resident(f, &spec, gpu, readiness);
-        let kv_gb = spec.model.kv_per_request_gb * b as f64;
-        self.cluster
-            .gpu_mut(gpu)
-            .reserve_kv(batch_id, kv_gb)
-            .expect("kv sized to fit");
-        let attached = if self.cfg.backbone_sharing {
-            self.registry
-                .attach(&mut self.cluster, spec.model.name, gpu, f)
-                .is_ok()
-        } else {
-            false
-        };
-
-        // §4.2: batching "avoid[s] creating new instances". A dispatch
-        // while this function already has in-flight batches forces the
-        // platform to scale out a NEW process instance: it pays its own
-        // CUDA context plus per-context kernel handles (contexts are
-        // per-process; pre-loaded artifacts shortcut the JIT but not the
-        // context). This is what makes no-batching (NAB#1) slow under
-        // concurrency even when everything is pre-loaded.
-        let mut load_phases = load_phases;
-        let concurrent = self.batches.values().any(|b| b.function == f);
-        if concurrent && !self.cfg.serverful {
-            *load_phases.entry(Phase::ContainerInit).or_insert(0.0) +=
-                params::CUDA_CONTEXT_INIT_S;
-            let kernel_warm = self.cfg.preload == PreloadMode::Full;
-            *load_phases.entry(Phase::KernelCompile).or_insert(0.0) += if kernel_warm {
-                spec.model.kernel_cache_load_s
-            } else {
-                spec.model.kernel_jit_s
-            };
-        }
-
-        let total_load: f64 = load_phases.values().sum();
-        if total_load > 0.0 {
-            self.stats.cold_dispatches += 1;
-        } else {
-            self.stats.warm_dispatches += 1;
-        }
-        self.batches.insert(
-            batch_id,
-            Batch {
-                function: f,
-                gpu,
-                requests: reqs,
-                load_phases,
-                t_dispatch: self.now,
-                t_exec_start: 0.0,
-                prefill_wall: 0.0,
-                state: BatchState::Loading,
-                kv_gb,
-                attached_backbone: attached,
-            },
-        );
-        self.push_event(self.now + total_load, EventKind::LoadDone(batch_id));
-        true
-    }
-
-    /// Locality-vs-contention trade (§3.1 challenge 3): the router prefers
-    /// GPUs that already host the backbone, but when every host is
-    /// congested and a colder GPU has room for another shared copy, pay
-    /// the one-time replica load — all later functions of this model
-    /// attach to it for free.
-    fn maybe_replicate(&self, spec: &FunctionSpec, routed: GpuId) -> GpuId {
-        if !self.cfg.backbone_sharing {
-            return routed;
-        }
-        let contention = self.execs[&routed].contention();
-        if contention < 2 {
-            return routed;
-        }
-        let need = spec.model.gpu_resident_gb() + spec.model.kv_per_request_gb;
-        self.cluster
-            .gpu_ids()
-            .into_iter()
-            .filter(|&g| {
-                self.execs[&g].contention() == 0 && self.cluster.gpu(g).free_gb() >= need
-            })
-            .max_by(|&a, &b| {
-                self.cluster
-                    .gpu(a)
-                    .free_gb()
-                    .partial_cmp(&self.cluster.gpu(b).free_gb())
-                    .unwrap()
-            })
-            .unwrap_or(routed)
-    }
-
-    fn cluster_spill_target(&self, gpu: GpuId) -> Option<crate::cluster::ContainerId> {
-        self.cluster
-            .nodes
-            .get(gpu.node)
-            .and_then(|n| n.containers.first())
-            .map(|c| c.id)
-    }
-
-    /// Make all artifacts of `f` resident on `gpu`, returning the phase →
-    /// latency map for whatever had to be loaded (§6.3 breakdown).
-    fn make_resident(
-        &mut self,
-        f: usize,
-        spec: &FunctionSpec,
-        gpu: GpuId,
-        ready: crate::coordinator::Readiness,
-    ) -> BTreeMap<Phase, f64> {
-        let mut phases = BTreeMap::new();
-        if self.cfg.serverful {
-            return phases; // always resident
-        }
-        let m = &spec.model;
-        // A pre-warmed instance (Full pre-loading: kernels compiled +
-        // CUDA context created by the Pre-Loading Agent) is as good as a
-        // keep-alive-warm one — this is exactly the §6.3 claim that fully
-        // pre-loaded cold starts run at warm-start speed.
-        let prewarmed = self.cfg.preload == PreloadMode::Full
-            && ready.cuda_context
-            && ready.kernel_on_gpu;
-        let warm_instance =
-            prewarmed || (self.keepalive.is_warm(f, self.now) && ready.cuda_context);
-        let container_has = |cl: &Cluster, kind: ArtifactKind| {
-            cl.container_ids().iter().any(|&c| cl.container(c).has(f, kind))
-        };
-        // Backbone staging copies are per-model, not per-function: any
-        // function of the same model can read the host-RAM copy.
-        let same_model: Vec<usize> = self
-            .functions
-            .iter()
-            .filter(|s| s.model.name == m.name)
-            .map(|s| s.id)
-            .collect();
-        let container_has_backbone = |cl: &Cluster| {
-            cl.container_ids().iter().any(|&c| {
-                same_model
-                    .iter()
-                    .any(|&fid| cl.container(c).has(fid, ArtifactKind::Backbone))
-            })
-        };
-
-        // InstaInfer churn: mispredicted cold start waits for the
-        // in-flight preload of *another* function before its own loads.
-        let mut insta_hit = true;
-        if let PreloadMode::ContainerOpportunistic { hit_rate } = self.cfg.preload {
-            if !warm_instance {
-                insta_hit = self.rng.f64() < hit_rate;
-                if !insta_hit {
-                    *phases.entry(Phase::Queue).or_insert(0.0) +=
-                        m.weights_gb / params::BW_SSD_GBPS;
-                }
-            }
-        }
-
-        // Container + process (CUDA context) initialisation.
-        if !warm_instance && !ready.cuda_context {
-            let ctr_cold = matches!(
-                self.cfg.preload,
-                PreloadMode::None | PreloadMode::FastCheckpoint
-            );
-            let mut t = params::CUDA_CONTEXT_INIT_S;
-            if ctr_cold {
-                t += params::CONTAINER_INIT_S;
-            }
-            phases.insert(Phase::ContainerInit, t);
-        }
-
-        // Libraries.
-        if !warm_instance {
-            let t = match self.cfg.preload {
-                PreloadMode::Full => params::LIBRARY_WARM_IMPORT_S,
-                PreloadMode::ContainerOpportunistic { .. } => {
-                    if insta_hit && container_has(&self.cluster, ArtifactKind::Library) {
-                        params::LIBRARY_WARM_IMPORT_S
-                    } else {
-                        m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S
-                    }
-                }
-                _ => m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S,
-            };
-            phases.insert(Phase::LibraryLoad, t);
-        }
-
-        // Backbone.
-        if !ready.backbone_on_gpu {
-            let t = match self.cfg.preload {
-                // ServerlessLLM multi-tier checkpoint store: PCIe speed.
-                PreloadMode::FastCheckpoint => m.weights_gb / params::BW_PCIE_GBPS,
-                PreloadMode::ContainerOpportunistic { .. } => {
-                    if insta_hit && container_has(&self.cluster, ArtifactKind::Backbone) {
-                        m.weights_gb / params::BW_PCIE_GBPS
-                    } else {
-                        m.weights_gb / params::BW_SSD_GBPS
-                            + m.weights_gb / params::BW_PCIE_GBPS
-                    }
-                }
-                _ => {
-                    if container_has_backbone(&self.cluster) {
-                        m.weights_gb / params::BW_PCIE_GBPS
-                    } else {
-                        m.weights_gb / params::BW_SSD_GBPS
-                    }
-                }
-            };
-            phases.insert(Phase::BackboneLoad, t);
-            if self.cfg.backbone_sharing {
-                self.registry
-                    .load(&mut self.cluster, m.name, m.weights_gb, gpu)
-                    .expect("sized in dispatch");
-            } else {
-                self.cluster
-                    .gpu_mut(gpu)
-                    .place_artifact(f, ArtifactKind::Backbone, m.weights_gb)
-                    .expect("sized in dispatch");
-            }
-        }
-
-        // Adapter.
-        if !ready.adapter_on_gpu {
-            let t = if container_has(&self.cluster, ArtifactKind::Adapter) {
-                m.adapter_gb / params::BW_PCIE_GBPS + params::ADAPTER_ATTACH_S
-            } else {
-                m.adapter_gb / params::BW_SSD_GBPS + params::ADAPTER_ATTACH_S
-            };
-            phases.insert(Phase::AdapterLoad, t);
-            self.cluster
-                .gpu_mut(gpu)
-                .place_artifact(f, ArtifactKind::Adapter, m.adapter_gb)
-                .expect("sized in dispatch");
-        }
-
-        // CUDA kernels: JIT on a cold process, unless pre-compiled (Full
-        // preload keeps a warm kernel cache even on a replica GPU) or the
-        // warm instance still has them.
-        if !ready.kernel_on_gpu {
-            let t = if warm_instance {
-                0.0
-            } else if self.cfg.preload == PreloadMode::Full {
-                m.kernel_cache_load_s
-            } else {
-                m.kernel_jit_s
-            };
-            if t > 0.0 {
-                phases.insert(Phase::KernelCompile, t);
-            }
-            self.cluster
-                .gpu_mut(gpu)
-                .place_artifact(f, ArtifactKind::CudaKernel, m.kernel_gb)
-                .expect("sized in dispatch");
-        }
-
-        if !ready.cuda_context {
-            self.cluster
-                .gpu_mut(gpu)
-                .create_cuda_context(f)
-                .expect("sized in dispatch");
-        }
-        phases
-    }
-
-    // ------------------------------------------------------- exec events
-
-    fn on_load_done(&mut self, batch_id: u64) {
-        let (gpu, f, b) = {
-            let batch = self.batches.get_mut(&batch_id).expect("batch exists");
-            batch.state = BatchState::Prefill;
-            batch.t_exec_start = self.now;
-            (batch.gpu, batch.function, batch.requests.len())
-        };
-        let work = self.spec(f).model.prefill_s(b);
-        let exec = self.execs.get_mut(&gpu).unwrap();
-        exec.add(self.now, batch_id, work);
-        self.schedule_tick(gpu);
-    }
-
-    fn schedule_tick(&mut self, gpu: GpuId) {
-        let exec = &self.execs[&gpu];
-        if let Some((_, t)) = exec.next_completion() {
-            let v = exec.version;
-            self.push_event(t.max(self.now), EventKind::GpuTick(gpu, v));
-        }
-    }
-
-    fn on_gpu_tick(&mut self, gpu: GpuId, version: u64) {
-        if self.execs[&gpu].version != version {
-            return; // stale
-        }
-        let finished = self.execs.get_mut(&gpu).unwrap().finished_at(self.now);
-        for id in finished {
-            self.on_job_done(id);
-        }
-        self.schedule_tick(gpu);
-    }
-
-    fn on_job_done(&mut self, batch_id: u64) {
-        let state = self.batches[&batch_id].state;
-        match state {
-            BatchState::Prefill => {
-                let (gpu, f, b, max_out) = {
-                    let batch = self.batches.get_mut(&batch_id).unwrap();
-                    batch.prefill_wall = self.now - batch.t_exec_start;
-                    batch.state = BatchState::Decode;
-                    (
-                        batch.gpu,
-                        batch.function,
-                        batch.requests.len(),
-                        batch.requests.iter().map(|r| r.output_tokens).max().unwrap(),
-                    )
-                };
-                let work = self.spec(f).model.tpot_at(b) * max_out as f64;
-                let exec = self.execs.get_mut(&gpu).unwrap();
-                exec.add_weighted(
-                    self.now,
-                    batch_id,
-                    work,
-                    crate::sim::exec::DECODE_WEIGHT,
-                );
-                self.schedule_tick(gpu);
-                // Prefill slot freed: queues waiting on this GPU may go.
-                self.try_dispatch_all(None);
-            }
-            BatchState::Decode => self.finalize_batch(batch_id),
-            BatchState::Loading => unreachable!("loading batches are not exec jobs"),
-        }
-    }
-
-    fn finalize_batch(&mut self, batch_id: u64) {
-        let batch = self.batches.remove(&batch_id).expect("batch exists");
-        let f = batch.function;
-        let b = batch.requests.len();
-        let decode_start = batch.t_exec_start + batch.prefill_wall;
-        let decode_wall = self.now - decode_start;
-        let max_out = batch
-            .requests
-            .iter()
-            .map(|r| r.output_tokens)
-            .max()
-            .unwrap()
-            .max(1) as f64;
-
-        for r in &batch.requests {
-            let mut phases = batch.load_phases.clone();
-            let queue_wait = batch.t_dispatch - r.arrival_s;
-            *phases.entry(Phase::Queue).or_insert(0.0) += queue_wait.max(0.0);
-            phases.insert(Phase::Prefill, batch.prefill_wall);
-            // Requests stop decoding at their own length; wall time scales
-            // proportionally under processor sharing.
-            let own_decode = decode_wall * r.output_tokens as f64 / max_out;
-            phases.insert(Phase::Decode, own_decode);
-            let tpot = own_decode / r.output_tokens.max(1) as f64;
-            let outcome: RequestOutcome =
-                crate::metrics::outcome_from_phases(r, phases, tpot, b);
-            self.metrics.record(outcome);
-        }
-
-        // Release resources.
-        self.cluster.gpu_mut(batch.gpu).release_kv(batch_id);
-        if batch.attached_backbone {
-            let model = self.spec(f).model.name.to_string();
-            let _ = self
-                .registry
-                .detach(&mut self.cluster, &crate::sharing::IpcHandle {
-                    model,
-                    gpu: batch.gpu,
-                    function: f,
-                });
-        }
-        // Keep-alive (serverless) and wakeup for its expiry.
-        if !self.cfg.serverful {
-            self.keepalive.touch(f, self.now);
-            let t = self.now + self.keepalive.window_s;
-            if t.is_finite() {
-                self.push_event(t, EventKind::KeepaliveCheck);
-            }
-        }
-        // Memory freed: retry blocked + any dispatchable queues.
-        self.blocked.clear();
-        self.try_dispatch_all(None);
-    }
-
+    /// Keep-alive expiry: an expired function loses its *instance*. Its
+    /// artifacts persist only when the preload policy owns them (they
+    /// belong to the provider-side agent, not the instance).
     fn on_keepalive(&mut self) {
         let expired = self.keepalive.expired(self.now);
         for (f, _) in expired {
-            // A function whose window lapsed loses its *instance*. Its
-            // artifacts persist only under Full pre-loading (they belong
-            // to the Pre-Loading Agent, not the instance).
-            if self.cfg.preload == PreloadMode::Full {
+            if self.policies.preload.retains_artifacts(f) {
                 continue;
             }
             let has_batch = self.batches.values().any(|b| b.function == f);
@@ -1057,14 +184,16 @@ impl Engine {
                 let _ = gpu.evict_artifact(f, ArtifactKind::Backbone);
                 gpu.destroy_cuda_context(f);
             }
-            // Shared backbone: if no warm function of this model remains,
-            // drop the idle segment (nobody pays to keep it).
+            // Shared backbone: if no warm (or agent-staged) function of
+            // this model remains, drop the idle segment.
             if self.cfg.backbone_sharing {
                 let model = self.spec(f).model.name;
-                let still_warm = self.functions.iter().any(|s| {
-                    s.model.name == model && self.keepalive.is_warm(s.id, self.now)
+                let still_needed = self.functions.iter().any(|s| {
+                    s.model.name == model
+                        && (self.keepalive.is_warm(s.id, self.now)
+                            || self.policies.preload.retains_artifacts(s.id))
                 });
-                if !still_warm {
+                if !still_needed {
                     for g in self.registry.hosts(model).to_vec() {
                         let _ = self.registry.unload(&mut self.cluster, model, g);
                     }
@@ -1135,6 +264,25 @@ mod tests {
         let (full, _, _) = run(SystemConfig::serverless_lora(), w.clone());
         let (npl, _, _) = run(SystemConfig::npl(), w);
         assert!(full.ttft().mean <= npl.ttft().mean * 1.01);
+    }
+
+    #[test]
+    fn predictive_plugin_runs_and_helps_vs_npl() {
+        // The policy-API proof: Predictive-LoRA runs end-to-end as a pure
+        // plug-in, conserves requests, and its forecast-driven staging
+        // does not lose to no-preloading at all.
+        let w = workload(4, 0.02, 3600.0, Pattern::Normal);
+        let n = w.requests.len();
+        let (pred, _, stats) = run(SystemConfig::predictive(), w.clone());
+        assert_eq!(pred.outcomes.len(), n);
+        assert!(stats.preload_decisions > 0, "forecast never staged anything");
+        let (npl, _, _) = run(SystemConfig::npl(), w);
+        assert!(
+            pred.ttft().mean <= npl.ttft().mean * 1.05,
+            "predictive {} vs npl {}",
+            pred.ttft().mean,
+            npl.ttft().mean
+        );
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! The simulator's event queue: event kinds, the total order that keeps
+//! runs deterministic (time, then insertion sequence), and the queue
+//! itself. Split out of the engine so the event plumbing is reusable and
+//! testable without a full `Engine`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::cluster::GpuId;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Request `i` (index into the workload stream) arrives.
+    Arrival(usize),
+    /// Re-check function `f`'s queue (debounce settle / Eq. 3 expiry).
+    QueueCheck(usize),
+    /// Batch `b` finished loading its artifacts.
+    LoadDone(u64),
+    /// Processor-sharing completion sweep on a GPU; the `u64` is the
+    /// exec version the event was scheduled against (staleness guard).
+    GpuTick(GpuId, u64),
+    /// Keep-alive expiry sweep.
+    KeepaliveCheck,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub t: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-queue over `(t, seq)`: ties at the same instant pop in insertion
+/// order, which is what makes same-seed runs bit-identical.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, t: f64, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event { t, seq: self.seq, kind }));
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::KeepaliveCheck);
+        q.push(1.0, EventKind::Arrival(0));
+        q.push(3.0, EventKind::QueueCheck(1));
+        assert_eq!(q.pop().unwrap().kind, EventKind::Arrival(0));
+        assert_eq!(q.pop().unwrap().t, 2.0);
+        assert_eq!(q.pop().unwrap().t, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::Arrival(7));
+        q.push(1.0, EventKind::Arrival(8));
+        q.push(1.0, EventKind::Arrival(9));
+        let kinds: Vec<EventKind> = std::iter::from_fn(|| q.pop().map(|e| e.kind)).collect();
+        assert_eq!(
+            kinds,
+            vec![EventKind::Arrival(7), EventKind::Arrival(8), EventKind::Arrival(9)]
+        );
+    }
+
+    #[test]
+    fn len_tracks() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(0.5, EventKind::KeepaliveCheck);
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

@@ -1,11 +1,18 @@
-//! Discrete-event simulation of the serving systems: engine, GPU
-//! processor-sharing executor (Eq. 4), and the system/baseline configs.
+//! Discrete-event simulation of the serving systems, decomposed into an
+//! orchestrating `engine`, the `events` queue, the batch-lifecycle
+//! `dispatch` path, event-integrated `billing`, the GPU processor-sharing
+//! executor (Eq. 4) in `exec`, and the system/baseline `config`s that
+//! build the policy bundles driving it all (see DESIGN.md §3).
 
+pub mod billing;
 pub mod config;
+pub mod dispatch;
 pub mod engine;
+pub mod events;
 pub mod exec;
 pub mod workloads;
 
 pub use config::{BatchingMode, PreloadMode, SystemConfig};
 pub use engine::{Engine, RunStats, Workload};
+pub use events::{Event, EventKind, EventQueue};
 pub use exec::GpuExec;

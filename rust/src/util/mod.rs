@@ -3,6 +3,7 @@
 //! `rand`, `serde`, `criterion` — are reimplemented here at the scale this
 //! project needs.)
 
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;

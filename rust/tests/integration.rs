@@ -112,6 +112,7 @@ fn request_conservation_all_systems() {
         SystemConfig::instainfer(Pattern::Bursty),
         SystemConfig::vllm(),
         SystemConfig::dlora(),
+        SystemConfig::predictive(),
         SystemConfig::nbs(),
         SystemConfig::npl(),
         SystemConfig::ndo(),
@@ -315,4 +316,107 @@ fn determinism_sweep() {
         assert_eq!(m1.ttft().mean.to_bits(), m2.ttft().mean.to_bits());
         assert_eq!(c1.total_usd().to_bits(), c2.total_usd().to_bits());
     }
+}
+
+// ------------------------------------------------------- golden parity
+
+/// FNV-1a over the full outcome stream + billing: any behavioral drift in
+/// the engine/policy stack changes this digest.
+fn fingerprint(
+    m: &serverless_lora::metrics::RunMetrics,
+    c: &serverless_lora::cost::CostTracker,
+) -> u64 {
+    let mut h = serverless_lora::util::hash::Fnv1a::new();
+    for o in &m.outcomes {
+        h.write_u64(o.id);
+        h.write_u64(o.ttft_s.to_bits());
+        h.write_u64(o.e2e_s.to_bits());
+        h.write_u64(o.tpot_s.to_bits());
+        h.write_u64(o.batch_size as u64);
+    }
+    h.write_u64(c.total_usd().to_bits());
+    h.finish()
+}
+
+fn golden_systems() -> Vec<SystemConfig> {
+    vec![
+        SystemConfig::serverless_lora(),
+        SystemConfig::serverless_llm(),
+        SystemConfig::instainfer(Pattern::Normal),
+        SystemConfig::vllm(),
+        SystemConfig::dlora(),
+        SystemConfig::predictive(),
+        SystemConfig::nbs(),
+        SystemConfig::npl(),
+        SystemConfig::ndo(),
+        SystemConfig::nab(1),
+        SystemConfig::nab(2),
+        SystemConfig::nab(3),
+    ]
+}
+
+/// Golden fingerprint test: per-system TTFT/cost digests over a fixed
+/// `(SystemConfig, Workload, seed)` triple.
+///
+/// The golden file bootstraps itself: on first run (or with
+/// `UPDATE_GOLDEN=1`) the digests are written to
+/// `tests/golden/sim_fingerprints.json`; afterwards any refactor that
+/// changes a single outcome bit for any pre-existing system fails here.
+#[test]
+fn golden_fingerprints_stable() {
+    let w = paper_workload(Pattern::Normal, 1200.0, 5);
+    let mut lines = Vec::new();
+    for cfg in golden_systems() {
+        let name = cfg.name;
+        let (m1, c1, _) = run(cfg.clone(), w.clone(), 16);
+        let (m2, c2, _) = run(cfg, w.clone(), 16);
+        let (f1, f2) = (fingerprint(&m1, &c1), fingerprint(&m2, &c2));
+        assert_eq!(f1, f2, "{name}: nondeterministic fingerprint");
+        lines.push(format!("  \"{name}\": \"{f1:016x}\""));
+    }
+    let doc = format!("{{\n{}\n}}\n", lines.join(",\n"));
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    let path = dir.join("sim_fingerprints.json");
+    let update = std::env::var("UPDATE_GOLDEN").is_ok();
+    if update || !path.exists() {
+        std::fs::create_dir_all(&dir).expect("create golden dir");
+        std::fs::write(&path, &doc).expect("write golden file");
+        eprintln!("golden fingerprints written to {}", path.display());
+        return;
+    }
+    let stored = std::fs::read_to_string(&path).expect("read golden file");
+    assert_eq!(
+        stored, doc,
+        "metrics digests drifted from {} — if the change is intentional, \
+         regenerate with UPDATE_GOLDEN=1",
+        path.display()
+    );
+}
+
+/// Multi-seed sweep: the parallel experiment runner must produce exactly
+/// the sequential results, in the same order, for every system × seed.
+#[test]
+fn parallel_runner_matches_sequential() {
+    use serverless_lora::exp::runner::parallel_map_with;
+    let tasks: Vec<(SystemConfig, u64)> = [1u64, 7, 23]
+        .into_iter()
+        .flat_map(|seed| {
+            [
+                SystemConfig::serverless_lora(),
+                SystemConfig::instainfer(Pattern::Bursty),
+                SystemConfig::predictive(),
+            ]
+            .into_iter()
+            .map(move |cfg| (cfg, seed))
+        })
+        .collect();
+    let w = paper_workload(Pattern::Bursty, 600.0, 11);
+    let job = |(cfg, seed): (SystemConfig, u64)| {
+        let (m, c, _) = Engine::new(cfg, Cluster::new(1, 8, 16), w.clone(), seed).run();
+        fingerprint(&m, &c)
+    };
+    let sequential = parallel_map_with(1, tasks.clone(), job);
+    let parallel = parallel_map_with(4, tasks, job);
+    assert_eq!(sequential, parallel, "parallel runner diverged from sequential");
 }

@@ -2,6 +2,8 @@
 //! engine must reproduce the logits Python/JAX computed at AOT time for
 //! every adapter, and the sharing/isolation contracts must hold on the
 //! live data plane. Skipped (cleanly) when `make artifacts` has not run.
+//! Compiled only with the `pjrt` feature (the runtime needs `xla`).
+#![cfg(feature = "pjrt")]
 
 use serverless_lora::runtime::{Engine, Manifest};
 
