@@ -66,6 +66,7 @@ fn main() {
         if jobs == 1 { "" } else { "s" }
     );
     let t_all = Instant::now();
+    let ran_fleet = ids.contains(&"fleet");
     let mut records: Vec<Json> = Vec::new();
     for id in ids {
         let t0 = Instant::now();
@@ -83,13 +84,20 @@ fn main() {
     let total = t_all.elapsed().as_secs_f64();
     println!("total bench time: {total:.1}s");
 
-    let doc = obj(vec![
+    let mut fields = vec![
         ("mode", s(if full { "full" } else { "quick" })),
         ("jobs", num(jobs as f64)),
         ("total_s", num(total)),
         ("experiments", arr(records)),
         ("headline", exp::headline_json()),
-    ]);
+    ];
+    if ran_fleet {
+        // Engine-scaling record (largest fleet configuration): events/s
+        // and peak event-queue length, tracked across PRs. Reuses the
+        // sweep's measurement — no extra simulation.
+        fields.push(("fleet", exp::fleet::fleet_json(!full)));
+    }
+    let doc = obj(fields);
     let path = "BENCH_sim.json";
     match std::fs::write(path, doc.dump() + "\n") {
         Ok(()) => println!("wrote {path}"),

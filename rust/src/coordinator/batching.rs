@@ -104,7 +104,7 @@ impl BatchQueue {
         self.queue
             .iter()
             .map(|q| q.arrival_s)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .min_by(f64::total_cmp)
     }
 
     /// Eq. 5 deadline margin under M-way contention.
@@ -136,8 +136,7 @@ impl BatchQueue {
     /// Take up to `memory_cap` requests as one batch (FIFO).
     pub fn take_batch(&mut self, memory_cap: usize) -> Vec<Queued> {
         let take = self.queue.len().min(self.max_batch).min(memory_cap.max(1));
-        self.queue
-            .sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        self.queue.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         self.queue.drain(..take).collect()
     }
 }
@@ -176,9 +175,7 @@ impl FixedBatchQueue {
 
     pub fn take_batch(&mut self, memory_cap: usize) -> Vec<Queued> {
         let take = self.inner.queue.len().min(self.batch_size).min(memory_cap.max(1));
-        self.inner
-            .queue
-            .sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        self.inner.queue.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         self.inner.queue.drain(..take).collect()
     }
 }
@@ -193,7 +190,7 @@ pub fn select_by_deadline_margin<'a>(
     queues
         .filter(|q| !q.is_empty())
         .map(|q| (q.function, q.deadline_margin(now_s, contention_m)))
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .map(|(f, _)| f)
 }
 

@@ -53,7 +53,11 @@ impl KeepAlive {
         out
     }
 
-    /// Next expiry instant (simulator wakeup).
+    /// Next expiry instant (simulator wakeup). The engine arms exactly
+    /// one `KeepaliveCheck` at this instant; because every expiry is
+    /// `touch_time + window` with `touch_time ≤ now`, a later touch can
+    /// never move the minimum below an already-armed instant, so lazy
+    /// re-arming on fire preserves exact teardown times.
     pub fn next_expiry(&self) -> Option<f64> {
         self.expiry.values().cloned().fold(None, |acc, e| {
             Some(acc.map_or(e, |a: f64| a.min(e)))
@@ -113,5 +117,20 @@ mod tests {
     fn unknown_function_is_cold() {
         let k = KeepAlive::default();
         assert!(!k.is_warm(9, 0.0));
+    }
+
+    #[test]
+    fn next_expiry_never_decreases_under_touch() {
+        // The lazy-rearm contract the engine's single armed
+        // KeepaliveCheck relies on: touches only move the minimum later.
+        let mut k = KeepAlive::new(100.0);
+        k.touch(1, 0.0);
+        let mut armed = k.next_expiry().unwrap();
+        for (f, t) in [(2usize, 10.0), (1, 50.0), (3, 60.0), (2, 99.0)] {
+            k.touch(f, t);
+            let e = k.next_expiry().unwrap();
+            assert!(e >= armed, "min expiry moved earlier: {armed} -> {e}");
+            armed = e;
+        }
     }
 }

@@ -105,7 +105,7 @@ impl DynamicOffloader {
     /// Value-density greedy (Eq. 7): evict lowest-ρ first until Q_g is
     /// freed (or nothing evictable remains).
     pub fn plan(mut evictable: Vec<Evictable>, need_gb: f64) -> OffloadPlan {
-        evictable.sort_by(|a, b| a.density().partial_cmp(&b.density()).unwrap());
+        evictable.sort_by(|a, b| a.density().total_cmp(&b.density()));
         let mut plan = OffloadPlan::default();
         for e in evictable {
             if plan.freed_gb >= need_gb {

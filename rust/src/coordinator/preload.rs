@@ -185,7 +185,7 @@ impl PreloadScheduler {
         registry: &BackboneRegistry,
     ) -> PreloadPlan {
         let mut cands = self.candidates(demands, cluster, registry);
-        cands.sort_by(|a, b| b.density.partial_cmp(&a.density).unwrap());
+        cands.sort_by(|a, b| b.density.total_cmp(&a.density));
 
         let model_of: BTreeMap<usize, &FunctionSpec> =
             demands.iter().map(|d| (d.spec.id, &d.spec)).collect();
@@ -297,7 +297,7 @@ impl PreloadScheduler {
                                         cluster,
                                     )
                             })
-                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .max_by(|a, b| a.1.total_cmp(b.1))
                             .map(|(&g, _)| g);
                         let Some(g) = best else { continue };
                         *gpu_free.get_mut(&g).unwrap() -= c.size_gb;
@@ -331,7 +331,7 @@ impl PreloadScheduler {
                                         cluster,
                                     )
                             })
-                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .max_by(|a, b| a.1.total_cmp(b.1))
                             .map(|(&cid, _)| cid);
                         let Some(cid) = best else { continue };
                         *ctr_free.get_mut(&cid).unwrap() -= c.size_gb;

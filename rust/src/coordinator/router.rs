@@ -84,7 +84,7 @@ impl Router {
                     - if cluster.gpu(a).total_gb < kv_need { 1e6 } else { 0.0 };
                 let sb = Self::score(cluster, spec, b)
                     - if cluster.gpu(b).total_gb < kv_need { 1e6 } else { 0.0 };
-                sa.partial_cmp(&sb).unwrap()
+                sa.total_cmp(&sb)
             })?;
         let readiness = Self::readiness(cluster, spec, best);
         let headroom = (cluster.gpu(best).free_gb()

@@ -9,6 +9,7 @@
 pub mod ablation;
 pub mod breakdown;
 pub mod cost_eff;
+pub mod fleet;
 pub mod latency;
 pub mod overhead;
 pub mod runner;
@@ -71,10 +72,11 @@ pub fn headline_json() -> Json {
     ])
 }
 
-/// All experiment ids, in paper order.
-pub const ALL_EXPERIMENTS: [&str; 14] = [
+/// All experiment ids: the paper artifacts in paper order, then the
+/// engine-health experiments (`fleet`: cluster-size scaling sweep).
+pub const ALL_EXPERIMENTS: [&str; 15] = [
     "fig1", "fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "tab1", "tab2",
-    "fig10", "tab3", "fig11", "fig12", "overhead",
+    "fig10", "tab3", "fig11", "fig12", "overhead", "fleet",
 ];
 
 /// Dispatch an experiment by id. Returns the rendered report.
@@ -98,6 +100,7 @@ pub fn run_experiment(id: &str, quick: bool) -> String {
         "fig11" => scaling::fig11(quick),
         "fig12" => latency::fig12(quick),
         "overhead" => overhead::report(),
+        "fleet" => fleet::fleet(quick),
         other => format!("unknown experiment '{other}'; known: {ALL_EXPERIMENTS:?}\n"),
     }
 }
@@ -121,5 +124,7 @@ mod tests {
         for f in [1, 2, 5, 6, 7, 8, 9, 10, 11, 12] {
             assert!(ALL_EXPERIMENTS.contains(&format!("fig{f}").as_str()));
         }
+        // Engine-health experiments ride the same registry.
+        assert!(ALL_EXPERIMENTS.contains(&"fleet"));
     }
 }

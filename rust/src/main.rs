@@ -5,6 +5,8 @@
 //!                                                  regenerate a paper table/figure
 //! serverless-lora simulate --all [--full] [--jobs N]
 //!                                                  regenerate everything
+//! serverless-lora fleet [--full]                   engine scaling sweep
+//!                                                  (alias: simulate --exp fleet)
 //! serverless-lora serve [--model llama-tiny] [--requests N] [--batch B]
 //!                                                  real PJRT serving demo (`pjrt` feature)
 //! serverless-lora info [--model llama-tiny]        artifact/manifest inventory
@@ -76,9 +78,10 @@ fn parse_flags(
 
 fn usage() -> ! {
     eprintln!(
-        "usage: serverless-lora <simulate|serve|info> [options]\n\
+        "usage: serverless-lora <simulate|fleet|serve|info> [options]\n\
          \n\
          simulate --exp <id>|--all [--full] [--jobs N]   ids: {}\n\
+         fleet    [--full]                               engine scaling sweep\n\
          serve    [--model llama-tiny] [--requests 16] [--batch 4]\n\
          info     [--model llama-tiny]",
         exp::ALL_EXPERIMENTS.join(", ")
@@ -104,6 +107,10 @@ fn main() -> anyhow::Result<()> {
             } else {
                 usage()
             }
+        }
+        Some("fleet") => {
+            let quick = !flags.contains_key("full");
+            print!("{}", exp::run_experiment("fleet", quick));
         }
         Some("serve") => {
             let model = flags

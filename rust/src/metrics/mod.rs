@@ -93,8 +93,20 @@ pub struct RunStats {
     pub offloaded_gb: f64,
     pub preload_decisions: usize,
     pub blocked_dispatches: usize,
+    /// Memory-blocked functions re-tried after memory was freed (a
+    /// batch completion on a routing candidate, or a keep-alive
+    /// eviction).
+    pub blocked_retries: usize,
     pub cold_dispatches: usize,
     pub warm_dispatches: usize,
+    /// Event-loop telemetry (fleet experiment / hygiene regressions).
+    pub events_processed: u64,
+    pub peak_event_queue: usize,
+    /// `KeepaliveCheck` events actually processed — O(expiry windows),
+    /// not O(completions), since exactly one is armed at a time.
+    pub keepalive_checks: u64,
+    /// `QueueCheck` events skipped by the generation guard.
+    pub stale_queue_checks: u64,
 }
 
 /// Aggregated metrics for one run of one system.

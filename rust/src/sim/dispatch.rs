@@ -42,9 +42,15 @@ impl Engine {
     // ---------------------------------------------------------- arrivals
 
     pub(super) fn on_arrival(&mut self, i: usize) {
+        // Stream the next arrival in first so it wins same-instant ties
+        // against anything this handler schedules.
+        self.schedule_next_arrival();
         let req = self.requests[i].clone();
         let f = req.function;
         self.queues[f].push(Queued { request: req.id, arrival_s: req.arrival_s });
+        self.queue_gen[f] += 1;
+        self.active.insert(f);
+        let gen_at_arrival = self.queue_gen[f];
         self.try_dispatch_all(Some(f));
         // Forecast hooks fire AFTER this arrival's dispatch attempt: a
         // predictive agent stages in the background, so its work becomes
@@ -62,16 +68,30 @@ impl Engine {
             };
             self.policies.preload.on_arrival(f, req.arrival_s, &mut env);
         }
-        // Wakeups: debounce settle-point and the Eq. 3 expiry.
-        if !self.queues[f].is_empty() {
-            self.events.push(
-                self.now + crate::coordinator::batching::DEBOUNCE_S + 1e-3,
-                EventKind::QueueCheck(f),
-            );
+        // A dispatch above already re-armed wakeups for the residual
+        // queue (and bumped the generation); arm only if it didn't.
+        if self.queue_gen[f] == gen_at_arrival {
+            self.arm_queue_wakeups(f);
         }
+    }
+
+    /// Wakeups for function `f`'s queue: the debounce settle-point and
+    /// the Eq. 3 expiry, stamped with the current queue generation.
+    /// Every queue mutation (arrival push, dispatch take) bumps the
+    /// generation and re-arms, so at most two checks per function are
+    /// ever live and earlier ones fall through the staleness guard.
+    pub(super) fn arm_queue_wakeups(&mut self, f: usize) {
+        if self.queues[f].is_empty() {
+            return;
+        }
+        let gen = self.queue_gen[f];
+        self.events.push(
+            self.now + crate::coordinator::batching::DEBOUNCE_S + 1e-3,
+            EventKind::QueueCheck(f, gen),
+        );
         if let Some(t) = self.policies.batching.expiry_time(&self.queues[f]) {
             if t.is_finite() && t > self.now {
-                self.events.push(t, EventKind::QueueCheck(f));
+                self.events.push(t, EventKind::QueueCheck(f, gen));
             }
         }
     }
@@ -94,9 +114,7 @@ impl Engine {
                 .map(|r| r.gpu),
         };
         let Some(g) = gpu else { return false };
-        !self.batches.values().any(|b| {
-            b.gpu == g && matches!(b.state, BatchState::Loading | BatchState::Prefill)
-        })
+        self.gpu_busy[&g] == 0
     }
 
     /// Global dispatch loop: repeatedly pick the dispatchable queue with
@@ -105,41 +123,49 @@ impl Engine {
     /// With a `hint`, only that function is considered — an arrival can
     /// only change its own queue's dispatchability (GPU state is
     /// untouched), so scanning all queues on every arrival would be
-    /// wasted work. Completion/offload events pass `None` for the full
-    /// margin-ordered scan.
+    /// wasted work. Completion/offload events pass `None`, which walks
+    /// the `active` index (functions with queued work) in ascending
+    /// order — identical to the old full scan, since `should_dispatch`
+    /// is false for every empty queue.
     pub(super) fn try_dispatch_all(&mut self, hint: Option<usize>) {
         if let Some(f) = hint {
-            while self.should_dispatch(f)
-                && !self.blocked.contains(&f)
-                && self.dispatch(f)
-            {}
-            if self.should_dispatch(f) && !self.blocked.contains(&f) {
-                self.blocked.push(f);
-                self.stats.blocked_dispatches += 1;
+            while self.should_dispatch(f) && !self.blocked.contains_key(&f) {
+                if let Err(on) = self.dispatch(f) {
+                    // A failed dispatch may itself mutate GPU state
+                    // (partial offload): only mark blocked if the queue
+                    // still wants to fire.
+                    if self.should_dispatch(f) {
+                        self.block(f, on);
+                    }
+                    return;
+                }
             }
             return;
         }
         loop {
-            let mut ready: Vec<usize> = (0..self.queues.len())
-                .filter(|&f| self.should_dispatch(f) && !self.blocked.contains(&f))
+            let mut ready: Vec<usize> = self
+                .active
+                .iter()
+                .copied()
+                .filter(|&f| self.should_dispatch(f) && !self.blocked.contains_key(&f))
                 .collect();
             if ready.is_empty() {
                 return;
             }
             // Eq. 5 prioritisation (adaptive policies; fixed mode FIFO).
             if self.policies.batching.prioritise_by_margin() {
-                ready.sort_by(|&a, &b| {
-                    let ma = self.margin(a);
-                    let mb = self.margin(b);
-                    ma.partial_cmp(&mb).unwrap()
-                });
+                ready.sort_by(|&a, &b| self.margin(a).total_cmp(&self.margin(b)));
             }
             let f = ready[0];
-            if !self.dispatch(f) {
-                self.blocked.push(f);
-                self.stats.blocked_dispatches += 1;
+            if let Err(on) = self.dispatch(f) {
+                self.block(f, on);
             }
         }
+    }
+
+    fn block(&mut self, f: usize, on: Option<GpuId>) {
+        self.blocked.insert(f, on);
+        self.stats.blocked_dispatches += 1;
     }
 
     pub(super) fn margin(&self, f: usize) -> f64 {
@@ -156,16 +182,18 @@ impl Engine {
 
     // ---------------------------------------------------------- dispatch
 
-    /// Dispatch one batch for function `f`. Returns false when blocked on
-    /// GPU memory (a blocking offload policy waits; dynamic offloading
-    /// avoids this).
-    pub(super) fn dispatch(&mut self, f: usize) -> bool {
+    /// Dispatch one batch for function `f`. `Err` means blocked — on the
+    /// returned GPU's memory (a blocking offload policy waits; dynamic
+    /// offloading avoids this), or `Err(None)` when routing found no
+    /// GPU at all. The blocked map records the target so a retry fires
+    /// when *that* GPU frees memory.
+    pub(super) fn dispatch(&mut self, f: usize) -> Result<(), Option<GpuId>> {
         let spec = self.spec(f).clone();
         let gpu = match self.dedicated.get(&f) {
             Some(&g) => g,
             None => match Router::route(&self.cluster, &self.registry, &spec, 1) {
                 Some(r) => self.maybe_replicate(&spec, r.gpu),
-                None => return false,
+                None => return Err(None),
             },
         };
 
@@ -211,7 +239,7 @@ impl Engine {
                             - (need_gb - spec.model.kv_per_request_gb * want as f64);
                         let fit = (kv_free / spec.model.kv_per_request_gb).floor() as i64;
                         if fit < 1 {
-                            return false;
+                            return Err(Some(gpu));
                         }
                     }
                 }
@@ -220,7 +248,7 @@ impl Engine {
                     let kv_free = self.cluster.gpu(gpu).free_gb()
                         - (need_gb - spec.model.kv_per_request_gb * want as f64);
                     if (kv_free / spec.model.kv_per_request_gb).floor() < 1.0 {
-                        return false;
+                        return Err(Some(gpu));
                     }
                 }
             }
@@ -231,10 +259,14 @@ impl Engine {
         let kv_budget = self.cluster.gpu(gpu).free_gb() - fixed_gb;
         let cap = (kv_budget / spec.model.kv_per_request_gb).floor().max(0.0) as usize;
         if cap == 0 {
-            return false;
+            return Err(Some(gpu));
         }
         let taken = self.queues[f].take_batch(cap.min(want));
         debug_assert!(!taken.is_empty());
+        self.queue_gen[f] += 1;
+        if self.queues[f].is_empty() {
+            self.active.remove(&f);
+        }
         let reqs: Vec<Request> = taken
             .iter()
             .map(|q| self.requests[self.request_index[&q.request]].clone())
@@ -265,7 +297,7 @@ impl Engine {
         // per-process; pre-loaded artifacts shortcut the JIT but not the
         // context). This is what makes no-batching (NAB#1) slow under
         // concurrency even when everything is pre-loaded.
-        let concurrent = self.batches.values().any(|b| b.function == f);
+        let concurrent = self.fn_inflight[f] > 0;
         if concurrent && !self.cfg.serverful {
             *load_phases.entry(Phase::ContainerInit).or_insert(0.0) +=
                 params::CUDA_CONTEXT_INIT_S;
@@ -294,8 +326,13 @@ impl Engine {
                 attached_backbone: attached,
             },
         );
+        self.fn_inflight[f] += 1;
+        *self.gpu_busy.get_mut(&gpu).unwrap() += 1;
         self.events.push(self.now + total_load, EventKind::LoadDone(batch_id));
-        true
+        // Residual queue: re-arm wakeups under the new generation (the
+        // pre-dispatch checks are stale now).
+        self.arm_queue_wakeups(f);
+        Ok(())
     }
 
     /// Locality-vs-contention trade (§3.1 challenge 3): the router prefers
@@ -322,8 +359,7 @@ impl Engine {
                 self.cluster
                     .gpu(a)
                     .free_gb()
-                    .partial_cmp(&self.cluster.gpu(b).free_gb())
-                    .unwrap()
+                    .total_cmp(&self.cluster.gpu(b).free_gb())
             })
             .unwrap_or(routed)
     }
@@ -360,16 +396,13 @@ impl Engine {
                 .any(|&c| self.cluster.container(c).has(f, kind))
         };
         // Backbone staging copies are per-model, not per-function: any
-        // function of the same model can read the host-RAM copy.
+        // function of the same model can read the host-RAM copy (the
+        // peer list is indexed once at construction, not re-scanned).
         let container_has_model_backbone = {
-            let same_model: Vec<usize> = self
-                .functions
-                .iter()
-                .filter(|s| s.model.name == m.name)
-                .map(|s| s.id)
-                .collect();
+            let peers: &[usize] =
+                self.model_peers.get(m.name).map(Vec::as_slice).unwrap_or_default();
             self.cluster.container_ids().iter().any(|&c| {
-                same_model
+                peers
                     .iter()
                     .any(|&fid| self.cluster.container(c).has(fid, ArtifactKind::Backbone))
             })
@@ -447,7 +480,22 @@ impl Engine {
         if self.execs[&gpu].version != version {
             return; // stale
         }
-        let finished = self.execs.get_mut(&gpu).unwrap().finished_at(self.now);
+        // The job this tick was scheduled for (the version matched, so
+        // the job set is unchanged since scheduling).
+        let next = self.execs[&gpu].next_completion();
+        let exec = self.execs.get_mut(&gpu).unwrap();
+        let mut finished = exec.finished_at(self.now);
+        if finished.is_empty() {
+            // Float-drift guard: the scheduled job can carry residual
+            // work marginally above the sweep epsilon at its own
+            // completion instant; without this it would re-schedule a
+            // same-time tick forever. The job was due now — it finishes.
+            if let Some((job, t)) = next {
+                if t <= self.now + 1e-9 && exec.force_complete(self.now, job) {
+                    finished.push(job);
+                }
+            }
+        }
         for id in finished {
             self.on_job_done(id);
         }
@@ -469,6 +517,8 @@ impl Engine {
                         batch.requests.iter().map(|r| r.output_tokens).max().unwrap(),
                     )
                 };
+                // Prefill slot freed on this GPU (decode overlaps).
+                *self.gpu_busy.get_mut(&gpu).unwrap() -= 1;
                 let work = self.spec(f).model.tpot_at(b) * max_out as f64;
                 let exec = self.execs.get_mut(&gpu).unwrap();
                 exec.add_weighted(
@@ -489,6 +539,7 @@ impl Engine {
     pub(super) fn finalize_batch(&mut self, batch_id: u64) {
         let batch = self.batches.remove(&batch_id).expect("batch exists");
         let f = batch.function;
+        self.fn_inflight[f] -= 1;
         let b = batch.requests.len();
         let decode_start = batch.t_exec_start + batch.prefill_wall;
         let decode_wall = self.now - decode_start;
@@ -527,16 +578,43 @@ impl Engine {
                     function: f,
                 });
         }
-        // Keep-alive (serverless) and wakeup for its expiry.
+        // Keep-alive (serverless): (re)arm the single expiry sweep.
         if !self.cfg.serverful {
             self.keepalive.touch(f, self.now);
-            let t = self.now + self.keepalive.window_s;
-            if t.is_finite() {
-                self.events.push(t, EventKind::KeepaliveCheck);
-            }
+            self.arm_keepalive();
         }
-        // Memory freed: retry blocked + any dispatchable queues.
-        self.blocked.clear();
+        // Memory freed on this GPU: retry the blocked functions whose
+        // dispatch outcome this can change — not every blocked function
+        // cluster-wide.
+        let g = batch.gpu;
+        let retry: Vec<usize> = self
+            .blocked
+            .iter()
+            .filter(|&(&bf, &on)| self.blocked_retry_applies(bf, on, g))
+            .map(|(&bf, _)| bf)
+            .collect();
+        self.stats.blocked_retries += retry.len();
+        for bf in retry {
+            self.blocked.remove(&bf);
+        }
         self.try_dispatch_all(None);
+    }
+
+    /// Could memory freed on `freed` change blocked function `f`'s
+    /// dispatch outcome? A dedicated (serverful) function's route is
+    /// pinned, so only its own GPU's completions matter — the targeted
+    /// half of the fix. A routed function must retry on every finalize
+    /// (like the old `blocked.clear()`): the router scores *every*
+    /// candidate on free memory and `maybe_replicate` may pick any idle
+    /// GPU cluster-wide, so restricting by the blocked-on GPU or the
+    /// backbone host set would miss legitimate re-routes.
+    fn blocked_retry_applies(&self, f: usize, on: Option<GpuId>, freed: GpuId) -> bool {
+        if on.is_none() || on == Some(freed) {
+            return true;
+        }
+        match self.dedicated.get(&f) {
+            Some(&d) => d == freed,
+            None => true,
+        }
     }
 }

@@ -13,13 +13,20 @@ pub enum EventKind {
     /// Request `i` (index into the workload stream) arrives.
     Arrival(usize),
     /// Re-check function `f`'s queue (debounce settle / Eq. 3 expiry).
-    QueueCheck(usize),
+    /// The `u64` is the queue generation the check was scheduled
+    /// against: any push/take on the queue bumps the generation and
+    /// re-arms fresh wakeups, so a stale check is skipped in O(1)
+    /// instead of re-running the dispatch path (the same guard shape as
+    /// `GpuTick`'s exec version).
+    QueueCheck(usize, u64),
     /// Batch `b` finished loading its artifacts.
     LoadDone(u64),
     /// Processor-sharing completion sweep on a GPU; the `u64` is the
     /// exec version the event was scheduled against (staleness guard).
     GpuTick(GpuId, u64),
-    /// Keep-alive expiry sweep.
+    /// Keep-alive expiry sweep. At most one is outstanding at any time
+    /// (the engine arms it lazily at `KeepAlive::next_expiry`), so the
+    /// queue no longer accumulates one check per completion.
     KeepaliveCheck,
 }
 
@@ -73,6 +80,13 @@ impl EventQueue {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// Iterate over the pending events in no particular order (heap
+    /// order). Used by invariant checks and hygiene tests, never by the
+    /// simulation itself.
+    pub fn iter(&self) -> impl Iterator<Item = &Event> {
+        self.heap.iter().map(|r| &r.0)
+    }
 }
 
 #[cfg(test)]
@@ -84,11 +98,23 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(2.0, EventKind::KeepaliveCheck);
         q.push(1.0, EventKind::Arrival(0));
-        q.push(3.0, EventKind::QueueCheck(1));
+        q.push(3.0, EventKind::QueueCheck(1, 0));
         assert_eq!(q.pop().unwrap().kind, EventKind::Arrival(0));
         assert_eq!(q.pop().unwrap().t, 2.0);
         assert_eq!(q.pop().unwrap().t, 3.0);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn iter_sees_all_pending() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::KeepaliveCheck);
+        q.push(2.0, EventKind::Arrival(3));
+        assert_eq!(q.iter().count(), 2);
+        let ka = q.iter().filter(|e| matches!(e.kind, EventKind::KeepaliveCheck));
+        assert_eq!(ka.count(), 1);
+        q.pop();
+        assert_eq!(q.iter().count(), 1);
     }
 
     #[test]

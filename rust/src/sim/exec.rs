@@ -80,12 +80,23 @@ impl GpuExec {
         let total = self.total_weight();
         self.jobs
             .iter()
-            .min_by(|a, b| {
-                (a.1 .0 / a.1 .1).partial_cmp(&(b.1 .0 / b.1 .1)).unwrap()
-            })
+            .min_by(|a, b| (a.1 .0 / a.1 .1).total_cmp(&(b.1 .0 / b.1 .1)))
             .map(|(&id, &(rem, w))| {
                 (id, self.last_update_s + (rem.max(0.0) / w) * total)
             })
+    }
+
+    /// Complete `job` unconditionally at `now`, returning true if it was
+    /// present. The engine calls this when a completion tick finds the
+    /// job it was scheduled for still carrying residual work above the
+    /// sweep epsilon: `next_completion` computes the completion instant
+    /// with a different floating-point expression than `advance`
+    /// subtracts, so at large magnitudes the residue can exceed the
+    /// absolute `1e-9` threshold and the engine would otherwise
+    /// re-schedule a same-time tick forever. The job was scheduled to
+    /// finish at this instant, so it finishes.
+    pub fn force_complete(&mut self, now_s: f64, job: u64) -> bool {
+        self.remove(now_s, job).is_some()
     }
 
     /// Jobs whose remaining work is ~zero at `now` (completion sweep).
@@ -179,6 +190,56 @@ mod tests {
         let (id, t) = e.next_completion().unwrap();
         assert_eq!(id, 1);
         assert!((t - 1.4).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn force_complete_breaks_float_drift_stall() {
+        // Regression: at large work magnitudes the residue at the
+        // scheduled completion instant can vastly exceed the absolute
+        // 1e-9 sweep epsilon. A tick at such an instant used to find
+        // nothing finished and re-schedule itself at the same time
+        // forever; the engine now force-completes the scheduled job.
+        let mut e = GpuExec::default();
+        e.add(0.0, 1, 1e7);
+        let (id, t) = e.next_completion().unwrap();
+        assert_eq!(id, 1);
+        // Adversarial drift: the tick lands a hair (1e-10 relative)
+        // before the true completion — remaining ≈ 1e-3 s of work.
+        let drift_t = t * (1.0 - 1e-10);
+        assert!(e.finished_at(drift_t).is_empty(), "residue under epsilon");
+        assert!(e.force_complete(drift_t, id));
+        assert!(!e.is_active());
+        assert!(!e.force_complete(drift_t, id), "already gone");
+    }
+
+    #[test]
+    fn adversarial_weights_drain_under_tick_protocol() {
+        // Emulate the engine's on_gpu_tick loop over a PS mix with
+        // awkward weights/durations and late joiners: every iteration
+        // must retire at least the scheduled job (sweep or force), and
+        // the set must drain in a bounded number of ticks.
+        let mut e = GpuExec::default();
+        let jobs: [(u64, f64, f64); 5] = [
+            (1, 1e6, 1.0),
+            (2, 0.1 + 1e-13, DECODE_WEIGHT),
+            (3, 1.0 / 3.0, 1.0 / 3.0),
+            (4, 7.0 / 11.0, 0.123456789),
+            (5, 1e-7, 0.999_999_9),
+        ];
+        for (id, work, w) in jobs {
+            e.add_weighted(0.0, id, work, w);
+        }
+        e.add_weighted(0.05, 6, 2.5e5, 0.4);
+        let mut steps = 0;
+        while let Some((job, t)) = e.next_completion() {
+            steps += 1;
+            assert!(steps < 100, "tick loop stalled");
+            let done = e.finished_at(t);
+            if done.is_empty() {
+                assert!(e.force_complete(t, job), "scheduled job must finish");
+            }
+        }
+        assert!(!e.is_active());
     }
 
     #[test]

@@ -123,6 +123,14 @@ pub fn scaled_workload(pattern: Pattern, duration_s: f64, scale: usize, seed: u6
     Workload { functions, requests: merge(traces), duration_s, rates }
 }
 
+/// Fleet-scale workload: `n_fns` functions (rounded up to a multiple of
+/// the 8-function base deployment) with the standard heterogeneous
+/// rates. Drives the engine-scaling experiment (`exp/fleet.rs`).
+pub fn fleet_workload(n_fns: usize, duration_s: f64, seed: u64) -> Workload {
+    let scale = n_fns.div_ceil(8).max(1);
+    scaled_workload(Pattern::Normal, duration_s, scale, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,6 +159,14 @@ mod tests {
         let w = throughput_workload(120.0, 1);
         // 4 fns × 3 req/s × 120 s ≈ 1440 requests.
         assert!(w.requests.len() > 1000);
+    }
+
+    #[test]
+    fn fleet_workload_rounds_up() {
+        let w = fleet_workload(20, 300.0, 1);
+        assert_eq!(w.functions.len(), 24);
+        let w = fleet_workload(64, 300.0, 1);
+        assert_eq!(w.functions.len(), 64);
     }
 
     #[test]

@@ -180,7 +180,7 @@ impl TraceSpec {
 /// Merge several functions' traces into one time-ordered stream.
 pub fn merge(traces: Vec<Vec<Request>>) -> Vec<Request> {
     let mut all: Vec<Request> = traces.into_iter().flatten().collect();
-    all.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    all.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
     all
 }
 

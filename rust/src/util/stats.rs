@@ -35,7 +35,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
         return Summary::default();
     }
     let mut sorted: Vec<f64> = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     let n = xs.len() as f64;
     let mean = xs.iter().sum::<f64>() / n;
     let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
@@ -66,7 +66,7 @@ pub fn cov(xs: &[f64]) -> f64 {
 /// Empirical CDF evaluated at the given thresholds: fraction of samples <= t.
 pub fn cdf_at(xs: &[f64], thresholds: &[f64]) -> Vec<f64> {
     let mut sorted: Vec<f64> = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     thresholds
         .iter()
         .map(|t| {

@@ -394,6 +394,61 @@ fn golden_fingerprints_stable() {
     );
 }
 
+// ------------------------------------------------ engine index invariants
+
+/// Multi-seed invariant sweep: the engine's incremental dispatch-state
+/// indexes (per-GPU Loading/Prefill counts, per-function in-flight
+/// counts, the active dispatch-candidate set, the blocked map, the
+/// single armed keep-alive sweep) must equal their brute-force
+/// recomputation at arbitrary points mid-run. NDO runs the blocking
+/// offload policy, so the blocked map is exercised under saturation.
+#[test]
+fn engine_indexes_match_bruteforce_mid_run() {
+    for cfg in [SystemConfig::serverless_lora(), SystemConfig::ndo()] {
+        for seed in [1u64, 11] {
+            let w = paper_workload(Pattern::Bursty, 900.0, seed);
+            let n = w.requests.len();
+            let mut e = Engine::new(cfg.clone(), Cluster::new(1, 4, 8), w, seed);
+            let mut steps: u64 = 0;
+            while e.step() {
+                steps += 1;
+                if steps % 9 == 0 {
+                    e.check_indexes();
+                }
+            }
+            e.check_indexes();
+            let (m, _, stats) = e.finish();
+            assert_eq!(m.outcomes.len(), n, "{} lost requests", cfg.name);
+            assert!(stats.events_processed as usize >= n);
+        }
+    }
+}
+
+/// Event-queue hygiene under saturation: keep-alive sweeps track expiry
+/// windows (not completions — the queue used to gain one `KeepaliveCheck`
+/// per completion), and streamed arrivals keep the heap a small fraction
+/// of the trace length.
+#[test]
+fn event_queue_hygiene_under_saturation() {
+    let w = throughput_workload(180.0, 3);
+    let n = w.requests.len();
+    let (m, _, stats) = run(SystemConfig::serverless_lora(), w, 4);
+    assert_eq!(m.outcomes.len(), n);
+    assert!(n > 1000, "saturation workload too small: {n}");
+    assert!(
+        stats.keepalive_checks <= 64,
+        "keepalive sweeps grew with completions: {} for {} requests",
+        stats.keepalive_checks,
+        n
+    );
+    assert!(
+        stats.peak_event_queue < n / 2,
+        "peak event queue {} vs {} requests",
+        stats.peak_event_queue,
+        n
+    );
+}
+
 /// Multi-seed sweep: the parallel experiment runner must produce exactly
 /// the sequential results, in the same order, for every system × seed.
 #[test]
