@@ -2,12 +2,33 @@
 //! container slots, mirroring the paper's AWS testbeds (8× L40S single
 //! node / 16× L40S four-node). All memory movements the scheduler reasons
 //! about are tracked by the per-device ledgers in `gpu.rs`/`container.rs`.
+//!
+//! The cluster also maintains lazily-repaired **routing indexes** so the
+//! per-dispatch hot paths stay sub-linear at fleet scale:
+//!
+//! * a free-memory ordering over all GPUs (`scan_free_desc`) — the
+//!   router's zero-warmth frontier and `maybe_replicate`'s idle-GPU
+//!   search walk it from the top instead of scoring every GPU;
+//! * per-function GPU residency (`gpus_with_function`) — the warm
+//!   candidates for a function that has no shared-backbone host yet;
+//! * container residency counts (`container_has`) — replaces the
+//!   per-cold-dispatch scan over every container.
+//!
+//! Mutation goes through `gpu_mut` / `container_mut`, which mark the
+//! device dirty; the next index query repairs exactly the dirty entries.
+//! `Engine::check_indexes` re-derives everything by brute force in tests.
 
 pub mod container;
 pub mod gpu;
 
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
+
 pub use container::{Container, ContainerError, ContainerId};
 pub use gpu::{Gpu, GpuError, GpuId};
+
+use crate::artifact::ArtifactKind;
+use crate::util::f64_key;
 
 /// One worker node: a set of GPUs plus warm container slots.
 #[derive(Debug, Clone)]
@@ -31,10 +52,83 @@ impl Node {
     }
 }
 
+/// Lazily-repaired routing indexes (see module docs). `built == false`
+/// means a full rebuild happens on the next query.
+#[derive(Debug, Clone, Default)]
+struct ClusterIndex {
+    built: bool,
+    /// Ascending (free-memory total-order key, GpuId); iterate `.rev()`
+    /// for the descending frontier.
+    free: BTreeSet<(u64, GpuId)>,
+    /// GPU → its current key in `free`.
+    free_key: BTreeMap<GpuId, u64>,
+    /// function → GPUs holding any of its residency (artifacts/context).
+    fn_gpus: BTreeMap<usize, BTreeSet<GpuId>>,
+    /// GPU → snapshot of the functions counted into `fn_gpus`.
+    gpu_fns: BTreeMap<GpuId, Vec<usize>>,
+    dirty_gpus: Vec<GpuId>,
+    /// (function, kind) → number of containers holding it.
+    cres: BTreeMap<(usize, ArtifactKind), usize>,
+    /// Container → snapshot of the pairs counted into `cres`.
+    container_items: BTreeMap<ContainerId, Vec<(usize, ArtifactKind)>>,
+    dirty_containers: Vec<ContainerId>,
+}
+
+impl ClusterIndex {
+    fn add_gpu(&mut self, g: &Gpu) {
+        let k = f64_key(g.free_gb());
+        self.free.insert((k, g.id));
+        self.free_key.insert(g.id, k);
+        let fns: Vec<usize> = g.resident_functions().into_iter().collect();
+        for &f in &fns {
+            self.fn_gpus.entry(f).or_default().insert(g.id);
+        }
+        self.gpu_fns.insert(g.id, fns);
+    }
+
+    fn remove_gpu(&mut self, id: GpuId) {
+        if let Some(k) = self.free_key.remove(&id) {
+            self.free.remove(&(k, id));
+        }
+        if let Some(fns) = self.gpu_fns.remove(&id) {
+            for f in fns {
+                if let Some(s) = self.fn_gpus.get_mut(&f) {
+                    s.remove(&id);
+                    if s.is_empty() {
+                        self.fn_gpus.remove(&f);
+                    }
+                }
+            }
+        }
+    }
+
+    fn add_container(&mut self, c: &Container) {
+        let items: Vec<(usize, ArtifactKind)> =
+            c.items().map(|(f, k, _)| (f, k)).collect();
+        for &key in &items {
+            *self.cres.entry(key).or_insert(0) += 1;
+        }
+        self.container_items.insert(c.id, items);
+    }
+
+    fn remove_container(&mut self, id: ContainerId) {
+        if let Some(items) = self.container_items.remove(&id) {
+            for key in items {
+                let n = self.cres.get_mut(&key).expect("count for snapshotted item");
+                *n -= 1;
+                if *n == 0 {
+                    self.cres.remove(&key);
+                }
+            }
+        }
+    }
+}
+
 /// The whole deployment.
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub nodes: Vec<Node>,
+    index: RefCell<ClusterIndex>,
 }
 
 impl Cluster {
@@ -44,6 +138,7 @@ impl Cluster {
             nodes: (0..n_nodes)
                 .map(|i| Node::new(i, gpus_per_node, containers_per_node))
                 .collect(),
+            index: RefCell::new(ClusterIndex::default()),
         }
     }
 
@@ -61,7 +156,10 @@ impl Cluster {
         &self.nodes[id.node].gpus[id.index]
     }
 
+    /// Mutable GPU access. Marks the GPU dirty in the routing indexes
+    /// (repaired lazily on the next query).
     pub fn gpu_mut(&mut self, id: GpuId) -> &mut Gpu {
+        self.index.get_mut().dirty_gpus.push(id);
         &mut self.nodes[id.node].gpus[id.index]
     }
 
@@ -69,8 +167,33 @@ impl Cluster {
         &self.nodes[id.node].containers[id.index]
     }
 
+    /// Mutable container access. Marks the container dirty in the
+    /// residency index (repaired lazily on the next query).
     pub fn container_mut(&mut self, id: ContainerId) -> &mut Container {
+        self.index.get_mut().dirty_containers.push(id);
         &mut self.nodes[id.node].containers[id.index]
+    }
+
+    /// Replace a GPU wholesale (test fixtures with custom capacities).
+    pub fn replace_gpu(&mut self, id: GpuId, gpu: Gpu) {
+        assert_eq!(gpu.id, id, "replacement GPU must keep its id");
+        self.index.get_mut().dirty_gpus.push(id);
+        self.nodes[id.node].gpus[id.index] = gpu;
+    }
+
+    /// Drop GPUs from the tail of the node list until exactly
+    /// `total.max(1)` remain (fleet-experiment cluster shaping).
+    pub fn trim_gpus(&mut self, total: usize) {
+        while self.n_gpus() > total.max(1) {
+            let node = self
+                .nodes
+                .iter_mut()
+                .rev()
+                .find(|n| !n.gpus.is_empty())
+                .expect("n_gpus > 0 implies a non-empty node");
+            node.gpus.pop();
+        }
+        self.index.get_mut().built = false; // full rebuild on next query
     }
 
     pub fn gpus(&self) -> impl Iterator<Item = &Gpu> {
@@ -102,6 +225,118 @@ impl Cluster {
     pub fn total_gpu_free_gb(&self) -> f64 {
         self.gpus().map(|g| g.free_gb()).sum()
     }
+
+    // ------------------------------------------------------ routing indexes
+
+    /// Apply pending dirty-marks (or a full rebuild) to the indexes.
+    fn repair(&self) {
+        let mut ix = self.index.borrow_mut();
+        if !ix.built {
+            *ix = ClusterIndex { built: true, ..Default::default() };
+            for n in &self.nodes {
+                for g in &n.gpus {
+                    ix.add_gpu(g);
+                }
+                for c in &n.containers {
+                    ix.add_container(c);
+                }
+            }
+            return;
+        }
+        while let Some(id) = ix.dirty_gpus.pop() {
+            ix.remove_gpu(id);
+            if let Some(g) = self
+                .nodes
+                .get(id.node)
+                .and_then(|n| n.gpus.get(id.index))
+            {
+                ix.add_gpu(g);
+            }
+        }
+        while let Some(id) = ix.dirty_containers.pop() {
+            ix.remove_container(id);
+            if let Some(c) = self
+                .nodes
+                .get(id.node)
+                .and_then(|n| n.containers.get(id.index))
+            {
+                ix.add_container(c);
+            }
+        }
+    }
+
+    /// Walk GPUs in descending `(free memory, id)` order, calling `visit`
+    /// until it returns true; returns the accepted GPU. Equal free memory
+    /// visits the higher `GpuId` first — the same selection the historical
+    /// full scan's last-max-wins produced. `visit` must not re-enter the
+    /// cluster's index queries (plain GPU/container reads are fine).
+    pub fn scan_free_desc(
+        &self,
+        mut visit: impl FnMut(GpuId, f64) -> bool,
+    ) -> Option<GpuId> {
+        self.repair();
+        let ix = self.index.borrow();
+        for &(_, g) in ix.free.iter().rev() {
+            if visit(g, self.gpu(g).free_gb()) {
+                return Some(g);
+            }
+        }
+        None
+    }
+
+    /// GPUs where `function` has any residency (artifacts or a CUDA
+    /// context) — the warm routing candidates when no shared-backbone
+    /// host exists.
+    pub fn gpus_with_function(&self, function: usize) -> Vec<GpuId> {
+        self.repair();
+        self.index
+            .borrow()
+            .fn_gpus
+            .get(&function)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Does any container hold this (function, kind) artifact? O(log)
+    /// via the residency count index — replaces the per-cold-dispatch
+    /// scan over every container.
+    pub fn container_has(&self, function: usize, kind: ArtifactKind) -> bool {
+        self.repair();
+        self.index
+            .borrow()
+            .cres
+            .get(&(function, kind))
+            .copied()
+            .unwrap_or(0)
+            > 0
+    }
+
+    /// Brute-force re-derivation of every routing index, asserting each
+    /// matches its incremental counterpart. Called from
+    /// `Engine::check_indexes` and tests; never by the simulation.
+    pub fn check_index(&self) {
+        self.repair();
+        let ix = self.index.borrow();
+        let mut free = BTreeSet::new();
+        let mut fn_gpus: BTreeMap<usize, BTreeSet<GpuId>> = BTreeMap::new();
+        let mut cres: BTreeMap<(usize, ArtifactKind), usize> = BTreeMap::new();
+        for n in &self.nodes {
+            for g in &n.gpus {
+                free.insert((f64_key(g.free_gb()), g.id));
+                for f in g.resident_functions() {
+                    fn_gpus.entry(f).or_default().insert(g.id);
+                }
+            }
+            for c in &n.containers {
+                for (f, k, _) in c.items() {
+                    *cres.entry((f, k)).or_insert(0) += 1;
+                }
+            }
+        }
+        assert_eq!(ix.free, free, "free-memory index drifted");
+        assert_eq!(ix.fn_gpus, fn_gpus, "per-function GPU residency index drifted");
+        assert_eq!(ix.cres, cres, "container residency index drifted");
+    }
 }
 
 #[cfg(test)]
@@ -132,5 +367,77 @@ mod tests {
     fn total_memory_sums() {
         let c = Cluster::new(2, 2, 1);
         assert!((c.total_gpu_mem_gb() - 4.0 * 48.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn free_index_tracks_mutations() {
+        let mut c = Cluster::new(1, 3, 2);
+        let ids = c.gpu_ids();
+        c.check_index();
+        // Equal free memory: the frontier visits the highest id first.
+        let first = c.scan_free_desc(|_, _| true).unwrap();
+        assert_eq!(first, ids[2]);
+        // Consume memory on the last GPU: the frontier moves.
+        c.gpu_mut(ids[2]).reserve_kv(1, 10.0).unwrap();
+        c.check_index();
+        let first = c.scan_free_desc(|_, _| true).unwrap();
+        assert_eq!(first, ids[1]);
+        // Free it again.
+        c.gpu_mut(ids[2]).release_kv(1);
+        c.check_index();
+        assert_eq!(c.scan_free_desc(|_, _| true).unwrap(), ids[2]);
+    }
+
+    #[test]
+    fn fn_residency_index_tracks_mutations() {
+        let mut c = Cluster::new(1, 2, 2);
+        let ids = c.gpu_ids();
+        assert!(c.gpus_with_function(7).is_empty());
+        c.gpu_mut(ids[1])
+            .place_artifact(7, ArtifactKind::Adapter, 0.2)
+            .unwrap();
+        c.check_index();
+        assert_eq!(c.gpus_with_function(7), vec![ids[1]]);
+        c.gpu_mut(ids[0]).create_cuda_context(7).unwrap();
+        assert_eq!(c.gpus_with_function(7), vec![ids[0], ids[1]]);
+        c.gpu_mut(ids[1])
+            .evict_artifact(7, ArtifactKind::Adapter)
+            .unwrap();
+        c.gpu_mut(ids[0]).destroy_cuda_context(7);
+        c.check_index();
+        assert!(c.gpus_with_function(7).is_empty());
+    }
+
+    #[test]
+    fn container_residency_counts() {
+        let mut c = Cluster::new(1, 1, 2);
+        let cids = c.container_ids();
+        assert!(!c.container_has(3, ArtifactKind::Library));
+        c.container_mut(cids[0])
+            .place(3, ArtifactKind::Library, 2.5)
+            .unwrap();
+        c.container_mut(cids[1])
+            .place(3, ArtifactKind::Library, 2.5)
+            .unwrap();
+        c.check_index();
+        assert!(c.container_has(3, ArtifactKind::Library));
+        c.container_mut(cids[0]).evict(3, ArtifactKind::Library).unwrap();
+        assert!(c.container_has(3, ArtifactKind::Library), "second copy remains");
+        c.container_mut(cids[1]).evict(3, ArtifactKind::Library).unwrap();
+        c.check_index();
+        assert!(!c.container_has(3, ArtifactKind::Library));
+    }
+
+    #[test]
+    fn trim_and_replace_keep_index_coherent() {
+        let mut c = Cluster::new(2, 8, 2);
+        c.trim_gpus(11);
+        assert_eq!(c.n_gpus(), 11);
+        c.check_index();
+        let id = c.gpu_ids()[0];
+        c.replace_gpu(id, Gpu::with_capacity(id, 96.0));
+        c.check_index();
+        // The doubled-capacity GPU is now the free-memory frontier.
+        assert_eq!(c.scan_free_desc(|_, _| true), Some(id));
     }
 }

@@ -3,8 +3,15 @@
 //! execution. Keep-alive is what makes baseline LoRA serving expensive
 //! (idle full backbones bill GPU GB-seconds) and, for ServerlessLoRA,
 //! what creates the idle capacity the pre-loader exploits (§2.4).
+//!
+//! Expiries are kept in a time-ordered index alongside the per-function
+//! map, so `next_expiry` is O(log n) and `expired` pops a prefix — the
+//! engine re-arms its single `KeepaliveCheck` on every completion, which
+//! would otherwise re-scan every warm function at fleet scale.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::f64_key;
 
 /// Default industry keep-alive window (Azure Functions: 10 min; we use
 /// the common 5-minute setting the serverless-inference literature uses).
@@ -16,6 +23,8 @@ pub struct KeepAlive {
     pub window_s: f64,
     /// function → expiry time.
     expiry: BTreeMap<usize, f64>,
+    /// (total-order key of expiry time, function): the time-ordered view.
+    order: BTreeSet<(u64, usize)>,
 }
 
 impl Default for KeepAlive {
@@ -26,12 +35,16 @@ impl Default for KeepAlive {
 
 impl KeepAlive {
     pub fn new(window_s: f64) -> Self {
-        KeepAlive { window_s, expiry: BTreeMap::new() }
+        KeepAlive { window_s, expiry: BTreeMap::new(), order: BTreeSet::new() }
     }
 
     /// A function finished serving at `now` — (re)arm its window.
     pub fn touch(&mut self, function: usize, now_s: f64) {
-        self.expiry.insert(function, now_s + self.window_s);
+        let e = now_s + self.window_s;
+        if let Some(old) = self.expiry.insert(function, e) {
+            self.order.remove(&(f64_key(old), function));
+        }
+        self.order.insert((f64_key(e), function));
     }
 
     pub fn is_warm(&self, function: usize, now_s: f64) -> bool {
@@ -39,29 +52,26 @@ impl KeepAlive {
     }
 
     /// Functions whose window expired by `now` (to be torn down + billed
-    /// until their expiry instant).
+    /// until their expiry instant). Pops a prefix of the time order.
     pub fn expired(&mut self, now_s: f64) -> Vec<(usize, f64)> {
-        let out: Vec<(usize, f64)> = self
-            .expiry
-            .iter()
-            .filter(|(_, &e)| e <= now_s)
-            .map(|(&f, &e)| (f, e))
-            .collect();
-        for (f, _) in &out {
-            self.expiry.remove(f);
+        let cut = f64_key(now_s);
+        let mut out = Vec::new();
+        while let Some(&(k, f)) = self.order.first() {
+            if k > cut {
+                break;
+            }
+            self.order.pop_first();
+            let e = self.expiry.remove(&f).expect("order entry without expiry");
+            out.push((f, e));
         }
         out
     }
 
-    /// Next expiry instant (simulator wakeup). The engine arms exactly
-    /// one `KeepaliveCheck` at this instant; because every expiry is
-    /// `touch_time + window` with `touch_time ≤ now`, a later touch can
-    /// never move the minimum below an already-armed instant, so lazy
-    /// re-arming on fire preserves exact teardown times.
+    /// Next expiry instant (simulator wakeup), O(log n). The engine arms
+    /// exactly one `KeepaliveCheck` here and re-arms (cancelling the old
+    /// event) whenever this minimum moves.
     pub fn next_expiry(&self) -> Option<f64> {
-        self.expiry.values().cloned().fold(None, |acc, e| {
-            Some(acc.map_or(e, |a: f64| a.min(e)))
-        })
+        self.order.first().map(|&(_, f)| self.expiry[&f])
     }
 
     pub fn warm_functions(&self, now_s: f64) -> Vec<usize> {
@@ -73,7 +83,9 @@ impl KeepAlive {
     }
 
     pub fn drop(&mut self, function: usize) {
-        self.expiry.remove(&function);
+        if let Some(e) = self.expiry.remove(&function) {
+            self.order.remove(&(f64_key(e), function));
+        }
     }
 }
 
@@ -131,6 +143,41 @@ mod tests {
             let e = k.next_expiry().unwrap();
             assert!(e >= armed, "min expiry moved earlier: {armed} -> {e}");
             armed = e;
+        }
+    }
+
+    #[test]
+    fn order_index_matches_map_under_churn() {
+        // The ordered view must stay a faithful index of the map under
+        // arbitrary touch/drop/expire interleavings.
+        use crate::util::rng::Pcg64;
+        let mut k = KeepAlive::new(50.0);
+        let mut rng = Pcg64::new(17);
+        let mut now = 0.0;
+        for _ in 0..2000 {
+            now += rng.f64() * 5.0;
+            match rng.below(4) {
+                0 | 1 => k.touch(rng.below(16), now),
+                2 => k.drop(rng.below(16)),
+                _ => {
+                    let ex = k.expired(now);
+                    for (_, e) in ex {
+                        assert!(e <= now);
+                    }
+                }
+            }
+            // Index/map agreement.
+            assert_eq!(k.order.len(), k.expiry.len());
+            let brute = k
+                .expiry
+                .iter()
+                .map(|(_, &e)| e)
+                .min_by(f64::total_cmp);
+            assert_eq!(
+                k.next_expiry().map(f64::to_bits),
+                brute.map(f64::to_bits),
+                "min expiry diverged from brute force"
+            );
         }
     }
 }

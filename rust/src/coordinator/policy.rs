@@ -575,15 +575,15 @@ impl PredictivePreload {
         let spec = env.functions[f].clone();
         let m = &spec.model;
         // Per-model host-RAM staging copy: replica/backbone reloads go
-        // over PCIe instead of SSD.
-        let cids = env.cluster.container_ids();
-        let has_copy = cids.iter().any(|&c| {
-            env.functions
-                .iter()
-                .filter(|s| s.model.name == m.name)
-                .any(|s| env.cluster.container(c).has(s.id, ArtifactKind::Backbone))
-        });
+        // over PCIe instead of SSD. The residency index answers "does
+        // any container hold a peer's backbone" without a container scan.
+        let has_copy = env
+            .functions
+            .iter()
+            .filter(|s| s.model.name == m.name)
+            .any(|s| env.cluster.container_has(s.id, ArtifactKind::Backbone));
         if !has_copy {
+            let cids = env.cluster.container_ids();
             if let Some(&cid) = cids.get(f % cids.len().max(1)) {
                 let _ = env.cluster.container_mut(cid).place(
                     f,

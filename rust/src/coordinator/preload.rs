@@ -605,8 +605,8 @@ mod tests {
         let (d, _, r) = setup(6);
         let mut c = Cluster::new(1, 1, 1);
         // Shrink the GPU to 10 GB (7B backbone is 13.5).
-        c.nodes[0].gpus[0] =
-            crate::cluster::Gpu::with_capacity(GpuId { node: 0, index: 0 }, 10.0);
+        let gid = GpuId { node: 0, index: 0 };
+        c.replace_gpu(gid, crate::cluster::Gpu::with_capacity(gid, 10.0));
         let plan = PreloadScheduler::default().plan(&d, &c, &r);
         let gpu_bytes: f64 = plan
             .decisions
@@ -644,8 +644,8 @@ mod tests {
         // One GPU that fits one backbone; the hot function should win it.
         let demands = vec![demand(0, 0.05), demand(1, 5.0)];
         let mut c = Cluster::new(1, 1, 2);
-        c.nodes[0].gpus[0] =
-            crate::cluster::Gpu::with_capacity(GpuId { node: 0, index: 0 }, 18.0);
+        let gid = GpuId { node: 0, index: 0 };
+        c.replace_gpu(gid, crate::cluster::Gpu::with_capacity(gid, 18.0));
         let r = BackboneRegistry::new();
         let plan = PreloadScheduler::default().plan(&demands, &c, &r);
         // Both share one backbone (same model) — but kernels/adapters are

@@ -2,10 +2,20 @@
 //! function instance / GPU with the best pre-loaded state for an arriving
 //! batch, locality-aware (§3.1 challenge 3: "function instances should
 //! reside on GPUs that have already loaded corresponding backbone LLMs").
+//!
+//! Routing is sub-linear in cluster size: when the model has shared
+//! backbone hosts, only that host set is scored (it is the per-model
+//! shard of the candidate space); otherwise the candidates are the GPUs
+//! where the function already has private residency (the cluster's
+//! per-function index) plus the top of the cluster's free-memory
+//! ordering — never a fresh `Vec` over every GPU. Selection is the
+//! argmax of `(score, GpuId)`, which reproduces the historical full
+//! scan's last-max-wins tie behavior exactly.
 
 use crate::artifact::{ArtifactKind, FunctionSpec};
 use crate::cluster::{Cluster, GpuId};
 use crate::sharing::BackboneRegistry;
+use crate::util::f64_key;
 
 /// What the chosen GPU already has for this function — determines which
 /// cold-start phases remain (the router's score and the simulator's
@@ -60,6 +70,16 @@ impl Router {
         warm + g.free_gb() / 1000.0 // free memory as tie-break
     }
 
+    /// Penalised selection key: GPUs that cannot even fit the KV after
+    /// full offload score 1e6 lower (the offloader handles partial
+    /// shortfalls). Mapped through [`f64_key`] so keys order with plain
+    /// tuple `Ord`; ties on the exact score resolve by `GpuId`.
+    fn key(cluster: &Cluster, spec: &FunctionSpec, kv_need: f64, g: GpuId) -> (u64, GpuId) {
+        let s = Self::score(cluster, spec, g)
+            - if cluster.gpu(g).total_gb < kv_need { 1e6 } else { 0.0 };
+        (f64_key(s), g)
+    }
+
     /// Pick the best GPU for a batch of `batch` requests of `spec`.
     /// `registry` narrows the search to backbone hosts when any exist.
     pub fn route(
@@ -68,30 +88,63 @@ impl Router {
         spec: &FunctionSpec,
         batch: usize,
     ) -> Option<Route> {
-        let hosts = registry.hosts(spec.model.name);
-        let candidates: Vec<GpuId> = if hosts.is_empty() {
-            cluster.gpu_ids()
-        } else {
-            hosts.to_vec()
-        };
         let kv_need = spec.model.kv_per_request_gb * batch as f64;
-        let best = candidates
-            .into_iter()
-            .max_by(|&a, &b| {
-                let sa = Self::score(cluster, spec, a)
-                    // Penalise GPUs that cannot even fit the KV after full
-                    // offload (offloader handles partial shortfalls).
-                    - if cluster.gpu(a).total_gb < kv_need { 1e6 } else { 0.0 };
-                let sb = Self::score(cluster, spec, b)
-                    - if cluster.gpu(b).total_gb < kv_need { 1e6 } else { 0.0 };
-                sa.total_cmp(&sb)
-            })?;
+        let hosts = registry.hosts(spec.model.name);
+        let best = if hosts.is_empty() {
+            Self::route_cold(cluster, spec, kv_need)
+        } else {
+            // Per-model shard: score only the host set. Ties keep the
+            // historical full scan's last-max-wins in host-list order
+            // (hosts are in registry insertion order, not id order).
+            hosts
+                .iter()
+                .fold(None::<(u64, GpuId)>, |acc, &g| {
+                    let s = Self::key(cluster, spec, kv_need, g).0;
+                    match acc {
+                        Some((best_s, _)) if best_s > s => acc,
+                        _ => Some((s, g)),
+                    }
+                })
+                .map(|(_, g)| g)
+        }?;
         let readiness = Self::readiness(cluster, spec, best);
         let headroom = (cluster.gpu(best).free_gb()
             / spec.model.kv_per_request_gb.max(1e-9))
             .floor()
             .max(0.0) as usize;
         Some(Route { gpu: best, readiness, kv_headroom: headroom })
+    }
+
+    /// No shared-backbone host yet: candidates are the GPUs where this
+    /// function already has residency (warm score) plus the free-memory
+    /// frontier (zero-warmth score is `free/1000`, so the frontier GPU is
+    /// the argmax of the rest — O(resident + log G), not O(G)).
+    fn route_cold(cluster: &Cluster, spec: &FunctionSpec, kv_need: f64) -> Option<GpuId> {
+        let resident = cluster.gpus_with_function(spec.id);
+        let mut best: Option<(u64, GpuId)> = None;
+        for &g in &resident {
+            best = best.max(Some(Self::key(cluster, spec, kv_need, g)));
+        }
+        let mut cold: Option<(u64, GpuId)> = None;
+        cluster.scan_free_desc(|g, free| {
+            if resident.contains(&g) {
+                return false; // already scored with its warmth
+            }
+            if cluster.gpu(g).total_gb < kv_need {
+                // Penalised fallback: the first one seen is the argmax
+                // (descending free order ⇒ descending penalised score).
+                if cold.is_none() {
+                    cold = Some((f64_key(free / 1000.0 - 1e6), g));
+                }
+                false
+            } else {
+                // First KV-fitting GPU on the frontier: argmax of every
+                // remaining zero-warmth candidate. Stop the scan.
+                cold = Some((f64_key(free / 1000.0), g));
+                true
+            }
+        });
+        best.max(cold).map(|(_, g)| g)
     }
 }
 
@@ -137,6 +190,31 @@ mod tests {
         let route = Router::route(&c, &r, &spec(0), 1).unwrap();
         assert!(!route.readiness.backbone_on_gpu);
         assert!(route.kv_headroom > 0);
+    }
+
+    #[test]
+    fn cold_ties_resolve_to_highest_id() {
+        // Historical full-scan semantics: equal scores pick the last GPU
+        // in id order — the sub-linear path must match.
+        let c = Cluster::new(2, 2, 2);
+        let r = BackboneRegistry::new();
+        let route = Router::route(&c, &r, &spec(0), 1).unwrap();
+        assert_eq!(route.gpu, *c.gpu_ids().last().unwrap());
+    }
+
+    #[test]
+    fn private_residency_found_without_backbone_host() {
+        // The per-function residency index must surface warm GPUs even
+        // when the registry has no host for the model (no-sharing mode).
+        let mut c = Cluster::new(1, 4, 2);
+        let r = BackboneRegistry::new();
+        let warm = c.gpu_ids()[1];
+        c.gpu_mut(warm).place_artifact(0, ArtifactKind::Adapter, 0.16).unwrap();
+        c.gpu_mut(warm).place_artifact(0, ArtifactKind::CudaKernel, 0.5).unwrap();
+        c.gpu_mut(warm).create_cuda_context(0).unwrap();
+        let route = Router::route(&c, &r, &spec(0), 1).unwrap();
+        assert_eq!(route.gpu, warm, "warm artifacts beat a colder, freer GPU");
+        assert!(route.readiness.adapter_on_gpu && route.readiness.kernel_on_gpu);
     }
 
     #[test]

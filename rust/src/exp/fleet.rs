@@ -2,21 +2,27 @@
 //! engine-health experiment behind the ROADMAP north star ("heavy
 //! traffic, as fast as the hardware allows"). Sweeps cluster size and
 //! function count (8→256 GPUs, 64→4096 functions in full mode) and
-//! reports wall-clock, events processed per second, and peak
-//! event-queue length, so the dispatch-index / event-hygiene work is
-//! tracked across PRs via `BENCH_sim.json`.
+//! reports wall-clock, events processed per second, peak live
+//! event-queue length, and cancellations, so the timing-wheel /
+//! routing-index work is tracked across PRs via `BENCH_sim.json`.
+//!
+//! `--skew S` drives the sweep with the Zipf(S) function-popularity
+//! workload instead of the uniform-tiers one (Azure-style head-heavy
+//! traffic; stresses keep-alive + preload). `--check` re-runs the quick
+//! grid and fails on counter blowups against the committed structural
+//! bounds (`QUICK_BOUNDS`) — the CI regression guard.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cluster::Cluster;
-use crate::sim::workloads::fleet_workload;
+use crate::sim::workloads::{fleet_workload, zipf_fleet_workload};
 use crate::sim::{Engine, SystemConfig};
 use crate::util::json::{num, obj, Json};
 use crate::util::table::Table;
 
-/// Largest point measured by the most recent `fleet()` sweep, so
-/// `fleet_json` (the BENCH_sim.json record) reuses it instead of
+/// Largest point measured by the most recent unskewed `fleet()` sweep,
+/// so `fleet_json` (the BENCH_sim.json record) reuses it instead of
 /// re-simulating the single most expensive configuration.
 static LAST_LARGEST: Mutex<Option<FleetPoint>> = Mutex::new(None);
 
@@ -32,7 +38,7 @@ pub struct FleetPoint {
     pub events_per_s: f64,
     pub peak_queue: usize,
     pub keepalive_checks: u64,
-    pub stale_queue_checks: u64,
+    pub events_cancelled: u64,
 }
 
 /// The (GPUs, functions) sweep. Quick mode stays CI-sized; full mode
@@ -59,16 +65,23 @@ fn horizon(quick: bool) -> f64 {
 fn cluster_of(gpus: usize) -> Cluster {
     let nodes = gpus.div_ceil(8).max(1);
     let mut c = Cluster::new(nodes, 8, 16);
-    while c.n_gpus() > gpus.max(1) {
-        let last = c.nodes.last_mut().expect("at least one node");
-        last.gpus.pop();
-    }
+    c.trim_gpus(gpus);
     c
 }
 
 /// Run the flagship system at one grid point and measure the engine.
-pub fn run_point(gpus: usize, fns: usize, duration_s: f64, seed: u64) -> FleetPoint {
-    let w = fleet_workload(fns, duration_s, seed);
+/// `skew` switches the workload to Zipf(skew) function popularity.
+pub fn run_point(
+    gpus: usize,
+    fns: usize,
+    duration_s: f64,
+    seed: u64,
+    skew: Option<f64>,
+) -> FleetPoint {
+    let w = match skew {
+        Some(s) => zipf_fleet_workload(fns, duration_s, s, seed),
+        None => fleet_workload(fns, duration_s, seed),
+    };
     let requests = w.requests.len();
     let t0 = Instant::now();
     let engine = Engine::new(SystemConfig::serverless_lora(), cluster_of(gpus), w, seed);
@@ -84,7 +97,7 @@ pub fn run_point(gpus: usize, fns: usize, duration_s: f64, seed: u64) -> FleetPo
         events_per_s: stats.events_processed as f64 / wall_s.max(1e-9),
         peak_queue: stats.peak_event_queue,
         keepalive_checks: stats.keepalive_checks,
-        stale_queue_checks: stats.stale_queue_checks,
+        events_cancelled: stats.events_cancelled,
     }
 }
 
@@ -94,6 +107,10 @@ pub fn run_point(gpus: usize, fns: usize, duration_s: f64, seed: u64) -> FleetPo
 /// (nondeterministic by nature) are recorded by `fleet_json` and the
 /// bench harness's per-experiment `wall_s`.
 pub fn fleet(quick: bool) -> String {
+    fleet_with(quick, None)
+}
+
+pub fn fleet_with(quick: bool, skew: Option<f64>) -> String {
     let dur = horizon(quick);
     let cols = [
         "GPUs",
@@ -102,15 +119,21 @@ pub fn fleet(quick: bool) -> String {
         "events",
         "peak queue",
         "KA checks",
-        "stale QC",
+        "cancelled",
     ];
-    let mut t = Table::new("Fleet — engine scaling sweep (ServerlessLoRA flagship)", &cols);
+    let title = match skew {
+        Some(s) => format!(
+            "Fleet — engine scaling sweep, Zipf({s}) popularity (ServerlessLoRA flagship)"
+        ),
+        None => "Fleet — engine scaling sweep (ServerlessLoRA flagship)".to_string(),
+    };
+    let mut t = Table::new(&title, &cols);
     let points = grid(quick);
     let largest = *points.last().expect("grid non-empty");
     for (gpus, fns) in points {
-        let p = run_point(gpus, fns, dur, 11);
+        let p = run_point(gpus, fns, dur, 11, skew);
         assert_eq!(p.completed, p.requests, "fleet run lost requests");
-        if (gpus, fns) == largest {
+        if skew.is_none() && (gpus, fns) == largest {
             *LAST_LARGEST.lock().unwrap() = Some(p.clone());
         }
         t.row(vec![
@@ -120,7 +143,7 @@ pub fn fleet(quick: bool) -> String {
             p.events.to_string(),
             p.peak_queue.to_string(),
             p.keepalive_checks.to_string(),
-            p.stale_queue_checks.to_string(),
+            p.events_cancelled.to_string(),
         ]);
     }
     t.render()
@@ -135,7 +158,7 @@ pub fn fleet_json(quick: bool) -> Json {
     let cached = LAST_LARGEST.lock().unwrap().clone();
     let p = match cached {
         Some(p) if (p.gpus, p.fns) == (gpus, fns) => p,
-        _ => run_point(gpus, fns, horizon(quick), 11),
+        _ => run_point(gpus, fns, horizon(quick), 11, None),
     };
     obj(vec![
         ("gpus", num(p.gpus as f64)),
@@ -147,8 +170,83 @@ pub fn fleet_json(quick: bool) -> Json {
         ("events_per_s", num(p.events_per_s)),
         ("peak_event_queue", num(p.peak_queue as f64)),
         ("keepalive_checks", num(p.keepalive_checks as f64)),
-        ("stale_queue_checks", num(p.stale_queue_checks as f64)),
+        ("events_cancelled", num(p.events_cancelled as f64)),
     ])
+}
+
+// --------------------------------------------------- regression guard
+
+/// Committed regression bounds for one quick-grid point. The engine's
+/// counters are deterministic for a fixed seed; the bounds are
+/// *structural* envelopes (derived below), deliberately loose so only a
+/// real event-hygiene regression trips them:
+///
+/// * fired events amortize to a handful per request — 1 arrival, ≤3 exec
+///   events per batch (LoadDone + one retiring tick per job), ≤2 queue
+///   checks, a sliver of keep-alive sweeps — well under
+///   `max_events_per_request`;
+/// * the live queue holds 1 streamed arrival + ≤2 wakeups per function +
+///   ≤1 tick per GPU + one LoadDone per in-flight batch + 1 keep-alive
+///   sweep, bounded by `max_peak_queue` (cancelled events leave the
+///   queue immediately, so stale entries cannot inflate it).
+pub struct FleetBound {
+    pub gpus: usize,
+    pub fns: usize,
+    pub max_events_per_request: f64,
+    pub max_peak_queue: usize,
+}
+
+/// Bounds for `grid(true)`, in order. `max_peak_queue` is
+/// `2·fns + 64·gpus + 16` (the 64/GPU term covers ticks + in-flight
+/// loading batches, which GPU memory caps far below that).
+pub const QUICK_BOUNDS: &[FleetBound] = &[
+    FleetBound { gpus: 8, fns: 64, max_events_per_request: 16.0, max_peak_queue: 656 },
+    FleetBound { gpus: 16, fns: 256, max_events_per_request: 16.0, max_peak_queue: 1552 },
+    FleetBound { gpus: 32, fns: 1024, max_events_per_request: 16.0, max_peak_queue: 4112 },
+];
+
+/// Run one point against its bound; `Ok` is the report line.
+fn check_point(b: &FleetBound, dur: f64) -> Result<String, String> {
+    let p = run_point(b.gpus, b.fns, dur, 11, None);
+    let per_req = p.events as f64 / p.requests.max(1) as f64;
+    let line = format!(
+        "fleet-check {}g/{}f: {} requests, {:.2} events/request (bound {}), \
+         peak queue {} (bound {}), {} cancelled",
+        b.gpus,
+        b.fns,
+        p.requests,
+        per_req,
+        b.max_events_per_request,
+        p.peak_queue,
+        b.max_peak_queue,
+        p.events_cancelled,
+    );
+    if p.completed != p.requests {
+        return Err(format!("{line}\n  FAIL: lost {} requests", p.requests - p.completed));
+    }
+    if per_req > b.max_events_per_request {
+        return Err(format!("{line}\n  FAIL: event-count blowup ({per_req:.2}/request)"));
+    }
+    if p.peak_queue > b.max_peak_queue {
+        return Err(format!("{line}\n  FAIL: live event queue grew past its envelope"));
+    }
+    if p.events_cancelled == 0 {
+        return Err(format!("{line}\n  FAIL: no cancellations — supersession is broken"));
+    }
+    Ok(line)
+}
+
+/// CI regression guard (`serverless-lora fleet --check`): run the quick
+/// grid and compare the deterministic counters against `QUICK_BOUNDS`.
+pub fn check() -> Result<String, String> {
+    let mut out = String::new();
+    for b in QUICK_BOUNDS {
+        let line = check_point(b, horizon(true))?;
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out.push_str("fleet-check: all counters within committed bounds\n");
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -157,12 +255,23 @@ mod tests {
 
     #[test]
     fn tiny_point_conserves_and_measures() {
-        let p = run_point(8, 16, 120.0, 3);
+        let p = run_point(8, 16, 120.0, 3, None);
         assert_eq!(p.completed, p.requests, "lost requests");
         assert!(p.requests > 0);
         assert!(p.events >= p.requests as u64, "every request is ≥1 event");
         assert!(p.peak_queue > 0);
         assert!(p.events_per_s > 0.0);
+    }
+
+    #[test]
+    fn skewed_point_conserves_and_cancels() {
+        let p = run_point(8, 16, 300.0, 3, Some(1.2));
+        assert_eq!(p.completed, p.requests, "lost requests");
+        assert!(p.requests > 0);
+        assert!(
+            p.events_cancelled > 0,
+            "supersession should cancel events under real traffic"
+        );
     }
 
     #[test]
@@ -182,5 +291,29 @@ mod tests {
         for gpus in [1, 3, 8, 16, 20, 32, 64, 100, 128, 256] {
             assert_eq!(cluster_of(gpus).n_gpus(), gpus, "gpus={gpus}");
         }
+    }
+
+    #[test]
+    fn bounds_cover_the_quick_grid() {
+        let g = grid(true);
+        assert_eq!(g.len(), QUICK_BOUNDS.len());
+        for (point, b) in g.iter().zip(QUICK_BOUNDS) {
+            assert_eq!(*point, (b.gpus, b.fns), "bounds out of sync with the grid");
+            assert_eq!(b.max_peak_queue, 2 * b.fns + 64 * b.gpus + 16);
+        }
+    }
+
+    #[test]
+    fn check_point_passes_at_small_scale() {
+        // A miniature bound with the same structural envelope: the guard
+        // itself must pass on a healthy engine.
+        let b = FleetBound {
+            gpus: 8,
+            fns: 16,
+            max_events_per_request: 16.0,
+            max_peak_queue: 2 * 16 + 64 * 8 + 16,
+        };
+        let line = check_point(&b, 120.0).expect("healthy engine trips the guard");
+        assert!(line.contains("events/request"));
     }
 }

@@ -5,8 +5,11 @@
 //!                                                  regenerate a paper table/figure
 //! serverless-lora simulate --all [--full] [--jobs N]
 //!                                                  regenerate everything
-//! serverless-lora fleet [--full]                   engine scaling sweep
-//!                                                  (alias: simulate --exp fleet)
+//! serverless-lora fleet [--full] [--skew S] [--check]
+//!                                                  engine scaling sweep
+//!                                                  (alias: simulate --exp fleet;
+//!                                                  --skew: Zipf popularity;
+//!                                                  --check: CI counter guard)
 //! serverless-lora serve [--model llama-tiny] [--requests N] [--batch B]
 //!                                                  real PJRT serving demo (`pjrt` feature)
 //! serverless-lora info [--model llama-tiny]        artifact/manifest inventory
@@ -20,7 +23,7 @@ use serverless_lora::exp;
 
 /// Flags that never take a value: their presence means "true", and the
 /// token after them is a positional argument, not their value.
-const BOOL_FLAGS: &[&str] = &["full", "all", "quick"];
+const BOOL_FLAGS: &[&str] = &["full", "all", "quick", "check"];
 
 /// Hand-rolled flag parser.
 ///
@@ -81,7 +84,8 @@ fn usage() -> ! {
         "usage: serverless-lora <simulate|fleet|serve|info> [options]\n\
          \n\
          simulate --exp <id>|--all [--full] [--jobs N]   ids: {}\n\
-         fleet    [--full]                               engine scaling sweep\n\
+         fleet    [--full] [--skew S] [--check]          engine scaling sweep\n\
+                  (--skew: Zipf(S) popularity; --check: counter regression guard)\n\
          serve    [--model llama-tiny] [--requests 16] [--batch 4]\n\
          info     [--model llama-tiny]",
         exp::ALL_EXPERIMENTS.join(", ")
@@ -110,7 +114,29 @@ fn main() -> anyhow::Result<()> {
         }
         Some("fleet") => {
             let quick = !flags.contains_key("full");
-            print!("{}", exp::run_experiment("fleet", quick));
+            if flags.contains_key("check") {
+                // CI regression guard: deterministic engine counters vs
+                // the committed structural bounds.
+                match exp::fleet::check() {
+                    Ok(report) => print!("{report}"),
+                    Err(msg) => {
+                        eprintln!("{msg}");
+                        std::process::exit(1);
+                    }
+                }
+            } else {
+                let skew = match flags.get("skew") {
+                    Some(v) => match v.parse::<f64>() {
+                        Ok(s) if s.is_finite() && s > 0.0 => Some(s),
+                        _ => {
+                            eprintln!("--skew needs a positive number, got '{v}'");
+                            std::process::exit(2);
+                        }
+                    },
+                    None => None,
+                };
+                print!("{}", exp::fleet::fleet_with(quick, skew));
+            }
         }
         Some("serve") => {
             let model = flags

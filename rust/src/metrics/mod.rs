@@ -101,12 +101,15 @@ pub struct RunStats {
     pub warm_dispatches: usize,
     /// Event-loop telemetry (fleet experiment / hygiene regressions).
     pub events_processed: u64,
+    /// Peak number of *live* pending events (cancelled events leave the
+    /// queue immediately, so this tracks real in-flight work).
     pub peak_event_queue: usize,
     /// `KeepaliveCheck` events actually processed — O(expiry windows),
     /// not O(completions), since exactly one is armed at a time.
     pub keepalive_checks: u64,
-    /// `QueueCheck` events skipped by the generation guard.
-    pub stale_queue_checks: u64,
+    /// Superseded events removed via `EventQueue::cancel` (the O(1)
+    /// replacement for the old generation/version staleness skips).
+    pub events_cancelled: u64,
 }
 
 /// Aggregated metrics for one run of one system.

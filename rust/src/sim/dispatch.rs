@@ -11,7 +11,7 @@ use crate::cluster::{ContainerId, GpuId};
 use crate::coordinator::policy::{LoadQuery, PolicyEnv};
 use crate::coordinator::{Queued, Readiness, Router};
 use crate::metrics::{Phase, RequestOutcome};
-use crate::sim::engine::Engine;
+use crate::sim::engine::{Engine, QueueWakeups};
 use crate::sim::events::EventKind;
 use crate::trace::Request;
 
@@ -48,9 +48,8 @@ impl Engine {
         let req = self.requests[i].clone();
         let f = req.function;
         self.queues[f].push(Queued { request: req.id, arrival_s: req.arrival_s });
-        self.queue_gen[f] += 1;
         self.active.insert(f);
-        let gen_at_arrival = self.queue_gen[f];
+        let armed_at_arrival = self.queue_wakeups[f];
         self.try_dispatch_all(Some(f));
         // Forecast hooks fire AFTER this arrival's dispatch attempt: a
         // predictive agent stages in the background, so its work becomes
@@ -69,31 +68,37 @@ impl Engine {
             self.policies.preload.on_arrival(f, req.arrival_s, &mut env);
         }
         // A dispatch above already re-armed wakeups for the residual
-        // queue (and bumped the generation); arm only if it didn't.
-        if self.queue_gen[f] == gen_at_arrival {
+        // queue (cancelling the pre-dispatch checks); arm only if it
+        // didn't.
+        if self.queue_wakeups[f] == armed_at_arrival {
             self.arm_queue_wakeups(f);
         }
     }
 
     /// Wakeups for function `f`'s queue: the debounce settle-point and
-    /// the Eq. 3 expiry, stamped with the current queue generation.
-    /// Every queue mutation (arrival push, dispatch take) bumps the
-    /// generation and re-arms, so at most two checks per function are
-    /// ever live and earlier ones fall through the staleness guard.
+    /// the Eq. 3 expiry. Every queue mutation (arrival push, dispatch
+    /// take) re-arms, **cancelling** the superseded checks in O(1) —
+    /// at most two checks per function are ever live, and a check that
+    /// fires is always current.
     pub(super) fn arm_queue_wakeups(&mut self, f: usize) {
+        let old = std::mem::take(&mut self.queue_wakeups[f]);
+        for tok in old.tokens() {
+            self.events.cancel(tok); // inert if the check already fired
+        }
         if self.queues[f].is_empty() {
             return;
         }
-        let gen = self.queue_gen[f];
-        self.events.push(
+        let settle = self.events.push(
             self.now + crate::coordinator::batching::DEBOUNCE_S + 1e-3,
-            EventKind::QueueCheck(f, gen),
+            EventKind::QueueCheck(f),
         );
+        let mut expiry = None;
         if let Some(t) = self.policies.batching.expiry_time(&self.queues[f]) {
             if t.is_finite() && t > self.now {
-                self.events.push(t, EventKind::QueueCheck(f, gen));
+                expiry = Some(self.events.push(t, EventKind::QueueCheck(f)));
             }
         }
+        self.queue_wakeups[f] = QueueWakeups { settle: Some(settle), expiry };
     }
 
     pub(super) fn should_dispatch(&self, f: usize) -> bool {
@@ -263,7 +268,6 @@ impl Engine {
         }
         let taken = self.queues[f].take_batch(cap.min(want));
         debug_assert!(!taken.is_empty());
-        self.queue_gen[f] += 1;
         if self.queues[f].is_empty() {
             self.active.remove(&f);
         }
@@ -329,8 +333,8 @@ impl Engine {
         self.fn_inflight[f] += 1;
         *self.gpu_busy.get_mut(&gpu).unwrap() += 1;
         self.events.push(self.now + total_load, EventKind::LoadDone(batch_id));
-        // Residual queue: re-arm wakeups under the new generation (the
-        // pre-dispatch checks are stale now).
+        // Residual queue: cancel the pre-dispatch checks and re-arm for
+        // what is left.
         self.arm_queue_wakeups(f);
         Ok(())
     }
@@ -340,6 +344,11 @@ impl Engine {
     /// congested and a colder GPU has room for another shared copy, pay
     /// the one-time replica load — all later functions of this model
     /// attach to it for free.
+    ///
+    /// Walks the cluster's free-memory ordering from the top: the first
+    /// idle GPU with room is the max-free idle GPU (equal free resolves
+    /// to the higher id, matching the historical full scan). Only under
+    /// total saturation does the walk see every GPU.
     pub(super) fn maybe_replicate(&self, spec: &FunctionSpec, routed: GpuId) -> GpuId {
         if !self.cfg.backbone_sharing {
             return routed;
@@ -349,17 +358,10 @@ impl Engine {
             return routed;
         }
         let need = spec.model.gpu_resident_gb() + spec.model.kv_per_request_gb;
+        let execs = &self.execs;
         self.cluster
-            .gpu_ids()
-            .into_iter()
-            .filter(|&g| {
-                self.execs[&g].contention() == 0 && self.cluster.gpu(g).free_gb() >= need
-            })
-            .max_by(|&a, &b| {
-                self.cluster
-                    .gpu(a)
-                    .free_gb()
-                    .total_cmp(&self.cluster.gpu(b).free_gb())
+            .scan_free_desc(|g, free| {
+                free >= need && execs[&g].contention() == 0
             })
             .unwrap_or(routed)
     }
@@ -389,23 +391,18 @@ impl Engine {
         // pre-loaded cold starts run at warm-start speed.
         let warm_instance = self.policies.preload.prewarmed(ready)
             || (self.keepalive.is_warm(f, self.now) && ready.cuda_context);
-        let container_has = |kind: ArtifactKind| {
-            self.cluster
-                .container_ids()
-                .iter()
-                .any(|&c| self.cluster.container(c).has(f, kind))
-        };
+        // O(log) container-residency lookups via the cluster index — the
+        // old closures scanned every container per cold dispatch.
+        let container_has = |kind: ArtifactKind| self.cluster.container_has(f, kind);
         // Backbone staging copies are per-model, not per-function: any
         // function of the same model can read the host-RAM copy (the
         // peer list is indexed once at construction, not re-scanned).
         let container_has_model_backbone = {
             let peers: &[usize] =
                 self.model_peers.get(m.name).map(Vec::as_slice).unwrap_or_default();
-            self.cluster.container_ids().iter().any(|&c| {
-                peers
-                    .iter()
-                    .any(|&fid| self.cluster.container(c).has(fid, ArtifactKind::Backbone))
-            })
+            peers
+                .iter()
+                .any(|&fid| self.cluster.container_has(fid, ArtifactKind::Backbone))
         };
         let query = LoadQuery {
             function: f,
@@ -468,20 +465,23 @@ impl Engine {
         self.schedule_tick(gpu);
     }
 
+    /// (Re)schedule the single completion tick for `gpu`: the superseded
+    /// tick (scheduled against the pre-mutation job set) is cancelled
+    /// outright, so exactly one live `GpuTick` exists per busy GPU and a
+    /// tick that fires is always current.
     pub(super) fn schedule_tick(&mut self, gpu: GpuId) {
-        let exec = &self.execs[&gpu];
-        if let Some((_, t)) = exec.next_completion() {
-            let v = exec.version;
-            self.events.push(t.max(self.now), EventKind::GpuTick(gpu, v));
+        if let Some(tok) = self.tick_tokens.remove(&gpu) {
+            self.events.cancel(tok);
+        }
+        if let Some((_, t)) = self.execs[&gpu].next_completion() {
+            let tok = self.events.push(t.max(self.now), EventKind::GpuTick(gpu));
+            self.tick_tokens.insert(gpu, tok);
         }
     }
 
-    pub(super) fn on_gpu_tick(&mut self, gpu: GpuId, version: u64) {
-        if self.execs[&gpu].version != version {
-            return; // stale
-        }
-        // The job this tick was scheduled for (the version matched, so
-        // the job set is unchanged since scheduling).
+    pub(super) fn on_gpu_tick(&mut self, gpu: GpuId) {
+        // The job this tick was scheduled for (ticks are cancelled on
+        // every job-set mutation, so a firing tick is never stale).
         let next = self.execs[&gpu].next_completion();
         let exec = self.execs.get_mut(&gpu).unwrap();
         let mut finished = exec.finished_at(self.now);

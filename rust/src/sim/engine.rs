@@ -22,9 +22,25 @@ pub use crate::metrics::RunStats;
 use crate::sharing::BackboneRegistry;
 use crate::sim::config::SystemConfig;
 use crate::sim::dispatch::Batch;
-use crate::sim::events::{EventKind, EventQueue};
+use crate::sim::events::{EventKind, EventQueue, EventToken};
 use crate::sim::exec::GpuExec;
 use crate::trace::Request;
+
+/// The ≤2 outstanding wakeups for one function's queue (debounce settle
+/// + Eq. 3 expiry). Superseded wakeups are *cancelled* outright on every
+/// re-arm; a token whose event already fired is inert (its slab slot's
+/// generation moved on), so stale handles left here are harmless.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub(super) struct QueueWakeups {
+    pub(super) settle: Option<EventToken>,
+    pub(super) expiry: Option<EventToken>,
+}
+
+impl QueueWakeups {
+    pub(super) fn tokens(self) -> impl Iterator<Item = EventToken> {
+        [self.settle, self.expiry].into_iter().flatten()
+    }
+}
 
 /// A workload: functions + merged time-ordered request stream.
 #[derive(Debug, Clone)]
@@ -66,12 +82,16 @@ pub struct Engine {
     /// `Prefill` state (replaces the O(batches) scan in
     /// `target_gpu_idle`).
     pub(super) gpu_busy: BTreeMap<GpuId, usize>,
-    /// Per-function queue generation: bumped on every push/take, stamps
-    /// `QueueCheck` events so stale wakeups are skipped in O(1).
-    pub(super) queue_gen: Vec<u64>,
-    /// Time of the single outstanding `KeepaliveCheck` event
-    /// (`f64::INFINITY` = none armed).
-    pub(super) keepalive_armed_at: f64,
+    /// Outstanding queue-wakeup tokens per function: superseded checks
+    /// are cancelled in O(1) instead of being stamped and skipped.
+    pub(super) queue_wakeups: Vec<QueueWakeups>,
+    /// The single outstanding `GpuTick` per GPU (absent = exec idle).
+    /// Re-scheduling cancels the previous tick outright.
+    pub(super) tick_tokens: BTreeMap<GpuId, EventToken>,
+    /// The single outstanding `KeepaliveCheck`: its armed instant and
+    /// token. Re-armed (cancel + push) whenever the earliest expiry
+    /// moves, so sweeps fire only when something actually expires.
+    pub(super) keepalive_armed: Option<(f64, EventToken)>,
     /// Arrival stream cursor: request indices sorted by arrival time;
     /// only the next pending arrival lives in the event queue, so the
     /// heap stays O(in-flight events) instead of O(requests).
@@ -127,8 +147,9 @@ impl Engine {
             active: BTreeSet::new(),
             fn_inflight: vec![0; n_fns],
             gpu_busy,
-            queue_gen: vec![0; n_fns],
-            keepalive_armed_at: f64::INFINITY,
+            queue_wakeups: vec![QueueWakeups::default(); n_fns],
+            tick_tokens: BTreeMap::new(),
+            keepalive_armed: None,
             arrival_order: Vec::new(),
             arrival_cursor: 0,
             model_peers,
@@ -199,22 +220,22 @@ impl Engine {
         self.now = ev.t;
         match ev.kind {
             EventKind::Arrival(i) => self.on_arrival(i),
-            EventKind::QueueCheck(f, gen) => {
-                if gen == self.queue_gen[f] {
-                    self.try_dispatch_all(Some(f));
-                } else {
-                    self.stats.stale_queue_checks += 1;
-                }
-            }
+            // A QueueCheck that fires is current by construction: every
+            // queue mutation cancels its superseded checks outright.
+            EventKind::QueueCheck(f) => self.try_dispatch_all(Some(f)),
             EventKind::LoadDone(b) => self.on_load_done(b),
-            EventKind::GpuTick(g, v) => self.on_gpu_tick(g, v),
+            EventKind::GpuTick(g) => {
+                self.tick_tokens.remove(&g); // this tick just fired
+                self.on_gpu_tick(g);
+            }
             EventKind::KeepaliveCheck => {
                 self.stats.keepalive_checks += 1;
-                self.keepalive_armed_at = f64::INFINITY;
+                self.keepalive_armed = None;
                 self.on_keepalive();
                 self.arm_keepalive();
             }
         }
+        self.stats.events_cancelled = self.events.cancelled();
         true
     }
 
@@ -227,6 +248,7 @@ impl Engine {
     /// billing model's settlement (serverful: flat GPU-hours).
     pub fn finish(mut self) -> (RunMetrics, CostTracker, RunStats) {
         let end = self.duration_s.max(self.now);
+        self.stats.events_cancelled = self.events.cancelled();
         self.bill_interval(end);
         let dedicated: BTreeSet<GpuId> = self.dedicated.values().cloned().collect();
         self.policies.billing.finalize(dedicated.len(), end, &mut self.cost);
@@ -242,22 +264,31 @@ impl Engine {
         (self.metrics, self.cost, self.stats)
     }
 
-    /// Arm the single keep-alive sweep at the earliest expiry, if none
-    /// is outstanding. The armed instant never trails the earliest
-    /// expiry (expiries only move later under `touch`), so every
-    /// teardown still happens at exactly its expiry instant: a sweep
-    /// that fires before anything expired is a no-op that re-arms at
-    /// the then-current earliest expiry.
+    /// Keep the single keep-alive sweep armed at exactly the earliest
+    /// expiry. When a `touch` moves the minimum later, the superseded
+    /// sweep is *cancelled* and re-pushed at the new instant (O(1) +
+    /// O(log warm) for `next_expiry`), so sweeps fire only when
+    /// something actually expires — no no-op wakeups.
     pub(super) fn arm_keepalive(&mut self) {
-        if self.keepalive_armed_at.is_finite() {
-            return;
-        }
-        if let Some(t) = self.keepalive.next_expiry() {
-            if t.is_finite() {
-                let t = t.max(self.now);
-                self.keepalive_armed_at = t;
-                self.events.push(t, EventKind::KeepaliveCheck);
+        let want = self
+            .keepalive
+            .next_expiry()
+            .filter(|t| t.is_finite())
+            .map(|t| t.max(self.now));
+        match (want, self.keepalive_armed) {
+            (Some(t), Some((at, _))) if t == at => {} // already right
+            (Some(t), prev) => {
+                if let Some((_, tok)) = prev {
+                    self.events.cancel(tok);
+                }
+                let tok = self.events.push(t, EventKind::KeepaliveCheck);
+                self.keepalive_armed = Some((t, tok));
             }
+            (None, Some((_, tok))) => {
+                self.events.cancel(tok);
+                self.keepalive_armed = None;
+            }
+            (None, None) => {}
         }
     }
 
@@ -274,7 +305,10 @@ impl Engine {
             if self.fn_inflight[f] > 0 {
                 continue; // mid-flight; next completion re-arms keep-alive
             }
-            for g in self.cluster.gpu_ids() {
+            // Only the GPUs where this function actually resides (the
+            // per-function index) — dirtying every GPU here would force
+            // a full routing-index repair on the next route.
+            for g in self.cluster.gpus_with_function(f) {
                 let gpu = self.cluster.gpu_mut(g);
                 freed |= gpu.evict_artifact(f, ArtifactKind::Adapter).is_ok();
                 freed |= gpu.evict_artifact(f, ArtifactKind::CudaKernel).is_ok();
@@ -344,17 +378,79 @@ impl Engine {
                 "blocked function {f} has an empty queue"
             );
         }
-        let armed = self
+        // Timing-wheel structural invariants + the cluster's routing
+        // indexes (free-memory order, per-function residency, container
+        // residency counts).
+        self.events.check_invariants();
+        self.cluster.check_index();
+        // Keep-alive: the single armed sweep matches its marker exactly.
+        let ka_events = self
             .events
             .iter()
-            .filter(|e| matches!(e.kind, EventKind::KeepaliveCheck))
+            .filter(|e| matches!(e.kind, &EventKind::KeepaliveCheck))
             .count();
-        assert!(armed <= 1, "{armed} KeepaliveCheck events outstanding");
-        if armed == 0 {
+        match self.keepalive_armed {
+            Some((at, tok)) => {
+                assert_eq!(ka_events, 1, "armed marker but {ka_events} sweeps live");
+                let p = self.events.get(tok).expect("armed keep-alive token is dead");
+                assert_eq!(p.t.to_bits(), at.to_bits(), "armed instant drifted");
+                assert!(matches!(p.kind, &EventKind::KeepaliveCheck));
+            }
+            None => assert_eq!(ka_events, 0, "live KeepaliveCheck without marker"),
+        }
+        // GPU ticks: exactly one live tick per busy exec, none for idle.
+        let tick_events = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, &EventKind::GpuTick(_)))
+            .count();
+        assert_eq!(tick_events, self.tick_tokens.len(), "untracked GpuTick events");
+        for (&g, &tok) in &self.tick_tokens {
+            let p = self.events.get(tok).expect("tracked GpuTick token is dead");
             assert!(
-                self.keepalive_armed_at.is_infinite(),
-                "armed marker with no outstanding event"
+                matches!(p.kind, &EventKind::GpuTick(eg) if eg == g),
+                "tick token for {g} points at {:?}",
+                p.kind
             );
+        }
+        for (&g, exec) in &self.execs {
+            assert_eq!(
+                self.tick_tokens.contains_key(&g),
+                exec.next_completion().is_some(),
+                "tick presence disagrees with exec state on {g}"
+            );
+        }
+        // Queue wakeups: the live QueueCheck events are exactly the live
+        // tokens, ≤2 per function, only on non-empty queues.
+        let mut live_qc = vec![0usize; self.queues.len()];
+        for e in self.events.iter() {
+            if let &EventKind::QueueCheck(f) = e.kind {
+                live_qc[f] += 1;
+            }
+        }
+        for f in 0..self.queues.len() {
+            let live_toks = self.queue_wakeups[f]
+                .tokens()
+                .filter(|&tok| {
+                    self.events.get(tok).map_or(false, |p| {
+                        assert!(
+                            matches!(p.kind, &EventKind::QueueCheck(ff) if ff == f),
+                            "wakeup token for {f} points at {:?}",
+                            p.kind
+                        );
+                        true
+                    })
+                })
+                .count();
+            assert_eq!(
+                live_toks, live_qc[f],
+                "function {f}: {} live checks vs {live_toks} live tokens",
+                live_qc[f]
+            );
+            assert!(live_qc[f] <= 2, "function {f} has {} wakeups", live_qc[f]);
+            if self.queues[f].is_empty() {
+                assert_eq!(live_qc[f], 0, "wakeups armed on an empty queue {f}");
+            }
         }
     }
 
@@ -523,6 +619,30 @@ mod tests {
             stats.peak_event_queue < n / 2,
             "peak event queue {} vs {} requests",
             stats.peak_event_queue,
+            n
+        );
+    }
+
+    #[test]
+    fn supersession_cancels_instead_of_skipping() {
+        // The timing-wheel contract: superseded QueueCheck/GpuTick/
+        // KeepaliveCheck events are cancelled outright (counted in
+        // events_cancelled), so every event the engine processes is
+        // current — there is no stale-skip path left to take.
+        let w = workload(4, 0.2, 900.0, Pattern::Bursty);
+        let n = w.requests.len();
+        let (m, _, stats) = run(SystemConfig::serverless_lora(), w);
+        assert_eq!(m.outcomes.len(), n);
+        assert!(
+            stats.events_cancelled > 0,
+            "bursty traffic must supersede some scheduled events"
+        );
+        // Fired events amortize to a handful per request once stale
+        // entries stop flowing through the pop path.
+        assert!(
+            stats.events_processed < 16 * n as u64,
+            "{} events for {} requests",
+            stats.events_processed,
             n
         );
     }

@@ -1,10 +1,31 @@
-//! The simulator's event queue: event kinds, the total order that keeps
-//! runs deterministic (time, then insertion sequence), and the queue
-//! itself. Split out of the engine so the event plumbing is reusable and
-//! testable without a full `Engine`.
+//! The simulator's event core: event kinds, the deterministic total order
+//! (time, then insertion sequence), and the queue itself — a hierarchical
+//! timing wheel (calendar queue) with **O(1) cancellation handles**.
+//!
+//! Every `schedule` returns an [`EventToken`]; `cancel(token)` unlinks the
+//! slot entry in O(1), so producers that supersede their own wakeups
+//! (queue re-arms, GPU-tick re-schedules, keep-alive moves) remove the
+//! dead event outright instead of carrying generation/version staleness
+//! guards and letting stale entries bloat the queue until their instant.
+//!
+//! ## Structure
+//!
+//! Simulated time is discretized into `TICK_S`-second ticks. Six wheel
+//! levels of 64 slots each cover `64^6` ticks (≈ 2.2 simulated years at
+//! the 1 ms tick); events beyond that horizon wait in a small overflow
+//! map and are promoted when the wheel rolls toward them. Each slot is an
+//! intrusive doubly-linked list over a slab, which is what makes
+//! cancellation O(1). Expiring slots drain into a `ready` buffer sorted
+//! by exact `(t, seq)`, so the pop order is **identical** to a binary
+//! min-heap over `(t, seq)` — discretization never reorders events, it
+//! only buckets them. The pre-wheel heap is kept under `#[cfg(test)]` as
+//! the differential oracle (`heap::HeapEventQueue`).
+//!
+//! Ordering contract (unchanged from the heap era): pops ascend by time,
+//! with same-instant ties in insertion order — what makes same-seed runs
+//! bit-identical.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::BTreeMap;
 
 use crate::cluster::GpuId;
 
@@ -13,20 +34,16 @@ pub enum EventKind {
     /// Request `i` (index into the workload stream) arrives.
     Arrival(usize),
     /// Re-check function `f`'s queue (debounce settle / Eq. 3 expiry).
-    /// The `u64` is the queue generation the check was scheduled
-    /// against: any push/take on the queue bumps the generation and
-    /// re-arms fresh wakeups, so a stale check is skipped in O(1)
-    /// instead of re-running the dispatch path (the same guard shape as
-    /// `GpuTick`'s exec version).
-    QueueCheck(usize, u64),
+    /// Superseded checks are *cancelled* by their producer, so a check
+    /// that fires is always current — no staleness stamp needed.
+    QueueCheck(usize),
     /// Batch `b` finished loading its artifacts.
     LoadDone(u64),
-    /// Processor-sharing completion sweep on a GPU; the `u64` is the
-    /// exec version the event was scheduled against (staleness guard).
-    GpuTick(GpuId, u64),
-    /// Keep-alive expiry sweep. At most one is outstanding at any time
-    /// (the engine arms it lazily at `KeepAlive::next_expiry`), so the
-    /// queue no longer accumulates one check per completion.
+    /// Processor-sharing completion sweep on a GPU. Exactly one is
+    /// outstanding per GPU; re-scheduling cancels the previous one.
+    GpuTick(GpuId),
+    /// Keep-alive expiry sweep. Exactly one is outstanding at any time;
+    /// it is re-armed (cancel + push) whenever the earliest expiry moves.
     KeepaliveCheck,
 }
 
@@ -51,12 +68,94 @@ impl Ord for Event {
     }
 }
 
-/// Min-queue over `(t, seq)`: ties at the same instant pop in insertion
-/// order, which is what makes same-seed runs bit-identical.
-#[derive(Debug, Default)]
-pub struct EventQueue {
-    heap: BinaryHeap<Reverse<Event>>,
+/// Handle to one scheduled event. Cancelling a token whose event already
+/// fired (or was already cancelled) is a safe no-op: the slab slot's
+/// generation is bumped on every free, so stale handles never touch a
+/// reused slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EventToken {
+    idx: u32,
+    gen: u32,
+}
+
+/// A pending event, as seen by invariant checks / hygiene tests (never by
+/// the simulation itself).
+#[derive(Debug)]
+pub struct Pending<'a> {
+    pub t: f64,
+    pub seq: u64,
+    pub kind: &'a EventKind,
+}
+
+const LEVEL_BITS: u32 = 6;
+const SLOTS: usize = 1 << LEVEL_BITS; // 64
+const LEVELS: usize = 6;
+/// Ticks addressable by the wheel: `64^LEVELS = 2^36`.
+const WHEEL_BITS: u32 = LEVEL_BITS * LEVELS as u32;
+/// Wheel tick size in simulated seconds. Order-correctness does not
+/// depend on this (slots sort by exact `(t, seq)` on expiry); it only
+/// sets how many events share a slot.
+const TICK_S: f64 = 1e-3;
+const NIL: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Loc {
+    /// On the free list.
+    Free,
+    /// Linked into wheel slot `heads[level][slot]`.
+    Wheel { level: u8, slot: u8 },
+    /// In the far-future overflow map, keyed `(tick, seq)`.
+    Overflow,
+    /// In the sorted `ready` buffer (its tick has expired).
+    Ready,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    t: f64,
+    tick: u64,
     seq: u64,
+    kind: EventKind,
+    gen: u32,
+    prev: u32,
+    next: u32,
+    loc: Loc,
+}
+
+/// Min-queue over `(t, seq)` with O(1) amortized insert and O(1) cancel.
+#[derive(Debug)]
+pub struct EventQueue {
+    slab: Vec<Entry>,
+    free_head: u32,
+    heads: [[u32; SLOTS]; LEVELS],
+    /// Per-level slot-occupancy bitmap (64 slots ⇒ one word per level).
+    occupied: [u64; LEVELS],
+    /// Far-future events: `(tick, seq) → slab index`.
+    overflow: BTreeMap<(u64, u64), u32>,
+    /// Expired-slot contents, sorted **descending** by `(t, seq)`: the
+    /// global minimum is at the back, so pop is a `Vec::pop`.
+    ready: Vec<u32>,
+    cur_tick: u64,
+    len: usize,
+    seq: u64,
+    cancelled: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue {
+            slab: Vec::new(),
+            free_head: NIL,
+            heads: [[NIL; SLOTS]; LEVELS],
+            occupied: [0; LEVELS],
+            overflow: BTreeMap::new(),
+            ready: Vec::new(),
+            cur_tick: 0,
+            len: 0,
+            seq: 0,
+            cancelled: 0,
+        }
+    }
 }
 
 impl EventQueue {
@@ -64,41 +163,462 @@ impl EventQueue {
         Self::default()
     }
 
-    pub fn push(&mut self, t: f64, kind: EventKind) {
+    fn tick_of(t: f64) -> u64 {
+        // `as` saturates: non-finite / huge instants land in overflow.
+        (t.max(0.0) / TICK_S) as u64
+    }
+
+    /// Schedule `kind` at time `t`, returning its cancellation handle.
+    /// `t` may be at or before the current instant (the event pops next,
+    /// in exact `(t, seq)` order among the already-expired events).
+    pub fn push(&mut self, t: f64, kind: EventKind) -> EventToken {
         self.seq += 1;
-        self.heap.push(Reverse(Event { t, seq: self.seq, kind }));
+        let seq = self.seq;
+        let tick = Self::tick_of(t);
+        let idx = self.alloc(t, tick, seq, kind);
+        self.place(idx);
+        self.len += 1;
+        EventToken { idx, gen: self.slab[idx as usize].gen }
+    }
+
+    /// Remove a pending event in O(1) (wheel) / O(log) (overflow/ready).
+    /// Returns false if the event already fired or was already cancelled.
+    pub fn cancel(&mut self, tok: EventToken) -> bool {
+        let Some(e) = self.slab.get(tok.idx as usize) else { return false };
+        if e.gen != tok.gen || e.loc == Loc::Free {
+            return false;
+        }
+        self.unlink(tok.idx);
+        self.free_entry(tok.idx);
+        self.len -= 1;
+        self.cancelled += 1;
+        true
+    }
+
+    /// Is this token's event still pending?
+    pub fn is_live(&self, tok: EventToken) -> bool {
+        self.slab
+            .get(tok.idx as usize)
+            .map(|e| e.gen == tok.gen && e.loc != Loc::Free)
+            .unwrap_or(false)
+    }
+
+    /// The pending event behind a token, if still live.
+    pub fn get(&self, tok: EventToken) -> Option<Pending<'_>> {
+        let e = self.slab.get(tok.idx as usize)?;
+        if e.gen != tok.gen || e.loc == Loc::Free {
+            return None;
+        }
+        Some(Pending { t: e.t, seq: e.seq, kind: &e.kind })
     }
 
     pub fn pop(&mut self) -> Option<Event> {
-        self.heap.pop().map(|Reverse(e)| e)
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            if let Some(idx) = self.ready.pop() {
+                let e = &self.slab[idx as usize];
+                let ev = Event { t: e.t, seq: e.seq, kind: e.kind.clone() };
+                self.free_entry(idx);
+                self.len -= 1;
+                return Some(ev);
+            }
+            self.advance();
+        }
     }
 
+    /// Live (non-cancelled) pending events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 
-    /// Iterate over the pending events in no particular order (heap
-    /// order). Used by invariant checks and hygiene tests, never by the
-    /// simulation itself.
-    pub fn iter(&self) -> impl Iterator<Item = &Event> {
-        self.heap.iter().map(|r| &r.0)
+    /// Total events removed via `cancel` over this queue's lifetime.
+    pub fn cancelled(&self) -> u64 {
+        self.cancelled
+    }
+
+    /// Iterate over pending events in no particular order. Used by
+    /// invariant checks and hygiene tests, never by the simulation.
+    pub fn iter(&self) -> impl Iterator<Item = Pending<'_>> {
+        self.slab.iter().filter(|e| e.loc != Loc::Free).map(|e| Pending {
+            t: e.t,
+            seq: e.seq,
+            kind: &e.kind,
+        })
+    }
+
+    // ------------------------------------------------------------- internals
+
+    fn alloc(&mut self, t: f64, tick: u64, seq: u64, kind: EventKind) -> u32 {
+        if self.free_head != NIL {
+            let idx = self.free_head;
+            let e = &mut self.slab[idx as usize];
+            self.free_head = e.next;
+            e.t = t;
+            e.tick = tick;
+            e.seq = seq;
+            e.kind = kind;
+            e.prev = NIL;
+            e.next = NIL;
+            idx
+        } else {
+            self.slab.push(Entry {
+                t,
+                tick,
+                seq,
+                kind,
+                gen: 0,
+                prev: NIL,
+                next: NIL,
+                loc: Loc::Free,
+            });
+            (self.slab.len() - 1) as u32
+        }
+    }
+
+    fn free_entry(&mut self, idx: u32) {
+        let e = &mut self.slab[idx as usize];
+        e.loc = Loc::Free;
+        e.gen = e.gen.wrapping_add(1);
+        e.prev = NIL;
+        e.next = self.free_head;
+        self.free_head = idx;
+    }
+
+    /// File `idx` under ready / wheel / overflow by its tick. The entry
+    /// must not currently be linked anywhere.
+    fn place(&mut self, idx: u32) {
+        let (tick, seq) = {
+            let e = &self.slab[idx as usize];
+            (e.tick, e.seq)
+        };
+        if tick <= self.cur_tick {
+            self.ready_insert(idx);
+        } else if (tick ^ self.cur_tick) >> WHEEL_BITS != 0 {
+            self.overflow.insert((tick, seq), idx);
+            self.slab[idx as usize].loc = Loc::Overflow;
+        } else {
+            let masked = tick ^ self.cur_tick; // != 0 here
+            let level = ((63 - masked.leading_zeros()) / LEVEL_BITS) as usize;
+            let slot =
+                ((tick >> (LEVEL_BITS * level as u32)) & (SLOTS as u64 - 1)) as usize;
+            let head = self.heads[level][slot];
+            {
+                let e = &mut self.slab[idx as usize];
+                e.prev = NIL;
+                e.next = head;
+                e.loc = Loc::Wheel { level: level as u8, slot: slot as u8 };
+            }
+            if head != NIL {
+                self.slab[head as usize].prev = idx;
+            }
+            self.heads[level][slot] = idx;
+            self.occupied[level] |= 1u64 << slot;
+        }
+    }
+
+    /// Insert into the descending-sorted ready buffer at the exact
+    /// `(t, seq)` position.
+    fn ready_insert(&mut self, idx: u32) {
+        let (t, seq) = {
+            let e = &self.slab[idx as usize];
+            (e.t, e.seq)
+        };
+        let slab = &self.slab;
+        let pos = self.ready.partition_point(|&i| {
+            let e = &slab[i as usize];
+            e.t.total_cmp(&t).then(e.seq.cmp(&seq)).is_gt()
+        });
+        self.ready.insert(pos, idx);
+        self.slab[idx as usize].loc = Loc::Ready;
+    }
+
+    fn unlink(&mut self, idx: u32) {
+        match self.slab[idx as usize].loc {
+            Loc::Free => unreachable!("unlinking a free entry"),
+            Loc::Wheel { level, slot } => {
+                let (level, slot) = (level as usize, slot as usize);
+                let (prev, next) = {
+                    let e = &self.slab[idx as usize];
+                    (e.prev, e.next)
+                };
+                if prev != NIL {
+                    self.slab[prev as usize].next = next;
+                } else {
+                    self.heads[level][slot] = next;
+                }
+                if next != NIL {
+                    self.slab[next as usize].prev = prev;
+                }
+                if self.heads[level][slot] == NIL {
+                    self.occupied[level] &= !(1u64 << slot);
+                }
+            }
+            Loc::Overflow => {
+                let key = {
+                    let e = &self.slab[idx as usize];
+                    (e.tick, e.seq)
+                };
+                let removed = self.overflow.remove(&key);
+                debug_assert_eq!(removed, Some(idx));
+            }
+            Loc::Ready => {
+                let (t, seq) = {
+                    let e = &self.slab[idx as usize];
+                    (e.t, e.seq)
+                };
+                let slab = &self.slab;
+                let pos = self.ready.partition_point(|&i| {
+                    let e = &slab[i as usize];
+                    e.t.total_cmp(&t).then(e.seq.cmp(&seq)).is_gt()
+                });
+                debug_assert_eq!(self.ready.get(pos), Some(&idx));
+                self.ready.remove(pos);
+            }
+        }
+    }
+
+    /// Roll the wheel forward to the next occupied expiration: drain a
+    /// level-0 slot into `ready`, or cascade one higher-level slot down,
+    /// or jump to the overflow horizon. Called only with `ready` empty
+    /// and `len > 0`.
+    fn advance(&mut self) {
+        debug_assert!(self.ready.is_empty());
+        debug_assert!(self.len > 0);
+        self.migrate_overflow();
+        for level in 0..LEVELS {
+            let width = LEVEL_BITS * level as u32;
+            let cursor = ((self.cur_tick >> width) & (SLOTS as u64 - 1)) as u32;
+            let bits = self.occupied[level] >> cursor;
+            if bits == 0 {
+                continue;
+            }
+            let slot = cursor + bits.trailing_zeros();
+            let high = self.cur_tick >> (width + LEVEL_BITS);
+            let deadline = ((high << LEVEL_BITS) | slot as u64) << width;
+            debug_assert!(deadline >= self.cur_tick, "wheel deadline went backwards");
+            self.cur_tick = deadline;
+            // Detach the whole slot list.
+            let mut idx = self.heads[level][slot as usize];
+            self.heads[level][slot as usize] = NIL;
+            self.occupied[level] &= !(1u64 << slot);
+            if level == 0 {
+                // Expire: sort the slot's entries by exact (t, seq),
+                // descending, into the (empty) ready buffer.
+                let mut items = Vec::new();
+                while idx != NIL {
+                    let next = self.slab[idx as usize].next;
+                    let e = &mut self.slab[idx as usize];
+                    e.prev = NIL;
+                    e.next = NIL;
+                    e.loc = Loc::Ready;
+                    items.push(idx);
+                    idx = next;
+                }
+                let slab = &self.slab;
+                items.sort_unstable_by(|&a, &b| {
+                    let (ea, eb) = (&slab[a as usize], &slab[b as usize]);
+                    eb.t.total_cmp(&ea.t).then(eb.seq.cmp(&ea.seq))
+                });
+                self.ready = items;
+            } else {
+                // Cascade: re-file each entry at a finer level (or into
+                // ready, when its tick equals the new current tick).
+                while idx != NIL {
+                    let next = self.slab[idx as usize].next;
+                    let e = &mut self.slab[idx as usize];
+                    e.prev = NIL;
+                    e.next = NIL;
+                    self.place(idx);
+                    idx = next;
+                }
+            }
+            return;
+        }
+        // Wheels empty: jump to the overflow horizon and promote.
+        if let Some((&(tick, _), _)) = self.overflow.first_key_value() {
+            let aligned = tick & !((1u64 << WHEEL_BITS) - 1);
+            debug_assert!(aligned > self.cur_tick);
+            self.cur_tick = aligned;
+            self.migrate_overflow();
+        }
+    }
+
+    /// Promote overflow entries that the wheel can now address.
+    fn migrate_overflow(&mut self) {
+        while let Some((&(tick, _), _)) = self.overflow.first_key_value() {
+            if (tick ^ self.cur_tick) >> WHEEL_BITS != 0 {
+                break;
+            }
+            let ((_, _), idx) = self.overflow.pop_first().expect("peeked above");
+            self.place(idx);
+        }
+    }
+
+    /// Brute-force structural invariants: slab bookkeeping vs the slot
+    /// lists, occupancy bitmaps, ready ordering, and the tick geometry.
+    /// Called by `Engine::check_indexes` and the wheel tests; never by
+    /// the simulation itself.
+    pub fn check_invariants(&self) {
+        let mut live = 0usize;
+        let mut wheel_count = 0usize;
+        for (i, e) in self.slab.iter().enumerate() {
+            if e.loc == Loc::Free {
+                continue;
+            }
+            live += 1;
+            match e.loc {
+                Loc::Free => unreachable!(),
+                Loc::Wheel { level, slot } => {
+                    wheel_count += 1;
+                    let (level, slot) = (level as usize, slot as usize);
+                    let width = LEVEL_BITS * level as u32;
+                    assert!(e.tick > self.cur_tick, "wheel entry not in the future");
+                    assert_eq!(
+                        ((e.tick >> width) & (SLOTS as u64 - 1)) as usize,
+                        slot,
+                        "entry {i} filed in the wrong slot"
+                    );
+                    let cursor = ((self.cur_tick >> width) & (SLOTS as u64 - 1)) as usize;
+                    assert!(
+                        slot > cursor,
+                        "entry {i} at level {level} slot {slot} behind cursor {cursor}"
+                    );
+                    assert!(
+                        self.occupied[level] & (1u64 << slot) != 0,
+                        "occupied bit clear for a non-empty slot"
+                    );
+                }
+                Loc::Overflow => {
+                    assert!(
+                        (e.tick ^ self.cur_tick) >> WHEEL_BITS != 0,
+                        "overflow entry {i} is wheel-addressable"
+                    );
+                    assert_eq!(self.overflow.get(&(e.tick, e.seq)), Some(&(i as u32)));
+                }
+                Loc::Ready => {
+                    assert!(e.tick <= self.cur_tick, "ready entry in the future");
+                }
+            }
+        }
+        assert_eq!(live, self.len, "live-entry count drifted from len");
+        assert_eq!(
+            self.ready.len() + self.overflow.len() + wheel_count,
+            self.len,
+            "location counts do not partition the live set"
+        );
+        // Slot lists: every linked entry agrees with its location; the
+        // occupancy bit is set iff the list is non-empty.
+        let mut linked = 0usize;
+        for level in 0..LEVELS {
+            for slot in 0..SLOTS {
+                let mut idx = self.heads[level][slot];
+                assert_eq!(
+                    self.occupied[level] & (1u64 << slot) != 0,
+                    idx != NIL,
+                    "occupancy bitmap out of sync at level {level} slot {slot}"
+                );
+                let mut prev = NIL;
+                while idx != NIL {
+                    let e = &self.slab[idx as usize];
+                    assert_eq!(
+                        e.loc,
+                        Loc::Wheel { level: level as u8, slot: slot as u8 },
+                        "linked entry has a different recorded location"
+                    );
+                    assert_eq!(e.prev, prev, "prev link broken");
+                    prev = idx;
+                    idx = e.next;
+                    linked += 1;
+                }
+            }
+        }
+        assert_eq!(linked, wheel_count, "slot lists disagree with slab locations");
+        // Ready buffer strictly descending by (t, seq).
+        for w in self.ready.windows(2) {
+            let (a, b) = (&self.slab[w[0] as usize], &self.slab[w[1] as usize]);
+            assert!(
+                a.t.total_cmp(&b.t).then(a.seq.cmp(&b.seq)).is_gt(),
+                "ready buffer out of order"
+            );
+        }
+    }
+}
+
+/// The pre-timing-wheel binary-heap queue, kept as the differential
+/// oracle for the wheel's ordering contract. Cancellation is emulated
+/// lazily (skip-on-pop) — exactly the stale-entry behavior the wheel
+/// removes structurally.
+#[cfg(test)]
+pub(crate) mod heap {
+    use super::{Event, EventKind};
+    use std::cmp::Reverse;
+    use std::collections::{BTreeSet, BinaryHeap};
+
+    #[derive(Debug, Default)]
+    pub struct HeapEventQueue {
+        heap: BinaryHeap<Reverse<Event>>,
+        pending: BTreeSet<u64>,
+        cancelled: BTreeSet<u64>,
+        seq: u64,
+    }
+
+    impl HeapEventQueue {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        /// Returns the event's seq as its (lazy) cancellation handle.
+        pub fn push(&mut self, t: f64, kind: EventKind) -> u64 {
+            self.seq += 1;
+            self.pending.insert(self.seq);
+            self.heap.push(Reverse(Event { t, seq: self.seq, kind }));
+            self.seq
+        }
+
+        pub fn cancel(&mut self, seq: u64) -> bool {
+            if self.pending.remove(&seq) {
+                self.cancelled.insert(seq);
+                true
+            } else {
+                false
+            }
+        }
+
+        pub fn pop(&mut self) -> Option<Event> {
+            while let Some(Reverse(e)) = self.heap.pop() {
+                if self.cancelled.remove(&e.seq) {
+                    continue; // lazy deletion: skip the stale entry
+                }
+                self.pending.remove(&e.seq);
+                return Some(e);
+            }
+            None
+        }
+
+        pub fn len(&self) -> usize {
+            self.pending.len()
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::heap::HeapEventQueue;
     use super::*;
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
         q.push(2.0, EventKind::KeepaliveCheck);
         q.push(1.0, EventKind::Arrival(0));
-        q.push(3.0, EventKind::QueueCheck(1, 0));
+        q.push(3.0, EventKind::QueueCheck(1));
         assert_eq!(q.pop().unwrap().kind, EventKind::Arrival(0));
         assert_eq!(q.pop().unwrap().t, 2.0);
         assert_eq!(q.pop().unwrap().t, 3.0);
@@ -111,7 +631,7 @@ mod tests {
         q.push(1.0, EventKind::KeepaliveCheck);
         q.push(2.0, EventKind::Arrival(3));
         assert_eq!(q.iter().count(), 2);
-        let ka = q.iter().filter(|e| matches!(e.kind, EventKind::KeepaliveCheck));
+        let ka = q.iter().filter(|e| matches!(e.kind, &EventKind::KeepaliveCheck));
         assert_eq!(ka.count(), 1);
         q.pop();
         assert_eq!(q.iter().count(), 1);
@@ -138,5 +658,233 @@ mod tests {
         assert_eq!(q.len(), 1);
         q.pop();
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn cancel_is_o1_removal() {
+        let mut q = EventQueue::new();
+        let a = q.push(1.0, EventKind::Arrival(1));
+        let b = q.push(2.0, EventKind::Arrival(2));
+        let c = q.push(3.0, EventKind::Arrival(3));
+        assert_eq!(q.len(), 3);
+        assert!(q.cancel(b));
+        assert_eq!(q.len(), 2, "cancel removes immediately, not lazily");
+        assert_eq!(q.cancelled(), 1);
+        assert!(!q.cancel(b), "double cancel is a no-op");
+        assert!(q.is_live(a) && !q.is_live(b) && q.is_live(c));
+        q.check_invariants();
+        assert_eq!(q.pop().unwrap().kind, EventKind::Arrival(1));
+        assert_eq!(q.pop().unwrap().kind, EventKind::Arrival(3));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn cancelled_events_never_fire() {
+        // Regression: a cancelled event must never pop — including events
+        // already expired into the ready buffer, wheel entries at every
+        // level, and overflow entries.
+        let mut q = EventQueue::new();
+        let mut keep = Vec::new();
+        let mut dead = Vec::new();
+        for i in 0..200usize {
+            let t = match i % 4 {
+                0 => i as f64 * 1e-4,       // sub-tick cluster
+                1 => i as f64 * 0.05,       // level-0/1 range
+                2 => i as f64 * 37.0,       // level-2/3 range
+                _ => 1e8 + i as f64,        // overflow band
+            };
+            let tok = q.push(t, EventKind::Arrival(i));
+            if i % 3 == 0 {
+                dead.push((i, tok));
+            } else {
+                keep.push(i);
+            }
+        }
+        // Expire part of the stream into ready before cancelling.
+        let first = q.pop().unwrap();
+        let fired0 = match first.kind {
+            EventKind::Arrival(i) => i,
+            _ => unreachable!(),
+        };
+        keep.retain(|&i| i != fired0);
+        for &(_, tok) in &dead {
+            q.cancel(tok); // the popped one (if in dead) reports false
+        }
+        q.check_invariants();
+        let mut fired = Vec::new();
+        while let Some(e) = q.pop() {
+            if let EventKind::Arrival(i) = e.kind {
+                fired.push(i);
+            }
+        }
+        for (i, _) in dead {
+            assert!(i == fired0 || !fired.contains(&i), "cancelled event {i} fired");
+        }
+        let mut keep_sorted = keep.clone();
+        keep_sorted.sort_unstable();
+        let mut fired_sorted = fired.clone();
+        fired_sorted.sort_unstable();
+        assert_eq!(fired_sorted, keep_sorted, "a live event was lost");
+    }
+
+    #[test]
+    fn slot_boundary_events_keep_exact_order() {
+        // Events exactly on level boundaries (t = 64^k ticks) and a hair
+        // on either side must pop in exact time order.
+        let mut q = EventQueue::new();
+        let mut expect = Vec::new();
+        for level in 0..4u32 {
+            let span = TICK_S * 64f64.powi(level as i32);
+            for mult in [1.0, 2.0, 63.0] {
+                for eps in [-1e-9, 0.0, 1e-9] {
+                    let t = span * mult + eps;
+                    if t > 0.0 {
+                        q.push(t, EventKind::LoadDone((expect.len()) as u64));
+                        expect.push(t);
+                    }
+                }
+            }
+        }
+        q.check_invariants();
+        let mut popped = Vec::new();
+        while let Some(e) = q.pop() {
+            popped.push(e.t);
+        }
+        let mut sorted = expect.clone();
+        sorted.sort_by(f64::total_cmp);
+        assert_eq!(popped, sorted);
+    }
+
+    #[test]
+    fn far_future_overflow_promotes() {
+        // 2^36 ticks at 1 ms ≈ 6.87e7 s: anything beyond sits in overflow
+        // until the wheel rolls toward it.
+        let horizon_s = TICK_S * (1u64 << WHEEL_BITS) as f64;
+        let mut q = EventQueue::new();
+        q.push(horizon_s * 3.5, EventKind::Arrival(2));
+        q.push(1.0, EventKind::Arrival(0));
+        q.push(horizon_s * 2.0, EventKind::Arrival(1));
+        q.check_invariants();
+        assert_eq!(q.pop().unwrap().kind, EventKind::Arrival(0));
+        assert_eq!(q.pop().unwrap().kind, EventKind::Arrival(1));
+        q.check_invariants();
+        assert_eq!(q.pop().unwrap().kind, EventKind::Arrival(2));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn rollover_across_many_rotations() {
+        // March time across thousands of level-0 rotations with
+        // interleaved pushes; order must stay exact throughout.
+        let mut q = EventQueue::new();
+        let mut now = 0.0;
+        let mut next_id = 0usize;
+        let mut rng = Pcg64::new(99);
+        let mut last = f64::NEG_INFINITY;
+        for _ in 0..3000 {
+            if rng.f64() < 0.6 || q.is_empty() {
+                let t = now + rng.f64() * 10.0;
+                q.push(t, EventKind::Arrival(next_id));
+                next_id += 1;
+            } else {
+                let e = q.pop().unwrap();
+                assert!(e.t >= last, "time went backwards: {} < {last}", e.t);
+                last = e.t;
+                now = e.t;
+            }
+        }
+        q.check_invariants();
+        while let Some(e) = q.pop() {
+            assert!(e.t >= last);
+            last = e.t;
+        }
+    }
+
+    /// Differential property test: the wheel and the heap oracle must pop
+    /// identical `(t, seq, kind)` sequences under randomized interleaved
+    /// push / cancel / pop traffic — including same-tick collisions,
+    /// exact slot boundaries, past-time pushes, and the overflow band.
+    #[test]
+    fn differential_wheel_matches_heap_multi_seed() {
+        for seed in [1u64, 7, 23, 101, 4096] {
+            let mut rng = Pcg64::new(seed);
+            let mut wheel = EventQueue::new();
+            let mut oracle = HeapEventQueue::new();
+            let mut live: Vec<(EventToken, u64)> = Vec::new();
+            let mut now = 0.0f64;
+            let mut id = 0usize;
+            for step in 0..4000 {
+                let r = rng.f64();
+                if r < 0.55 || wheel.is_empty() {
+                    let off = match rng.below(8) {
+                        0 => rng.f64() * TICK_S,                    // same tick
+                        1 => rng.f64() * 64.0 * TICK_S,             // level 0
+                        2 => rng.f64() * 4.0,                       // level 1
+                        3 => rng.f64() * 260.0,                     // level 2
+                        4 => rng.f64() * 17_000.0,                  // level 3
+                        5 => TICK_S * 64f64.powi(rng.below(4) as i32 + 1)
+                            * rng.below(5) as f64,                  // boundaries
+                        6 => 1e8 + rng.f64() * 1e9,                 // overflow
+                        _ => -rng.f64(),                            // the past
+                    };
+                    let t = now + off;
+                    id += 1;
+                    let kind = EventKind::Arrival(id);
+                    let tok = wheel.push(t, kind.clone());
+                    let h = oracle.push(t, kind);
+                    live.push((tok, h));
+                } else if r < 0.72 && !live.is_empty() {
+                    let k = rng.below(live.len());
+                    let (tok, h) = live.swap_remove(k);
+                    assert_eq!(
+                        wheel.cancel(tok),
+                        oracle.cancel(h),
+                        "seed {seed} step {step}: cancel outcomes diverged"
+                    );
+                } else {
+                    let (a, b) = (wheel.pop(), oracle.pop());
+                    match (&a, &b) {
+                        (Some(x), Some(y)) => {
+                            assert_eq!(x.t.to_bits(), y.t.to_bits(), "seed {seed} step {step}");
+                            assert_eq!(x.seq, y.seq, "seed {seed} step {step}");
+                            assert_eq!(x.kind, y.kind, "seed {seed} step {step}");
+                            now = now.max(x.t);
+                        }
+                        (None, None) => {}
+                        _ => panic!("seed {seed} step {step}: one queue drained early"),
+                    }
+                }
+                assert_eq!(wheel.len(), oracle.len(), "seed {seed} step {step}");
+                if step % 61 == 0 {
+                    wheel.check_invariants();
+                }
+            }
+            // Drain both fully.
+            loop {
+                let (a, b) = (wheel.pop(), oracle.pop());
+                match (&a, &b) {
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.t.to_bits(), y.t.to_bits(), "seed {seed} drain");
+                        assert_eq!(x.seq, y.seq, "seed {seed} drain");
+                    }
+                    (None, None) => break,
+                    _ => panic!("seed {seed}: drain length mismatch"),
+                }
+            }
+            wheel.check_invariants();
+        }
+    }
+
+    #[test]
+    fn slab_slots_are_reused_and_generation_guards_tokens() {
+        let mut q = EventQueue::new();
+        let a = q.push(1.0, EventKind::Arrival(1));
+        q.pop();
+        // The freed slot is reused; the old token must stay inert.
+        let b = q.push(2.0, EventKind::Arrival(2));
+        assert_eq!(q.slab.len(), 1, "slab did not reuse the freed slot");
+        assert!(!q.cancel(a), "stale token cancelled a reused slot");
+        assert!(q.is_live(b));
+        assert_eq!(q.len(), 1);
     }
 }

@@ -20,9 +20,6 @@ pub struct GpuExec {
     /// job id → (remaining dedicated-GPU seconds, weight).
     jobs: BTreeMap<u64, (f64, f64)>,
     last_update_s: f64,
-    /// Bumped on every add/remove: events scheduled against an older
-    /// version are stale and must be ignored by the engine.
-    pub version: u64,
 }
 
 /// Relative PS weight of a decode-phase job vs a prefill-phase job.
@@ -54,15 +51,12 @@ impl GpuExec {
         debug_assert!(weight > 0.0);
         self.advance(now_s);
         self.jobs.insert(job, (work_s.max(0.0), weight));
-        self.version += 1;
     }
 
     /// Remove a job (completion or cancellation).
     pub fn remove(&mut self, now_s: f64, job: u64) -> Option<f64> {
         self.advance(now_s);
-        let r = self.jobs.remove(&job).map(|(r, _)| r);
-        self.version += 1;
-        r
+        self.jobs.remove(&job).map(|(r, _)| r)
     }
 
     /// Number of active jobs (the instantaneous contention M).
@@ -110,9 +104,6 @@ impl GpuExec {
             .collect();
         for id in &done {
             self.jobs.remove(id);
-        }
-        if !done.is_empty() {
-            self.version += 1;
         }
         done
     }
@@ -167,17 +158,6 @@ mod tests {
         let (id, t) = e.next_completion().unwrap();
         assert_eq!(id, 1);
         assert!((t - 2.5).abs() < 1e-9, "t={t}");
-    }
-
-    #[test]
-    fn version_bumps_on_change() {
-        let mut e = GpuExec::default();
-        let v0 = e.version;
-        e.add(0.0, 1, 1.0);
-        assert!(e.version > v0);
-        let v1 = e.version;
-        e.remove(0.5, 1);
-        assert!(e.version > v1);
     }
 
     #[test]

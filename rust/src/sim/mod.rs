@@ -14,5 +14,5 @@ pub mod workloads;
 
 pub use config::{BatchingMode, PreloadMode, SystemConfig};
 pub use engine::{Engine, RunStats, Workload};
-pub use events::{Event, EventKind, EventQueue};
+pub use events::{Event, EventKind, EventQueue, EventToken};
 pub use exec::GpuExec;

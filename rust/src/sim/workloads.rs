@@ -5,7 +5,8 @@
 
 use crate::artifact::{FunctionSpec, ModelProfile};
 use crate::sim::engine::Workload;
-use crate::trace::{merge, Pattern, Request, TraceSpec};
+use crate::trace::{merge, GsmLengths, Pattern, Request, TraceSpec};
+use crate::util::rng::{Pcg64, ZipfCdf};
 
 /// Heterogeneous per-function mean rates (req/s). Means chosen so that the
 /// hottest function stays keep-alive-warm while the coldest almost always
@@ -131,6 +132,51 @@ pub fn fleet_workload(n_fns: usize, duration_s: f64, seed: u64) -> Workload {
     scaled_workload(Pattern::Normal, duration_s, scale, seed)
 }
 
+/// Zipf-skewed fleet workload (Azure-style head-heavy popularity): one
+/// aggregate Poisson arrival stream at the same total offered load as
+/// [`fleet_workload`], with each arrival's function drawn rank-wise from
+/// `Zipf(skew)` via the precomputed CDF (function 0 is the hottest).
+/// This is the regime that stresses keep-alive and preload policies the
+/// way production traces do: the head stays permanently warm while the
+/// long tail almost always cold-starts — `fleet --skew S` on the CLI.
+pub fn zipf_fleet_workload(n_fns: usize, duration_s: f64, skew: f64, seed: u64) -> Workload {
+    let scale = n_fns.div_ceil(8).max(1);
+    let n = scale * 8;
+    let mut functions = Vec::with_capacity(n);
+    for s in 0..scale {
+        for i in 0..4 {
+            functions.push(FunctionSpec::new(s * 8 + i, ModelProfile::llama2_7b(), i));
+        }
+        for i in 0..4 {
+            functions.push(FunctionSpec::new(s * 8 + 4 + i, ModelProfile::llama2_13b(), i));
+        }
+    }
+    // Same total offered load as the uniform-tiers fleet, so skewed and
+    // unskewed sweeps are comparable point-for-point.
+    let total_rate: f64 = (0..n).map(|i| RATE_TIERS[i % RATE_TIERS.len()]).sum();
+    let zipf = ZipfCdf::new(n, skew);
+    let mut rng = Pcg64::with_stream(seed, 0x21bf);
+    let mut requests = Vec::new();
+    let (mut t, mut id) = (0.0, 0u64);
+    loop {
+        t += rng.exp(total_rate);
+        if t >= duration_s {
+            break;
+        }
+        id += 1;
+        requests.push(Request {
+            id,
+            function: zipf.sample(&mut rng),
+            arrival_s: t,
+            prompt_tokens: GsmLengths::prompt(&mut rng),
+            output_tokens: GsmLengths::output(&mut rng),
+        });
+    }
+    // Expected per-function rates (pre-loading benefit inputs, §4.1).
+    let rates: Vec<f64> = (0..n).map(|r| total_rate * zipf.pmf(r)).collect();
+    Workload { functions, requests, duration_s, rates }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +213,44 @@ mod tests {
         assert_eq!(w.functions.len(), 24);
         let w = fleet_workload(64, 300.0, 1);
         assert_eq!(w.functions.len(), 64);
+    }
+
+    #[test]
+    fn zipf_fleet_workload_is_head_heavy() {
+        let w = zipf_fleet_workload(64, 3600.0, 1.2, 7);
+        assert_eq!(w.functions.len(), 64);
+        assert_eq!(w.rates.len(), 64);
+        // Rates follow the Zipf pmf: strictly decreasing, summing to the
+        // uniform fleet's total offered load.
+        for p in w.rates.windows(2) {
+            assert!(p[0] > p[1], "rates not decreasing: {} vs {}", p[0], p[1]);
+        }
+        let total: f64 = w.rates.iter().sum();
+        let uniform_total: f64 = (0..64).map(|i| RATE_TIERS[i % 4]).sum();
+        assert!((total - uniform_total).abs() < 1e-9);
+        // The realized stream is head-heavy too.
+        let head = w.requests.iter().filter(|r| r.function == 0).count();
+        let tail = w.requests.iter().filter(|r| r.function == 63).count();
+        assert!(head > 5 * tail.max(1), "head {head} vs tail {tail}");
+        // Sorted, ids unique.
+        for p in w.requests.windows(2) {
+            assert!(p[1].arrival_s >= p[0].arrival_s);
+        }
+        let mut ids: Vec<u64> = w.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), w.requests.len());
+    }
+
+    #[test]
+    fn zipf_fleet_workload_deterministic() {
+        let a = zipf_fleet_workload(16, 600.0, 1.1, 3);
+        let b = zipf_fleet_workload(16, 600.0, 1.1, 3);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.function, y.function);
+        }
     }
 
     #[test]

@@ -8,3 +8,48 @@ pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// Total-order key for an `f64`: a monotone bijection onto `u64` whose
+/// `Ord` matches `f64::total_cmp`. Backs the ordered indexes that need
+/// floats as B-tree keys (the cluster's free-memory index, keep-alive's
+/// expiry order).
+pub fn f64_key(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::f64_key;
+
+    #[test]
+    fn f64_key_matches_total_cmp() {
+        let xs = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -2.0,
+            -1.0,
+            -1e-300,
+            -0.0,
+            0.0,
+            1e-300,
+            1.0,
+            2.0,
+            1e300,
+            f64::INFINITY,
+        ];
+        for a in xs {
+            for b in xs {
+                assert_eq!(
+                    f64_key(a).cmp(&f64_key(b)),
+                    a.total_cmp(&b),
+                    "key order diverged for {a} vs {b}"
+                );
+            }
+        }
+    }
+}

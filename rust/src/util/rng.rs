@@ -118,6 +118,48 @@ impl Pcg64 {
     }
 }
 
+/// Precomputed Zipf(s) CDF over `n` ranks: O(n) to build, O(log n) per
+/// draw. The linear-scan [`Pcg64::zipf`] recomputes the normalizer on
+/// every call, which is fine for one-off draws over small `n` but not
+/// for labelling a whole fleet-scale arrival stream (4096 functions ×
+/// tens of thousands of requests).
+#[derive(Debug, Clone)]
+pub struct ZipfCdf {
+    cdf: Vec<f64>,
+}
+
+impl ZipfCdf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf over zero ranks");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += (k as f64).powf(-s);
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        ZipfCdf { cdf }
+    }
+
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// P(rank) — rank 0 is the most popular.
+    pub fn pmf(&self, rank: usize) -> f64 {
+        let lo = if rank == 0 { 0.0 } else { self.cdf[rank - 1] };
+        self.cdf[rank] - lo
+    }
+
+    /// Draw a rank in `[0, n)` by inverse CDF (binary search).
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +227,46 @@ mod tests {
             counts[r.zipf(5, 1.2)] += 1;
         }
         assert!(counts[0] > counts[1] && counts[1] > counts[3]);
+    }
+
+    #[test]
+    fn zipf_cdf_matches_linear_scan_distribution() {
+        // The precomputed CDF and the linear scan draw from the same
+        // law: their empirical head frequencies agree within noise.
+        let (n, s) = (16, 1.1);
+        let table = ZipfCdf::new(n, s);
+        let mut pmf_sum = 0.0;
+        for r in 0..n {
+            pmf_sum += table.pmf(r);
+            if r > 0 {
+                assert!(table.pmf(r) < table.pmf(r - 1), "pmf not decreasing");
+            }
+        }
+        assert!((pmf_sum - 1.0).abs() < 1e-12);
+        let mut rng_a = Pcg64::new(12);
+        let mut rng_b = Pcg64::new(13);
+        let trials = 40_000;
+        let (mut head_a, mut head_b) = (0usize, 0usize);
+        for _ in 0..trials {
+            if table.sample(&mut rng_a) == 0 {
+                head_a += 1;
+            }
+            if rng_b.zipf(n, s) == 0 {
+                head_b += 1;
+            }
+        }
+        let (fa, fb) = (head_a as f64 / trials as f64, head_b as f64 / trials as f64);
+        assert!((fa - fb).abs() < 0.02, "head freq {fa} vs {fb}");
+        assert!((fa - table.pmf(0)).abs() < 0.02, "head freq {fa} vs pmf {}", table.pmf(0));
+    }
+
+    #[test]
+    fn zipf_cdf_sample_in_range_even_at_u_extremes() {
+        let table = ZipfCdf::new(3, 2.0);
+        let mut rng = Pcg64::new(5);
+        for _ in 0..1000 {
+            assert!(table.sample(&mut rng) < 3);
+        }
     }
 
     #[test]
