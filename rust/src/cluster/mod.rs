@@ -129,6 +129,12 @@ impl ClusterIndex {
 pub struct Cluster {
     pub nodes: Vec<Node>,
     index: RefCell<ClusterIndex>,
+    /// GPUs whose memory ledger changed since the engine's last billing
+    /// drain. A second dirty channel beside the routing index's: the
+    /// routing index repairs lazily on queries, while the billing
+    /// aggregates drain this once per event — the two must not steal
+    /// each other's marks.
+    bill_dirty: Vec<GpuId>,
 }
 
 impl Cluster {
@@ -139,6 +145,7 @@ impl Cluster {
                 .map(|i| Node::new(i, gpus_per_node, containers_per_node))
                 .collect(),
             index: RefCell::new(ClusterIndex::default()),
+            bill_dirty: Vec::new(),
         }
     }
 
@@ -157,10 +164,18 @@ impl Cluster {
     }
 
     /// Mutable GPU access. Marks the GPU dirty in the routing indexes
-    /// (repaired lazily on the next query).
+    /// (repaired lazily on the next query) and in the billing channel
+    /// (drained by the engine once per event).
     pub fn gpu_mut(&mut self, id: GpuId) -> &mut Gpu {
         self.index.get_mut().dirty_gpus.push(id);
+        self.bill_dirty.push(id);
         &mut self.nodes[id.node].gpus[id.index]
+    }
+
+    /// GPU access that tolerates ids removed by `trim_gpus` (the billing
+    /// drain may hold marks for GPUs that no longer exist).
+    pub fn try_gpu(&self, id: GpuId) -> Option<&Gpu> {
+        self.nodes.get(id.node).and_then(|n| n.gpus.get(id.index))
     }
 
     pub fn container(&self, id: ContainerId) -> &Container {
@@ -178,6 +193,7 @@ impl Cluster {
     pub fn replace_gpu(&mut self, id: GpuId, gpu: Gpu) {
         assert_eq!(gpu.id, id, "replacement GPU must keep its id");
         self.index.get_mut().dirty_gpus.push(id);
+        self.bill_dirty.push(id);
         self.nodes[id.node].gpus[id.index] = gpu;
     }
 
@@ -191,9 +207,25 @@ impl Cluster {
                 .rev()
                 .find(|n| !n.gpus.is_empty())
                 .expect("n_gpus > 0 implies a non-empty node");
-            node.gpus.pop();
+            if let Some(g) = node.gpus.pop() {
+                self.bill_dirty.push(g.id);
+            }
         }
         self.index.get_mut().built = false; // full rebuild on next query
+    }
+
+    /// Take (and clear) the billing-dirty marks accumulated since the
+    /// last drain. Entries may repeat and may name removed GPUs; the
+    /// engine dedups and uses [`Cluster::try_gpu`].
+    pub fn take_bill_dirty(&mut self) -> Vec<GpuId> {
+        std::mem::take(&mut self.bill_dirty)
+    }
+
+    /// Allocation-free variant for the per-event drain: swap the dirty
+    /// marks with the caller's (cleared) scratch buffer, so both sides
+    /// keep their capacity across millions of events.
+    pub fn swap_bill_dirty(&mut self, buf: &mut Vec<GpuId>) {
+        std::mem::swap(&mut self.bill_dirty, buf);
     }
 
     pub fn gpus(&self) -> impl Iterator<Item = &Gpu> {
@@ -295,6 +327,19 @@ impl Cluster {
             .get(&function)
             .map(|s| s.iter().copied().collect())
             .unwrap_or_default()
+    }
+
+    /// Visit the functions resident on one GPU via the index's per-GPU
+    /// snapshot — no `Gpu::resident_functions()` BTreeSet allocation.
+    /// The billing drain's warm-count refresh runs on this. `visit`
+    /// must not re-enter the cluster's index queries.
+    pub fn for_each_resident(&self, gpu: GpuId, mut visit: impl FnMut(usize)) {
+        self.repair();
+        if let Some(fns) = self.index.borrow().gpu_fns.get(&gpu) {
+            for &f in fns {
+                visit(f);
+            }
+        }
     }
 
     /// Does any container hold this (function, kind) artifact? O(log)
@@ -426,6 +471,50 @@ mod tests {
         c.container_mut(cids[1]).evict(3, ArtifactKind::Library).unwrap();
         c.check_index();
         assert!(!c.container_has(3, ArtifactKind::Library));
+    }
+
+    #[test]
+    fn bill_dirty_channel_tracks_gpu_mutations() {
+        let mut c = Cluster::new(1, 2, 1);
+        let ids = c.gpu_ids();
+        assert!(c.take_bill_dirty().is_empty());
+        c.gpu_mut(ids[0]).reserve_kv(1, 1.0).unwrap();
+        c.gpu_mut(ids[1])
+            .place_artifact(3, ArtifactKind::Adapter, 0.2)
+            .unwrap();
+        c.gpu_mut(ids[0]).release_kv(1);
+        let mut dirty = c.take_bill_dirty();
+        dirty.sort_unstable();
+        dirty.dedup();
+        assert_eq!(dirty, ids, "every mutated GPU is marked exactly once");
+        // The drain clears the channel; routing-index queries do not.
+        assert!(c.take_bill_dirty().is_empty());
+        let _ = c.gpus_with_function(3);
+        assert!(c.take_bill_dirty().is_empty());
+        // Swap variant: marks move into the buffer, the channel takes
+        // the (cleared) buffer back.
+        c.gpu_mut(ids[0]).reserve_kv(2, 1.0).unwrap();
+        let mut buf = Vec::new();
+        c.swap_bill_dirty(&mut buf);
+        assert_eq!(buf, vec![ids[0]]);
+        assert!(c.take_bill_dirty().is_empty());
+    }
+
+    #[test]
+    fn for_each_resident_matches_ledger() {
+        let mut c = Cluster::new(1, 2, 1);
+        let ids = c.gpu_ids();
+        c.gpu_mut(ids[0])
+            .place_artifact(3, ArtifactKind::Adapter, 0.2)
+            .unwrap();
+        c.gpu_mut(ids[0]).create_cuda_context(7).unwrap();
+        let mut seen = Vec::new();
+        c.for_each_resident(ids[0], |f| seen.push(f));
+        seen.sort_unstable();
+        assert_eq!(seen, vec![3, 7]);
+        let mut other = Vec::new();
+        c.for_each_resident(ids[1], |f| other.push(f));
+        assert!(other.is_empty());
     }
 
     #[test]

@@ -51,6 +51,20 @@ impl KeepAlive {
         self.expiry.get(&function).map(|&e| e > now_s).unwrap_or(false)
     }
 
+    /// Raw membership: does an (unexpired-or-not-yet-swept) window exist
+    /// for `function`? The engine's warm-set mirror for the billing
+    /// aggregates is defined against this — windows leave it exactly when
+    /// the keep-alive sweep pops them, so both sides flip within the same
+    /// zero-width event instant.
+    pub fn contains(&self, function: usize) -> bool {
+        self.expiry.contains_key(&function)
+    }
+
+    /// Iterate every tracked function (billing-oracle rebuilds).
+    pub fn tracked(&self) -> impl Iterator<Item = usize> + '_ {
+        self.expiry.keys().copied()
+    }
+
     /// Functions whose window expired by `now` (to be torn down + billed
     /// until their expiry instant). Pops a prefix of the time order.
     pub fn expired(&mut self, now_s: f64) -> Vec<(usize, f64)> {

@@ -15,9 +15,9 @@ pub use batching::{BatchQueue, FixedBatchQueue, Queued};
 pub use keepalive::KeepAlive;
 pub use offload::{DynamicOffloader, OffloadPlan};
 pub use policy::{
-    AdaptiveBatching, BatchingPolicy, BillingModel, DynamicOffload, FastCheckpointPreload,
-    FixedBatching, FullPreload, GpuBillSample, LoadQuery, NoOffload, NoPreload,
-    OffloadPolicy, OpportunisticPreload, PolicyBundle, PolicyEnv, PredictivePreload,
+    AdaptiveBatching, AggregateBillSample, BatchingPolicy, BillingModel, ClassBillSample,
+    DynamicOffload, FastCheckpointPreload, FixedBatching, FullPreload, LoadQuery, NoOffload,
+    NoPreload, OffloadPolicy, OpportunisticPreload, PolicyBundle, PolicyEnv, PredictivePreload,
     PreloadPolicy, ServerfulBilling, ServerfulResident, ServerlessBilling,
 };
 pub use preload::{

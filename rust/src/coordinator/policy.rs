@@ -150,30 +150,54 @@ pub trait OffloadPolicy: Send {
     ) -> Option<OffloadPlan>;
 }
 
-/// One GPU's billable state over an inter-event interval.
-#[derive(Debug, Clone, Copy)]
-pub struct GpuBillSample {
-    /// Resident GB above the runtime reserve.
+/// One billing class's aggregate footprint over an inter-event interval.
+/// Both §6.1 pricing rules are linear within a class, so summing before
+/// pricing is exact — the engine maintains these sums by delta and never
+/// walks the GPUs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClassBillSample {
+    /// GPUs currently in this class (CPU/host-mem surcharges are
+    /// per-instance, so the count still matters).
+    pub gpus: usize,
+    /// Σ resident GB above the runtime reserve across the class.
     pub used_gb: f64,
+    /// Σ device capacity across the class (unshared billing charges
+    /// whole GPUs).
     pub total_gb: f64,
-    /// Executing or loading during the interval.
-    pub active: bool,
-    /// Hosts at least one keep-alive-warm function.
-    pub warm_resident: bool,
+}
+
+/// The cluster's billable state over an inter-event interval, one
+/// [`ClassBillSample`] per billing class. GPUs with no billable bytes
+/// (the empty class) are omitted — no pricing rule charges them.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AggregateBillSample {
+    /// GPUs with at least one executing batch.
+    pub active: ClassBillSample,
+    /// GPUs with an in-flight artifact load but nothing executing —
+    /// loading bills like execution (the instance is allocated and
+    /// working), kept separate for observability.
+    pub loading: ClassBillSample,
+    /// Idle GPUs hosting at least one keep-alive-warm function.
+    pub idle_warm: ClassBillSample,
+    /// Idle GPUs whose residency is entirely agent-staged (§2.4:
+    /// "pre-loading without extra wastage" — not billed to users).
+    pub idle_cold: ClassBillSample,
 }
 
 /// How resource-time turns into dollars (§6.1 pricing rules).
 pub trait BillingModel: Send {
     fn name(&self) -> &'static str;
 
-    /// Whether per-interval GPU sampling is needed at all (serverful
+    /// Whether per-interval sampling is needed at all (serverful
     /// billing is flat and skips the event-integrated path).
     fn needs_interval(&self) -> bool {
         true
     }
 
-    /// Integrate one GPU's cost over a `dt_s`-second interval.
-    fn bill_gpu(&self, s: &GpuBillSample, dt_s: f64, cost: &mut CostTracker);
+    /// Integrate the cluster's cost over a `dt_s`-second interval from
+    /// one aggregate sample — O(1) per interval regardless of fleet
+    /// size.
+    fn bill(&self, s: &AggregateBillSample, dt_s: f64, cost: &mut CostTracker);
 
     /// End-of-run settlement (serverful: dedicated GPU-hours).
     fn finalize(&self, dedicated_gpus: usize, end_s: f64, cost: &mut CostTracker);
@@ -844,10 +868,12 @@ impl OffloadPolicy for NoOffload {
 
 // ------------------------------------------------------- billing models
 
-/// Serverless event-integrated billing: between events every GPU bills
-/// its resident GB at the active rate while it has work, else at the
+/// Serverless event-integrated billing: active (executing or loading)
+/// GPUs bill their resident GB at the active rate, idle GPUs at the
 /// keep-alive idle rate — and only while a keep-alive-warm function
 /// resides there (§2.4: agent-staged artifacts are not billed to users).
+/// Both rules are linear in GB within a class, so the aggregate sums
+/// price exactly what the historical per-GPU walk priced.
 pub struct ServerlessBilling {
     /// Without backbone sharing a function occupies its GPU *exclusively*
     /// (§1): the platform bills the whole allocated GPU, not the bytes
@@ -860,17 +886,27 @@ impl BillingModel for ServerlessBilling {
         "serverless"
     }
 
-    fn bill_gpu(&self, s: &GpuBillSample, dt_s: f64, cost: &mut CostTracker) {
-        if s.used_gb <= 0.0 {
-            return;
+    fn bill(&self, s: &AggregateBillSample, dt_s: f64, cost: &mut CostTracker) {
+        let active_gpus = s.active.gpus + s.loading.gpus;
+        if active_gpus > 0 {
+            let billed = if self.sharing {
+                s.active.used_gb + s.loading.used_gb
+            } else {
+                s.active.total_gb + s.loading.total_gb
+            };
+            // CPU/host-mem of the functions actively working there, per
+            // allocated instance.
+            cost.add_active(billed, dt_s, 4.0 * active_gpus as f64, 16.0 * active_gpus as f64);
         }
-        let billed = if self.sharing { s.used_gb } else { s.total_gb };
-        if s.active {
-            // CPU/host-mem of the functions actively executing there.
-            cost.add_active(billed, dt_s, 4.0, 16.0);
-        } else if s.warm_resident {
-            cost.add_idle(billed, dt_s, 4.0);
+        if s.idle_warm.gpus > 0 {
+            let billed = if self.sharing {
+                s.idle_warm.used_gb
+            } else {
+                s.idle_warm.total_gb
+            };
+            cost.add_idle(billed, dt_s, 4.0 * s.idle_warm.gpus as f64);
         }
+        // idle_cold: agent-staged residency only — never billed.
     }
 
     fn finalize(&self, _dedicated_gpus: usize, _end_s: f64, _cost: &mut CostTracker) {}
@@ -889,7 +925,7 @@ impl BillingModel for ServerfulBilling {
         false
     }
 
-    fn bill_gpu(&self, _s: &GpuBillSample, _dt_s: f64, _cost: &mut CostTracker) {}
+    fn bill(&self, _s: &AggregateBillSample, _dt_s: f64, _cost: &mut CostTracker) {}
 
     fn finalize(&self, dedicated_gpus: usize, end_s: f64, cost: &mut CostTracker) {
         cost.add_serverful(dedicated_gpus as f64, end_s);
@@ -996,29 +1032,35 @@ mod tests {
 
     #[test]
     fn billing_models_split_active_idle_flat() {
-        let sample = GpuBillSample {
-            used_gb: 20.0,
-            total_gb: 48.0,
-            active: true,
-            warm_resident: true,
+        // One executing GPU (20/48 GB), one loading GPU (10/48 GB), two
+        // idle-warm GPUs (8/96 GB), one idle-cold GPU (5/48 GB).
+        let sample = AggregateBillSample {
+            active: ClassBillSample { gpus: 1, used_gb: 20.0, total_gb: 48.0 },
+            loading: ClassBillSample { gpus: 1, used_gb: 10.0, total_gb: 48.0 },
+            idle_warm: ClassBillSample { gpus: 2, used_gb: 8.0, total_gb: 96.0 },
+            idle_cold: ClassBillSample { gpus: 1, used_gb: 5.0, total_gb: 48.0 },
         };
         let mut c = CostTracker::default();
-        ServerlessBilling { sharing: true }.bill_gpu(&sample, 2.0, &mut c);
-        assert!((c.gpu_active_gb_s - 40.0).abs() < 1e-9);
-        // Unshared bills the whole GPU.
+        ServerlessBilling { sharing: true }.bill(&sample, 2.0, &mut c);
+        // Loading bills like execution; idle-cold bills nothing.
+        assert!((c.gpu_active_gb_s - 60.0).abs() < 1e-9);
+        assert!((c.gpu_idle_gb_s - 16.0).abs() < 1e-9);
+        // CPU/host-mem surcharges are per active instance (2 of them).
+        assert!((c.cpu_core_s - 16.0).abs() < 1e-9);
+        // Unshared bills whole GPUs: (48 + 48) GB active, 96 GB idle.
         let mut c2 = CostTracker::default();
-        ServerlessBilling { sharing: false }.bill_gpu(&sample, 2.0, &mut c2);
-        assert!((c2.gpu_active_gb_s - 96.0).abs() < 1e-9);
-        // Idle GPU with a warm resident bills idle GB·s.
-        let idle = GpuBillSample { active: false, ..sample };
+        ServerlessBilling { sharing: false }.bill(&sample, 2.0, &mut c2);
+        assert!((c2.gpu_active_gb_s - 192.0).abs() < 1e-9);
+        assert!((c2.gpu_idle_gb_s - 192.0).abs() < 1e-9);
+        // An all-empty sample accrues nothing at all.
         let mut c3 = CostTracker::default();
-        ServerlessBilling { sharing: true }.bill_gpu(&idle, 2.0, &mut c3);
-        assert!((c3.gpu_idle_gb_s - 40.0).abs() < 1e-9);
+        ServerlessBilling { sharing: true }.bill(&AggregateBillSample::default(), 2.0, &mut c3);
+        assert_eq!(c3.total_usd(), 0.0);
         // Serverful: nothing per-interval, flat at finalize.
         let mut c4 = CostTracker::default();
         let sf = ServerfulBilling;
         assert!(!sf.needs_interval());
-        sf.bill_gpu(&sample, 2.0, &mut c4);
+        sf.bill(&sample, 2.0, &mut c4);
         assert_eq!(c4.total_usd(), 0.0);
         sf.finalize(2, 3600.0, &mut c4);
         assert!((c4.serverful_gpu_s - 7200.0).abs() < 1e-9);

@@ -8,16 +8,21 @@
 //!
 //! `--skew S` drives the sweep with the Zipf(S) function-popularity
 //! workload instead of the uniform-tiers one (Azure-style head-heavy
-//! traffic; stresses keep-alive + preload). `--check` re-runs the quick
-//! grid and fails on counter blowups against the committed structural
-//! bounds (`QUICK_BOUNDS`) — the CI regression guard.
+//! traffic; stresses keep-alive + preload); adding `--cov-head H` /
+//! `--cov-tail T` classes the head and tail of the Zipf ranking into
+//! different CoV burstiness patterns (Azure: hot functions are also the
+//! burstiest). `--check` re-runs the quick grid and fails on counter
+//! blowups against the committed structural bounds (`QUICK_BOUNDS`) —
+//! the CI regression guard, which since the billing-aggregate work also
+//! bounds billing samples and reclassifications per event.
 
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cluster::Cluster;
-use crate::sim::workloads::{fleet_workload, zipf_fleet_workload};
+use crate::sim::workloads::{fleet_workload, zipf_fleet_workload, zipf_fleet_workload_cov};
 use crate::sim::{Engine, SystemConfig};
+use crate::trace::Pattern;
 use crate::util::json::{num, obj, Json};
 use crate::util::table::Table;
 
@@ -39,6 +44,13 @@ pub struct FleetPoint {
     pub peak_queue: usize,
     pub keepalive_checks: u64,
     pub events_cancelled: u64,
+    /// Aggregate billing samples (one per positive-width interval —
+    /// must stay ≤ events + 1 regardless of GPU count).
+    pub bill_samples: u64,
+    /// Billing-class reclassifications (O(GPUs touched) per event).
+    pub bill_reclass: u64,
+    /// Wall-clock inside billing sampling (nondeterministic; JSON-only).
+    pub bill_wall_s: f64,
 }
 
 /// The (GPUs, functions) sweep. Quick mode stays CI-sized; full mode
@@ -70,21 +82,28 @@ fn cluster_of(gpus: usize) -> Cluster {
 }
 
 /// Run the flagship system at one grid point and measure the engine.
-/// `skew` switches the workload to Zipf(skew) function popularity.
+/// `skew` switches the workload to Zipf(skew) function popularity;
+/// `cov` additionally classes the Zipf head/tail into different
+/// burstiness patterns (only meaningful with `skew`, ignored without).
 pub fn run_point(
     gpus: usize,
     fns: usize,
     duration_s: f64,
     seed: u64,
     skew: Option<f64>,
+    cov: Option<(Pattern, Pattern)>,
 ) -> FleetPoint {
-    let w = match skew {
-        Some(s) => zipf_fleet_workload(fns, duration_s, s, seed),
-        None => fleet_workload(fns, duration_s, seed),
+    let w = match (skew, cov) {
+        (Some(s), Some((head, tail))) => {
+            zipf_fleet_workload_cov(fns, duration_s, s, seed, head, tail)
+        }
+        (Some(s), None) => zipf_fleet_workload(fns, duration_s, s, seed),
+        (None, _) => fleet_workload(fns, duration_s, seed),
     };
     let requests = w.requests.len();
     let t0 = Instant::now();
-    let engine = Engine::new(SystemConfig::serverless_lora(), cluster_of(gpus), w, seed);
+    let mut engine = Engine::new(SystemConfig::serverless_lora(), cluster_of(gpus), w, seed);
+    engine.set_bill_timing(true);
     let (m, _, stats) = engine.run();
     let wall_s = t0.elapsed().as_secs_f64();
     FleetPoint {
@@ -98,6 +117,9 @@ pub fn run_point(
         peak_queue: stats.peak_event_queue,
         keepalive_checks: stats.keepalive_checks,
         events_cancelled: stats.events_cancelled,
+        bill_samples: stats.bill_samples,
+        bill_reclass: stats.bill_reclass,
+        bill_wall_s: stats.bill_wall_s,
     }
 }
 
@@ -107,10 +129,10 @@ pub fn run_point(
 /// (nondeterministic by nature) are recorded by `fleet_json` and the
 /// bench harness's per-experiment `wall_s`.
 pub fn fleet(quick: bool) -> String {
-    fleet_with(quick, None)
+    fleet_with(quick, None, None)
 }
 
-pub fn fleet_with(quick: bool, skew: Option<f64>) -> String {
+pub fn fleet_with(quick: bool, skew: Option<f64>, cov: Option<(Pattern, Pattern)>) -> String {
     let dur = horizon(quick);
     let cols = [
         "GPUs",
@@ -120,18 +142,25 @@ pub fn fleet_with(quick: bool, skew: Option<f64>) -> String {
         "peak queue",
         "KA checks",
         "cancelled",
+        "bill samples",
     ];
-    let title = match skew {
-        Some(s) => format!(
+    let title = match (skew, cov) {
+        (Some(s), Some((h, t))) => format!(
+            "Fleet — engine scaling sweep, Zipf({s}) popularity, \
+             {}-head/{}-tail CoV (ServerlessLoRA flagship)",
+            h.name(),
+            t.name()
+        ),
+        (Some(s), None) => format!(
             "Fleet — engine scaling sweep, Zipf({s}) popularity (ServerlessLoRA flagship)"
         ),
-        None => "Fleet — engine scaling sweep (ServerlessLoRA flagship)".to_string(),
+        (None, _) => "Fleet — engine scaling sweep (ServerlessLoRA flagship)".to_string(),
     };
     let mut t = Table::new(&title, &cols);
     let points = grid(quick);
     let largest = *points.last().expect("grid non-empty");
     for (gpus, fns) in points {
-        let p = run_point(gpus, fns, dur, 11, skew);
+        let p = run_point(gpus, fns, dur, 11, skew, cov);
         assert_eq!(p.completed, p.requests, "fleet run lost requests");
         if skew.is_none() && (gpus, fns) == largest {
             *LAST_LARGEST.lock().unwrap() = Some(p.clone());
@@ -144,6 +173,7 @@ pub fn fleet_with(quick: bool, skew: Option<f64>) -> String {
             p.peak_queue.to_string(),
             p.keepalive_checks.to_string(),
             p.events_cancelled.to_string(),
+            p.bill_samples.to_string(),
         ]);
     }
     t.render()
@@ -158,7 +188,7 @@ pub fn fleet_json(quick: bool) -> Json {
     let cached = LAST_LARGEST.lock().unwrap().clone();
     let p = match cached {
         Some(p) if (p.gpus, p.fns) == (gpus, fns) => p,
-        _ => run_point(gpus, fns, horizon(quick), 11, None),
+        _ => run_point(gpus, fns, horizon(quick), 11, None, None),
     };
     obj(vec![
         ("gpus", num(p.gpus as f64)),
@@ -171,6 +201,12 @@ pub fn fleet_json(quick: bool) -> Json {
         ("peak_event_queue", num(p.peak_queue as f64)),
         ("keepalive_checks", num(p.keepalive_checks as f64)),
         ("events_cancelled", num(p.events_cancelled as f64)),
+        ("bill_samples", num(p.bill_samples as f64)),
+        ("bill_reclass", num(p.bill_reclass as f64)),
+        ("bill_wall_s", num(p.bill_wall_s)),
+        // Billing's share of engine wall-clock — the perf-win trajectory
+        // for the O(1) aggregate sampling (was O(G) per event).
+        ("bill_wall_share", num(p.bill_wall_s / p.wall_s.max(1e-9))),
     ])
 }
 
@@ -188,30 +224,63 @@ pub fn fleet_json(quick: bool) -> Json {
 /// * the live queue holds 1 streamed arrival + ≤2 wakeups per function +
 ///   ≤1 tick per GPU + one LoadDone per in-flight batch + 1 keep-alive
 ///   sweep, bounded by `max_peak_queue` (cancelled events leave the
-///   queue immediately, so stale entries cannot inflate it).
+///   queue immediately, so stale entries cannot inflate it);
+/// * billing takes exactly one aggregate sample per positive-width
+///   interval — `bill_samples ≤ events + 1` structurally, so the bound
+///   is 1.01 samples/event at any GPU count (the old per-GPU path would
+///   sit at ~G× that);
+/// * reclassifications are O(GPUs touched) per event — a handful per
+///   batch lifecycle plus the one-off init scan — far under
+///   `max_bill_reclass_per_event`.
 pub struct FleetBound {
     pub gpus: usize,
     pub fns: usize,
     pub max_events_per_request: f64,
     pub max_peak_queue: usize,
+    pub max_bill_samples_per_event: f64,
+    pub max_bill_reclass_per_event: f64,
 }
 
 /// Bounds for `grid(true)`, in order. `max_peak_queue` is
 /// `2·fns + 64·gpus + 16` (the 64/GPU term covers ticks + in-flight
 /// loading batches, which GPU memory caps far below that).
 pub const QUICK_BOUNDS: &[FleetBound] = &[
-    FleetBound { gpus: 8, fns: 64, max_events_per_request: 16.0, max_peak_queue: 656 },
-    FleetBound { gpus: 16, fns: 256, max_events_per_request: 16.0, max_peak_queue: 1552 },
-    FleetBound { gpus: 32, fns: 1024, max_events_per_request: 16.0, max_peak_queue: 4112 },
+    FleetBound {
+        gpus: 8,
+        fns: 64,
+        max_events_per_request: 16.0,
+        max_peak_queue: 656,
+        max_bill_samples_per_event: 1.01,
+        max_bill_reclass_per_event: 12.0,
+    },
+    FleetBound {
+        gpus: 16,
+        fns: 256,
+        max_events_per_request: 16.0,
+        max_peak_queue: 1552,
+        max_bill_samples_per_event: 1.01,
+        max_bill_reclass_per_event: 12.0,
+    },
+    FleetBound {
+        gpus: 32,
+        fns: 1024,
+        max_events_per_request: 16.0,
+        max_peak_queue: 4112,
+        max_bill_samples_per_event: 1.01,
+        max_bill_reclass_per_event: 12.0,
+    },
 ];
 
 /// Run one point against its bound; `Ok` is the report line.
 fn check_point(b: &FleetBound, dur: f64) -> Result<String, String> {
-    let p = run_point(b.gpus, b.fns, dur, 11, None);
+    let p = run_point(b.gpus, b.fns, dur, 11, None, None);
     let per_req = p.events as f64 / p.requests.max(1) as f64;
+    let samples_per_ev = p.bill_samples as f64 / p.events.max(1) as f64;
+    let reclass_per_ev = p.bill_reclass as f64 / p.events.max(1) as f64;
     let line = format!(
         "fleet-check {}g/{}f: {} requests, {:.2} events/request (bound {}), \
-         peak queue {} (bound {}), {} cancelled",
+         peak queue {} (bound {}), {} cancelled, \
+         {:.3} bill samples/event (bound {}), {:.2} reclass/event (bound {})",
         b.gpus,
         b.fns,
         p.requests,
@@ -220,6 +289,10 @@ fn check_point(b: &FleetBound, dur: f64) -> Result<String, String> {
         p.peak_queue,
         b.max_peak_queue,
         p.events_cancelled,
+        samples_per_ev,
+        b.max_bill_samples_per_event,
+        reclass_per_ev,
+        b.max_bill_reclass_per_event,
     );
     if p.completed != p.requests {
         return Err(format!("{line}\n  FAIL: lost {} requests", p.requests - p.completed));
@@ -232,6 +305,19 @@ fn check_point(b: &FleetBound, dur: f64) -> Result<String, String> {
     }
     if p.events_cancelled == 0 {
         return Err(format!("{line}\n  FAIL: no cancellations — supersession is broken"));
+    }
+    if samples_per_ev > b.max_bill_samples_per_event {
+        return Err(format!(
+            "{line}\n  FAIL: billing is no longer O(1) per event ({samples_per_ev:.3})"
+        ));
+    }
+    if p.bill_samples == 0 {
+        return Err(format!("{line}\n  FAIL: no billing samples — aggregation is broken"));
+    }
+    if reclass_per_ev > b.max_bill_reclass_per_event {
+        return Err(format!(
+            "{line}\n  FAIL: reclassification blowup ({reclass_per_ev:.2}/event)"
+        ));
     }
     Ok(line)
 }
@@ -255,23 +341,44 @@ mod tests {
 
     #[test]
     fn tiny_point_conserves_and_measures() {
-        let p = run_point(8, 16, 120.0, 3, None);
+        let p = run_point(8, 16, 120.0, 3, None, None);
         assert_eq!(p.completed, p.requests, "lost requests");
         assert!(p.requests > 0);
         assert!(p.events >= p.requests as u64, "every request is ≥1 event");
         assert!(p.peak_queue > 0);
         assert!(p.events_per_s > 0.0);
+        // Billing telemetry rides every point: O(1) samples per event,
+        // wall-clock metered (run_point turns timing on).
+        assert!(p.bill_samples > 0);
+        assert!(p.bill_samples <= p.events + 1, "billing not O(1)/event");
+        assert!(p.bill_reclass > 0);
+        assert!(p.bill_wall_s > 0.0);
     }
 
     #[test]
     fn skewed_point_conserves_and_cancels() {
-        let p = run_point(8, 16, 300.0, 3, Some(1.2));
+        let p = run_point(8, 16, 300.0, 3, Some(1.2), None);
         assert_eq!(p.completed, p.requests, "lost requests");
         assert!(p.requests > 0);
         assert!(
             p.events_cancelled > 0,
             "supersession should cancel events under real traffic"
         );
+    }
+
+    #[test]
+    fn cov_classed_point_conserves() {
+        let p = run_point(
+            8,
+            16,
+            300.0,
+            3,
+            Some(1.2),
+            Some((Pattern::Bursty, Pattern::Predictable)),
+        );
+        assert_eq!(p.completed, p.requests, "lost requests");
+        assert!(p.requests > 0);
+        assert!(p.bill_samples <= p.events + 1);
     }
 
     #[test]
@@ -300,6 +407,10 @@ mod tests {
         for (point, b) in g.iter().zip(QUICK_BOUNDS) {
             assert_eq!(*point, (b.gpus, b.fns), "bounds out of sync with the grid");
             assert_eq!(b.max_peak_queue, 2 * b.fns + 64 * b.gpus + 16);
+            // One aggregate sample per event is structural; only a
+            // per-GPU regression could breach it.
+            assert!(b.max_bill_samples_per_event < 1.5);
+            assert!(b.max_bill_reclass_per_event >= 4.0);
         }
     }
 
@@ -312,8 +423,11 @@ mod tests {
             fns: 16,
             max_events_per_request: 16.0,
             max_peak_queue: 2 * 16 + 64 * 8 + 16,
+            max_bill_samples_per_event: 1.01,
+            max_bill_reclass_per_event: 12.0,
         };
         let line = check_point(&b, 120.0).expect("healthy engine trips the guard");
         assert!(line.contains("events/request"));
+        assert!(line.contains("bill samples/event"));
     }
 }

@@ -5,10 +5,12 @@
 //!                                                  regenerate a paper table/figure
 //! serverless-lora simulate --all [--full] [--jobs N]
 //!                                                  regenerate everything
-//! serverless-lora fleet [--full] [--skew S] [--check]
+//! serverless-lora fleet [--full] [--skew S] [--cov-head H] [--cov-tail T] [--check]
 //!                                                  engine scaling sweep
 //!                                                  (alias: simulate --exp fleet;
 //!                                                  --skew: Zipf popularity;
+//!                                                  --cov-head/--cov-tail: CoV class
+//!                                                  of the Zipf head/tail, needs --skew;
 //!                                                  --check: CI counter guard)
 //! serverless-lora serve [--model llama-tiny] [--requests N] [--batch B]
 //!                                                  real PJRT serving demo (`pjrt` feature)
@@ -84,8 +86,11 @@ fn usage() -> ! {
         "usage: serverless-lora <simulate|fleet|serve|info> [options]\n\
          \n\
          simulate --exp <id>|--all [--full] [--jobs N]   ids: {}\n\
-         fleet    [--full] [--skew S] [--check]          engine scaling sweep\n\
-                  (--skew: Zipf(S) popularity; --check: counter regression guard)\n\
+         fleet    [--full] [--skew S] [--cov-head H] [--cov-tail T] [--check]\n\
+                  engine scaling sweep\n\
+                  (--skew: Zipf(S) popularity; --cov-head/--cov-tail: inter-arrival\n\
+                  CoV class for the Zipf head/tail, requires --skew, missing side\n\
+                  defaults to the Normal class; --check: counter regression guard)\n\
          serve    [--model llama-tiny] [--requests 16] [--batch 4]\n\
          info     [--model llama-tiny]",
         exp::ALL_EXPERIMENTS.join(", ")
@@ -135,7 +140,34 @@ fn main() -> anyhow::Result<()> {
                     },
                     None => None,
                 };
-                print!("{}", exp::fleet::fleet_with(quick, skew));
+                // CoV classes for the Zipf head/tail (validation matches
+                // --skew: positive finite numbers, mapped onto the
+                // paper's CoV bands).
+                let cov_of = |name: &str| -> Option<f64> {
+                    let v = flags.get(name)?;
+                    match v.parse::<f64>() {
+                        Ok(c) if c.is_finite() && c > 0.0 => Some(c),
+                        _ => {
+                            eprintln!("--{name} needs a positive number, got '{v}'");
+                            std::process::exit(2);
+                        }
+                    }
+                };
+                let (head, tail) = (cov_of("cov-head"), cov_of("cov-tail"));
+                let cov = if head.is_some() || tail.is_some() {
+                    if skew.is_none() {
+                        eprintln!("--cov-head/--cov-tail require --skew");
+                        std::process::exit(2);
+                    }
+                    use serverless_lora::trace::Pattern;
+                    Some((
+                        Pattern::for_cov(head.unwrap_or(2.5)),
+                        Pattern::for_cov(tail.unwrap_or(2.5)),
+                    ))
+                } else {
+                    None
+                };
+                print!("{}", exp::fleet::fleet_with(quick, skew, cov));
             }
         }
         Some("serve") => {

@@ -110,6 +110,19 @@ pub struct RunStats {
     /// Superseded events removed via `EventQueue::cancel` (the O(1)
     /// replacement for the old generation/version staleness skips).
     pub events_cancelled: u64,
+    /// Aggregate billing samples handed to the `BillingModel` — exactly
+    /// one per positive-width inter-event interval, independent of GPU
+    /// count (the old path took one sample *per GPU* per interval).
+    pub bill_samples: u64,
+    /// Billing-class reclassifications (`Engine::reclassify_gpu` calls):
+    /// O(1) each, O(GPUs touched) per event. The aggregate-verification
+    /// counter `fleet --check` bounds per event.
+    pub bill_reclass: u64,
+    /// Wall-clock spent producing + pricing billing samples, measured
+    /// only when `Engine::set_bill_timing(true)` (the fleet bench);
+    /// zero otherwise. Nondeterministic — never rendered into report
+    /// tables, only into BENCH_sim.json.
+    pub bill_wall_s: f64,
 }
 
 /// Aggregated metrics for one run of one system.

@@ -332,6 +332,10 @@ impl Engine {
         );
         self.fn_inflight[f] += 1;
         *self.gpu_busy.get_mut(&gpu).unwrap() += 1;
+        // The batch starts in `Loading`: the GPU bills as active from
+        // this instant (instance allocated and working).
+        *self.gpu_loading.get_mut(&gpu).unwrap() += 1;
+        self.reclassify_gpu(gpu);
         self.events.push(self.now + total_load, EventKind::LoadDone(batch_id));
         // Residual queue: cancel the pre-dispatch checks and re-arm for
         // what is left.
@@ -459,6 +463,9 @@ impl Engine {
             batch.t_exec_start = self.now;
             (batch.gpu, batch.function, batch.requests.len())
         };
+        // Loading → Prefill: the loading count drops as the exec job
+        // starts; the schedule_tick below reclassifies over both.
+        *self.gpu_loading.get_mut(&gpu).unwrap() -= 1;
         let work = self.spec(f).model.prefill_s(b);
         let exec = self.execs.get_mut(&gpu).unwrap();
         exec.add(self.now, batch_id, work);
@@ -468,8 +475,11 @@ impl Engine {
     /// (Re)schedule the single completion tick for `gpu`: the superseded
     /// tick (scheduled against the pre-mutation job set) is cancelled
     /// outright, so exactly one live `GpuTick` exists per busy GPU and a
-    /// tick that fires is always current.
+    /// tick that fires is always current. Every exec mutation funnels
+    /// through here, so this is also where the billing aggregates learn
+    /// about exec start/finish.
     pub(super) fn schedule_tick(&mut self, gpu: GpuId) {
+        self.reclassify_gpu(gpu);
         if let Some(tok) = self.tick_tokens.remove(&gpu) {
             self.events.cancel(tok);
         }
@@ -578,9 +588,12 @@ impl Engine {
                     function: f,
                 });
         }
-        // Keep-alive (serverless): (re)arm the single expiry sweep.
+        // Keep-alive (serverless): (re)arm the single expiry sweep and
+        // bump the billing warm counts on the GPUs hosting `f` (no-op
+        // when the window merely extends).
         if !self.cfg.serverful {
             self.keepalive.touch(f, self.now);
+            self.note_function_warm(f);
             self.arm_keepalive();
         }
         // Memory freed on this GPU: retry the blocked functions whose

@@ -20,6 +20,7 @@ use crate::cost::CostTracker;
 use crate::metrics::RunMetrics;
 pub use crate::metrics::RunStats;
 use crate::sharing::BackboneRegistry;
+use crate::sim::billing::BillingIndex;
 use crate::sim::config::SystemConfig;
 use crate::sim::dispatch::Batch;
 use crate::sim::events::{EventKind, EventQueue, EventToken};
@@ -82,6 +83,14 @@ pub struct Engine {
     /// `Prefill` state (replaces the O(batches) scan in
     /// `target_gpu_idle`).
     pub(super) gpu_busy: BTreeMap<GpuId, usize>,
+    /// Incremental index: per-GPU count of batches in `Loading` state —
+    /// the billing classes' "loading bills like execution" test, O(log)
+    /// instead of the historical per-interval batch scan.
+    pub(super) gpu_loading: BTreeMap<GpuId, usize>,
+    /// Delta-maintained billing aggregates (`sim::billing`): per-GPU
+    /// class + per-class running sums, updated through
+    /// `Engine::reclassify_gpu` on every state change.
+    pub(super) bill: BillingIndex,
     /// Outstanding queue-wakeup tokens per function: superseded checks
     /// are cancelled in O(1) instead of being stamped and skipped.
     pub(super) queue_wakeups: Vec<QueueWakeups>,
@@ -123,7 +132,9 @@ impl Engine {
             .into_iter()
             .map(|g| (g, GpuExec::default()))
             .collect();
-        let gpu_busy = cluster.gpu_ids().into_iter().map(|g| (g, 0)).collect();
+        let gpu_busy: BTreeMap<GpuId, usize> =
+            cluster.gpu_ids().into_iter().map(|g| (g, 0)).collect();
+        let gpu_loading = gpu_busy.clone();
         let n_fns = workload.functions.len();
         let mut model_peers: BTreeMap<&'static str, Vec<usize>> = BTreeMap::new();
         for f in &workload.functions {
@@ -147,6 +158,8 @@ impl Engine {
             active: BTreeSet::new(),
             fn_inflight: vec![0; n_fns],
             gpu_busy,
+            gpu_loading,
+            bill: BillingIndex::default(),
             queue_wakeups: vec![QueueWakeups::default(); n_fns],
             tick_tokens: BTreeMap::new(),
             keepalive_armed: None,
@@ -169,6 +182,10 @@ impl Engine {
         };
         e.metrics.duration_s = e.duration_s;
         e.setup();
+        // Classify the freshly-deployed cluster into the billing
+        // aggregates; from here on every mutation maintains them by
+        // delta.
+        e.init_billing();
         e
     }
 
@@ -235,6 +252,10 @@ impl Engine {
                 self.arm_keepalive();
             }
         }
+        // Fold this event's memory mutations into the billing
+        // aggregates (O(GPUs touched)), so the next interval samples the
+        // post-event state in O(1).
+        self.drain_billing_dirty();
         self.stats.events_cancelled = self.events.cancelled();
         true
     }
@@ -299,6 +320,13 @@ impl Engine {
         let expired = self.keepalive.expired(self.now);
         let mut freed = false;
         for (f, _) in expired {
+            // Warmth ends for every expired function — including those
+            // whose artifacts survive (agent-owned) or are mid-flight —
+            // so the billing warm counts drop before any eviction below
+            // mutates the residency the counts were taken over. The
+            // returned snapshot is the function's resident-GPU set,
+            // reused for the eviction loop.
+            let resident = self.note_function_cold(f);
             if self.policies.preload.retains_artifacts(f) {
                 continue;
             }
@@ -308,7 +336,7 @@ impl Engine {
             // Only the GPUs where this function actually resides (the
             // per-function index) — dirtying every GPU here would force
             // a full routing-index repair on the next route.
-            for g in self.cluster.gpus_with_function(f) {
+            for g in resident {
                 let gpu = self.cluster.gpu_mut(g);
                 freed |= gpu.evict_artifact(f, ArtifactKind::Adapter).is_ok();
                 freed |= gpu.evict_artifact(f, ArtifactKind::CudaKernel).is_ok();
@@ -383,6 +411,10 @@ impl Engine {
         // residency counts).
         self.events.check_invariants();
         self.cluster.check_index();
+        // Billing aggregates: per-GPU classes, integer milli-GB class
+        // sums, warm counts, and loading counts vs their brute-force
+        // rebuild (the historical full scan, demoted to oracle duty).
+        self.check_billing();
         // Keep-alive: the single armed sweep matches its marker exactly.
         let ka_events = self
             .events

@@ -128,6 +128,14 @@ pub struct EventQueue {
     slab: Vec<Entry>,
     free_head: u32,
     heads: [[u32; SLOTS]; LEVELS],
+    /// Slot-list tails: entries append here, so every slot list stays
+    /// **insertion-ordered** (arrival order at the slot — ascending seq
+    /// for direct pushes, `(t, seq)`-ascending for overflow promotions,
+    /// order-preserving under cascades). Expiring slots then sort with
+    /// an adaptive merge sort that sees the pre-sorted runs hot
+    /// same-tick slots produce — O(k) on the common monotone case,
+    /// instead of the old push-front + full `O(k log k)` re-sort.
+    tails: [[u32; SLOTS]; LEVELS],
     /// Per-level slot-occupancy bitmap (64 slots ⇒ one word per level).
     occupied: [u64; LEVELS],
     /// Far-future events: `(tick, seq) → slab index`.
@@ -147,6 +155,7 @@ impl Default for EventQueue {
             slab: Vec::new(),
             free_head: NIL,
             heads: [[NIL; SLOTS]; LEVELS],
+            tails: [[NIL; SLOTS]; LEVELS],
             occupied: [0; LEVELS],
             overflow: BTreeMap::new(),
             ready: Vec::new(),
@@ -307,17 +316,22 @@ impl EventQueue {
             let level = ((63 - masked.leading_zeros()) / LEVEL_BITS) as usize;
             let slot =
                 ((tick >> (LEVEL_BITS * level as u32)) & (SLOTS as u64 - 1)) as usize;
-            let head = self.heads[level][slot];
+            // Append at the tail: slot lists stay insertion-ordered
+            // (ascending seq), which is what the adaptive drain sort
+            // exploits — and what keeps cascades order-preserving.
+            let tail = self.tails[level][slot];
             {
                 let e = &mut self.slab[idx as usize];
-                e.prev = NIL;
-                e.next = head;
+                e.prev = tail;
+                e.next = NIL;
                 e.loc = Loc::Wheel { level: level as u8, slot: slot as u8 };
             }
-            if head != NIL {
-                self.slab[head as usize].prev = idx;
+            if tail != NIL {
+                self.slab[tail as usize].next = idx;
+            } else {
+                self.heads[level][slot] = idx;
             }
-            self.heads[level][slot] = idx;
+            self.tails[level][slot] = idx;
             self.occupied[level] |= 1u64 << slot;
         }
     }
@@ -354,6 +368,8 @@ impl EventQueue {
                 }
                 if next != NIL {
                     self.slab[next as usize].prev = prev;
+                } else {
+                    self.tails[level][slot] = prev;
                 }
                 if self.heads[level][slot] == NIL {
                     self.occupied[level] &= !(1u64 << slot);
@@ -403,13 +419,18 @@ impl EventQueue {
             let deadline = ((high << LEVEL_BITS) | slot as u64) << width;
             debug_assert!(deadline >= self.cur_tick, "wheel deadline went backwards");
             self.cur_tick = deadline;
-            // Detach the whole slot list.
+            // Detach the whole slot list (head → tail = insertion
+            // order, ascending seq).
             let mut idx = self.heads[level][slot as usize];
             self.heads[level][slot as usize] = NIL;
+            self.tails[level][slot as usize] = NIL;
             self.occupied[level] &= !(1u64 << slot);
             if level == 0 {
-                // Expire: sort the slot's entries by exact (t, seq),
-                // descending, into the (empty) ready buffer.
+                // Expire: merge-sort the slot's entries by exact
+                // (t, seq) into the (empty) ready buffer. The stable
+                // sort is adaptive: an insertion-ordered hot slot whose
+                // times arrived monotone (the common same-tick case) is
+                // one pre-sorted run — O(k), no re-sort.
                 let mut items = Vec::new();
                 while idx != NIL {
                     let next = self.slab[idx as usize].next;
@@ -421,14 +442,18 @@ impl EventQueue {
                     idx = next;
                 }
                 let slab = &self.slab;
-                items.sort_unstable_by(|&a, &b| {
+                items.sort_by(|&a, &b| {
                     let (ea, eb) = (&slab[a as usize], &slab[b as usize]);
-                    eb.t.total_cmp(&ea.t).then(eb.seq.cmp(&ea.seq))
+                    ea.t.total_cmp(&eb.t).then(ea.seq.cmp(&eb.seq))
                 });
+                // `ready` pops from the back: reverse into descending.
+                items.reverse();
                 self.ready = items;
             } else {
                 // Cascade: re-file each entry at a finer level (or into
                 // ready, when its tick equals the new current tick).
+                // Walking head→tail and appending keeps every target
+                // slot insertion-ordered too.
                 while idx != NIL {
                     let next = self.slab[idx as usize].next;
                     let e = &mut self.slab[idx as usize];
@@ -536,6 +561,10 @@ impl EventQueue {
                     idx = e.next;
                     linked += 1;
                 }
+                assert_eq!(
+                    self.tails[level][slot], prev,
+                    "tail pointer broken at level {level} slot {slot}"
+                );
             }
         }
         assert_eq!(linked, wheel_count, "slot lists disagree with slab locations");
@@ -725,6 +754,37 @@ mod tests {
         let mut fired_sorted = fired.clone();
         fired_sorted.sort_unstable();
         assert_eq!(fired_sorted, keep_sorted, "a live event was lost");
+    }
+
+    #[test]
+    fn hot_same_tick_slot_drains_in_exact_order() {
+        // Many events inside one 1 ms tick, pushed as a monotone run,
+        // then a burst of exact ties, then a reversed run: the
+        // insertion-ordered slot must still pop ascending (t, seq) —
+        // the adaptive merge-sort drain cannot change the contract.
+        let mut q = EventQueue::new();
+        q.push(5.0, EventKind::KeepaliveCheck); // park the wheel mid-range
+        let base = 7.0;
+        let mut expect: Vec<(f64, usize)> = Vec::new();
+        for i in 0..200usize {
+            let off = match i {
+                0..=79 => i as f64 * 1e-6,
+                80..=139 => 40e-6,
+                _ => (260 - i) as f64 * 1e-6,
+            };
+            q.push(base + off, EventKind::Arrival(i));
+            expect.push((base + off, i));
+        }
+        q.check_invariants();
+        assert_eq!(q.pop().unwrap().kind, EventKind::KeepaliveCheck);
+        // Ascending time, insertion order among exact ties.
+        expect.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for &(t, i) in &expect {
+            let e = q.pop().unwrap();
+            assert_eq!(e.t.to_bits(), t.to_bits());
+            assert_eq!(e.kind, EventKind::Arrival(i));
+        }
+        assert!(q.pop().is_none());
     }
 
     #[test]

@@ -132,17 +132,10 @@ pub fn fleet_workload(n_fns: usize, duration_s: f64, seed: u64) -> Workload {
     scaled_workload(Pattern::Normal, duration_s, scale, seed)
 }
 
-/// Zipf-skewed fleet workload (Azure-style head-heavy popularity): one
-/// aggregate Poisson arrival stream at the same total offered load as
-/// [`fleet_workload`], with each arrival's function drawn rank-wise from
-/// `Zipf(skew)` via the precomputed CDF (function 0 is the hottest).
-/// This is the regime that stresses keep-alive and preload policies the
-/// way production traces do: the head stays permanently warm while the
-/// long tail almost always cold-starts — `fleet --skew S` on the CLI.
-pub fn zipf_fleet_workload(n_fns: usize, duration_s: f64, skew: f64, seed: u64) -> Workload {
-    let scale = n_fns.div_ceil(8).max(1);
-    let n = scale * 8;
-    let mut functions = Vec::with_capacity(n);
+/// The fleet deployment shape shared by the Zipf generators: `scale` ×
+/// the 8-function base deployment (4× 7B, 4× 13B), ids dense from 0.
+fn fleet_functions(scale: usize) -> Vec<FunctionSpec> {
+    let mut functions = Vec::with_capacity(scale * 8);
     for s in 0..scale {
         for i in 0..4 {
             functions.push(FunctionSpec::new(s * 8 + i, ModelProfile::llama2_7b(), i));
@@ -151,10 +144,39 @@ pub fn zipf_fleet_workload(n_fns: usize, duration_s: f64, skew: f64, seed: u64) 
             functions.push(FunctionSpec::new(s * 8 + 4 + i, ModelProfile::llama2_13b(), i));
         }
     }
-    // Same total offered load as the uniform-tiers fleet, so skewed and
-    // unskewed sweeps are comparable point-for-point.
+    functions
+}
+
+/// Ranks `0..head_count(n)` are the Zipf head (the hottest eighth of the
+/// deployment, at least one function) for the CoV-classed generator.
+pub fn zipf_head_count(n_fns: usize) -> usize {
+    (n_fns / 8).max(1)
+}
+
+/// Shared Zipf preamble: the deployment, the per-rank expected rates at
+/// the uniform fleet's total offered load, the sampling CDF, and that
+/// total rate. Both Zipf generators build from this, so their offered
+/// loads stay comparable point-for-point by construction.
+fn zipf_fleet_base(n_fns: usize, skew: f64) -> (Vec<FunctionSpec>, Vec<f64>, ZipfCdf, f64) {
+    let scale = n_fns.div_ceil(8).max(1);
+    let n = scale * 8;
+    let functions = fleet_functions(scale);
     let total_rate: f64 = (0..n).map(|i| RATE_TIERS[i % RATE_TIERS.len()]).sum();
     let zipf = ZipfCdf::new(n, skew);
+    // Expected per-function rates (pre-loading benefit inputs, §4.1).
+    let rates: Vec<f64> = (0..n).map(|r| total_rate * zipf.pmf(r)).collect();
+    (functions, rates, zipf, total_rate)
+}
+
+/// Zipf-skewed fleet workload (Azure-style head-heavy popularity): one
+/// aggregate Poisson arrival stream at the same total offered load as
+/// [`fleet_workload`], with each arrival's function drawn rank-wise from
+/// `Zipf(skew)` via the precomputed CDF (function 0 is the hottest).
+/// This is the regime that stresses keep-alive and preload policies the
+/// way production traces do: the head stays permanently warm while the
+/// long tail almost always cold-starts — `fleet --skew S` on the CLI.
+pub fn zipf_fleet_workload(n_fns: usize, duration_s: f64, skew: f64, seed: u64) -> Workload {
+    let (functions, rates, zipf, total_rate) = zipf_fleet_base(n_fns, skew);
     let mut rng = Pcg64::with_stream(seed, 0x21bf);
     let mut requests = Vec::new();
     let (mut t, mut id) = (0.0, 0u64);
@@ -172,9 +194,37 @@ pub fn zipf_fleet_workload(n_fns: usize, duration_s: f64, skew: f64, seed: u64) 
             output_tokens: GsmLengths::output(&mut rng),
         });
     }
-    // Expected per-function rates (pre-loading benefit inputs, §4.1).
-    let rates: Vec<f64> = (0..n).map(|r| total_rate * zipf.pmf(r)).collect();
     Workload { functions, requests, duration_s, rates }
+}
+
+/// Zipf-skewed fleet workload with **CoV-classed burstiness**: the same
+/// Zipf(skew) per-function offered load as [`zipf_fleet_workload`], but
+/// each function draws its own renewal stream from the paper's
+/// CoV-classed `TraceSpec` generators — the head (hottest eighth of
+/// ranks, [`zipf_head_count`]) under `head`, the tail under `tail`.
+/// Azure's LLM traces show hot functions are *also* the burstiest; the
+/// aggregate-Poisson generator cannot express that (every function
+/// inherits CoV ≈ 1), this one can — `fleet --skew S --cov-head H
+/// --cov-tail T` on the CLI.
+pub fn zipf_fleet_workload_cov(
+    n_fns: usize,
+    duration_s: f64,
+    skew: f64,
+    seed: u64,
+    head: Pattern,
+    tail: Pattern,
+) -> Workload {
+    let (functions, rates, _, _) = zipf_fleet_base(n_fns, skew);
+    let head_n = zipf_head_count(functions.len());
+    let traces: Vec<Vec<Request>> = functions
+        .iter()
+        .map(|f| {
+            let pattern = if f.id < head_n { head } else { tail };
+            TraceSpec::new(f.id, pattern, rates[f.id], seed + 31 * f.id as u64)
+                .generate(duration_s)
+        })
+        .collect();
+    Workload { functions, requests: merge(traces), duration_s, rates }
 }
 
 #[cfg(test)]
@@ -240,6 +290,59 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), w.requests.len());
+    }
+
+    #[test]
+    fn zipf_cov_head_and_tail_carry_their_classes() {
+        use crate::trace::stream_cov;
+        let w = zipf_fleet_workload_cov(
+            16,
+            4.0 * 3600.0,
+            1.1,
+            7,
+            Pattern::Bursty,
+            Pattern::Predictable,
+        );
+        assert_eq!(w.functions.len(), 16);
+        assert_eq!(zipf_head_count(16), 2);
+        // Offered load matches the uniform fleet exactly (comparable
+        // point-for-point with the unclassed sweep).
+        let total: f64 = w.rates.iter().sum();
+        let uniform_total: f64 = (0..16).map(|i| RATE_TIERS[i % 4]).sum();
+        assert!((total - uniform_total).abs() < 1e-9);
+        // Head rank 0 is bursty, tail rank 2 predictable — the realized
+        // streams must separate cleanly by inter-arrival CoV.
+        let per_fn = |f: usize| -> Vec<crate::trace::Request> {
+            w.requests.iter().filter(|r| r.function == f).cloned().collect()
+        };
+        let head = per_fn(0);
+        let tail = per_fn(2);
+        assert!(head.len() > 100, "head too sparse: {}", head.len());
+        assert!(tail.len() > 100, "tail too sparse: {}", tail.len());
+        let head_cov = stream_cov(&head);
+        let tail_cov = stream_cov(&tail);
+        assert!(head_cov > 2.0, "head cov {head_cov} not bursty");
+        assert!(tail_cov < 1.5, "tail cov {tail_cov} not predictable");
+        assert!(head_cov > 2.5 * tail_cov, "classes did not separate");
+        // Merged stream stays sorted with unique ids.
+        for p in w.requests.windows(2) {
+            assert!(p[1].arrival_s >= p[0].arrival_s);
+        }
+        let mut ids: Vec<u64> = w.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), w.requests.len());
+    }
+
+    #[test]
+    fn zipf_cov_workload_deterministic() {
+        let a = zipf_fleet_workload_cov(16, 600.0, 1.1, 3, Pattern::Bursty, Pattern::Normal);
+        let b = zipf_fleet_workload_cov(16, 600.0, 1.1, 3, Pattern::Bursty, Pattern::Normal);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.function, y.function);
+        }
     }
 
     #[test]

@@ -48,6 +48,19 @@ impl Pattern {
             Pattern::Bursty => (4.0, f64::INFINITY),
         }
     }
+
+    /// Classify a target inter-arrival CoV into its pattern class — the
+    /// paper's Fig. 5 rule, used by `fleet --cov-head/--cov-tail` to map
+    /// a numeric CoV onto a generator class.
+    pub fn for_cov(cov: f64) -> Pattern {
+        if cov <= 1.0 {
+            Pattern::Predictable
+        } else if cov <= 4.0 {
+            Pattern::Normal
+        } else {
+            Pattern::Bursty
+        }
+    }
 }
 
 /// One inference request.
@@ -240,6 +253,17 @@ mod tests {
             }
             assert!(reqs.iter().all(|r| r.arrival_s < 4.0 * 3600.0));
         }
+    }
+
+    #[test]
+    fn for_cov_matches_bands() {
+        for p in Pattern::ALL {
+            let (lo, hi) = p.cov_band();
+            let probe = if hi.is_finite() { (lo + hi) / 2.0 } else { lo + 3.0 };
+            assert_eq!(Pattern::for_cov(probe), p);
+        }
+        assert_eq!(Pattern::for_cov(1.0), Pattern::Predictable); // boundary
+        assert_eq!(Pattern::for_cov(4.0), Pattern::Normal);
     }
 
     #[test]
