@@ -1,49 +1,59 @@
 //! §6.6 ablation study: Fig. 10b (cost-effectiveness of each variant) and
 //! Table 3 (TTFT / E2E / monetary cost, including the NAB #1–#3 fixed
-//! batching strategies and the Predictive-LoRA pre-loading plug-in).
+//! batching strategies and the Predictive-LoRA pre-loading plug-in) —
+//! a `ScenarioSpec` grid through `scenario::run_grid`.
 
-use crate::cluster::Cluster;
 use crate::cost::cost_effectiveness;
-use crate::sim::workloads::paper_workload;
-use crate::sim::{Engine, SystemConfig};
+use crate::scenario::{ClusterSpec, ScenarioSpec, WorkloadSpec};
 use crate::trace::Pattern;
 use crate::util::table::{f, ms, Table};
 
-/// The ablation runs on a TIGHT cluster (4 GPUs for 8 functions): the
-/// paper's §6.6 setting where pre-loaded artifacts and KV demand actually
-/// contend, so Dynamic Offloading and batching policy have bite.
-fn tight_run(
-    cfg: SystemConfig,
-    w: crate::sim::Workload,
-) -> (crate::metrics::RunMetrics, crate::cost::CostTracker) {
-    let (m, c, _) = Engine::new(cfg, Cluster::new(1, 4, 8), w, 1).run();
-    (m, c)
-}
+/// The §6.6 variant set, full system first (the baseline row). The
+/// ablation runs on a TIGHT cluster (4 GPUs for 8 functions): the
+/// paper's §6.6 setting where pre-loaded artifacts and KV demand
+/// actually contend, so Dynamic Offloading and batching policy have
+/// bite.
+pub const VARIANT_IDS: [&str; 8] = [
+    "serverless-lora",
+    "predictive",
+    "nbs",
+    "npl",
+    "ndo",
+    "nab1",
+    "nab2",
+    "nab3",
+];
 
-pub fn variants() -> Vec<SystemConfig> {
-    vec![
-        SystemConfig::serverless_lora(),
-        SystemConfig::predictive(),
-        SystemConfig::nbs(),
-        SystemConfig::npl(),
-        SystemConfig::ndo(),
-        SystemConfig::nab(1),
-        SystemConfig::nab(2),
-        SystemConfig::nab(3),
-    ]
-}
-
-/// One tight-cluster run per variant, fanned out over `--jobs` workers.
+/// One tight-cluster cell per variant, run as one scenario grid.
 fn variant_grid(
     quick: bool,
-) -> Vec<(&'static str, crate::metrics::RunMetrics, crate::cost::CostTracker)> {
+) -> Vec<(String, crate::metrics::RunMetrics, crate::cost::CostTracker)> {
     let dur = super::horizon(quick);
-    super::runner::parallel_map(variants(), move |cfg| {
-        let name = cfg.name;
-        let w = paper_workload(Pattern::Normal, dur, 11);
-        let (m, c) = tight_run(cfg, w);
-        (name, m, c)
-    })
+    let specs: Vec<ScenarioSpec> = VARIANT_IDS
+        .into_iter()
+        .map(|id| {
+            super::cell(
+                format!("ablation-{id}"),
+                id,
+                ClusterSpec::Uniform {
+                    nodes: 1,
+                    gpus_per_node: 4,
+                    containers_per_node: 8,
+                    trim_gpus: None,
+                },
+                WorkloadSpec::Paper { pattern: Pattern::Normal, seed: 11 },
+                dur,
+                1,
+            )
+        })
+        .collect();
+    super::run_cells(specs)
+        .into_iter()
+        .map(|r| {
+            let (system, run) = r.into_only();
+            (system, run.metrics, run.cost)
+        })
+        .collect()
 }
 
 pub fn fig10b(quick: bool) -> String {
@@ -53,12 +63,12 @@ pub fn fig10b(quick: bool) -> String {
     );
     let grid = variant_grid(quick);
     // The first variant IS the full system — its run doubles as baseline.
-    assert_eq!(grid[0].0, "ServerlessLoRA", "baseline must lead `variants`");
+    assert_eq!(grid[0].0, "ServerlessLoRA", "baseline must lead `VARIANT_IDS`");
     let (fm, fc) = (&grid[0].1, &grid[0].2);
     let base = cost_effectiveness(fm.e2e().mean, fc.total_usd());
     for (name, m, c) in &grid {
         let ce = cost_effectiveness(m.e2e().mean, c.total_usd());
-        t.row(vec![(*name).into(), f(ce / base)]);
+        t.row(vec![name.clone(), f(ce / base)]);
     }
     t.render()
 }
@@ -70,7 +80,7 @@ pub fn tab3(quick: bool) -> String {
     );
     for (name, m, c) in variant_grid(quick) {
         t.row(vec![
-            name.into(),
+            name,
             ms(m.ttft().mean),
             ms(m.e2e().mean),
             f(c.total_usd()),
@@ -82,6 +92,18 @@ pub fn tab3(quick: bool) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::Cluster;
+    use crate::sim::workloads::paper_workload;
+    use crate::sim::{Engine, SystemConfig};
+
+    /// The tight-cluster run the rendered grid uses, for ordering tests.
+    fn tight_run(
+        cfg: SystemConfig,
+        w: crate::sim::Workload,
+    ) -> (crate::metrics::RunMetrics, crate::cost::CostTracker) {
+        let (m, c, _) = Engine::new(cfg, Cluster::new(1, 4, 8), w, 1).run();
+        (m, c)
+    }
 
     fn measure(cfg: SystemConfig) -> (f64, f64, f64) {
         let w = paper_workload(Pattern::Normal, 1800.0, 3);

@@ -1,12 +1,12 @@
 //! Fig. 1 (motivation: time breakdown of LoRA invocations) and
 //! Fig. 8 (single-invocation cold-start breakdown + whole-workload
-//! cumulative breakdown).
+//! cumulative breakdown) — `ScenarioSpec` grids through
+//! `scenario::run_grid`.
 
-use crate::artifact::{FunctionSpec, ModelProfile};
+use crate::artifact::ModelProfile;
 use crate::metrics::Phase;
-use crate::sim::workloads::{paper_workload, single_invocation};
-use crate::sim::{SystemConfig, Workload};
-use crate::trace::{merge, Pattern, TraceSpec};
+use crate::scenario::{ClusterSpec, ScenarioSpec, SystemSpec, WorkloadSpec};
+use crate::trace::Pattern;
 use crate::util::table::{ms, Table};
 
 fn phase_row(m: &crate::metrics::RunMetrics, per_request: bool) -> Vec<String> {
@@ -23,42 +23,29 @@ fn header() -> Vec<&'static str> {
     h
 }
 
-/// Fig. 1 workload: three Llama2-13B LoRA functions on the Azure-like
-/// Normal trace.
-fn fig1_workload(duration_s: f64) -> Workload {
-    let functions: Vec<FunctionSpec> = (0..3)
-        .map(|i| FunctionSpec::new(i, ModelProfile::llama2_13b(), i))
-        .collect();
-    let rates = vec![1.0 / 120.0, 1.0 / 300.0, 1.0 / 600.0];
-    let traces = functions
-        .iter()
-        .map(|f| {
-            TraceSpec::new(f.id, Pattern::Normal, rates[f.id], 7 + f.id as u64)
-                .generate(duration_s)
-        })
-        .collect();
-    Workload { functions, requests: merge(traces), duration_s, rates }
-}
-
 pub fn fig1(quick: bool) -> String {
     let dur = super::horizon(quick);
     let mut t = Table::new(
         "Fig 1 — Mean per-request time breakdown (ms), 3× Llama2-13B LoRA fns",
         &header(),
     );
-    let systems = vec![
-        SystemConfig::instainfer(Pattern::Normal),
-        SystemConfig::serverless_llm(),
-        SystemConfig::serverless_lora(),
-    ];
-    let rows = super::runner::parallel_map(systems, move |cfg| {
-        let name = cfg.name;
-        let (m, _, _) = super::run_system(cfg, fig1_workload(dur), 1);
-        (name, m)
-    });
-    for (name, m) in rows {
-        let mut row = vec![name.to_string()];
-        row.extend(phase_row(&m, true));
+    let specs: Vec<ScenarioSpec> = ["instainfer", "serverless-llm", "serverless-lora"]
+        .into_iter()
+        .map(|id| {
+            super::cell(
+                format!("fig1-{id}"),
+                id,
+                ClusterSpec::Paper,
+                WorkloadSpec::Breakdown13b { seed: 7 },
+                dur,
+                1,
+            )
+        })
+        .collect();
+    for r in super::run_cells(specs) {
+        let (system, run) = r.into_only();
+        let mut row = vec![system];
+        row.extend(phase_row(&run.metrics, true));
         t.row(row);
     }
     t.render()
@@ -68,7 +55,9 @@ pub fn fig8(quick: bool) -> String {
     let mut out = String::new();
 
     // (a) single fully-pre-warmed invocation per model: best-case
-    // cold-start mitigation of each system.
+    // cold-start mitigation of each system. Best case per §6.3 means
+    // InstaInfer's predictor is pinned to a hit (`hit_rate` override);
+    // the paper cluster trivially gives the one function its own GPU.
     for model in [ModelProfile::llama2_7b(), ModelProfile::llama2_13b()] {
         let mut t = Table::new(
             &format!(
@@ -77,25 +66,38 @@ pub fn fig8(quick: bool) -> String {
             ),
             &header(),
         );
-        for cfg in [
-            // Best case per §6.3: each system fully pre-warmed by its own
-            // mitigation — InstaInfer's predictor is forced to a hit.
-            SystemConfig {
-                preload: crate::sim::PreloadMode::ContainerOpportunistic {
-                    hit_rate: 1.0,
-                },
-                ..SystemConfig::instainfer(Pattern::Normal)
-            },
-            SystemConfig::serverless_llm(),
-            SystemConfig::serverless_lora(),
-        ] {
-            let name = cfg.name;
-            let w = single_invocation(model.clone());
-            // Dedicated GPU per function (the §6.3 setup) — the paper
-            // cluster trivially satisfies this with one function.
-            let (m, _, _) = super::run_system(cfg, w, 1);
-            let mut row = vec![name.to_string()];
-            row.extend(phase_row(&m, true));
+        let workload = WorkloadSpec::SingleInvocation { model: model.name.to_string() };
+        let mut insta = SystemSpec::new("instainfer");
+        insta.hit_rate = Some(1.0);
+        let specs = vec![
+            ScenarioSpec::builder(&format!("fig8a-{}-instainfer", model.name))
+                .system_spec(insta)
+                .workload(workload.clone())
+                .horizon_s(30.0)
+                .seed(1)
+                .build()
+                .expect("fig8a cell validates"),
+            super::cell(
+                format!("fig8a-{}-serverless-llm", model.name),
+                "serverless-llm",
+                ClusterSpec::Paper,
+                workload.clone(),
+                30.0,
+                1,
+            ),
+            super::cell(
+                format!("fig8a-{}-serverless-lora", model.name),
+                "serverless-lora",
+                ClusterSpec::Paper,
+                workload,
+                30.0,
+                1,
+            ),
+        ];
+        for r in super::run_cells(specs) {
+            let (system, run) = r.into_only();
+            let mut row = vec![system];
+            row.extend(phase_row(&run.metrics, true));
             t.row(row);
         }
         out.push_str(&t.render());
@@ -107,19 +109,23 @@ pub fn fig8(quick: bool) -> String {
         "Fig 8b — Cumulative time breakdown (ms) over the Normal workload",
         &header(),
     );
-    let systems = vec![
-        SystemConfig::instainfer(Pattern::Normal),
-        SystemConfig::serverless_llm(),
-        SystemConfig::serverless_lora(),
-    ];
-    let rows = super::runner::parallel_map(systems, move |cfg| {
-        let name = cfg.name;
-        let (m, _, _) = super::run_system(cfg, paper_workload(Pattern::Normal, dur, 11), 1);
-        (name, m)
-    });
-    for (name, m) in rows {
-        let mut row = vec![name.to_string()];
-        row.extend(phase_row(&m, false));
+    let specs: Vec<ScenarioSpec> = ["instainfer", "serverless-llm", "serverless-lora"]
+        .into_iter()
+        .map(|id| {
+            super::cell(
+                format!("fig8b-{id}"),
+                id,
+                ClusterSpec::Paper,
+                WorkloadSpec::Paper { pattern: Pattern::Normal, seed: 11 },
+                dur,
+                1,
+            )
+        })
+        .collect();
+    for r in super::run_cells(specs) {
+        let (system, run) = r.into_only();
+        let mut row = vec![system];
+        row.extend(phase_row(&run.metrics, false));
         t.row(row);
     }
     out.push_str(&t.render());
@@ -129,6 +135,8 @@ pub fn fig8(quick: bool) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::workloads::{breakdown_13b_workload, single_invocation};
+    use crate::sim::SystemConfig;
 
     /// §2.3: artifact loading dominates cold-start time (>90% of startup)
     /// for non-preloading systems.
@@ -192,7 +200,7 @@ mod tests {
     /// smallest of the three serverless systems.
     #[test]
     fn fig1_cold_start_ordering() {
-        let w = fig1_workload(1800.0);
+        let w = breakdown_13b_workload(1800.0, 7);
         let cold = |cfg: SystemConfig| {
             let (m, _, _) = super::super::run_system(cfg, w.clone(), 1);
             m.outcomes.iter().map(|o| o.cold_start_s()).sum::<f64>()

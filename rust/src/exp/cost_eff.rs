@@ -1,84 +1,68 @@
 //! Fig. 2 (motivation: serverless vs serverful cost-effectiveness),
 //! Fig. 9 (cost-effectiveness vs all four baselines) and Table 1
-//! (E2E latency / cost / relative cost-effectiveness, 7B & 13B series).
+//! (E2E latency / cost / relative cost-effectiveness, 7B & 13B series)
+//! — `ScenarioSpec` grids through `scenario::run_grid`.
 
-use crate::artifact::{FunctionSpec, ModelProfile};
 use crate::cost::relative_cost_effectiveness;
-use crate::sim::workloads::{paper_workload, series_13b, series_7b, RATE_TIERS};
-use crate::sim::{SystemConfig, Workload};
-use crate::trace::{merge, Pattern, TraceSpec};
+use crate::scenario::{ClusterSpec, ScenarioSpec, WorkloadSpec};
+use crate::sim::workloads::{series_13b, series_7b};
+use crate::trace::Pattern;
 use crate::util::table::{f, ms, Table};
 
-fn all_systems(pattern: Pattern) -> Vec<SystemConfig> {
-    vec![
-        SystemConfig::vllm(),
-        SystemConfig::dlora(),
-        SystemConfig::instainfer(pattern),
-        SystemConfig::serverless_llm(),
-        SystemConfig::serverless_lora(),
-    ]
-}
+/// The five-system comparison, vLLM first (the figures normalise
+/// against row 0).
+const ALL_SYSTEM_IDS: [&str; 5] =
+    ["vllm", "dlora", "instainfer", "serverless-llm", "serverless-lora"];
 
-/// Run `systems` over per-task copies of the same deterministic workload
-/// in parallel, returning names + results in order. The first system must
-/// be the vLLM baseline — the figures normalise against row 0.
+/// Run `ids` over the same deterministic workload as one scenario grid,
+/// returning (system name, metrics, cost) in order. The first id must
+/// be the vLLM baseline.
 fn baseline_grid(
-    systems: Vec<SystemConfig>,
-    make_workload: impl Fn() -> Workload,
-) -> (
-    Vec<&'static str>,
-    Vec<(crate::metrics::RunMetrics, crate::cost::CostTracker, crate::sim::RunStats)>,
-) {
-    let tasks: Vec<(SystemConfig, Workload, u64)> = systems
-        .into_iter()
-        .map(|cfg| (cfg, make_workload(), 1))
-        .collect();
-    let names: Vec<&'static str> = tasks.iter().map(|(c, _, _)| c.name).collect();
-    assert_eq!(names[0], "vLLM", "baseline must lead the system list");
-    (names, super::run_systems(tasks))
-}
-
-/// Fig. 2a workload: ONE Llama2-7B function (general LLM serving) —
-/// serverless wins on pay-per-use. Fig. 2b: the SAME total demand split
-/// across four 7B LoRA functions — naive serverless loses its edge to
-/// backbone redundancy (4 idle backbones, 4× the cold starts).
-fn small_workload(n_fns: usize, duration_s: f64) -> Workload {
-    let functions: Vec<FunctionSpec> = (0..n_fns)
-        .map(|i| FunctionSpec::new(i, ModelProfile::llama2_7b(), i))
-        .collect();
-    let total = RATE_TIERS[0];
-    let rates: Vec<f64> = (0..n_fns).map(|_| total / n_fns as f64).collect();
-    let traces = functions
+    tag: &str,
+    ids: &[&str],
+    workload: WorkloadSpec,
+    dur: f64,
+) -> Vec<(String, crate::metrics::RunMetrics, crate::cost::CostTracker)> {
+    assert_eq!(ids[0], "vllm", "baseline must lead the system list");
+    let specs: Vec<ScenarioSpec> = ids
         .iter()
-        .map(|fx| {
-            TraceSpec::new(fx.id, Pattern::Normal, rates[fx.id], 5 + fx.id as u64)
-                .generate(duration_s)
+        .map(|id| {
+            super::cell(format!("{tag}-{id}"), id, ClusterSpec::Paper, workload.clone(), dur, 1)
         })
         .collect();
-    Workload { functions, requests: merge(traces), duration_s, rates }
+    super::run_cells(specs)
+        .into_iter()
+        .map(|r| {
+            let (system, run) = r.into_only();
+            (system, run.metrics, run.cost)
+        })
+        .collect()
 }
 
 pub fn fig2(quick: bool) -> String {
     let dur = super::horizon(quick);
     let mut out = String::new();
     for (n_fns, label) in [(1, "a: one Llama2-7B LLM"), (4, "b: four Llama2-7B LoRA fns")] {
-        let systems = vec![
-            SystemConfig::vllm(),
-            SystemConfig::dlora(),
-            SystemConfig::serverless_llm(),
-            SystemConfig::instainfer(Pattern::Normal),
-            SystemConfig::serverless_lora(),
-        ];
-        let (names, results) = baseline_grid(systems, || small_workload(n_fns, dur));
+        // Fig. 2a: ONE 7B function (general LLM serving) — serverless
+        // wins on pay-per-use. Fig. 2b: the SAME demand split across
+        // four LoRA functions — naive serverless loses its edge to
+        // backbone redundancy (4 idle backbones, 4× the cold starts).
+        let ids = ["vllm", "dlora", "serverless-llm", "instainfer", "serverless-lora"];
+        let results = baseline_grid(
+            &format!("fig2{}", if n_fns == 1 { 'a' } else { 'b' }),
+            &ids,
+            WorkloadSpec::SmallMulti { n_fns, seed: 5 },
+            dur,
+        );
         // vLLM is the first row: its run doubles as the baseline.
-        let (base_e2e, base_cost) = (results[0].0.e2e().mean, results[0].1.total_usd());
+        let (base_e2e, base_cost) = (results[0].1.e2e().mean, results[0].2.total_usd());
         let mut t = Table::new(
             &format!("Fig 2{label} — cost-effectiveness (vLLM = 1)"),
             &["system", "E2E(ms)", "cost($)", "rel-cost-eff"],
         );
-        for (name, (m, c, _)) in names.into_iter().zip(&results) {
+        for (name, m, c) in &results {
             t.row(vec![
-                name.into(),
+                name.clone(),
                 ms(m.e2e().mean),
                 f(c.total_usd()),
                 f(relative_cost_effectiveness(
@@ -101,14 +85,18 @@ pub fn fig9(quick: bool) -> String {
         &["pattern", "system", "E2E(ms)", "cost($)", "rel-cost-eff"],
     );
     for pattern in Pattern::ALL {
-        let (names, results) =
-            baseline_grid(all_systems(pattern), || paper_workload(pattern, dur, 11));
-        // vLLM leads `all_systems`: its run doubles as the baseline.
-        let (base_e2e, base_cost) = (results[0].0.e2e().mean, results[0].1.total_usd());
-        for (name, (m, c, _)) in names.into_iter().zip(&results) {
+        let results = baseline_grid(
+            &format!("fig9-{}", pattern.name()),
+            &ALL_SYSTEM_IDS,
+            WorkloadSpec::Paper { pattern, seed: 11 },
+            dur,
+        );
+        // vLLM leads the id list: its run doubles as the baseline.
+        let (base_e2e, base_cost) = (results[0].1.e2e().mean, results[0].2.total_usd());
+        for (name, m, c) in &results {
             t.row(vec![
                 pattern.name().into(),
-                name.into(),
+                name.clone(),
                 ms(m.e2e().mean),
                 f(c.total_usd()),
                 f(relative_cost_effectiveness(
@@ -132,18 +120,22 @@ pub fn tab1(quick: bool) -> String {
     );
     for pattern in Pattern::ALL {
         let dur = super::horizon(quick);
-        let (names, results) =
-            baseline_grid(all_systems(pattern), || paper_workload(pattern, dur, 11));
-        // vLLM baseline per series (first row of `all_systems`).
-        let vm = &results[0].0;
+        let results = baseline_grid(
+            &format!("tab1-{}", pattern.name()),
+            &ALL_SYSTEM_IDS,
+            WorkloadSpec::Paper { pattern, seed: 11 },
+            dur,
+        );
+        // vLLM baseline per series (first row of the id list).
+        let vm = &results[0].1;
         let (v7, v13) = (vm.subset(&series_7b()), vm.subset(&series_13b()));
-        let (vc7, vc13) = split_cost(vm, results[0].1.total_usd());
-        for (name, (m, c, _)) in names.into_iter().zip(&results) {
+        let (vc7, vc13) = split_cost(vm, results[0].2.total_usd());
+        for (name, m, c) in &results {
             let (m7, m13) = (m.subset(&series_7b()), m.subset(&series_13b()));
             let (c7, c13) = split_cost(m, c.total_usd());
             t.row(vec![
                 pattern.name().into(),
-                name.into(),
+                name.clone(),
                 format!("{} ({})", ms(m7.e2e().mean), ms(m13.e2e().mean)),
                 format!("{} ({})", f(c7), f(c13)),
                 format!(
@@ -180,12 +172,14 @@ fn split_cost(m: &crate::metrics::RunMetrics, total: f64) -> (f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::workloads::{paper_workload, small_multi_workload};
+    use crate::sim::SystemConfig;
 
     /// Fig. 2a: for ONE general LLM, serverless beats serverful
     /// cost-effectiveness (pay-per-use vs idle GPUs).
     #[test]
     fn fig2a_serverless_wins_single_llm() {
-        let w = small_workload(1, 3600.0);
+        let w = small_multi_workload(1, 3600.0, 5);
         let (vm, vc, _) = super::super::run_system(SystemConfig::vllm(), w.clone(), 1);
         let (sm, sc, _) =
             super::super::run_system(SystemConfig::serverless_llm(), w, 1);
@@ -208,7 +202,7 @@ mod tests {
     /// assert the normalisation-free ordering instead (see EXPERIMENTS.md).
     #[test]
     fn fig2b_sharing_beats_naive_serverless_on_multi_lora() {
-        let w4 = small_workload(4, 3600.0);
+        let w4 = small_multi_workload(4, 3600.0, 5);
         let (vm, vc, _) = super::super::run_system(SystemConfig::vllm(), w4.clone(), 1);
         let rel = |cfg: SystemConfig| {
             let (m, c, _) = super::super::run_system(cfg, w4.clone(), 1);

@@ -2,38 +2,52 @@
 //! SLO violation) across Predictable / Normal / Bursty workloads for the
 //! serverless systems (plus the Predictive-LoRA policy plug-in).
 //!
-//! Each figure's (pattern × system) grid is independent, so the runs fan
-//! out through `exp::runner` and the rows render in grid order.
+//! Each figure's (pattern × system) grid is a `ScenarioSpec` grid run
+//! through `scenario::run_grid`, so the cells fan out across `--jobs`
+//! workers and render in grid order.
 
 use crate::metrics::RunMetrics;
-use crate::sim::workloads::{paper_workload, series_13b, series_7b};
-use crate::sim::SystemConfig;
+use crate::scenario::{ClusterSpec, WorkloadSpec};
+use crate::sim::workloads::{series_13b, series_7b};
 use crate::trace::Pattern;
 use crate::util::table::{f, ms, Table};
 
-fn serverless_systems(pattern: Pattern) -> Vec<SystemConfig> {
-    vec![
-        SystemConfig::serverless_lora(),
-        SystemConfig::predictive(),
-        SystemConfig::serverless_llm(),
-        SystemConfig::instainfer(pattern),
-    ]
-}
+/// The serverless contenders, by scenario system id (InstaInfer's
+/// predictor hit rate resolves from each cell's workload pattern).
+const SERVERLESS_IDS: [&str; 4] =
+    ["serverless-lora", "predictive", "serverless-llm", "instainfer"];
 
-/// Run the (pattern × serverless system) grid for one horizon, in
-/// parallel, returning `(pattern, system name, metrics)` in grid order.
-fn pattern_grid(quick: bool) -> Vec<(Pattern, &'static str, RunMetrics)> {
+/// Run the (pattern × serverless system) grid for one horizon as one
+/// scenario grid, returning `(pattern, system name, metrics)` in grid
+/// order.
+fn pattern_grid(quick: bool) -> Vec<(Pattern, String, RunMetrics)> {
     let dur = super::horizon(quick);
-    let tasks: Vec<(Pattern, SystemConfig)> = Pattern::ALL
+    let keyed: Vec<(Pattern, crate::scenario::ScenarioSpec)> = Pattern::ALL
         .iter()
-        .flat_map(|&p| serverless_systems(p).into_iter().map(move |cfg| (p, cfg)))
+        .flat_map(|&p| {
+            SERVERLESS_IDS.into_iter().map(move |id| {
+                let spec = super::cell(
+                    format!("latency-{}-{id}", p.name()),
+                    id,
+                    ClusterSpec::Paper,
+                    WorkloadSpec::Paper { pattern: p, seed: 11 },
+                    dur,
+                    1,
+                );
+                (p, spec)
+            })
+        })
         .collect();
-    super::runner::parallel_map(tasks, |(p, cfg)| {
-        let name = cfg.name;
-        let w = paper_workload(p, dur, 11);
-        let (m, _, _) = super::run_system(cfg, w, 1);
-        (p, name, m)
-    })
+    let (patterns, specs): (Vec<_>, Vec<_>) = keyed.into_iter().unzip();
+    let reports = super::run_cells(specs);
+    patterns
+        .into_iter()
+        .zip(reports)
+        .map(|(p, r)| {
+            let (system, run) = r.into_only();
+            (p, system, run.metrics)
+        })
+        .collect()
 }
 
 pub fn fig6(quick: bool) -> String {
@@ -91,7 +105,7 @@ pub fn fig12(quick: bool) -> String {
         for (pattern, name, m) in &grid {
             let cdf = m.ttft_cdf(&series, &thresholds);
             let viol = m.subset(&series).slo_violation_rate(|_| slo);
-            let mut row = vec![pattern.name().to_string(), (*name).into()];
+            let mut row = vec![pattern.name().to_string(), name.clone()];
             row.extend(cdf.iter().map(|c| format!("{:.2}", c)));
             row.push(f(viol * 100.0));
             t.row(row);
@@ -105,6 +119,7 @@ pub fn fig12(quick: bool) -> String {
 mod tests {
     use super::*;
     use crate::sim::workloads::paper_workload;
+    use crate::sim::SystemConfig;
 
     /// The headline claim behind Fig. 6: ServerlessLoRA's TTFT beats both
     /// serverless baselines on every pattern.

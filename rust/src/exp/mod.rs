@@ -2,6 +2,14 @@
 //! evaluation (§6). Each function regenerates the corresponding rows /
 //! series on the simulated testbed and returns them as rendered tables.
 //!
+//! Every engine-driven experiment builds a grid of
+//! [`crate::scenario::ScenarioSpec`] cells and runs it through
+//! `scenario::run_grid` — the same entry point the `run --scenario` CLI
+//! uses — so a table cell and a JSON-driven run are one code path.
+//! (`fig5` and `overhead` run no simulations — trace-generator stats and
+//! scheduler micro-benchmarks respectively — and stay outside the
+//! scenario surface.)
+//!
 //! Invoked by `cargo bench` (rust/benches/paper_eval.rs) and by the CLI
 //! (`serverless-lora simulate --exp <id>`). See DESIGN.md §4 for the
 //! experiment ↔ module index and EXPERIMENTS.md for recorded results.
@@ -20,6 +28,7 @@ pub mod traces;
 use crate::cluster::Cluster;
 use crate::cost::CostTracker;
 use crate::metrics::RunMetrics;
+use crate::scenario::{self, ClusterSpec, ScenarioReport, ScenarioSpec, WorkloadSpec};
 use crate::sim::{Engine, RunStats, SystemConfig, Workload};
 use crate::util::json::{num, obj, Json};
 
@@ -38,7 +47,8 @@ pub fn paper_cluster() -> Cluster {
     Cluster::paper_multinode()
 }
 
-/// Run one system over one workload on a fresh paper cluster.
+/// Run one system over one workload on a fresh paper cluster (unit-test
+/// shorthand; the table-rendering paths go through [`run_cells`]).
 pub fn run_system(
     cfg: SystemConfig,
     workload: Workload,
@@ -47,12 +57,31 @@ pub fn run_system(
     Engine::new(cfg, paper_cluster(), workload, seed).run()
 }
 
-/// Fan a grid of independent `(config, workload, seed)` runs out across
-/// the configured `--jobs` workers (order-preserving; see `runner`).
-pub fn run_systems(
-    tasks: Vec<(SystemConfig, Workload, u64)>,
-) -> Vec<(RunMetrics, CostTracker, RunStats)> {
-    runner::parallel_map(tasks, |(cfg, w, seed)| run_system(cfg, w, seed))
+/// Build one grid cell: a single-engine-seed `ScenarioSpec`. Experiment
+/// grids are static and valid by construction, so a validation failure
+/// here is a bug — it panics rather than propagating.
+pub fn cell(
+    name: String,
+    system: &str,
+    cluster: ClusterSpec,
+    workload: WorkloadSpec,
+    horizon_s: f64,
+    seed: u64,
+) -> ScenarioSpec {
+    ScenarioSpec::builder(&name)
+        .system(system)
+        .cluster(cluster)
+        .workload(workload)
+        .horizon_s(horizon_s)
+        .seed(seed)
+        .build()
+        .unwrap_or_else(|e| panic!("experiment cell '{name}' failed validation: {e}"))
+}
+
+/// Run a grid of experiment cells through the scenario entry point
+/// (order-preserving `--jobs` fan-out over every `(spec, seed)` pair).
+pub fn run_cells(specs: Vec<ScenarioSpec>) -> Vec<ScenarioReport> {
+    scenario::run_grid(&specs).expect("experiment-built scenarios validate")
 }
 
 /// Headline metrics for the machine-readable bench record

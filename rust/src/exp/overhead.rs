@@ -1,6 +1,10 @@
 //! §6.9 overhead: scheduler decision latency (paper: ~1 ms per scheduler,
 //! < 6 ms total under the heaviest load) and the backbone-sharing memory
 //! overhead (paper: 473 MB of per-process CUDA context vs 14–80 GB saved).
+//!
+//! (Wall-clock micro-benchmarks of the schedulers themselves — no
+//! simulator runs, so this experiment has no `ScenarioSpec` form; see
+//! `exp` module docs.)
 
 use std::time::Instant;
 

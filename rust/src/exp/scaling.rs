@@ -1,9 +1,8 @@
 //! §6.7 scalability: Fig. 11a strong scaling (fixed workload, more GPUs)
-//! and Fig. 11b weak scaling (workload and GPUs grow proportionally).
+//! and Fig. 11b weak scaling (workload and GPUs grow proportionally) —
+//! `ScenarioSpec` grids through `scenario::run_grid`.
 
-use crate::cluster::Cluster;
-use crate::sim::workloads::{paper_workload, scaled_workload};
-use crate::sim::{Engine, SystemConfig};
+use crate::scenario::{ClusterSpec, WorkloadSpec};
 use crate::trace::Pattern;
 use crate::util::table::{ms, Table};
 
@@ -16,31 +15,35 @@ pub fn fig11(quick: bool) -> String {
         "Fig 11a — Strong scaling (8 fns, fixed workload)",
         &["GPUs", "system", "E2E (ms)", "TTFT (ms)"],
     );
-    let strong_tasks: Vec<(usize, SystemConfig)> = [2usize, 4, 8, 16]
+    let keyed: Vec<(usize, crate::scenario::ScenarioSpec)> = [2usize, 4, 8, 16]
         .into_iter()
         .flat_map(|n_gpus| {
-            [
-                SystemConfig::serverless_lora(),
-                SystemConfig::serverless_llm(),
-                SystemConfig::instainfer(Pattern::Normal),
-            ]
-            .into_iter()
-            .map(move |cfg| (n_gpus, cfg))
+            ["serverless-lora", "serverless-llm", "instainfer"].into_iter().map(move |id| {
+                let spec = super::cell(
+                    format!("fig11a-{n_gpus}g-{id}"),
+                    id,
+                    ClusterSpec::Uniform {
+                        nodes: 1,
+                        gpus_per_node: n_gpus,
+                        containers_per_node: 2 * n_gpus,
+                        trim_gpus: None,
+                    },
+                    WorkloadSpec::Paper { pattern: Pattern::Normal, seed: 11 },
+                    dur,
+                    1,
+                );
+                (n_gpus, spec)
+            })
         })
         .collect();
-    let rows = super::runner::parallel_map(strong_tasks, move |(n_gpus, cfg)| {
-        let name = cfg.name;
-        let w = paper_workload(Pattern::Normal, dur, 11);
-        let cluster = Cluster::new(1, n_gpus, 2 * n_gpus);
-        let (m, _, _) = Engine::new(cfg, cluster, w, 1).run();
-        (n_gpus, name, m)
-    });
-    for (n_gpus, name, m) in rows {
+    let (gpus, specs): (Vec<_>, Vec<_>) = keyed.into_iter().unzip();
+    for (n_gpus, r) in gpus.into_iter().zip(super::run_cells(specs)) {
+        let (system, run) = r.into_only();
         t.row(vec![
             n_gpus.to_string(),
-            name.into(),
-            ms(m.e2e().mean),
-            ms(m.ttft().mean),
+            system,
+            ms(run.metrics.e2e().mean),
+            ms(run.metrics.ttft().mean),
         ]);
     }
     out.push_str(&t.render());
@@ -50,31 +53,36 @@ pub fn fig11(quick: bool) -> String {
         "Fig 11b — Weak scaling (workload ∝ GPUs)",
         &["scale", "GPUs", "fns", "system", "E2E (ms)"],
     );
-    let weak_tasks: Vec<(usize, SystemConfig)> = [1usize, 2, 4]
+    let keyed: Vec<(usize, crate::scenario::ScenarioSpec)> = [1usize, 2, 4]
         .into_iter()
         .flat_map(|scale| {
-            [
-                SystemConfig::serverless_lora(),
-                SystemConfig::instainfer(Pattern::Normal),
-            ]
-            .into_iter()
-            .map(move |cfg| (scale, cfg))
+            ["serverless-lora", "instainfer"].into_iter().map(move |id| {
+                let spec = super::cell(
+                    format!("fig11b-x{scale}-{id}"),
+                    id,
+                    ClusterSpec::Uniform {
+                        nodes: scale,
+                        gpus_per_node: 4,
+                        containers_per_node: 8,
+                        trim_gpus: None,
+                    },
+                    WorkloadSpec::Scaled { pattern: Pattern::Normal, scale, seed: 13 },
+                    dur,
+                    1,
+                );
+                (scale, spec)
+            })
         })
         .collect();
-    let rows = super::runner::parallel_map(weak_tasks, move |(scale, cfg)| {
-        let name = cfg.name;
-        let w = scaled_workload(Pattern::Normal, dur, scale, 13);
-        let cluster = Cluster::new(scale, 4, 8);
-        let (m, _, _) = Engine::new(cfg, cluster, w, 1).run();
-        (scale, name, m)
-    });
-    for (scale, name, m) in rows {
+    let (scales, specs): (Vec<_>, Vec<_>) = keyed.into_iter().unzip();
+    for (scale, r) in scales.into_iter().zip(super::run_cells(specs)) {
+        let (system, run) = r.into_only();
         t.row(vec![
             scale.to_string(),
             (scale * 4).to_string(),
             (scale * 8).to_string(),
-            name.into(),
-            ms(m.e2e().mean),
+            system,
+            ms(run.metrics.e2e().mean),
         ]);
     }
     out.push_str(&t.render());
@@ -84,6 +92,9 @@ pub fn fig11(quick: bool) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::Cluster;
+    use crate::sim::workloads::{paper_workload, scaled_workload};
+    use crate::sim::{Engine, SystemConfig};
 
     /// Fig. 11a: ServerlessLoRA converts added GPU memory into lower (or
     /// equal) latency, and outperforms baselines at every cluster size.

@@ -1,31 +1,37 @@
 //! §6.5 throughput: Table 2 (peak token/request throughput + peak batch)
-//! and Fig. 10a (completion time at max batch under contention).
+//! and Fig. 10a (completion time at max batch under contention) —
+//! `ScenarioSpec` grids through `scenario::run_grid`.
 //!
 //! Setup per the paper: four Llama2-7B LoRA functions on TWO GPUs (each
 //! GPU can hold two full 7B models *or* one shared backbone + KV room).
 
-use crate::cluster::Cluster;
-use crate::sim::workloads::throughput_workload;
-use crate::sim::{Engine, SystemConfig};
-use crate::trace::Pattern;
+use crate::scenario::{ClusterSpec, ScenarioSpec, WorkloadSpec};
 use crate::util::table::{f, Table};
 
-fn two_gpu_cluster() -> Cluster {
-    Cluster::new(1, 2, 8)
-}
+/// The saturating contenders. The Throughput workload's stream is
+/// Predictable, so InstaInfer resolves to its best-case predictor.
+const SATURATING_IDS: [&str; 3] = ["serverless-lora", "serverless-llm", "instainfer"];
 
-fn run_throughput(cfg: SystemConfig, dur: f64) -> (f64, usize, f64) {
-    let w = throughput_workload(dur, 21);
-    let (m, _, _) = Engine::new(cfg, two_gpu_cluster(), w, 2).run();
-    (m.token_throughput(), m.peak_batch(), m.request_throughput())
-}
-
-fn saturating_systems() -> Vec<SystemConfig> {
-    vec![
-        SystemConfig::serverless_lora(),
-        SystemConfig::serverless_llm(),
-        SystemConfig::instainfer(Pattern::Predictable),
-    ]
+/// One cell per system on the 2-GPU cluster, shared by both tables.
+fn saturating_cells(tag: &str, dur: f64) -> Vec<ScenarioSpec> {
+    SATURATING_IDS
+        .into_iter()
+        .map(|id| {
+            super::cell(
+                format!("{tag}-{id}"),
+                id,
+                ClusterSpec::Uniform {
+                    nodes: 1,
+                    gpus_per_node: 2,
+                    containers_per_node: 8,
+                    trim_gpus: None,
+                },
+                WorkloadSpec::Throughput { seed: 21 },
+                dur,
+                2,
+            )
+        })
+        .collect()
 }
 
 pub fn tab2(quick: bool) -> String {
@@ -34,13 +40,15 @@ pub fn tab2(quick: bool) -> String {
         "Table 2 — Peak throughput, 4× Llama2-7B fns on 2 GPUs",
         &["system", "tokens/s", "peak batch", "requests/s"],
     );
-    let rows = super::runner::parallel_map(saturating_systems(), move |cfg| {
-        let name = cfg.name;
-        let (tok, batch, req) = run_throughput(cfg, dur);
-        (name, tok, batch, req)
-    });
-    for (name, tok, batch, req) in rows {
-        t.row(vec![name.into(), f(tok), batch.to_string(), f(req)]);
+    for r in super::run_cells(saturating_cells("tab2", dur)) {
+        let (system, run) = r.into_only();
+        let m = run.metrics;
+        t.row(vec![
+            system,
+            f(m.token_throughput()),
+            m.peak_batch().to_string(),
+            f(m.request_throughput()),
+        ]);
     }
     t.render()
 }
@@ -51,15 +59,11 @@ pub fn fig10a(quick: bool) -> String {
         "Fig 10a — Completion time at max batch (same saturating workload)",
         &["system", "mean E2E (s)", "p99 E2E (s)", "completed"],
     );
-    let rows = super::runner::parallel_map(saturating_systems(), move |cfg| {
-        let name = cfg.name;
-        let w = throughput_workload(dur, 21);
-        let (m, _, _) = Engine::new(cfg, two_gpu_cluster(), w, 2).run();
-        (name, m)
-    });
-    for (name, m) in rows {
+    for r in super::run_cells(saturating_cells("fig10a", dur)) {
+        let (system, run) = r.into_only();
+        let m = run.metrics;
         t.row(vec![
-            name.into(),
+            system,
             f(m.e2e().mean),
             f(m.e2e().p99),
             m.outcomes.len().to_string(),
@@ -71,6 +75,19 @@ pub fn fig10a(quick: bool) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::Cluster;
+    use crate::sim::workloads::throughput_workload;
+    use crate::sim::{Engine, SystemConfig};
+
+    fn two_gpu_cluster() -> Cluster {
+        Cluster::new(1, 2, 8)
+    }
+
+    fn run_throughput(cfg: SystemConfig, dur: f64) -> (f64, usize, f64) {
+        let w = throughput_workload(dur, 21);
+        let (m, _, _) = Engine::new(cfg, two_gpu_cluster(), w, 2).run();
+        (m.token_throughput(), m.peak_batch(), m.request_throughput())
+    }
 
     /// Table 2 headline: backbone sharing frees KV memory ⇒ larger peak
     /// batches and higher token/request throughput than both baselines.

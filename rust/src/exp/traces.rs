@@ -1,5 +1,8 @@
 //! Fig. 5 — the three arrival patterns: verify the generator lands each
 //! pattern in its CoV band and report the burstiness profile.
+//!
+//! (Generator statistics only — no engine runs, so this experiment has
+//! no `ScenarioSpec` form; see `exp` module docs.)
 
 use crate::trace::{stream_cov, Pattern, TraceSpec};
 use crate::util::table::{f, Table};

@@ -16,8 +16,14 @@
 //!   and serves the tiny-Llama model with genuinely shared backbone
 //!   buffers and isolated per-function state. Behind the `pjrt` feature
 //!   (needs the external `xla` crate).
+//! * `scenario` — the declarative scenario API: a typed `ScenarioSpec`
+//!   (system + overrides, cluster shape, workload, seeds, sinks) with
+//!   JSON round-trip, validated and executed by `scenario::run` /
+//!   `run_grid`. The experiment suites and the `run --scenario` CLI
+//!   share this single entry point.
 //! * `exp` — one entry per paper table/figure (the bench harness calls
-//!   these), plus the parallel experiment runner.
+//!   these), each building `ScenarioSpec` grids, plus the parallel
+//!   experiment runner.
 //!
 //! The policy layer (`coordinator::policy`) is the extension point: a new
 //! serving system is a policy bundle registered in `sim::config`, never
@@ -31,6 +37,7 @@ pub mod exp;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod sharing;
 pub mod sim;
 pub mod trace;

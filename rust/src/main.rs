@@ -5,6 +5,11 @@
 //!                                                  regenerate a paper table/figure
 //! serverless-lora simulate --all [--full] [--jobs N]
 //!                                                  regenerate everything
+//! serverless-lora run --scenario <file.json> [--dry-run] [--jobs N]
+//!                                                  run a declarative scenario file
+//!                                                  (one spec object or an array;
+//!                                                  --dry-run: validate + summarize
+//!                                                  without simulating)
 //! serverless-lora fleet [--full] [--skew S] [--cov-head H] [--cov-tail T] [--check]
 //!                                                  engine scaling sweep
 //!                                                  (alias: simulate --exp fleet;
@@ -17,15 +22,97 @@
 //! serverless-lora info [--model llama-tiny]        artifact/manifest inventory
 //! ```
 //!
+//! Unknown flags and malformed values (e.g. `--jobs four`) are rejected
+//! with exit code 2 — no silent fallbacks.
+//!
 //! (CLI is hand-rolled: `clap` is not vendored in this build environment.)
 
 use std::collections::BTreeMap;
 
 use serverless_lora::exp;
+use serverless_lora::scenario;
+use serverless_lora::util::json::Json;
 
 /// Flags that never take a value: their presence means "true", and the
 /// token after them is a positional argument, not their value.
-const BOOL_FLAGS: &[&str] = &["full", "all", "quick", "check"];
+const BOOL_FLAGS: &[&str] = &["full", "all", "quick", "check", "dry-run"];
+
+/// The flags each subcommand understands; anything else is rejected.
+fn known_flags(cmd: &str) -> Option<&'static [&'static str]> {
+    match cmd {
+        "simulate" => Some(&["exp", "all", "full", "quick", "jobs"]),
+        "run" => Some(&["scenario", "dry-run", "jobs"]),
+        "fleet" => Some(&["full", "quick", "skew", "cov-head", "cov-tail", "check", "jobs"]),
+        "serve" => Some(&["model", "requests", "batch"]),
+        "info" => Some(&["model"]),
+        _ => None,
+    }
+}
+
+/// Reject flags the subcommand does not declare (historically they were
+/// silently ignored — a typo like `--ful` ran the wrong mode).
+fn check_flags(
+    cmd: &str,
+    flags: &BTreeMap<String, String>,
+    allowed: &[&str],
+) -> Result<(), String> {
+    for k in flags.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(format!(
+                "unknown flag --{k} for '{cmd}' (valid: {})",
+                allowed
+                    .iter()
+                    .map(|a| format!("--{a}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Parse `--jobs`: a malformed value (e.g. `--jobs four`, `--jobs 0`)
+/// is an error, not a silent fallback to 1 worker.
+fn parse_jobs(flags: &BTreeMap<String, String>) -> Result<Option<usize>, String> {
+    let Some(v) = flags.get("jobs") else { return Ok(None) };
+    match v.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(Some(n)),
+        _ => Err(format!("--jobs needs a positive integer, got '{v}'")),
+    }
+}
+
+/// Parse a positive-count flag (`--requests`, `--batch`): absent →
+/// `default`, malformed → error (no silent fallback).
+fn parse_count(
+    flags: &BTreeMap<String, String>,
+    name: &str,
+    default: usize,
+) -> Result<usize, String> {
+    let Some(v) = flags.get(name) else { return Ok(default) };
+    match v.parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(format!("--{name} needs a positive integer, got '{v}'")),
+    }
+}
+
+/// Validate `--exp` against the registry (`--exp --all` used to bind
+/// `exp="true"` and run the unknown-experiment path).
+fn check_exp_id(id: &str) -> Result<(), String> {
+    if exp::ALL_EXPERIMENTS.contains(&id) {
+        Ok(())
+    } else {
+        Err(format!(
+            "unknown experiment '{id}'; valid ids: {}",
+            exp::ALL_EXPERIMENTS.join(", ")
+        ))
+    }
+}
+
+/// Usage-error exit: message to stderr, exit code 2.
+fn fail(msg: &str) -> ! {
+    eprintln!("{msg}");
+    std::process::exit(2)
+}
 
 /// Hand-rolled flag parser.
 ///
@@ -83,9 +170,14 @@ fn parse_flags(
 
 fn usage() -> ! {
     eprintln!(
-        "usage: serverless-lora <simulate|fleet|serve|info> [options]\n\
+        "usage: serverless-lora <simulate|run|fleet|serve|info> [options]\n\
          \n\
          simulate --exp <id>|--all [--full] [--jobs N]   ids: {}\n\
+         run      --scenario <file.json> [--dry-run] [--jobs N]\n\
+                  run a declarative scenario file (one JSON spec object or an\n\
+                  array of them; see examples/scenarios/ and DESIGN.md\n\
+                  \"Scenario API & observers\"; --dry-run validates and\n\
+                  summarizes without simulating)\n\
          fleet    [--full] [--skew S] [--cov-head H] [--cov-tail T] [--check]\n\
                   engine scaling sweep\n\
                   (--skew: Zipf(S) popularity; --cov-head/--cov-tail: inter-arrival\n\
@@ -101,23 +193,66 @@ fn usage() -> ! {
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (pos, flags) = parse_flags(&args, BOOL_FLAGS);
-    if let Some(jobs) = flags.get("jobs").and_then(|v| v.parse::<usize>().ok()) {
-        exp::runner::set_jobs(jobs);
+    let Some(cmd) = pos.first().map(String::as_str) else { usage() };
+    let Some(allowed) = known_flags(cmd) else { usage() };
+    if let Some(extra) = pos.get(1) {
+        fail(&format!("unexpected positional argument '{extra}' after '{cmd}'"));
     }
-    match pos.first().map(String::as_str) {
-        Some("simulate") => {
+    if let Err(e) = check_flags(cmd, &flags, allowed) {
+        fail(&e);
+    }
+    match parse_jobs(&flags) {
+        Ok(Some(jobs)) => exp::runner::set_jobs(jobs),
+        Ok(None) => {}
+        Err(e) => fail(&e),
+    }
+    match cmd {
+        "simulate" => {
             let quick = !flags.contains_key("full");
             if flags.contains_key("all") {
                 for id in exp::ALL_EXPERIMENTS {
                     print!("{}", exp::run_experiment(id, quick));
                 }
             } else if let Some(id) = flags.get("exp") {
+                if let Err(e) = check_exp_id(id) {
+                    fail(&e);
+                }
                 print!("{}", exp::run_experiment(id, quick));
             } else {
                 usage()
             }
         }
-        Some("fleet") => {
+        "run" => {
+            let Some(path) = flags.get("scenario") else {
+                fail("run needs --scenario <file.json>");
+            };
+            if path == "true" {
+                // `--scenario --dry-run` binds the boolean sentinel.
+                fail("--scenario needs a file path");
+            }
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| fail(&format!("cannot read scenario file '{path}': {e}")));
+            let json = Json::parse(&text)
+                .unwrap_or_else(|e| fail(&format!("{path}: invalid JSON: {e}")));
+            let specs = scenario::specs_from_json(&json)
+                .unwrap_or_else(|e| fail(&format!("{path}: {e}")));
+            for spec in &specs {
+                if let Err(e) = spec.validate() {
+                    fail(&format!("{path}: scenario '{}': {e}", spec.name));
+                }
+            }
+            if flags.contains_key("dry-run") {
+                for spec in &specs {
+                    println!("{}", spec.summary());
+                }
+                println!("{path}: {} scenario(s) valid", specs.len());
+            } else {
+                let reports = scenario::run_grid(&specs)
+                    .unwrap_or_else(|e| fail(&format!("{path}: {e}")));
+                print!("{}", scenario::render_reports(&reports));
+            }
+        }
+        "fleet" => {
             let quick = !flags.contains_key("full");
             if flags.contains_key("check") {
                 // CI regression guard: deterministic engine counters vs
@@ -170,27 +305,29 @@ fn main() -> anyhow::Result<()> {
                 print!("{}", exp::fleet::fleet_with(quick, skew, cov));
             }
         }
-        Some("serve") => {
+        "serve" => {
             let model = flags
                 .get("model")
                 .cloned()
                 .unwrap_or_else(|| "llama-tiny".into());
-            let n: usize = flags
-                .get("requests")
-                .and_then(|v| v.parse().ok())
-                .unwrap_or(16);
-            let batch: usize =
-                flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(4);
+            let n = match parse_count(&flags, "requests", 16) {
+                Ok(n) => n,
+                Err(e) => fail(&e),
+            };
+            let batch = match parse_count(&flags, "batch", 4) {
+                Ok(b) => b,
+                Err(e) => fail(&e),
+            };
             pjrt::serve_demo(&model, n, batch)?;
         }
-        Some("info") => {
+        "info" => {
             let model = flags
                 .get("model")
                 .cloned()
                 .unwrap_or_else(|| "llama-tiny".into());
             pjrt::info(&model)?;
         }
-        _ => usage(),
+        _ => unreachable!("known_flags gated the subcommand"),
     }
     Ok(())
 }
@@ -349,5 +486,71 @@ mod tests {
         assert_eq!(pos, vec!["simulate"]);
         assert_eq!(flags.get("exp").map(String::as_str), Some("fig6"));
         assert_eq!(flags.get("jobs").map(String::as_str), Some("4"));
+    }
+
+    // ------------------------------------------- strict validation
+
+    #[test]
+    fn jobs_rejects_garbage_instead_of_ignoring_it() {
+        // `--jobs four` used to fall through silently to 1 worker.
+        let (_, flags) = p(&["simulate", "--jobs", "four"]);
+        let err = parse_jobs(&flags).unwrap_err();
+        assert!(err.contains("four"), "{err}");
+        let (_, flags) = p(&["simulate", "--jobs", "0"]);
+        assert!(parse_jobs(&flags).is_err(), "0 workers is meaningless");
+        let (_, flags) = p(&["simulate", "--jobs", "-3"]);
+        assert!(parse_jobs(&flags).is_err());
+    }
+
+    #[test]
+    fn jobs_accepts_positive_integers_or_absence() {
+        let (_, flags) = p(&["simulate", "--jobs", "8"]);
+        assert_eq!(parse_jobs(&flags).unwrap(), Some(8));
+        let (_, flags) = p(&["simulate"]);
+        assert_eq!(parse_jobs(&flags).unwrap(), None);
+    }
+
+    #[test]
+    fn serve_counts_default_or_reject_never_fall_back() {
+        let (_, flags) = p(&["serve"]);
+        assert_eq!(parse_count(&flags, "requests", 16).unwrap(), 16);
+        let (_, flags) = p(&["serve", "--requests", "32"]);
+        assert_eq!(parse_count(&flags, "requests", 16).unwrap(), 32);
+        // `--requests ten` used to silently serve the default 16.
+        let (_, flags) = p(&["serve", "--requests", "ten"]);
+        let err = parse_count(&flags, "requests", 16).unwrap_err();
+        assert!(err.contains("ten"), "{err}");
+        let (_, flags) = p(&["serve", "--batch", "0"]);
+        assert!(parse_count(&flags, "batch", 4).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_and_valid_ones_listed() {
+        // `--ful` (a typo for --full) used to be silently accepted.
+        let (_, flags) = p(&["simulate", "--ful"]);
+        let err = check_flags("simulate", &flags, known_flags("simulate").unwrap())
+            .unwrap_err();
+        assert!(err.contains("--ful"), "{err}");
+        assert!(err.contains("--full"), "must list the valid flags: {err}");
+        let (_, flags) = p(&["simulate", "--all", "--jobs", "2"]);
+        assert!(check_flags("simulate", &flags, known_flags("simulate").unwrap()).is_ok());
+    }
+
+    #[test]
+    fn every_subcommand_declares_its_flags() {
+        for cmd in ["simulate", "run", "fleet", "serve", "info"] {
+            assert!(known_flags(cmd).is_some(), "{cmd}");
+        }
+        assert!(known_flags("simulat").is_none());
+    }
+
+    #[test]
+    fn exp_id_validated_against_registry() {
+        assert!(check_exp_id("fig6").is_ok());
+        // `--exp --all` binds exp="true"; the validator catches it and
+        // names the real ids.
+        let err = check_exp_id("true").unwrap_err();
+        assert!(err.contains("'true'"), "{err}");
+        assert!(err.contains("fig6") && err.contains("fleet"), "{err}");
     }
 }

@@ -118,11 +118,18 @@ pub struct RunStats {
     /// O(1) each, O(GPUs touched) per event. The aggregate-verification
     /// counter `fleet --check` bounds per event.
     pub bill_reclass: u64,
-    /// Wall-clock spent producing + pricing billing samples, measured
-    /// only when `Engine::set_bill_timing(true)` (the fleet bench);
-    /// zero otherwise. Nondeterministic — never rendered into report
-    /// tables, only into BENCH_sim.json.
-    pub bill_wall_s: f64,
+    /// Wall-clock spent in the per-sample billing path — producing the
+    /// aggregate sample, pricing it, and fanning it out to the opt-in
+    /// series sampler / attached observers — measured only when
+    /// `Engine::set_bill_timing(true)` (the fleet bench); zero
+    /// otherwise. Nondeterministic — never rendered into report tables,
+    /// only into BENCH_sim.json.
+    pub bill_sample_wall_s: f64,
+    /// Wall-clock spent in `Engine::reclassify_gpu` (billing-class
+    /// maintenance, including the end-of-event dirty drain), under the
+    /// same opt-in meter. Split from the sample meter so fleet profiles
+    /// can attribute drain cost separately from sampling cost.
+    pub bill_reclass_wall_s: f64,
 }
 
 /// Aggregated metrics for one run of one system.

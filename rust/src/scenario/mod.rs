@@ -1,0 +1,367 @@
+//! Declarative scenario API — **the** way to run the simulator.
+//!
+//! The paper's evaluation (§6) is a grid of (system × workload × cluster
+//! × seed) cells. A [`ScenarioSpec`] describes one cell declaratively
+//! (typed builder in Rust, JSON on disk — `serverless-lora run
+//! --scenario file.json`); [`run`] executes it and [`run_grid`] executes
+//! a whole grid, fanning every `(spec, seed)` pair out through the
+//! parallel experiment runner (`--jobs`) while preserving grid order.
+//! Every experiment suite in `exp/` builds its tables through this entry
+//! point, so a table cell and a JSON-driven CLI run are the *same* code
+//! path — bit-identical by construction.
+//!
+//! Output sinks are selected in the spec ([`SinkSpec`]): billing
+//! wall-clock metering and the opt-in per-billing-class time series
+//! (`sim::observe::BillSeriesSampler`), both off by default.
+
+pub mod spec;
+
+use std::time::Instant;
+
+pub use spec::{
+    BatchingOverride, ClusterSpec, ScenarioBuilder, ScenarioError, ScenarioSpec, SinkSpec,
+    SystemSpec, WorkloadSpec, SYSTEM_IDS,
+};
+
+use crate::cost::CostTracker;
+use crate::exp::runner;
+use crate::metrics::{RunMetrics, RunStats};
+use crate::sim::{BillSeries, Engine};
+use crate::trace::Pattern;
+use crate::util::json::Json;
+use crate::util::table::{f, ms, Table};
+
+/// One seed's complete result.
+pub struct SeedRun {
+    pub seed: u64,
+    /// Offered requests (the workload's trace length) — completions are
+    /// `metrics.outcomes.len()`.
+    pub requests: usize,
+    /// Wall-clock for engine construction + run (workload generation
+    /// excluded), measured inside the worker.
+    pub wall_s: f64,
+    pub metrics: RunMetrics,
+    pub cost: CostTracker,
+    pub stats: RunStats,
+    pub bill_series: Option<BillSeries>,
+}
+
+/// One scenario's results: one [`SeedRun`] per seed, in seed order.
+pub struct ScenarioReport {
+    pub name: String,
+    /// The resolved system's display name (e.g. "ServerlessLoRA-NPL").
+    pub system: String,
+    pub runs: Vec<SeedRun>,
+}
+
+impl ScenarioReport {
+    /// The single run of a one-seed scenario (panics otherwise — grid
+    /// code that fans one engine seed per cell uses this).
+    pub fn only(&self) -> &SeedRun {
+        assert_eq!(self.runs.len(), 1, "scenario '{}' has {} runs", self.name, self.runs.len());
+        &self.runs[0]
+    }
+
+    /// Owning variant of [`ScenarioReport::only`]: the system name and
+    /// the single run, asserting the report holds exactly one (a
+    /// `runs.pop()` would silently take the *last* seed of a
+    /// multi-seed cell instead of failing).
+    pub fn into_only(self) -> (String, SeedRun) {
+        assert_eq!(self.runs.len(), 1, "scenario '{}' has {} runs", self.name, self.runs.len());
+        let mut runs = self.runs;
+        (self.system, runs.pop().expect("length asserted above"))
+    }
+}
+
+/// Validate and run one scenario: every seed fans out through the
+/// parallel runner; results come back in seed order.
+pub fn run(spec: &ScenarioSpec) -> Result<ScenarioReport, ScenarioError> {
+    Ok(run_grid(std::slice::from_ref(spec))?.pop().expect("one spec, one report"))
+}
+
+/// Validate and run a grid of scenarios. All `(spec, seed)` pairs share
+/// one order-preserving parallel fan-out (`exp::runner`), so a 12-cell
+/// grid parallelizes exactly like the historical hand-wired experiment
+/// loops did.
+pub fn run_grid(specs: &[ScenarioSpec]) -> Result<Vec<ScenarioReport>, ScenarioError> {
+    for sp in specs {
+        sp.validate()?;
+    }
+    let tasks: Vec<(usize, u64)> = specs
+        .iter()
+        .enumerate()
+        .flat_map(|(i, sp)| sp.seeds.iter().map(move |&seed| (i, seed)))
+        .collect();
+    let runs = runner::parallel_map(tasks, |(i, seed)| (i, run_seed(&specs[i], seed)));
+    let mut reports: Vec<ScenarioReport> = specs
+        .iter()
+        .map(|sp| ScenarioReport {
+            name: sp.name.clone(),
+            system: sp.system_name(),
+            runs: Vec::new(),
+        })
+        .collect();
+    for (i, run) in runs {
+        reports[i].runs.push(run);
+    }
+    Ok(reports)
+}
+
+fn run_seed(sp: &ScenarioSpec, seed: u64) -> SeedRun {
+    let workload = sp.workload.materialize(sp.horizon_s);
+    let requests = workload.requests.len();
+    let cfg = sp
+        .system
+        .resolve(sp.workload.pattern().unwrap_or(Pattern::Normal))
+        .expect("specs are validated before running");
+    let cluster = sp.cluster.materialize();
+    let t0 = Instant::now();
+    let mut engine = Engine::new(cfg, cluster, workload, seed);
+    if sp.sinks.bill_timing {
+        engine.set_bill_timing(true);
+    }
+    if let Some(bucket_s) = sp.sinks.bill_series_bucket_s {
+        engine.enable_bill_series(bucket_s);
+    }
+    let out = engine.run_full();
+    SeedRun {
+        seed,
+        requests,
+        wall_s: t0.elapsed().as_secs_f64(),
+        metrics: out.metrics,
+        cost: out.cost,
+        stats: out.stats,
+        bill_series: out.bill_series,
+    }
+}
+
+/// Parse a scenario file's JSON: either one spec object or an array of
+/// them (a grid).
+pub fn specs_from_json(j: &Json) -> Result<Vec<ScenarioSpec>, ScenarioError> {
+    match j {
+        Json::Arr(xs) => {
+            if xs.is_empty() {
+                return Err(ScenarioError::Parse(
+                    "scenario file holds an empty array".to_string(),
+                ));
+            }
+            xs.iter().map(ScenarioSpec::from_json).collect()
+        }
+        Json::Obj(_) => Ok(vec![ScenarioSpec::from_json(j)?]),
+        _ => Err(ScenarioError::Parse(
+            "a scenario file must hold a JSON object or an array of them".to_string(),
+        )),
+    }
+}
+
+/// Render a grid's reports: one summary row per (scenario, seed), plus a
+/// per-class cost-trajectory table for every run that enabled the
+/// series sink.
+pub fn render_reports(reports: &[ScenarioReport]) -> String {
+    let mut t = Table::new(
+        "Scenario report",
+        &[
+            "scenario",
+            "system",
+            "seed",
+            "requests",
+            "completed",
+            "TTFT(ms)",
+            "TTFT-p99(ms)",
+            "E2E(ms)",
+            "cost($)",
+            "bill samples",
+        ],
+    );
+    for r in reports {
+        for run in &r.runs {
+            t.row(vec![
+                r.name.clone(),
+                r.system.clone(),
+                run.seed.to_string(),
+                run.requests.to_string(),
+                run.metrics.outcomes.len().to_string(),
+                ms(run.metrics.ttft().mean),
+                ms(run.metrics.ttft().p99),
+                ms(run.metrics.e2e().mean),
+                f(run.cost.total_usd()),
+                run.stats.bill_samples.to_string(),
+            ]);
+        }
+    }
+    let mut out = t.render();
+    for r in reports {
+        for run in &r.runs {
+            if let Some(series) = &run.bill_series {
+                out.push_str(&render_series(&r.name, run.seed, series));
+            }
+        }
+    }
+    out
+}
+
+fn render_series(name: &str, seed: u64, series: &BillSeries) -> String {
+    let mut t = Table::new(
+        &format!(
+            "Per-class cost trajectory — {name} (seed {seed}, {} s buckets)",
+            series.bucket_s
+        ),
+        &[
+            "t0(s)",
+            "active GB*s",
+            "loading GB*s",
+            "idle-warm GB*s",
+            "idle-cold GB*s",
+            "active GPU*s",
+            "idle-warm GPU*s",
+        ],
+    );
+    for (i, b) in series.buckets.iter().enumerate() {
+        t.row(vec![
+            format!("{}", i as f64 * series.bucket_s),
+            f(b.active_gb_s),
+            f(b.loading_gb_s),
+            f(b.idle_warm_gb_s),
+            f(b.idle_cold_gb_s),
+            f(b.active_gpu_s),
+            f(b.idle_warm_gpu_s),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SystemConfig;
+
+    fn quick_spec(name: &str, system: &str, seeds: Vec<u64>) -> ScenarioSpec {
+        ScenarioSpec::builder(name)
+            .system(system)
+            .cluster(ClusterSpec::Uniform {
+                nodes: 1,
+                gpus_per_node: 2,
+                containers_per_node: 4,
+                trim_gpus: None,
+            })
+            .workload(WorkloadSpec::Paper { pattern: Pattern::Bursty, seed: 9 })
+            .horizon_s(300.0)
+            .seeds(seeds)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn run_conserves_requests_and_orders_seeds() {
+        let spec = quick_spec("t", "serverless-lora", vec![1, 7, 23]);
+        let report = run(&spec).unwrap();
+        assert_eq!(report.system, "ServerlessLoRA");
+        assert_eq!(report.runs.len(), 3);
+        assert_eq!(
+            report.runs.iter().map(|r| r.seed).collect::<Vec<_>>(),
+            vec![1, 7, 23],
+            "seed order must be preserved"
+        );
+        for r in &report.runs {
+            assert_eq!(r.metrics.outcomes.len(), r.requests, "lost requests");
+            assert!(r.wall_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn run_grid_preserves_spec_order() {
+        let specs = vec![
+            quick_spec("a", "serverless-lora", vec![1]),
+            quick_spec("b", "serverless-llm", vec![1]),
+            quick_spec("c", "npl", vec![1]),
+        ];
+        let reports = run_grid(&specs).unwrap();
+        let names: Vec<&str> = reports.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        assert_eq!(reports[1].system, "ServerlessLLM");
+        assert_eq!(reports[2].system, "ServerlessLoRA-NPL");
+    }
+
+    /// The acceptance contract: a scenario run is the SAME code path as
+    /// the historical hand-wired run — bit-identical metrics and cost.
+    #[test]
+    fn scenario_run_matches_direct_engine_run_bitwise() {
+        let spec = quick_spec("parity", "serverless-lora", vec![7]);
+        let report = run(&spec).unwrap();
+        let w = crate::sim::workloads::paper_workload(Pattern::Bursty, 300.0, 9);
+        let (m, c, _) = Engine::new(
+            SystemConfig::serverless_lora(),
+            crate::cluster::Cluster::new(1, 2, 4),
+            w,
+            7,
+        )
+        .run();
+        let r = report.only();
+        assert_eq!(r.metrics.outcomes.len(), m.outcomes.len());
+        assert_eq!(r.metrics.ttft().mean.to_bits(), m.ttft().mean.to_bits());
+        assert_eq!(r.cost.total_usd().to_bits(), c.total_usd().to_bits());
+    }
+
+    /// Enabling the series sink must not perturb metrics or cost by one
+    /// bit, and must add zero extra billing samples.
+    #[test]
+    fn series_sink_is_observation_only() {
+        let plain = run(&quick_spec("off", "serverless-lora", vec![3])).unwrap();
+        let mut spec = quick_spec("on", "serverless-lora", vec![3]);
+        spec.sinks.bill_series_bucket_s = Some(60.0);
+        let sampled = run(&spec).unwrap();
+        let (p, q) = (plain.only(), sampled.only());
+        assert!(p.bill_series.is_none());
+        let series = q.bill_series.as_ref().expect("series sink enabled");
+        assert!(!series.buckets.is_empty());
+        assert_eq!(p.metrics.ttft().mean.to_bits(), q.metrics.ttft().mean.to_bits());
+        assert_eq!(p.cost.total_usd().to_bits(), q.cost.total_usd().to_bits());
+        assert_eq!(p.stats.bill_samples, q.stats.bill_samples, "sampler took extra samples");
+        // The trajectory integrates to the cost tracker's totals
+        // (shared billing prices used GB of active + loading classes).
+        use crate::sim::BillClass;
+        let active = series.total_gb_s(BillClass::ActiveExec)
+            + series.total_gb_s(BillClass::ActiveLoading);
+        let idle = series.total_gb_s(BillClass::IdleWarm);
+        assert!(
+            (active - q.cost.gpu_active_gb_s).abs() <= 1e-6 * q.cost.gpu_active_gb_s.max(1.0),
+            "series active {active} vs cost {}",
+            q.cost.gpu_active_gb_s
+        );
+        assert!(
+            (idle - q.cost.gpu_idle_gb_s).abs() <= 1e-6 * q.cost.gpu_idle_gb_s.max(1.0),
+            "series idle {idle} vs cost {}",
+            q.cost.gpu_idle_gb_s
+        );
+    }
+
+    #[test]
+    fn grid_rejects_any_invalid_spec_before_running() {
+        let mut bad = quick_spec("bad", "serverless-lora", vec![1]);
+        bad.seeds.clear();
+        let specs = vec![quick_spec("ok", "serverless-lora", vec![1]), bad];
+        assert_eq!(run_grid(&specs).unwrap_err(), ScenarioError::EmptySeeds);
+    }
+
+    #[test]
+    fn specs_from_json_accepts_object_and_array() {
+        let one = quick_spec("solo", "vllm", vec![1]);
+        let parsed = specs_from_json(&one.to_json()).unwrap();
+        assert_eq!(parsed, vec![one.clone()]);
+        let grid = Json::Arr(vec![one.to_json(), quick_spec("b", "npl", vec![2]).to_json()]);
+        assert_eq!(specs_from_json(&grid).unwrap().len(), 2);
+        assert!(specs_from_json(&Json::Num(3.0)).is_err());
+        assert!(specs_from_json(&Json::Arr(vec![])).is_err());
+    }
+
+    #[test]
+    fn report_renders_rows_and_series() {
+        let mut spec = quick_spec("render", "serverless-lora", vec![1]);
+        spec.sinks.bill_series_bucket_s = Some(150.0);
+        let reports = run_grid(std::slice::from_ref(&spec)).unwrap();
+        let out = render_reports(&reports);
+        assert!(out.contains("render"));
+        assert!(out.contains("ServerlessLoRA"));
+        assert!(out.contains("cost trajectory"));
+    }
+}

@@ -1,0 +1,1247 @@
+//! The typed scenario description: **one** (system × workload × cluster
+//! × seeds) evaluation cell, with a builder, validation, and JSON
+//! round-trip via `util::json` (serde is not vendored in this offline
+//! build).
+//!
+//! A `ScenarioSpec` is declarative and self-contained: everything a run
+//! depends on — the system id plus config overrides, the cluster shape,
+//! the workload generator and its seed, the horizon, the engine seeds,
+//! and the output sinks — lives in the spec, so a JSON file fully
+//! reproduces a result and the experiment suites build their grids from
+//! the same type the CLI loads from disk.
+
+use crate::artifact::ModelProfile;
+use crate::cluster::Cluster;
+use crate::sim::config::{BatchingMode, PreloadMode, SystemConfig};
+use crate::sim::workloads as wl;
+use crate::sim::Workload;
+use crate::trace::Pattern;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Every system id [`SystemSpec::resolve`] accepts, in registry order.
+pub const SYSTEM_IDS: [&str; 12] = [
+    "serverless-lora",
+    "predictive",
+    "serverless-llm",
+    "instainfer",
+    "vllm",
+    "dlora",
+    "nbs",
+    "npl",
+    "ndo",
+    "nab1",
+    "nab2",
+    "nab3",
+];
+
+/// A scenario that fails validation, with an actionable message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioError {
+    EmptyName,
+    EmptySeeds,
+    UnknownSystem(String),
+    /// A system override that does not type-check against its system
+    /// (e.g. `hit_rate` on a non-InstaInfer system, a non-positive
+    /// keep-alive).
+    BadOverride(String),
+    BadHorizon(f64),
+    BadCluster(String),
+    BadWorkload(String),
+    BadSkew(f64),
+    BadSeriesBucket(String),
+    /// Malformed JSON shape (missing/ill-typed field); carries the path.
+    Parse(String),
+}
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, w: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScenarioError::EmptyName => {
+                write!(w, "scenario needs a non-empty \"name\"")
+            }
+            ScenarioError::EmptySeeds => {
+                write!(w, "scenario needs at least one engine seed (e.g. \"seeds\": [1])")
+            }
+            ScenarioError::UnknownSystem(id) => {
+                write!(w, "unknown system id '{id}'; valid ids: {}", SYSTEM_IDS.join(", "))
+            }
+            ScenarioError::BadOverride(msg) => write!(w, "bad system override: {msg}"),
+            ScenarioError::BadHorizon(h) => {
+                write!(w, "horizon_s must be a positive finite number of seconds, got {h}")
+            }
+            ScenarioError::BadCluster(msg) => write!(w, "bad cluster: {msg}"),
+            ScenarioError::BadWorkload(msg) => write!(w, "bad workload: {msg}"),
+            ScenarioError::BadSkew(x) => {
+                write!(w, "Zipf skew must be a positive finite number, got {x}")
+            }
+            ScenarioError::BadSeriesBucket(msg) => {
+                write!(w, "bad bill_series_bucket_s: {msg}")
+            }
+            ScenarioError::Parse(msg) => write!(w, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+// -------------------------------------------------------------- system
+
+/// Batching override for a system (maps onto `sim::BatchingMode`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchingOverride {
+    Adaptive,
+    Fixed { size: usize, delay_s: f64 },
+}
+
+/// A system under test: a registry id plus optional config overrides.
+/// `resolve` turns it into the exact `SystemConfig` the engine runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemSpec {
+    pub id: String,
+    pub keepalive_s: Option<f64>,
+    pub backbone_sharing: Option<bool>,
+    pub dynamic_offload: Option<bool>,
+    pub batching: Option<BatchingOverride>,
+    /// InstaInfer only: pin the opportunistic predictor's hit rate
+    /// (e.g. `1.0` for the §6.3 best case) instead of deriving it from
+    /// the workload's arrival pattern.
+    pub hit_rate: Option<f64>,
+}
+
+impl SystemSpec {
+    pub fn new(id: &str) -> Self {
+        SystemSpec {
+            id: id.to_string(),
+            keepalive_s: None,
+            backbone_sharing: None,
+            dynamic_offload: None,
+            batching: None,
+            hit_rate: None,
+        }
+    }
+
+    /// Build the concrete `SystemConfig`. `pattern` is the workload's
+    /// arrival pattern (InstaInfer's predictor hit rate is
+    /// pattern-dependent, exactly as the experiment suites construct it;
+    /// pattern-free workloads default to Normal).
+    pub fn resolve(&self, pattern: Pattern) -> Result<SystemConfig, ScenarioError> {
+        let mut cfg = match self.id.as_str() {
+            "serverless-lora" => SystemConfig::serverless_lora(),
+            "predictive" => SystemConfig::predictive(),
+            "serverless-llm" => SystemConfig::serverless_llm(),
+            "instainfer" => SystemConfig::instainfer(pattern),
+            "vllm" => SystemConfig::vllm(),
+            "dlora" => SystemConfig::dlora(),
+            "nbs" => SystemConfig::nbs(),
+            "npl" => SystemConfig::npl(),
+            "ndo" => SystemConfig::ndo(),
+            "nab1" => SystemConfig::nab(1),
+            "nab2" => SystemConfig::nab(2),
+            "nab3" => SystemConfig::nab(3),
+            other => return Err(ScenarioError::UnknownSystem(other.to_string())),
+        };
+        if let Some(h) = self.hit_rate {
+            if self.id != "instainfer" {
+                return Err(ScenarioError::BadOverride(format!(
+                    "hit_rate only applies to 'instainfer', not '{}'",
+                    self.id
+                )));
+            }
+            if !(h.is_finite() && h > 0.0 && h <= 1.0) {
+                return Err(ScenarioError::BadOverride(format!(
+                    "hit_rate must be in (0, 1], got {h}"
+                )));
+            }
+            cfg.preload = PreloadMode::ContainerOpportunistic { hit_rate: h };
+        }
+        if let Some(k) = self.keepalive_s {
+            if !(k.is_finite() && k > 0.0) {
+                return Err(ScenarioError::BadOverride(format!(
+                    "keepalive_s must be a positive finite number, got {k}"
+                )));
+            }
+            cfg.keepalive_s = k;
+        }
+        if let Some(b) = self.backbone_sharing {
+            cfg.backbone_sharing = b;
+        }
+        if let Some(d) = self.dynamic_offload {
+            cfg.dynamic_offload = d;
+        }
+        match self.batching {
+            Some(BatchingOverride::Adaptive) => cfg.batching = BatchingMode::Adaptive,
+            Some(BatchingOverride::Fixed { size, delay_s }) => {
+                if size == 0 || !(delay_s.is_finite() && delay_s >= 0.0) {
+                    return Err(ScenarioError::BadOverride(format!(
+                        "fixed batching needs size >= 1 and a non-negative \
+                         finite delay, got size {size}, delay {delay_s}"
+                    )));
+                }
+                cfg.batching = BatchingMode::Fixed { size, delay_s };
+            }
+            None => {}
+        }
+        Ok(cfg)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![("id", s(&self.id))];
+        if let Some(k) = self.keepalive_s {
+            fields.push(("keepalive_s", num(k)));
+        }
+        if let Some(b) = self.backbone_sharing {
+            fields.push(("backbone_sharing", Json::Bool(b)));
+        }
+        if let Some(d) = self.dynamic_offload {
+            fields.push(("dynamic_offload", Json::Bool(d)));
+        }
+        if let Some(h) = self.hit_rate {
+            fields.push(("hit_rate", num(h)));
+        }
+        match self.batching {
+            Some(BatchingOverride::Adaptive) => {
+                fields.push(("batching", obj(vec![("kind", s("adaptive"))])));
+            }
+            Some(BatchingOverride::Fixed { size, delay_s }) => {
+                fields.push((
+                    "batching",
+                    obj(vec![
+                        ("kind", s("fixed")),
+                        ("size", num(size as f64)),
+                        ("delay_s", num(delay_s)),
+                    ]),
+                ));
+            }
+            None => {}
+        }
+        obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Result<Self, ScenarioError> {
+        let id = req_str(j, "id", "system")?;
+        let mut spec = SystemSpec::new(&id);
+        spec.keepalive_s = opt_num(j, "keepalive_s", "system")?;
+        spec.backbone_sharing = opt_bool(j, "backbone_sharing", "system")?;
+        spec.dynamic_offload = opt_bool(j, "dynamic_offload", "system")?;
+        spec.hit_rate = opt_num(j, "hit_rate", "system")?;
+        if let Some(b) = j.get("batching") {
+            let kind = req_str(b, "kind", "system.batching")?;
+            spec.batching = Some(match kind.as_str() {
+                "adaptive" => BatchingOverride::Adaptive,
+                "fixed" => BatchingOverride::Fixed {
+                    size: req_usize(b, "size", "system.batching")?,
+                    delay_s: req_num(b, "delay_s", "system.batching")?,
+                },
+                other => {
+                    return Err(ScenarioError::Parse(format!(
+                        "system.batching.kind must be 'adaptive' or 'fixed', got '{other}'"
+                    )))
+                }
+            });
+        }
+        Ok(spec)
+    }
+}
+
+// -------------------------------------------------------------- cluster
+
+/// Cluster shape. `Paper` is the evaluation testbed (4 × g6e.24xlarge,
+/// 16 GPUs); `Uniform` is `Cluster::new(nodes, gpus_per_node,
+/// containers_per_node)` optionally trimmed to an exact GPU count (the
+/// fleet experiment's non-multiple-of-8 shapes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClusterSpec {
+    Paper,
+    Uniform {
+        nodes: usize,
+        gpus_per_node: usize,
+        containers_per_node: usize,
+        trim_gpus: Option<usize>,
+    },
+}
+
+impl ClusterSpec {
+    pub fn materialize(&self) -> Cluster {
+        match *self {
+            ClusterSpec::Paper => Cluster::paper_multinode(),
+            ClusterSpec::Uniform { nodes, gpus_per_node, containers_per_node, trim_gpus } => {
+                let mut c = Cluster::new(nodes, gpus_per_node, containers_per_node);
+                if let Some(t) = trim_gpus {
+                    c.trim_gpus(t);
+                }
+                c
+            }
+        }
+    }
+
+    fn validate(&self) -> Result<(), ScenarioError> {
+        if let ClusterSpec::Uniform { nodes, gpus_per_node, containers_per_node, trim_gpus } =
+            *self
+        {
+            if nodes == 0 || gpus_per_node == 0 || containers_per_node == 0 {
+                return Err(ScenarioError::BadCluster(format!(
+                    "nodes, gpus_per_node and containers_per_node must all be >= 1, \
+                     got {nodes}/{gpus_per_node}/{containers_per_node}"
+                )));
+            }
+            if let Some(t) = trim_gpus {
+                let total = nodes * gpus_per_node;
+                if t == 0 || t > total {
+                    return Err(ScenarioError::BadCluster(format!(
+                        "trim_gpus must be in 1..={total} for this shape, got {t}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        match *self {
+            ClusterSpec::Paper => obj(vec![("kind", s("paper"))]),
+            ClusterSpec::Uniform { nodes, gpus_per_node, containers_per_node, trim_gpus } => {
+                let mut fields = vec![
+                    ("kind", s("uniform")),
+                    ("nodes", num(nodes as f64)),
+                    ("gpus_per_node", num(gpus_per_node as f64)),
+                    ("containers_per_node", num(containers_per_node as f64)),
+                ];
+                if let Some(t) = trim_gpus {
+                    fields.push(("trim_gpus", num(t as f64)));
+                }
+                obj(fields)
+            }
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self, ScenarioError> {
+        match req_str(j, "kind", "cluster")?.as_str() {
+            "paper" => Ok(ClusterSpec::Paper),
+            "uniform" => Ok(ClusterSpec::Uniform {
+                nodes: req_usize(j, "nodes", "cluster")?,
+                gpus_per_node: req_usize(j, "gpus_per_node", "cluster")?,
+                containers_per_node: req_usize(j, "containers_per_node", "cluster")?,
+                trim_gpus: opt_usize(j, "trim_gpus", "cluster")?,
+            }),
+            other => Err(ScenarioError::Parse(format!(
+                "cluster.kind must be 'paper' or 'uniform', got '{other}'"
+            ))),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match *self {
+            ClusterSpec::Paper => "paper (16 GPUs, 4 nodes)".to_string(),
+            ClusterSpec::Uniform { nodes, gpus_per_node, containers_per_node, trim_gpus } => {
+                match trim_gpus {
+                    Some(t) => format!(
+                        "{nodes}x{gpus_per_node}g/{containers_per_node}c trimmed to {t} GPUs"
+                    ),
+                    None => format!("{nodes}x{gpus_per_node}g/{containers_per_node}c"),
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- workload
+
+/// Workload generator + its generator seed. Each variant maps 1:1 onto
+/// a `sim::workloads` constructor, so a spec-built workload is
+/// bit-identical to the experiment suites' hand-wired one.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// The paper's standard 8-function deployment (§6.1).
+    Paper { pattern: Pattern, seed: u64 },
+    /// Fig. 2 motivation: `n_fns` 7B functions splitting one hot
+    /// function's demand.
+    SmallMulti { n_fns: usize, seed: u64 },
+    /// Fig. 1 motivation: three 13B functions, descending rates.
+    Breakdown13b { seed: u64 },
+    /// §6.3: one function, one request (`model`: llama2-7b | llama2-13b).
+    SingleInvocation { model: String },
+    /// §6.5 saturating throughput workload (4× 7B at 12 req/s each).
+    Throughput { seed: u64 },
+    /// Weak-scaling: `scale` × the 8-function base deployment.
+    Scaled { pattern: Pattern, scale: usize, seed: u64 },
+    /// Fleet-scale uniform-tier workload (engine-health experiment).
+    Fleet { fns: usize, seed: u64 },
+    /// Zipf(skew) function popularity, aggregate Poisson stream.
+    ZipfFleet { fns: usize, skew: f64, seed: u64 },
+    /// Zipf popularity with CoV-classed head/tail burstiness.
+    ZipfFleetCov { fns: usize, skew: f64, head: Pattern, tail: Pattern, seed: u64 },
+}
+
+impl WorkloadSpec {
+    pub fn materialize(&self, horizon_s: f64) -> Workload {
+        match self {
+            WorkloadSpec::Paper { pattern, seed } => {
+                wl::paper_workload(*pattern, horizon_s, *seed)
+            }
+            WorkloadSpec::SmallMulti { n_fns, seed } => {
+                wl::small_multi_workload(*n_fns, horizon_s, *seed)
+            }
+            WorkloadSpec::Breakdown13b { seed } => {
+                wl::breakdown_13b_workload(horizon_s, *seed)
+            }
+            WorkloadSpec::SingleInvocation { model } => wl::single_invocation(
+                Self::model_profile(model).expect("validated before materialize"),
+            ),
+            WorkloadSpec::Throughput { seed } => wl::throughput_workload(horizon_s, *seed),
+            WorkloadSpec::Scaled { pattern, scale, seed } => {
+                wl::scaled_workload(*pattern, horizon_s, *scale, *seed)
+            }
+            WorkloadSpec::Fleet { fns, seed } => wl::fleet_workload(*fns, horizon_s, *seed),
+            WorkloadSpec::ZipfFleet { fns, skew, seed } => {
+                wl::zipf_fleet_workload(*fns, horizon_s, *skew, *seed)
+            }
+            WorkloadSpec::ZipfFleetCov { fns, skew, head, tail, seed } => {
+                wl::zipf_fleet_workload_cov(*fns, horizon_s, *skew, *seed, *head, *tail)
+            }
+        }
+    }
+
+    /// The workload's arrival-pattern class, when it has a single one
+    /// (drives pattern-dependent system resolution, e.g. InstaInfer's
+    /// predictor hit rate). Throughput runs a Predictable stream; the
+    /// fleet/Zipf generators have no single class and default to Normal.
+    pub fn pattern(&self) -> Option<Pattern> {
+        match self {
+            WorkloadSpec::Paper { pattern, .. } | WorkloadSpec::Scaled { pattern, .. } => {
+                Some(*pattern)
+            }
+            WorkloadSpec::SmallMulti { .. } | WorkloadSpec::Breakdown13b { .. } => {
+                Some(Pattern::Normal)
+            }
+            WorkloadSpec::Throughput { .. } => Some(Pattern::Predictable),
+            _ => None,
+        }
+    }
+
+    fn model_profile(name: &str) -> Option<ModelProfile> {
+        match name {
+            "llama2-7b" => Some(ModelProfile::llama2_7b()),
+            "llama2-13b" => Some(ModelProfile::llama2_13b()),
+            _ => None,
+        }
+    }
+
+    fn validate(&self) -> Result<(), ScenarioError> {
+        let check_fns = |fns: usize| {
+            if fns == 0 {
+                Err(ScenarioError::BadWorkload("fns must be >= 1".to_string()))
+            } else {
+                Ok(())
+            }
+        };
+        let check_skew = |skew: f64| {
+            if skew.is_finite() && skew > 0.0 {
+                Ok(())
+            } else {
+                Err(ScenarioError::BadSkew(skew))
+            }
+        };
+        match self {
+            WorkloadSpec::SmallMulti { n_fns, .. } => check_fns(*n_fns),
+            WorkloadSpec::SingleInvocation { model } => match Self::model_profile(model) {
+                Some(_) => Ok(()),
+                None => Err(ScenarioError::BadWorkload(format!(
+                    "unknown model '{model}'; valid: llama2-7b, llama2-13b"
+                ))),
+            },
+            WorkloadSpec::Scaled { scale, .. } => {
+                if *scale == 0 {
+                    Err(ScenarioError::BadWorkload("scale must be >= 1".to_string()))
+                } else {
+                    Ok(())
+                }
+            }
+            WorkloadSpec::Fleet { fns, .. } => check_fns(*fns),
+            WorkloadSpec::ZipfFleet { fns, skew, .. } => {
+                check_fns(*fns)?;
+                check_skew(*skew)
+            }
+            WorkloadSpec::ZipfFleetCov { fns, skew, .. } => {
+                check_fns(*fns)?;
+                check_skew(*skew)
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            WorkloadSpec::Paper { pattern, seed } => obj(vec![
+                ("kind", s("paper")),
+                ("pattern", s(pattern.name())),
+                ("seed", num(*seed as f64)),
+            ]),
+            WorkloadSpec::SmallMulti { n_fns, seed } => obj(vec![
+                ("kind", s("small-multi")),
+                ("n_fns", num(*n_fns as f64)),
+                ("seed", num(*seed as f64)),
+            ]),
+            WorkloadSpec::Breakdown13b { seed } => {
+                obj(vec![("kind", s("breakdown-13b")), ("seed", num(*seed as f64))])
+            }
+            WorkloadSpec::SingleInvocation { model } => {
+                obj(vec![("kind", s("single-invocation")), ("model", s(model))])
+            }
+            WorkloadSpec::Throughput { seed } => {
+                obj(vec![("kind", s("throughput")), ("seed", num(*seed as f64))])
+            }
+            WorkloadSpec::Scaled { pattern, scale, seed } => obj(vec![
+                ("kind", s("scaled")),
+                ("pattern", s(pattern.name())),
+                ("scale", num(*scale as f64)),
+                ("seed", num(*seed as f64)),
+            ]),
+            WorkloadSpec::Fleet { fns, seed } => obj(vec![
+                ("kind", s("fleet")),
+                ("fns", num(*fns as f64)),
+                ("seed", num(*seed as f64)),
+            ]),
+            WorkloadSpec::ZipfFleet { fns, skew, seed } => obj(vec![
+                ("kind", s("zipf-fleet")),
+                ("fns", num(*fns as f64)),
+                ("skew", num(*skew)),
+                ("seed", num(*seed as f64)),
+            ]),
+            WorkloadSpec::ZipfFleetCov { fns, skew, head, tail, seed } => obj(vec![
+                ("kind", s("zipf-fleet-cov")),
+                ("fns", num(*fns as f64)),
+                ("skew", num(*skew)),
+                ("head", s(head.name())),
+                ("tail", s(tail.name())),
+                ("seed", num(*seed as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self, ScenarioError> {
+        // The experiment suites' canonical workload seed.
+        const DEFAULT_SEED: u64 = 11;
+        let seed = opt_u64(j, "seed", "workload")?.unwrap_or(DEFAULT_SEED);
+        match req_str(j, "kind", "workload")?.as_str() {
+            "paper" => Ok(WorkloadSpec::Paper {
+                pattern: pattern_field(j, "pattern", "workload")?.unwrap_or(Pattern::Normal),
+                seed,
+            }),
+            "small-multi" => Ok(WorkloadSpec::SmallMulti {
+                n_fns: req_usize(j, "n_fns", "workload")?,
+                seed,
+            }),
+            "breakdown-13b" => Ok(WorkloadSpec::Breakdown13b { seed }),
+            "single-invocation" => Ok(WorkloadSpec::SingleInvocation {
+                model: req_str(j, "model", "workload")?,
+            }),
+            "throughput" => Ok(WorkloadSpec::Throughput { seed }),
+            "scaled" => Ok(WorkloadSpec::Scaled {
+                pattern: pattern_field(j, "pattern", "workload")?.unwrap_or(Pattern::Normal),
+                scale: req_usize(j, "scale", "workload")?,
+                seed,
+            }),
+            "fleet" => Ok(WorkloadSpec::Fleet { fns: req_usize(j, "fns", "workload")?, seed }),
+            "zipf-fleet" => Ok(WorkloadSpec::ZipfFleet {
+                fns: req_usize(j, "fns", "workload")?,
+                skew: req_num(j, "skew", "workload")?,
+                seed,
+            }),
+            "zipf-fleet-cov" => Ok(WorkloadSpec::ZipfFleetCov {
+                fns: req_usize(j, "fns", "workload")?,
+                skew: req_num(j, "skew", "workload")?,
+                head: pattern_field(j, "head", "workload")?.ok_or_else(|| {
+                    ScenarioError::Parse("workload: missing 'head' pattern".into())
+                })?,
+                tail: pattern_field(j, "tail", "workload")?.ok_or_else(|| {
+                    ScenarioError::Parse("workload: missing 'tail' pattern".into())
+                })?,
+                seed,
+            }),
+            other => Err(ScenarioError::Parse(format!(
+                "unknown workload kind '{other}'; valid: paper, small-multi, \
+                 breakdown-13b, single-invocation, throughput, scaled, fleet, \
+                 zipf-fleet, zipf-fleet-cov"
+            ))),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            WorkloadSpec::Paper { pattern, seed } => {
+                format!("paper 8-fn ({}, seed {seed})", pattern.name())
+            }
+            WorkloadSpec::SmallMulti { n_fns, seed } => {
+                format!("small-multi {n_fns} fn (seed {seed})")
+            }
+            WorkloadSpec::Breakdown13b { seed } => format!("3x 13B breakdown (seed {seed})"),
+            WorkloadSpec::SingleInvocation { model } => format!("single invocation ({model})"),
+            WorkloadSpec::Throughput { seed } => format!("saturating throughput (seed {seed})"),
+            WorkloadSpec::Scaled { pattern, scale, seed } => {
+                format!("scaled x{scale} ({}, seed {seed})", pattern.name())
+            }
+            WorkloadSpec::Fleet { fns, seed } => format!("fleet {fns} fn (seed {seed})"),
+            WorkloadSpec::ZipfFleet { fns, skew, seed } => {
+                format!("zipf({skew}) fleet {fns} fn (seed {seed})")
+            }
+            WorkloadSpec::ZipfFleetCov { fns, skew, head, tail, seed } => format!(
+                "zipf({skew}) fleet {fns} fn, {}-head/{}-tail (seed {seed})",
+                head.name(),
+                tail.name()
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- sinks
+
+/// Output-sink selection: what a run records beyond metrics + cost.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SinkSpec {
+    /// Meter billing wall-clock into
+    /// `RunStats::bill_{sample,reclass}_wall_s` (the fleet bench).
+    pub bill_timing: bool,
+    /// Enable the coarse per-billing-class time-series sampler with
+    /// this bucket width (seconds). Off (`None`) by default.
+    pub bill_series_bucket_s: Option<f64>,
+}
+
+impl SinkSpec {
+    fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        if self.bill_timing {
+            fields.push(("bill_timing", Json::Bool(true)));
+        }
+        if let Some(b) = self.bill_series_bucket_s {
+            fields.push(("bill_series_bucket_s", num(b)));
+        }
+        obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Result<Self, ScenarioError> {
+        Ok(SinkSpec {
+            bill_timing: opt_bool(j, "bill_timing", "sinks")?.unwrap_or(false),
+            bill_series_bucket_s: opt_num(j, "bill_series_bucket_s", "sinks")?,
+        })
+    }
+}
+
+// ----------------------------------------------------------------- spec
+
+/// One declarative evaluation cell. Build with [`ScenarioSpec::builder`]
+/// or load from JSON with [`ScenarioSpec::from_json`]; run with
+/// [`crate::scenario::run`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub system: SystemSpec,
+    pub cluster: ClusterSpec,
+    pub workload: WorkloadSpec,
+    pub horizon_s: f64,
+    /// Engine seeds: one run per seed, fanned out in parallel.
+    pub seeds: Vec<u64>,
+    pub sinks: SinkSpec,
+}
+
+impl ScenarioSpec {
+    pub fn builder(name: &str) -> ScenarioBuilder {
+        ScenarioBuilder {
+            spec: ScenarioSpec {
+                name: name.to_string(),
+                system: SystemSpec::new("serverless-lora"),
+                cluster: ClusterSpec::Paper,
+                workload: WorkloadSpec::Paper { pattern: Pattern::Normal, seed: 11 },
+                horizon_s: 3600.0,
+                seeds: vec![1],
+                sinks: SinkSpec::default(),
+            },
+        }
+    }
+
+    /// Check every field; the error names what to fix.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        if self.name.trim().is_empty() {
+            return Err(ScenarioError::EmptyName);
+        }
+        if self.seeds.is_empty() {
+            return Err(ScenarioError::EmptySeeds);
+        }
+        if !(self.horizon_s.is_finite() && self.horizon_s > 0.0) {
+            return Err(ScenarioError::BadHorizon(self.horizon_s));
+        }
+        self.cluster.validate()?;
+        self.workload.validate()?;
+        // Resolution type-checks the system id + every override.
+        self.system.resolve(self.workload.pattern().unwrap_or(Pattern::Normal))?;
+        if let Some(b) = self.sinks.bill_series_bucket_s {
+            if !(b.is_finite() && b > 0.0) {
+                return Err(ScenarioError::BadSeriesBucket(format!(
+                    "bucket must be a positive number of seconds, got {b}"
+                )));
+            }
+            if self.horizon_s / b > 100_000.0 {
+                return Err(ScenarioError::BadSeriesBucket(format!(
+                    "bucket {b} s over a {} s horizon means > 100000 buckets; \
+                     the series sampler is deliberately coarse — widen the bucket",
+                    self.horizon_s
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The resolved system's display name (e.g. "ServerlessLoRA-NPL").
+    pub fn system_name(&self) -> String {
+        self.system
+            .resolve(self.workload.pattern().unwrap_or(Pattern::Normal))
+            .map(|c| c.name.to_string())
+            .unwrap_or_else(|_| self.system.id.clone())
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("system", self.system.to_json()),
+            ("cluster", self.cluster.to_json()),
+            ("workload", self.workload.to_json()),
+            ("horizon_s", num(self.horizon_s)),
+            ("seeds", arr(self.seeds.iter().map(|&x| num(x as f64)))),
+            ("sinks", self.sinks.to_json()),
+        ])
+    }
+
+    /// Parse one spec object. Missing optional fields default (cluster:
+    /// paper, horizon_s: 3600, seeds: [1], sinks: off); `name`, `system`
+    /// and `workload` are required.
+    pub fn from_json(j: &Json) -> Result<Self, ScenarioError> {
+        if !matches!(j, Json::Obj(_)) {
+            return Err(ScenarioError::Parse("a scenario must be a JSON object".into()));
+        }
+        let name = req_str(j, "name", "scenario")?;
+        let system = SystemSpec::from_json(j.get("system").ok_or_else(|| {
+            ScenarioError::Parse(format!("scenario '{name}': missing \"system\""))
+        })?)?;
+        let workload = WorkloadSpec::from_json(j.get("workload").ok_or_else(|| {
+            ScenarioError::Parse(format!("scenario '{name}': missing \"workload\""))
+        })?)?;
+        let cluster = match j.get("cluster") {
+            Some(c) => ClusterSpec::from_json(c)?,
+            None => ClusterSpec::Paper,
+        };
+        let horizon_s = opt_num(j, "horizon_s", "scenario")?.unwrap_or(3600.0);
+        let seeds = match j.get("seeds") {
+            Some(Json::Arr(xs)) => xs
+                .iter()
+                .map(|x| {
+                    x.as_u64().ok_or_else(|| {
+                        ScenarioError::Parse(
+                            "seeds must be non-negative integers".to_string(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<u64>, _>>()?,
+            Some(_) => {
+                return Err(ScenarioError::Parse(
+                    "\"seeds\" must be an array of integers".to_string(),
+                ))
+            }
+            None => vec![1],
+        };
+        let sinks = match j.get("sinks") {
+            Some(x) => SinkSpec::from_json(x)?,
+            None => SinkSpec::default(),
+        };
+        Ok(ScenarioSpec { name, system, cluster, workload, horizon_s, seeds, sinks })
+    }
+
+    /// One-line description (the CLI's `--dry-run` output).
+    pub fn summary(&self) -> String {
+        let sinks = match (self.sinks.bill_timing, self.sinks.bill_series_bucket_s) {
+            (false, None) => String::new(),
+            (t, b) => {
+                let mut parts = Vec::new();
+                if t {
+                    parts.push("bill-timing".to_string());
+                }
+                if let Some(b) = b {
+                    parts.push(format!("bill-series@{b}s"));
+                }
+                format!(" | sinks: {}", parts.join(", "))
+            }
+        };
+        format!(
+            "scenario '{}': {} on {} | {} | horizon {} s | seeds {:?}{}",
+            self.name,
+            self.system_name(),
+            self.cluster.describe(),
+            self.workload.describe(),
+            self.horizon_s,
+            self.seeds,
+            sinks
+        )
+    }
+}
+
+/// Typed builder over [`ScenarioSpec`]; `build` validates.
+pub struct ScenarioBuilder {
+    spec: ScenarioSpec,
+}
+
+impl ScenarioBuilder {
+    /// Select the system by registry id (see [`SYSTEM_IDS`]).
+    pub fn system(mut self, id: &str) -> Self {
+        self.spec.system = SystemSpec::new(id);
+        self
+    }
+
+    /// Replace the whole system spec (id + overrides).
+    pub fn system_spec(mut self, sys: SystemSpec) -> Self {
+        self.spec.system = sys;
+        self
+    }
+
+    pub fn keepalive_s(mut self, k: f64) -> Self {
+        self.spec.system.keepalive_s = Some(k);
+        self
+    }
+
+    pub fn hit_rate(mut self, h: f64) -> Self {
+        self.spec.system.hit_rate = Some(h);
+        self
+    }
+
+    pub fn cluster(mut self, c: ClusterSpec) -> Self {
+        self.spec.cluster = c;
+        self
+    }
+
+    pub fn workload(mut self, w: WorkloadSpec) -> Self {
+        self.spec.workload = w;
+        self
+    }
+
+    pub fn horizon_s(mut self, h: f64) -> Self {
+        self.spec.horizon_s = h;
+        self
+    }
+
+    pub fn seeds(mut self, seeds: Vec<u64>) -> Self {
+        self.spec.seeds = seeds;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seeds = vec![seed];
+        self
+    }
+
+    pub fn bill_timing(mut self, on: bool) -> Self {
+        self.spec.sinks.bill_timing = on;
+        self
+    }
+
+    pub fn bill_series(mut self, bucket_s: f64) -> Self {
+        self.spec.sinks.bill_series_bucket_s = Some(bucket_s);
+        self
+    }
+
+    pub fn build(self) -> Result<ScenarioSpec, ScenarioError> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+// --------------------------------------------------------- json helpers
+
+fn req_str(j: &Json, key: &str, ctx: &str) -> Result<String, ScenarioError> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| ScenarioError::Parse(format!("{ctx}: missing string field \"{key}\"")))
+}
+
+fn req_num(j: &Json, key: &str, ctx: &str) -> Result<f64, ScenarioError> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| ScenarioError::Parse(format!("{ctx}: missing numeric field \"{key}\"")))
+}
+
+fn req_usize(j: &Json, key: &str, ctx: &str) -> Result<usize, ScenarioError> {
+    req_num(j, key, ctx).and_then(|v| {
+        if v.fract() == 0.0 && (0.0..9.0e15).contains(&v) {
+            Ok(v as usize)
+        } else {
+            Err(ScenarioError::Parse(format!(
+                "{ctx}: \"{key}\" must be a non-negative integer, got {v}"
+            )))
+        }
+    })
+}
+
+fn opt_num(j: &Json, key: &str, ctx: &str) -> Result<Option<f64>, ScenarioError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(x) => x.as_f64().map(Some).ok_or_else(|| {
+            ScenarioError::Parse(format!("{ctx}: \"{key}\" must be a number"))
+        }),
+    }
+}
+
+fn opt_usize(j: &Json, key: &str, ctx: &str) -> Result<Option<usize>, ScenarioError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(_) => req_usize(j, key, ctx).map(Some),
+    }
+}
+
+fn opt_u64(j: &Json, key: &str, ctx: &str) -> Result<Option<u64>, ScenarioError> {
+    opt_usize(j, key, ctx).map(|o| o.map(|v| v as u64))
+}
+
+fn opt_bool(j: &Json, key: &str, ctx: &str) -> Result<Option<bool>, ScenarioError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(x) => x.as_bool().map(Some).ok_or_else(|| {
+            ScenarioError::Parse(format!("{ctx}: \"{key}\" must be true or false"))
+        }),
+    }
+}
+
+/// A pattern field: a class name ("Bursty") or a numeric CoV mapped via
+/// the paper's Fig. 5 bands (`Pattern::for_cov`).
+fn pattern_field(j: &Json, key: &str, ctx: &str) -> Result<Option<Pattern>, ScenarioError> {
+    let Some(x) = j.get(key) else { return Ok(None) };
+    match x {
+        Json::Str(name) => match name.to_ascii_lowercase().as_str() {
+            "predictable" => Ok(Some(Pattern::Predictable)),
+            "normal" => Ok(Some(Pattern::Normal)),
+            "bursty" => Ok(Some(Pattern::Bursty)),
+            other => Err(ScenarioError::Parse(format!(
+                "{ctx}: unknown pattern '{other}' (Predictable, Normal, Bursty, \
+                 or a numeric CoV)"
+            ))),
+        },
+        Json::Num(cov) if cov.is_finite() && *cov > 0.0 => Ok(Some(Pattern::for_cov(*cov))),
+        _ => Err(ScenarioError::Parse(format!(
+            "{ctx}: \"{key}\" must be a pattern name or a positive CoV number"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lora_spec() -> ScenarioSpec {
+        ScenarioSpec::builder("t")
+            .workload(WorkloadSpec::Paper { pattern: Pattern::Bursty, seed: 9 })
+            .cluster(ClusterSpec::Uniform {
+                nodes: 1,
+                gpus_per_node: 2,
+                containers_per_node: 4,
+                trim_gpus: None,
+            })
+            .horizon_s(300.0)
+            .seeds(vec![1, 7])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_defaults_validate() {
+        let spec = ScenarioSpec::builder("default").build().unwrap();
+        assert_eq!(spec.system.id, "serverless-lora");
+        assert_eq!(spec.seeds, vec![1]);
+        assert_eq!(spec.system_name(), "ServerlessLoRA");
+    }
+
+    #[test]
+    fn every_system_id_resolves() {
+        for id in SYSTEM_IDS {
+            let cfg = SystemSpec::new(id).resolve(Pattern::Normal).unwrap();
+            assert!(!cfg.name.is_empty(), "{id}");
+        }
+    }
+
+    #[test]
+    fn instainfer_hit_rate_tracks_workload_pattern() {
+        let sys = SystemSpec::new("instainfer");
+        let get = |p| match sys.resolve(p).unwrap().preload {
+            PreloadMode::ContainerOpportunistic { hit_rate } => hit_rate,
+            _ => unreachable!(),
+        };
+        assert!(get(Pattern::Predictable) > get(Pattern::Bursty));
+        // A pinned hit rate overrides the pattern-derived one.
+        let mut pinned = SystemSpec::new("instainfer");
+        pinned.hit_rate = Some(1.0);
+        match pinned.resolve(Pattern::Bursty).unwrap().preload {
+            PreloadMode::ContainerOpportunistic { hit_rate } => assert_eq!(hit_rate, 1.0),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut sys = SystemSpec::new("serverless-lora");
+        sys.keepalive_s = Some(20.0);
+        sys.backbone_sharing = Some(false);
+        sys.dynamic_offload = Some(false);
+        sys.batching = Some(BatchingOverride::Fixed { size: 4, delay_s: 0.1 });
+        let cfg = sys.resolve(Pattern::Normal).unwrap();
+        assert_eq!(cfg.keepalive_s, 20.0);
+        assert!(!cfg.backbone_sharing);
+        assert!(!cfg.dynamic_offload);
+        assert!(matches!(cfg.batching, BatchingMode::Fixed { size: 4, .. }));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_variant() {
+        let mut insta = SystemSpec::new("instainfer");
+        insta.hit_rate = Some(0.9);
+        insta.keepalive_s = Some(60.0);
+        insta.batching = Some(BatchingOverride::Fixed { size: 8, delay_s: 0.25 });
+        let specs = vec![
+            lora_spec(),
+            ScenarioSpec::builder("insta")
+                .system_spec(insta)
+                .workload(WorkloadSpec::SmallMulti { n_fns: 4, seed: 5 })
+                .horizon_s(600.0)
+                .build()
+                .unwrap(),
+            ScenarioSpec::builder("fleet")
+                .cluster(ClusterSpec::Uniform {
+                    nodes: 2,
+                    gpus_per_node: 8,
+                    containers_per_node: 16,
+                    trim_gpus: Some(12),
+                })
+                .workload(WorkloadSpec::ZipfFleetCov {
+                    fns: 32,
+                    skew: 1.2,
+                    head: Pattern::Bursty,
+                    tail: Pattern::Predictable,
+                    seed: 3,
+                })
+                .horizon_s(600.0)
+                .bill_timing(true)
+                .bill_series(60.0)
+                .build()
+                .unwrap(),
+            ScenarioSpec::builder("single")
+                .workload(WorkloadSpec::SingleInvocation { model: "llama2-13b".into() })
+                .horizon_s(30.0)
+                .build()
+                .unwrap(),
+            ScenarioSpec::builder("scaled")
+                .system("npl")
+                .workload(WorkloadSpec::Scaled {
+                    pattern: Pattern::Predictable,
+                    scale: 2,
+                    seed: 13,
+                })
+                .horizon_s(600.0)
+                .build()
+                .unwrap(),
+            ScenarioSpec::builder("tp")
+                .system("nab2")
+                .workload(WorkloadSpec::Throughput { seed: 21 })
+                .horizon_s(120.0)
+                .seeds(vec![2])
+                .build()
+                .unwrap(),
+            ScenarioSpec::builder("b13")
+                .system("ndo")
+                .workload(WorkloadSpec::Breakdown13b { seed: 7 })
+                .horizon_s(600.0)
+                .build()
+                .unwrap(),
+            ScenarioSpec::builder("zipf")
+                .workload(WorkloadSpec::ZipfFleet { fns: 16, skew: 1.1, seed: 4 })
+                .horizon_s(300.0)
+                .build()
+                .unwrap(),
+            ScenarioSpec::builder("flt")
+                .system("vllm")
+                .workload(WorkloadSpec::Fleet { fns: 16, seed: 2 })
+                .horizon_s(300.0)
+                .build()
+                .unwrap(),
+        ];
+        for spec in specs {
+            let text = spec.to_json().dump();
+            let parsed = ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(parsed, spec, "round-trip changed the spec:\n{text}");
+            parsed.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn parse_defaults_fill_optional_fields() {
+        let j = Json::parse(
+            r#"{"name":"min","system":{"id":"serverless-lora"},
+                "workload":{"kind":"paper","pattern":"Normal"}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(spec.cluster, ClusterSpec::Paper);
+        assert_eq!(spec.horizon_s, 3600.0);
+        assert_eq!(spec.seeds, vec![1]);
+        assert_eq!(spec.sinks, SinkSpec::default());
+        match spec.workload {
+            WorkloadSpec::Paper { seed, .. } => assert_eq!(seed, 11),
+            _ => unreachable!(),
+        }
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn numeric_cov_maps_onto_pattern_bands() {
+        let j = Json::parse(
+            r#"{"name":"cov","system":{"id":"serverless-lora"},
+                "workload":{"kind":"zipf-fleet-cov","fns":16,"skew":1.2,
+                            "head":6.0,"tail":0.5,"seed":3}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&j).unwrap();
+        match spec.workload {
+            WorkloadSpec::ZipfFleetCov { head, tail, .. } => {
+                assert_eq!(head, Pattern::Bursty);
+                assert_eq!(tail, Pattern::Predictable);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    // ------------------------------------------- rejection paths
+
+    #[test]
+    fn rejects_empty_name() {
+        let err = ScenarioSpec::builder("  ").build().unwrap_err();
+        assert_eq!(err, ScenarioError::EmptyName);
+    }
+
+    #[test]
+    fn rejects_empty_seeds() {
+        let err = ScenarioSpec::builder("t").seeds(vec![]).build().unwrap_err();
+        assert_eq!(err, ScenarioError::EmptySeeds);
+        assert!(err.to_string().contains("seed"));
+    }
+
+    #[test]
+    fn rejects_unknown_system_and_lists_valid_ids() {
+        let err = ScenarioSpec::builder("t").system("serverless-lroa").build().unwrap_err();
+        assert_eq!(err, ScenarioError::UnknownSystem("serverless-lroa".into()));
+        let msg = err.to_string();
+        for id in SYSTEM_IDS {
+            assert!(msg.contains(id), "message must list '{id}': {msg}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_skew() {
+        for skew in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = ScenarioSpec::builder("t")
+                .workload(WorkloadSpec::ZipfFleet { fns: 16, skew, seed: 1 })
+                .build()
+                .unwrap_err();
+            assert!(matches!(err, ScenarioError::BadSkew(_)), "skew {skew}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_horizon() {
+        for h in [0.0, -5.0, f64::NAN] {
+            let err = ScenarioSpec::builder("t").horizon_s(h).build().unwrap_err();
+            assert!(matches!(err, ScenarioError::BadHorizon(_)), "h {h}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_cluster_shapes() {
+        let err = ScenarioSpec::builder("t")
+            .cluster(ClusterSpec::Uniform {
+                nodes: 0,
+                gpus_per_node: 8,
+                containers_per_node: 16,
+                trim_gpus: None,
+            })
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ScenarioError::BadCluster(_)));
+        let err = ScenarioSpec::builder("t")
+            .cluster(ClusterSpec::Uniform {
+                nodes: 1,
+                gpus_per_node: 8,
+                containers_per_node: 16,
+                trim_gpus: Some(9),
+            })
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ScenarioError::BadCluster(_)));
+    }
+
+    #[test]
+    fn rejects_hit_rate_on_non_instainfer() {
+        let err = ScenarioSpec::builder("t").hit_rate(0.9).build().unwrap_err();
+        assert!(matches!(err, ScenarioError::BadOverride(_)));
+        assert!(err.to_string().contains("instainfer"));
+    }
+
+    #[test]
+    fn rejects_bad_keepalive_and_batching_overrides() {
+        let err = ScenarioSpec::builder("t").keepalive_s(-3.0).build().unwrap_err();
+        assert!(matches!(err, ScenarioError::BadOverride(_)));
+        let mut sys = SystemSpec::new("serverless-lora");
+        sys.batching = Some(BatchingOverride::Fixed { size: 0, delay_s: 0.1 });
+        let err = ScenarioSpec::builder("t").system_spec(sys).build().unwrap_err();
+        assert!(matches!(err, ScenarioError::BadOverride(_)));
+    }
+
+    #[test]
+    fn rejects_too_fine_series_bucket() {
+        let err = ScenarioSpec::builder("t")
+            .horizon_s(3600.0)
+            .bill_series(0.01)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ScenarioError::BadSeriesBucket(_)));
+        let err = ScenarioSpec::builder("t").bill_series(-1.0).build().unwrap_err();
+        assert!(matches!(err, ScenarioError::BadSeriesBucket(_)));
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_workload_kind() {
+        let err = ScenarioSpec::builder("t")
+            .workload(WorkloadSpec::SingleInvocation { model: "gpt-5".into() })
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ScenarioError::BadWorkload(_)));
+        let j = Json::parse(
+            r#"{"name":"x","system":{"id":"vllm"},"workload":{"kind":"nope"}}"#,
+        )
+        .unwrap();
+        let err = ScenarioSpec::from_json(&j).unwrap_err();
+        assert!(matches!(err, ScenarioError::Parse(_)));
+        assert!(err.to_string().contains("zipf-fleet"), "lists valid kinds: {err}");
+    }
+
+    #[test]
+    fn parse_reports_missing_required_fields() {
+        for (text, needle) in [
+            (r#"{"system":{"id":"vllm"},"workload":{"kind":"paper"}}"#, "name"),
+            (r#"{"name":"x","workload":{"kind":"paper"}}"#, "system"),
+            (r#"{"name":"x","system":{"id":"vllm"}}"#, "workload"),
+        ] {
+            let err = ScenarioSpec::from_json(&Json::parse(text).unwrap()).unwrap_err();
+            assert!(err.to_string().contains(needle), "{text} -> {err}");
+        }
+    }
+
+    #[test]
+    fn summary_names_the_pieces() {
+        let sum = lora_spec().summary();
+        assert!(sum.contains("ServerlessLoRA"));
+        assert!(sum.contains("Bursty"));
+        assert!(sum.contains("300"));
+    }
+}

@@ -62,6 +62,7 @@ use crate::cluster::GpuId;
 use crate::coordinator::policy::{AggregateBillSample, ClassBillSample};
 use crate::sim::dispatch::BatchState;
 use crate::sim::engine::Engine;
+use crate::sim::observe::Observer;
 
 /// Quantize GB to integer milli-GB (the aggregate's fixed-point unit).
 /// Sub-milli-GB residue (f64 ledger noise) rounds to zero instead of
@@ -71,9 +72,10 @@ fn milli_gb(gb: f64) -> i64 {
 }
 
 /// The billing classes (see module docs). Discriminants index
-/// [`BillingIndex::sums`].
+/// [`BillingIndex::sums`]. Public: observer hooks
+/// (`sim::observe::Observer::on_gpu_reclass`) report class transitions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub(super) enum BillClass {
+pub enum BillClass {
     Empty = 0,
     ActiveExec = 1,
     ActiveLoading = 2,
@@ -145,8 +147,8 @@ pub(super) struct BillingIndex {
     /// channel each event, so neither side re-allocates on the hot
     /// path).
     scratch: Vec<GpuId>,
-    /// Measure `bill_wall_s` (fleet bench only — `Instant` calls are not
-    /// free at millions of events per second).
+    /// Measure the split billing wall-clock meters (fleet bench only —
+    /// `Instant` calls are not free at millions of events per second).
     timed: bool,
     /// cfg(test): derive every sample from a brute-force scan instead of
     /// the running sums (the differential cost oracle).
@@ -155,11 +157,16 @@ pub(super) struct BillingIndex {
 }
 
 impl BillingIndex {
-    fn set(&mut self, g: GpuId, new: GpuBillState) {
-        if let Some(old) = self.state.insert(g, new) {
+    /// Install one GPU's state, folding the delta into the class sums.
+    /// Returns the displaced state so the caller can report class
+    /// *transitions* to observers.
+    fn set(&mut self, g: GpuId, new: GpuBillState) -> Option<GpuBillState> {
+        let old = self.state.insert(g, new);
+        if let Some(old) = old {
             self.sums[old.class as usize].sub(old);
         }
         self.sums[new.class as usize].add(new);
+        old
     }
 
     fn remove(&mut self, g: GpuId) {
@@ -193,21 +200,36 @@ impl BillingIndex {
 
 impl Engine {
     /// Integrate cost over `[last_bill_t, until)`: one aggregate sample,
-    /// one `BillingModel::bill` call — no per-GPU work.
+    /// priced by the built-in [`BilledCost`] observer — no per-GPU work.
+    /// The same sample then fans out to the opt-in series sampler and
+    /// any attached observers (after the built-in, so extras can never
+    /// perturb the money path).
+    ///
+    /// [`BilledCost`]: crate::sim::observe::BilledCost
     pub(super) fn bill_interval(&mut self, until: f64) {
         let dt = until - self.last_bill_t;
-        if dt <= 0.0 || !self.policies.billing.needs_interval() {
+        if dt <= 0.0 || !self.cost_obs.model.needs_interval() {
             self.last_bill_t = until.max(self.last_bill_t);
             return;
         }
-        let t0 = self.bill.timed.then(Instant::now);
+        let t0 = self.last_bill_t;
+        let timer = self.bill.timed.then(Instant::now);
         let sample = self.bill_sample();
-        self.policies.billing.bill(&sample, dt, &mut self.cost);
+        Observer::on_bill_sample(&mut self.cost_obs, t0, dt, &sample);
         self.stats.bill_samples += 1;
-        if let Some(t0) = t0 {
-            self.stats.bill_wall_s += t0.elapsed().as_secs_f64();
-        }
         self.last_bill_t = until;
+        if let Some(s) = self.series.as_mut() {
+            s.on_bill_sample(t0, dt, &sample);
+        }
+        for ob in &mut self.observers {
+            ob.on_bill_sample(t0, dt, &sample);
+        }
+        // The meter covers the whole per-sample path: production,
+        // pricing, and the fan-out to the series sampler / attached
+        // observers — so enabling a sink shows up in the trajectory.
+        if let Some(timer) = timer {
+            self.stats.bill_sample_wall_s += timer.elapsed().as_secs_f64();
+        }
     }
 
     fn bill_sample(&self) -> AggregateBillSample {
@@ -219,8 +241,10 @@ impl Engine {
         BillingIndex::sample(&self.bill.sums)
     }
 
-    /// Measure billing wall-clock into `RunStats::bill_wall_s` (the
-    /// fleet bench's "billing share" record). Off by default.
+    /// Measure billing wall-clock into the split meters
+    /// (`RunStats::bill_sample_wall_s` for sampling + pricing,
+    /// `bill_reclass_wall_s` for class maintenance) — the fleet bench's
+    /// "billing share" record. Off by default.
     pub fn set_bill_timing(&mut self, on: bool) {
         self.bill.timed = on;
     }
@@ -234,8 +258,11 @@ impl Engine {
 
     /// The single choke point: re-derive one GPU's class + quantized
     /// footprint and fold the delta into the class sums. O(log G).
+    /// Class *transitions* (not same-class footprint updates) fire the
+    /// `on_gpu_reclass` observer hook.
     pub(super) fn reclassify_gpu(&mut self, g: GpuId) {
         self.stats.bill_reclass += 1;
+        let timer = self.bill.timed.then(Instant::now);
         let Some(gpu) = self.cluster.try_gpu(g) else {
             self.bill.remove(g); // trimmed away (pre-run cluster shaping)
             return;
@@ -248,7 +275,20 @@ impl Engine {
             self.gpu_loading[&g] > 0,
             self.bill.warm_here(g),
         );
-        self.bill.set(g, GpuBillState { class, used_milli, total_milli });
+        let old = self.bill.set(g, GpuBillState { class, used_milli, total_milli });
+        if let Some(timer) = timer {
+            self.stats.bill_reclass_wall_s += timer.elapsed().as_secs_f64();
+        }
+        let from = old.map(|s| s.class);
+        if from != Some(class) {
+            self.emit_gpu_reclass(g, from, class);
+        }
+    }
+
+    /// Snapshot of every GPU's current billing class, in GPU order
+    /// (observer attach-time replay).
+    pub(super) fn bill_classes(&self) -> Vec<(GpuId, BillClass)> {
+        self.bill.state.iter().map(|(&g, s)| (g, s.class)).collect()
     }
 
     /// Classify every GPU from scratch (post-deploy initialisation).
@@ -298,7 +338,9 @@ impl Engine {
     }
 
     /// A function entered its keep-alive window: bump the warm count on
-    /// every GPU it resides on. O(residency of f), not O(G).
+    /// every GPU it resides on. O(residency of f), not O(G). Fires the
+    /// `on_keepalive(warm = true)` observer hook on real entries only
+    /// (window extensions are silent).
     pub(super) fn note_function_warm(&mut self, f: usize) {
         if !self.bill.warm_fns.insert(f) {
             return; // already warm — the window only moved
@@ -307,6 +349,7 @@ impl Engine {
             *self.bill.warm_on.entry(g).or_insert(0) += 1;
             self.reclassify_gpu(g);
         }
+        self.emit_keepalive(f, true);
     }
 
     /// A function's keep-alive window was swept: drop its warm counts.
@@ -317,7 +360,8 @@ impl Engine {
     /// reuse it for eviction instead of re-querying the index.
     pub(super) fn note_function_cold(&mut self, f: usize) -> Vec<GpuId> {
         let gpus = self.cluster.gpus_with_function(f);
-        if self.bill.warm_fns.remove(&f) {
+        let was_warm = self.bill.warm_fns.remove(&f);
+        if was_warm {
             for &g in &gpus {
                 // A residency change earlier in the same event can
                 // leave this count pending its drain refresh (the GPU
@@ -333,6 +377,7 @@ impl Engine {
                 }
                 self.reclassify_gpu(g);
             }
+            self.emit_keepalive(f, false);
         }
         gpus
     }
@@ -573,16 +618,19 @@ mod tests {
     }
 
     /// Billing wall-clock metering is opt-in and accumulates only when
-    /// enabled.
+    /// enabled — and the meter is split so sampling cost and
+    /// reclassification (drain) cost are attributable separately.
     #[test]
-    fn bill_timing_is_opt_in() {
+    fn bill_timing_is_opt_in_and_split() {
         let cfg = SystemConfig::serverless_lora();
         let w = workload(2, 0.05, 300.0, Pattern::Normal, 3);
         let (_, _, off) = Engine::new(cfg.clone(), Cluster::new(1, 2, 4), w.clone(), 1).run();
-        assert_eq!(off.bill_wall_s, 0.0);
+        assert_eq!(off.bill_sample_wall_s, 0.0);
+        assert_eq!(off.bill_reclass_wall_s, 0.0);
         let mut e = Engine::new(cfg, Cluster::new(1, 2, 4), w, 1);
         e.set_bill_timing(true);
         let (_, _, on) = e.run();
-        assert!(on.bill_wall_s > 0.0, "timed run recorded no billing time");
+        assert!(on.bill_sample_wall_s > 0.0, "timed run recorded no sampling time");
+        assert!(on.bill_reclass_wall_s > 0.0, "timed run recorded no reclass time");
     }
 }

@@ -65,7 +65,7 @@ impl Engine {
                 dedicated: &mut self.dedicated,
                 stats: &mut self.stats,
             };
-            self.policies.preload.on_arrival(f, req.arrival_s, &mut env);
+            self.preload.on_arrival(f, req.arrival_s, &mut env);
         }
         // A dispatch above already re-armed wakeups for the residual
         // queue (cancelling the pre-dispatch checks); arm only if it
@@ -93,7 +93,7 @@ impl Engine {
             EventKind::QueueCheck(f),
         );
         let mut expiry = None;
-        if let Some(t) = self.policies.batching.expiry_time(&self.queues[f]) {
+        if let Some(t) = self.batching.expiry_time(&self.queues[f]) {
             if t.is_finite() && t > self.now {
                 expiry = Some(self.events.push(t, EventKind::QueueCheck(f)));
             }
@@ -103,8 +103,7 @@ impl Engine {
 
     pub(super) fn should_dispatch(&self, f: usize) -> bool {
         let target_idle = || self.target_gpu_idle(f);
-        self.policies
-            .batching
+        self.batching
             .should_dispatch(&self.queues[f], self.now, &target_idle)
     }
 
@@ -158,7 +157,7 @@ impl Engine {
                 return;
             }
             // Eq. 5 prioritisation (adaptive policies; fixed mode FIFO).
-            if self.policies.batching.prioritise_by_margin() {
+            if self.batching.prioritise_by_margin() {
                 ready.sort_by(|&a, &b| self.margin(a).total_cmp(&self.margin(b)));
             }
             let f = ready[0];
@@ -204,7 +203,7 @@ impl Engine {
 
         // Desired batch under the policy's sizing rule (Eq. 2 SLO bound
         // for adaptive, the fixed size otherwise).
-        let want = self.policies.batching.desired_batch(&self.queues[f]);
+        let want = self.batching.desired_batch(&self.queues[f]);
 
         // Memory needed: KV for the batch + any artifacts still missing.
         let readiness = Router::readiness(&self.cluster, &spec, gpu);
@@ -224,7 +223,7 @@ impl Engine {
 
         if self.cluster.gpu(gpu).free_gb() < need_gb {
             let spill = self.cluster_spill_target(gpu);
-            let plan = self.policies.offload.try_free(
+            let plan = self.offload.try_free(
                 &mut self.cluster,
                 &mut self.registry,
                 gpu,
@@ -306,7 +305,7 @@ impl Engine {
             *load_phases.entry(Phase::ContainerInit).or_insert(0.0) +=
                 params::CUDA_CONTEXT_INIT_S;
             *load_phases.entry(Phase::KernelCompile).or_insert(0.0) +=
-                self.policies.preload.scaleout_kernel_s(f, &spec.model);
+                self.preload.scaleout_kernel_s(f, &spec.model);
         }
 
         let total_load: f64 = load_phases.values().sum();
@@ -393,7 +392,7 @@ impl Engine {
         // A pre-warmed instance (policy-staged kernels + CUDA context) is
         // as good as a keep-alive-warm one — the §6.3 claim that fully
         // pre-loaded cold starts run at warm-start speed.
-        let warm_instance = self.policies.preload.prewarmed(ready)
+        let warm_instance = self.preload.prewarmed(ready)
             || (self.keepalive.is_warm(f, self.now) && ready.cuda_context);
         // O(log) container-residency lookups via the cluster index — the
         // old closures scanned every container per cold dispatch.
@@ -418,7 +417,7 @@ impl Engine {
             container_has_own_backbone: container_has(ArtifactKind::Backbone),
             container_has_model_backbone,
         };
-        let phases = self.policies.preload.load_phases(&query);
+        let phases = self.preload.load_phases(&query);
 
         // Ledger mutations, driven by readiness alone.
         if !ready.backbone_on_gpu {
@@ -573,7 +572,7 @@ impl Engine {
             let tpot = own_decode / r.output_tokens.max(1) as f64;
             let outcome: RequestOutcome =
                 crate::metrics::outcome_from_phases(r, phases, tpot, b);
-            self.metrics.record(outcome);
+            self.emit_request_complete(outcome);
         }
 
         // Release resources.

@@ -14,17 +14,20 @@ use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::artifact::{ArtifactKind, FunctionSpec};
 use crate::cluster::{Cluster, GpuId};
-use crate::coordinator::policy::{PolicyBundle, PolicyEnv};
+use crate::coordinator::policy::{
+    BatchingPolicy, OffloadPolicy, PolicyBundle, PolicyEnv, PreloadPolicy,
+};
 use crate::coordinator::{BatchQueue, KeepAlive};
 use crate::cost::CostTracker;
-use crate::metrics::RunMetrics;
+use crate::metrics::{RequestOutcome, RunMetrics};
 pub use crate::metrics::RunStats;
 use crate::sharing::BackboneRegistry;
-use crate::sim::billing::BillingIndex;
+use crate::sim::billing::{BillClass, BillingIndex};
 use crate::sim::config::SystemConfig;
 use crate::sim::dispatch::Batch;
 use crate::sim::events::{EventKind, EventQueue, EventToken};
 use crate::sim::exec::GpuExec;
+use crate::sim::observe::{BillSeriesSampler, BilledCost, Observer, RunOutput};
 use crate::trace::Request;
 
 /// The ≤2 outstanding wakeups for one function's queue (debounce settle
@@ -55,7 +58,13 @@ pub struct Workload {
 
 pub struct Engine {
     pub(super) cfg: SystemConfig,
-    pub(super) policies: PolicyBundle,
+    /// §4.1 artifact staging policy (what is resident, what a cold
+    /// start costs) — from the config's [`PolicyBundle`].
+    pub(super) preload: Box<dyn PreloadPolicy>,
+    /// §4.2 batching policy (fire-now, sizing, prioritisation).
+    pub(super) batching: Box<dyn BatchingPolicy>,
+    /// §4.3 memory-pressure policy.
+    pub(super) offload: Box<dyn OffloadPolicy>,
     pub(super) cluster: Cluster,
     pub(super) registry: BackboneRegistry,
     pub(super) keepalive: KeepAlive,
@@ -108,8 +117,18 @@ pub struct Engine {
     pub(super) arrival_cursor: usize,
     /// Functions sharing each model (staging copies are per-model).
     pub(super) model_peers: BTreeMap<&'static str, Vec<usize>>,
+    /// Built-in observer #1: the per-request metrics sink.
     pub metrics: RunMetrics,
-    pub cost: CostTracker,
+    /// Built-in observer #2: the billing model pricing each aggregate
+    /// sample into the run's `CostTracker` (`sim::observe::BilledCost`).
+    pub(super) cost_obs: BilledCost,
+    /// Built-in observer #3 (opt-in): the coarse per-billing-class
+    /// time-series sampler (`Engine::enable_bill_series`).
+    pub(super) series: Option<BillSeriesSampler>,
+    /// Attached observers: push-based sinks receiving every hook, in
+    /// attach order (borrowed event data only — they cannot touch the
+    /// built-ins' state).
+    pub(super) observers: Vec<Box<dyn Observer>>,
     pub stats: RunStats,
     pub(super) last_bill_t: f64,
     /// Serverful: function → dedicated GPU.
@@ -140,9 +159,12 @@ impl Engine {
         for f in &workload.functions {
             model_peers.entry(f.model.name).or_default().push(f.id);
         }
+        let PolicyBundle { preload, batching, offload, billing } = cfg.bundle(seed);
         let mut e = Engine {
             keepalive: KeepAlive::new(cfg.keepalive_s.min(1e12)),
-            policies: cfg.bundle(seed),
+            preload,
+            batching,
+            offload,
             cfg,
             cluster,
             registry: BackboneRegistry::new(),
@@ -167,7 +189,9 @@ impl Engine {
             arrival_cursor: 0,
             model_peers,
             metrics: RunMetrics::default(),
-            cost: CostTracker::default(),
+            cost_obs: BilledCost::new(billing),
+            series: None,
+            observers: Vec::new(),
             stats: RunStats::default(),
             last_bill_t: 0.0,
             dedicated: BTreeMap::new(),
@@ -214,7 +238,7 @@ impl Engine {
             dedicated: &mut self.dedicated,
             stats: &mut self.stats,
         };
-        self.policies.preload.deploy(&mut env);
+        self.preload.deploy(&mut env);
     }
 
     /// Push the next pending arrival (if any) from the sorted stream.
@@ -265,14 +289,22 @@ impl Engine {
         self.finish()
     }
 
+    /// Drain the event queue, then return the full output surface
+    /// (metrics, cost, stats, and the opt-in bill series).
+    pub fn run_full(mut self) -> RunOutput {
+        while self.step() {}
+        self.finish_full()
+    }
+
     /// Final billing to the end of the workload window, then the
-    /// billing model's settlement (serverful: flat GPU-hours).
-    pub fn finish(mut self) -> (RunMetrics, CostTracker, RunStats) {
+    /// billing model's settlement (serverful: flat GPU-hours) and the
+    /// observers' `on_finish` hooks.
+    fn close(&mut self) {
         let end = self.duration_s.max(self.now);
         self.stats.events_cancelled = self.events.cancelled();
         self.bill_interval(end);
         let dedicated: BTreeSet<GpuId> = self.dedicated.values().cloned().collect();
-        self.policies.billing.finalize(dedicated.len(), end, &mut self.cost);
+        self.cost_obs.finalize(dedicated.len(), end);
         // Throughput denominators use the makespan (last completion),
         // not the arrival window — saturating workloads drain past it.
         let makespan = self
@@ -282,7 +314,98 @@ impl Engine {
             .map(|o| o.arrival_s + o.e2e_s)
             .fold(self.duration_s, f64::max);
         self.metrics.duration_s = makespan;
-        (self.metrics, self.cost, self.stats)
+        if let Some(s) = self.series.as_mut() {
+            s.on_finish(end);
+        }
+        for ob in &mut self.observers {
+            ob.on_finish(end);
+        }
+    }
+
+    /// Historical output tuple — a projection of [`Engine::finish_full`].
+    pub fn finish(self) -> (RunMetrics, CostTracker, RunStats) {
+        let out = self.finish_full();
+        (out.metrics, out.cost, out.stats)
+    }
+
+    /// Close the run and move out everything it produced.
+    pub fn finish_full(mut self) -> RunOutput {
+        self.close();
+        RunOutput {
+            metrics: self.metrics,
+            cost: self.cost_obs.cost,
+            stats: self.stats,
+            bill_series: self.series.map(BillSeriesSampler::into_series),
+        }
+    }
+
+    // ------------------------------------------------------- observers
+
+    /// Attach an [`Observer`]; it receives every hook, in attach
+    /// order. The current per-GPU billing
+    /// classification is replayed to it first (`from == None` marks
+    /// snapshot entries), so an observer attached after construction
+    /// still starts from a consistent picture. Push-only: the engine
+    /// does not hand observers back — share state out (e.g.
+    /// `Arc<Mutex<_>>`).
+    pub fn attach_observer(&mut self, mut ob: Box<dyn Observer>) {
+        let t = self.now;
+        for (g, class) in self.bill_classes() {
+            ob.on_gpu_reclass(t, g, None, class);
+        }
+        self.observers.push(ob);
+    }
+
+    /// Enable the opt-in coarse per-billing-class time-series sampler
+    /// (bucket width in sim seconds). The series comes back in
+    /// [`RunOutput::bill_series`]. Off by default; when off the run
+    /// takes zero additional samples and allocates nothing.
+    pub fn enable_bill_series(&mut self, bucket_s: f64) {
+        self.series = Some(BillSeriesSampler::new(bucket_s));
+    }
+
+    /// A request completed: the series sampler and attached observers
+    /// see `&outcome`, then the built-in metrics sink takes it by move
+    /// (no clone on the hot path). Observers hold no reference into the
+    /// engine, so this ordering is unobservable to them — metrics stay
+    /// unperturbable either way.
+    pub(super) fn emit_request_complete(&mut self, outcome: RequestOutcome) {
+        let t = self.now;
+        if let Some(s) = self.series.as_mut() {
+            s.on_request_complete(t, &outcome);
+        }
+        for ob in &mut self.observers {
+            ob.on_request_complete(t, &outcome);
+        }
+        self.metrics.record(outcome);
+    }
+
+    /// A GPU's billing class transitioned (`sim::billing::reclassify_gpu`).
+    pub(super) fn emit_gpu_reclass(&mut self, g: GpuId, from: Option<BillClass>, to: BillClass) {
+        if self.series.is_none() && self.observers.is_empty() {
+            return;
+        }
+        let t = self.now;
+        if let Some(s) = self.series.as_mut() {
+            s.on_gpu_reclass(t, g, from, to);
+        }
+        for ob in &mut self.observers {
+            ob.on_gpu_reclass(t, g, from, to);
+        }
+    }
+
+    /// A function entered/left the keep-alive warm set.
+    pub(super) fn emit_keepalive(&mut self, f: usize, warm: bool) {
+        if self.series.is_none() && self.observers.is_empty() {
+            return;
+        }
+        let t = self.now;
+        if let Some(s) = self.series.as_mut() {
+            s.on_keepalive(t, f, warm);
+        }
+        for ob in &mut self.observers {
+            ob.on_keepalive(t, f, warm);
+        }
     }
 
     /// Keep the single keep-alive sweep armed at exactly the earliest
@@ -327,7 +450,7 @@ impl Engine {
             // returned snapshot is the function's resident-GPU set,
             // reused for the eviction loop.
             let resident = self.note_function_cold(f);
-            if self.policies.preload.retains_artifacts(f) {
+            if self.preload.retains_artifacts(f) {
                 continue;
             }
             if self.fn_inflight[f] > 0 {
@@ -353,7 +476,7 @@ impl Engine {
                     self.model_peers.get(model).map(Vec::as_slice).unwrap_or_default();
                 let still_needed = peers.iter().any(|&s| {
                     self.keepalive.is_warm(s, self.now)
-                        || self.policies.preload.retains_artifacts(s)
+                        || self.preload.retains_artifacts(s)
                 });
                 if !still_needed {
                     for g in self.registry.hosts(model).to_vec() {

@@ -1,8 +1,10 @@
 //! Discrete-event simulation of the serving systems, decomposed into an
 //! orchestrating `engine`, the `events` queue, the batch-lifecycle
 //! `dispatch` path, event-integrated `billing`, the GPU processor-sharing
-//! executor (Eq. 4) in `exec`, and the system/baseline `config`s that
-//! build the policy bundles driving it all (see DESIGN.md §3).
+//! executor (Eq. 4) in `exec`, the `observe` output surface (the
+//! `Observer` hook contract the engine emits its results through), and
+//! the system/baseline `config`s that build the policy bundles driving
+//! it all (see DESIGN.md §3 and §"Scenario API & observers").
 
 pub mod billing;
 pub mod config;
@@ -10,9 +12,12 @@ pub mod dispatch;
 pub mod engine;
 pub mod events;
 pub mod exec;
+pub mod observe;
 pub mod workloads;
 
+pub use billing::BillClass;
 pub use config::{BatchingMode, PreloadMode, SystemConfig};
 pub use engine::{Engine, RunStats, Workload};
 pub use events::{Event, EventKind, EventQueue, EventToken};
 pub use exec::GpuExec;
+pub use observe::{BillSeries, BillSeriesSampler, BilledCost, Observer, RunOutput};

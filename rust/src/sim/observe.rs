@@ -1,0 +1,352 @@
+//! The engine's **output surface**: the [`Observer`] hook contract.
+//!
+//! Historically the engine hard-wired its outputs — `RunMetrics` absorbed
+//! completions, `CostTracker` absorbed billing samples — and anything
+//! else (per-class cost trajectories, completion logs, live dashboards)
+//! meant editing the event loop. This module inverts that: the engine
+//! *emits* a small set of typed events and every consumer — built-in or
+//! attached — is an [`Observer`].
+//!
+//! ## Hooks
+//!
+//! * [`Observer::on_request_complete`] — once per finished request, in
+//!   completion order, with the full [`RequestOutcome`].
+//! * [`Observer::on_bill_sample`] — once per positive-width inter-event
+//!   interval on interval-billed (serverless) runs: the aggregate
+//!   per-class footprint that was live over `[t0, t0+dt)`. Serverful
+//!   runs never sample (flat billing), so observers see nothing there —
+//!   the same contract `RunStats::bill_samples` records.
+//! * [`Observer::on_gpu_reclass`] — when a GPU's billing **class
+//!   transitions** (`from != to`). Same-class footprint updates do not
+//!   fire it. `from == None` marks snapshot entries: the deploy-time
+//!   classification, replayed to each observer when it is attached.
+//! * [`Observer::on_keepalive`] — when a function actually enters
+//!   (`warm == true`) or leaves (`warm == false`) the keep-alive warm
+//!   set. Window extensions of an already-warm function do not fire it.
+//! * [`Observer::on_finish`] — once, after the final billing interval
+//!   and settlement, with the billing end time.
+//!
+//! ## Built-ins
+//!
+//! The engine's two historical outputs are now observers of this same
+//! contract: [`RunMetrics`] (completion hook) and [`BilledCost`] (the
+//! billing model pricing each aggregate sample into its `CostTracker`).
+//! Attached observers receive the same hooks but only ever see borrowed
+//! event data and hold no reference into the engine, so they cannot
+//! perturb a run's metrics or cost by a single bit. (`BilledCost` is
+//! invoked before the fan-out; the metrics sink takes the outcome by
+//! move after it — an ordering no observer can detect.) The opt-in
+//! [`BillSeriesSampler`] (per-billing-class time series, the §6.4
+//! cost-breakdown trajectory) is the third built-in, enabled with
+//! [`Engine::enable_bill_series`].
+//!
+//! Attached observers ([`Engine::attach_observer`]) are push-based
+//! sinks: the engine does not return them. An observer that needs to
+//! surface state after the run should share it (e.g. an
+//! `Arc<Mutex<_>>` clone kept by the caller).
+//!
+//! [`Engine::enable_bill_series`]: crate::sim::Engine::enable_bill_series
+//! [`Engine::attach_observer`]: crate::sim::Engine::attach_observer
+
+use crate::cluster::GpuId;
+use crate::coordinator::policy::{AggregateBillSample, BillingModel, ClassBillSample};
+use crate::cost::CostTracker;
+use crate::metrics::{RequestOutcome, RunMetrics, RunStats};
+use crate::sim::billing::BillClass;
+use crate::util::json::{arr, num, obj, Json};
+
+/// Engine output hooks. Every method has a no-op default so observers
+/// implement only what they consume. See the module docs for the exact
+/// firing contract of each hook.
+pub trait Observer: Send {
+    /// A request finished (its batch's decode completed) at `t_s`.
+    fn on_request_complete(&mut self, _t_s: f64, _outcome: &RequestOutcome) {}
+
+    /// The cluster's aggregate billable state over `[t0_s, t0_s + dt_s)`.
+    fn on_bill_sample(&mut self, _t0_s: f64, _dt_s: f64, _sample: &AggregateBillSample) {}
+
+    /// GPU `gpu` moved between billing classes at `t_s` (`from` is
+    /// `None` for snapshot entries: the deploy-time classification,
+    /// replayed when an observer is attached).
+    fn on_gpu_reclass(&mut self, _t_s: f64, _gpu: GpuId, _from: Option<BillClass>, _to: BillClass) {
+    }
+
+    /// Function `function` entered (`warm`) or left (`!warm`) the
+    /// keep-alive warm set at `t_s`.
+    fn on_keepalive(&mut self, _t_s: f64, _function: usize, _warm: bool) {}
+
+    /// The run is over; `end_s` is the billing end instant.
+    fn on_finish(&mut self, _end_s: f64) {}
+}
+
+/// `RunMetrics` is the built-in completion observer: it records every
+/// outcome it is handed. (The engine hands it the outcome by move — no
+/// clone on the hot path — but the contract is exactly this hook.)
+impl Observer for RunMetrics {
+    fn on_request_complete(&mut self, _t_s: f64, outcome: &RequestOutcome) {
+        self.record(outcome.clone());
+    }
+}
+
+/// The built-in cost observer: a [`BillingModel`] pricing each aggregate
+/// bill sample into a [`CostTracker`]. This is the engine's money path —
+/// `Engine::finish` returns `self.cost_obs.cost` — kept bit-identical to
+/// the historical inline `billing.bill(...)` call (same sample, same
+/// float-op order).
+pub struct BilledCost {
+    pub model: Box<dyn BillingModel>,
+    pub cost: CostTracker,
+}
+
+impl BilledCost {
+    pub fn new(model: Box<dyn BillingModel>) -> Self {
+        BilledCost { model, cost: CostTracker::default() }
+    }
+
+    /// End-of-run settlement (serverful flat GPU-hours).
+    pub fn finalize(&mut self, dedicated_gpus: usize, end_s: f64) {
+        self.model.finalize(dedicated_gpus, end_s, &mut self.cost);
+    }
+}
+
+impl Observer for BilledCost {
+    fn on_bill_sample(&mut self, _t0_s: f64, dt_s: f64, sample: &AggregateBillSample) {
+        self.model.bill(sample, dt_s, &mut self.cost);
+    }
+}
+
+/// Everything one engine run produced. `Engine::run_full` /
+/// `finish_full` return this; the historical `(RunMetrics, CostTracker,
+/// RunStats)` tuple API survives as a thin projection of it.
+pub struct RunOutput {
+    pub metrics: RunMetrics,
+    pub cost: CostTracker,
+    pub stats: RunStats,
+    /// The per-billing-class time series, when
+    /// `Engine::enable_bill_series` was called; `None` otherwise.
+    pub bill_series: Option<BillSeries>,
+}
+
+/// One coarse bucket of the per-class cost trajectory: each billing
+/// class's GB·s and GPU·s integrated over `[i·bucket_s, (i+1)·bucket_s)`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BillBucket {
+    pub active_gb_s: f64,
+    pub active_gpu_s: f64,
+    pub loading_gb_s: f64,
+    pub loading_gpu_s: f64,
+    pub idle_warm_gb_s: f64,
+    pub idle_warm_gpu_s: f64,
+    pub idle_cold_gb_s: f64,
+    pub idle_cold_gpu_s: f64,
+}
+
+impl BillBucket {
+    fn add(&mut self, s: &AggregateBillSample, w: f64) {
+        let acc = |gb: &mut f64, gpu: &mut f64, c: &ClassBillSample| {
+            *gb += c.used_gb * w;
+            *gpu += c.gpus as f64 * w;
+        };
+        acc(&mut self.active_gb_s, &mut self.active_gpu_s, &s.active);
+        acc(&mut self.loading_gb_s, &mut self.loading_gpu_s, &s.loading);
+        acc(&mut self.idle_warm_gb_s, &mut self.idle_warm_gpu_s, &s.idle_warm);
+        acc(&mut self.idle_cold_gb_s, &mut self.idle_cold_gpu_s, &s.idle_cold);
+    }
+}
+
+/// The finished per-billing-class time series (§6.4 cost-breakdown
+/// trajectory): bucket `i` covers `[i·bucket_s, (i+1)·bucket_s)` of sim
+/// time. Buckets past the last billed instant are simply absent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BillSeries {
+    pub bucket_s: f64,
+    pub buckets: Vec<BillBucket>,
+}
+
+impl BillSeries {
+    /// Σ over buckets of a class's GB·s (cross-check against the cost
+    /// tracker's integrals).
+    pub fn total_gb_s(&self, class: BillClass) -> f64 {
+        self.buckets
+            .iter()
+            .map(|b| match class {
+                BillClass::ActiveExec => b.active_gb_s,
+                BillClass::ActiveLoading => b.loading_gb_s,
+                BillClass::IdleWarm => b.idle_warm_gb_s,
+                BillClass::IdleCold => b.idle_cold_gb_s,
+                BillClass::Empty => 0.0,
+            })
+            .sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let buckets = self.buckets.iter().enumerate().map(|(i, b)| {
+            obj(vec![
+                ("t0_s", num(i as f64 * self.bucket_s)),
+                ("active_gb_s", num(b.active_gb_s)),
+                ("active_gpu_s", num(b.active_gpu_s)),
+                ("loading_gb_s", num(b.loading_gb_s)),
+                ("loading_gpu_s", num(b.loading_gpu_s)),
+                ("idle_warm_gb_s", num(b.idle_warm_gb_s)),
+                ("idle_warm_gpu_s", num(b.idle_warm_gpu_s)),
+                ("idle_cold_gb_s", num(b.idle_cold_gb_s)),
+                ("idle_cold_gpu_s", num(b.idle_cold_gpu_s)),
+            ])
+        });
+        obj(vec![("bucket_s", num(self.bucket_s)), ("buckets", arr(buckets))])
+    }
+}
+
+/// Opt-in coarse per-billing-class time-series sampler — the third
+/// built-in observer. It rides the existing `on_bill_sample` stream (it
+/// takes **zero** additional samples: `RunStats::bill_samples` is
+/// unchanged whether it is enabled or not), splitting each inter-event
+/// interval across its coarse buckets. Cost model: O(1) amortized per
+/// sample (an interval touches ⌈dt/bucket_s⌉ buckets and intervals are
+/// almost always far shorter than a bucket), memory O(horizon /
+/// bucket_s) — which is why the bucket is coarse and validated against
+/// the horizon by the scenario layer.
+pub struct BillSeriesSampler {
+    bucket_s: f64,
+    buckets: Vec<BillBucket>,
+}
+
+impl BillSeriesSampler {
+    pub fn new(bucket_s: f64) -> Self {
+        assert!(
+            bucket_s.is_finite() && bucket_s > 0.0,
+            "bill-series bucket must be a positive number of seconds"
+        );
+        BillSeriesSampler { bucket_s, buckets: Vec::new() }
+    }
+
+    pub fn into_series(self) -> BillSeries {
+        BillSeries { bucket_s: self.bucket_s, buckets: self.buckets }
+    }
+}
+
+impl Observer for BillSeriesSampler {
+    fn on_bill_sample(&mut self, t0_s: f64, dt_s: f64, sample: &AggregateBillSample) {
+        let lo = t0_s.max(0.0);
+        let t1 = t0_s + dt_s;
+        if t1 <= lo {
+            return;
+        }
+        // Walk the bucket *indices* overlapping [lo, t1) and clip the
+        // interval against each bucket's own bounds. (A cursor that
+        // advances `lo` to the computed bucket edge can strand the rest
+        // of an interval when `lo/bucket` floor-rounds into the
+        // previous bucket at an exact boundary; clipping per index
+        // conserves the integral up to float slivers instead.)
+        let i0 = (lo / self.bucket_s).floor() as usize;
+        let i1 = ((t1 / self.bucket_s).ceil() as usize).max(i0 + 1);
+        if self.buckets.len() < i1 {
+            self.buckets.resize(i1, BillBucket::default());
+        }
+        for idx in i0..i1 {
+            let b_lo = idx as f64 * self.bucket_s;
+            let b_hi = b_lo + self.bucket_s;
+            let w = t1.min(b_hi) - lo.max(b_lo);
+            if w > 0.0 {
+                self.buckets[idx].add(sample, w);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(active_gb: f64, warm_gb: f64) -> AggregateBillSample {
+        AggregateBillSample {
+            active: ClassBillSample { gpus: 1, used_gb: active_gb, total_gb: 48.0 },
+            loading: ClassBillSample::default(),
+            idle_warm: ClassBillSample { gpus: 2, used_gb: warm_gb, total_gb: 96.0 },
+            idle_cold: ClassBillSample::default(),
+        }
+    }
+
+    #[test]
+    fn sampler_splits_interval_across_buckets_exactly() {
+        let mut s = BillSeriesSampler::new(10.0);
+        // [5, 25) at 4 GB active: 5 s in bucket 0, 10 s in bucket 1,
+        // 5 s in bucket 2.
+        s.on_bill_sample(5.0, 20.0, &sample(4.0, 1.0));
+        let series = s.into_series();
+        assert_eq!(series.buckets.len(), 3);
+        assert!((series.buckets[0].active_gb_s - 20.0).abs() < 1e-9);
+        assert!((series.buckets[1].active_gb_s - 40.0).abs() < 1e-9);
+        assert!((series.buckets[2].active_gb_s - 20.0).abs() < 1e-9);
+        // GPU·s track the class counts (2 idle-warm GPUs).
+        assert!((series.buckets[1].idle_warm_gpu_s - 20.0).abs() < 1e-9);
+        // Totals conserve the interval integral.
+        assert!((series.total_gb_s(BillClass::ActiveExec) - 80.0).abs() < 1e-9);
+        assert!((series.total_gb_s(BillClass::IdleWarm) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampler_handles_exact_bucket_boundaries() {
+        let mut s = BillSeriesSampler::new(10.0);
+        s.on_bill_sample(10.0, 10.0, &sample(1.0, 0.0));
+        let series = s.into_series();
+        assert_eq!(series.buckets.len(), 2);
+        assert_eq!(series.buckets[0].active_gb_s, 0.0);
+        assert!((series.buckets[1].active_gb_s - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampler_accumulates_many_short_intervals() {
+        let mut s = BillSeriesSampler::new(60.0);
+        for i in 0..600 {
+            s.on_bill_sample(i as f64 * 0.1, 0.1, &sample(2.0, 0.0));
+        }
+        let series = s.into_series();
+        // Float noise near the 60 s edge may spill an ulp-scale sliver
+        // into a second bucket — the integral must still conserve.
+        assert!(series.buckets.len() <= 2, "{}", series.buckets.len());
+        assert!((series.buckets[0].active_gb_s - 120.0).abs() < 1e-6);
+        assert!((series.total_gb_s(BillClass::ActiveExec) - 120.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn series_json_shape() {
+        let mut s = BillSeriesSampler::new(10.0);
+        s.on_bill_sample(0.0, 10.0, &sample(3.0, 1.5));
+        let j = s.into_series().to_json();
+        assert_eq!(j.get("bucket_s").unwrap().as_f64(), Some(10.0));
+        let b0 = j.get("buckets").unwrap().idx(0).unwrap();
+        assert_eq!(b0.get("t0_s").unwrap().as_f64(), Some(0.0));
+        assert!((b0.get("active_gb_s").unwrap().as_f64().unwrap() - 30.0).abs() < 1e-9);
+        assert!((b0.get("idle_warm_gb_s").unwrap().as_f64().unwrap() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn billed_cost_prices_like_the_model() {
+        use crate::coordinator::policy::ServerlessBilling;
+        let mut obs = BilledCost::new(Box::new(ServerlessBilling { sharing: true }));
+        obs.on_bill_sample(0.0, 2.0, &sample(10.0, 4.0));
+        // active 10 GB × 2 s; idle-warm 4 GB × 2 s.
+        assert!((obs.cost.gpu_active_gb_s - 20.0).abs() < 1e-9);
+        assert!((obs.cost.gpu_idle_gb_s - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_metrics_is_a_completion_observer() {
+        let mut m = RunMetrics::default();
+        let o = RequestOutcome {
+            id: 7,
+            function: 0,
+            arrival_s: 1.0,
+            phases: Default::default(),
+            ttft_s: 0.5,
+            tpot_s: 0.01,
+            e2e_s: 2.0,
+            output_tokens: 10,
+            batch_size: 1,
+        };
+        Observer::on_request_complete(&mut m, 3.0, &o);
+        assert_eq!(m.outcomes.len(), 1);
+        assert_eq!(m.outcomes[0].id, 7);
+    }
+}

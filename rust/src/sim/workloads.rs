@@ -73,6 +73,43 @@ pub fn throughput_workload(duration_s: f64, seed: u64) -> Workload {
     }
 }
 
+/// Fig. 2 motivation workload: `n_fns` Llama2-7B LoRA functions
+/// splitting ONE hot function's demand (`RATE_TIERS[0]`) evenly —
+/// Fig. 2a is the single-function case, Fig. 2b the four-way split
+/// where naive serverless loses its edge to backbone redundancy.
+pub fn small_multi_workload(n_fns: usize, duration_s: f64, seed: u64) -> Workload {
+    let functions: Vec<FunctionSpec> = (0..n_fns)
+        .map(|i| FunctionSpec::new(i, ModelProfile::llama2_7b(), i))
+        .collect();
+    let total = RATE_TIERS[0];
+    let rates: Vec<f64> = (0..n_fns).map(|_| total / n_fns as f64).collect();
+    let traces = functions
+        .iter()
+        .map(|fx| {
+            TraceSpec::new(fx.id, Pattern::Normal, rates[fx.id], seed + fx.id as u64)
+                .generate(duration_s)
+        })
+        .collect();
+    Workload { functions, requests: merge(traces), duration_s, rates }
+}
+
+/// Fig. 1 motivation workload: three Llama2-13B LoRA functions on the
+/// Azure-like Normal trace with descending rates.
+pub fn breakdown_13b_workload(duration_s: f64, seed: u64) -> Workload {
+    let functions: Vec<FunctionSpec> = (0..3)
+        .map(|i| FunctionSpec::new(i, ModelProfile::llama2_13b(), i))
+        .collect();
+    let rates = vec![1.0 / 120.0, 1.0 / 300.0, 1.0 / 600.0];
+    let traces = functions
+        .iter()
+        .map(|f| {
+            TraceSpec::new(f.id, Pattern::Normal, rates[f.id], seed + f.id as u64)
+                .generate(duration_s)
+        })
+        .collect();
+    Workload { functions, requests: merge(traces), duration_s, rates }
+}
+
 /// §6.3 single-invocation breakdown: one function, one request.
 pub fn single_invocation(model: ModelProfile) -> Workload {
     let f = FunctionSpec::new(0, model, 0);
@@ -354,6 +391,25 @@ mod tests {
             assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
             assert_eq!(x.function, y.function);
         }
+    }
+
+    #[test]
+    fn small_multi_splits_one_functions_demand() {
+        let w1 = small_multi_workload(1, 3600.0, 5);
+        let w4 = small_multi_workload(4, 3600.0, 5);
+        assert_eq!(w1.functions.len(), 1);
+        assert_eq!(w4.functions.len(), 4);
+        let t1: f64 = w1.rates.iter().sum();
+        let t4: f64 = w4.rates.iter().sum();
+        assert!((t1 - t4).abs() < 1e-12, "same total demand either way");
+    }
+
+    #[test]
+    fn breakdown_13b_shape() {
+        let w = breakdown_13b_workload(1800.0, 7);
+        assert_eq!(w.functions.len(), 3);
+        assert!(w.functions.iter().all(|f| f.model.name == "llama2-13b"));
+        assert!(w.rates[0] > w.rates[2]);
     }
 
     #[test]

@@ -59,6 +59,21 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integral number → u64 (seeds, counts). `None` for
+    /// negatives, fractions, or values past exact f64 integer range.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64()
+            .filter(|v| v.fract() == 0.0 && (0.0..=9.007e15).contains(v))
+            .map(|v| v as u64)
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -309,6 +324,15 @@ impl<'a> Parser<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bool_and_u64_accessors() {
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("1").unwrap().as_bool(), None);
+        assert_eq!(Json::parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+    }
 
     #[test]
     fn parse_scalars() {

@@ -1,0 +1,304 @@
+//! Scenario-API integration tests: JSON round-trip ⇒ bit-identical
+//! reruns, observer-hook accounting across a full simulation, and the
+//! committed example files' validity.
+
+use std::sync::{Arc, Mutex};
+
+use serverless_lora::cluster::GpuId;
+use serverless_lora::coordinator::policy::AggregateBillSample;
+use serverless_lora::metrics::RequestOutcome;
+use serverless_lora::scenario::{
+    self, ClusterSpec, ScenarioSpec, SystemSpec, WorkloadSpec, SYSTEM_IDS,
+};
+use serverless_lora::sim::{BillClass, Engine, Observer, SystemConfig};
+use serverless_lora::trace::Pattern;
+use serverless_lora::util::json::Json;
+
+fn tiny_cluster() -> ClusterSpec {
+    ClusterSpec::Uniform { nodes: 1, gpus_per_node: 2, containers_per_node: 4, trim_gpus: None }
+}
+
+/// Satellite acceptance: build → serialize → parse → rerun must produce
+/// **bit-identical** `RunMetrics` / `total_usd` for a family of specs
+/// spanning every workload family that runs cheaply.
+#[test]
+fn json_roundtrip_reruns_bit_identical() {
+    let specs = vec![
+        ScenarioSpec::builder("rt-paper")
+            .cluster(tiny_cluster())
+            .workload(WorkloadSpec::Paper { pattern: Pattern::Bursty, seed: 9 })
+            .horizon_s(300.0)
+            .seeds(vec![1, 7])
+            .build()
+            .unwrap(),
+        ScenarioSpec::builder("rt-small")
+            .system("serverless-llm")
+            .cluster(tiny_cluster())
+            .workload(WorkloadSpec::SmallMulti { n_fns: 4, seed: 5 })
+            .horizon_s(600.0)
+            .seeds(vec![3])
+            .build()
+            .unwrap(),
+        ScenarioSpec::builder("rt-insta")
+            .system("instainfer")
+            .hit_rate(0.8)
+            .cluster(tiny_cluster())
+            .workload(WorkloadSpec::Paper { pattern: Pattern::Normal, seed: 11 })
+            .horizon_s(300.0)
+            .seeds(vec![2])
+            .build()
+            .unwrap(),
+        ScenarioSpec::builder("rt-zipf")
+            .cluster(ClusterSpec::Uniform {
+                nodes: 1,
+                gpus_per_node: 4,
+                containers_per_node: 8,
+                trim_gpus: Some(3),
+            })
+            .workload(WorkloadSpec::ZipfFleetCov {
+                fns: 16,
+                skew: 1.2,
+                head: Pattern::Bursty,
+                tail: Pattern::Predictable,
+                seed: 3,
+            })
+            .horizon_s(300.0)
+            .seeds(vec![5])
+            .bill_series(60.0)
+            .build()
+            .unwrap(),
+        // Serverful needs a whole GPU per 13B function (26 GB of 48).
+        ScenarioSpec::builder("rt-vllm")
+            .system("vllm")
+            .cluster(ClusterSpec::Uniform {
+                nodes: 1,
+                gpus_per_node: 4,
+                containers_per_node: 8,
+                trim_gpus: None,
+            })
+            .workload(WorkloadSpec::Breakdown13b { seed: 7 })
+            .horizon_s(300.0)
+            .seeds(vec![1])
+            .build()
+            .unwrap(),
+    ];
+    for spec in specs {
+        let text = spec.to_json().dump();
+        let reparsed =
+            ScenarioSpec::from_json(&Json::parse(&text).expect("dump parses")).expect("round-trip");
+        assert_eq!(reparsed, spec, "round-trip changed the spec: {text}");
+        let a = scenario::run(&spec).unwrap();
+        let b = scenario::run(&reparsed).unwrap();
+        assert_eq!(a.runs.len(), b.runs.len());
+        for (x, y) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.metrics.outcomes.len(), y.metrics.outcomes.len());
+            for (ox, oy) in x.metrics.outcomes.iter().zip(&y.metrics.outcomes) {
+                assert_eq!(ox.id, oy.id, "{}: outcome order drifted", spec.name);
+                assert_eq!(ox.ttft_s.to_bits(), oy.ttft_s.to_bits(), "{}", spec.name);
+                assert_eq!(ox.e2e_s.to_bits(), oy.e2e_s.to_bits(), "{}", spec.name);
+            }
+            assert_eq!(
+                x.cost.total_usd().to_bits(),
+                y.cost.total_usd().to_bits(),
+                "{}: cost diverged after a JSON round-trip",
+                spec.name
+            );
+        }
+    }
+}
+
+/// Every committed example scenario file parses, validates, and
+/// round-trips (the CI dry-run step enforces the same from the binary).
+#[test]
+fn committed_example_scenarios_are_valid() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("examples/scenarios exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        seen += 1;
+        let text = std::fs::read_to_string(&path).unwrap();
+        let json = Json::parse(&text).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        let specs = scenario::specs_from_json(&json).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        assert!(!specs.is_empty(), "{path:?}");
+        for spec in &specs {
+            spec.validate().unwrap_or_else(|e| panic!("{path:?} '{}': {e}", spec.name));
+            let rt = ScenarioSpec::from_json(&Json::parse(&spec.to_json().dump()).unwrap())
+                .unwrap();
+            assert_eq!(&rt, spec, "{path:?}");
+        }
+    }
+    assert!(seen >= 5, "expected the committed example set, found {seen} files");
+}
+
+/// The paper_latency example reproduces the experiment suite's values:
+/// its ServerlessLoRA cell equals a direct engine run of the same
+/// (config, workload, cluster, seed) bit-for-bit.
+#[test]
+fn paper_latency_example_matches_direct_run() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios");
+    let text = std::fs::read_to_string(dir.join("paper_latency.json")).unwrap();
+    let specs = scenario::specs_from_json(&Json::parse(&text).unwrap()).unwrap();
+    let lora = specs
+        .iter()
+        .find(|s| s.name.contains("serverless-lora"))
+        .expect("flagship cell present");
+    // Shrink the horizon so the parity check stays test-suite cheap —
+    // the spec fully describes the run, so this is still the same path.
+    let mut quick = lora.clone();
+    quick.horizon_s = 900.0;
+    let report = scenario::run(&quick).unwrap();
+    let run = &report.runs[0];
+
+    let w = serverless_lora::sim::workloads::paper_workload(Pattern::Normal, 900.0, 11);
+    let (m, c, _) = Engine::new(
+        SystemConfig::serverless_lora(),
+        serverless_lora::cluster::Cluster::paper_multinode(),
+        w,
+        1,
+    )
+    .run();
+    assert_eq!(run.metrics.outcomes.len(), m.outcomes.len());
+    assert_eq!(run.metrics.ttft().mean.to_bits(), m.ttft().mean.to_bits());
+    assert_eq!(run.cost.total_usd().to_bits(), c.total_usd().to_bits());
+}
+
+/// A counting observer sees exactly the engine's own accounting: one
+/// completion per outcome, one bill sample per `stats.bill_samples`,
+/// plus keep-alive and class-transition traffic on a churny run.
+#[derive(Default)]
+struct Counts {
+    completions: usize,
+    bill_samples: usize,
+    bill_dt_s: f64,
+    reclasses: usize,
+    initial_reclasses: usize,
+    warm: usize,
+    cold: usize,
+    finished: usize,
+}
+
+struct CountingObserver(Arc<Mutex<Counts>>);
+
+impl Observer for CountingObserver {
+    fn on_request_complete(&mut self, _t: f64, _o: &RequestOutcome) {
+        self.0.lock().unwrap().completions += 1;
+    }
+
+    fn on_bill_sample(&mut self, _t0: f64, dt_s: f64, _s: &AggregateBillSample) {
+        let mut c = self.0.lock().unwrap();
+        c.bill_samples += 1;
+        c.bill_dt_s += dt_s;
+    }
+
+    fn on_gpu_reclass(&mut self, _t: f64, _g: GpuId, from: Option<BillClass>, to: BillClass) {
+        let mut c = self.0.lock().unwrap();
+        c.reclasses += 1;
+        if from.is_none() {
+            c.initial_reclasses += 1;
+        }
+        assert_ne!(from, Some(to), "same-class updates must not fire the hook");
+    }
+
+    fn on_keepalive(&mut self, _t: f64, _f: usize, warm: bool) {
+        let mut c = self.0.lock().unwrap();
+        if warm {
+            c.warm += 1;
+        } else {
+            c.cold += 1;
+        }
+    }
+
+    fn on_finish(&mut self, end_s: f64) {
+        assert!(end_s > 0.0);
+        self.0.lock().unwrap().finished += 1;
+    }
+}
+
+#[test]
+fn attached_observer_sees_the_engines_accounting() {
+    let mut cfg = SystemConfig::serverless_lora();
+    cfg.keepalive_s = 20.0; // churn keep-alive so both transitions fire
+    let w = serverless_lora::sim::workloads::paper_workload(Pattern::Bursty, 600.0, 9);
+    let counts = Arc::new(Mutex::new(Counts::default()));
+    let mut e = Engine::new(cfg, serverless_lora::cluster::Cluster::new(1, 2, 4), w, 1);
+    e.attach_observer(Box::new(CountingObserver(counts.clone())));
+    let (m, _, stats) = e.run();
+    let c = counts.lock().unwrap();
+    assert_eq!(c.completions, m.outcomes.len(), "one hook per outcome");
+    assert_eq!(c.bill_samples as u64, stats.bill_samples, "one hook per bill sample");
+    // Billing covers the whole horizon (maybe more if the run drained
+    // past it) with no gaps.
+    assert!(c.bill_dt_s >= 600.0 - 1e-6, "billed {} s of 600", c.bill_dt_s);
+    assert_eq!(c.initial_reclasses, 2, "deploy-time classification of both GPUs");
+    assert!(c.reclasses > 2, "exec/idle churn must transition classes");
+    assert!(c.warm > 0, "keep-alive entries must fire");
+    assert!(c.cold > 0, "keep-alive expiries must fire (20 s window)");
+    assert_eq!(c.finished, 1);
+}
+
+/// Serverful runs never sample intervals; an attached observer sees
+/// completions but zero bill samples — the documented contract.
+#[test]
+fn serverful_runs_emit_no_bill_samples_to_observers() {
+    let w = serverless_lora::sim::workloads::paper_workload(Pattern::Normal, 600.0, 9);
+    let counts = Arc::new(Mutex::new(Counts::default()));
+    let mut e =
+        Engine::new(SystemConfig::vllm(), serverless_lora::cluster::Cluster::new(1, 8, 16), w, 1);
+    e.attach_observer(Box::new(CountingObserver(counts.clone())));
+    let (m, _, stats) = e.run();
+    let c = counts.lock().unwrap();
+    assert!(c.completions > 0 && c.completions == m.outcomes.len());
+    assert_eq!(stats.bill_samples, 0);
+    assert_eq!(c.bill_samples, 0, "serverful billing is flat — no interval samples");
+}
+
+/// Attaching observers must not change the simulation: metrics and cost
+/// stay bit-identical to an unobserved run.
+#[test]
+fn observers_cannot_perturb_the_run() {
+    let w = serverless_lora::sim::workloads::paper_workload(Pattern::Bursty, 600.0, 9);
+    let (m0, c0, _) = Engine::new(
+        SystemConfig::serverless_lora(),
+        serverless_lora::cluster::Cluster::new(1, 2, 4),
+        w.clone(),
+        1,
+    )
+    .run();
+    let counts = Arc::new(Mutex::new(Counts::default()));
+    let mut e = Engine::new(
+        SystemConfig::serverless_lora(),
+        serverless_lora::cluster::Cluster::new(1, 2, 4),
+        w,
+        1,
+    );
+    e.attach_observer(Box::new(CountingObserver(counts)));
+    e.enable_bill_series(60.0);
+    let out = e.run_full();
+    assert_eq!(m0.ttft().mean.to_bits(), out.metrics.ttft().mean.to_bits());
+    assert_eq!(c0.total_usd().to_bits(), out.cost.total_usd().to_bits());
+    assert!(out.bill_series.is_some());
+}
+
+/// Rejection paths surface as errors from the public entry point too
+/// (not just `validate`): `run` refuses an invalid spec.
+#[test]
+fn run_refuses_invalid_specs() {
+    let mut spec = ScenarioSpec::builder("bad")
+        .cluster(tiny_cluster())
+        .horizon_s(120.0)
+        .build()
+        .unwrap();
+    spec.seeds.clear();
+    assert!(scenario::run(&spec).is_err());
+    let mut spec2 = ScenarioSpec::builder("bad2").cluster(tiny_cluster()).build().unwrap();
+    spec2.system = SystemSpec::new("not-a-system");
+    let err = scenario::run(&spec2).unwrap_err();
+    let msg = err.to_string();
+    for id in SYSTEM_IDS {
+        assert!(msg.contains(id), "error must list '{id}': {msg}");
+    }
+}
