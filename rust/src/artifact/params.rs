@@ -51,6 +51,14 @@ pub const GPU_RESERVED_GB: f64 = 2.0;
 /// gap is what the pre-loader exploits.
 pub const CONTAINER_MEM_GB: f64 = 32.0;
 
+/// Backbone-load speedup when another *zone* of the cluster already
+/// hosts the model on a GPU: the load streams GPU-to-GPU over the
+/// datacenter fabric (λScale-style RDMA multicast) instead of from
+/// remote storage. Multiplies the `Phase::BackboneLoad` duration; ~2×
+/// faster is deliberately conservative vs. intra-node NVLink numbers
+/// since cross-zone hops traverse the spine.
+pub const CROSS_ZONE_BACKBONE_FACTOR: f64 = 0.5;
+
 // ---------------------------------------------------------------------------
 // Pricing (paper uses the Alibaba Cloud Function Compute GPU pricing rule;
 // §2.2 notes GPU ≈ 90% of an invocation's cost).

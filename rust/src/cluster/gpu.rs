@@ -65,6 +65,12 @@ pub struct Gpu {
     /// (billing runs on every simulator event; re-summing the maps there
     /// dominated the profile).
     used_cache_gb: f64,
+    /// Residency-flip journal: `(function, now_resident)` appended each
+    /// time a function's residency predicate (any artifact bytes or a
+    /// CUDA context) flips. Drained by the billing index to maintain its
+    /// per-(gpu, function) warm-pair set without walking the full
+    /// resident snapshot. Shared backbones and KV never flip residency.
+    res_log: Vec<(usize, bool)>,
 }
 
 impl Gpu {
@@ -81,7 +87,15 @@ impl Gpu {
             functions: BTreeMap::new(),
             kv: BTreeMap::new(),
             used_cache_gb: 0.0,
+            res_log: Vec::new(),
         }
+    }
+
+    fn is_resident(&self, function: usize) -> bool {
+        self.functions
+            .get(&function)
+            .map(|f| !f.kinds.is_empty() || f.has_cuda_context)
+            .unwrap_or(false)
     }
 
     pub fn used_gb(&self) -> f64 {
@@ -207,12 +221,16 @@ impl Gpu {
             return Ok(());
         }
         self.check(size_gb - already)?;
+        let was_resident = self.is_resident(function);
         self.functions
             .entry(function)
             .or_default()
             .kinds
             .insert(kind, size_gb);
         self.used_cache_gb += size_gb - already;
+        if !was_resident {
+            self.res_log.push((function, true));
+        }
         Ok(())
     }
 
@@ -237,7 +255,13 @@ impl Gpu {
             .kinds
             .remove(&kind)
             .ok_or(GpuError::ArtifactMissing(function, kind))?;
+        // The kind was present ⇒ the function *was* resident; it flips
+        // off only when nothing else keeps it resident.
+        let still_resident = !f.kinds.is_empty() || f.has_cuda_context;
         self.used_cache_gb -= gb;
+        if !still_resident {
+            self.res_log.push((function, false));
+        }
         Ok(gb)
     }
 
@@ -252,8 +276,12 @@ impl Gpu {
             return Ok(());
         }
         self.check(params::CUDA_CONTEXT_GB)?;
+        let was_resident = self.is_resident(function);
         self.functions.entry(function).or_default().has_cuda_context = true;
         self.used_cache_gb += params::CUDA_CONTEXT_GB;
+        if !was_resident {
+            self.res_log.push((function, true));
+        }
         Ok(())
     }
 
@@ -268,8 +296,11 @@ impl Gpu {
         if let Some(f) = self.functions.get_mut(&function) {
             if f.has_cuda_context {
                 self.used_cache_gb -= params::CUDA_CONTEXT_GB;
+                f.has_cuda_context = false;
+                if f.kinds.is_empty() {
+                    self.res_log.push((function, false));
+                }
             }
-            f.has_cuda_context = false;
         }
     }
 
@@ -284,6 +315,22 @@ impl Gpu {
 
     pub fn function_residency(&self, function: usize) -> Option<&FunctionResidency> {
         self.functions.get(&function)
+    }
+
+    /// Drain the residency-flip journal into `buf` (cleared first; its
+    /// capacity is recycled as the new empty journal).
+    pub fn take_res_log(&mut self, buf: &mut Vec<(usize, bool)>) {
+        buf.clear();
+        std::mem::swap(&mut self.res_log, buf);
+    }
+
+    /// Pending (undrained) residency flips, in mutation order.
+    pub fn res_log(&self) -> &[(usize, bool)] {
+        &self.res_log
+    }
+
+    pub fn clear_res_log(&mut self) {
+        self.res_log.clear();
     }
 
     // ------------------------------------------------------------ KV cache
@@ -375,6 +422,26 @@ mod tests {
         let used = g.used_gb();
         g.place_artifact(1, ArtifactKind::CudaKernel, 0.5).unwrap();
         assert_eq!(g.used_gb(), used);
+    }
+
+    #[test]
+    fn residency_flip_journal_records_edges_only() {
+        let mut g = gpu();
+        g.place_artifact(3, ArtifactKind::Adapter, 0.1).unwrap(); // flip on
+        g.place_artifact(3, ArtifactKind::CudaKernel, 0.5).unwrap(); // no flip
+        g.create_cuda_context(3).unwrap(); // no flip
+        g.create_cuda_context(7).unwrap(); // flip on
+        assert_eq!(g.res_log(), &[(3, true), (7, true)]);
+        let mut buf = Vec::new();
+        g.take_res_log(&mut buf);
+        assert_eq!(buf, vec![(3, true), (7, true)]);
+        assert!(g.res_log().is_empty());
+        g.evict_artifact(3, ArtifactKind::Adapter).unwrap(); // still resident
+        g.destroy_cuda_context(3); // still resident (kernel)
+        g.evict_artifact(3, ArtifactKind::CudaKernel).unwrap(); // flip off
+        g.destroy_cuda_context(7); // flip off
+        g.destroy_cuda_context(7); // idempotent: no flip
+        assert_eq!(g.res_log(), &[(3, false), (7, false)]);
     }
 
     #[test]

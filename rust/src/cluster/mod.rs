@@ -124,6 +124,46 @@ impl ClusterIndex {
     }
 }
 
+/// Dense GPU addressing for the engine's arena state: `GpuId` ↔ a
+/// contiguous `0..n_gpus` index, in `GpuId` (node, index) order — so
+/// iterating the dense range replays the same order as the historical
+/// `BTreeMap<GpuId, _>` walks. The GPU set is fixed for a run
+/// (`trim_gpus` happens before the engine is built), so the map is
+/// computed once.
+///
+/// `dense()` of an id that was trimmed away can alias a *valid* slot of
+/// a later node; callers translating possibly-stale ids (the billing
+/// drain) must gate on [`Cluster::try_gpu`] first — try_gpu success is
+/// exactly dense validity.
+#[derive(Debug, Clone)]
+pub struct GpuDenseMap {
+    ids: Vec<GpuId>,
+    node_base: Vec<usize>,
+}
+
+impl GpuDenseMap {
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn dense(&self, id: GpuId) -> usize {
+        self.node_base[id.node] + id.index
+    }
+
+    pub fn id(&self, dense: usize) -> GpuId {
+        self.ids[dense]
+    }
+
+    /// All GPU ids in dense (= `GpuId` Ord) order.
+    pub fn ids(&self) -> &[GpuId] {
+        &self.ids
+    }
+}
+
 /// The whole deployment.
 #[derive(Debug, Clone)]
 pub struct Cluster {
@@ -228,6 +268,27 @@ impl Cluster {
         std::mem::swap(&mut self.bill_dirty, buf);
     }
 
+    /// Drain one GPU's residency-flip journal into `buf` (cleared first).
+    /// Deliberately does **not** mark the GPU dirty: every flip was
+    /// produced through `gpu_mut`, so the GPU already carries routing and
+    /// billing marks from the mutation itself.
+    pub fn take_res_log(&mut self, id: GpuId, buf: &mut Vec<(usize, bool)>) {
+        buf.clear();
+        if let Some(g) = self.nodes.get_mut(id.node).and_then(|n| n.gpus.get_mut(id.index))
+        {
+            g.take_res_log(buf);
+        }
+    }
+
+    /// Discard every GPU's pending residency flips (billing re-init).
+    pub fn clear_res_logs(&mut self) {
+        for n in &mut self.nodes {
+            for g in &mut n.gpus {
+                g.clear_res_log();
+            }
+        }
+    }
+
     pub fn gpus(&self) -> impl Iterator<Item = &Gpu> {
         self.nodes.iter().flat_map(|n| n.gpus.iter())
     }
@@ -248,6 +309,19 @@ impl Cluster {
 
     pub fn n_gpus(&self) -> usize {
         self.nodes.iter().map(|n| n.gpus.len()).sum()
+    }
+
+    /// Build the dense GPU index map (see [`GpuDenseMap`]).
+    pub fn dense_map(&self) -> GpuDenseMap {
+        let mut node_base = Vec::with_capacity(self.nodes.len());
+        let mut ids = Vec::with_capacity(self.n_gpus());
+        let mut base = 0;
+        for n in &self.nodes {
+            node_base.push(base);
+            base += n.gpus.len();
+            ids.extend(n.gpus.iter().map(|g| g.id));
+        }
+        GpuDenseMap { ids, node_base }
     }
 
     pub fn total_gpu_mem_gb(&self) -> f64 {
@@ -515,6 +589,38 @@ mod tests {
         let mut other = Vec::new();
         c.for_each_resident(ids[1], |f| other.push(f));
         assert!(other.is_empty());
+    }
+
+    #[test]
+    fn dense_map_round_trips_in_id_order() {
+        let mut c = Cluster::new(3, 4, 1);
+        c.trim_gpus(10); // last node keeps 2 GPUs
+        let m = c.dense_map();
+        assert_eq!(m.len(), 10);
+        let ids = c.gpu_ids();
+        assert_eq!(m.ids(), &ids[..]);
+        for (d, &id) in ids.iter().enumerate() {
+            assert_eq!(m.dense(id), d);
+            assert_eq!(m.id(d), id);
+        }
+    }
+
+    #[test]
+    fn res_log_drains_without_marking_dirty() {
+        let mut c = Cluster::new(1, 2, 1);
+        let ids = c.gpu_ids();
+        c.gpu_mut(ids[0])
+            .place_artifact(3, ArtifactKind::Adapter, 0.2)
+            .unwrap();
+        let _ = c.take_bill_dirty();
+        let mut buf = vec![(99, true)]; // stale content must be cleared
+        c.take_res_log(ids[0], &mut buf);
+        assert_eq!(buf, vec![(3, true)]);
+        assert!(c.gpu(ids[0]).res_log().is_empty());
+        assert!(c.take_bill_dirty().is_empty(), "drain must not re-mark");
+        c.gpu_mut(ids[1]).create_cuda_context(5).unwrap();
+        c.clear_res_logs();
+        assert!(c.gpu(ids[1]).res_log().is_empty());
     }
 
     #[test]

@@ -63,9 +63,11 @@ impl DynamicOffloader {
     ) -> Vec<Evictable> {
         let g = cluster.gpu(gpu);
         let mut out = Vec::new();
-        for f in g.resident_functions() {
+        // Allocation-free residency walk (no BTreeSet snapshot) — this
+        // runs on every memory-blocked dispatch at fleet scale.
+        cluster.for_each_resident(gpu, |f| {
             if protected.contains(&f) {
-                continue;
+                return;
             }
             if let Some(res) = g.function_residency(f) {
                 for (&kind, &gb) in &res.kinds {
@@ -86,7 +88,7 @@ impl DynamicOffloader {
                     }
                 }
             }
-        }
+        });
         // Shared backbones: evictable only with zero attached readers.
         for (model, seg) in g.shared_models() {
             if seg.refcount == 0 && registry.is_hosted_on(model, gpu) {

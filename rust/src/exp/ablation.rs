@@ -40,6 +40,7 @@ fn variant_grid(
                     gpus_per_node: 4,
                     containers_per_node: 8,
                     trim_gpus: None,
+                    zones: 1,
                 },
                 WorkloadSpec::Paper { pattern: Pattern::Normal, seed: 11 },
                 dur,

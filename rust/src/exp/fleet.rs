@@ -33,11 +33,19 @@ static LAST_LARGEST: Mutex<Option<FleetPoint>> = Mutex::new(None);
 pub struct FleetPoint {
     pub gpus: usize,
     pub fns: usize,
+    /// Engine zones the cluster was sharded into (1 = plain engine).
+    pub zones: usize,
+    /// Worker threads driving the engines (= zones).
+    pub threads: usize,
     pub requests: usize,
     pub completed: usize,
     pub wall_s: f64,
     pub events: u64,
     pub events_per_s: f64,
+    /// Events per wall-second *per engine thread* — the per-core
+    /// throughput the sharding must preserve (nondeterministic;
+    /// JSON/check only).
+    pub events_per_s_per_core: f64,
     pub peak_queue: usize,
     pub keepalive_checks: u64,
     pub events_cancelled: u64,
@@ -59,7 +67,16 @@ pub fn grid(quick: bool) -> Vec<(usize, usize)> {
     if quick {
         vec![(8, 64), (16, 256), (32, 1024)]
     } else {
-        vec![(8, 64), (16, 256), (32, 1024), (64, 2048), (128, 3072), (256, 4096)]
+        vec![
+            (8, 64),
+            (16, 256),
+            (32, 1024),
+            (64, 2048),
+            (128, 3072),
+            (256, 4096),
+            (1024, 16384),
+            (4096, 65536),
+        ]
     }
 }
 
@@ -73,27 +90,31 @@ fn horizon(quick: bool) -> f64 {
 
 /// Fleet clusters follow the paper's node shape: 8 GPUs per node with
 /// two warm container slots per GPU, trimming the last node so the
-/// cluster has exactly the requested GPU count.
-fn fleet_cluster_spec(gpus: usize) -> ClusterSpec {
+/// cluster has exactly the requested GPU count. With `zones > 1` the
+/// node count is rounded up to a zone multiple so the shard split is
+/// exact (`gpus` itself must divide evenly — asserted in `run_point`).
+fn fleet_cluster_spec(gpus: usize, zones: usize) -> ClusterSpec {
     ClusterSpec::Uniform {
-        nodes: gpus.div_ceil(8).max(1),
+        nodes: gpus.div_ceil(8).max(1).next_multiple_of(zones),
         gpus_per_node: 8,
         containers_per_node: 16,
         trim_gpus: Some(gpus),
+        zones,
     }
 }
 
 /// Same shape, materialized (shape unit tests).
 #[cfg(test)]
 fn cluster_of(gpus: usize) -> crate::cluster::Cluster {
-    fleet_cluster_spec(gpus).materialize()
+    fleet_cluster_spec(gpus, 1).materialize()
 }
 
 /// Run the flagship system at one grid point — as a `ScenarioSpec`
 /// through `scenario::run` — and measure the engine. `skew` switches
 /// the workload to Zipf(skew) function popularity; `cov` additionally
 /// classes the Zipf head/tail into different burstiness patterns (only
-/// meaningful with `skew`, ignored without).
+/// meaningful with `skew`, ignored without). `zones > 1` shards the
+/// cluster across that many engine threads (`sim::sharded`).
 pub fn run_point(
     gpus: usize,
     fns: usize,
@@ -101,7 +122,10 @@ pub fn run_point(
     seed: u64,
     skew: Option<f64>,
     cov: Option<(Pattern, Pattern)>,
+    zones: usize,
 ) -> FleetPoint {
+    assert!(zones >= 1, "zones must be >= 1");
+    assert_eq!(gpus % zones, 0, "zones must divide the GPU count evenly");
     let workload = match (skew, cov) {
         (Some(s), Some((head, tail))) => {
             WorkloadSpec::ZipfFleetCov { fns, skew: s, head, tail, seed }
@@ -111,7 +135,7 @@ pub fn run_point(
     };
     let spec = crate::scenario::ScenarioSpec::builder(&format!("fleet-{gpus}g-{fns}f"))
         .system("serverless-lora")
-        .cluster(fleet_cluster_spec(gpus))
+        .cluster(fleet_cluster_spec(gpus, zones))
         .workload(workload)
         .horizon_s(duration_s)
         .seed(seed)
@@ -121,14 +145,18 @@ pub fn run_point(
     let report = crate::scenario::run(&spec).expect("fleet point runs");
     let (_, run) = report.into_only();
     let (stats, wall_s) = (&run.stats, run.wall_s);
+    let events_per_s = stats.events_processed as f64 / wall_s.max(1e-9);
     FleetPoint {
         gpus,
         fns,
+        zones,
+        threads: zones,
         requests: run.requests,
         completed: run.metrics.outcomes.len(),
         wall_s,
         events: stats.events_processed,
-        events_per_s: stats.events_processed as f64 / wall_s.max(1e-9),
+        events_per_s,
+        events_per_s_per_core: events_per_s / zones as f64,
         peak_queue: stats.peak_event_queue,
         keepalive_checks: stats.keepalive_checks,
         events_cancelled: stats.events_cancelled,
@@ -153,6 +181,8 @@ pub fn fleet_with(quick: bool, skew: Option<f64>, cov: Option<(Pattern, Pattern)
     let cols = [
         "GPUs",
         "fns",
+        "zones",
+        "threads",
         "requests",
         "events",
         "peak queue",
@@ -176,22 +206,56 @@ pub fn fleet_with(quick: bool, skew: Option<f64>, cov: Option<(Pattern, Pattern)
     let points = grid(quick);
     let largest = *points.last().expect("grid non-empty");
     for (gpus, fns) in points {
-        let p = run_point(gpus, fns, dur, 11, skew, cov);
+        let p = run_point(gpus, fns, dur, 11, skew, cov, 1);
         assert_eq!(p.completed, p.requests, "fleet run lost requests");
         if skew.is_none() && (gpus, fns) == largest {
             *LAST_LARGEST.lock().unwrap() = Some(p.clone());
         }
-        t.row(vec![
-            p.gpus.to_string(),
-            p.fns.to_string(),
-            p.requests.to_string(),
-            p.events.to_string(),
-            p.peak_queue.to_string(),
-            p.keepalive_checks.to_string(),
-            p.events_cancelled.to_string(),
-            p.bill_samples.to_string(),
-        ]);
+        t.row(fleet_row(&p));
     }
+    t.render()
+}
+
+fn fleet_row(p: &FleetPoint) -> Vec<String> {
+    vec![
+        p.gpus.to_string(),
+        p.fns.to_string(),
+        p.zones.to_string(),
+        p.threads.to_string(),
+        p.requests.to_string(),
+        p.events.to_string(),
+        p.peak_queue.to_string(),
+        p.keepalive_checks.to_string(),
+        p.events_cancelled.to_string(),
+        p.bill_samples.to_string(),
+    ]
+}
+
+/// The zone-sharding CI smoke (`serverless-lora fleet --zones N`): one
+/// λScale-sized point — 1024 GPUs / 16384 functions — run through the
+/// sharded engine. The table keeps only deterministic counters; the
+/// per-core throughput lands in `BENCH_sim.json` via `fleet_json`.
+pub fn fleet_zones(zones: usize) -> String {
+    let (gpus, fns) = (1024, 16384);
+    let title = format!("Fleet — zone-sharded point, {zones} zone(s) (ServerlessLoRA flagship)");
+    let mut t = Table::new(
+        &title,
+        &[
+            "GPUs",
+            "fns",
+            "zones",
+            "threads",
+            "requests",
+            "events",
+            "peak queue",
+            "KA checks",
+            "cancelled",
+            "bill samples",
+        ],
+    );
+    let p = run_point(gpus, fns, 120.0, 11, None, None, zones);
+    assert_eq!(p.completed, p.requests, "sharded fleet run lost requests");
+    t.row(fleet_row(&p));
     t.render()
 }
 
@@ -204,16 +268,19 @@ pub fn fleet_json(quick: bool) -> Json {
     let cached = LAST_LARGEST.lock().unwrap().clone();
     let p = match cached {
         Some(p) if (p.gpus, p.fns) == (gpus, fns) => p,
-        _ => run_point(gpus, fns, horizon(quick), 11, None, None),
+        _ => run_point(gpus, fns, horizon(quick), 11, None, None, 1),
     };
     obj(vec![
         ("gpus", num(p.gpus as f64)),
         ("fns", num(p.fns as f64)),
+        ("zones", num(p.zones as f64)),
+        ("threads", num(p.threads as f64)),
         ("requests", num(p.requests as f64)),
         ("completed", num(p.completed as f64)),
         ("wall_s", num(p.wall_s)),
         ("events", num(p.events as f64)),
         ("events_per_s", num(p.events_per_s)),
+        ("events_per_s_per_core", num(p.events_per_s_per_core)),
         ("peak_event_queue", num(p.peak_queue as f64)),
         ("keepalive_checks", num(p.keepalive_checks as f64)),
         ("events_cancelled", num(p.events_cancelled as f64)),
@@ -263,6 +330,12 @@ pub struct FleetBound {
     pub max_peak_queue: usize,
     pub max_bill_samples_per_event: f64,
     pub max_bill_reclass_per_event: f64,
+    /// Throughput floor: events per wall-second per engine thread. The
+    /// only wall-clock-based bound — set an order of magnitude under
+    /// what a release build sustains on weak CI hardware, so it only
+    /// trips on an asymptotic regression (a hot loop going O(GPUs) or
+    /// O(fns)), not on machine noise.
+    pub min_events_per_s_per_core: f64,
 }
 
 /// Bounds for `grid(true)`, in order. `max_peak_queue` is
@@ -276,6 +349,7 @@ pub const QUICK_BOUNDS: &[FleetBound] = &[
         max_peak_queue: 656,
         max_bill_samples_per_event: 1.01,
         max_bill_reclass_per_event: 12.0,
+        min_events_per_s_per_core: 10_000.0,
     },
     FleetBound {
         gpus: 16,
@@ -284,6 +358,7 @@ pub const QUICK_BOUNDS: &[FleetBound] = &[
         max_peak_queue: 1552,
         max_bill_samples_per_event: 1.01,
         max_bill_reclass_per_event: 12.0,
+        min_events_per_s_per_core: 10_000.0,
     },
     FleetBound {
         gpus: 32,
@@ -292,19 +367,21 @@ pub const QUICK_BOUNDS: &[FleetBound] = &[
         max_peak_queue: 4112,
         max_bill_samples_per_event: 1.01,
         max_bill_reclass_per_event: 12.0,
+        min_events_per_s_per_core: 10_000.0,
     },
 ];
 
 /// Run one point against its bound; `Ok` is the report line.
 fn check_point(b: &FleetBound, dur: f64) -> Result<String, String> {
-    let p = run_point(b.gpus, b.fns, dur, 11, None, None);
+    let p = run_point(b.gpus, b.fns, dur, 11, None, None, 1);
     let per_req = p.events as f64 / p.requests.max(1) as f64;
     let samples_per_ev = p.bill_samples as f64 / p.events.max(1) as f64;
     let reclass_per_ev = p.bill_reclass as f64 / p.events.max(1) as f64;
     let line = format!(
         "fleet-check {}g/{}f: {} requests, {:.2} events/request (bound {}), \
          peak queue {} (bound {}), {} cancelled, \
-         {:.3} bill samples/event (bound {}), {:.2} reclass/event (bound {})",
+         {:.3} bill samples/event (bound {}), {:.2} reclass/event (bound {}), \
+         {:.0} events/s/core (floor {})",
         b.gpus,
         b.fns,
         p.requests,
@@ -317,6 +394,8 @@ fn check_point(b: &FleetBound, dur: f64) -> Result<String, String> {
         b.max_bill_samples_per_event,
         reclass_per_ev,
         b.max_bill_reclass_per_event,
+        p.events_per_s_per_core,
+        b.min_events_per_s_per_core,
     );
     if p.completed != p.requests {
         return Err(format!("{line}\n  FAIL: lost {} requests", p.requests - p.completed));
@@ -343,6 +422,13 @@ fn check_point(b: &FleetBound, dur: f64) -> Result<String, String> {
             "{line}\n  FAIL: reclassification blowup ({reclass_per_ev:.2}/event)"
         ));
     }
+    if p.events_per_s_per_core < b.min_events_per_s_per_core {
+        return Err(format!(
+            "{line}\n  FAIL: per-core throughput below the committed floor \
+             ({:.0} events/s/core)",
+            p.events_per_s_per_core
+        ));
+    }
     Ok(line)
 }
 
@@ -365,7 +451,7 @@ mod tests {
 
     #[test]
     fn tiny_point_conserves_and_measures() {
-        let p = run_point(8, 16, 120.0, 3, None, None);
+        let p = run_point(8, 16, 120.0, 3, None, None, 1);
         assert_eq!(p.completed, p.requests, "lost requests");
         assert!(p.requests > 0);
         assert!(p.events >= p.requests as u64, "every request is ≥1 event");
@@ -382,7 +468,7 @@ mod tests {
 
     #[test]
     fn skewed_point_conserves_and_cancels() {
-        let p = run_point(8, 16, 300.0, 3, Some(1.2), None);
+        let p = run_point(8, 16, 300.0, 3, Some(1.2), None, 1);
         assert_eq!(p.completed, p.requests, "lost requests");
         assert!(p.requests > 0);
         assert!(
@@ -400,6 +486,7 @@ mod tests {
             3,
             Some(1.2),
             Some((Pattern::Bursty, Pattern::Predictable)),
+            1,
         );
         assert_eq!(p.completed, p.requests, "lost requests");
         assert!(p.requests > 0);
@@ -411,7 +498,7 @@ mod tests {
         let q = grid(true);
         let f = grid(false);
         assert!(q.len() < f.len());
-        assert_eq!(f.last(), Some(&(256, 4096)));
+        assert_eq!(f.last(), Some(&(4096, 65536)), "λScale-regime cap");
         for w in f.windows(2) {
             assert!(w[1].0 > w[0].0 && w[1].1 > w[0].1);
         }
@@ -436,6 +523,7 @@ mod tests {
             // per-GPU regression could breach it.
             assert!(b.max_bill_samples_per_event < 1.5);
             assert!(b.max_bill_reclass_per_event >= 4.0);
+            assert!(b.min_events_per_s_per_core > 0.0);
         }
     }
 
@@ -450,9 +538,54 @@ mod tests {
             max_peak_queue: 2 * 16 + 64 * 8 + 16,
             max_bill_samples_per_event: 1.01,
             max_bill_reclass_per_event: 12.0,
+            // Debug builds are ~50× slower than release; keep the
+            // in-test floor nominal so only the plumbing is exercised.
+            min_events_per_s_per_core: 10.0,
         };
         let line = check_point(&b, 120.0).expect("healthy engine trips the guard");
         assert!(line.contains("events/request"));
         assert!(line.contains("bill samples/event"));
+        assert!(line.contains("events/s/core"));
+    }
+
+    #[test]
+    fn sharded_point_conserves_and_records_zones() {
+        // 16 GPUs over 2 zones: 2 nodes → 1 node/zone, trim 8 GPUs each.
+        let p = run_point(16, 32, 120.0, 3, None, None, 2);
+        assert_eq!(p.completed, p.requests, "sharded run lost requests");
+        assert_eq!((p.zones, p.threads), (2, 2));
+        assert!(p.requests > 0);
+        assert!(p.events_per_s_per_core > 0.0);
+        assert!(
+            (p.events_per_s_per_core - p.events_per_s / 2.0).abs() < 1e-9,
+            "per-core throughput must divide by the thread count"
+        );
+    }
+
+    #[test]
+    fn fleet_scale_indexes_match_bruteforce_mid_run_multi_seed() {
+        // The arena/SoA hot state (dense busy/loading/exec/billing
+        // arrays, the two-key warm-pair index) must agree with its
+        // brute-force recomputation *mid-run* at four-digit GPU counts,
+        // not just on the toy clusters of the engine unit tests.
+        use crate::sim::{workloads, Engine, SystemConfig};
+        for seed in [3u64, 17] {
+            let w = workloads::fleet_workload(2048, 120.0, seed);
+            let n = w.requests.len();
+            assert!(n > 500, "fleet workload too small to stress the arenas: {n}");
+            let mut e =
+                Engine::new(SystemConfig::serverless_lora(), cluster_of(1024), w, seed);
+            let mut steps: u64 = 0;
+            while e.step() {
+                steps += 1;
+                // Sparse: the brute-force check is O(GPUs·residents).
+                if steps % 4096 == 0 {
+                    e.check_indexes();
+                }
+            }
+            e.check_indexes();
+            let (m, _, _) = e.finish();
+            assert_eq!(m.outcomes.len(), n, "seed {seed} lost requests");
+        }
     }
 }

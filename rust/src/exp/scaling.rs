@@ -27,6 +27,7 @@ pub fn fig11(quick: bool) -> String {
                         gpus_per_node: n_gpus,
                         containers_per_node: 2 * n_gpus,
                         trim_gpus: None,
+                        zones: 1,
                     },
                     WorkloadSpec::Paper { pattern: Pattern::Normal, seed: 11 },
                     dur,
@@ -65,6 +66,7 @@ pub fn fig11(quick: bool) -> String {
                         gpus_per_node: 4,
                         containers_per_node: 8,
                         trim_gpus: None,
+                        zones: 1,
                     },
                     WorkloadSpec::Scaled { pattern: Pattern::Normal, scale, seed: 13 },
                     dur,

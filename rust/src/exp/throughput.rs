@@ -25,6 +25,7 @@ fn saturating_cells(tag: &str, dur: f64) -> Vec<ScenarioSpec> {
                     gpus_per_node: 2,
                     containers_per_node: 8,
                     trim_gpus: None,
+                    zones: 1,
                 },
                 WorkloadSpec::Throughput { seed: 21 },
                 dur,

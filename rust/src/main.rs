@@ -10,13 +10,15 @@
 //!                                                  (one spec object or an array;
 //!                                                  --dry-run: validate + summarize
 //!                                                  without simulating)
-//! serverless-lora fleet [--full] [--skew S] [--cov-head H] [--cov-tail T] [--check]
+//! serverless-lora fleet [--full] [--skew S] [--cov-head H] [--cov-tail T] [--check] [--zones N]
 //!                                                  engine scaling sweep
 //!                                                  (alias: simulate --exp fleet;
 //!                                                  --skew: Zipf popularity;
 //!                                                  --cov-head/--cov-tail: CoV class
 //!                                                  of the Zipf head/tail, needs --skew;
-//!                                                  --check: CI counter guard)
+//!                                                  --check: CI counter guard;
+//!                                                  --zones N: one zone-sharded
+//!                                                  1024-GPU point on N threads)
 //! serverless-lora serve [--model llama-tiny] [--requests N] [--batch B]
 //!                                                  real PJRT serving demo (`pjrt` feature)
 //! serverless-lora info [--model llama-tiny]        artifact/manifest inventory
@@ -42,7 +44,9 @@ fn known_flags(cmd: &str) -> Option<&'static [&'static str]> {
     match cmd {
         "simulate" => Some(&["exp", "all", "full", "quick", "jobs"]),
         "run" => Some(&["scenario", "dry-run", "jobs"]),
-        "fleet" => Some(&["full", "quick", "skew", "cov-head", "cov-tail", "check", "jobs"]),
+        "fleet" => Some(&[
+            "full", "quick", "skew", "cov-head", "cov-tail", "check", "zones", "jobs",
+        ]),
         "serve" => Some(&["model", "requests", "batch"]),
         "info" => Some(&["model"]),
         _ => None,
@@ -178,11 +182,12 @@ fn usage() -> ! {
                   array of them; see examples/scenarios/ and DESIGN.md\n\
                   \"Scenario API & observers\"; --dry-run validates and\n\
                   summarizes without simulating)\n\
-         fleet    [--full] [--skew S] [--cov-head H] [--cov-tail T] [--check]\n\
+         fleet    [--full] [--skew S] [--cov-head H] [--cov-tail T] [--check] [--zones N]\n\
                   engine scaling sweep\n\
                   (--skew: Zipf(S) popularity; --cov-head/--cov-tail: inter-arrival\n\
                   CoV class for the Zipf head/tail, requires --skew, missing side\n\
-                  defaults to the Normal class; --check: counter regression guard)\n\
+                  defaults to the Normal class; --check: counter regression guard;\n\
+                  --zones N: one 1024-GPU/16384-fn point sharded over N engine threads)\n\
          serve    [--model llama-tiny] [--requests 16] [--batch 4]\n\
          info     [--model llama-tiny]",
         exp::ALL_EXPERIMENTS.join(", ")
@@ -262,6 +267,17 @@ fn main() -> anyhow::Result<()> {
                     Err(msg) => {
                         eprintln!("{msg}");
                         std::process::exit(1);
+                    }
+                }
+            } else if let Some(v) = flags.get("zones") {
+                // One zone-sharded smoke point (CI: `fleet --zones 4`).
+                match v.parse::<usize>() {
+                    Ok(z) if z >= 1 && 1024 % z == 0 => {
+                        print!("{}", exp::fleet::fleet_zones(z));
+                    }
+                    _ => {
+                        eprintln!("--zones needs a positive divisor of 1024, got '{v}'");
+                        std::process::exit(2);
                     }
                 }
             } else {

@@ -130,6 +130,34 @@ pub struct RunStats {
     /// same opt-in meter. Split from the sample meter so fleet profiles
     /// can attribute drain cost separately from sampling cost.
     pub bill_reclass_wall_s: f64,
+    /// Backbone loads satisfied over the inter-zone fabric instead of
+    /// remote storage (zone-sharded runs only; always 0 at zones = 1).
+    pub cross_zone_fetches: u64,
+}
+
+impl RunStats {
+    /// Fold another zone's counters into this one (zone-sharded merge).
+    /// Sums every additive counter; `peak_event_queue` takes the max —
+    /// the zones' queues are disjoint, so the fleet-wide peak within one
+    /// zone is the honest analogue of the single-engine statistic.
+    pub fn merge(&mut self, o: &RunStats) {
+        self.offload_events += o.offload_events;
+        self.offloaded_gb += o.offloaded_gb;
+        self.preload_decisions += o.preload_decisions;
+        self.blocked_dispatches += o.blocked_dispatches;
+        self.blocked_retries += o.blocked_retries;
+        self.cold_dispatches += o.cold_dispatches;
+        self.warm_dispatches += o.warm_dispatches;
+        self.events_processed += o.events_processed;
+        self.peak_event_queue = self.peak_event_queue.max(o.peak_event_queue);
+        self.keepalive_checks += o.keepalive_checks;
+        self.events_cancelled += o.events_cancelled;
+        self.bill_samples += o.bill_samples;
+        self.bill_reclass += o.bill_reclass;
+        self.bill_sample_wall_s += o.bill_sample_wall_s;
+        self.bill_reclass_wall_s += o.bill_reclass_wall_s;
+        self.cross_zone_fetches += o.cross_zone_fetches;
+    }
 }
 
 /// Aggregated metrics for one run of one system.

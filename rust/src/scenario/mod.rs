@@ -26,7 +26,7 @@ pub use spec::{
 use crate::cost::CostTracker;
 use crate::exp::runner;
 use crate::metrics::{RunMetrics, RunStats};
-use crate::sim::{BillSeries, Engine};
+use crate::sim::{sharded, BillSeries, Engine};
 use crate::trace::Pattern;
 use crate::util::json::Json;
 use crate::util::table::{f, ms, Table};
@@ -114,16 +114,29 @@ fn run_seed(sp: &ScenarioSpec, seed: u64) -> SeedRun {
         .system
         .resolve(sp.workload.pattern().unwrap_or(Pattern::Normal))
         .expect("specs are validated before running");
-    let cluster = sp.cluster.materialize();
     let t0 = Instant::now();
-    let mut engine = Engine::new(cfg, cluster, workload, seed);
-    if sp.sinks.bill_timing {
-        engine.set_bill_timing(true);
-    }
-    if let Some(bucket_s) = sp.sinks.bill_series_bucket_s {
-        engine.enable_bill_series(bucket_s);
-    }
-    let out = engine.run_full();
+    let out = if sp.cluster.zones() > 1 {
+        // Zone-sharded cluster: one engine thread per zone, coupled at
+        // conservative window boundaries (sim::sharded).
+        sharded::run_zones(
+            &cfg,
+            sp.cluster.materialize_zones(),
+            workload,
+            seed,
+            sharded::Mode::Parallel,
+            sp.sinks.bill_timing,
+            sp.sinks.bill_series_bucket_s,
+        )
+    } else {
+        let mut engine = Engine::new(cfg, sp.cluster.materialize(), workload, seed);
+        if sp.sinks.bill_timing {
+            engine.set_bill_timing(true);
+        }
+        if let Some(bucket_s) = sp.sinks.bill_series_bucket_s {
+            engine.enable_bill_series(bucket_s);
+        }
+        engine.run_full()
+    };
     SeedRun {
         seed,
         requests,
@@ -243,6 +256,7 @@ mod tests {
                 gpus_per_node: 2,
                 containers_per_node: 4,
                 trim_gpus: None,
+                zones: 1,
             })
             .workload(WorkloadSpec::Paper { pattern: Pattern::Bursty, seed: 9 })
             .horizon_s(300.0)

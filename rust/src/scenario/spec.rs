@@ -257,6 +257,11 @@ pub enum ClusterSpec {
         gpus_per_node: usize,
         containers_per_node: usize,
         trim_gpus: Option<usize>,
+        /// Weakly-coupled zones for the sharded engine
+        /// (`sim::sharded`): the nodes are split evenly across zones
+        /// and each zone simulates on its own thread. `1` = the plain
+        /// single-engine path.
+        zones: usize,
     },
 }
 
@@ -264,7 +269,7 @@ impl ClusterSpec {
     pub fn materialize(&self) -> Cluster {
         match *self {
             ClusterSpec::Paper => Cluster::paper_multinode(),
-            ClusterSpec::Uniform { nodes, gpus_per_node, containers_per_node, trim_gpus } => {
+            ClusterSpec::Uniform { nodes, gpus_per_node, containers_per_node, trim_gpus, .. } => {
                 let mut c = Cluster::new(nodes, gpus_per_node, containers_per_node);
                 if let Some(t) = trim_gpus {
                     c.trim_gpus(t);
@@ -274,9 +279,45 @@ impl ClusterSpec {
         }
     }
 
+    /// How many engine zones this cluster runs as (1 = unsharded).
+    pub fn zones(&self) -> usize {
+        match *self {
+            ClusterSpec::Paper => 1,
+            ClusterSpec::Uniform { zones, .. } => zones,
+        }
+    }
+
+    /// One cluster per zone: the node set (and any GPU trim) divided
+    /// evenly. `validate` guarantees the divisions are exact.
+    pub fn materialize_zones(&self) -> Vec<Cluster> {
+        match *self {
+            ClusterSpec::Uniform {
+                nodes,
+                gpus_per_node,
+                containers_per_node,
+                trim_gpus,
+                zones,
+            } if zones > 1 => (0..zones)
+                .map(|_| {
+                    let mut c = Cluster::new(nodes / zones, gpus_per_node, containers_per_node);
+                    if let Some(t) = trim_gpus {
+                        c.trim_gpus(t / zones);
+                    }
+                    c
+                })
+                .collect(),
+            _ => vec![self.materialize()],
+        }
+    }
+
     fn validate(&self) -> Result<(), ScenarioError> {
-        if let ClusterSpec::Uniform { nodes, gpus_per_node, containers_per_node, trim_gpus } =
-            *self
+        if let ClusterSpec::Uniform {
+            nodes,
+            gpus_per_node,
+            containers_per_node,
+            trim_gpus,
+            zones,
+        } = *self
         {
             if nodes == 0 || gpus_per_node == 0 || containers_per_node == 0 {
                 return Err(ScenarioError::BadCluster(format!(
@@ -292,6 +333,23 @@ impl ClusterSpec {
                     )));
                 }
             }
+            if zones == 0 {
+                return Err(ScenarioError::BadCluster("zones must be >= 1".to_string()));
+            }
+            if nodes % zones != 0 {
+                return Err(ScenarioError::BadCluster(format!(
+                    "zones must divide the node count evenly, got {nodes} nodes / \
+                     {zones} zones"
+                )));
+            }
+            if let Some(t) = trim_gpus {
+                if t % zones != 0 {
+                    return Err(ScenarioError::BadCluster(format!(
+                        "zones must divide trim_gpus evenly, got {t} GPUs / \
+                         {zones} zones"
+                    )));
+                }
+            }
         }
         Ok(())
     }
@@ -299,7 +357,13 @@ impl ClusterSpec {
     fn to_json(&self) -> Json {
         match *self {
             ClusterSpec::Paper => obj(vec![("kind", s("paper"))]),
-            ClusterSpec::Uniform { nodes, gpus_per_node, containers_per_node, trim_gpus } => {
+            ClusterSpec::Uniform {
+                nodes,
+                gpus_per_node,
+                containers_per_node,
+                trim_gpus,
+                zones,
+            } => {
                 let mut fields = vec![
                     ("kind", s("uniform")),
                     ("nodes", num(nodes as f64)),
@@ -308,6 +372,9 @@ impl ClusterSpec {
                 ];
                 if let Some(t) = trim_gpus {
                     fields.push(("trim_gpus", num(t as f64)));
+                }
+                if zones > 1 {
+                    fields.push(("zones", num(zones as f64)));
                 }
                 obj(fields)
             }
@@ -322,6 +389,7 @@ impl ClusterSpec {
                 gpus_per_node: req_usize(j, "gpus_per_node", "cluster")?,
                 containers_per_node: req_usize(j, "containers_per_node", "cluster")?,
                 trim_gpus: opt_usize(j, "trim_gpus", "cluster")?,
+                zones: opt_usize(j, "zones", "cluster")?.unwrap_or(1),
             }),
             other => Err(ScenarioError::Parse(format!(
                 "cluster.kind must be 'paper' or 'uniform', got '{other}'"
@@ -332,13 +400,23 @@ impl ClusterSpec {
     fn describe(&self) -> String {
         match *self {
             ClusterSpec::Paper => "paper (16 GPUs, 4 nodes)".to_string(),
-            ClusterSpec::Uniform { nodes, gpus_per_node, containers_per_node, trim_gpus } => {
-                match trim_gpus {
+            ClusterSpec::Uniform {
+                nodes,
+                gpus_per_node,
+                containers_per_node,
+                trim_gpus,
+                zones,
+            } => {
+                let mut d = match trim_gpus {
                     Some(t) => format!(
                         "{nodes}x{gpus_per_node}g/{containers_per_node}c trimmed to {t} GPUs"
                     ),
                     None => format!("{nodes}x{gpus_per_node}g/{containers_per_node}c"),
+                };
+                if zones > 1 {
+                    d.push_str(&format!(", {zones} zones"));
                 }
+                d
             }
         }
     }
@@ -940,6 +1018,7 @@ mod tests {
                 gpus_per_node: 2,
                 containers_per_node: 4,
                 trim_gpus: None,
+                zones: 1,
             })
             .horizon_s(300.0)
             .seeds(vec![1, 7])
@@ -1014,6 +1093,7 @@ mod tests {
                     gpus_per_node: 8,
                     containers_per_node: 16,
                     trim_gpus: Some(12),
+                    zones: 2,
                 })
                 .workload(WorkloadSpec::ZipfFleetCov {
                     fns: 32,
@@ -1164,6 +1244,7 @@ mod tests {
                 gpus_per_node: 8,
                 containers_per_node: 16,
                 trim_gpus: None,
+                zones: 1,
             })
             .build()
             .unwrap_err();
@@ -1174,10 +1255,54 @@ mod tests {
                 gpus_per_node: 8,
                 containers_per_node: 16,
                 trim_gpus: Some(9),
+                zones: 1,
             })
             .build()
             .unwrap_err();
         assert!(matches!(err, ScenarioError::BadCluster(_)));
+    }
+
+    #[test]
+    fn rejects_indivisible_zone_shapes() {
+        // zones must split both the node count and any trim exactly.
+        for (nodes, trim, zones) in
+            [(2, None, 0), (3, None, 2), (2, Some(15), 2)]
+        {
+            let err = ScenarioSpec::builder("t")
+                .cluster(ClusterSpec::Uniform {
+                    nodes,
+                    gpus_per_node: 8,
+                    containers_per_node: 16,
+                    trim_gpus: trim,
+                    zones,
+                })
+                .build()
+                .unwrap_err();
+            assert!(
+                matches!(err, ScenarioError::BadCluster(_)),
+                "nodes {nodes} trim {trim:?} zones {zones}"
+            );
+        }
+    }
+
+    #[test]
+    fn zone_materialization_splits_nodes_and_trim_evenly() {
+        let spec = ClusterSpec::Uniform {
+            nodes: 4,
+            gpus_per_node: 8,
+            containers_per_node: 16,
+            trim_gpus: Some(24),
+            zones: 2,
+        };
+        assert_eq!(spec.zones(), 2);
+        let parts = spec.materialize_zones();
+        assert_eq!(parts.len(), 2);
+        for c in &parts {
+            assert_eq!(c.n_gpus(), 12, "each zone gets half the trimmed GPUs");
+        }
+        // Unsharded specs (and Paper) materialize as a single cluster.
+        assert_eq!(ClusterSpec::Paper.zones(), 1);
+        assert_eq!(ClusterSpec::Paper.materialize_zones().len(), 1);
     }
 
     #[test]

@@ -40,10 +40,18 @@
 //! * **keep-alive warm/cold transitions** adjust the per-GPU warm-count
 //!   aggregate over the function's resident GPUs.
 //!
-//! The idle-GPU warm test reads the warm-count aggregate — refreshed
-//! from the cluster's per-GPU residency *snapshot* on memory changes —
-//! so the old `Gpu::resident_functions()` BTreeSet allocation is gone
-//! from the billing path entirely.
+//! The idle-GPU warm test reads the per-GPU warm-count arena, which is
+//! maintained as a proper two-key index: `warm_pairs` holds exactly the
+//! (dense gpu, function) pairs that are warm *and* resident, fed by the
+//! GPUs' residency-flip journals (`Gpu::res_log`) at drain time and by
+//! the keep-alive transitions. Both feeds mutate the pair set
+//! idempotently, so a residency flip and a warm transition landing in
+//! the same event cannot double-count; journal `(f, false)` entries
+//! remove the pair *unconditionally* (not gated on the current warm
+//! set), because an evict-then-cold sequence within one event shrinks
+//! the cold snapshot before the journal drains. Per-GPU state lives in
+//! dense arenas indexed by the engine's `GpuDenseMap` — no
+//! `resident_functions()` snapshot walk, no per-GPU BTreeMap chasing.
 //!
 //! ## Exactness
 //!
@@ -54,7 +62,7 @@
 //! asserts exactly that, and a cfg(test) oracle mode re-derives every
 //! sample by full scan for the differential cost tests.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::BTreeSet;
 use std::time::Instant;
 
 use crate::artifact::params;
@@ -133,20 +141,32 @@ impl ClassSums {
 /// per-class running sums, and the keep-alive warm-set bookkeeping.
 #[derive(Debug, Default)]
 pub(super) struct BillingIndex {
-    /// GPU → its counted class + quantized footprint.
-    state: BTreeMap<GpuId, GpuBillState>,
+    /// Dense GPU index → its counted class + quantized footprint
+    /// (`None` only before `init_billing`).
+    state: Vec<Option<GpuBillState>>,
     /// Per-class (count, Σ used milli-GB, Σ capacity milli-GB).
     sums: [ClassSums; N_CLASSES],
     /// Mirror of the keep-alive window set (`KeepAlive::contains`):
     /// inserted on touch, removed when the sweep pops the window.
     warm_fns: BTreeSet<usize>,
-    /// GPU → number of warm functions resident there (absent = 0). The
-    /// idle-warm class test is an O(log) lookup here.
-    warm_on: BTreeMap<GpuId, usize>,
+    /// Two-key warm-residency index: exactly the (dense gpu, function)
+    /// pairs with `function` warm and resident on `gpu` (between
+    /// events; mid-event transients are reconciled by the drain). Both
+    /// maintenance feeds — keep-alive transitions and the residency-flip
+    /// journals — insert/remove idempotently, and `warm_on` moves only
+    /// on actual set mutations.
+    warm_pairs: BTreeSet<(usize, usize)>,
+    /// Dense GPU index → number of warm functions resident there (the
+    /// materialized per-GPU count of `warm_pairs`). The idle-warm class
+    /// test is an O(1) arena read.
+    warm_on: Vec<u32>,
     /// Reused drain buffer (swapped with the cluster's `bill_dirty`
     /// channel each event, so neither side re-allocates on the hot
     /// path).
     scratch: Vec<GpuId>,
+    /// Reused residency-flip buffer (swapped with each dirty GPU's
+    /// journal at drain time).
+    log_buf: Vec<(usize, bool)>,
     /// Measure the split billing wall-clock meters (fleet bench only —
     /// `Instant` calls are not free at millions of events per second).
     timed: bool,
@@ -160,8 +180,8 @@ impl BillingIndex {
     /// Install one GPU's state, folding the delta into the class sums.
     /// Returns the displaced state so the caller can report class
     /// *transitions* to observers.
-    fn set(&mut self, g: GpuId, new: GpuBillState) -> Option<GpuBillState> {
-        let old = self.state.insert(g, new);
+    fn set(&mut self, d: usize, new: GpuBillState) -> Option<GpuBillState> {
+        let old = self.state[d].replace(new);
         if let Some(old) = old {
             self.sums[old.class as usize].sub(old);
         }
@@ -169,15 +189,8 @@ impl BillingIndex {
         old
     }
 
-    fn remove(&mut self, g: GpuId) {
-        if let Some(old) = self.state.remove(&g) {
-            self.sums[old.class as usize].sub(old);
-        }
-        self.warm_on.remove(&g);
-    }
-
-    fn warm_here(&self, g: GpuId) -> bool {
-        self.warm_on.contains_key(&g)
+    fn warm_here(&self, d: usize) -> bool {
+        self.warm_on[d] > 0
     }
 
     fn sample(sums: &[ClassSums; N_CLASSES]) -> AggregateBillSample {
@@ -235,7 +248,7 @@ impl Engine {
     fn bill_sample(&self) -> AggregateBillSample {
         #[cfg(test)]
         if self.bill.via_oracle {
-            let (_, sums, _, _) = self.brute_bill();
+            let (_, sums, _, _, _) = self.brute_bill();
             return BillingIndex::sample(&sums);
         }
         BillingIndex::sample(&self.bill.sums)
@@ -257,25 +270,30 @@ impl Engine {
     }
 
     /// The single choke point: re-derive one GPU's class + quantized
-    /// footprint and fold the delta into the class sums. O(log G).
-    /// Class *transitions* (not same-class footprint updates) fire the
-    /// `on_gpu_reclass` observer hook.
+    /// footprint and fold the delta into the class sums. O(1) arena
+    /// reads. Class *transitions* (not same-class footprint updates)
+    /// fire the `on_gpu_reclass` observer hook.
     pub(super) fn reclassify_gpu(&mut self, g: GpuId) {
         self.stats.bill_reclass += 1;
         let timer = self.bill.timed.then(Instant::now);
+        // Pre-run cluster shaping (`trim_gpus`) can leave marks for ids
+        // that no longer exist — whose dense translation would alias a
+        // live slot of a later node. `try_gpu` success is exactly dense
+        // validity; GPUs never disappear mid-run, so a stale id is
+        // simply skipped (init_billing discards the pre-run marks).
         let Some(gpu) = self.cluster.try_gpu(g) else {
-            self.bill.remove(g); // trimmed away (pre-run cluster shaping)
             return;
         };
         let used_milli = milli_gb(gpu.used_gb() - params::GPU_RESERVED_GB);
         let total_milli = milli_gb(gpu.total_gb);
+        let d = self.gpu_map.dense(g);
         let class = classify(
             used_milli,
-            self.execs[&g].is_active(),
-            self.gpu_loading[&g] > 0,
-            self.bill.warm_here(g),
+            self.execs[d].is_active(),
+            self.gpu_loading[d] > 0,
+            self.bill.warm_here(d),
         );
-        let old = self.bill.set(g, GpuBillState { class, used_milli, total_milli });
+        let old = self.bill.set(d, GpuBillState { class, used_milli, total_milli });
         if let Some(timer) = timer {
             self.stats.bill_reclass_wall_s += timer.elapsed().as_secs_f64();
         }
@@ -286,55 +304,77 @@ impl Engine {
     }
 
     /// Snapshot of every GPU's current billing class, in GPU order
-    /// (observer attach-time replay).
+    /// (observer attach-time replay; dense order == `GpuId` order).
     pub(super) fn bill_classes(&self) -> Vec<(GpuId, BillClass)> {
-        self.bill.state.iter().map(|(&g, s)| (g, s.class)).collect()
+        self.bill
+            .state
+            .iter()
+            .enumerate()
+            .filter_map(|(d, s)| s.map(|s| (self.gpu_map.id(d), s.class)))
+            .collect()
     }
 
     /// Classify every GPU from scratch (post-deploy initialisation).
+    /// Sizes the dense arenas and discards deploy-time dirty marks and
+    /// residency flips — nothing was warm before t=0, so pre-run
+    /// staging contributes no warm pairs.
     pub(super) fn init_billing(&mut self) {
+        let n = self.gpu_map.len();
+        self.bill.state = vec![None; n];
+        self.bill.warm_on = vec![0; n];
+        self.bill.warm_pairs.clear();
+        self.bill.sums = Default::default();
         let _ = self.cluster.take_bill_dirty(); // deploy-time staging marks
+        self.cluster.clear_res_logs();
         for g in self.cluster.gpu_ids() {
             self.reclassify_gpu(g);
         }
     }
 
-    /// End-of-event drain: reclassify exactly the GPUs whose memory
-    /// ledger changed during this event (deduplicated), refreshing their
-    /// warm counts from the cluster's per-GPU residency snapshot. Work
-    /// is O(GPUs touched by the event), never O(G) — and allocation-free
-    /// (the dirty list and the scratch buffer swap capacities).
+    /// End-of-event drain: for exactly the GPUs whose memory ledger
+    /// changed during this event (deduplicated), apply their
+    /// residency-flip journals to the two-key warm index, then
+    /// reclassify. Work is O(GPUs touched × flips), never O(G) or
+    /// O(resident functions) — and allocation-free (dirty list, scratch
+    /// buffer, and flip buffer all swap capacities).
     pub(super) fn drain_billing_dirty(&mut self) {
         let mut dirty = std::mem::take(&mut self.bill.scratch);
         self.cluster.swap_bill_dirty(&mut dirty);
         if !dirty.is_empty() {
             dirty.sort_unstable();
             dirty.dedup();
+            let mut log = std::mem::take(&mut self.bill.log_buf);
             for &g in &dirty {
-                self.refresh_warm_count(g);
+                if self.cluster.try_gpu(g).is_none() {
+                    continue; // trimmed pre-run; dense would alias
+                }
+                let d = self.gpu_map.dense(g);
+                self.cluster.take_res_log(g, &mut log);
+                for &(f, on) in &log {
+                    if on {
+                        // Gated on the *current* warm set; idempotent
+                        // against a same-event `note_function_warm`.
+                        if self.bill.warm_fns.contains(&f)
+                            && self.bill.warm_pairs.insert((d, f))
+                        {
+                            self.bill.warm_on[d] += 1;
+                        }
+                    } else if self.bill.warm_pairs.remove(&(d, f)) {
+                        // NOT gated on the warm set: an evict-then-cold
+                        // sequence within one event removes `g` from the
+                        // cold transition's residency snapshot, so this
+                        // journal entry is the only thing left that can
+                        // clear the pair.
+                        self.bill.warm_on[d] -= 1;
+                    }
+                }
                 self.reclassify_gpu(g);
             }
+            log.clear();
+            self.bill.log_buf = log;
             dirty.clear();
         }
         self.bill.scratch = dirty;
-    }
-
-    /// Recompute one GPU's warm-resident count from the residency
-    /// snapshot ∩ the warm set (memory changes can add or remove a warm
-    /// function's residency without a keep-alive transition).
-    fn refresh_warm_count(&mut self, g: GpuId) {
-        let warm_fns = &self.bill.warm_fns;
-        let mut n = 0usize;
-        self.cluster.for_each_resident(g, |f| {
-            if warm_fns.contains(&f) {
-                n += 1;
-            }
-        });
-        if n > 0 {
-            self.bill.warm_on.insert(g, n);
-        } else {
-            self.bill.warm_on.remove(&g);
-        }
     }
 
     /// A function entered its keep-alive window: bump the warm count on
@@ -346,7 +386,13 @@ impl Engine {
             return; // already warm — the window only moved
         }
         for g in self.cluster.gpus_with_function(f) {
-            *self.bill.warm_on.entry(g).or_insert(0) += 1;
+            let d = self.gpu_map.dense(g);
+            // Idempotent against a pending `(f, true)` residency flip
+            // from earlier in this event: whichever feed lands second
+            // finds the pair present and leaves the count alone.
+            if self.bill.warm_pairs.insert((d, f)) {
+                self.bill.warm_on[d] += 1;
+            }
             self.reclassify_gpu(g);
         }
         self.emit_keepalive(f, true);
@@ -363,17 +409,14 @@ impl Engine {
         let was_warm = self.bill.warm_fns.remove(&f);
         if was_warm {
             for &g in &gpus {
-                // A residency change earlier in the same event can
-                // leave this count pending its drain refresh (the GPU
-                // is bill-dirty then): adjust only what was counted —
-                // the end-of-event drain recomputes every dirty GPU
-                // before the next sample, and `check_billing` verifies
-                // the result.
-                if let Some(n) = self.bill.warm_on.get_mut(&g) {
-                    *n -= 1;
-                    if *n == 0 {
-                        self.bill.warm_on.remove(&g);
-                    }
+                let d = self.gpu_map.dense(g);
+                // Idempotent removal: only pairs actually counted move
+                // the count. GPUs this function left earlier in the
+                // same event are outside `gpus` by now — their pending
+                // `(f, false)` journal entries clear those pairs at the
+                // end-of-event drain.
+                if self.bill.warm_pairs.remove(&(d, f)) {
+                    self.bill.warm_on[d] -= 1;
                 }
                 self.reclassify_gpu(g);
             }
@@ -391,52 +434,54 @@ impl Engine {
     fn brute_bill(
         &self,
     ) -> (
-        BTreeMap<GpuId, GpuBillState>,
+        Vec<Option<GpuBillState>>,
         [ClassSums; N_CLASSES],
-        BTreeMap<GpuId, usize>,
-        BTreeMap<GpuId, usize>,
+        Vec<u32>,
+        Vec<usize>,
+        BTreeSet<(usize, usize)>,
     ) {
-        let mut loading: BTreeMap<GpuId, usize> = BTreeMap::new();
+        let n = self.gpu_map.len();
+        let mut loading = vec![0usize; n];
         for b in self.batches.values() {
             if b.state == BatchState::Loading {
-                *loading.entry(b.gpu).or_insert(0) += 1;
+                loading[self.gpu_map.dense(b.gpu)] += 1;
             }
         }
         let warm_fns: BTreeSet<usize> = self.keepalive.tracked().collect();
-        let mut state = BTreeMap::new();
+        let mut state = vec![None; n];
         let mut sums = [ClassSums::default(); N_CLASSES];
-        let mut warm_on = BTreeMap::new();
-        for g in self.cluster.gpu_ids() {
+        let mut warm_on = vec![0u32; n];
+        let mut warm_pairs = BTreeSet::new();
+        for (d, &g) in self.gpu_map.ids().iter().enumerate() {
             let gpu = self.cluster.gpu(g);
             let used_milli = milli_gb(gpu.used_gb() - params::GPU_RESERVED_GB);
             let total_milli = milli_gb(gpu.total_gb);
-            let warm = gpu
-                .resident_functions()
-                .into_iter()
-                .filter(|f| warm_fns.contains(f))
-                .count();
-            if warm > 0 {
-                warm_on.insert(g, warm);
+            for f in gpu.resident_functions() {
+                if warm_fns.contains(&f) {
+                    warm_pairs.insert((d, f));
+                    warm_on[d] += 1;
+                }
             }
             let class = classify(
                 used_milli,
-                self.execs[&g].is_active(),
-                loading.get(&g).copied().unwrap_or(0) > 0,
-                warm > 0,
+                self.execs[d].is_active(),
+                loading[d] > 0,
+                warm_on[d] > 0,
             );
             let s = GpuBillState { class, used_milli, total_milli };
             sums[class as usize].add(s);
-            state.insert(g, s);
+            state[d] = Some(s);
         }
-        (state, sums, warm_on, loading)
+        (state, sums, warm_on, loading, warm_pairs)
     }
 
     /// Assert the delta-maintained aggregates equal their brute-force
-    /// rebuild exactly (classes, integer milli-GB sums, warm counts,
-    /// loading counts, and the warm-set mirror). Called from
-    /// `Engine::check_indexes`; never by the simulation.
+    /// rebuild exactly (classes, integer milli-GB sums, the two-key
+    /// warm-pair index and its per-GPU counts, loading counts, and the
+    /// warm-set mirror). Called from `Engine::check_indexes`; never by
+    /// the simulation.
     pub(super) fn check_billing(&self) {
-        let (state, sums, warm_on, loading) = self.brute_bill();
+        let (state, sums, warm_on, loading, warm_pairs) = self.brute_bill();
         let tracked: BTreeSet<usize> = self.keepalive.tracked().collect();
         assert_eq!(
             self.bill.warm_fns, tracked,
@@ -444,16 +489,23 @@ impl Engine {
         );
         assert_eq!(self.bill.state, state, "per-GPU billing classification drifted");
         assert_eq!(self.bill.sums, sums, "billing class sums drifted");
+        assert_eq!(self.bill.warm_pairs, warm_pairs, "warm-pair index drifted");
         assert_eq!(self.bill.warm_on, warm_on, "per-GPU warm counts drifted");
-        for (&g, &n) in &self.gpu_loading {
-            let brute = loading.get(&g).copied().unwrap_or(0);
-            assert_eq!(n, brute, "gpu_loading[{g}] drifted");
-        }
+        assert_eq!(self.gpu_loading, loading, "gpu_loading drifted");
         assert_eq!(
             self.gpu_loading.len(),
             self.cluster.n_gpus(),
             "gpu_loading must cover every GPU"
         );
+        // Checks run between events: every residency-flip journal must
+        // have been drained into the pair index by then.
+        for g in self.cluster.gpus() {
+            assert!(
+                g.res_log().is_empty(),
+                "undrained residency flips on {}",
+                g.id
+            );
+        }
     }
 }
 

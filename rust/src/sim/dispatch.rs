@@ -118,7 +118,7 @@ impl Engine {
                 .map(|r| r.gpu),
         };
         let Some(g) = gpu else { return false };
-        self.gpu_busy[&g] == 0
+        self.gpu_busy[self.gpu_map.dense(g)] == 0
     }
 
     /// Global dispatch loop: repeatedly pick the dispatchable queue with
@@ -179,7 +179,7 @@ impl Engine {
             .copied()
             .or_else(|| self.registry.hosts(self.spec(f).model.name).first().copied());
         let m = gpu_hint
-            .map(|g| self.execs[&g].contention() + 1)
+            .map(|g| self.execs[self.gpu_map.dense(g)].contention() + 1)
             .unwrap_or(1);
         self.queues[f].deadline_margin(self.now, m)
     }
@@ -330,10 +330,11 @@ impl Engine {
             },
         );
         self.fn_inflight[f] += 1;
-        *self.gpu_busy.get_mut(&gpu).unwrap() += 1;
+        let d = self.gpu_map.dense(gpu);
+        self.gpu_busy[d] += 1;
         // The batch starts in `Loading`: the GPU bills as active from
         // this instant (instance allocated and working).
-        *self.gpu_loading.get_mut(&gpu).unwrap() += 1;
+        self.gpu_loading[d] += 1;
         self.reclassify_gpu(gpu);
         self.events.push(self.now + total_load, EventKind::LoadDone(batch_id));
         // Residual queue: cancel the pre-dispatch checks and re-arm for
@@ -356,15 +357,16 @@ impl Engine {
         if !self.cfg.backbone_sharing {
             return routed;
         }
-        let contention = self.execs[&routed].contention();
+        let contention = self.execs[self.gpu_map.dense(routed)].contention();
         if contention < 2 {
             return routed;
         }
         let need = spec.model.gpu_resident_gb() + spec.model.kv_per_request_gb;
         let execs = &self.execs;
+        let map = &self.gpu_map;
         self.cluster
             .scan_free_desc(|g, free| {
-                free >= need && execs[&g].contention() == 0
+                free >= need && execs[map.dense(g)].contention() == 0
             })
             .unwrap_or(routed)
     }
@@ -417,7 +419,25 @@ impl Engine {
             container_has_own_backbone: container_has(ArtifactKind::Backbone),
             container_has_model_backbone,
         };
-        let phases = self.preload.load_phases(&query);
+        let mut phases = self.preload.load_phases(&query);
+        // Cross-zone artifact fetch (sharded runs only): when a peer zone
+        // hosts this model but no local GPU does, the cold backbone comes
+        // over the datacenter network from the peer's GPU memory
+        // (λScale-style GPU-to-GPU multicast) instead of the checkpoint
+        // store — cheaper by `CROSS_ZONE_BACKBONE_FACTOR`. `peer_models`
+        // is empty outside sharded runs, so zones=1 takes the
+        // short-circuit and performs zero additional float operations.
+        if !ready.backbone_on_gpu && !self.peer_models.is_empty() {
+            if let Some(v) = phases.get_mut(&Phase::BackboneLoad) {
+                if *v > 0.0
+                    && self.peer_models.contains(m.name)
+                    && self.registry.hosts(m.name).is_empty()
+                {
+                    *v *= params::CROSS_ZONE_BACKBONE_FACTOR;
+                    self.stats.cross_zone_fetches += 1;
+                }
+            }
+        }
 
         // Ledger mutations, driven by readiness alone.
         if !ready.backbone_on_gpu {
@@ -464,10 +484,10 @@ impl Engine {
         };
         // Loading → Prefill: the loading count drops as the exec job
         // starts; the schedule_tick below reclassifies over both.
-        *self.gpu_loading.get_mut(&gpu).unwrap() -= 1;
+        let d = self.gpu_map.dense(gpu);
+        self.gpu_loading[d] -= 1;
         let work = self.spec(f).model.prefill_s(b);
-        let exec = self.execs.get_mut(&gpu).unwrap();
-        exec.add(self.now, batch_id, work);
+        self.execs[d].add(self.now, batch_id, work);
         self.schedule_tick(gpu);
     }
 
@@ -479,20 +499,21 @@ impl Engine {
     /// about exec start/finish.
     pub(super) fn schedule_tick(&mut self, gpu: GpuId) {
         self.reclassify_gpu(gpu);
-        if let Some(tok) = self.tick_tokens.remove(&gpu) {
+        let d = self.gpu_map.dense(gpu);
+        if let Some(tok) = self.tick_tokens[d].take() {
             self.events.cancel(tok);
         }
-        if let Some((_, t)) = self.execs[&gpu].next_completion() {
+        if let Some((_, t)) = self.execs[d].next_completion() {
             let tok = self.events.push(t.max(self.now), EventKind::GpuTick(gpu));
-            self.tick_tokens.insert(gpu, tok);
+            self.tick_tokens[d] = Some(tok);
         }
     }
 
     pub(super) fn on_gpu_tick(&mut self, gpu: GpuId) {
         // The job this tick was scheduled for (ticks are cancelled on
         // every job-set mutation, so a firing tick is never stale).
-        let next = self.execs[&gpu].next_completion();
-        let exec = self.execs.get_mut(&gpu).unwrap();
+        let exec = &mut self.execs[self.gpu_map.dense(gpu)];
+        let next = exec.next_completion();
         let mut finished = exec.finished_at(self.now);
         if finished.is_empty() {
             // Float-drift guard: the scheduled job can carry residual
@@ -527,9 +548,10 @@ impl Engine {
                     )
                 };
                 // Prefill slot freed on this GPU (decode overlaps).
-                *self.gpu_busy.get_mut(&gpu).unwrap() -= 1;
+                let d = self.gpu_map.dense(gpu);
+                self.gpu_busy[d] -= 1;
                 let work = self.spec(f).model.tpot_at(b) * max_out as f64;
-                let exec = self.execs.get_mut(&gpu).unwrap();
+                let exec = &mut self.execs[d];
                 exec.add_weighted(
                     self.now,
                     batch_id,

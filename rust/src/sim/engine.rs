@@ -13,7 +13,7 @@
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 
 use crate::artifact::{ArtifactKind, FunctionSpec};
-use crate::cluster::{Cluster, GpuId};
+use crate::cluster::{Cluster, GpuDenseMap, GpuId};
 use crate::coordinator::policy::{
     BatchingPolicy, OffloadPolicy, PolicyBundle, PolicyEnv, PreloadPolicy,
 };
@@ -71,7 +71,16 @@ pub struct Engine {
     pub(super) functions: Vec<FunctionSpec>,
     pub(super) rates: Vec<f64>,
     pub(super) queues: Vec<BatchQueue>,
-    pub(super) execs: BTreeMap<GpuId, GpuExec>,
+    /// Dense `GpuId ↔ 0..n_gpus` translation for the arena state below.
+    /// The per-GPU hot fields read on every event (exec job sets, busy /
+    /// loading counts, tick tokens, billing classes) live in dense
+    /// index-addressed arenas so the dispatch/billing hot loops stride
+    /// contiguous memory instead of chasing `BTreeMap` nodes; dense order
+    /// equals `GpuId` order, so every "iterate all GPUs" walk replays the
+    /// historical map order bit-identically.
+    pub(super) gpu_map: GpuDenseMap,
+    /// Per-GPU processor-sharing executors (dense arena).
+    pub(super) execs: Vec<GpuExec>,
     pub(super) events: EventQueue,
     pub(super) now: f64,
     pub(super) batches: BTreeMap<u64, Batch>,
@@ -89,13 +98,13 @@ pub struct Engine {
     /// the O(batches) `any(|b| b.function == f)` scans).
     pub(super) fn_inflight: Vec<usize>,
     /// Incremental index: per-GPU count of batches in `Loading` or
-    /// `Prefill` state (replaces the O(batches) scan in
+    /// `Prefill` state (dense arena; replaces the O(batches) scan in
     /// `target_gpu_idle`).
-    pub(super) gpu_busy: BTreeMap<GpuId, usize>,
+    pub(super) gpu_busy: Vec<usize>,
     /// Incremental index: per-GPU count of batches in `Loading` state —
-    /// the billing classes' "loading bills like execution" test, O(log)
-    /// instead of the historical per-interval batch scan.
-    pub(super) gpu_loading: BTreeMap<GpuId, usize>,
+    /// the billing classes' "loading bills like execution" test, O(1)
+    /// dense lookup instead of the historical per-interval batch scan.
+    pub(super) gpu_loading: Vec<usize>,
     /// Delta-maintained billing aggregates (`sim::billing`): per-GPU
     /// class + per-class running sums, updated through
     /// `Engine::reclassify_gpu` on every state change.
@@ -103,9 +112,9 @@ pub struct Engine {
     /// Outstanding queue-wakeup tokens per function: superseded checks
     /// are cancelled in O(1) instead of being stamped and skipped.
     pub(super) queue_wakeups: Vec<QueueWakeups>,
-    /// The single outstanding `GpuTick` per GPU (absent = exec idle).
-    /// Re-scheduling cancels the previous tick outright.
-    pub(super) tick_tokens: BTreeMap<GpuId, EventToken>,
+    /// The single outstanding `GpuTick` per GPU (dense arena; `None` =
+    /// exec idle). Re-scheduling cancels the previous tick outright.
+    pub(super) tick_tokens: Vec<Option<EventToken>>,
     /// The single outstanding `KeepaliveCheck`: its armed instant and
     /// token. Re-armed (cancel + push) whenever the earliest expiry
     /// moves, so sweeps fire only when something actually expires.
@@ -117,6 +126,11 @@ pub struct Engine {
     pub(super) arrival_cursor: usize,
     /// Functions sharing each model (staging copies are per-model).
     pub(super) model_peers: BTreeMap<&'static str, Vec<usize>>,
+    /// Models hosted by *peer zones* of a sharded run (`sim::sharded`),
+    /// refreshed at zone-window boundaries. Empty for single-zone runs —
+    /// the cross-zone pricing hook in `make_resident` short-circuits on
+    /// emptiness, so zones=1 performs zero additional float operations.
+    pub(super) peer_models: BTreeSet<&'static str>,
     /// Built-in observer #1: the per-request metrics sink.
     pub metrics: RunMetrics,
     /// Built-in observer #2: the billing model pricing each aggregate
@@ -146,14 +160,8 @@ impl Engine {
             .iter()
             .map(|f| BatchQueue::new(f.id, &f.model))
             .collect();
-        let execs: BTreeMap<GpuId, GpuExec> = cluster
-            .gpu_ids()
-            .into_iter()
-            .map(|g| (g, GpuExec::default()))
-            .collect();
-        let gpu_busy: BTreeMap<GpuId, usize> =
-            cluster.gpu_ids().into_iter().map(|g| (g, 0)).collect();
-        let gpu_loading = gpu_busy.clone();
+        let gpu_map = cluster.dense_map();
+        let n_gpus = gpu_map.len();
         let n_fns = workload.functions.len();
         let mut model_peers: BTreeMap<&'static str, Vec<usize>> = BTreeMap::new();
         for f in &workload.functions {
@@ -171,7 +179,8 @@ impl Engine {
             functions: workload.functions,
             rates: workload.rates,
             queues,
-            execs,
+            gpu_map,
+            execs: vec![GpuExec::default(); n_gpus],
             events: EventQueue::new(),
             now: 0.0,
             batches: BTreeMap::new(),
@@ -179,15 +188,16 @@ impl Engine {
             blocked: BTreeMap::new(),
             active: BTreeSet::new(),
             fn_inflight: vec![0; n_fns],
-            gpu_busy,
-            gpu_loading,
+            gpu_busy: vec![0; n_gpus],
+            gpu_loading: vec![0; n_gpus],
             bill: BillingIndex::default(),
             queue_wakeups: vec![QueueWakeups::default(); n_fns],
-            tick_tokens: BTreeMap::new(),
+            tick_tokens: vec![None; n_gpus],
             keepalive_armed: None,
             arrival_order: Vec::new(),
             arrival_cursor: 0,
             model_peers,
+            peer_models: BTreeSet::new(),
             metrics: RunMetrics::default(),
             cost_obs: BilledCost::new(billing),
             series: None,
@@ -266,7 +276,7 @@ impl Engine {
             EventKind::QueueCheck(f) => self.try_dispatch_all(Some(f)),
             EventKind::LoadDone(b) => self.on_load_done(b),
             EventKind::GpuTick(g) => {
-                self.tick_tokens.remove(&g); // this tick just fired
+                self.tick_tokens[self.gpu_map.dense(g)] = None; // just fired
                 self.on_gpu_tick(g);
             }
             EventKind::KeepaliveCheck => {
@@ -294,6 +304,37 @@ impl Engine {
     pub fn run_full(mut self) -> RunOutput {
         while self.step() {}
         self.finish_full()
+    }
+
+    /// Process every event at `t <= boundary`, then stop (conservative
+    /// zone-window execution, `sim::sharded`). Peeking never reorders
+    /// pops, so a run chopped into windows is bit-identical to an
+    /// unchopped one.
+    pub fn step_until(&mut self, boundary: f64) {
+        while let Some(t) = self.events.next_t() {
+            if t > boundary {
+                break;
+            }
+            self.step();
+        }
+    }
+
+    /// Models with at least one shared-backbone host on this engine's
+    /// cluster — the payload exchanged between zones at window
+    /// boundaries (`sim::sharded`).
+    pub fn hosted_models(&self) -> BTreeSet<&'static str> {
+        self.model_peers
+            .keys()
+            .copied()
+            .filter(|&m| !self.registry.hosts(m).is_empty())
+            .collect()
+    }
+
+    /// Install the models hosted by peer zones (see `sim::sharded`).
+    /// Affects only the *pricing* of future cold backbone loads — it
+    /// creates no events, so a drained zone stays drained.
+    pub fn set_peer_models(&mut self, peers: BTreeSet<&'static str>) {
+        self.peer_models = peers;
     }
 
     /// Final billing to the end of the workload window, then the
@@ -501,7 +542,9 @@ impl Engine {
     /// between `step`s; not used by the simulation itself.
     pub fn check_indexes(&self) {
         use crate::sim::dispatch::BatchState;
-        for (&g, &n) in &self.gpu_busy {
+        assert_eq!(self.gpu_busy.len(), self.cluster.n_gpus());
+        for (d, &n) in self.gpu_busy.iter().enumerate() {
+            let g = self.gpu_map.id(d);
             let brute = self
                 .batches
                 .values()
@@ -559,8 +602,11 @@ impl Engine {
             .iter()
             .filter(|e| matches!(e.kind, &EventKind::GpuTick(_)))
             .count();
-        assert_eq!(tick_events, self.tick_tokens.len(), "untracked GpuTick events");
-        for (&g, &tok) in &self.tick_tokens {
+        let live_ticks = self.tick_tokens.iter().flatten().count();
+        assert_eq!(tick_events, live_ticks, "untracked GpuTick events");
+        for (d, tok) in self.tick_tokens.iter().enumerate() {
+            let Some(&tok) = tok.as_ref() else { continue };
+            let g = self.gpu_map.id(d);
             let p = self.events.get(tok).expect("tracked GpuTick token is dead");
             assert!(
                 matches!(p.kind, &EventKind::GpuTick(eg) if eg == g),
@@ -568,11 +614,12 @@ impl Engine {
                 p.kind
             );
         }
-        for (&g, exec) in &self.execs {
+        for (d, exec) in self.execs.iter().enumerate() {
             assert_eq!(
-                self.tick_tokens.contains_key(&g),
+                self.tick_tokens[d].is_some(),
                 exec.next_completion().is_some(),
-                "tick presence disagrees with exec state on {g}"
+                "tick presence disagrees with exec state on {}",
+                self.gpu_map.id(d)
             );
         }
         // Queue wakeups: the live QueueCheck events are exactly the live

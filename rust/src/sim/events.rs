@@ -237,6 +237,21 @@ impl EventQueue {
         }
     }
 
+    /// Time of the next event without popping it. Advances the wheel far
+    /// enough to expose the global minimum in `ready` (a pure peek:
+    /// pre-advancing never reorders pops, it only moves entries from
+    /// wheel slots into the sorted ready buffer earlier than `pop` would
+    /// have).
+    pub fn next_t(&mut self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        while self.ready.is_empty() {
+            self.advance();
+        }
+        Some(self.slab[*self.ready.last().unwrap() as usize].t)
+    }
+
     /// Live (non-cancelled) pending events.
     pub fn len(&self) -> usize {
         self.len

@@ -13,6 +13,7 @@ pub mod engine;
 pub mod events;
 pub mod exec;
 pub mod observe;
+pub mod sharded;
 pub mod workloads;
 
 pub use billing::BillClass;

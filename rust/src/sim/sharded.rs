@@ -1,0 +1,444 @@
+//! Zone-sharded execution: one [`Engine`] per cluster zone, coupled only
+//! through conservative time windows.
+//!
+//! # Model
+//!
+//! A fleet-scale cluster is partitioned into `Z` *zones* — disjoint sets
+//! of nodes with their own GPUs, containers, and coordinator state.
+//! Functions are assigned round-robin: zone `z` owns every global
+//! function `f` with `f % Z == z`, renumbered to the dense local id
+//! `f / Z` (so `global = zone + local·Z` round-trips). Each zone is a
+//! complete, independent simulation: its own timing wheel, dispatch
+//! state, billing arenas, and RNG stream seeded identically from the run
+//! seed — routing, batching, and keep-alive never cross a zone boundary.
+//!
+//! The only inter-zone coupling is an *advisory* one: which backbone
+//! models the other zones currently host ([`Engine::set_peer_models`]).
+//! A zone whose cold backbone load finds the model resident in a peer
+//! zone streams it over the datacenter fabric instead of remote storage
+//! (`params::CROSS_ZONE_BACKBONE_FACTOR`). Because that hint changes
+//! event *durations* but never creates or reorders events across zones,
+//! zones only need to agree on *when* the hint is refreshed — which is
+//! what the conservative window protocol pins down.
+//!
+//! # Window protocol
+//!
+//! Time advances in fixed windows of [`ZONE_WINDOW_S`]. Every zone
+//! simulates window `k` (`t ≤ k·W`) to completion, then all zones
+//! exchange their hosted-model sets at the barrier; each zone installs
+//! the union of its peers' sets and proceeds to window `k+1`. The run
+//! ends at the first boundary where every zone's event queue is empty
+//! (queues drain monotonically across a barrier: installing peer models
+//! schedules nothing).
+//!
+//! Determinism: within a window a zone touches only its own state, so
+//! thread scheduling cannot reorder anything observable; at a barrier
+//! every zone reads the same published snapshots. Hence
+//! [`Mode::Parallel`] is *bit-identical* to [`Mode::Sequential`] — the
+//! single-threaded differential oracle that runs the very same window
+//! schedule one zone at a time. Tests assert this equality on full
+//! output fingerprints (outcomes, cost integrals, counters, bill
+//! series).
+//!
+//! With `Z = 1` the peer set is always empty and the window chopping is
+//! pure `step_until` slicing, which never reorders timing-wheel pops —
+//! so a one-zone run is bit-identical to the plain [`Engine::run_full`]
+//! path (also asserted in tests).
+
+use std::collections::BTreeSet;
+use std::sync::{Barrier, Mutex};
+
+use super::config::SystemConfig;
+use super::engine::{Engine, Workload};
+use super::observe::{BillSeries, RunOutput};
+use crate::cluster::Cluster;
+use crate::cost::CostTracker;
+use crate::metrics::{RunMetrics, RunStats};
+
+/// Conservative synchronization window (simulated seconds). Large enough
+/// that barrier overhead is negligible against the ~10⁴ events a busy
+/// zone processes per window; small enough that the cross-zone
+/// hosted-model hint stays fresh relative to keep-alive timescales
+/// (`coordinator::keepalive::DEFAULT_KEEPALIVE_S`).
+pub const ZONE_WINDOW_S: f64 = 10.0;
+
+/// How the zone engines are driven. Both modes execute the identical
+/// window schedule and must produce bit-identical output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// All zones on the calling thread, one after another per window —
+    /// the differential oracle for the parallel path.
+    Sequential,
+    /// One OS thread per zone, synchronized with a barrier per window.
+    Parallel,
+}
+
+/// What one zone publishes at a window boundary.
+#[derive(Default)]
+struct Board {
+    hosted: BTreeSet<&'static str>,
+    drained: bool,
+}
+
+/// Run `workload` sharded across `clusters.len()` zones and merge the
+/// per-zone outputs into one [`RunOutput`] (global function ids
+/// restored, cost and counters summed, bill-series buckets added
+/// elementwise, `duration_s` the max over zones).
+pub fn run_zones(
+    cfg: &SystemConfig,
+    clusters: Vec<Cluster>,
+    workload: Workload,
+    seed: u64,
+    mode: Mode,
+    bill_timing: bool,
+    series_bucket_s: Option<f64>,
+) -> RunOutput {
+    let zones = clusters.len();
+    assert!(zones >= 1, "run_zones needs at least one zone");
+    let shards = split_workload(&workload, zones);
+    let zone_inputs: Vec<(Cluster, Workload)> = clusters.into_iter().zip(shards).collect();
+    let outputs = match mode {
+        Mode::Sequential => run_sequential(cfg, zone_inputs, seed, bill_timing, series_bucket_s),
+        // A single zone never waits on a barrier; skip the thread.
+        Mode::Parallel if zones == 1 => {
+            run_sequential(cfg, zone_inputs, seed, bill_timing, series_bucket_s)
+        }
+        Mode::Parallel => run_parallel(cfg, zone_inputs, seed, bill_timing, series_bucket_s),
+    };
+    merge(outputs, zones)
+}
+
+/// Round-robin shard of the global workload: zone `z` gets every
+/// function with `f % zones == z` under the dense local id `f / zones`,
+/// with its requests and mean-rate entry remapped alongside. Request
+/// ids and arrival order are preserved (a stable filter of a
+/// time-ordered stream stays time-ordered).
+fn split_workload(w: &Workload, zones: usize) -> Vec<Workload> {
+    let mut shards: Vec<Workload> = (0..zones)
+        .map(|_| Workload {
+            functions: Vec::new(),
+            requests: Vec::new(),
+            duration_s: w.duration_s,
+            rates: Vec::new(),
+        })
+        .collect();
+    for f in &w.functions {
+        let shard = &mut shards[f.id % zones];
+        let mut local = f.clone();
+        local.id = f.id / zones;
+        assert_eq!(
+            shard.functions.len(),
+            local.id,
+            "workload function ids must be dense from 0"
+        );
+        shard.rates.push(w.rates[f.id]);
+        shard.functions.push(local);
+    }
+    for r in &w.requests {
+        let mut req = r.clone();
+        req.function = r.function / zones;
+        shards[r.function % zones].requests.push(req);
+    }
+    shards
+}
+
+fn build_engine(
+    cfg: &SystemConfig,
+    cluster: Cluster,
+    shard: Workload,
+    seed: u64,
+    bill_timing: bool,
+    series_bucket_s: Option<f64>,
+) -> Engine {
+    let mut e = Engine::new(cfg.clone(), cluster, shard, seed);
+    if bill_timing {
+        e.set_bill_timing(true);
+    }
+    if let Some(bucket_s) = series_bucket_s {
+        e.enable_bill_series(bucket_s);
+    }
+    e
+}
+
+/// Union of every peer's hosted-model set, excluding zone `me`.
+fn peer_union(boards: &[BTreeSet<&'static str>], me: usize) -> BTreeSet<&'static str> {
+    let mut peers = BTreeSet::new();
+    for (z, hosted) in boards.iter().enumerate() {
+        if z != me {
+            peers.extend(hosted.iter().copied());
+        }
+    }
+    peers
+}
+
+/// The differential oracle: the exact window schedule of the parallel
+/// path, executed zone-by-zone on one thread.
+fn run_sequential(
+    cfg: &SystemConfig,
+    zone_inputs: Vec<(Cluster, Workload)>,
+    seed: u64,
+    bill_timing: bool,
+    series_bucket_s: Option<f64>,
+) -> Vec<RunOutput> {
+    let mut engines: Vec<Engine> = zone_inputs
+        .into_iter()
+        .map(|(cluster, shard)| {
+            build_engine(cfg, cluster, shard, seed, bill_timing, series_bucket_s)
+        })
+        .collect();
+    let mut boundary = ZONE_WINDOW_S;
+    loop {
+        for e in engines.iter_mut() {
+            e.step_until(boundary);
+        }
+        let boards: Vec<BTreeSet<&'static str>> =
+            engines.iter().map(Engine::hosted_models).collect();
+        let all_done = engines.iter().all(|e| e.event_queue_len() == 0);
+        for (z, e) in engines.iter_mut().enumerate() {
+            e.set_peer_models(peer_union(&boards, z));
+        }
+        if all_done {
+            break;
+        }
+        boundary += ZONE_WINDOW_S;
+    }
+    engines.into_iter().map(Engine::finish_full).collect()
+}
+
+/// One thread per zone. Engines are built *inside* their thread (policy
+/// objects are not `Send`; only plain config/cluster/workload data
+/// crosses the spawn). Two barrier waits per window: publish → read, and
+/// read → next window (so a fast zone cannot overwrite a board a slow
+/// peer has not read yet). Every thread reads the same published
+/// snapshot, so the termination decision is identical across threads.
+fn run_parallel(
+    cfg: &SystemConfig,
+    zone_inputs: Vec<(Cluster, Workload)>,
+    seed: u64,
+    bill_timing: bool,
+    series_bucket_s: Option<f64>,
+) -> Vec<RunOutput> {
+    let zones = zone_inputs.len();
+    let boards: Vec<Mutex<Board>> = (0..zones).map(|_| Mutex::new(Board::default())).collect();
+    let barrier = Barrier::new(zones);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = zone_inputs
+            .into_iter()
+            .enumerate()
+            .map(|(me, (cluster, shard))| {
+                let boards = &boards;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let mut e =
+                        build_engine(cfg, cluster, shard, seed, bill_timing, series_bucket_s);
+                    let mut boundary = ZONE_WINDOW_S;
+                    loop {
+                        e.step_until(boundary);
+                        {
+                            let mut board = boards[me].lock().unwrap();
+                            board.hosted = e.hosted_models();
+                            board.drained = e.event_queue_len() == 0;
+                        }
+                        barrier.wait();
+                        let mut snapshot = Vec::with_capacity(zones);
+                        let mut all_done = true;
+                        for slot in boards.iter() {
+                            let board = slot.lock().unwrap();
+                            all_done &= board.drained;
+                            snapshot.push(board.hosted.clone());
+                        }
+                        e.set_peer_models(peer_union(&snapshot, me));
+                        barrier.wait();
+                        if all_done {
+                            break;
+                        }
+                        boundary += ZONE_WINDOW_S;
+                    }
+                    e.finish_full()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("zone thread panicked"))
+            .collect()
+    })
+}
+
+/// Fold per-zone outputs into one global [`RunOutput`]. Outcomes are
+/// remapped back to global function ids (`zone + local·zones`) and
+/// concatenated in zone order — a deterministic order, though not
+/// globally arrival-sorted; all downstream consumers aggregate.
+fn merge(mut outputs: Vec<RunOutput>, zones: usize) -> RunOutput {
+    if zones == 1 {
+        return outputs.pop().expect("one zone produces one output");
+    }
+    let mut metrics = RunMetrics::default();
+    let mut cost = CostTracker::default();
+    let mut stats = RunStats::default();
+    let mut series: Option<BillSeries> = None;
+    for (zone, out) in outputs.into_iter().enumerate() {
+        metrics.duration_s = metrics.duration_s.max(out.metrics.duration_s);
+        for mut o in out.metrics.outcomes {
+            o.function = zone + o.function * zones;
+            metrics.outcomes.push(o);
+        }
+        cost.merge(&out.cost);
+        stats.merge(&out.stats);
+        if let Some(s) = out.bill_series {
+            series = Some(match series.take() {
+                None => s,
+                Some(acc) => merge_series(acc, s),
+            });
+        }
+    }
+    RunOutput {
+        metrics,
+        cost,
+        stats,
+        bill_series: series,
+    }
+}
+
+/// Elementwise sum of two zones' bill series (same bucket width by
+/// construction; the shorter series is zero-extended).
+fn merge_series(mut a: BillSeries, b: BillSeries) -> BillSeries {
+    assert_eq!(
+        a.bucket_s.to_bits(),
+        b.bucket_s.to_bits(),
+        "zones must sample the bill series on the same bucket"
+    );
+    if a.buckets.len() < b.buckets.len() {
+        a.buckets.resize(b.buckets.len(), Default::default());
+    }
+    for (x, y) in a.buckets.iter_mut().zip(&b.buckets) {
+        x.active_gb_s += y.active_gb_s;
+        x.active_gpu_s += y.active_gpu_s;
+        x.loading_gb_s += y.loading_gb_s;
+        x.loading_gpu_s += y.loading_gpu_s;
+        x.idle_warm_gb_s += y.idle_warm_gb_s;
+        x.idle_warm_gpu_s += y.idle_warm_gpu_s;
+        x.idle_cold_gb_s += y.idle_cold_gb_s;
+        x.idle_cold_gpu_s += y.idle_cold_gpu_s;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::{FunctionSpec, ModelProfile};
+    use crate::trace::{self, Pattern, Request, TraceSpec};
+
+    fn workload(n_fns: usize, rate: f64, dur: f64) -> Workload {
+        let functions: Vec<FunctionSpec> = (0..n_fns)
+            .map(|i| FunctionSpec::new(i, ModelProfile::llama2_7b(), i))
+            .collect();
+        let traces: Vec<Vec<Request>> = (0..n_fns)
+            .map(|i| TraceSpec::new(i, Pattern::Bursty, rate, 9 + i as u64).generate(dur))
+            .collect();
+        Workload {
+            functions,
+            requests: trace::merge(traces),
+            duration_s: dur,
+            rates: vec![rate; n_fns],
+        }
+    }
+
+    /// Bit-exact fingerprint: `Debug` for `f64` prints the shortest
+    /// uniquely-round-tripping decimal, so equal strings ⇔ equal bits
+    /// (wall-clock timing stays off in these tests, so every field is
+    /// deterministic).
+    fn fp(o: &RunOutput) -> String {
+        format!("{:?} {:?} {:?} {:?}", o.metrics, o.cost, o.stats, o.bill_series)
+    }
+
+    #[test]
+    fn split_remaps_functions_requests_and_rates() {
+        let w = workload(5, 0.05, 300.0);
+        let shards = split_workload(&w, 2);
+        // Zone 0 owns {0, 2, 4}, zone 1 owns {1, 3}.
+        assert_eq!(shards[0].functions.len(), 3);
+        assert_eq!(shards[1].functions.len(), 2);
+        for (zone, s) in shards.iter().enumerate() {
+            for (local, f) in s.functions.iter().enumerate() {
+                assert_eq!(f.id, local, "local ids must be dense");
+                // The clone keeps the global adapter id: recover the
+                // global function id and check the rate moved with it.
+                let global = zone + local * 2;
+                assert_eq!(f.adapter_id, global);
+                assert!((s.rates[local] - w.rates[global]).abs() < 1e-15);
+            }
+            assert!(s.requests.windows(2).all(|p| p[0].arrival_s <= p[1].arrival_s));
+        }
+        let total: usize = shards.iter().map(|s| s.requests.len()).sum();
+        assert_eq!(total, w.requests.len());
+    }
+
+    #[test]
+    fn one_zone_is_bit_identical_to_the_plain_engine() {
+        // zones = 1 must be a pure refactor: window-chopped stepping and
+        // an always-empty peer set change nothing, in either mode.
+        let cfg = SystemConfig::serverless_lora();
+        let w = workload(4, 0.05, 1200.0);
+        let plain = {
+            let mut e = Engine::new(cfg.clone(), Cluster::new(2, 2, 4), w.clone(), 1);
+            e.enable_bill_series(300.0);
+            e.run_full()
+        };
+        for mode in [Mode::Sequential, Mode::Parallel] {
+            let out = run_zones(
+                &cfg,
+                vec![Cluster::new(2, 2, 4)],
+                w.clone(),
+                1,
+                mode,
+                false,
+                Some(300.0),
+            );
+            assert_eq!(fp(&plain), fp(&out), "{mode:?} diverged at zones=1");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_oracle_multi_seed() {
+        // Thread scheduling must be unobservable: the parallel run is
+        // bit-identical to the single-threaded oracle and to itself.
+        let cfg = SystemConfig::serverless_lora();
+        let zones = || vec![Cluster::new(1, 2, 4), Cluster::new(1, 2, 4)];
+        for seed in [1u64, 7, 23] {
+            let w = workload(8, 0.05, 1200.0);
+            let run = |mode| run_zones(&cfg, zones(), w.clone(), seed, mode, false, Some(300.0));
+            let oracle = fp(&run(Mode::Sequential));
+            assert_eq!(oracle, fp(&run(Mode::Parallel)), "seed {seed}");
+            assert_eq!(oracle, fp(&run(Mode::Parallel)), "seed {seed} (rerun)");
+        }
+    }
+
+    #[test]
+    fn merge_restores_global_ids_and_conserves_requests() {
+        let cfg = SystemConfig::serverless_lora();
+        let w = workload(5, 0.05, 600.0);
+        let out = run_zones(
+            &cfg,
+            vec![Cluster::new(1, 2, 4), Cluster::new(1, 2, 4)],
+            w.clone(),
+            1,
+            Mode::Parallel,
+            false,
+            None,
+        );
+        assert_eq!(out.metrics.outcomes.len(), w.requests.len());
+        let mut want = vec![0usize; 5];
+        for r in &w.requests {
+            want[r.function] += 1;
+        }
+        let mut got = vec![0usize; 5];
+        for o in &out.metrics.outcomes {
+            got[o.function] += 1;
+        }
+        assert_eq!(got, want, "per-global-function outcome counts");
+        assert!(out.cost.total_usd() > 0.0);
+        assert!(out.stats.events_processed > 0);
+    }
+}
