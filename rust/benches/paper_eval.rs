@@ -67,6 +67,7 @@ fn main() {
     );
     let t_all = Instant::now();
     let ran_fleet = ids.contains(&"fleet");
+    let ran_tiers = ids.contains(&"tiers");
     let mut records: Vec<Json> = Vec::new();
     for id in ids {
         let t0 = Instant::now();
@@ -96,6 +97,12 @@ fn main() {
         // and peak event-queue length, tracked across PRs. Reuses the
         // sweep's measurement — no extra simulation.
         fields.push(("fleet", exp::fleet::fleet_json(!full)));
+    }
+    if ran_tiers {
+        // Tiered-store record (bursty reference cell): tier hit mix and
+        // link re-time counts, tracked across PRs. Reuses the sweep's
+        // measurement — no extra simulation.
+        fields.push(("tiers", exp::tiers::tiers_json(!full)));
     }
     let doc = obj(fields);
     let path = "BENCH_sim.json";

@@ -71,7 +71,7 @@ impl ArtifactKind {
 
 /// Where a (copy of an) artifact currently lives.  The load path walks
 /// Remote → ContainerRam → Gpu; each hop has its own bandwidth (params.rs).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Tier {
     /// Remote object storage (S3-like).
     Remote,
@@ -83,17 +83,231 @@ pub enum Tier {
     Gpu,
 }
 
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Remote => "remote",
+            Tier::Ssd => "ssd",
+            Tier::ContainerRam => "ram",
+            Tier::Gpu => "gpu",
+        }
+    }
+}
+
+/// A physical transfer link of one node.  Each node has one of each; under
+/// the tiered store, concurrent loads on the same `(node, link)` split its
+/// bandwidth fairly (processor sharing, `sim/flow.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LinkKind {
+    /// NIC: remote object store → node.
+    Nic,
+    /// Local NVMe SSD → host DRAM.
+    Nvme,
+    /// Host DRAM → GPU HBM (PCIe).
+    Pcie,
+}
+
+impl LinkKind {
+    pub const COUNT: usize = 3;
+    pub const ALL: [LinkKind; 3] = [LinkKind::Nic, LinkKind::Nvme, LinkKind::Pcie];
+
+    /// Dense index for per-node link-state arrays.
+    pub fn index(self) -> usize {
+        match self {
+            LinkKind::Nic => 0,
+            LinkKind::Nvme => 1,
+            LinkKind::Pcie => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkKind::Nic => "nic",
+            LinkKind::Nvme => "nvme",
+            LinkKind::Pcie => "pcie",
+        }
+    }
+}
+
+/// Per-link bandwidth capacities (GB/s) of one node.  `DEFAULT` reproduces
+/// the calibration constants in `params.rs`, so costs evaluated against it
+/// are bit-identical to the flat latencies this module used to hard-code.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkCaps {
+    pub nic_gbps: f64,
+    pub nvme_gbps: f64,
+    pub pcie_gbps: f64,
+}
+
+impl LinkCaps {
+    pub const DEFAULT: LinkCaps = LinkCaps {
+        nic_gbps: params::BW_REMOTE_GBPS,
+        nvme_gbps: params::BW_SSD_GBPS,
+        pcie_gbps: params::BW_PCIE_GBPS,
+    };
+
+    pub fn gbps(&self, link: LinkKind) -> f64 {
+        match link {
+            LinkKind::Nic => self.nic_gbps,
+            LinkKind::Nvme => self.nvme_gbps,
+            LinkKind::Pcie => self.pcie_gbps,
+        }
+    }
+}
+
+impl Default for LinkCaps {
+    fn default() -> Self {
+        LinkCaps::DEFAULT
+    }
+}
+
+/// One term of a load cost: a fixed CPU/driver-side latency, or a bulk
+/// transfer across a specific link (the contended part).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Term {
+    /// Fixed overhead (deserialization, import, attach, JIT compile).
+    Fixed(f64),
+    /// Bulk copy of `gb` across `link`; duration = gb / share of the
+    /// link's bandwidth.
+    Xfer { link: LinkKind, gb: f64 },
+}
+
+impl Term {
+    /// Uncontended duration of this term.
+    pub fn seconds(&self, caps: &LinkCaps) -> f64 {
+        match *self {
+            Term::Fixed(s) => s,
+            Term::Xfer { link, gb } => gb / caps.gbps(link),
+        }
+    }
+}
+
+/// The ordered terms making up one load phase.  `total` folds left-to-right
+/// starting from 0.0 — the exact float-op order of the flat expressions it
+/// replaced — so solo (uncontended) totals are bit-identical to the
+/// pre-tiered latencies.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PhaseCost(pub Vec<Term>);
+
+impl PhaseCost {
+    pub fn fixed(s: f64) -> Self {
+        PhaseCost(vec![Term::Fixed(s)])
+    }
+
+    pub fn xfer(link: LinkKind, gb: f64) -> Self {
+        PhaseCost(vec![Term::Xfer { link, gb }])
+    }
+
+    pub fn push(&mut self, t: Term) {
+        self.0.push(t);
+    }
+
+    /// Uncontended total, left-fold from 0.0 (see type docs).
+    pub fn total(&self, caps: &LinkCaps) -> f64 {
+        self.0.iter().fold(0.0, |acc, t| acc + t.seconds(caps))
+    }
+
+    /// Total at the calibration bandwidths of `params.rs`.
+    pub fn total_default(&self) -> f64 {
+        self.total(&LinkCaps::DEFAULT)
+    }
+
+    /// Does any term move bytes across a link?
+    pub fn has_xfer(&self) -> bool {
+        self.0.iter().any(|t| matches!(t, Term::Xfer { .. }))
+    }
+
+    /// Does any term fetch from below host RAM (NVMe or NIC)?  True means
+    /// the artifact is *not* already staged host-side and the load should
+    /// resolve through the tier hierarchy.
+    pub fn fetches_below_ram(&self) -> bool {
+        self.0.iter().any(|t| {
+            matches!(
+                t,
+                Term::Xfer { link: LinkKind::Nic, .. }
+                    | Term::Xfer { link: LinkKind::Nvme, .. }
+            )
+        })
+    }
+
+    /// Largest single transfer payload (GB) among the terms — the artifact
+    /// body (multi-hop costs repeat the same payload per hop).
+    pub fn payload_gb(&self) -> f64 {
+        let mut gb = 0.0f64;
+        for t in &self.0 {
+            if let Term::Xfer { gb: g, .. } = t {
+                if *g > gb {
+                    gb = *g;
+                }
+            }
+        }
+        gb
+    }
+
+    /// Scale every term by `k` (cross-zone discount).  `k` is a power of
+    /// two in practice (0.5), so scaling terms individually folds to the
+    /// bit-identical total as scaling the folded sum.
+    pub fn scale(&mut self, k: f64) {
+        for t in &mut self.0 {
+            match t {
+                Term::Fixed(s) => *s *= k,
+                Term::Xfer { gb, .. } => *gb *= k,
+            }
+        }
+    }
+
+    /// Re-source from host RAM (tier hit): every bulk transfer collapses
+    /// into one PCIe hop of the artifact payload; fixed terms survive.
+    pub fn source_from_ram(&mut self) {
+        let gb = self.payload_gb();
+        self.0.retain(|t| matches!(t, Term::Fixed(_)));
+        if gb > 0.0 {
+            self.0.push(Term::Xfer { link: LinkKind::Pcie, gb });
+        }
+    }
+
+    /// Re-source from the remote store (node holds no local checkpoint):
+    /// NVMe reads become NIC fetches; PCIe hops and fixed terms survive.
+    pub fn source_from_remote(&mut self) {
+        for t in &mut self.0 {
+            if let Term::Xfer { link, .. } = t {
+                if *link == LinkKind::Nvme {
+                    *link = LinkKind::Nic;
+                }
+            }
+        }
+    }
+}
+
 /// One concrete artifact of one function.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
     pub kind: ArtifactKind,
     /// Size in GB at its destination tier.
     pub size_gb: f64,
-    /// Latency (s) to make it GPU-ready from each source tier, including
-    /// any fixed overheads (deserialization, cudaMalloc, JIT compile).
-    pub load_from_remote_s: f64,
-    pub load_from_ssd_s: f64,
-    pub load_from_ram_s: f64,
+    /// Cost (ordered terms) to make it GPU-ready from each source tier,
+    /// including any fixed overheads (deserialization, cudaMalloc, JIT).
+    pub from_remote: PhaseCost,
+    pub from_ssd: PhaseCost,
+    pub from_ram: PhaseCost,
+}
+
+impl ArtifactSpec {
+    /// Term view of the load from a source tier (None for Gpu: resident).
+    pub fn cost_from(&self, tier: Tier) -> Option<&PhaseCost> {
+        match tier {
+            Tier::Remote => Some(&self.from_remote),
+            Tier::Ssd => Some(&self.from_ssd),
+            Tier::ContainerRam => Some(&self.from_ram),
+            Tier::Gpu => None,
+        }
+    }
+
+    /// Flat (uncontended, default-bandwidth) latency from a source tier —
+    /// the pre-tiered scalar view, bit-identical to the old constants.
+    pub fn load_s(&self, tier: Tier) -> f64 {
+        self.cost_from(tier).map_or(0.0, |c| c.total_default())
+    }
 }
 
 /// A deployed serverless function: one LoRA adapter over one backbone.
@@ -123,44 +337,55 @@ impl FunctionSpec {
 
     /// The artifact set of this function, in precedence order.
     pub fn artifacts(&self) -> Vec<ArtifactSpec> {
+        use LinkKind::{Nic, Nvme, Pcie};
         let m = &self.model;
         vec![
             ArtifactSpec {
                 kind: ArtifactKind::Library,
                 size_gb: m.library_gb,
-                load_from_remote_s: m.library_gb / params::BW_REMOTE_GBPS
-                    + params::LIBRARY_IMPORT_S,
-                load_from_ssd_s: m.library_gb / params::BW_SSD_GBPS
-                    + params::LIBRARY_IMPORT_S,
+                from_remote: PhaseCost(vec![
+                    Term::Xfer { link: Nic, gb: m.library_gb },
+                    Term::Fixed(params::LIBRARY_IMPORT_S),
+                ]),
+                from_ssd: PhaseCost(vec![
+                    Term::Xfer { link: Nvme, gb: m.library_gb },
+                    Term::Fixed(params::LIBRARY_IMPORT_S),
+                ]),
                 // Libraries already in container RAM are imported (=mapped);
-                // only the residual python-import cost remains.
-                load_from_ram_s: params::LIBRARY_WARM_IMPORT_S,
+                // only the residual python-import cost remains — no copy.
+                from_ram: PhaseCost::fixed(params::LIBRARY_WARM_IMPORT_S),
             },
             ArtifactSpec {
                 kind: ArtifactKind::Backbone,
                 size_gb: m.weights_gb,
-                load_from_remote_s: m.weights_gb / params::BW_REMOTE_GBPS,
-                load_from_ssd_s: m.weights_gb / params::BW_SSD_GBPS,
-                load_from_ram_s: m.weights_gb / params::BW_PCIE_GBPS,
+                from_remote: PhaseCost::xfer(Nic, m.weights_gb),
+                from_ssd: PhaseCost::xfer(Nvme, m.weights_gb),
+                from_ram: PhaseCost::xfer(Pcie, m.weights_gb),
             },
             ArtifactSpec {
                 kind: ArtifactKind::Adapter,
                 size_gb: m.adapter_gb,
-                load_from_remote_s: m.adapter_gb / params::BW_REMOTE_GBPS
-                    + params::ADAPTER_ATTACH_S,
-                load_from_ssd_s: m.adapter_gb / params::BW_SSD_GBPS
-                    + params::ADAPTER_ATTACH_S,
-                load_from_ram_s: m.adapter_gb / params::BW_PCIE_GBPS
-                    + params::ADAPTER_ATTACH_S,
+                from_remote: PhaseCost(vec![
+                    Term::Xfer { link: Nic, gb: m.adapter_gb },
+                    Term::Fixed(params::ADAPTER_ATTACH_S),
+                ]),
+                from_ssd: PhaseCost(vec![
+                    Term::Xfer { link: Nvme, gb: m.adapter_gb },
+                    Term::Fixed(params::ADAPTER_ATTACH_S),
+                ]),
+                from_ram: PhaseCost(vec![
+                    Term::Xfer { link: Pcie, gb: m.adapter_gb },
+                    Term::Fixed(params::ADAPTER_ATTACH_S),
+                ]),
             },
             ArtifactSpec {
                 kind: ArtifactKind::CudaKernel,
                 size_gb: m.kernel_gb,
                 // Kernels are *compiled*, not copied: all tiers cost the JIT
                 // time; a warm kernel cache (SSD/RAM) only skips codegen.
-                load_from_remote_s: m.kernel_jit_s,
-                load_from_ssd_s: m.kernel_cache_load_s,
-                load_from_ram_s: m.kernel_cache_load_s,
+                from_remote: PhaseCost::fixed(m.kernel_jit_s),
+                from_ssd: PhaseCost::fixed(m.kernel_cache_load_s),
+                from_ram: PhaseCost::fixed(m.kernel_cache_load_s),
             },
         ]
     }
@@ -201,11 +426,104 @@ mod tests {
 
     #[test]
     fn faster_tiers_load_faster() {
-        let f = FunctionSpec::new(0, ModelProfile::llama2_13b(), 1);
-        for a in f.artifacts() {
-            assert!(a.load_from_remote_s >= a.load_from_ssd_s);
-            assert!(a.load_from_ssd_s >= a.load_from_ram_s * 0.99);
+        // With explicit per-link bandwidths (NIC 1 ≤ NVMe 5 ≤ PCIe 20 GB/s)
+        // tier monotonicity is exact — no slack factor.  The one artifact
+        // whose RAM cost is not a transfer at all is the library: its RAM
+        // "load" is a warm re-import (LIBRARY_WARM_IMPORT_S), which is
+        // legitimately cheaper than any copy and still satisfies ssd ≥ ram.
+        for m in [ModelProfile::llama2_7b(), ModelProfile::llama2_13b()] {
+            let f = FunctionSpec::new(0, m, 1);
+            for a in f.artifacts() {
+                let (remote, ssd, ram) = (
+                    a.load_s(Tier::Remote),
+                    a.load_s(Tier::Ssd),
+                    a.load_s(Tier::ContainerRam),
+                );
+                assert!(remote >= ssd, "{:?}: remote {remote} < ssd {ssd}", a.kind);
+                assert!(ssd >= ram, "{:?}: ssd {ssd} < ram {ram}", a.kind);
+                assert!(ram >= a.load_s(Tier::Gpu));
+            }
         }
+    }
+
+    #[test]
+    fn phase_costs_fold_bit_identical_to_flat_expressions() {
+        // The per-tier term lists must reproduce the pre-tiered flat
+        // latencies *bitwise* at default bandwidths — golden runs depend
+        // on it.
+        let m = ModelProfile::llama2_13b();
+        let arts = FunctionSpec::new(0, m.clone(), 1).artifacts();
+        let bits = |x: f64| x.to_bits();
+        let lib = &arts[0];
+        assert_eq!(
+            bits(lib.load_s(Tier::Remote)),
+            bits(m.library_gb / params::BW_REMOTE_GBPS + params::LIBRARY_IMPORT_S)
+        );
+        assert_eq!(
+            bits(lib.load_s(Tier::Ssd)),
+            bits(m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S)
+        );
+        assert_eq!(bits(lib.load_s(Tier::ContainerRam)), bits(params::LIBRARY_WARM_IMPORT_S));
+        let bb = &arts[1];
+        assert_eq!(bits(bb.load_s(Tier::Remote)), bits(m.weights_gb / params::BW_REMOTE_GBPS));
+        assert_eq!(bits(bb.load_s(Tier::Ssd)), bits(m.weights_gb / params::BW_SSD_GBPS));
+        assert_eq!(bits(bb.load_s(Tier::ContainerRam)), bits(m.weights_gb / params::BW_PCIE_GBPS));
+        let ad = &arts[2];
+        assert_eq!(
+            bits(ad.load_s(Tier::Ssd)),
+            bits(m.adapter_gb / params::BW_SSD_GBPS + params::ADAPTER_ATTACH_S)
+        );
+        let k = &arts[3];
+        assert_eq!(bits(k.load_s(Tier::Remote)), bits(m.kernel_jit_s));
+        assert_eq!(bits(k.load_s(Tier::Ssd)), bits(m.kernel_cache_load_s));
+    }
+
+    #[test]
+    fn custom_link_caps_scale_transfers_only() {
+        let m = ModelProfile::llama2_7b();
+        let arts = FunctionSpec::new(0, m.clone(), 0).artifacts();
+        let fast = LinkCaps { nic_gbps: 2.0, nvme_gbps: 10.0, pcie_gbps: 40.0 };
+        // Backbone: pure transfer — halves with doubled bandwidth.
+        assert_eq!(arts[1].from_ssd.total(&fast), m.weights_gb / 10.0);
+        // Kernel: pure fixed — unaffected by bandwidth.
+        assert_eq!(arts[3].from_remote.total(&fast), m.kernel_jit_s);
+        // Library: fixed part survives, transfer part scales.
+        assert_eq!(
+            arts[0].from_remote.total(&fast),
+            m.library_gb / 2.0 + params::LIBRARY_IMPORT_S
+        );
+    }
+
+    #[test]
+    fn source_rewrites_follow_the_hierarchy() {
+        let m = ModelProfile::llama2_7b();
+        let arts = FunctionSpec::new(0, m.clone(), 0).artifacts();
+        // Host-cache hit: a two-hop (NVMe + PCIe) cost collapses into one
+        // PCIe hop of the same payload; fixed terms survive.
+        let mut two_hop = PhaseCost(vec![
+            Term::Xfer { link: LinkKind::Nvme, gb: m.weights_gb },
+            Term::Xfer { link: LinkKind::Pcie, gb: m.weights_gb },
+        ]);
+        two_hop.source_from_ram();
+        assert_eq!(two_hop.0, vec![Term::Xfer { link: LinkKind::Pcie, gb: m.weights_gb }]);
+        // Remote miss: NVMe reads become NIC fetches, nothing else moves.
+        let mut ssd = arts[2].from_ssd.clone();
+        ssd.source_from_remote();
+        assert_eq!(
+            ssd.0,
+            vec![
+                Term::Xfer { link: LinkKind::Nic, gb: m.adapter_gb },
+                Term::Fixed(params::ADAPTER_ATTACH_S),
+            ]
+        );
+        // Fixed-only costs are untouched by both rewrites.
+        let mut kernel = arts[3].from_ssd.clone();
+        kernel.source_from_ram();
+        kernel.source_from_remote();
+        assert_eq!(kernel.0, vec![Term::Fixed(m.kernel_cache_load_s)]);
+        assert!(!kernel.has_xfer() && !kernel.fetches_below_ram());
+        assert!(arts[1].from_ssd.fetches_below_ram());
+        assert!(!arts[1].from_ram.fetches_below_ram());
     }
 
     #[test]

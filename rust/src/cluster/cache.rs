@@ -1,0 +1,153 @@
+//! Per-node host-RAM checkpoint cache — the pinned-DRAM tier of the
+//! ServerlessLLM-style loading hierarchy (GPU HBM ← host RAM ← NVMe ←
+//! remote store).
+//!
+//! The cache is a passive ledger: it tracks which model checkpoints are
+//! resident in a node's pinned host memory, their sizes, and recency /
+//! frequency of use.  *What* gets admitted and *who* gets evicted is
+//! decided by the `CachePolicy` trait (`coordinator/policy.rs`) — the
+//! fifth policy axis — which manipulates this ledger through
+//! `insert`/`remove`/`touch`.  A capacity of 0 disables the tier (the
+//! default): the engine then keeps the historical flat-latency path.
+//!
+//! Occupancy is recomputed from the entries on demand (caches hold a
+//! handful of multi-GB checkpoints, not thousands of objects), which
+//! keeps `check()`-style invariants trivial: there is no second counter
+//! to drift.
+
+use std::collections::BTreeMap;
+
+/// One cached checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    pub size_gb: f64,
+    /// Last hit or admission time (sim seconds).
+    pub last_use_s: f64,
+    /// Hits + admissions — the pin-hot policy's frequency signal.
+    pub uses: u64,
+}
+
+/// The host-RAM checkpoint cache of one node, keyed by model name.
+#[derive(Debug, Clone, Default)]
+pub struct HostCache {
+    pub capacity_gb: f64,
+    entries: BTreeMap<&'static str, CacheEntry>,
+}
+
+impl HostCache {
+    pub fn new(capacity_gb: f64) -> Self {
+        HostCache { capacity_gb, entries: BTreeMap::new() }
+    }
+
+    /// A zero-capacity cache is the disabled (flat-latency) tier.
+    pub fn enabled(&self) -> bool {
+        self.capacity_gb > 0.0
+    }
+
+    pub fn contains(&self, model: &str) -> bool {
+        self.entries.contains_key(model)
+    }
+
+    pub fn get(&self, model: &str) -> Option<&CacheEntry> {
+        self.entries.get(model)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Occupied bytes — recomputed from the ledger (see module docs).
+    pub fn used_gb(&self) -> f64 {
+        self.entries.values().map(|e| e.size_gb).sum()
+    }
+
+    pub fn free_gb(&self) -> f64 {
+        (self.capacity_gb - self.used_gb()).max(0.0)
+    }
+
+    /// Entries in model-name order (deterministic iteration for policies).
+    pub fn entries(&self) -> impl Iterator<Item = (&'static str, &CacheEntry)> {
+        self.entries.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// Record a hit: bump recency and use count.  No-op if absent.
+    pub fn touch(&mut self, model: &str, now_s: f64) {
+        if let Some(e) = self.entries.get_mut(model) {
+            e.last_use_s = now_s;
+            e.uses += 1;
+        }
+    }
+
+    /// Admit a checkpoint.  Callers (cache policies) must have made room;
+    /// over-capacity insertion is a policy bug, caught here.  Re-inserting
+    /// a resident model just touches it.
+    pub fn insert(&mut self, model: &'static str, size_gb: f64, now_s: f64) {
+        if self.entries.contains_key(model) {
+            self.touch(model, now_s);
+            return;
+        }
+        debug_assert!(
+            size_gb <= self.free_gb() + 1e-9,
+            "cache admission over capacity: {size_gb} GB into {} GB free",
+            self.free_gb()
+        );
+        self.entries.insert(model, CacheEntry { size_gb, last_use_s: now_s, uses: 1 });
+    }
+
+    /// Evict a checkpoint; returns whether it was resident.
+    pub fn remove(&mut self, model: &str) -> bool {
+        self.entries.remove(model).is_some()
+    }
+
+    /// Least-recently-used entry, ties broken by model name — the
+    /// deterministic default victim.
+    pub fn lru_victim(&self) -> Option<&'static str> {
+        self.entries
+            .iter()
+            .min_by(|a, b| a.1.last_use_s.total_cmp(&b.1.last_use_s).then(a.0.cmp(b.0)))
+            .map(|(k, _)| *k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_tracks_occupancy_and_recency() {
+        let mut c = HostCache::new(40.0);
+        assert!(c.enabled() && c.is_empty());
+        c.insert("a", 13.5, 1.0);
+        c.insert("b", 26.0, 2.0);
+        assert_eq!(c.len(), 2);
+        assert!((c.used_gb() - 39.5).abs() < 1e-12);
+        assert!((c.free_gb() - 0.5).abs() < 1e-12);
+        c.touch("a", 5.0);
+        assert_eq!(c.get("a").unwrap().uses, 2);
+        assert_eq!(c.get("a").unwrap().last_use_s, 5.0);
+        // Re-insert of a resident model is a touch, not a double-count.
+        c.insert("a", 13.5, 6.0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get("a").unwrap().uses, 3);
+        assert!(c.remove("b") && !c.remove("b"));
+        assert!((c.used_gb() - 13.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_victim_is_oldest_then_name_ordered() {
+        let mut c = HostCache::new(100.0);
+        c.insert("m2", 1.0, 3.0);
+        c.insert("m1", 1.0, 1.0);
+        c.insert("m3", 1.0, 1.0);
+        // Oldest last_use wins; the 1.0 tie breaks toward "m1" by name.
+        assert_eq!(c.lru_victim(), Some("m1"));
+        c.touch("m1", 9.0);
+        assert_eq!(c.lru_victim(), Some("m3"));
+        assert_eq!(HostCache::new(0.0).lru_victim(), None);
+        assert!(!HostCache::new(0.0).enabled());
+    }
+}

@@ -18,24 +18,29 @@
 //! device dirty; the next index query repairs exactly the dirty entries.
 //! `Engine::check_indexes` re-derives everything by brute force in tests.
 
+pub mod cache;
 pub mod container;
 pub mod gpu;
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};
 
+pub use cache::{CacheEntry, HostCache};
 pub use container::{Container, ContainerError, ContainerId};
 pub use gpu::{Gpu, GpuError, GpuId};
 
 use crate::artifact::ArtifactKind;
 use crate::util::f64_key;
 
-/// One worker node: a set of GPUs plus warm container slots.
+/// One worker node: a set of GPUs plus warm container slots, and (when the
+/// tiered store is enabled) a host-RAM checkpoint cache shared by them.
 #[derive(Debug, Clone)]
 pub struct Node {
     pub id: usize,
     pub gpus: Vec<Gpu>,
     pub containers: Vec<Container>,
+    /// Host-RAM checkpoint cache (capacity 0 = tier disabled, the default).
+    pub cache: HostCache,
 }
 
 impl Node {
@@ -48,6 +53,7 @@ impl Node {
             containers: (0..n_containers)
                 .map(|i| Container::new(ContainerId { node: id, index: i }))
                 .collect(),
+            cache: HostCache::default(),
         }
     }
 }
@@ -235,6 +241,14 @@ impl Cluster {
         self.index.get_mut().dirty_gpus.push(id);
         self.bill_dirty.push(id);
         self.nodes[id.node].gpus[id.index] = gpu;
+    }
+
+    /// Give every node a host-RAM checkpoint cache of `gb` (0 disables
+    /// the tier).  Called once at engine build from the tier config.
+    pub fn set_host_cache_gb(&mut self, gb: f64) {
+        for n in &mut self.nodes {
+            n.cache = HostCache::new(gb);
+        }
     }
 
     /// Drop GPUs from the tail of the node list until exactly

@@ -16,8 +16,10 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::artifact::{params, ArtifactKind, FunctionSpec, ModelProfile};
-use crate::cluster::{Cluster, ContainerId, GpuId};
+use crate::artifact::{
+    params, ArtifactKind, FunctionSpec, LinkKind, ModelProfile, PhaseCost, Term,
+};
+use crate::cluster::{Cluster, ContainerId, GpuId, HostCache};
 use crate::coordinator::batching::BatchQueue;
 use crate::coordinator::offload::{DynamicOffloader, OffloadPlan};
 use crate::coordinator::preload::{FunctionDemand, Placement, PreloadScheduler};
@@ -103,10 +105,23 @@ pub trait PreloadPolicy: Send {
         m.kernel_jit_s
     }
 
-    /// Cold-start phase → latency map for one dispatch. Ledger mutation
-    /// (making artifacts resident) is done by the dispatch layer from the
-    /// same `Readiness`; this prices it.
-    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64>;
+    /// Cold-start phase → cost terms for one dispatch.  Each phase is an
+    /// ordered list of fixed overheads and per-link transfers; the tiered
+    /// engine turns the transfers into contended flows, while the flat
+    /// engine folds them to scalars via [`PreloadPolicy::load_phases`].
+    /// Ledger mutation (making artifacts resident) is done by the
+    /// dispatch layer from the same `Readiness`; this prices it.
+    fn load_plan(&mut self, q: &LoadQuery) -> BTreeMap<Phase, PhaseCost>;
+
+    /// Scalar view of [`PreloadPolicy::load_plan`] at default link
+    /// bandwidths: phase → seconds, each phase folded in term order —
+    /// bit-identical to the flat latencies this trait used to return.
+    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+        self.load_plan(q)
+            .into_iter()
+            .map(|(p, c)| (p, c.total_default()))
+            .collect()
+    }
 }
 
 /// §4.2 batching: when a queue fires and how large a batch it wants.
@@ -203,42 +218,79 @@ pub trait BillingModel: Send {
     fn finalize(&self, dedicated_gpus: usize, end_s: f64, cost: &mut CostTracker);
 }
 
+/// The fifth policy axis: host-RAM checkpoint-cache admission/eviction —
+/// the tiered store's RAM tier (`cluster/cache.rs`).  The dispatch layer
+/// consults it on every tiered cold load: `on_hit` when the node's cache
+/// already holds the model, `admit` after a miss streamed the checkpoint
+/// through the node.  Policies make room by evicting through the ledger;
+/// the eviction count is reported back for `RunStats`.
+pub trait CachePolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// The node's cache holds `model` and a load is about to read it.
+    fn on_hit(&mut self, cache: &mut HostCache, model: &'static str, now_s: f64) {
+        cache.touch(model, now_s);
+    }
+
+    /// A miss just streamed `model` (`size_gb`) through the node.  Admit
+    /// it (possibly evicting) or decline; returns evictions performed.
+    fn admit(
+        &mut self,
+        cache: &mut HostCache,
+        model: &'static str,
+        size_gb: f64,
+        now_s: f64,
+    ) -> u64;
+}
+
 /// The full policy complement one engine run is driven by.
 pub struct PolicyBundle {
     pub preload: Box<dyn PreloadPolicy>,
     pub batching: Box<dyn BatchingPolicy>,
     pub offload: Box<dyn OffloadPolicy>,
     pub billing: Box<dyn BillingModel>,
+    pub cache: Box<dyn CachePolicy>,
 }
 
 // ------------------------------------------------- shared phase helpers
 
 /// Container + process (CUDA context) initialisation phase. Policies that
 /// keep warm containers (`container_cold = false`) pay only the context.
-fn init_phase(q: &LoadQuery, container_cold: bool, phases: &mut BTreeMap<Phase, f64>) {
+fn init_phase(q: &LoadQuery, container_cold: bool, plan: &mut BTreeMap<Phase, PhaseCost>) {
     if !q.warm_instance && !q.ready.cuda_context {
-        let mut t = params::CUDA_CONTEXT_INIT_S;
+        let mut c = PhaseCost::fixed(params::CUDA_CONTEXT_INIT_S);
         if container_cold {
-            t += params::CONTAINER_INIT_S;
+            c.push(Term::Fixed(params::CONTAINER_INIT_S));
         }
-        phases.insert(Phase::ContainerInit, t);
+        plan.insert(Phase::ContainerInit, c);
     }
 }
 
 /// Adapter load phase — identical across policies: PCIe from a container
-/// copy, SSD otherwise, plus the PEFT-style attach cost.
-fn adapter_phase(q: &LoadQuery, phases: &mut BTreeMap<Phase, f64>) {
+/// copy, NVMe otherwise, plus the PEFT-style attach cost.
+fn adapter_phase(q: &LoadQuery, plan: &mut BTreeMap<Phase, PhaseCost>) {
     if !q.ready.adapter_on_gpu {
-        let bw = if q.container_has_adapter {
-            params::BW_PCIE_GBPS
+        let link = if q.container_has_adapter {
+            LinkKind::Pcie
         } else {
-            params::BW_SSD_GBPS
+            LinkKind::Nvme
         };
-        phases.insert(
+        plan.insert(
             Phase::AdapterLoad,
-            q.model.adapter_gb / bw + params::ADAPTER_ATTACH_S,
+            PhaseCost(vec![
+                Term::Xfer { link, gb: q.model.adapter_gb },
+                Term::Fixed(params::ADAPTER_ATTACH_S),
+            ]),
         );
     }
+}
+
+/// Cold library load: NVMe read + cold import.
+fn library_cold(m: &ModelProfile) -> PhaseCost {
+    PhaseCost(vec![
+        Term::Xfer { link: LinkKind::Nvme, gb: m.library_gb },
+        Term::Fixed(params::LIBRARY_IMPORT_S),
+    ])
 }
 
 // ------------------------------------------------------ preload policies
@@ -255,29 +307,26 @@ impl PreloadPolicy for NoPreload {
 
     fn deploy(&mut self, _env: &mut PolicyEnv) {}
 
-    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+    fn load_plan(&mut self, q: &LoadQuery) -> BTreeMap<Phase, PhaseCost> {
         let m = q.model;
-        let mut phases = BTreeMap::new();
-        init_phase(q, true, &mut phases);
+        let mut plan = BTreeMap::new();
+        init_phase(q, true, &mut plan);
         if !q.warm_instance {
-            phases.insert(
-                Phase::LibraryLoad,
-                m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S,
-            );
+            plan.insert(Phase::LibraryLoad, library_cold(m));
         }
         if !q.ready.backbone_on_gpu {
-            let t = if q.container_has_model_backbone {
-                m.weights_gb / params::BW_PCIE_GBPS
+            let link = if q.container_has_model_backbone {
+                LinkKind::Pcie
             } else {
-                m.weights_gb / params::BW_SSD_GBPS
+                LinkKind::Nvme
             };
-            phases.insert(Phase::BackboneLoad, t);
+            plan.insert(Phase::BackboneLoad, PhaseCost::xfer(link, m.weights_gb));
         }
-        adapter_phase(q, &mut phases);
+        adapter_phase(q, &mut plan);
         if !q.ready.kernel_on_gpu && !q.warm_instance {
-            phases.insert(Phase::KernelCompile, m.kernel_jit_s);
+            plan.insert(Phase::KernelCompile, PhaseCost::fixed(m.kernel_jit_s));
         }
-        phases
+        plan
     }
 }
 
@@ -292,24 +341,24 @@ impl PreloadPolicy for FastCheckpointPreload {
 
     fn deploy(&mut self, _env: &mut PolicyEnv) {}
 
-    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+    fn load_plan(&mut self, q: &LoadQuery) -> BTreeMap<Phase, PhaseCost> {
         let m = q.model;
-        let mut phases = BTreeMap::new();
-        init_phase(q, true, &mut phases);
+        let mut plan = BTreeMap::new();
+        init_phase(q, true, &mut plan);
         if !q.warm_instance {
-            phases.insert(
-                Phase::LibraryLoad,
-                m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S,
-            );
+            plan.insert(Phase::LibraryLoad, library_cold(m));
         }
         if !q.ready.backbone_on_gpu {
-            phases.insert(Phase::BackboneLoad, m.weights_gb / params::BW_PCIE_GBPS);
+            plan.insert(
+                Phase::BackboneLoad,
+                PhaseCost::xfer(LinkKind::Pcie, m.weights_gb),
+            );
         }
-        adapter_phase(q, &mut phases);
+        adapter_phase(q, &mut plan);
         if !q.ready.kernel_on_gpu && !q.warm_instance {
-            phases.insert(Phase::KernelCompile, m.kernel_jit_s);
+            plan.insert(Phase::KernelCompile, PhaseCost::fixed(m.kernel_jit_s));
         }
-        phases
+        plan
     }
 }
 
@@ -347,42 +396,49 @@ impl PreloadPolicy for OpportunisticPreload {
         }
     }
 
-    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+    fn load_plan(&mut self, q: &LoadQuery) -> BTreeMap<Phase, PhaseCost> {
         let m = q.model;
-        let mut phases = BTreeMap::new();
+        let mut plan: BTreeMap<Phase, PhaseCost> = BTreeMap::new();
         // Predictor outcome for this cold start (one draw per cold start,
         // in dispatch order — the determinism contract).
         let mut insta_hit = true;
         if !q.warm_instance {
             insta_hit = self.rng.f64() < self.hit_rate;
             if !insta_hit {
-                *phases.entry(Phase::Queue).or_insert(0.0) +=
-                    m.weights_gb / params::BW_SSD_GBPS;
+                // Churn wait: the slot is busy finishing another
+                // function's in-flight NVMe staging read.
+                plan.entry(Phase::Queue)
+                    .or_default()
+                    .push(Term::Xfer { link: LinkKind::Nvme, gb: m.weights_gb });
             }
         }
-        init_phase(q, false, &mut phases);
+        init_phase(q, false, &mut plan);
         if !q.warm_instance {
-            let t = if insta_hit && q.container_has_library {
-                params::LIBRARY_WARM_IMPORT_S
+            let c = if insta_hit && q.container_has_library {
+                PhaseCost::fixed(params::LIBRARY_WARM_IMPORT_S)
             } else {
-                m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S
+                library_cold(m)
             };
-            phases.insert(Phase::LibraryLoad, t);
+            plan.insert(Phase::LibraryLoad, c);
         }
         if !q.ready.backbone_on_gpu {
-            let t = if insta_hit && q.container_has_own_backbone {
-                m.weights_gb / params::BW_PCIE_GBPS
+            let c = if insta_hit && q.container_has_own_backbone {
+                PhaseCost::xfer(LinkKind::Pcie, m.weights_gb)
             } else {
-                m.weights_gb / params::BW_SSD_GBPS + m.weights_gb / params::BW_PCIE_GBPS
+                // Two hops: NVMe into host RAM, then PCIe up.
+                PhaseCost(vec![
+                    Term::Xfer { link: LinkKind::Nvme, gb: m.weights_gb },
+                    Term::Xfer { link: LinkKind::Pcie, gb: m.weights_gb },
+                ])
             };
-            phases.insert(Phase::BackboneLoad, t);
+            plan.insert(Phase::BackboneLoad, c);
         }
-        adapter_phase(q, &mut phases);
+        adapter_phase(q, &mut plan);
         if !q.ready.kernel_on_gpu && !q.warm_instance {
             // InstaInfer never pre-compiles kernels.
-            phases.insert(Phase::KernelCompile, m.kernel_jit_s);
+            plan.insert(Phase::KernelCompile, PhaseCost::fixed(m.kernel_jit_s));
         }
-        phases
+        plan
     }
 }
 
@@ -475,28 +531,31 @@ impl PreloadPolicy for FullPreload {
         m.kernel_cache_load_s
     }
 
-    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+    fn load_plan(&mut self, q: &LoadQuery) -> BTreeMap<Phase, PhaseCost> {
         let m = q.model;
-        let mut phases = BTreeMap::new();
-        init_phase(q, false, &mut phases);
+        let mut plan = BTreeMap::new();
+        init_phase(q, false, &mut plan);
         if !q.warm_instance {
-            phases.insert(Phase::LibraryLoad, params::LIBRARY_WARM_IMPORT_S);
+            plan.insert(
+                Phase::LibraryLoad,
+                PhaseCost::fixed(params::LIBRARY_WARM_IMPORT_S),
+            );
         }
         if !q.ready.backbone_on_gpu {
             // Replica loads come from the staged host-RAM copy when one
-            // exists (PCIe), else from SSD.
-            let t = if q.container_has_model_backbone {
-                m.weights_gb / params::BW_PCIE_GBPS
+            // exists (PCIe), else from NVMe.
+            let link = if q.container_has_model_backbone {
+                LinkKind::Pcie
             } else {
-                m.weights_gb / params::BW_SSD_GBPS
+                LinkKind::Nvme
             };
-            phases.insert(Phase::BackboneLoad, t);
+            plan.insert(Phase::BackboneLoad, PhaseCost::xfer(link, m.weights_gb));
         }
-        adapter_phase(q, &mut phases);
+        adapter_phase(q, &mut plan);
         if !q.ready.kernel_on_gpu && !q.warm_instance {
-            phases.insert(Phase::KernelCompile, m.kernel_cache_load_s);
+            plan.insert(Phase::KernelCompile, PhaseCost::fixed(m.kernel_cache_load_s));
         }
-        phases
+        plan
     }
 }
 
@@ -550,7 +609,7 @@ impl PreloadPolicy for ServerfulResident {
     }
 
     /// Everything is resident; dispatch never pays a load phase.
-    fn load_phases(&mut self, _q: &LoadQuery) -> BTreeMap<Phase, f64> {
+    fn load_plan(&mut self, _q: &LoadQuery) -> BTreeMap<Phase, PhaseCost> {
         BTreeMap::new()
     }
 }
@@ -701,33 +760,37 @@ impl PreloadPolicy for PredictivePreload {
         }
     }
 
-    fn load_phases(&mut self, q: &LoadQuery) -> BTreeMap<Phase, f64> {
+    fn load_plan(&mut self, q: &LoadQuery) -> BTreeMap<Phase, PhaseCost> {
         let m = q.model;
         let hot = self.staged.contains(&q.function);
-        let mut phases = BTreeMap::new();
-        init_phase(q, !hot, &mut phases);
+        let mut plan = BTreeMap::new();
+        init_phase(q, !hot, &mut plan);
         if !q.warm_instance {
-            let t = if hot {
-                params::LIBRARY_WARM_IMPORT_S
+            let c = if hot {
+                PhaseCost::fixed(params::LIBRARY_WARM_IMPORT_S)
             } else {
-                m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S
+                library_cold(m)
             };
-            phases.insert(Phase::LibraryLoad, t);
+            plan.insert(Phase::LibraryLoad, c);
         }
         if !q.ready.backbone_on_gpu {
-            let t = if q.container_has_model_backbone {
-                m.weights_gb / params::BW_PCIE_GBPS
+            let link = if q.container_has_model_backbone {
+                LinkKind::Pcie
             } else {
-                m.weights_gb / params::BW_SSD_GBPS
+                LinkKind::Nvme
             };
-            phases.insert(Phase::BackboneLoad, t);
+            plan.insert(Phase::BackboneLoad, PhaseCost::xfer(link, m.weights_gb));
         }
-        adapter_phase(q, &mut phases);
+        adapter_phase(q, &mut plan);
         if !q.ready.kernel_on_gpu && !q.warm_instance {
-            let t = if hot { m.kernel_cache_load_s } else { m.kernel_jit_s };
-            phases.insert(Phase::KernelCompile, t);
+            let c = if hot {
+                PhaseCost::fixed(m.kernel_cache_load_s)
+            } else {
+                PhaseCost::fixed(m.kernel_jit_s)
+            };
+            plan.insert(Phase::KernelCompile, c);
         }
-        phases
+        plan
     }
 }
 
@@ -863,6 +926,145 @@ impl OffloadPolicy for NoOffload {
         _spill: Option<ContainerId>,
     ) -> Option<OffloadPlan> {
         None
+    }
+}
+
+// -------------------------------------------------------- cache policies
+
+/// Plain LRU: always admit, evicting least-recently-used checkpoints
+/// until the new one fits (ties break by model name — deterministic).
+pub struct LruCache;
+
+impl CachePolicy for LruCache {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn admit(
+        &mut self,
+        cache: &mut HostCache,
+        model: &'static str,
+        size_gb: f64,
+        now_s: f64,
+    ) -> u64 {
+        if !cache.enabled() || size_gb > cache.capacity_gb {
+            return 0;
+        }
+        let mut evicted = 0;
+        while cache.free_gb() + 1e-9 < size_gb {
+            let Some(v) = cache.lru_victim() else { return evicted };
+            cache.remove(v);
+            evicted += 1;
+        }
+        cache.insert(model, size_gb, now_s);
+        evicted
+    }
+}
+
+/// Size-aware LRU: evict the *largest* entries first (ties toward the
+/// older, then by name).  Frees the most bytes per eviction and biases
+/// the cache toward keeping many small checkpoints over one giant one.
+pub struct SizeAwareLruCache;
+
+impl SizeAwareLruCache {
+    fn victim(cache: &HostCache) -> Option<&'static str> {
+        cache
+            .entries()
+            .max_by(|a, b| {
+                a.1.size_gb
+                    .total_cmp(&b.1.size_gb)
+                    .then(b.1.last_use_s.total_cmp(&a.1.last_use_s))
+                    .then(b.0.cmp(a.0))
+            })
+            .map(|(k, _)| k)
+    }
+}
+
+impl CachePolicy for SizeAwareLruCache {
+    fn name(&self) -> &'static str {
+        "size-aware-lru"
+    }
+
+    fn admit(
+        &mut self,
+        cache: &mut HostCache,
+        model: &'static str,
+        size_gb: f64,
+        now_s: f64,
+    ) -> u64 {
+        if !cache.enabled() || size_gb > cache.capacity_gb {
+            return 0;
+        }
+        let mut evicted = 0;
+        while cache.free_gb() + 1e-9 < size_gb {
+            let Some(v) = Self::victim(cache) else { return evicted };
+            cache.remove(v);
+            evicted += 1;
+        }
+        cache.insert(model, size_gb, now_s);
+        evicted
+    }
+}
+
+/// Pin-hot: entries with `pin_uses`+ hits are pinned and never evicted;
+/// admission is *declined* (no partial eviction) when the unpinned set
+/// cannot make room.  Protects hot checkpoints from burst-driven churn.
+pub struct PinHotCache {
+    /// Use count at which an entry becomes pinned.
+    pub pin_uses: u64,
+}
+
+impl Default for PinHotCache {
+    fn default() -> Self {
+        PinHotCache { pin_uses: 3 }
+    }
+}
+
+impl PinHotCache {
+    fn unpinned_victim(&self, cache: &HostCache) -> Option<&'static str> {
+        cache
+            .entries()
+            .filter(|(_, e)| e.uses < self.pin_uses)
+            .min_by(|a, b| a.1.last_use_s.total_cmp(&b.1.last_use_s).then(a.0.cmp(b.0)))
+            .map(|(k, _)| k)
+    }
+}
+
+impl CachePolicy for PinHotCache {
+    fn name(&self) -> &'static str {
+        "pin-hot"
+    }
+
+    fn admit(
+        &mut self,
+        cache: &mut HostCache,
+        model: &'static str,
+        size_gb: f64,
+        now_s: f64,
+    ) -> u64 {
+        if !cache.enabled() || size_gb > cache.capacity_gb {
+            return 0;
+        }
+        // Feasibility first: free space + every unpinned byte must cover
+        // the admission, otherwise decline without touching the ledger.
+        let reclaimable: f64 = cache
+            .entries()
+            .filter(|(_, e)| e.uses < self.pin_uses)
+            .map(|(_, e)| e.size_gb)
+            .sum();
+        if cache.free_gb() + reclaimable + 1e-9 < size_gb {
+            return 0;
+        }
+        let mut evicted = 0;
+        while cache.free_gb() + 1e-9 < size_gb {
+            let Some(v) = self.unpinned_victim(cache) else { break };
+            cache.remove(v);
+            evicted += 1;
+        }
+        if cache.free_gb() + 1e-9 >= size_gb {
+            cache.insert(model, size_gb, now_s);
+        }
+        evicted
     }
 }
 
@@ -1158,5 +1360,100 @@ mod tests {
         }
         assert!(p.forecast(3) > p.threshold, "forecast {}", p.forecast(3));
         assert!(p.is_staged(3));
+    }
+
+    #[test]
+    fn load_plan_folds_to_the_flat_latencies_bitwise() {
+        // The term plans must fold (left, in term order, at default
+        // bandwidths) to the exact pre-refactor scalar latencies.
+        let m = ModelProfile::llama2_7b();
+        let bits = |x: f64| x.to_bits();
+        let phases = NoPreload.load_phases(&query(&m, false, COLD));
+        assert_eq!(
+            bits(phases[&Phase::ContainerInit]),
+            bits(params::CUDA_CONTEXT_INIT_S + params::CONTAINER_INIT_S)
+        );
+        assert_eq!(
+            bits(phases[&Phase::LibraryLoad]),
+            bits(m.library_gb / params::BW_SSD_GBPS + params::LIBRARY_IMPORT_S)
+        );
+        assert_eq!(
+            bits(phases[&Phase::BackboneLoad]),
+            bits(m.weights_gb / params::BW_SSD_GBPS)
+        );
+        assert_eq!(
+            bits(phases[&Phase::AdapterLoad]),
+            bits(m.adapter_gb / params::BW_SSD_GBPS + params::ADAPTER_ATTACH_S)
+        );
+        assert_eq!(bits(phases[&Phase::KernelCompile]), bits(m.kernel_jit_s));
+        // Deterministic InstaInfer miss: churn + two-hop backbone.
+        let phases = OpportunisticPreload::new(0.0, 1).load_phases(&query(&m, false, COLD));
+        assert_eq!(bits(phases[&Phase::Queue]), bits(m.weights_gb / params::BW_SSD_GBPS));
+        assert_eq!(
+            bits(phases[&Phase::BackboneLoad]),
+            bits(m.weights_gb / params::BW_SSD_GBPS + m.weights_gb / params::BW_PCIE_GBPS)
+        );
+        // ServerlessLLM: PCIe-speed backbone.
+        let phases = FastCheckpointPreload.load_phases(&query(&m, false, COLD));
+        assert_eq!(
+            bits(phases[&Phase::BackboneLoad]),
+            bits(m.weights_gb / params::BW_PCIE_GBPS)
+        );
+        // Serverful: no phases at all.
+        assert!(ServerfulResident.load_plan(&query(&m, false, COLD)).is_empty());
+    }
+
+    #[test]
+    fn lru_cache_evicts_oldest_to_admit() {
+        let mut cache = HostCache::new(40.0);
+        let mut p = LruCache;
+        assert_eq!(p.admit(&mut cache, "a", 13.5, 1.0), 0);
+        assert_eq!(p.admit(&mut cache, "b", 26.0, 2.0), 0);
+        // "c" needs room: the oldest ("a") goes.
+        assert_eq!(p.admit(&mut cache, "c", 13.5, 3.0), 1);
+        assert!(!cache.contains("a") && cache.contains("b") && cache.contains("c"));
+        // A hit refreshes recency: now "c" is the LRU victim.
+        p.on_hit(&mut cache, "b", 4.0);
+        assert_eq!(p.admit(&mut cache, "d", 13.5, 5.0), 1);
+        assert!(cache.contains("b") && !cache.contains("c"));
+        // Oversized checkpoints are never admitted (and evict nothing).
+        assert_eq!(p.admit(&mut cache, "huge", 100.0, 6.0), 0);
+        assert!(!cache.contains("huge"));
+        // Disabled tier: no-op.
+        let mut off = HostCache::new(0.0);
+        assert_eq!(p.admit(&mut off, "a", 1.0, 0.0), 0);
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn size_aware_lru_evicts_largest_first() {
+        let mut cache = HostCache::new(41.0);
+        let mut p = SizeAwareLruCache;
+        p.admit(&mut cache, "small-old", 13.5, 1.0);
+        p.admit(&mut cache, "big", 26.0, 2.0);
+        // Plain LRU would evict "small-old"; size-aware drops "big"
+        // (one eviction frees enough).
+        assert_eq!(p.admit(&mut cache, "incoming", 14.0, 3.0), 1);
+        assert!(cache.contains("small-old") && !cache.contains("big"));
+        assert!(cache.contains("incoming"));
+    }
+
+    #[test]
+    fn pin_hot_declines_rather_than_evict_pinned() {
+        let mut cache = HostCache::new(30.0);
+        let mut p = PinHotCache { pin_uses: 3 };
+        p.admit(&mut cache, "hot", 26.0, 1.0); // uses = 1
+        p.on_hit(&mut cache, "hot", 2.0); // 2
+        p.on_hit(&mut cache, "hot", 3.0); // 3 → pinned
+        // The incoming checkpoint cannot fit without evicting the pinned
+        // entry: declined, ledger untouched.
+        assert_eq!(p.admit(&mut cache, "newcomer", 13.5, 4.0), 0);
+        assert!(cache.contains("hot") && !cache.contains("newcomer"));
+        // A small one that fits beside the pin is admitted normally.
+        assert_eq!(p.admit(&mut cache, "tiny", 2.0, 5.0), 0);
+        assert!(cache.contains("tiny"));
+        // "tiny" (1 use) is evictable; a just-fitting load takes its slot.
+        assert_eq!(p.admit(&mut cache, "mid", 4.0, 6.0), 1);
+        assert!(!cache.contains("tiny") && cache.contains("mid"));
     }
 }

@@ -104,12 +104,9 @@ impl PreloadScheduler {
     }
 
     fn cold_load_s(&self, a: &crate::artifact::ArtifactSpec) -> f64 {
-        match self.cold_tier {
-            Tier::Remote => a.load_from_remote_s,
-            Tier::Ssd => a.load_from_ssd_s,
-            Tier::ContainerRam => a.load_from_ram_s,
-            Tier::Gpu => 0.0,
-        }
+        // Uncontended default-bandwidth view: planning values predate any
+        // link contention the load will actually see.
+        a.load_s(self.cold_tier)
     }
 
     /// Enumerate placement candidates with §4.1 values:
@@ -131,7 +128,7 @@ impl PreloadScheduler {
                 let v_gpu = cold * d.rate;
                 // Value of container residency: cold load reduced to the
                 // RAM→GPU hop.
-                let v_ram = (cold - a.load_from_ram_s).max(0.0) * d.rate;
+                let v_ram = (cold - a.load_s(Tier::ContainerRam)).max(0.0) * d.rate;
                 if a.kind.container_placeable() && v_ram > 0.0 {
                     for cid in cluster.container_ids() {
                         out.push(Candidate {

@@ -432,8 +432,66 @@ fn check_point(b: &FleetBound, dur: f64) -> Result<String, String> {
     Ok(line)
 }
 
+/// Tiered-store leg of the regression guard: run the `tiers`
+/// experiment's bursty reference cell and bound the hierarchy counters.
+/// Structural envelopes:
+///
+/// * conservation — every tiered cold load resolves to exactly one tier
+///   (`ram + ssd + remote == cold_loads`, also engine-asserted);
+/// * a load joining a link with `n` flows in flight re-times at most
+///   those `n` flows, and leaves re-time at most `n - 1` more; with GPU
+///   memory capping in-flight loads per node far below the container
+///   count, `max_load_retimes_per_cold_load` bounds the cancel+re-push
+///   traffic — a blowup means re-timing went quadratic or a flow leaked;
+/// * bursty arrivals on one node *must* contend (`retimes > 0`) — zero
+///   means the fair-share path silently stopped engaging.
+fn check_tiers() -> Result<String, String> {
+    const MAX_LOAD_RETIMES_PER_COLD_LOAD: f64 = 64.0;
+    let p = super::tiers::run_point(
+        crate::sim::TierSpec::default().host_cache_gb,
+        Pattern::Bursty,
+        600.0,
+        11,
+    );
+    let retimes_per_load = p.retimes as f64 / (p.cold_loads as f64).max(1.0);
+    let line = format!(
+        "tiers-check {}gb/bursty: {} requests, {} cold loads \
+         (ram {} / ssd {} / remote {}), {} evictions, \
+         {:.2} retimes/cold-load (bound {MAX_LOAD_RETIMES_PER_COLD_LOAD})",
+        p.cache_gb,
+        p.requests,
+        p.cold_loads,
+        p.hits_ram,
+        p.hits_ssd,
+        p.hits_remote,
+        p.evictions,
+        retimes_per_load,
+    );
+    if p.hits_ram + p.hits_ssd + p.hits_remote != p.cold_loads {
+        return Err(format!("{line}\n  FAIL: tier-hit conservation violated"));
+    }
+    if p.cold_loads == 0 {
+        return Err(format!(
+            "{line}\n  FAIL: no tiered cold loads — the hierarchy is not engaged"
+        ));
+    }
+    if p.retimes == 0 {
+        return Err(format!(
+            "{line}\n  FAIL: no link re-timings under bursty arrivals — \
+             fair-share contention is broken"
+        ));
+    }
+    if retimes_per_load > MAX_LOAD_RETIMES_PER_COLD_LOAD {
+        return Err(format!(
+            "{line}\n  FAIL: re-timing blowup ({retimes_per_load:.2}/cold-load)"
+        ));
+    }
+    Ok(line)
+}
+
 /// CI regression guard (`serverless-lora fleet --check`): run the quick
-/// grid and compare the deterministic counters against `QUICK_BOUNDS`.
+/// grid and compare the deterministic counters against `QUICK_BOUNDS`,
+/// then bound the tiered-store counters on the `tiers` reference cell.
 pub fn check() -> Result<String, String> {
     let mut out = String::new();
     for b in QUICK_BOUNDS {
@@ -441,6 +499,8 @@ pub fn check() -> Result<String, String> {
         out.push_str(&line);
         out.push('\n');
     }
+    out.push_str(&check_tiers()?);
+    out.push('\n');
     out.push_str("fleet-check: all counters within committed bounds\n");
     Ok(out)
 }
@@ -546,6 +606,15 @@ mod tests {
         assert!(line.contains("events/request"));
         assert!(line.contains("bill samples/event"));
         assert!(line.contains("events/s/core"));
+    }
+
+    #[test]
+    fn tiers_leg_of_the_guard_passes() {
+        // The tiered-store bounds must hold on a healthy engine: loads
+        // resolved, conservation intact, contention engaged but bounded.
+        let line = check_tiers().expect("healthy tiered engine trips the guard");
+        assert!(line.contains("retimes/cold-load"));
+        assert!(line.contains("cold loads"));
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod overhead;
 pub mod runner;
 pub mod scaling;
 pub mod throughput;
+pub mod tiers;
 pub mod traces;
 
 use crate::cluster::Cluster;
@@ -102,10 +103,12 @@ pub fn headline_json() -> Json {
 }
 
 /// All experiment ids: the paper artifacts in paper order, then the
-/// engine-health experiments (`fleet`: cluster-size scaling sweep).
-pub const ALL_EXPERIMENTS: [&str; 15] = [
+/// engine-health experiments (`fleet`: cluster-size scaling sweep;
+/// `tiers`: host-cache capacity × burstiness sweep over the tiered
+/// artifact store).
+pub const ALL_EXPERIMENTS: [&str; 16] = [
     "fig1", "fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "tab1", "tab2",
-    "fig10", "tab3", "fig11", "fig12", "overhead", "fleet",
+    "fig10", "tab3", "fig11", "fig12", "overhead", "fleet", "tiers",
 ];
 
 /// Dispatch an experiment by id. Returns the rendered report.
@@ -130,6 +133,7 @@ pub fn run_experiment(id: &str, quick: bool) -> String {
         "fig12" => latency::fig12(quick),
         "overhead" => overhead::report(),
         "fleet" => fleet::fleet(quick),
+        "tiers" => tiers::tiers(quick),
         other => format!("unknown experiment '{other}'; known: {ALL_EXPERIMENTS:?}\n"),
     }
 }
@@ -155,5 +159,6 @@ mod tests {
         }
         // Engine-health experiments ride the same registry.
         assert!(ALL_EXPERIMENTS.contains(&"fleet"));
+        assert!(ALL_EXPERIMENTS.contains(&"tiers"));
     }
 }

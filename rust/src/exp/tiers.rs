@@ -1,0 +1,255 @@
+//! Tiered-store experiment (`tiers`): sweep host-cache capacity ×
+//! arrival burstiness and report how the dynamic memory hierarchy
+//! resolves cold backbone loads — RAM/NVMe/remote hit mix, cache
+//! evictions, fair-share link re-timings, and the resulting TTFT.
+//!
+//! The sweep runs the no-preload baseline (`npl`): with nothing staged
+//! ahead of time every cold start exercises the hierarchy, so the cache
+//! policy and link contention — not the preload planner — dominate the
+//! numbers. Burstier arrivals pile concurrent cold loads onto the same
+//! NVMe/PCIe links (visible as `retimes`), and larger host caches turn
+//! repeat cold starts into RAM hits; the table shows both effects in
+//! one grid. All reported columns are deterministic for a fixed seed,
+//! so the report digest in `BENCH_sim.json` stays stable run-to-run.
+
+use std::sync::Mutex;
+
+use crate::scenario::{ClusterSpec, ScenarioSpec, WorkloadSpec};
+use crate::sim::TierSpec;
+use crate::trace::Pattern;
+use crate::util::json::{num, obj, Json};
+use crate::util::table::{ms, Table};
+
+/// Most recent measurement of the reference cell (default cache,
+/// bursty arrivals), reused by `tiers_json` (the BENCH_sim.json
+/// record) when the sweep already ran in this process.
+static LAST_REFERENCE: Mutex<Option<TierPoint>> = Mutex::new(None);
+
+/// One measured grid cell.
+#[derive(Clone)]
+pub struct TierPoint {
+    pub cache_gb: f64,
+    pub pattern: Pattern,
+    pub requests: usize,
+    pub ttft_mean_s: f64,
+    pub ttft_p99_s: f64,
+    pub cold_loads: u64,
+    pub hits_ram: u64,
+    pub hits_ssd: u64,
+    pub hits_remote: u64,
+    pub evictions: u64,
+    pub retimes: u64,
+}
+
+/// Host-cache capacities swept (GB). 0 keeps contention modelling with
+/// no cache tier — the hierarchy's floor.
+pub fn cache_sizes(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![0.0, 16.0, 64.0]
+    } else {
+        vec![0.0, 16.0, 64.0, 128.0]
+    }
+}
+
+/// Arrival burstiness classes swept (the paper's CoV bands).
+pub fn patterns(quick: bool) -> Vec<Pattern> {
+    if quick {
+        vec![Pattern::Predictable, Pattern::Bursty]
+    } else {
+        vec![Pattern::Predictable, Pattern::Normal, Pattern::Bursty]
+    }
+}
+
+fn horizon(quick: bool) -> f64 {
+    if quick {
+        600.0
+    } else {
+        1800.0
+    }
+}
+
+/// Build one grid cell: no-preload system with the tiered store at the
+/// given cache capacity, a one-node cluster (all cold loads share one
+/// node's links — contention is the point), paper workload at the given
+/// burstiness.
+fn cell(cache_gb: f64, pattern: Pattern, horizon_s: f64, seed: u64) -> ScenarioSpec {
+    ScenarioSpec::builder(&format!("tiers-{cache_gb}gb-{}", pattern.name()))
+        .system("npl")
+        .tiers(TierSpec { host_cache_gb: cache_gb, ..TierSpec::default() })
+        .cluster(ClusterSpec::Uniform {
+            nodes: 1,
+            gpus_per_node: 4,
+            containers_per_node: 8,
+            trim_gpus: None,
+            zones: 1,
+        })
+        .workload(WorkloadSpec::Paper { pattern, seed })
+        .horizon_s(horizon_s)
+        .seed(seed)
+        .build()
+        .expect("tiers cell validates")
+}
+
+/// Run one cell and fold its run into a [`TierPoint`].
+pub fn run_point(cache_gb: f64, pattern: Pattern, horizon_s: f64, seed: u64) -> TierPoint {
+    let spec = cell(cache_gb, pattern, horizon_s, seed);
+    let report = crate::scenario::run(&spec).expect("tiers cell runs");
+    let (_, run) = report.into_only();
+    assert_eq!(
+        run.metrics.outcomes.len(),
+        run.requests,
+        "tiers cell lost requests"
+    );
+    let st = &run.stats;
+    assert_eq!(
+        st.tier_hits_ram + st.tier_hits_ssd + st.tier_hits_remote,
+        st.tiered_cold_loads,
+        "tier-hit conservation violated"
+    );
+    TierPoint {
+        cache_gb,
+        pattern,
+        requests: run.requests,
+        ttft_mean_s: run.metrics.ttft().mean,
+        ttft_p99_s: run.metrics.ttft().p99,
+        cold_loads: st.tiered_cold_loads,
+        hits_ram: st.tier_hits_ram,
+        hits_ssd: st.tier_hits_ssd,
+        hits_remote: st.tier_hits_remote,
+        evictions: st.cache_evictions,
+        retimes: st.load_retimes,
+    }
+}
+
+/// The rendered sweep (experiment id `tiers`).
+pub fn tiers(quick: bool) -> String {
+    let mut t = Table::new(
+        "Tiered store — cache capacity × burstiness sweep (no-preload baseline)",
+        &[
+            "cache GB",
+            "pattern",
+            "requests",
+            "TTFT(ms)",
+            "TTFT-p99(ms)",
+            "cold loads",
+            "ram",
+            "ssd",
+            "remote",
+            "evictions",
+            "retimes",
+        ],
+    );
+    let dur = horizon(quick);
+    for cache_gb in cache_sizes(quick) {
+        for pattern in patterns(quick) {
+            let p = run_point(cache_gb, pattern, dur, 11);
+            if cache_gb == TierSpec::default().host_cache_gb && pattern == Pattern::Bursty {
+                *LAST_REFERENCE.lock().unwrap() = Some(p.clone());
+            }
+            t.row(vec![
+                format!("{cache_gb}"),
+                pattern.name().to_string(),
+                p.requests.to_string(),
+                ms(p.ttft_mean_s),
+                ms(p.ttft_p99_s),
+                p.cold_loads.to_string(),
+                p.hits_ram.to_string(),
+                p.hits_ssd.to_string(),
+                p.hits_remote.to_string(),
+                p.evictions.to_string(),
+                p.retimes.to_string(),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Machine-readable record of the reference cell (default 64 GB cache,
+/// bursty arrivals) for cross-PR tracking in `BENCH_sim.json`: the tier
+/// hit mix and re-time counts. Reuses the sweep's measurement when a
+/// `tiers()` run in this process covered the cell.
+pub fn tiers_json(quick: bool) -> Json {
+    let cached = LAST_REFERENCE.lock().unwrap().clone();
+    let p = match cached {
+        Some(p) => p,
+        None => run_point(
+            TierSpec::default().host_cache_gb,
+            Pattern::Bursty,
+            horizon(quick),
+            11,
+        ),
+    };
+    obj(vec![
+        ("cache_gb", num(p.cache_gb)),
+        ("requests", num(p.requests as f64)),
+        ("ttft_ms", num(p.ttft_mean_s * 1000.0)),
+        ("ttft_p99_ms", num(p.ttft_p99_s * 1000.0)),
+        ("tiered_cold_loads", num(p.cold_loads as f64)),
+        ("tier_hits_ram", num(p.hits_ram as f64)),
+        ("tier_hits_ssd", num(p.hits_ssd as f64)),
+        ("tier_hits_remote", num(p.hits_remote as f64)),
+        (
+            "ram_hit_rate",
+            num(p.hits_ram as f64 / (p.cold_loads as f64).max(1.0)),
+        ),
+        ("cache_evictions", num(p.evictions as f64)),
+        ("load_retimes", num(p.retimes as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_grow_with_full_mode() {
+        assert!(cache_sizes(true).len() < cache_sizes(false).len());
+        assert!(patterns(true).len() < patterns(false).len());
+        assert_eq!(cache_sizes(true)[0], 0.0, "the no-cache floor stays in CI");
+    }
+
+    #[test]
+    fn point_resolves_loads_and_conserves() {
+        // Short horizon, smallest cache: the conservation asserts inside
+        // run_point are the test; beyond them, the hierarchy must have
+        // actually been exercised.
+        let p = run_point(0.0, Pattern::Bursty, 300.0, 11);
+        assert!(p.requests > 0);
+        assert!(p.cold_loads > 0, "no-preload run must cold-load");
+        assert_eq!(p.hits_ram + p.hits_ssd + p.hits_remote, p.cold_loads);
+        assert_eq!(p.hits_ram, 0, "0 GB cache cannot produce RAM hits");
+        assert_eq!(p.evictions, 0, "0 GB cache cannot evict");
+    }
+
+    #[test]
+    fn cache_capacity_creates_ram_hits() {
+        let cold = run_point(0.0, Pattern::Bursty, 600.0, 11);
+        let cached = run_point(64.0, Pattern::Bursty, 600.0, 11);
+        assert_eq!(cold.hits_ram, 0);
+        assert!(
+            cached.hits_ram > 0,
+            "a 64 GB cache must convert repeat cold loads into RAM hits"
+        );
+        assert!(
+            cached.ttft_mean_s <= cold.ttft_mean_s,
+            "RAM hits cannot make mean TTFT worse: {} vs {}",
+            cached.ttft_mean_s,
+            cold.ttft_mean_s
+        );
+    }
+
+    #[test]
+    fn json_record_names_the_tracked_counters() {
+        let j = tiers_json(true);
+        for key in [
+            "ram_hit_rate",
+            "tier_hits_ram",
+            "tier_hits_ssd",
+            "tier_hits_remote",
+            "load_retimes",
+            "cache_evictions",
+        ] {
+            assert!(j.get(key).is_some(), "BENCH record missing '{key}'");
+        }
+    }
+}

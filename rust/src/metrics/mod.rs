@@ -3,6 +3,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::artifact::Tier;
 use crate::trace::Request;
 use crate::util::stats::{self, Summary};
 
@@ -73,6 +74,10 @@ pub struct RequestOutcome {
     pub e2e_s: f64,
     pub output_tokens: usize,
     pub batch_size: usize,
+    /// Tier the backbone checkpoint was sourced from on this request's
+    /// cold load (tiered store only; `None` = warm dispatch or flat
+    /// fast path).
+    pub backbone_tier: Option<Tier>,
 }
 
 impl RequestOutcome {
@@ -133,6 +138,24 @@ pub struct RunStats {
     /// Backbone loads satisfied over the inter-zone fabric instead of
     /// remote storage (zone-sharded runs only; always 0 at zones = 1).
     pub cross_zone_fetches: u64,
+    /// In-flight load completions re-scheduled because a flow joined or
+    /// left a shared link (tiered store only; cancel + re-push pairs).
+    pub load_retimes: u64,
+    /// Tiered cold backbone loads resolved against the memory hierarchy.
+    /// Conservation: `tier_hits_ram + tier_hits_ssd + tier_hits_remote
+    /// == tiered_cold_loads` (checked by `Engine::check_indexes` and
+    /// `fleet --check`).
+    pub tiered_cold_loads: u64,
+    /// Backbone sourced from the host-RAM checkpoint cache (or already
+    /// staged host-side by the policy).
+    pub tier_hits_ram: u64,
+    /// Backbone read from node-local NVMe (cache miss, SSD-seeded store).
+    pub tier_hits_ssd: u64,
+    /// Backbone streamed from the remote object store over the NIC
+    /// (cache miss, no local checkpoint).
+    pub tier_hits_remote: u64,
+    /// Checkpoints evicted from host caches by the cache policy.
+    pub cache_evictions: u64,
 }
 
 impl RunStats {
@@ -157,6 +180,12 @@ impl RunStats {
         self.bill_sample_wall_s += o.bill_sample_wall_s;
         self.bill_reclass_wall_s += o.bill_reclass_wall_s;
         self.cross_zone_fetches += o.cross_zone_fetches;
+        self.load_retimes += o.load_retimes;
+        self.tiered_cold_loads += o.tiered_cold_loads;
+        self.tier_hits_ram += o.tier_hits_ram;
+        self.tier_hits_ssd += o.tier_hits_ssd;
+        self.tier_hits_remote += o.tier_hits_remote;
+        self.cache_evictions += o.cache_evictions;
     }
 }
 
@@ -305,6 +334,7 @@ pub fn outcome_from_phases(
         output_tokens: req.output_tokens,
         batch_size,
         phases,
+        backbone_tier: None,
     }
 }
 
@@ -323,6 +353,7 @@ mod tests {
             e2e_s: e2e,
             output_tokens: 100,
             batch_size: 4,
+            backbone_tier: None,
         }
     }
 

@@ -11,8 +11,11 @@
 //! path — bit-identical by construction.
 //!
 //! Output sinks are selected in the spec ([`SinkSpec`]): billing
-//! wall-clock metering and the opt-in per-billing-class time series
-//! (`sim::observe::BillSeriesSampler`), both off by default.
+//! wall-clock metering, the opt-in per-billing-class time series
+//! (`sim::observe::BillSeriesSampler`), and the opt-in per-request
+//! trace file (`sim::observe::TraceExport`, CSV or JSON, with a
+//! `{seed}` path placeholder for multi-seed scenarios) — all off by
+//! default.
 
 pub mod spec;
 
@@ -20,7 +23,7 @@ use std::time::Instant;
 
 pub use spec::{
     BatchingOverride, ClusterSpec, ScenarioBuilder, ScenarioError, ScenarioSpec, SinkSpec,
-    SystemSpec, WorkloadSpec, SYSTEM_IDS,
+    SystemSpec, TraceFormat, TraceSinkSpec, WorkloadSpec, SYSTEM_IDS,
 };
 
 use crate::cost::CostTracker;
@@ -134,6 +137,13 @@ fn run_seed(sp: &ScenarioSpec, seed: u64) -> SeedRun {
         }
         if let Some(bucket_s) = sp.sinks.bill_series_bucket_s {
             engine.enable_bill_series(bucket_s);
+        }
+        if let Some(t) = &sp.sinks.request_trace {
+            let path = t.path_for_seed(seed);
+            engine.attach_observer(Box::new(match t.format {
+                TraceFormat::Csv => crate::sim::TraceExport::csv(&path),
+                TraceFormat::Json => crate::sim::TraceExport::json(&path),
+            }));
         }
         engine.run_full()
     };
@@ -366,6 +376,54 @@ mod tests {
         assert_eq!(specs_from_json(&grid).unwrap().len(), 2);
         assert!(specs_from_json(&Json::Num(3.0)).is_err());
         assert!(specs_from_json(&Json::Arr(vec![])).is_err());
+    }
+
+    /// The request-trace sink writes one file per seed ({seed}
+    /// substituted), with the documented CSV header and one row per
+    /// completion — and, like every observer, perturbs nothing.
+    #[test]
+    fn request_trace_sink_writes_files_per_seed() {
+        let dir = std::env::temp_dir().join(format!("sl-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let plain = run(&quick_spec("plain", "serverless-lora", vec![1, 7])).unwrap();
+        let mut spec = quick_spec("traced", "serverless-lora", vec![1, 7]);
+        spec.sinks.request_trace = Some(TraceSinkSpec {
+            path: dir.join("trace-{seed}.csv").to_str().unwrap().to_string(),
+            format: TraceFormat::Csv,
+        });
+        let report = run(&spec).unwrap();
+        for (p, q) in plain.runs.iter().zip(&report.runs) {
+            assert_eq!(
+                p.metrics.ttft().mean.to_bits(),
+                q.metrics.ttft().mean.to_bits(),
+                "trace sink perturbed the run"
+            );
+            let path = dir.join(format!("trace-{}.csv", q.seed));
+            let text = std::fs::read_to_string(&path).unwrap();
+            let mut lines = text.lines();
+            let header = lines.next().unwrap();
+            assert!(header.starts_with("id,function,arrival_s,ttft_s"), "{header}");
+            assert!(header.contains("backbone_tier"));
+            assert!(header.contains("backbone_load_s"));
+            assert_eq!(lines.count(), q.metrics.outcomes.len(), "one row per completion");
+        }
+
+        // JSON format parses back with one object per completion.
+        let json_path = dir.join("trace.json");
+        let mut spec = quick_spec("traced-json", "serverless-lora", vec![7]);
+        spec.sinks.request_trace = Some(TraceSinkSpec {
+            path: json_path.to_str().unwrap().to_string(),
+            format: TraceFormat::Json,
+        });
+        let report = run(&spec).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+        let Json::Arr(rows) = parsed else { panic!("trace must be a JSON array") };
+        assert_eq!(rows.len(), report.only().metrics.outcomes.len());
+        for key in ["id", "ttft_s", "e2e_s", "phases"] {
+            assert!(rows[0].get(key).is_some(), "row missing '{key}'");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -12,7 +12,7 @@
 
 use crate::artifact::ModelProfile;
 use crate::cluster::Cluster;
-use crate::sim::config::{BatchingMode, PreloadMode, SystemConfig};
+use crate::sim::config::{BatchingMode, CacheMode, PreloadMode, SystemConfig, TierSpec};
 use crate::sim::workloads as wl;
 use crate::sim::Workload;
 use crate::trace::Pattern;
@@ -49,6 +49,10 @@ pub enum ScenarioError {
     BadWorkload(String),
     BadSkew(f64),
     BadSeriesBucket(String),
+    /// A sink selection that cannot work as configured (e.g. a request
+    /// trace on a sharded cluster, or a multi-seed run without a
+    /// `{seed}` placeholder in the trace path).
+    BadSink(String),
     /// Malformed JSON shape (missing/ill-typed field); carries the path.
     Parse(String),
 }
@@ -77,6 +81,7 @@ impl std::fmt::Display for ScenarioError {
             ScenarioError::BadSeriesBucket(msg) => {
                 write!(w, "bad bill_series_bucket_s: {msg}")
             }
+            ScenarioError::BadSink(msg) => write!(w, "bad sink: {msg}"),
             ScenarioError::Parse(msg) => write!(w, "{msg}"),
         }
     }
@@ -106,6 +111,10 @@ pub struct SystemSpec {
     /// (e.g. `1.0` for the §6.3 best case) instead of deriving it from
     /// the workload's arrival pattern.
     pub hit_rate: Option<f64>,
+    /// Tiered artifact store + link contention (`sim::TierSpec`):
+    /// per-node host-RAM checkpoint cache, per-link bandwidths, and the
+    /// cache policy. `None` keeps the flat-latency fast path.
+    pub tiers: Option<TierSpec>,
 }
 
 impl SystemSpec {
@@ -117,6 +126,7 @@ impl SystemSpec {
             dynamic_offload: None,
             batching: None,
             hit_rate: None,
+            tiers: None,
         }
     }
 
@@ -181,6 +191,27 @@ impl SystemSpec {
             }
             None => {}
         }
+        if let Some(t) = self.tiers {
+            if !(t.host_cache_gb.is_finite() && t.host_cache_gb >= 0.0) {
+                return Err(ScenarioError::BadOverride(format!(
+                    "tiers.host_cache_gb must be a non-negative finite number of GB \
+                     (0 disables the cache), got {}",
+                    t.host_cache_gb
+                )));
+            }
+            for (bw, key) in [
+                (t.nic_gbps, "nic_gbps"),
+                (t.nvme_gbps, "nvme_gbps"),
+                (t.pcie_gbps, "pcie_gbps"),
+            ] {
+                if !(bw.is_finite() && bw > 0.0) {
+                    return Err(ScenarioError::BadOverride(format!(
+                        "tiers.{key} must be a positive finite bandwidth in GB/s, got {bw}"
+                    )));
+                }
+            }
+            cfg = cfg.with_tiers(t);
+        }
         Ok(cfg)
     }
 
@@ -214,6 +245,19 @@ impl SystemSpec {
             }
             None => {}
         }
+        if let Some(t) = self.tiers {
+            fields.push((
+                "tiers",
+                obj(vec![
+                    ("host_cache_gb", num(t.host_cache_gb)),
+                    ("nic_gbps", num(t.nic_gbps)),
+                    ("nvme_gbps", num(t.nvme_gbps)),
+                    ("pcie_gbps", num(t.pcie_gbps)),
+                    ("ssd_seeded", Json::Bool(t.ssd_seeded)),
+                    ("cache", s(t.cache.id())),
+                ]),
+            ));
+        }
         obj(fields)
     }
 
@@ -224,6 +268,38 @@ impl SystemSpec {
         spec.backbone_sharing = opt_bool(j, "backbone_sharing", "system")?;
         spec.dynamic_offload = opt_bool(j, "dynamic_offload", "system")?;
         spec.hit_rate = opt_num(j, "hit_rate", "system")?;
+        if let Some(tj) = j.get("tiers") {
+            let mut t = TierSpec::default();
+            if let Some(x) = opt_num(tj, "host_cache_gb", "system.tiers")? {
+                t.host_cache_gb = x;
+            }
+            if let Some(x) = opt_num(tj, "nic_gbps", "system.tiers")? {
+                t.nic_gbps = x;
+            }
+            if let Some(x) = opt_num(tj, "nvme_gbps", "system.tiers")? {
+                t.nvme_gbps = x;
+            }
+            if let Some(x) = opt_num(tj, "pcie_gbps", "system.tiers")? {
+                t.pcie_gbps = x;
+            }
+            if let Some(b) = opt_bool(tj, "ssd_seeded", "system.tiers")? {
+                t.ssd_seeded = b;
+            }
+            if let Some(c) = tj.get("cache") {
+                let name = c.as_str().ok_or_else(|| {
+                    ScenarioError::Parse(
+                        "system.tiers.cache must be a policy id string".to_string(),
+                    )
+                })?;
+                t.cache = CacheMode::from_id(name).ok_or_else(|| {
+                    ScenarioError::Parse(format!(
+                        "system.tiers.cache must be one of {}, got '{name}'",
+                        CacheMode::IDS.join(", ")
+                    ))
+                })?;
+            }
+            spec.tiers = Some(t);
+        }
         if let Some(b) = j.get("batching") {
             let kind = req_str(b, "kind", "system.batching")?;
             spec.batching = Some(match kind.as_str() {
@@ -673,8 +749,53 @@ impl WorkloadSpec {
 
 // ---------------------------------------------------------------- sinks
 
+/// Per-request trace format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceFormat {
+    /// One CSV row per request with a header line.
+    #[default]
+    Csv,
+    /// One JSON object per request, wrapped in a top-level array.
+    Json,
+}
+
+impl TraceFormat {
+    pub fn id(self) -> &'static str {
+        match self {
+            TraceFormat::Csv => "csv",
+            TraceFormat::Json => "json",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Self> {
+        match id {
+            "csv" => Some(TraceFormat::Csv),
+            "json" => Some(TraceFormat::Json),
+            _ => None,
+        }
+    }
+}
+
+/// Per-request trace export: every completed request's phases, tier and
+/// latencies, written to `path` when the run finishes
+/// (`sim::observe::TraceExport`). Multi-seed scenarios must embed the
+/// literal `{seed}` placeholder in the path so runs do not clobber each
+/// other; single-seed paths may omit it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSinkSpec {
+    pub path: String,
+    pub format: TraceFormat,
+}
+
+impl TraceSinkSpec {
+    /// The concrete file path for one engine seed.
+    pub fn path_for_seed(&self, seed: u64) -> String {
+        self.path.replace("{seed}", &seed.to_string())
+    }
+}
+
 /// Output-sink selection: what a run records beyond metrics + cost.
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct SinkSpec {
     /// Meter billing wall-clock into
     /// `RunStats::bill_{sample,reclass}_wall_s` (the fleet bench).
@@ -682,6 +803,8 @@ pub struct SinkSpec {
     /// Enable the coarse per-billing-class time-series sampler with
     /// this bucket width (seconds). Off (`None`) by default.
     pub bill_series_bucket_s: Option<f64>,
+    /// Export a per-request trace to disk. Off (`None`) by default.
+    pub request_trace: Option<TraceSinkSpec>,
 }
 
 impl SinkSpec {
@@ -693,13 +816,44 @@ impl SinkSpec {
         if let Some(b) = self.bill_series_bucket_s {
             fields.push(("bill_series_bucket_s", num(b)));
         }
+        if let Some(t) = &self.request_trace {
+            fields.push((
+                "request_trace",
+                obj(vec![("path", s(&t.path)), ("format", s(t.format.id()))]),
+            ));
+        }
         obj(fields)
     }
 
     fn from_json(j: &Json) -> Result<Self, ScenarioError> {
+        let request_trace = match j.get("request_trace") {
+            None => None,
+            Some(t) => {
+                let path = req_str(t, "path", "sinks.request_trace")?;
+                let format = match t.get("format") {
+                    None => TraceFormat::default(),
+                    Some(x) => {
+                        let id = x.as_str().ok_or_else(|| {
+                            ScenarioError::Parse(
+                                "sinks.request_trace.format must be a string"
+                                    .to_string(),
+                            )
+                        })?;
+                        TraceFormat::from_id(id).ok_or_else(|| {
+                            ScenarioError::Parse(format!(
+                                "sinks.request_trace.format must be 'csv' or \
+                                 'json', got '{id}'"
+                            ))
+                        })?
+                    }
+                };
+                Some(TraceSinkSpec { path, format })
+            }
+        };
         Ok(SinkSpec {
             bill_timing: opt_bool(j, "bill_timing", "sinks")?.unwrap_or(false),
             bill_series_bucket_s: opt_num(j, "bill_series_bucket_s", "sinks")?,
+            request_trace,
         })
     }
 }
@@ -765,6 +919,28 @@ impl ScenarioSpec {
                 )));
             }
         }
+        if let Some(t) = &self.sinks.request_trace {
+            if t.path.trim().is_empty() {
+                return Err(ScenarioError::BadSink(
+                    "request_trace.path must be a non-empty file path".to_string(),
+                ));
+            }
+            if self.cluster.zones() > 1 {
+                return Err(ScenarioError::BadSink(
+                    "request_trace requires zones = 1 (the sharded engine does \
+                     not carry per-zone observers)"
+                        .to_string(),
+                ));
+            }
+            if self.seeds.len() > 1 && !t.path.contains("{seed}") {
+                return Err(ScenarioError::BadSink(format!(
+                    "request_trace.path '{}' would be overwritten by each of the \
+                     {} seeds; embed the literal {{seed}} placeholder",
+                    t.path,
+                    self.seeds.len()
+                )));
+            }
+        }
         Ok(())
     }
 
@@ -792,8 +968,21 @@ impl ScenarioSpec {
     /// paper, horizon_s: 3600, seeds: [1], sinks: off); `name`, `system`
     /// and `workload` are required.
     pub fn from_json(j: &Json) -> Result<Self, ScenarioError> {
-        if !matches!(j, Json::Obj(_)) {
+        let Json::Obj(map) = j else {
             return Err(ScenarioError::Parse("a scenario must be a JSON object".into()));
+        };
+        // Reject unknown top-level keys outright: a typo ("horizon" for
+        // "horizon_s") silently running 3600 s would be worse than an
+        // error naming the valid vocabulary.
+        const TOP_KEYS: [&str; 7] =
+            ["name", "system", "cluster", "workload", "horizon_s", "seeds", "sinks"];
+        for k in map.keys() {
+            if !TOP_KEYS.contains(&k.as_str()) {
+                return Err(ScenarioError::Parse(format!(
+                    "scenario: unknown top-level key \"{k}\"; valid keys: {}",
+                    TOP_KEYS.join(", ")
+                )));
+            }
         }
         let name = req_str(j, "name", "scenario")?;
         let system = SystemSpec::from_json(j.get("system").ok_or_else(|| {
@@ -834,18 +1023,20 @@ impl ScenarioSpec {
 
     /// One-line description (the CLI's `--dry-run` output).
     pub fn summary(&self) -> String {
-        let sinks = match (self.sinks.bill_timing, self.sinks.bill_series_bucket_s) {
-            (false, None) => String::new(),
-            (t, b) => {
-                let mut parts = Vec::new();
-                if t {
-                    parts.push("bill-timing".to_string());
-                }
-                if let Some(b) = b {
-                    parts.push(format!("bill-series@{b}s"));
-                }
-                format!(" | sinks: {}", parts.join(", "))
-            }
+        let mut parts = Vec::new();
+        if self.sinks.bill_timing {
+            parts.push("bill-timing".to_string());
+        }
+        if let Some(b) = self.sinks.bill_series_bucket_s {
+            parts.push(format!("bill-series@{b}s"));
+        }
+        if let Some(t) = &self.sinks.request_trace {
+            parts.push(format!("trace→{} ({})", t.path, t.format.id()));
+        }
+        let sinks = if parts.is_empty() {
+            String::new()
+        } else {
+            format!(" | sinks: {}", parts.join(", "))
         };
         format!(
             "scenario '{}': {} on {} | {} | horizon {} s | seeds {:?}{}",
@@ -888,6 +1079,13 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Enable the tiered artifact store (host-RAM cache + link
+    /// contention) with the given tier shape.
+    pub fn tiers(mut self, t: TierSpec) -> Self {
+        self.spec.system.tiers = Some(t);
+        self
+    }
+
     pub fn cluster(mut self, c: ClusterSpec) -> Self {
         self.spec.cluster = c;
         self
@@ -920,6 +1118,13 @@ impl ScenarioBuilder {
 
     pub fn bill_series(mut self, bucket_s: f64) -> Self {
         self.spec.sinks.bill_series_bucket_s = Some(bucket_s);
+        self
+    }
+
+    /// Export a per-request trace to `path` when each run finishes.
+    pub fn request_trace(mut self, path: &str, format: TraceFormat) -> Self {
+        self.spec.sinks.request_trace =
+            Some(TraceSinkSpec { path: path.to_string(), format });
         self
     }
 
@@ -1368,5 +1573,134 @@ mod tests {
         assert!(sum.contains("ServerlessLoRA"));
         assert!(sum.contains("Bursty"));
         assert!(sum.contains("300"));
+    }
+
+    // ------------------------------------------- tiers & trace sinks
+
+    fn tiered_spec() -> ScenarioSpec {
+        let mut spec = lora_spec();
+        spec.system.tiers = Some(TierSpec {
+            host_cache_gb: 32.0,
+            ssd_seeded: false,
+            cache: CacheMode::PinHot,
+            ..TierSpec::default()
+        });
+        spec.sinks.request_trace = Some(TraceSinkSpec {
+            path: "trace-{seed}.csv".to_string(),
+            format: TraceFormat::Json,
+        });
+        spec
+    }
+
+    #[test]
+    fn tiers_and_trace_survive_json_roundtrip() {
+        let spec = tiered_spec();
+        spec.validate().unwrap();
+        let text = spec.to_json().dump();
+        let parsed = ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, spec, "round-trip changed the spec:\n{text}");
+        // The resolved config carries the tiers through to the engine.
+        let cfg = parsed.system.resolve(Pattern::Normal).unwrap();
+        let t = cfg.tiers.expect("tiers resolved");
+        assert_eq!(t.host_cache_gb, 32.0);
+        assert_eq!(t.cache, CacheMode::PinHot);
+        assert!(!t.ssd_seeded);
+    }
+
+    #[test]
+    fn tiers_parse_fills_defaults_and_rejects_bad_cache_id() {
+        let j = Json::parse(
+            r#"{"name":"t","system":{"id":"npl","tiers":{"host_cache_gb":16.0}},
+                "workload":{"kind":"paper"}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&j).unwrap();
+        let t = spec.system.tiers.expect("tiers parsed");
+        assert_eq!(t.host_cache_gb, 16.0);
+        assert_eq!(t.cache, TierSpec::default().cache, "unset fields default");
+        assert_eq!(t.nvme_gbps, TierSpec::default().nvme_gbps);
+
+        let j = Json::parse(
+            r#"{"name":"t","system":{"id":"npl","tiers":{"cache":"mru"}},
+                "workload":{"kind":"paper"}}"#,
+        )
+        .unwrap();
+        let err = ScenarioSpec::from_json(&j).unwrap_err();
+        assert!(matches!(err, ScenarioError::Parse(_)));
+        for id in CacheMode::IDS {
+            assert!(err.to_string().contains(id), "lists '{id}': {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_tier_numbers() {
+        let patches: [fn(&mut TierSpec); 5] = [
+            |t| t.host_cache_gb = -1.0,
+            |t| t.host_cache_gb = f64::NAN,
+            |t| t.nic_gbps = 0.0,
+            |t| t.nvme_gbps = -2.0,
+            |t| t.pcie_gbps = f64::INFINITY,
+        ];
+        for patch in patches {
+            let mut t = TierSpec::default();
+            patch(&mut t);
+            let mut sys = SystemSpec::new("npl");
+            sys.tiers = Some(t);
+            let err =
+                ScenarioSpec::builder("t").system_spec(sys).build().unwrap_err();
+            assert!(matches!(err, ScenarioError::BadOverride(_)), "{t:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_top_level_key() {
+        let j = Json::parse(
+            r#"{"name":"x","system":{"id":"vllm"},"workload":{"kind":"paper"},
+                "horizon":600.0}"#,
+        )
+        .unwrap();
+        let err = ScenarioSpec::from_json(&j).unwrap_err();
+        assert!(matches!(err, ScenarioError::Parse(_)));
+        assert!(err.to_string().contains("horizon"), "{err}");
+        assert!(err.to_string().contains("horizon_s"), "lists valid keys: {err}");
+    }
+
+    #[test]
+    fn rejects_unworkable_trace_sinks() {
+        // Sharded clusters carry no per-zone observers.
+        let mut spec = tiered_spec();
+        spec.cluster = ClusterSpec::Uniform {
+            nodes: 2,
+            gpus_per_node: 8,
+            containers_per_node: 16,
+            trim_gpus: None,
+            zones: 2,
+        };
+        let err = spec.validate().unwrap_err();
+        assert!(matches!(err, ScenarioError::BadSink(_)), "{err}");
+        assert!(err.to_string().contains("zones"));
+
+        // Multi-seed paths must embed the {seed} placeholder.
+        let mut spec = tiered_spec();
+        spec.sinks.request_trace.as_mut().unwrap().path = "trace.csv".to_string();
+        let err = spec.validate().unwrap_err();
+        assert!(matches!(err, ScenarioError::BadSink(_)), "{err}");
+        assert!(err.to_string().contains("{seed}"), "{err}");
+
+        // Empty paths are never valid.
+        let mut spec = tiered_spec();
+        spec.sinks.request_trace.as_mut().unwrap().path = "  ".to_string();
+        assert!(matches!(spec.validate(), Err(ScenarioError::BadSink(_))));
+    }
+
+    #[test]
+    fn trace_path_substitutes_seed() {
+        let t = TraceSinkSpec {
+            path: "out/trace-{seed}.json".to_string(),
+            format: TraceFormat::Json,
+        };
+        assert_eq!(t.path_for_seed(23), "out/trace-23.json");
+        let sum = tiered_spec().summary();
+        assert!(sum.contains("trace→trace-{seed}.csv (json)"), "{sum}");
     }
 }

@@ -10,11 +10,12 @@
 //! BillingModel}`) the engine actually consults. Adding a new system means
 //! adding a bundle constructor here — never touching the engine core.
 
+use crate::artifact::{params, LinkCaps};
 use crate::coordinator::policy::{
-    AdaptiveBatching, BatchingPolicy, BillingModel, DynamicOffload, FastCheckpointPreload,
-    FixedBatching, FullPreload, NoOffload, NoPreload, OffloadPolicy, OpportunisticPreload,
-    PolicyBundle, PredictivePreload, PreloadPolicy, ServerfulBilling, ServerfulResident,
-    ServerlessBilling,
+    AdaptiveBatching, BatchingPolicy, BillingModel, CachePolicy, DynamicOffload,
+    FastCheckpointPreload, FixedBatching, FullPreload, LruCache, NoOffload, NoPreload,
+    OffloadPolicy, OpportunisticPreload, PinHotCache, PolicyBundle, PredictivePreload,
+    PreloadPolicy, ServerfulBilling, ServerfulResident, ServerlessBilling, SizeAwareLruCache,
 };
 use crate::trace::Pattern;
 
@@ -54,6 +55,85 @@ pub enum BatchingMode {
     Fixed { size: usize, delay_s: f64 },
 }
 
+/// Host-cache admission/eviction policy selector (the fifth policy knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheMode {
+    /// Always admit; evict least-recently-used.
+    Lru,
+    /// Always admit; evict largest-first (ties toward older).
+    SizeAwareLru,
+    /// Frequently-hit checkpoints are pinned; decline admissions that
+    /// would require evicting a pin.
+    PinHot,
+}
+
+impl CacheMode {
+    pub const IDS: [&'static str; 3] = ["lru", "size-aware-lru", "pin-hot"];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            CacheMode::Lru => "lru",
+            CacheMode::SizeAwareLru => "size-aware-lru",
+            CacheMode::PinHot => "pin-hot",
+        }
+    }
+
+    pub fn from_id(s: &str) -> Option<CacheMode> {
+        match s {
+            "lru" => Some(CacheMode::Lru),
+            "size-aware-lru" => Some(CacheMode::SizeAwareLru),
+            "pin-hot" => Some(CacheMode::PinHot),
+            _ => None,
+        }
+    }
+}
+
+/// Tiered-store configuration: turns on the dynamic memory hierarchy —
+/// per-node host-RAM checkpoint cache plus fair-share (processor-sharing)
+/// link contention on NIC/NVMe/PCIe.  `None` on a [`SystemConfig`] keeps
+/// the historical flat-latency fast path, bit-identical to pre-tiered
+/// runs; with tiers on, a *solo* flow on default bandwidths still
+/// reproduces the flat latencies exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierSpec {
+    /// Host-RAM checkpoint cache per node, GB (0: contention modelling
+    /// without a cache tier).
+    pub host_cache_gb: f64,
+    /// Per-node link bandwidths, GB/s.
+    pub nic_gbps: f64,
+    pub nvme_gbps: f64,
+    pub pcie_gbps: f64,
+    /// Node-local NVMe holds every checkpoint (deployment pre-seeded) —
+    /// the historical assumption.  When false, a host-cache miss streams
+    /// from the remote store over the NIC instead of reading NVMe.
+    pub ssd_seeded: bool,
+    /// Host-cache admission/eviction policy.
+    pub cache: CacheMode,
+}
+
+impl Default for TierSpec {
+    fn default() -> Self {
+        TierSpec {
+            host_cache_gb: 64.0,
+            nic_gbps: params::BW_REMOTE_GBPS,
+            nvme_gbps: params::BW_SSD_GBPS,
+            pcie_gbps: params::BW_PCIE_GBPS,
+            ssd_seeded: true,
+            cache: CacheMode::Lru,
+        }
+    }
+}
+
+impl TierSpec {
+    pub fn caps(&self) -> LinkCaps {
+        LinkCaps {
+            nic_gbps: self.nic_gbps,
+            nvme_gbps: self.nvme_gbps,
+            pcie_gbps: self.pcie_gbps,
+        }
+    }
+}
+
 /// A complete system-under-test description.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -69,6 +149,9 @@ pub struct SystemConfig {
     pub batching: BatchingMode,
     /// Keep-alive window for function instances, seconds.
     pub keepalive_s: f64,
+    /// Tiered artifact store + link contention.  `None` (the default for
+    /// every named system) keeps the flat-latency fast path.
+    pub tiers: Option<TierSpec>,
 }
 
 impl SystemConfig {
@@ -83,6 +166,7 @@ impl SystemConfig {
             dynamic_offload: true,
             batching: BatchingMode::Adaptive,
             keepalive_s: 180.0,
+            tiers: None,
         }
     }
 
@@ -97,6 +181,7 @@ impl SystemConfig {
             // reports for the baselines (peak batch 32).
             batching: BatchingMode::Fixed { size: 32, delay_s: 0.25 },
             keepalive_s: 180.0,
+            tiers: None,
         }
     }
 
@@ -114,6 +199,7 @@ impl SystemConfig {
             dynamic_offload: false,
             batching: BatchingMode::Fixed { size: 32, delay_s: 0.25 },
             keepalive_s: 180.0,
+            tiers: None,
         }
     }
 
@@ -129,6 +215,7 @@ impl SystemConfig {
             // requests, dispatch the moment a prefill slot frees.
             batching: BatchingMode::Adaptive,
             keepalive_s: f64::INFINITY,
+            tiers: None,
         }
     }
 
@@ -141,6 +228,7 @@ impl SystemConfig {
             dynamic_offload: false,
             batching: BatchingMode::Adaptive, // continuous batching too
             keepalive_s: f64::INFINITY,
+            tiers: None,
         }
     }
 
@@ -204,6 +292,12 @@ impl SystemConfig {
         !self.serverful
     }
 
+    /// Enable the tiered store on any named system (builder style).
+    pub fn with_tiers(mut self, tiers: TierSpec) -> Self {
+        self.tiers = Some(tiers);
+        self
+    }
+
     // ------------------------------------------------------ policy bundles
 
     /// Build the policy bundle this configuration describes. `seed` feeds
@@ -239,7 +333,13 @@ impl SystemConfig {
         } else {
             Box::new(ServerlessBilling { sharing: self.backbone_sharing })
         };
-        PolicyBundle { preload, batching, offload, billing }
+        let cache: Box<dyn CachePolicy> =
+            match self.tiers.map(|t| t.cache).unwrap_or(CacheMode::Lru) {
+                CacheMode::Lru => Box::new(LruCache),
+                CacheMode::SizeAwareLru => Box::new(SizeAwareLruCache),
+                CacheMode::PinHot => Box::new(PinHotCache::default()),
+            };
+        PolicyBundle { preload, batching, offload, billing, cache }
     }
 }
 
@@ -300,6 +400,9 @@ mod tests {
         assert_eq!(b.batching.name(), "adaptive");
         assert_eq!(b.offload.name(), "dynamic");
         assert_eq!(b.billing.name(), "serverless");
+        // Flat (tiers: None) still carries a cache policy; it is simply
+        // never consulted — LRU is the inert default.
+        assert_eq!(b.cache.name(), "lru");
 
         let b = SystemConfig::serverless_llm().bundle(1);
         assert_eq!(b.preload.name(), "fast-checkpoint");
@@ -319,5 +422,38 @@ mod tests {
         assert_eq!(b.offload.name(), "block");
         let b = SystemConfig::predictive().bundle(1);
         assert_eq!(b.preload.name(), "predictive-ewma");
+    }
+
+    #[test]
+    fn tier_spec_defaults_match_flat_bandwidths_and_select_cache_policy() {
+        // Every named system ships with the flat fast path.
+        assert!(SystemConfig::serverless_lora().tiers.is_none());
+        assert!(SystemConfig::vllm().tiers.is_none());
+        assert!(SystemConfig::nab(2).tiers.is_none());
+
+        // Default TierSpec bandwidths are exactly the flat-model constants:
+        // a solo flow under tiers reproduces today's latencies bitwise.
+        let t = TierSpec::default();
+        assert_eq!(t.nic_gbps.to_bits(), params::BW_REMOTE_GBPS.to_bits());
+        assert_eq!(t.nvme_gbps.to_bits(), params::BW_SSD_GBPS.to_bits());
+        assert_eq!(t.pcie_gbps.to_bits(), params::BW_PCIE_GBPS.to_bits());
+        assert_eq!(t.caps(), LinkCaps::DEFAULT);
+        assert!(t.ssd_seeded);
+
+        // The cache knob maps onto the fifth policy trait.
+        let cfg = SystemConfig::serverless_lora().with_tiers(TierSpec {
+            cache: CacheMode::SizeAwareLru,
+            ..TierSpec::default()
+        });
+        assert_eq!(cfg.bundle(1).cache.name(), "size-aware-lru");
+        let cfg = SystemConfig::serverless_lora()
+            .with_tiers(TierSpec { cache: CacheMode::PinHot, ..TierSpec::default() });
+        assert_eq!(cfg.bundle(1).cache.name(), "pin-hot");
+
+        // Round-trip of the scenario-facing ids.
+        for id in CacheMode::IDS {
+            assert_eq!(CacheMode::from_id(id).unwrap().id(), id);
+        }
+        assert!(CacheMode::from_id("mru").is_none());
     }
 }

@@ -6,13 +6,14 @@
 
 use std::collections::BTreeMap;
 
-use crate::artifact::{params, ArtifactKind, FunctionSpec};
+use crate::artifact::{params, ArtifactKind, FunctionSpec, LinkCaps, LinkKind, PhaseCost, Term, Tier};
 use crate::cluster::{ContainerId, GpuId};
 use crate::coordinator::policy::{LoadQuery, PolicyEnv};
 use crate::coordinator::{Queued, Readiness, Router};
 use crate::metrics::{Phase, RequestOutcome};
 use crate::sim::engine::{Engine, QueueWakeups};
-use crate::sim::events::EventKind;
+use crate::sim::events::{EventKind, EventToken};
+use crate::sim::flow::Retime;
 use crate::trace::Request;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -36,6 +37,90 @@ pub(super) struct Batch {
     #[allow(dead_code)]
     pub(super) kv_gb: f64,
     pub(super) attached_backbone: bool,
+    /// Where the backbone checkpoint was sourced (tiered store only).
+    pub(super) backbone_tier: Option<Tier>,
+}
+
+/// One segment of a tiered load: a contended transfer (`link: Some`) or a
+/// run of fixed (CPU/driver-side) work merged into one event.
+#[derive(Debug, Clone)]
+pub(super) struct LoadSeg {
+    pub(super) phase: Phase,
+    /// `Some(link)` → this segment is a flow on `(node, link)`.
+    pub(super) link: Option<LinkKind>,
+    /// Solo (uncontended) duration at the configured bandwidths.
+    pub(super) dur_s: f64,
+    /// Absolute completion time if no link ever contends — the two-level
+    /// prefix fold of [`build_load_segs`]; honored verbatim while the run
+    /// stays `on_nominal`, which is what makes solo tiered loads
+    /// bit-identical to the flat fast path.
+    pub(super) nominal_end_s: f64,
+}
+
+/// The in-flight state of one segmented (tiered) load.  Flat-path loads
+/// (tiers off, or no transfer segments) never create one.
+#[derive(Debug, Clone)]
+pub(super) struct LoadRun {
+    pub(super) node: usize,
+    pub(super) segs: Vec<LoadSeg>,
+    pub(super) cursor: usize,
+    /// True while every completed segment ended exactly on its nominal
+    /// schedule; the first contended segment clears it, after which
+    /// segments are timed `start + dur` and stretch deltas are folded
+    /// into the batch's phase map.
+    pub(super) on_nominal: bool,
+    pub(super) seg_start_s: f64,
+    /// The completion time currently in the event queue (`token`).
+    pub(super) cur_end_s: f64,
+    pub(super) token: Option<EventToken>,
+}
+
+/// Cut a phase plan into [`LoadSeg`]s.  Exactness contract: nominal ends
+/// are absolute times computed as `now + (prefix + acc)` where `prefix`
+/// folds the phase totals in `Phase` order (the identical op sequence to
+/// `load_phases.values().sum()`) and `acc` left-folds the phase's term
+/// seconds from 0.0 (the identical sequence to `PhaseCost::total`) — so
+/// the last segment's nominal end is bit-equal to `now + total_load`.
+/// Contiguous fixed terms within a phase merge into one segment;
+/// zero-byte transfers are treated as fixed work (no flow).
+pub(super) fn build_load_segs(
+    plan: &BTreeMap<Phase, PhaseCost>,
+    caps: &LinkCaps,
+    now: f64,
+) -> Vec<LoadSeg> {
+    let mut segs: Vec<LoadSeg> = Vec::new();
+    let mut prefix = 0.0f64;
+    for (&phase, cost) in plan {
+        let mut acc = 0.0f64;
+        let mut open_fixed: Option<usize> = None;
+        for t in &cost.0 {
+            let s = t.seconds(caps);
+            acc += s;
+            let flow_link = match t {
+                Term::Xfer { link, gb } if *gb > 0.0 => Some(*link),
+                _ => None,
+            };
+            let end = now + (prefix + acc);
+            match flow_link {
+                Some(link) => {
+                    segs.push(LoadSeg { phase, link: Some(link), dur_s: s, nominal_end_s: end });
+                    open_fixed = None;
+                }
+                None => match open_fixed {
+                    Some(i) => {
+                        segs[i].dur_s += s;
+                        segs[i].nominal_end_s = end;
+                    }
+                    None => {
+                        open_fixed = Some(segs.len());
+                        segs.push(LoadSeg { phase, link: None, dur_s: s, nominal_end_s: end });
+                    }
+                },
+            }
+        }
+        prefix += acc;
+    }
+    segs
 }
 
 impl Engine {
@@ -279,7 +364,7 @@ impl Engine {
         // Mutate ledgers: make everything resident, reserve KV.
         let batch_id = self.next_batch;
         self.next_batch += 1;
-        let mut load_phases = self.make_resident(f, &spec, gpu, readiness);
+        let (mut plan, backbone_tier) = self.make_resident(f, &spec, gpu, readiness);
         let kv_gb = spec.model.kv_per_request_gb * b as f64;
         self.cluster
             .gpu_mut(gpu)
@@ -302,12 +387,21 @@ impl Engine {
         // concurrency even when everything is pre-loaded.
         let concurrent = self.fn_inflight[f] > 0;
         if concurrent && !self.cfg.serverful {
-            *load_phases.entry(Phase::ContainerInit).or_insert(0.0) +=
-                params::CUDA_CONTEXT_INIT_S;
-            *load_phases.entry(Phase::KernelCompile).or_insert(0.0) +=
-                self.preload.scaleout_kernel_s(f, &spec.model);
+            plan.entry(Phase::ContainerInit)
+                .or_default()
+                .push(Term::Fixed(params::CUDA_CONTEXT_INIT_S));
+            plan.entry(Phase::KernelCompile)
+                .or_default()
+                .push(Term::Fixed(self.preload.scaleout_kernel_s(f, &spec.model)));
         }
 
+        // Fold the term plan into the historical phase → seconds map.
+        // Appended terms extend each phase's left fold, so every value —
+        // and `total_load` below — is bit-identical to the old flat
+        // accumulation (see `artifact::PhaseCost`).
+        let caps = self.cfg.tiers.map(|t| t.caps()).unwrap_or(LinkCaps::DEFAULT);
+        let load_phases: BTreeMap<Phase, f64> =
+            plan.iter().map(|(&p, c)| (p, c.total(&caps))).collect();
         let total_load: f64 = load_phases.values().sum();
         if total_load > 0.0 {
             self.stats.cold_dispatches += 1;
@@ -327,6 +421,7 @@ impl Engine {
                 state: BatchState::Loading,
                 kv_gb,
                 attached_backbone: attached,
+                backbone_tier,
             },
         );
         self.fn_inflight[f] += 1;
@@ -336,7 +431,33 @@ impl Engine {
         // this instant (instance allocated and working).
         self.gpu_loading[d] += 1;
         self.reclassify_gpu(gpu);
-        self.events.push(self.now + total_load, EventKind::LoadDone(batch_id));
+        // Tiered store: a load with transfer segments runs as a sequence
+        // of flows under fair-share contention. Loads with no transfers
+        // (and every flat-path load) keep the single pre-timed event —
+        // the literal historical code path.
+        let mut segmented = false;
+        if self.cfg.tiers.is_some() {
+            let segs = build_load_segs(&plan, &caps, self.now);
+            if segs.iter().any(|s| s.link.is_some()) {
+                self.load_runs.insert(
+                    batch_id,
+                    LoadRun {
+                        node: gpu.node,
+                        segs,
+                        cursor: 0,
+                        on_nominal: true,
+                        seg_start_s: self.now,
+                        cur_end_s: 0.0,
+                        token: None,
+                    },
+                );
+                self.start_load_segment(batch_id);
+                segmented = true;
+            }
+        }
+        if !segmented {
+            self.events.push(self.now + total_load, EventKind::LoadDone(batch_id));
+        }
         // Residual queue: cancel the pre-dispatch checks and re-arm for
         // what is left.
         self.arm_queue_wakeups(f);
@@ -380,16 +501,18 @@ impl Engine {
     }
 
     /// Make all artifacts of `f` resident on `gpu`, returning the phase →
-    /// latency map for whatever had to be loaded (§6.3 breakdown). The
-    /// preload policy prices the phases; the ledger mutations below are
-    /// mechanism, identical for every policy.
+    /// cost-term plan for whatever had to be loaded (§6.3 breakdown) plus
+    /// the memory tier the cold backbone was sourced from (None when warm
+    /// or when the tiered store is disabled). The preload policy prices
+    /// the phases; the ledger mutations below are mechanism, identical
+    /// for every policy.
     pub(super) fn make_resident(
         &mut self,
         f: usize,
         spec: &FunctionSpec,
         gpu: GpuId,
         ready: Readiness,
-    ) -> BTreeMap<Phase, f64> {
+    ) -> (BTreeMap<Phase, PhaseCost>, Option<Tier>) {
         let m = &spec.model;
         // A pre-warmed instance (policy-staged kernels + CUDA context) is
         // as good as a keep-alive-warm one — the §6.3 claim that fully
@@ -419,7 +542,7 @@ impl Engine {
             container_has_own_backbone: container_has(ArtifactKind::Backbone),
             container_has_model_backbone,
         };
-        let mut phases = self.preload.load_phases(&query);
+        let mut plan = self.preload.load_plan(&query);
         // Cross-zone artifact fetch (sharded runs only): when a peer zone
         // hosts this model but no local GPU does, the cold backbone comes
         // over the datacenter network from the peer's GPU memory
@@ -427,14 +550,60 @@ impl Engine {
         // store — cheaper by `CROSS_ZONE_BACKBONE_FACTOR`. `peer_models`
         // is empty outside sharded runs, so zones=1 takes the
         // short-circuit and performs zero additional float operations.
+        // Runs BEFORE tier resolution: the factor applies to the remote
+        // fetch the flat model priced, and scaling the terms folds to the
+        // same bits as scaling the folded sum (the factor is a power of
+        // two, see `PhaseCost::scale`).
         if !ready.backbone_on_gpu && !self.peer_models.is_empty() {
-            if let Some(v) = phases.get_mut(&Phase::BackboneLoad) {
-                if *v > 0.0
+            if let Some(cost) = plan.get_mut(&Phase::BackboneLoad) {
+                if cost.total_default() > 0.0
                     && self.peer_models.contains(m.name)
                     && self.registry.hosts(m.name).is_empty()
                 {
-                    *v *= params::CROSS_ZONE_BACKBONE_FACTOR;
+                    cost.scale(params::CROSS_ZONE_BACKBONE_FACTOR);
                     self.stats.cross_zone_fetches += 1;
+                }
+            }
+        }
+        // Tiered store: resolve where the cold backbone actually comes
+        // from by walking the memory hierarchy — host-RAM checkpoint
+        // cache, then node NVMe (when seeded), then the remote store —
+        // and retarget the transfer terms accordingly. The cache policy
+        // (fifth trait in the bundle) decides admission and eviction.
+        let mut backbone_tier = None;
+        if let Some(tiers) = self.cfg.tiers {
+            if let Some(cost) = plan.get_mut(&Phase::BackboneLoad) {
+                if cost.has_xfer() {
+                    self.stats.tiered_cold_loads += 1;
+                    let cache = &mut self.cluster.nodes[gpu.node].cache;
+                    if !cost.fetches_below_ram() {
+                        // Already sourced from host RAM (e.g. a peer
+                        // container's staged copy): PCIe-only transfer.
+                        self.stats.tier_hits_ram += 1;
+                        backbone_tier = Some(Tier::ContainerRam);
+                    } else if cache.enabled() && cache.contains(m.name) {
+                        self.cache.on_hit(cache, m.name, self.now);
+                        cost.source_from_ram();
+                        self.stats.tier_hits_ram += 1;
+                        backbone_tier = Some(Tier::ContainerRam);
+                    } else {
+                        if tiers.ssd_seeded {
+                            // Checkpoint pre-seeded on node NVMe: the
+                            // flat model already priced an NVMe read, so
+                            // keep the terms (bit-identical fold).
+                            self.stats.tier_hits_ssd += 1;
+                            backbone_tier = Some(Tier::Ssd);
+                        } else {
+                            cost.source_from_remote();
+                            self.stats.tier_hits_remote += 1;
+                            backbone_tier = Some(Tier::Remote);
+                        }
+                        if cache.enabled() {
+                            let evicted =
+                                self.cache.admit(cache, m.name, m.weights_gb, self.now);
+                            self.stats.cache_evictions += evicted;
+                        }
+                    }
                 }
             }
         }
@@ -470,7 +639,96 @@ impl Engine {
                 .create_cuda_context(f)
                 .expect("sized in dispatch");
         }
-        phases
+        (plan, backbone_tier)
+    }
+
+    // ------------------------------------------------- tiered load path
+
+    /// Start the current segment of `batch_id`'s load run: join its flow
+    /// onto the node link (transfer segments) or arm a plain timer
+    /// (fixed segments), then apply any retimes the join caused.
+    ///
+    /// While the run is `on_nominal`, the segment's pre-folded
+    /// `nominal_end_s` is passed through verbatim — `FlowNet` schedules a
+    /// solo flow at exactly that instant, never through arithmetic, so an
+    /// uncontended tiered load fires its events at bit-identical times to
+    /// the flat path.
+    pub(super) fn start_load_segment(&mut self, batch_id: u64) {
+        let (node, seg, on_nominal) = {
+            let run = self.load_runs.get_mut(&batch_id).expect("load run exists");
+            run.seg_start_s = self.now;
+            (run.node, run.segs[run.cursor].clone(), run.on_nominal)
+        };
+        let nominal =
+            if on_nominal { seg.nominal_end_s } else { self.now + seg.dur_s };
+        let (end, retimes) = match seg.link {
+            Some(link) => {
+                self.flows.join(node, link, batch_id, seg.dur_s, nominal, self.now)
+            }
+            None => (nominal, Vec::new()),
+        };
+        let token = self.events.push(end, EventKind::LoadDone(batch_id));
+        let run = self.load_runs.get_mut(&batch_id).expect("load run exists");
+        run.cur_end_s = end;
+        run.token = Some(token);
+        self.apply_load_retimes(retimes);
+    }
+
+    /// Re-arm the completion events of flows whose fair share changed:
+    /// O(1) cancel of the stale token, push at the new end. The touched
+    /// runs lose nominal status — their clocks now belong to `FlowNet`.
+    pub(super) fn apply_load_retimes(&mut self, retimes: Vec<Retime>) {
+        for r in retimes {
+            let run = self.load_runs.get_mut(&r.batch).expect("retimed run exists");
+            if let Some(tok) = run.token.take() {
+                self.events.cancel(tok);
+            }
+            run.on_nominal = false;
+            run.cur_end_s = r.end_s;
+            run.token = Some(self.events.push(r.end_s, EventKind::LoadDone(r.batch)));
+            self.stats.load_retimes += 1;
+        }
+    }
+
+    /// A `LoadDone` event fired for `batch_id`. Flat-path loads (no
+    /// [`LoadRun`]) complete outright; segmented loads retire the current
+    /// segment, fold any contention stretch into the batch's phase map
+    /// (so TTFT stays the sum of its phases), and either start the next
+    /// segment or complete.
+    pub(super) fn on_load_event(&mut self, batch_id: u64) {
+        if !self.load_runs.contains_key(&batch_id) {
+            return self.on_load_done(batch_id);
+        }
+        let (node, seg, seg_start) = {
+            let run = &self.load_runs[&batch_id];
+            (run.node, run.segs[run.cursor].clone(), run.seg_start_s)
+        };
+        if let Some(link) = seg.link {
+            let (was_nominal, retimes) =
+                self.flows.finish(node, link, batch_id, self.now);
+            self.apply_load_retimes(retimes);
+            if !was_nominal {
+                let run = self.load_runs.get_mut(&batch_id).expect("run exists");
+                run.on_nominal = false;
+                // Contention stretch, attributed to this segment's phase.
+                // Guarded so an exactly-on-time finish adds no term (and
+                // a nominal finish never reaches here at all): the phase
+                // breakdown stays bit-identical whenever latency is.
+                let delta = (self.now - seg_start) - seg.dur_s;
+                if delta != 0.0 {
+                    let batch = self.batches.get_mut(&batch_id).expect("batch");
+                    *batch.load_phases.entry(seg.phase).or_insert(0.0) += delta;
+                }
+            }
+        }
+        let run = self.load_runs.get_mut(&batch_id).expect("run exists");
+        run.cursor += 1;
+        if run.cursor == run.segs.len() {
+            self.load_runs.remove(&batch_id);
+            self.on_load_done(batch_id);
+        } else {
+            self.start_load_segment(batch_id);
+        }
     }
 
     // ------------------------------------------------------- exec events
@@ -592,8 +850,9 @@ impl Engine {
             let own_decode = decode_wall * r.output_tokens as f64 / max_out;
             phases.insert(Phase::Decode, own_decode);
             let tpot = own_decode / r.output_tokens.max(1) as f64;
-            let outcome: RequestOutcome =
+            let mut outcome: RequestOutcome =
                 crate::metrics::outcome_from_phases(r, phases, tpot, b);
+            outcome.backbone_tier = batch.backbone_tier;
             self.emit_request_complete(outcome);
         }
 

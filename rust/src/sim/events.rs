@@ -37,7 +37,11 @@ pub enum EventKind {
     /// Superseded checks are *cancelled* by their producer, so a check
     /// that fires is always current — no staleness stamp needed.
     QueueCheck(usize),
-    /// Batch `b` finished loading its artifacts.
+    /// Batch `b` finished loading its artifacts — or, for a segmented
+    /// (tiered) load, finished its *current* segment: the dispatch layer
+    /// re-pushes one `LoadDone` per segment, and fair-share retimes
+    /// cancel + re-push the outstanding one (`sim::flow`). A firing
+    /// `LoadDone` is always current; stale ones are cancelled O(1).
     LoadDone(u64),
     /// Processor-sharing completion sweep on a GPU. Exactly one is
     /// outstanding per GPU; re-scheduling cancels the previous one.

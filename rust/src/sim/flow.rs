@@ -1,0 +1,580 @@
+//! Fair-share (processor-sharing) link contention for tiered artifact
+//! loads.
+//!
+//! Under the tiered store (`SystemConfig::tiers`), every bulk transfer of
+//! a cold load is a *flow* on one `(node, link)` pair — NIC, NVMe, or
+//! PCIe (`artifact::LinkKind`).  `N` concurrent flows on a link each get
+//! `1/N` of its bandwidth, so a flow's *work* is measured in
+//! **solo-seconds** (its uncontended duration at full bandwidth) and
+//! drains at `dt / N` solo-seconds per wall-second.  Every membership
+//! change (join or finish) re-times the completion of every other flow on
+//! that link; the engine turns each [`Retime`] into an O(1)
+//! `EventQueue::cancel` + fresh push.
+//!
+//! ## Exactness contract
+//!
+//! * A flow that is **alone for its whole life** completes at exactly the
+//!   `nominal_end_s` the engine precomputed from the flat fold — the
+//!   entry carries the nominal end verbatim and never passes it through
+//!   arithmetic, so solo tiered loads are bit-identical to the flat
+//!   fast path.  The first contending join invalidates it.
+//! * A flow that finishes is removed **at its own scheduled event**
+//!   without recomputing its remaining work — avoiding the
+//!   `(r * n) / n` one-ulp round trip.
+//! * Same-tick joins/finishes drain with `dt == 0.0`, an exact no-op
+//!   (`x - 0.0 / n == x` for finite `x`), so event-tick collisions
+//!   cannot perturb other flows.
+//! * All state transitions are replayable: the test oracle re-integrates
+//!   bandwidth shares epoch-by-epoch from the op history with the same
+//!   left-to-right subtraction chain and must match bit-for-bit.
+//!
+//! Completion times are `now + remaining * N`.  `remaining` is clamped at
+//! 0 for *scheduling* only (an `N`-way split can leave `-1 ulp` of work
+//! on a flow whose end coincides with the draining event), never in the
+//! drain itself — the oracle mirrors both choices.
+
+use crate::artifact::LinkKind;
+
+/// A re-scheduled completion for a flow already in the event queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Retime {
+    /// Batch whose `LoadDone` event moves.
+    pub batch: u64,
+    /// New absolute completion time.
+    pub end_s: f64,
+}
+
+/// One in-flight transfer on a link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowEntry {
+    pub batch: u64,
+    /// Solo-seconds of work left (uncontended duration remaining).
+    pub remaining_s: f64,
+    /// Last time this entry was drained to.
+    pub updated_s: f64,
+    /// Engine-precomputed exact end; `Some` only while the flow has never
+    /// shared its link (see module docs).
+    pub nominal_end_s: Option<f64>,
+    /// The completion time currently scheduled in the event queue.
+    pub scheduled_end_s: f64,
+}
+
+/// All link state of the cluster: `nodes × {Nic, Nvme, Pcie}` flow lists.
+#[derive(Debug, Clone, Default)]
+pub struct FlowNet {
+    /// Indexed `node * LinkKind::COUNT + link.index()`.  Flows are kept
+    /// in join order (deterministic: joins are driven by the event loop).
+    links: Vec<Vec<FlowEntry>>,
+}
+
+impl FlowNet {
+    pub fn new(node_count: usize) -> Self {
+        FlowNet { links: vec![Vec::new(); node_count * LinkKind::COUNT] }
+    }
+
+    fn slot(node: usize, link: LinkKind) -> usize {
+        node * LinkKind::COUNT + link.index()
+    }
+
+    pub fn active(&self, node: usize, link: LinkKind) -> usize {
+        self.links[Self::slot(node, link)].len()
+    }
+
+    pub fn total_active(&self) -> usize {
+        self.links.iter().map(|l| l.len()).sum()
+    }
+
+    /// Iterate every in-flight flow as `(node, link, entry)`.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, LinkKind, &FlowEntry)> {
+        self.links.iter().enumerate().flat_map(|(slot, flows)| {
+            let node = slot / LinkKind::COUNT;
+            let link = LinkKind::ALL[slot % LinkKind::COUNT];
+            flows.iter().map(move |f| (node, link, f))
+        })
+    }
+
+    pub fn scheduled_end(&self, node: usize, link: LinkKind, batch: u64) -> Option<f64> {
+        self.links[Self::slot(node, link)]
+            .iter()
+            .find(|f| f.batch == batch)
+            .map(|f| f.scheduled_end_s)
+    }
+
+    /// Drain all flows on a link to `now` at the current `1/N` share.
+    /// Exact no-op for `dt == 0` (same-tick events).
+    fn drain(flows: &mut [FlowEntry], now_s: f64) {
+        let n = flows.len() as f64;
+        for f in flows.iter_mut() {
+            let dt = now_s - f.updated_s;
+            if dt > 0.0 {
+                f.remaining_s -= dt / n;
+            }
+            f.updated_s = now_s;
+        }
+    }
+
+    /// A new transfer of `solo_s` uncontended seconds starts on
+    /// `(node, link)` at `now_s`.  `nominal_end_s` is the engine's exact
+    /// flat-fold completion time, honored verbatim iff the flow has the
+    /// link to itself.  Returns the joiner's scheduled end plus a
+    /// [`Retime`] for every displaced neighbor.
+    pub fn join(
+        &mut self,
+        node: usize,
+        link: LinkKind,
+        batch: u64,
+        solo_s: f64,
+        nominal_end_s: f64,
+        now_s: f64,
+    ) -> (f64, Vec<Retime>) {
+        let flows = &mut self.links[Self::slot(node, link)];
+        debug_assert!(
+            !flows.iter().any(|f| f.batch == batch),
+            "batch {batch} joined {link:?} twice"
+        );
+        Self::drain(flows, now_s);
+        let alone = flows.is_empty();
+        for f in flows.iter_mut() {
+            f.nominal_end_s = None; // contended from this instant on
+        }
+        flows.push(FlowEntry {
+            batch,
+            remaining_s: solo_s,
+            updated_s: now_s,
+            nominal_end_s: if alone { Some(nominal_end_s) } else { None },
+            scheduled_end_s: 0.0,
+        });
+        let n = flows.len() as f64;
+        let mut my_end = 0.0;
+        let mut retimes = Vec::with_capacity(flows.len() - 1);
+        for f in flows.iter_mut() {
+            let end = match f.nominal_end_s {
+                Some(e) => e,
+                None => now_s + f.remaining_s.max(0.0) * n,
+            };
+            f.scheduled_end_s = end;
+            if f.batch == batch {
+                my_end = end;
+            } else {
+                retimes.push(Retime { batch: f.batch, end_s: end });
+            }
+        }
+        (my_end, retimes)
+    }
+
+    /// The scheduled completion event of `batch` fired: remove it (without
+    /// recomputing its own remaining — see module docs) and re-time the
+    /// survivors at their fatter share.  Returns whether the finished flow
+    /// was still on its nominal (never-contended) schedule, plus the
+    /// survivors' retimes.
+    pub fn finish(
+        &mut self,
+        node: usize,
+        link: LinkKind,
+        batch: u64,
+        now_s: f64,
+    ) -> (bool, Vec<Retime>) {
+        let flows = &mut self.links[Self::slot(node, link)];
+        Self::drain(flows, now_s);
+        let pos = flows
+            .iter()
+            .position(|f| f.batch == batch)
+            .unwrap_or_else(|| panic!("finish of unknown flow: batch {batch} on {link:?}"));
+        let was_nominal = flows[pos].nominal_end_s.is_some();
+        flows.remove(pos);
+        let n = flows.len() as f64;
+        let mut retimes = Vec::with_capacity(flows.len());
+        for f in flows.iter_mut() {
+            // Survivors coexisted with the finisher, so their nominal
+            // schedule is long gone.
+            let end = now_s + f.remaining_s.max(0.0) * n;
+            f.scheduled_end_s = end;
+            retimes.push(Retime { batch: f.batch, end_s: end });
+        }
+        (was_nominal, retimes)
+    }
+
+    /// Structural invariants, `Cluster::check_index` style.  `now_s` is
+    /// the engine clock: no flow may be scheduled in the past, drained
+    /// into the future, or carry more than rounding-level negative work.
+    pub fn check(&self, now_s: f64) {
+        for (node, link, f) in self.iter() {
+            assert!(
+                f.updated_s <= now_s,
+                "flow {} on node{node} {link:?} drained into the future",
+                f.batch
+            );
+            assert!(
+                f.scheduled_end_s >= now_s,
+                "flow {} on node{node} {link:?} scheduled in the past \
+                 ({} < {now_s})",
+                f.batch,
+                f.scheduled_end_s
+            );
+            assert!(
+                f.remaining_s > -1e-9,
+                "flow {} on node{node} {link:?} has {} solo-seconds left",
+                f.batch,
+                f.remaining_s
+            );
+            if let Some(nominal) = f.nominal_end_s {
+                assert_eq!(
+                    self.active(node, link),
+                    1,
+                    "nominal flow {} is sharing its link",
+                    f.batch
+                );
+                assert_eq!(
+                    nominal.to_bits(),
+                    f.scheduled_end_s.to_bits(),
+                    "nominal flow {} not scheduled at its nominal end",
+                    f.batch
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- oracle
+
+/// Brute-force re-integration of bandwidth shares from an op history —
+/// the test oracle.  Structurally independent of [`FlowNet`]'s
+/// incremental state: it recounts link membership per epoch from the
+/// history and re-derives every drain, but uses the same left-to-right
+/// subtraction chain, so agreement must be bit-exact.
+#[cfg(test)]
+pub mod oracle {
+    use super::*;
+
+    #[derive(Debug, Clone, Copy)]
+    pub enum Op {
+        Join { node: usize, link: LinkKind, batch: u64, solo_s: f64, nominal_end_s: f64 },
+        Finish { node: usize, link: LinkKind, batch: u64 },
+    }
+
+    /// One history record: the op and the time it was applied.
+    pub type Record = (f64, Op);
+
+    /// Integrate the share history of `batch` on its link and return
+    /// `(remaining_solo_s, expected_end_s, epochs)`.  For a finished flow
+    /// the end is its `Finish` record's time; for an in-flight flow it is
+    /// the completion the scheduler must currently have on the books —
+    /// computed, like the scheduler does, *at the flow's last membership
+    /// change* (never-contended flows keep their nominal end verbatim).
+    /// `epochs` is the `(dt, n)` list the flow lived through — its
+    /// drains.  Panics if the batch never joined.
+    pub fn integrate(history: &[Record], batch: u64) -> (f64, f64, Vec<(f64, f64)>) {
+        // Locate the join.
+        let (join_idx, join_t, node, link, solo, nominal) = history
+            .iter()
+            .enumerate()
+            .find_map(|(i, (t, op))| match *op {
+                Op::Join { node, link, batch: b, solo_s, nominal_end_s } if b == batch => {
+                    Some((i, *t, node, link, solo_s, nominal_end_s))
+                }
+                _ => None,
+            })
+            .expect("oracle: batch never joined");
+
+        // Membership of the link at join time (before the join applies):
+        // replay all earlier ops.
+        let mut members: Vec<u64> = Vec::new();
+        for (_, op) in &history[..join_idx] {
+            match *op {
+                Op::Join { node: n, link: l, batch: b, .. } if (n, l) == (node, link) => {
+                    members.push(b)
+                }
+                Op::Finish { node: n, link: l, batch: b } if (n, l) == (node, link) => {
+                    members.retain(|m| *m != b)
+                }
+                _ => {}
+            }
+        }
+        let never_shared_at_join = members.is_empty();
+        members.push(batch);
+
+        // Walk epochs: every subsequent membership change on this link
+        // closes an epoch of width dt shared n ways.
+        let mut remaining = solo;
+        let mut epochs: Vec<(f64, f64)> = Vec::new();
+        let mut last_t = join_t;
+        let mut contended = !never_shared_at_join;
+        for (t, op) in &history[join_idx + 1..] {
+            let relevant = match *op {
+                Op::Join { node: n, link: l, .. } | Op::Finish { node: n, link: l, .. } => {
+                    (n, l) == (node, link)
+                }
+            };
+            if !relevant {
+                continue;
+            }
+            let n = members.len() as f64;
+            let dt = *t - last_t;
+            if dt > 0.0 {
+                remaining -= dt / n;
+                epochs.push((dt, n));
+            }
+            last_t = *t;
+            match *op {
+                Op::Join { batch: b, .. } => {
+                    members.push(b);
+                    contended = true;
+                }
+                Op::Finish { batch: b, .. } => {
+                    if b == batch {
+                        // The flow's own completion: its end is this t.
+                        return (remaining, *t, epochs);
+                    }
+                    members.retain(|m| *m != b);
+                }
+            }
+        }
+        // Still in flight: the scheduled end was last computed at
+        // `last_t` with the membership of that instant.
+        let n = members.len() as f64;
+        let end = if !contended { nominal } else { last_t + remaining.max(0.0) * n };
+        (remaining, end, epochs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::oracle::{integrate, Op, Record};
+    use super::*;
+
+    const NIC: LinkKind = LinkKind::Nic;
+    const NVME: LinkKind = LinkKind::Nvme;
+
+    #[test]
+    fn solo_flow_completes_at_the_nominal_end_verbatim() {
+        let mut net = FlowNet::new(2);
+        // The engine computes nominal ends by a *prefix-sum* fold
+        // ((10 + a) + b), which can differ by an ulp from the
+        // `now + solo` chain (10 + (a + b)) the contended path would use
+        // — the nominal must be honored verbatim, not re-derived.
+        let nominal = 10.0 + 13.5f64 / 5.0 + 4.0;
+        let (end, retimes) = net.join(1, NVME, 7, 13.5 / 5.0 + 4.0, nominal, 10.0);
+        assert_eq!(end.to_bits(), nominal.to_bits());
+        assert!(retimes.is_empty());
+        net.check(10.0);
+        let (was_nominal, retimes) = net.finish(1, NVME, 7, end);
+        assert!(was_nominal && retimes.is_empty());
+        assert_eq!(net.total_active(), 0);
+    }
+
+    #[test]
+    fn two_flows_halve_the_link_and_retimes_stretch_them() {
+        let mut net = FlowNet::new(1);
+        let (e1, _) = net.join(0, NIC, 1, 10.0, 10.0, 0.0);
+        assert_eq!(e1, 10.0);
+        // Second flow joins at t=4: flow 1 has 6 solo-seconds left, now
+        // at half bandwidth → ends at 4 + 6*2 = 16.  Joiner: 4 + 8*2 = 20.
+        let (e2, retimes) = net.join(0, NIC, 2, 8.0, 12.0, 4.0);
+        assert_eq!(e2, 20.0);
+        assert_eq!(retimes, vec![Retime { batch: 1, end_s: 16.0 }]);
+        net.check(4.0);
+        // Flow 1 finishes at 16; flow 2 drained 12/2 = 6 of its 8, so it
+        // runs solo from 16 with 2 left → 18.
+        let (was_nominal, retimes) = net.finish(0, NIC, 1, 16.0);
+        assert!(!was_nominal);
+        assert_eq!(retimes, vec![Retime { batch: 2, end_s: 18.0 }]);
+        net.check(16.0);
+        let (was_nominal, _) = net.finish(0, NIC, 2, 18.0);
+        assert!(!was_nominal); // it shared its link once — never nominal again
+    }
+
+    #[test]
+    fn links_and_nodes_are_independent() {
+        let mut net = FlowNet::new(2);
+        let (e1, r1) = net.join(0, NIC, 1, 5.0, 5.0, 0.0);
+        let (e2, r2) = net.join(0, NVME, 2, 5.0, 5.0, 0.0);
+        let (e3, r3) = net.join(1, NIC, 3, 5.0, 5.0, 0.0);
+        // Three solo flows: same wall times, no cross-talk.
+        assert_eq!((e1, e2, e3), (5.0, 5.0, 5.0));
+        assert!(r1.is_empty() && r2.is_empty() && r3.is_empty());
+        assert_eq!(net.active(0, NIC), 1);
+        assert_eq!(net.total_active(), 3);
+        net.check(0.0);
+    }
+
+    #[test]
+    fn same_tick_join_and_finish_do_not_perturb_neighbors() {
+        let mut net = FlowNet::new(1);
+        net.join(0, NIC, 1, 10.0, 10.0, 0.0);
+        net.join(0, NIC, 2, 10.0, 10.0, 0.0); // both end at 20
+        // At t=20 flow 1's event fires first (lower seq).  Its same-tick
+        // finish drains flow 2 by exactly dt/2 with dt computed from the
+        // *previous* drain point: 20/2 = 10 → remaining exactly 0.
+        let (_, retimes) = net.finish(0, NIC, 1, 20.0);
+        assert_eq!(retimes, vec![Retime { batch: 2, end_s: 20.0 }]);
+        // A same-tick join at 20 must not shift flow 2's (zero) remainder.
+        let (_, retimes) = net.join(0, NIC, 3, 4.0, 24.0, 20.0);
+        assert_eq!(retimes, vec![Retime { batch: 2, end_s: 20.0 }]);
+        net.check(20.0);
+        let (_, retimes) = net.finish(0, NIC, 2, 20.0);
+        // Flow 3 alone again: 20 + 4*1 = 24, recomputed (not nominal).
+        assert_eq!(retimes, vec![Retime { batch: 3, end_s: 24.0 }]);
+        let (was_nominal, _) = net.finish(0, NIC, 3, 24.0);
+        assert!(!was_nominal);
+        assert_eq!(net.total_active(), 0);
+    }
+
+    #[test]
+    fn four_way_contention_stretches_each_flow_toward_4x() {
+        let mut net = FlowNet::new(1);
+        let mut ends = Vec::new();
+        for b in 0..4u64 {
+            let (end, _) = net.join(0, NVME, b, 10.0, 10.0, 0.0);
+            ends.push(end);
+        }
+        // All four join at t=0: each sees 10 * n at its own join time.
+        assert_eq!(ends, vec![10.0, 20.0, 30.0, 40.0]);
+        // The last join leaves every flow scheduled at 0 + 10*4 = 40.
+        for b in 0..4u64 {
+            assert_eq!(net.scheduled_end(0, NVME, b), Some(40.0));
+        }
+        net.check(0.0);
+    }
+
+    /// Deterministic xorshift for the property tests (no external rng).
+    struct Lcg(u64);
+    impl Lcg {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+        fn f01(&mut self) -> f64 {
+            (self.next() >> 11) as f64 / (1u64 << 53) as f64
+        }
+        fn below(&mut self, n: u64) -> u64 {
+            self.next() % n
+        }
+    }
+
+    /// Randomized mini-DES: flows arrive on random (node, link) pairs;
+    /// completions fire in (t, insertion) order.  Every completion and
+    /// every in-flight schedule must match the oracle's re-integration of
+    /// the recorded history bit-for-bit, and every completed flow must
+    /// have drained exactly its solo work (byte conservation).
+    #[test]
+    fn random_histories_match_oracle_bitwise_and_conserve_bytes() {
+        for seed in [1u64, 7, 23] {
+            let mut rng = Lcg(seed);
+            let nodes = 2usize;
+            let mut net = FlowNet::new(nodes);
+            let mut history: Vec<Record> = Vec::new();
+
+            // Pending arrivals, pre-sorted by time.
+            let mut arrivals: Vec<(f64, usize, LinkKind, u64, f64)> = (0..40u64)
+                .map(|b| {
+                    let t = rng.f01() * 50.0;
+                    let node = rng.below(nodes as u64) as usize;
+                    let link = LinkKind::ALL[rng.below(3) as usize];
+                    let solo = 0.5 + rng.f01() * 9.5;
+                    (t, node, link, b, solo)
+                })
+                .collect();
+            arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.3.cmp(&b.3)));
+            arrivals.reverse(); // pop() takes the earliest
+
+            // Active completions: (end_s, seq, node, link, batch).  Linear
+            // scan for the minimum keeps (t, seq) ordering explicit.
+            let mut active: Vec<(f64, u64, usize, LinkKind, u64)> = Vec::new();
+            let mut seq = 0u64;
+            let mut solo_of = std::collections::BTreeMap::new();
+            let mut completions = 0u64;
+
+            loop {
+                let next_arrival = arrivals.last().map(|a| a.0);
+                let next_done = active
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0).then(a.1 .1.cmp(&b.1 .1)))
+                    .map(|(i, c)| (i, *c));
+                let (t, is_arrival) = match (next_arrival, next_done) {
+                    (None, None) => break,
+                    (Some(ta), None) => (ta, true),
+                    (None, Some((_, c))) => (c.0, false),
+                    // Arrival and completion at the same instant: the
+                    // completion event was pushed first, so it fires first.
+                    (Some(ta), Some((_, c))) => {
+                        if ta < c.0 {
+                            (ta, true)
+                        } else {
+                            (c.0, false)
+                        }
+                    }
+                };
+
+                if is_arrival {
+                    let (t, node, link, batch, solo) = arrivals.pop().unwrap();
+                    let nominal = t + solo;
+                    history.push((t, Op::Join { node, link, batch, solo_s: solo, nominal_end_s: nominal }));
+                    let (end, retimes) = net.join(node, link, batch, solo, nominal, t);
+                    solo_of.insert(batch, solo);
+                    active.push((end, seq, node, link, batch));
+                    seq += 1;
+                    for r in retimes {
+                        let slot =
+                            active.iter_mut().find(|c| c.4 == r.batch).expect("retime target");
+                        slot.0 = r.end_s;
+                        slot.1 = seq; // cancel + repush ⇒ fresh, later seq
+                        seq += 1;
+                    }
+                } else {
+                    let (idx, (end, _, node, link, batch)) = next_done.unwrap();
+                    active.swap_remove(idx);
+
+                    // Oracle check BEFORE applying the finish: predicted
+                    // end of this flow from history alone.
+                    let (remaining, predicted, epochs) = integrate(&history, batch);
+                    assert_eq!(
+                        predicted.to_bits(),
+                        end.to_bits(),
+                        "seed {seed}: batch {batch} end mismatch"
+                    );
+                    // Byte conservation: drains + terminal remainder make
+                    // up exactly the solo work (terminal remainder is the
+                    // sub-ulp scheduling clamp residue).
+                    let drained: f64 = epochs.iter().map(|(dt, n)| dt / n).sum();
+                    let solo = solo_of[&batch];
+                    assert!(
+                        (drained - solo).abs() <= 1e-9 * solo.max(1.0) + remaining.abs(),
+                        "seed {seed}: batch {batch} leaked bytes: drained {drained} of {solo}"
+                    );
+
+                    history.push((end, Op::Finish { node, link, batch }));
+                    let (_, retimes) = net.finish(node, link, batch, end);
+                    completions += 1;
+                    for r in retimes {
+                        let slot =
+                            active.iter_mut().find(|c| c.4 == r.batch).expect("retime target");
+                        slot.0 = r.end_s;
+                        slot.1 = seq;
+                        seq += 1;
+                    }
+                }
+
+                net.check(t);
+                // Every in-flight flow's incremental schedule must equal
+                // the oracle's re-integration at this instant.
+                for &(end, _, node, link, batch) in &active {
+                    let (_, predicted, _) = integrate(&history, batch);
+                    assert_eq!(
+                        predicted.to_bits(),
+                        end.to_bits(),
+                        "seed {seed}: batch {batch} schedule drifted from oracle"
+                    );
+                    assert_eq!(net.scheduled_end(node, link, batch), Some(end));
+                }
+            }
+
+            assert_eq!(completions, 40, "seed {seed}: lost flows");
+            assert_eq!(net.total_active(), 0);
+        }
+    }
+}

@@ -12,13 +12,15 @@ pub mod dispatch;
 pub mod engine;
 pub mod events;
 pub mod exec;
+pub mod flow;
 pub mod observe;
 pub mod sharded;
 pub mod workloads;
 
 pub use billing::BillClass;
-pub use config::{BatchingMode, PreloadMode, SystemConfig};
+pub use config::{BatchingMode, CacheMode, PreloadMode, SystemConfig, TierSpec};
+pub use flow::{FlowNet, Retime};
 pub use engine::{Engine, RunStats, Workload};
 pub use events::{Event, EventKind, EventQueue, EventToken};
 pub use exec::GpuExec;
-pub use observe::{BillSeries, BillSeriesSampler, BilledCost, Observer, RunOutput};
+pub use observe::{BillSeries, BillSeriesSampler, BilledCost, Observer, RunOutput, TraceExport};

@@ -254,6 +254,123 @@ impl Observer for BillSeriesSampler {
     }
 }
 
+// ---------------------------------------------------------- trace export
+
+/// Per-request trace exporter: buffers every [`RequestOutcome`] and
+/// writes one file at `on_finish` — CSV (fixed columns, one row per
+/// request, completion order) or JSON (a top-level array of objects).
+/// Pure observer: it only ever clones borrowed outcomes, so enabling it
+/// cannot perturb metrics or cost by a single bit. A failed write is
+/// reported on stderr (observers have no error channel) and the run's
+/// in-memory results are unaffected.
+pub struct TraceExport {
+    path: String,
+    json: bool,
+    rows: Vec<RequestOutcome>,
+}
+
+impl TraceExport {
+    pub fn csv(path: &str) -> Self {
+        TraceExport { path: path.to_string(), json: false, rows: Vec::new() }
+    }
+
+    pub fn json(path: &str) -> Self {
+        TraceExport { path: path.to_string(), json: true, rows: Vec::new() }
+    }
+
+    /// The CSV column set, in order: identity, latencies, then one
+    /// `<phase>_s` column per [`Phase`] (zero when absent).
+    pub fn csv_header() -> String {
+        let mut cols = vec![
+            "id".to_string(),
+            "function".to_string(),
+            "arrival_s".to_string(),
+            "ttft_s".to_string(),
+            "e2e_s".to_string(),
+            "tpot_s".to_string(),
+            "output_tokens".to_string(),
+            "batch_size".to_string(),
+            "cold_start_s".to_string(),
+            "backbone_tier".to_string(),
+        ];
+        cols.extend(
+            crate::metrics::Phase::ALL
+                .iter()
+                .map(|p| format!("{}_s", p.name().replace('-', "_"))),
+        );
+        cols.join(",")
+    }
+
+    /// Render the buffered rows to the selected format (also the unit
+    /// tests' seam — rendering is deterministic, file I/O is not).
+    pub fn render(&self) -> String {
+        if self.json {
+            return arr(self.rows.iter().map(|o| {
+                let mut fields = vec![
+                    ("id", num(o.id as f64)),
+                    ("function", num(o.function as f64)),
+                    ("arrival_s", num(o.arrival_s)),
+                    ("ttft_s", num(o.ttft_s)),
+                    ("e2e_s", num(o.e2e_s)),
+                    ("tpot_s", num(o.tpot_s)),
+                    ("output_tokens", num(o.output_tokens as f64)),
+                    ("batch_size", num(o.batch_size as f64)),
+                    ("cold_start_s", num(o.cold_start_s())),
+                ];
+                if let Some(t) = o.backbone_tier {
+                    fields.push(("backbone_tier", crate::util::json::s(t.name())));
+                }
+                fields.push((
+                    "phases",
+                    Json::Obj(
+                        o.phases
+                            .iter()
+                            .map(|(p, &d)| (p.name().to_string(), num(d)))
+                            .collect(),
+                    ),
+                ));
+                obj(fields)
+            }))
+            .dump();
+        }
+        let mut out = Self::csv_header();
+        out.push('\n');
+        for o in &self.rows {
+            let tier = o.backbone_tier.map(|t| t.name()).unwrap_or("");
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{}",
+                o.id,
+                o.function,
+                o.arrival_s,
+                o.ttft_s,
+                o.e2e_s,
+                o.tpot_s,
+                o.output_tokens,
+                o.batch_size,
+                o.cold_start_s(),
+                tier
+            ));
+            for p in crate::metrics::Phase::ALL {
+                out.push_str(&format!(",{}", o.phases.get(&p).copied().unwrap_or(0.0)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+impl Observer for TraceExport {
+    fn on_request_complete(&mut self, _t_s: f64, outcome: &RequestOutcome) {
+        self.rows.push(outcome.clone());
+    }
+
+    fn on_finish(&mut self, _end_s: f64) {
+        if let Err(e) = std::fs::write(&self.path, self.render()) {
+            eprintln!("request-trace export to '{}' failed: {e}", self.path);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -344,6 +461,7 @@ mod tests {
             e2e_s: 2.0,
             output_tokens: 10,
             batch_size: 1,
+            backbone_tier: None,
         };
         Observer::on_request_complete(&mut m, 3.0, &o);
         assert_eq!(m.outcomes.len(), 1);
