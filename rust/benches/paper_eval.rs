@@ -68,6 +68,7 @@ fn main() {
     let t_all = Instant::now();
     let ran_fleet = ids.contains(&"fleet");
     let ran_tiers = ids.contains(&"tiers");
+    let ran_faults = ids.contains(&"faults");
     let mut records: Vec<Json> = Vec::new();
     for id in ids {
         let t0 = Instant::now();
@@ -103,6 +104,12 @@ fn main() {
         // link re-time counts, tracked across PRs. Reuses the sweep's
         // measurement — no extra simulation.
         fields.push(("tiers", exp::tiers::tiers_json(!full)));
+    }
+    if ran_faults {
+        // Fault-injection record (fast-failure reference cell): goodput,
+        // TTFT degradation and recovery counters, tracked across PRs.
+        // Reuses the sweep's measurement — no extra simulation.
+        fields.push(("faults", exp::faults::faults_json(!full)));
     }
     let doc = obj(fields);
     let path = "BENCH_sim.json";

@@ -181,6 +181,10 @@ pub struct Cluster {
     /// aggregates drain this once per event — the two must not steal
     /// each other's marks.
     bill_dirty: Vec<GpuId>,
+    /// GPUs currently down (fault injection). Empty unless faults are
+    /// enabled, so health checks on the routing hot paths are one
+    /// `is_empty()` when the subsystem is off.
+    down: BTreeSet<GpuId>,
 }
 
 impl Cluster {
@@ -192,6 +196,7 @@ impl Cluster {
                 .collect(),
             index: RefCell::new(ClusterIndex::default()),
             bill_dirty: Vec::new(),
+            down: BTreeSet::new(),
         }
     }
 
@@ -301,6 +306,31 @@ impl Cluster {
                 g.clear_res_log();
             }
         }
+    }
+
+    // ------------------------------------------------------- health state
+
+    /// Is this GPU up?  Routing, replication, and staging policies must
+    /// skip down GPUs; with faults off the set is empty and this is a
+    /// single branch.
+    pub fn gpu_is_up(&self, id: GpuId) -> bool {
+        self.down.is_empty() || !self.down.contains(&id)
+    }
+
+    /// Flip a GPU's health (fault injection only). The caller (engine
+    /// crash/recover handlers) is responsible for killing batches and
+    /// invalidating residency on the way down.
+    pub fn set_gpu_health(&mut self, id: GpuId, up: bool) {
+        if up {
+            self.down.remove(&id);
+        } else {
+            self.down.insert(id);
+        }
+    }
+
+    /// Number of GPUs currently down.
+    pub fn n_down(&self) -> usize {
+        self.down.len()
     }
 
     pub fn gpus(&self) -> impl Iterator<Item = &Gpu> {
@@ -635,6 +665,21 @@ mod tests {
         c.gpu_mut(ids[1]).create_cuda_context(5).unwrap();
         c.clear_res_logs();
         assert!(c.gpu(ids[1]).res_log().is_empty());
+    }
+
+    #[test]
+    fn health_state_flips_and_defaults_up() {
+        let mut c = Cluster::new(1, 2, 1);
+        let ids = c.gpu_ids();
+        assert!(ids.iter().all(|&g| c.gpu_is_up(g)));
+        assert_eq!(c.n_down(), 0);
+        c.set_gpu_health(ids[0], false);
+        assert!(!c.gpu_is_up(ids[0]));
+        assert!(c.gpu_is_up(ids[1]));
+        assert_eq!(c.n_down(), 1);
+        c.set_gpu_health(ids[0], true);
+        assert!(c.gpu_is_up(ids[0]));
+        assert_eq!(c.n_down(), 0);
     }
 
     #[test]

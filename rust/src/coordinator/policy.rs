@@ -1456,4 +1456,73 @@ mod tests {
         assert_eq!(p.admit(&mut cache, "mid", 4.0, 6.0), 1);
         assert!(!cache.contains("tiny") && cache.contains("mid"));
     }
+
+    /// A GPU crash takes the whole node's worker process down, so
+    /// `Engine::invalidate_gpu` clears the host cache *around* the
+    /// policy: even pin-hot-pinned entries go. The policy must survive
+    /// that external invalidation — the pin state lives in the evicted
+    /// entries, so a re-admitted checkpoint starts cold (unpinned).
+    #[test]
+    fn pin_hot_survives_crash_invalidation() {
+        let mut cache = HostCache::new(30.0);
+        let mut p = PinHotCache { pin_uses: 3 };
+        p.admit(&mut cache, "hot", 26.0, 1.0);
+        p.on_hit(&mut cache, "hot", 2.0);
+        p.on_hit(&mut cache, "hot", 3.0); // pinned
+        p.admit(&mut cache, "cold", 2.0, 4.0);
+
+        // Crash: the engine evicts every entry directly through the
+        // ledger, pinned or not (exactly what invalidate_gpu does).
+        let staged: Vec<&'static str> = cache.entries().map(|(m, _)| m).collect();
+        for m in staged {
+            assert!(cache.remove(m), "entry listed but not removable");
+        }
+        assert!(cache.is_empty(), "invalidation must clear the node cache");
+        assert_eq!(cache.used_gb(), 0.0, "capacity accounting must return to zero");
+        assert_eq!(cache.free_gb(), cache.capacity_gb);
+
+        // Admit-after-invalidate: the tier works again immediately, and
+        // the re-admitted former pin is back to one use — evictable.
+        assert_eq!(p.admit(&mut cache, "hot", 26.0, 5.0), 0);
+        assert_eq!(cache.get("hot").unwrap().uses, 1, "pin state must not survive");
+        assert_eq!(p.admit(&mut cache, "newcomer", 13.5, 6.0), 1);
+        assert!(!cache.contains("hot"), "an unpinned re-admission is a valid victim");
+        assert!(cache.contains("newcomer"));
+        assert!(
+            cache.used_gb() <= cache.capacity_gb + 1e-9,
+            "occupancy must stay within capacity across invalidate + re-admit"
+        );
+    }
+
+    /// Capacity accounting is conserved through interleaved admissions,
+    /// policy evictions, and external (crash-style) removals: occupancy
+    /// always equals the sum of the surviving entries and never exceeds
+    /// capacity.
+    #[test]
+    fn cache_capacity_conserved_under_mixed_eviction() {
+        let mut cache = HostCache::new(40.0);
+        let mut p = PinHotCache { pin_uses: 2 };
+        let check = |cache: &HostCache| {
+            let sum: f64 = cache.entries().map(|(_, e)| e.size_gb).sum();
+            assert!((cache.used_gb() - sum).abs() < 1e-12, "ledger drifted");
+            assert!(cache.used_gb() <= cache.capacity_gb + 1e-9, "over capacity");
+            assert!((cache.free_gb() - (cache.capacity_gb - sum).max(0.0)).abs() < 1e-12);
+        };
+        p.admit(&mut cache, "a", 13.5, 1.0);
+        p.on_hit(&mut cache, "a", 2.0); // pinned at 2 uses
+        p.admit(&mut cache, "b", 13.5, 3.0);
+        p.admit(&mut cache, "c", 13.0, 4.0);
+        check(&cache);
+        // Policy eviction to make room ("b"/"c" unpinned, "a" safe).
+        let evicted = p.admit(&mut cache, "d", 20.0, 5.0);
+        assert!(evicted > 0 && cache.contains("a"));
+        check(&cache);
+        // External removal mid-stream (a crash on the node).
+        assert!(cache.remove("a"));
+        check(&cache);
+        // The freed pinned bytes are immediately admittable.
+        let just_fits = cache.free_gb() - 0.5;
+        assert_eq!(p.admit(&mut cache, "e", just_fits, 6.0), 0);
+        check(&cache);
+    }
 }

@@ -96,8 +96,11 @@ impl Router {
             // Per-model shard: score only the host set. Ties keep the
             // historical full scan's last-max-wins in host-list order
             // (hosts are in registry insertion order, not id order).
+            // Down GPUs (fault injection) are skipped; with faults off
+            // the filter passes everything and the fold is unchanged.
             hosts
                 .iter()
+                .filter(|&&g| cluster.gpu_is_up(g))
                 .fold(None::<(u64, GpuId)>, |acc, &g| {
                     let s = Self::key(cluster, spec, kv_need, g).0;
                     match acc {
@@ -106,6 +109,9 @@ impl Router {
                     }
                 })
                 .map(|(_, g)| g)
+                // Every host down: fall back to the cold path rather
+                // than declaring the model unroutable until repair.
+                .or_else(|| Self::route_cold(cluster, spec, kv_need))
         }?;
         let readiness = Self::readiness(cluster, spec, best);
         let headroom = (cluster.gpu(best).free_gb()
@@ -123,10 +129,16 @@ impl Router {
         let resident = cluster.gpus_with_function(spec.id);
         let mut best: Option<(u64, GpuId)> = None;
         for &g in &resident {
+            if !cluster.gpu_is_up(g) {
+                continue; // down GPUs are not candidates
+            }
             best = best.max(Some(Self::key(cluster, spec, kv_need, g)));
         }
         let mut cold: Option<(u64, GpuId)> = None;
         cluster.scan_free_desc(|g, free| {
+            if !cluster.gpu_is_up(g) {
+                return false; // down GPUs are not candidates
+            }
             if resident.contains(&g) {
                 return false; // already scored with its warmth
             }
@@ -215,6 +227,24 @@ mod tests {
         let route = Router::route(&c, &r, &spec(0), 1).unwrap();
         assert_eq!(route.gpu, warm, "warm artifacts beat a colder, freer GPU");
         assert!(route.readiness.adapter_on_gpu && route.readiness.kernel_on_gpu);
+    }
+
+    #[test]
+    fn down_gpus_are_never_routed_to() {
+        let mut c = Cluster::new(1, 2, 2);
+        let mut r = BackboneRegistry::new();
+        let [g0, g1] = [c.gpu_ids()[0], c.gpu_ids()[1]];
+        // A warm backbone host would normally win; take it down.
+        r.load(&mut c, "llama2-7b", 13.5, g1).unwrap();
+        c.set_gpu_health(g1, false);
+        let route = Router::route(&c, &r, &spec(0), 1).unwrap();
+        assert_eq!(route.gpu, g0, "host down: cold fallback routes elsewhere");
+        // Whole cluster down: nothing is routable.
+        c.set_gpu_health(g0, false);
+        assert!(Router::route(&c, &r, &spec(0), 1).is_none());
+        // Recovery restores candidacy (and the warm host wins again).
+        c.set_gpu_health(g1, true);
+        assert_eq!(Router::route(&c, &r, &spec(0), 1).unwrap().gpu, g1);
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! Fault-injection experiment (`faults`): sweep GPU failure rate (MTBF)
+//! × repair time (MTTR) and report goodput, permanent failures, and the
+//! TTFT degradation against a fault-free reference run of the same
+//! workload.
+//!
+//! Each grid cell runs the flagship system with the deterministic fault
+//! injector enabled (`sim::fault`) over several engine seeds; the
+//! multi-seed runs are collapsed to mean ± 95% CI via
+//! `scenario::summarize`, so the table shows how tight the fault model's
+//! effect is across seeds, not just a single draw. Crashes kill in-flight
+//! batches (their requests re-dispatch), transient load failures burn
+//! bounded-backoff retries, and requests that exhaust the retry budget
+//! or their deadline fail permanently — goodput is the fraction that
+//! still completed.
+
+use std::sync::Mutex;
+
+use crate::scenario::{self, ClusterSpec, MetricSummary, ScenarioSpec, WorkloadSpec};
+use crate::sim::{FaultSpec, RetrySpec};
+use crate::trace::Pattern;
+use crate::util::json::{num, obj, Json};
+use crate::util::table::Table;
+
+/// Most recent measurement of the reference cell (fastest failure rate,
+/// slowest repair), reused by `faults_json` (the BENCH_sim.json record)
+/// when the sweep already ran in this process.
+static LAST_REFERENCE: Mutex<Option<FaultPoint>> = Mutex::new(None);
+
+/// One measured grid cell: a multi-seed summary plus the fault-path
+/// counters summed across seeds.
+#[derive(Clone)]
+pub struct FaultPoint {
+    pub mtbf_s: f64,
+    pub mttr_s: f64,
+    pub requests: usize,
+    pub goodput: MetricSummary,
+    pub failed: MetricSummary,
+    pub ttft_ms: MetricSummary,
+    /// Fault-free reference TTFT (same workload/cluster/seeds).
+    pub ttft_ref_ms: MetricSummary,
+    pub crashes: u64,
+    pub recoveries: u64,
+    pub redispatched: u64,
+    pub load_failures: u64,
+    pub retries: u64,
+}
+
+impl FaultPoint {
+    /// Mean TTFT degradation factor vs the fault-free reference.
+    pub fn ttft_degradation(&self) -> f64 {
+        self.ttft_ms.mean / self.ttft_ref_ms.mean.max(1e-12)
+    }
+}
+
+/// Mean-time-between-failures values swept (seconds per GPU).
+pub fn mtbfs(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![300.0, 1200.0]
+    } else {
+        vec![150.0, 300.0, 1200.0]
+    }
+}
+
+/// Mean-time-to-repair values swept (seconds).
+pub fn mttrs(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![15.0, 60.0]
+    } else {
+        vec![15.0, 60.0, 180.0]
+    }
+}
+
+fn seeds(quick: bool) -> Vec<u64> {
+    if quick {
+        vec![1, 7, 23]
+    } else {
+        vec![1, 7, 23, 42, 101]
+    }
+}
+
+fn horizon(quick: bool) -> f64 {
+    if quick {
+        600.0
+    } else {
+        1800.0
+    }
+}
+
+/// The sweep's fault shape at one (MTBF, MTTR) point: a 5% transient
+/// load-failure rate rides along so the retry/backoff path is exercised
+/// in every cell, with the default retry policy.
+pub fn fault_spec(mtbf_s: f64, mttr_s: f64) -> FaultSpec {
+    FaultSpec { mtbf_s, mttr_s, load_fail_prob: 0.05, retry: RetrySpec::default() }
+}
+
+/// Build one grid cell. Multi-node so a whole-node invalidation never
+/// takes the only GPU; multi-seed so the summary carries a CI.
+fn cell(faults: Option<FaultSpec>, name: &str, quick: bool) -> ScenarioSpec {
+    let mut b = ScenarioSpec::builder(name)
+        .cluster(ClusterSpec::Uniform {
+            nodes: 2,
+            gpus_per_node: 2,
+            containers_per_node: 4,
+            trim_gpus: None,
+            zones: 1,
+        })
+        .workload(WorkloadSpec::Paper { pattern: Pattern::Bursty, seed: 11 })
+        .horizon_s(horizon(quick))
+        .seeds(seeds(quick));
+    if let Some(f) = faults {
+        b = b.faults(f);
+    }
+    b.build().expect("faults cell validates")
+}
+
+/// Run one (MTBF, MTTR) cell plus its fault-free reference and fold
+/// both into a [`FaultPoint`]. Conservation is asserted per seed:
+/// every offered request either completed or failed by the end.
+pub fn run_point(mtbf_s: f64, mttr_s: f64, quick: bool) -> FaultPoint {
+    let name = format!("faults-mtbf{mtbf_s}-mttr{mttr_s}");
+    let faulty = scenario::run(&cell(Some(fault_spec(mtbf_s, mttr_s)), &name, quick))
+        .expect("faults cell runs");
+    let reference =
+        scenario::run(&cell(None, "faults-reference", quick)).expect("reference cell runs");
+    for run in &faulty.runs {
+        assert_eq!(
+            run.metrics.outcomes.len() + run.metrics.failed as usize,
+            run.requests,
+            "seed {}: requests must be conserved under faults",
+            run.seed
+        );
+    }
+    let sum = scenario::summarize(&faulty);
+    let ref_sum = scenario::summarize(&reference);
+    let tally = |f: fn(&crate::metrics::RunStats) -> u64| {
+        faulty.runs.iter().map(|r| f(&r.stats)).sum::<u64>()
+    };
+    FaultPoint {
+        mtbf_s,
+        mttr_s,
+        requests: sum.requests,
+        goodput: sum.goodput,
+        failed: sum.failed,
+        ttft_ms: sum.ttft_ms,
+        ttft_ref_ms: ref_sum.ttft_ms,
+        crashes: tally(|s| s.gpu_crashes),
+        recoveries: tally(|s| s.gpu_recoveries),
+        redispatched: tally(|s| s.redispatched),
+        load_failures: tally(|s| s.load_failures),
+        retries: tally(|s| s.retries),
+    }
+}
+
+/// The rendered sweep (experiment id `faults`).
+pub fn faults(quick: bool) -> String {
+    let mut t = Table::new(
+        "Fault injection — MTBF × MTTR sweep (mean ± 95% CI across seeds)",
+        &[
+            "MTBF(s)",
+            "MTTR(s)",
+            "requests",
+            "goodput",
+            "failed",
+            "TTFT(ms)",
+            "TTFT ×ref",
+            "crashes",
+            "redisp",
+            "load fails",
+            "retries",
+        ],
+    );
+    let mut reference: Option<FaultPoint> = None;
+    for mtbf_s in mtbfs(quick) {
+        for mttr_s in mttrs(quick) {
+            let p = run_point(mtbf_s, mttr_s, quick);
+            if reference.is_none() {
+                // Fastest failure rate × fastest repair: first cell.
+                reference = Some(p.clone());
+            }
+            t.row(vec![
+                format!("{mtbf_s}"),
+                format!("{mttr_s}"),
+                p.requests.to_string(),
+                p.goodput.cell(3),
+                p.failed.cell(1),
+                p.ttft_ms.cell(1),
+                format!("{:.2}x", p.ttft_degradation()),
+                p.crashes.to_string(),
+                p.redispatched.to_string(),
+                p.load_failures.to_string(),
+                p.retries.to_string(),
+            ]);
+        }
+    }
+    *LAST_REFERENCE.lock().unwrap() = reference;
+    t.render()
+}
+
+/// Machine-readable record of the reference cell (fastest swept failure
+/// rate, fastest repair) for cross-PR tracking in `BENCH_sim.json`.
+/// Reuses the sweep's measurement when a `faults()` run in this process
+/// covered the cell.
+pub fn faults_json(quick: bool) -> Json {
+    let cached = LAST_REFERENCE.lock().unwrap().clone();
+    let p = match cached {
+        Some(p) => p,
+        None => run_point(mtbfs(quick)[0], mttrs(quick)[0], quick),
+    };
+    obj(vec![
+        ("mtbf_s", num(p.mtbf_s)),
+        ("mttr_s", num(p.mttr_s)),
+        ("requests", num(p.requests as f64)),
+        ("goodput", num(p.goodput.mean)),
+        ("failed_mean", num(p.failed.mean)),
+        ("ttft_ms", num(p.ttft_ms.mean)),
+        ("ttft_degradation", num(p.ttft_degradation())),
+        ("gpu_crashes", num(p.crashes as f64)),
+        ("gpu_recoveries", num(p.recoveries as f64)),
+        ("redispatched", num(p.redispatched as f64)),
+        ("load_failures", num(p.load_failures as f64)),
+        ("retries", num(p.retries as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_grow_with_full_mode() {
+        assert!(mtbfs(true).len() < mtbfs(false).len());
+        assert!(mttrs(true).len() < mttrs(false).len());
+        assert!(seeds(true).len() >= 3, "CIs need at least three seeds");
+    }
+
+    #[test]
+    fn point_injects_faults_and_conserves() {
+        // The conservation asserts inside run_point are the test; beyond
+        // them, the fault machinery must have actually fired.
+        let p = run_point(150.0, 30.0, true);
+        assert!(p.requests > 0);
+        assert!(p.crashes > 0, "a 150 s MTBF over 600 s must crash");
+        assert_eq!(p.crashes, p.recoveries, "every crash must repair before the horizon drains");
+        assert!(p.load_failures > 0, "5% load-failure rate must fire");
+        assert!(p.retries > 0, "transient failures must be retried");
+        assert!(
+            p.goodput.mean > 0.0 && p.goodput.mean <= 1.0,
+            "goodput {} out of range",
+            p.goodput.mean
+        );
+        assert!(
+            p.ttft_degradation() >= 0.95,
+            "faults cannot meaningfully improve TTFT: {:.3}x",
+            p.ttft_degradation()
+        );
+    }
+
+    #[test]
+    fn json_record_names_the_tracked_counters() {
+        let j = faults_json(true);
+        for key in [
+            "goodput",
+            "ttft_degradation",
+            "gpu_crashes",
+            "redispatched",
+            "load_failures",
+            "retries",
+        ] {
+            assert!(j.get(key).is_some(), "BENCH record missing '{key}'");
+        }
+    }
+}

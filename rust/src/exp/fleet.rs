@@ -489,9 +489,73 @@ fn check_tiers() -> Result<String, String> {
     Ok(line)
 }
 
+/// Fault-injection leg of the regression guard: run a fast-failure /
+/// quick-repair cell of the `faults` experiment and bound the recovery
+/// counters. Structural envelopes:
+///
+/// * conservation — every offered request completes or fails by the end
+///   (asserted per seed inside `faults::run_point`), and every crash
+///   repairs before the queue drains (`recoveries == crashes`);
+/// * crashes *must* catch work in flight (`redispatched > 0`) — zero
+///   means the crash-kill path silently stopped re-enqueuing victims;
+/// * a transient load failure retries at most once per affected request
+///   per attempt, so `retries / load_failures` is bounded by the largest
+///   batch a single cold load can carry — a blowup means the retry loop
+///   stopped converging.
+fn check_faults() -> Result<String, String> {
+    const MAX_RETRIES_PER_LOAD_FAILURE: f64 = 64.0;
+    let p = super::faults::run_point(150.0, 30.0, true);
+    let retries_per_failure = p.retries as f64 / (p.load_failures as f64).max(1.0);
+    let line = format!(
+        "faults-check mtbf{}/mttr{}: {} requests, {} crashes / {} recoveries, \
+         {} redispatched, {} load failures, {:.2} retries/load-failure \
+         (bound {MAX_RETRIES_PER_LOAD_FAILURE}), goodput {:.3}",
+        p.mtbf_s,
+        p.mttr_s,
+        p.requests,
+        p.crashes,
+        p.recoveries,
+        p.redispatched,
+        p.load_failures,
+        retries_per_failure,
+        p.goodput.mean,
+    );
+    if p.crashes == 0 {
+        return Err(format!(
+            "{line}\n  FAIL: no GPU crashes at a 150 s MTBF — the injector is not firing"
+        ));
+    }
+    if p.recoveries != p.crashes {
+        return Err(format!(
+            "{line}\n  FAIL: {} crashes but {} recoveries — a GPU stayed down",
+            p.crashes, p.recoveries
+        ));
+    }
+    if p.redispatched == 0 {
+        return Err(format!(
+            "{line}\n  FAIL: crashes never re-dispatched in-flight work"
+        ));
+    }
+    if p.load_failures == 0 || p.retries == 0 {
+        return Err(format!(
+            "{line}\n  FAIL: the transient-failure retry path is not engaged"
+        ));
+    }
+    if retries_per_failure > MAX_RETRIES_PER_LOAD_FAILURE {
+        return Err(format!(
+            "{line}\n  FAIL: retry blowup ({retries_per_failure:.2}/load-failure)"
+        ));
+    }
+    if !(p.goodput.mean > 0.0 && p.goodput.mean <= 1.0) {
+        return Err(format!("{line}\n  FAIL: goodput {} out of range", p.goodput.mean));
+    }
+    Ok(line)
+}
+
 /// CI regression guard (`serverless-lora fleet --check`): run the quick
 /// grid and compare the deterministic counters against `QUICK_BOUNDS`,
-/// then bound the tiered-store counters on the `tiers` reference cell.
+/// then bound the tiered-store counters on the `tiers` reference cell
+/// and the recovery counters on a fast-failure `faults` cell.
 pub fn check() -> Result<String, String> {
     let mut out = String::new();
     for b in QUICK_BOUNDS {
@@ -500,6 +564,8 @@ pub fn check() -> Result<String, String> {
         out.push('\n');
     }
     out.push_str(&check_tiers()?);
+    out.push('\n');
+    out.push_str(&check_faults()?);
     out.push('\n');
     out.push_str("fleet-check: all counters within committed bounds\n");
     Ok(out)
@@ -615,6 +681,15 @@ mod tests {
         let line = check_tiers().expect("healthy tiered engine trips the guard");
         assert!(line.contains("retimes/cold-load"));
         assert!(line.contains("cold loads"));
+    }
+
+    #[test]
+    fn faults_leg_of_the_guard_passes() {
+        // The recovery bounds must hold on a healthy engine: crashes
+        // fired and repaired, victims re-dispatched, retries bounded.
+        let line = check_faults().expect("healthy faulty engine trips the guard");
+        assert!(line.contains("retries/load-failure"));
+        assert!(line.contains("redispatched"));
     }
 
     #[test]

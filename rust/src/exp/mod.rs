@@ -17,6 +17,7 @@
 pub mod ablation;
 pub mod breakdown;
 pub mod cost_eff;
+pub mod faults;
 pub mod fleet;
 pub mod latency;
 pub mod overhead;
@@ -105,10 +106,10 @@ pub fn headline_json() -> Json {
 /// All experiment ids: the paper artifacts in paper order, then the
 /// engine-health experiments (`fleet`: cluster-size scaling sweep;
 /// `tiers`: host-cache capacity × burstiness sweep over the tiered
-/// artifact store).
-pub const ALL_EXPERIMENTS: [&str; 16] = [
+/// artifact store; `faults`: MTBF × MTTR fault-injection sweep).
+pub const ALL_EXPERIMENTS: [&str; 17] = [
     "fig1", "fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "tab1", "tab2",
-    "fig10", "tab3", "fig11", "fig12", "overhead", "fleet", "tiers",
+    "fig10", "tab3", "fig11", "fig12", "overhead", "fleet", "tiers", "faults",
 ];
 
 /// Dispatch an experiment by id. Returns the rendered report.
@@ -134,6 +135,7 @@ pub fn run_experiment(id: &str, quick: bool) -> String {
         "overhead" => overhead::report(),
         "fleet" => fleet::fleet(quick),
         "tiers" => tiers::tiers(quick),
+        "faults" => faults::faults(quick),
         other => format!("unknown experiment '{other}'; known: {ALL_EXPERIMENTS:?}\n"),
     }
 }
@@ -160,5 +162,6 @@ mod tests {
         // Engine-health experiments ride the same registry.
         assert!(ALL_EXPERIMENTS.contains(&"fleet"));
         assert!(ALL_EXPERIMENTS.contains(&"tiers"));
+        assert!(ALL_EXPERIMENTS.contains(&"faults"));
     }
 }

@@ -156,6 +156,19 @@ pub struct RunStats {
     pub tier_hits_remote: u64,
     /// Checkpoints evicted from host caches by the cache policy.
     pub cache_evictions: u64,
+    /// Fault injection: GPU crash events fired (0 with faults off).
+    pub gpu_crashes: u64,
+    /// Fault injection: GPU recoveries fired.
+    pub gpu_recoveries: u64,
+    /// Transient cold-load failures injected.
+    pub load_failures: u64,
+    /// Retry wakeups scheduled after transient load failures.
+    pub retries: u64,
+    /// Requests that failed permanently (deadline or retry exhaustion).
+    pub requests_failed: u64,
+    /// Requests re-enqueued because their in-flight batch's GPU crashed
+    /// (no retry budget consumed; deadline still applies).
+    pub redispatched: u64,
 }
 
 impl RunStats {
@@ -186,6 +199,12 @@ impl RunStats {
         self.tier_hits_ssd += o.tier_hits_ssd;
         self.tier_hits_remote += o.tier_hits_remote;
         self.cache_evictions += o.cache_evictions;
+        self.gpu_crashes += o.gpu_crashes;
+        self.gpu_recoveries += o.gpu_recoveries;
+        self.load_failures += o.load_failures;
+        self.retries += o.retries;
+        self.requests_failed += o.requests_failed;
+        self.redispatched += o.redispatched;
     }
 }
 
@@ -194,11 +213,24 @@ impl RunStats {
 pub struct RunMetrics {
     pub outcomes: Vec<RequestOutcome>,
     pub duration_s: f64,
+    /// Requests that failed permanently (fault injection: deadline or
+    /// retry exhaustion). Failed requests do not appear in `outcomes`.
+    pub failed: u64,
 }
 
 impl RunMetrics {
     pub fn record(&mut self, o: RequestOutcome) {
         self.outcomes.push(o);
+    }
+
+    /// Fraction of finished requests that completed successfully
+    /// (1.0 when nothing failed — including the faultless fast path).
+    pub fn goodput(&self) -> f64 {
+        let done = self.outcomes.len() as f64 + self.failed as f64;
+        if done <= 0.0 {
+            return 1.0;
+        }
+        self.outcomes.len() as f64 / done
     }
 
     pub fn ttfts(&self) -> Vec<f64> {
@@ -397,6 +429,38 @@ mod tests {
         assert!((o.ttft_s - 1.7).abs() < 1e-9);
         assert!((o.e2e_s - 4.7).abs() < 1e-9);
         assert!((o.cold_start_s() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn goodput_counts_permanent_failures() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.goodput(), 1.0, "empty run is vacuously good");
+        m.record(outcome(0, 1.0, 2.0));
+        m.record(outcome(0, 1.0, 2.0));
+        assert_eq!(m.goodput(), 1.0);
+        m.failed = 2;
+        assert!((m.goodput() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fault_counters_merge_additively() {
+        let mut a = RunStats { gpu_crashes: 2, redispatched: 5, ..RunStats::default() };
+        let b = RunStats {
+            gpu_crashes: 1,
+            gpu_recoveries: 1,
+            load_failures: 4,
+            retries: 3,
+            requests_failed: 2,
+            redispatched: 1,
+            ..RunStats::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.gpu_crashes, 3);
+        assert_eq!(a.gpu_recoveries, 1);
+        assert_eq!(a.load_failures, 4);
+        assert_eq!(a.retries, 3);
+        assert_eq!(a.requests_failed, 2);
+        assert_eq!(a.redispatched, 6);
     }
 
     #[test]

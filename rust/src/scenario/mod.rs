@@ -158,6 +158,113 @@ fn run_seed(sp: &ScenarioSpec, seed: u64) -> SeedRun {
     }
 }
 
+// ------------------------------------------------------- summarization
+
+/// Mean ± half-width of a 95% confidence interval across seeds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricSummary {
+    pub mean: f64,
+    /// `1.96 · s / √n` with the sample (n − 1) standard deviation;
+    /// zero for a single observation.
+    pub ci95: f64,
+}
+
+impl MetricSummary {
+    pub fn of(xs: &[f64]) -> Self {
+        let n = xs.len();
+        if n == 0 {
+            return MetricSummary { mean: 0.0, ci95: 0.0 };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        if n == 1 {
+            return MetricSummary { mean, ci95: 0.0 };
+        }
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0);
+        MetricSummary { mean, ci95: 1.96 * var.sqrt() / (n as f64).sqrt() }
+    }
+
+    /// A "12.3 ± 0.4"-style table cell; plain mean when the CI is zero.
+    pub fn cell(&self, decimals: usize) -> String {
+        if self.ci95 == 0.0 {
+            format!("{:.*}", decimals, self.mean)
+        } else {
+            format!("{:.*} ± {:.*}", decimals, self.mean, decimals, self.ci95)
+        }
+    }
+}
+
+/// Cross-seed aggregate of one scenario's runs: mean ± 95% CI for the
+/// headline metrics, including the fault-injection goodput/failure view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSummary {
+    pub name: String,
+    pub system: String,
+    pub seeds: usize,
+    /// Offered requests per seed (identical across engine seeds: the
+    /// workload generator has its own seed in the spec).
+    pub requests: usize,
+    pub completed: MetricSummary,
+    pub failed: MetricSummary,
+    pub goodput: MetricSummary,
+    pub ttft_ms: MetricSummary,
+    pub e2e_ms: MetricSummary,
+    pub cost_usd: MetricSummary,
+}
+
+/// Collapse a multi-seed report into mean ± 95% CI per metric.
+pub fn summarize(report: &ScenarioReport) -> ScenarioSummary {
+    fn of(report: &ScenarioReport, f: fn(&SeedRun) -> f64) -> MetricSummary {
+        MetricSummary::of(&report.runs.iter().map(f).collect::<Vec<f64>>())
+    }
+    ScenarioSummary {
+        name: report.name.clone(),
+        system: report.system.clone(),
+        seeds: report.runs.len(),
+        requests: report.runs.first().map_or(0, |r| r.requests),
+        completed: of(report, |r| r.metrics.outcomes.len() as f64),
+        failed: of(report, |r| r.metrics.failed as f64),
+        goodput: of(report, |r| r.metrics.goodput()),
+        ttft_ms: of(report, |r| r.metrics.ttft().mean * 1000.0),
+        e2e_ms: of(report, |r| r.metrics.e2e().mean * 1000.0),
+        cost_usd: of(report, |r| r.cost.total_usd()),
+    }
+}
+
+/// Render summaries as one row per scenario (the multi-seed companion
+/// to [`render_reports`]' one-row-per-seed view).
+pub fn render_summaries(summaries: &[ScenarioSummary]) -> String {
+    let mut t = Table::new(
+        "Scenario summary (mean ± 95% CI across seeds)",
+        &[
+            "scenario",
+            "system",
+            "seeds",
+            "requests",
+            "completed",
+            "failed",
+            "goodput",
+            "TTFT(ms)",
+            "E2E(ms)",
+            "cost($)",
+        ],
+    );
+    for s in summaries {
+        t.row(vec![
+            s.name.clone(),
+            s.system.clone(),
+            s.seeds.to_string(),
+            s.requests.to_string(),
+            s.completed.cell(1),
+            s.failed.cell(1),
+            s.goodput.cell(3),
+            s.ttft_ms.cell(1),
+            s.e2e_ms.cell(1),
+            s.cost_usd.cell(2),
+        ]);
+    }
+    t.render()
+}
+
 /// Parse a scenario file's JSON: either one spec object or an array of
 /// them (a grid).
 pub fn specs_from_json(j: &Json) -> Result<Vec<ScenarioSpec>, ScenarioError> {
@@ -424,6 +531,35 @@ mod tests {
             assert!(rows[0].get(key).is_some(), "row missing '{key}'");
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metric_summary_mean_and_ci() {
+        assert_eq!(MetricSummary::of(&[]), MetricSummary { mean: 0.0, ci95: 0.0 });
+        let one = MetricSummary::of(&[4.0]);
+        assert_eq!((one.mean, one.ci95), (4.0, 0.0), "n = 1 has no interval");
+        let m = MetricSummary::of(&[2.0, 4.0, 6.0]);
+        assert!((m.mean - 4.0).abs() < 1e-12);
+        // s = 2, so the half-width is 1.96 · 2 / √3.
+        assert!((m.ci95 - 1.96 * 2.0 / 3f64.sqrt()).abs() < 1e-12);
+        assert!(m.cell(2).contains("±"), "{}", m.cell(2));
+        assert!(!one.cell(2).contains("±"), "{}", one.cell(2));
+    }
+
+    #[test]
+    fn summarize_collapses_seeds() {
+        let spec = quick_spec("sum", "serverless-lora", vec![1, 7, 23]);
+        let report = run(&spec).unwrap();
+        let sum = summarize(&report);
+        assert_eq!(sum.seeds, 3);
+        assert_eq!(sum.requests, report.runs[0].requests);
+        assert_eq!(sum.failed.mean, 0.0, "no faults, no failures");
+        assert_eq!(sum.goodput.mean, 1.0);
+        assert!(sum.ttft_ms.mean > 0.0 && sum.ttft_ms.ci95 >= 0.0);
+        let mean_cost = report.runs.iter().map(|r| r.cost.total_usd()).sum::<f64>() / 3.0;
+        assert!((sum.cost_usd.mean - mean_cost).abs() < 1e-12);
+        let out = render_summaries(std::slice::from_ref(&sum));
+        assert!(out.contains("sum") && out.contains("goodput"), "{out}");
     }
 
     #[test]

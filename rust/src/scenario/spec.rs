@@ -14,7 +14,7 @@ use crate::artifact::ModelProfile;
 use crate::cluster::Cluster;
 use crate::sim::config::{BatchingMode, CacheMode, PreloadMode, SystemConfig, TierSpec};
 use crate::sim::workloads as wl;
-use crate::sim::Workload;
+use crate::sim::{FaultSpec, RetrySpec, Workload};
 use crate::trace::Pattern;
 use crate::util::json::{arr, num, obj, s, Json};
 
@@ -115,6 +115,10 @@ pub struct SystemSpec {
     /// per-node host-RAM checkpoint cache, per-link bandwidths, and the
     /// cache policy. `None` keeps the flat-latency fast path.
     pub tiers: Option<TierSpec>,
+    /// Fault injection (`sim::FaultSpec`): GPU crash/recover from
+    /// MTBF/MTTR, transient cold-load failures, and the retry/deadline
+    /// policy. `None` (the default) keeps the fault-free fast path.
+    pub faults: Option<FaultSpec>,
 }
 
 impl SystemSpec {
@@ -127,6 +131,7 @@ impl SystemSpec {
             batching: None,
             hit_rate: None,
             tiers: None,
+            faults: None,
         }
     }
 
@@ -212,6 +217,40 @@ impl SystemSpec {
             }
             cfg = cfg.with_tiers(t);
         }
+        if let Some(fa) = self.faults {
+            for (v, key) in [(fa.mtbf_s, "mtbf_s"), (fa.mttr_s, "mttr_s")] {
+                if !(v.is_finite() && v > 0.0) {
+                    return Err(ScenarioError::BadOverride(format!(
+                        "faults.{key} must be a positive finite number of seconds, got {v}"
+                    )));
+                }
+            }
+            if !(fa.load_fail_prob.is_finite() && (0.0..=1.0).contains(&fa.load_fail_prob)) {
+                return Err(ScenarioError::BadOverride(format!(
+                    "faults.load_fail_prob must be in [0, 1], got {}",
+                    fa.load_fail_prob
+                )));
+            }
+            for (v, key) in [
+                (fa.retry.backoff_base_s, "backoff_base_s"),
+                (fa.retry.backoff_cap_s, "backoff_cap_s"),
+            ] {
+                if !(v.is_finite() && v >= 0.0) {
+                    return Err(ScenarioError::BadOverride(format!(
+                        "faults.retry.{key} must be a non-negative finite number of \
+                         seconds, got {v}"
+                    )));
+                }
+            }
+            if !(fa.retry.deadline_s.is_finite() && fa.retry.deadline_s > 0.0) {
+                return Err(ScenarioError::BadOverride(format!(
+                    "faults.retry.deadline_s must be a positive finite number of \
+                     seconds, got {}",
+                    fa.retry.deadline_s
+                )));
+            }
+            cfg = cfg.with_faults(fa);
+        }
         Ok(cfg)
     }
 
@@ -258,6 +297,25 @@ impl SystemSpec {
                 ]),
             ));
         }
+        if let Some(fa) = self.faults {
+            fields.push((
+                "faults",
+                obj(vec![
+                    ("mtbf_s", num(fa.mtbf_s)),
+                    ("mttr_s", num(fa.mttr_s)),
+                    ("load_fail_prob", num(fa.load_fail_prob)),
+                    (
+                        "retry",
+                        obj(vec![
+                            ("max_retries", num(fa.retry.max_retries as f64)),
+                            ("backoff_base_s", num(fa.retry.backoff_base_s)),
+                            ("backoff_cap_s", num(fa.retry.backoff_cap_s)),
+                            ("deadline_s", num(fa.retry.deadline_s)),
+                        ]),
+                    ),
+                ]),
+            ));
+        }
         obj(fields)
     }
 
@@ -299,6 +357,33 @@ impl SystemSpec {
                 })?;
             }
             spec.tiers = Some(t);
+        }
+        if let Some(fj) = j.get("faults") {
+            let mut fa = FaultSpec::default();
+            if let Some(x) = opt_num(fj, "mtbf_s", "system.faults")? {
+                fa.mtbf_s = x;
+            }
+            if let Some(x) = opt_num(fj, "mttr_s", "system.faults")? {
+                fa.mttr_s = x;
+            }
+            if let Some(x) = opt_num(fj, "load_fail_prob", "system.faults")? {
+                fa.load_fail_prob = x;
+            }
+            if let Some(rj) = fj.get("retry") {
+                if let Some(x) = opt_usize(rj, "max_retries", "system.faults.retry")? {
+                    fa.retry.max_retries = x as u32;
+                }
+                if let Some(x) = opt_num(rj, "backoff_base_s", "system.faults.retry")? {
+                    fa.retry.backoff_base_s = x;
+                }
+                if let Some(x) = opt_num(rj, "backoff_cap_s", "system.faults.retry")? {
+                    fa.retry.backoff_cap_s = x;
+                }
+                if let Some(x) = opt_num(rj, "deadline_s", "system.faults.retry")? {
+                    fa.retry.deadline_s = x;
+                }
+            }
+            spec.faults = Some(fa);
         }
         if let Some(b) = j.get("batching") {
             let kind = req_str(b, "kind", "system.batching")?;
@@ -1086,6 +1171,13 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Enable deterministic fault injection (GPU crash/recover, load
+    /// failures, retry/deadline policy) with the given fault shape.
+    pub fn faults(mut self, f: FaultSpec) -> Self {
+        self.spec.system.faults = Some(f);
+        self
+    }
+
     pub fn cluster(mut self, c: ClusterSpec) -> Self {
         self.spec.cluster = c;
         self
@@ -1649,6 +1741,75 @@ mod tests {
             let err =
                 ScenarioSpec::builder("t").system_spec(sys).build().unwrap_err();
             assert!(matches!(err, ScenarioError::BadOverride(_)), "{t:?}: {err}");
+        }
+    }
+
+    // ------------------------------------------- fault injection
+
+    #[test]
+    fn faults_survive_json_roundtrip() {
+        let spec = ScenarioSpec::builder("faulty")
+            .faults(FaultSpec {
+                mtbf_s: 600.0,
+                mttr_s: 45.0,
+                load_fail_prob: 0.05,
+                retry: RetrySpec {
+                    max_retries: 5,
+                    backoff_base_s: 0.5,
+                    backoff_cap_s: 16.0,
+                    deadline_s: 90.0,
+                },
+            })
+            .build()
+            .unwrap();
+        let text = spec.to_json().dump();
+        let parsed = ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, spec, "round-trip changed the spec:\n{text}");
+        // The resolved config carries the faults through to the engine.
+        let cfg = parsed.system.resolve(Pattern::Normal).unwrap();
+        let fa = cfg.faults.expect("faults resolved");
+        assert_eq!(fa.mtbf_s, 600.0);
+        assert_eq!(fa.retry.max_retries, 5);
+        // A spec without faults resolves to the fault-free fast path.
+        let plain = ScenarioSpec::builder("plain").build().unwrap();
+        assert!(plain.system.resolve(Pattern::Normal).unwrap().faults.is_none());
+    }
+
+    #[test]
+    fn faults_parse_fills_defaults() {
+        let j = Json::parse(
+            r#"{"name":"t","system":{"id":"serverless-lora",
+                "faults":{"mtbf_s":900.0,"retry":{"max_retries":1}}},
+                "workload":{"kind":"paper"}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&j).unwrap();
+        let fa = spec.system.faults.expect("faults parsed");
+        assert_eq!(fa.mtbf_s, 900.0);
+        assert_eq!(fa.mttr_s, FaultSpec::default().mttr_s, "unset fields default");
+        assert_eq!(fa.load_fail_prob, FaultSpec::default().load_fail_prob);
+        assert_eq!(fa.retry.max_retries, 1);
+        assert_eq!(fa.retry.deadline_s, RetrySpec::default().deadline_s);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_fault_numbers() {
+        let patches: [fn(&mut FaultSpec); 7] = [
+            |f| f.mtbf_s = 0.0,
+            |f| f.mtbf_s = f64::NAN,
+            |f| f.mttr_s = -5.0,
+            |f| f.load_fail_prob = 1.5,
+            |f| f.retry.backoff_base_s = -0.1,
+            |f| f.retry.backoff_cap_s = f64::INFINITY,
+            |f| f.retry.deadline_s = 0.0,
+        ];
+        for patch in patches {
+            let mut fa = FaultSpec::default();
+            patch(&mut fa);
+            let err = ScenarioSpec::builder("t").faults(fa).build().unwrap_err();
+            assert!(matches!(err, ScenarioError::BadOverride(_)), "{fa:?}: {err}");
+            assert!(err.to_string().contains("faults"), "{err}");
         }
     }
 

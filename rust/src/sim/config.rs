@@ -17,6 +17,7 @@ use crate::coordinator::policy::{
     OffloadPolicy, OpportunisticPreload, PinHotCache, PolicyBundle, PredictivePreload,
     PreloadPolicy, ServerfulBilling, ServerfulResident, ServerlessBilling, SizeAwareLruCache,
 };
+use crate::sim::fault::FaultSpec;
 use crate::trace::Pattern;
 
 /// How cold artifacts are staged before an invocation.
@@ -152,6 +153,11 @@ pub struct SystemConfig {
     /// Tiered artifact store + link contention.  `None` (the default for
     /// every named system) keeps the flat-latency fast path.
     pub tiers: Option<TierSpec>,
+    /// Fault injection (GPU crash/recover, transient load failures) and
+    /// the retry/timeout policy.  `None` (the default for every named
+    /// system) builds no injector, draws no RNG, schedules no events —
+    /// bit-identical to a faultless build.
+    pub faults: Option<FaultSpec>,
 }
 
 impl SystemConfig {
@@ -167,6 +173,7 @@ impl SystemConfig {
             batching: BatchingMode::Adaptive,
             keepalive_s: 180.0,
             tiers: None,
+            faults: None,
         }
     }
 
@@ -182,6 +189,7 @@ impl SystemConfig {
             batching: BatchingMode::Fixed { size: 32, delay_s: 0.25 },
             keepalive_s: 180.0,
             tiers: None,
+            faults: None,
         }
     }
 
@@ -200,6 +208,7 @@ impl SystemConfig {
             batching: BatchingMode::Fixed { size: 32, delay_s: 0.25 },
             keepalive_s: 180.0,
             tiers: None,
+            faults: None,
         }
     }
 
@@ -216,6 +225,7 @@ impl SystemConfig {
             batching: BatchingMode::Adaptive,
             keepalive_s: f64::INFINITY,
             tiers: None,
+            faults: None,
         }
     }
 
@@ -229,6 +239,7 @@ impl SystemConfig {
             batching: BatchingMode::Adaptive, // continuous batching too
             keepalive_s: f64::INFINITY,
             tiers: None,
+            faults: None,
         }
     }
 
@@ -295,6 +306,12 @@ impl SystemConfig {
     /// Enable the tiered store on any named system (builder style).
     pub fn with_tiers(mut self, tiers: TierSpec) -> Self {
         self.tiers = Some(tiers);
+        self
+    }
+
+    /// Enable fault injection on any named system (builder style).
+    pub fn with_faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = Some(faults);
         self
     }
 

@@ -39,6 +39,14 @@ pub(super) struct Batch {
     pub(super) attached_backbone: bool,
     /// Where the backbone checkpoint was sourced (tiered store only).
     pub(super) backbone_tier: Option<Tier>,
+    /// Fault injection: this batch's cold load was drawn as a transient
+    /// failure at dispatch; it surfaces when the load completes (the
+    /// time was spent either way). Always false with faults off.
+    pub(super) failed_load: bool,
+    /// The flat-path `LoadDone` event (segmented loads track theirs in
+    /// the [`LoadRun`]). Held so a GPU crash can cancel it in O(1);
+    /// cleared when the event fires.
+    pub(super) load_token: Option<EventToken>,
 }
 
 /// One segment of a tiered load: a contended transfer (`link: Some`) or a
@@ -130,6 +138,7 @@ impl Engine {
         // Stream the next arrival in first so it wins same-instant ties
         // against anything this handler schedules.
         self.schedule_next_arrival();
+        self.arrived += 1;
         let req = self.requests[i].clone();
         let f = req.function;
         self.queues[f].push(Queued { request: req.id, arrival_s: req.arrival_s });
@@ -279,6 +288,9 @@ impl Engine {
     pub(super) fn dispatch(&mut self, f: usize) -> Result<(), Option<GpuId>> {
         let spec = self.spec(f).clone();
         let gpu = match self.dedicated.get(&f) {
+            // A dedicated (serverful) route is pinned: if its GPU is
+            // down (fault injection) the function blocks until repair.
+            Some(&g) if !self.cluster.gpu_is_up(g) => return Err(Some(g)),
             Some(&g) => g,
             None => match Router::route(&self.cluster, &self.registry, &spec, 1) {
                 Some(r) => self.maybe_replicate(&spec, r.gpu),
@@ -408,6 +420,14 @@ impl Engine {
         } else {
             self.stats.warm_dispatches += 1;
         }
+        // Fault injection: a cold load may fail in transit. The draw
+        // happens only when an injector exists AND there is a load to
+        // fail, so the faultless path performs zero RNG draws (the
+        // `faults: None` bit-identity contract).
+        let failed_load = match self.injector.as_mut() {
+            Some(inj) if total_load > 0.0 => inj.load_fails(),
+            _ => false,
+        };
         self.batches.insert(
             batch_id,
             Batch {
@@ -422,6 +442,8 @@ impl Engine {
                 kv_gb,
                 attached_backbone: attached,
                 backbone_tier,
+                failed_load,
+                load_token: None,
             },
         );
         self.fn_inflight[f] += 1;
@@ -456,7 +478,8 @@ impl Engine {
             }
         }
         if !segmented {
-            self.events.push(self.now + total_load, EventKind::LoadDone(batch_id));
+            let tok = self.events.push(self.now + total_load, EventKind::LoadDone(batch_id));
+            self.batches.get_mut(&batch_id).expect("just inserted").load_token = Some(tok);
         }
         // Residual queue: cancel the pre-dispatch checks and re-arm for
         // what is left.
@@ -485,9 +508,12 @@ impl Engine {
         let need = spec.model.gpu_resident_gb() + spec.model.kv_per_request_gb;
         let execs = &self.execs;
         let map = &self.gpu_map;
+        let cluster = &self.cluster;
         self.cluster
             .scan_free_desc(|g, free| {
-                free >= need && execs[map.dense(g)].contention() == 0
+                cluster.gpu_is_up(g)
+                    && free >= need
+                    && execs[map.dense(g)].contention() == 0
             })
             .unwrap_or(routed)
     }
@@ -734,6 +760,12 @@ impl Engine {
     // ------------------------------------------------------- exec events
 
     pub(super) fn on_load_done(&mut self, batch_id: u64) {
+        // Fault injection: the load was drawn as a transient failure at
+        // dispatch time — the batch dies here instead of starting
+        // prefill (its requests retry with backoff; see `sim::fault`).
+        if self.batches[&batch_id].failed_load {
+            return self.on_load_failed(batch_id);
+        }
         let (gpu, f, b) = {
             let batch = self.batches.get_mut(&batch_id).expect("batch exists");
             batch.state = BatchState::Prefill;
@@ -853,6 +885,9 @@ impl Engine {
             let mut outcome: RequestOutcome =
                 crate::metrics::outcome_from_phases(r, phases, tpot, b);
             outcome.backbone_tier = batch.backbone_tier;
+            if self.injector.is_some() {
+                self.retry_count.remove(&r.id);
+            }
             self.emit_request_complete(outcome);
         }
 

@@ -27,6 +27,7 @@ use crate::sim::billing::{BillClass, BillingIndex};
 use crate::sim::config::SystemConfig;
 use crate::sim::dispatch::{Batch, LoadRun};
 use crate::sim::events::{EventKind, EventQueue, EventToken};
+use crate::sim::fault::FaultInjector;
 use crate::sim::exec::GpuExec;
 use crate::sim::flow::FlowNet;
 use crate::sim::observe::{BillSeriesSampler, BilledCost, Observer, RunOutput};
@@ -162,6 +163,18 @@ pub struct Engine {
     /// request id → index in `requests` (dispatch-path lookup).
     pub(super) request_index: HashMap<u64, usize>,
     pub(super) duration_s: f64,
+    /// Fault injector (`sim::fault`), built only when `cfg.faults` is
+    /// `Some` — the faultless fast path carries a `None` and performs
+    /// zero fault work.
+    pub(super) injector: Option<FaultInjector>,
+    /// Requests that have arrived so far — the conservation invariant's
+    /// right-hand side (`completed + failed + in_flight == arrivals`).
+    pub(super) arrived: usize,
+    /// Requests currently sleeping in a retry backoff: exactly the live
+    /// `RetryWake` events (brute-checked in `check_indexes`).
+    pub(super) retry_pending: usize,
+    /// Per-request transient-retry attempts (fault injection only).
+    pub(super) retry_count: HashMap<u64, u32>,
 }
 
 impl Engine {
@@ -187,6 +200,10 @@ impl Engine {
         if let Some(t) = cfg.tiers {
             cluster.set_host_cache_gb(t.host_cache_gb);
         }
+        // Own seeded RNG stream (`FAULT_STREAM`): enabling faults never
+        // perturbs workload or policy draws, and `faults: None` builds
+        // no injector at all.
+        let injector = cfg.faults.map(|f| FaultInjector::new(f, seed));
         let PolicyBundle { preload, batching, offload, billing, cache } =
             cfg.bundle(seed);
         let mut e = Engine {
@@ -237,6 +254,10 @@ impl Engine {
                 .collect(),
             requests: workload.requests,
             duration_s: workload.duration_s,
+            injector,
+            arrived: 0,
+            retry_pending: 0,
+            retry_count: HashMap::new(),
         };
         e.metrics.duration_s = e.duration_s;
         e.setup();
@@ -244,6 +265,9 @@ impl Engine {
         // aggregates; from here on every mutation maintains them by
         // delta.
         e.init_billing();
+        // Fault injection: draw the first crash of every GPU (no-op
+        // when `cfg.faults` is `None`).
+        e.schedule_initial_crashes();
         e
     }
 
@@ -301,9 +325,13 @@ impl Engine {
             EventKind::LoadDone(b) => {
                 // A firing load event is current by construction (stale
                 // ones are cancelled on retime); drop the token so the
-                // segment step doesn't cancel a dead handle.
+                // segment step doesn't cancel a dead handle. Flat-path
+                // loads track theirs on the batch (crash-cancel handle).
                 if let Some(run) = self.load_runs.get_mut(&b) {
                     run.token = None;
+                }
+                if let Some(batch) = self.batches.get_mut(&b) {
+                    batch.load_token = None;
                 }
                 self.on_load_event(b)
             }
@@ -317,6 +345,11 @@ impl Engine {
                 self.on_keepalive();
                 self.arm_keepalive();
             }
+            // Fault injection (`sim::fault`) — these kinds are only ever
+            // scheduled when `cfg.faults` is `Some`.
+            EventKind::GpuCrash(g) => self.on_gpu_crash(g),
+            EventKind::GpuRecover(g) => self.on_gpu_recover(g),
+            EventKind::RetryWake(id) => self.on_retry_wake(id),
         }
         // Fold this event's memory mutations into the billing
         // aggregates (O(GPUs touched)), so the next interval samples the
@@ -604,6 +637,42 @@ impl Engine {
                 "blocked function {f} has an empty queue"
             );
         }
+        // Conservation (fault-injection tentpole invariant): every
+        // arrival is queued, in a batch, sleeping in a retry backoff,
+        // completed, or failed — `completed + failed + in_flight ==
+        // arrivals` holds at every step, including mid-run with GPUs
+        // down. With faults off the failed/retry terms are identically
+        // zero and this reduces to the historical queued-or-batched-or-
+        // completed accounting.
+        let queued: usize = self.queues.iter().map(|q| q.len()).sum();
+        let in_batches: usize = self.batches.values().map(|b| b.requests.len()).sum();
+        assert_eq!(
+            self.metrics.outcomes.len()
+                + self.metrics.failed as usize
+                + queued
+                + in_batches
+                + self.retry_pending,
+            self.arrived,
+            "request conservation violated: completed + failed + in_flight != arrivals"
+        );
+        let live_retries = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, &EventKind::RetryWake(_)))
+            .count();
+        assert_eq!(
+            live_retries, self.retry_pending,
+            "retry_pending != live RetryWake events"
+        );
+        // Health: a down GPU holds no in-flight batches (its batches are
+        // killed at crash time and the router never picks it).
+        for (&b, batch) in &self.batches {
+            assert!(
+                self.cluster.gpu_is_up(batch.gpu),
+                "batch {b} in flight on a down GPU {:?}",
+                batch.gpu
+            );
+        }
         // Timing-wheel structural invariants + the cluster's routing
         // indexes (free-memory order, per-function residency, container
         // residency counts).
@@ -735,6 +804,32 @@ impl Engine {
                 run.cur_end_s.to_bits(),
                 "scheduled load event drifted for batch {b}"
             );
+        }
+        // Flat-path Loading batches hold a live token on their own
+        // LoadDone (the crash-kill cancel handle); segmented ones track
+        // theirs in the run, and non-loading states carry none.
+        for (&b, batch) in &self.batches {
+            if batch.state != BatchState::Loading {
+                assert!(
+                    batch.load_token.is_none(),
+                    "stale flat load token on batch {b}"
+                );
+                continue;
+            }
+            if self.load_runs.contains_key(&b) {
+                assert!(
+                    batch.load_token.is_none(),
+                    "segmented batch {b} carries a flat token"
+                );
+            } else {
+                let tok = batch.load_token.expect("flat loading batch without a token");
+                let p = self.events.get(tok).expect("flat LoadDone token is dead");
+                assert!(
+                    matches!(p.kind, &EventKind::LoadDone(eb) if eb == b),
+                    "flat load token for batch {b} points at {:?}",
+                    p.kind
+                );
+            }
         }
         // One live LoadDone per Loading batch, segmented or flat.
         let load_events = self
@@ -1111,6 +1206,81 @@ mod tests {
             let (m, _, _) = e.finish();
             assert_eq!(m.outcomes.len(), n, "lost requests (seed {seed})");
         }
+    }
+
+    #[test]
+    fn dormant_faults_are_bit_identical_to_faults_off() {
+        // `faults: None` bit-identity, probed from the other side: a
+        // spec that provably never fires (astronomical MTBF, zero
+        // load-fail probability) builds the injector and walks every
+        // fault-gated branch, yet must reproduce the faultless run
+        // bit-for-bit — the fault path costs zero perturbation.
+        use crate::sim::fault::FaultSpec;
+        let w = workload(4, 0.05, 1800.0, Pattern::Bursty);
+        let (m_off, c_off, _) = run(SystemConfig::serverless_lora(), w.clone());
+        let dormant = SystemConfig::serverless_lora().with_faults(FaultSpec {
+            mtbf_s: 1e15,
+            load_fail_prob: 0.0,
+            ..FaultSpec::default()
+        });
+        let (m_on, c_on, st) = run(dormant, w);
+        assert_eq!(st.gpu_crashes, 0, "dormant spec must never crash");
+        assert_eq!(st.load_failures, 0);
+        assert_eq!(m_off.outcomes.len(), m_on.outcomes.len());
+        for (a, b) in m_off.outcomes.iter().zip(&m_on.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "request {}", a.id);
+            assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits(), "request {}", a.id);
+        }
+        assert_eq!(c_off.total_usd().to_bits(), c_on.total_usd().to_bits());
+    }
+
+    #[test]
+    fn conservation_holds_mid_run_with_gpus_down_multi_seed() {
+        // The tentpole invariant: `completed + failed + in_flight ==
+        // arrivals` at every point of a crashing, retrying run —
+        // `check_indexes` asserts it (plus the health/retry brute
+        // checks) while at least one GPU is verifiably down.
+        use crate::sim::fault::{FaultSpec, RetrySpec};
+        let cfg = SystemConfig::serverless_lora().with_faults(FaultSpec {
+            mtbf_s: 150.0,
+            mttr_s: 40.0,
+            load_fail_prob: 0.1,
+            retry: RetrySpec::default(),
+        });
+        let mut total_redispatched = 0u64;
+        let mut total_retries = 0u64;
+        for seed in [1u64, 7, 23] {
+            let w = workload(4, 0.1, 600.0, Pattern::Bursty);
+            let n = w.requests.len();
+            let mut e = Engine::new(cfg.clone(), Cluster::new(1, 2, 4), w, seed);
+            let mut steps: u64 = 0;
+            let mut checked_down = 0usize;
+            while e.step() {
+                steps += 1;
+                if steps % 5 == 0 || e.cluster.n_down() > 0 {
+                    e.check_indexes();
+                    if e.cluster.n_down() > 0 {
+                        checked_down += 1;
+                    }
+                }
+            }
+            e.check_indexes();
+            assert!(checked_down > 0, "no mid-run check saw a GPU down (seed {seed})");
+            assert!(e.stats.gpu_crashes > 0, "no crashes injected (seed {seed})");
+            assert!(e.stats.gpu_recoveries > 0, "no recoveries (seed {seed})");
+            let (m, _, st) = e.finish();
+            assert_eq!(
+                m.outcomes.len() + m.failed as usize,
+                n,
+                "terminal conservation (seed {seed})"
+            );
+            assert!(m.goodput() > 0.0 && m.goodput() <= 1.0);
+            total_redispatched += st.redispatched;
+            total_retries += st.retries;
+        }
+        assert!(total_redispatched > 0, "crashes never killed an in-flight batch");
+        assert!(total_retries > 0, "10% load-fail rate never retried");
     }
 
     #[test]

@@ -49,6 +49,16 @@ pub enum EventKind {
     /// Keep-alive expiry sweep. Exactly one is outstanding at any time;
     /// it is re-armed (cancel + push) whenever the earliest expiry moves.
     KeepaliveCheck,
+    /// Fault injection: the GPU goes down. Its in-flight batches are
+    /// killed and their requests re-enqueued. Scheduled only when
+    /// `SystemConfig::faults` is `Some`.
+    GpuCrash(GpuId),
+    /// Fault injection: the GPU comes back up (cold — residency was
+    /// invalidated at crash time).
+    GpuRecover(GpuId),
+    /// Retry backoff expired for request `id`: re-enqueue it for
+    /// dispatch. One live wake per retrying request.
+    RetryWake(u64),
 }
 
 #[derive(Debug, Clone, PartialEq)]

@@ -1,0 +1,524 @@
+//! Deterministic fault injection: GPU crash/recover schedules and
+//! transient cold-load failures, plus the retry/timeout policy applied
+//! to requests that hit them.
+//!
+//! The injector owns its own seeded RNG **stream** (`FAULT_STREAM`),
+//! split off the run seed exactly like `OpportunisticPreload`'s policy
+//! stream — so enabling faults never perturbs the workload's arrival
+//! or token draws, and `faults: None` runs stay bit-identical to a
+//! build without this module. Crash/repair gaps are exponential with
+//! means `mtbf_s` / `mttr_s`; cold-load failures are Bernoulli with
+//! probability `load_fail_prob`, drawn once per cold dispatch.
+//!
+//! Determinism under zone sharding: every zone engine is built with the
+//! same run seed (`sim/sharded.rs`), so each zone's injector replays an
+//! identical stream over its own GPUs in dense order — the sharded run
+//! needs no cross-zone RNG coordination to stay reproducible.
+
+use crate::cluster::GpuId;
+use crate::util::rng::Pcg64;
+
+/// Dedicated RNG stream for the fault injector, disjoint from the
+/// workload stream (Pcg64 default) and the preload-policy stream.
+pub const FAULT_STREAM: u64 = 0xfa_17_5e_ed;
+
+/// Retry/timeout policy for requests that hit a transient fault.
+///
+/// A request whose cold load fails transiently is retried after a
+/// bounded exponential backoff (`backoff_base_s · 2^attempt`, capped at
+/// `backoff_cap_s`), at most `max_retries` times. Independently, any
+/// request — including one re-dispatched after a GPU crash — fails
+/// permanently once `deadline_s` has elapsed since its arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetrySpec {
+    /// Maximum transient-failure retries before the request fails.
+    pub max_retries: u32,
+    /// First retry backoff (seconds); doubles per attempt.
+    pub backoff_base_s: f64,
+    /// Upper bound on any single backoff gap (seconds).
+    pub backoff_cap_s: f64,
+    /// Per-request deadline since arrival (seconds).
+    pub deadline_s: f64,
+}
+
+impl Default for RetrySpec {
+    fn default() -> Self {
+        RetrySpec {
+            max_retries: 3,
+            backoff_base_s: 0.25,
+            backoff_cap_s: 8.0,
+            deadline_s: 120.0,
+        }
+    }
+}
+
+/// Fault-injection configuration. `SystemConfig::faults: None` (the
+/// default) disables the subsystem entirely — no injector is built, no
+/// RNG is drawn, no events are scheduled.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Mean time between failures per GPU (seconds, exponential).
+    pub mtbf_s: f64,
+    /// Mean time to repair per crash (seconds, exponential).
+    pub mttr_s: f64,
+    /// Probability a cold load fails transiently (drawn per dispatch).
+    pub load_fail_prob: f64,
+    /// Retry/timeout policy for faulted requests.
+    pub retry: RetrySpec,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            mtbf_s: 1800.0,
+            mttr_s: 30.0,
+            load_fail_prob: 0.0,
+            retry: RetrySpec::default(),
+        }
+    }
+}
+
+/// What happened — delivered to `Observer::on_fault`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// A GPU went down: its in-flight batches were killed and their
+    /// requests re-enqueued for re-dispatch.
+    GpuCrash {
+        gpu: GpuId,
+        killed_batches: usize,
+        redispatched: usize,
+    },
+    /// A GPU came back up (cold: residency was lost at crash time).
+    GpuRecover { gpu: GpuId },
+    /// A cold load failed transiently; the batch's requests enter the
+    /// retry/backoff path.
+    LoadFailure { gpu: GpuId, function: usize },
+}
+
+/// The injector: spec + its dedicated RNG stream. Owned by the engine,
+/// present only when `SystemConfig::faults` is `Some`.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    pub spec: FaultSpec,
+    rng: Pcg64,
+}
+
+impl FaultInjector {
+    pub fn new(spec: FaultSpec, seed: u64) -> Self {
+        FaultInjector {
+            spec,
+            rng: Pcg64::with_stream(seed, FAULT_STREAM),
+        }
+    }
+
+    /// Gap until the next crash of an up GPU (exponential, mean MTBF).
+    pub fn crash_delay_s(&mut self) -> f64 {
+        self.rng.exp(1.0 / self.spec.mtbf_s)
+    }
+
+    /// Downtime of a crashed GPU (exponential, mean MTTR).
+    pub fn repair_delay_s(&mut self) -> f64 {
+        self.rng.exp(1.0 / self.spec.mttr_s)
+    }
+
+    /// Bernoulli draw: does this cold load fail transiently?
+    pub fn load_fails(&mut self) -> bool {
+        self.spec.load_fail_prob > 0.0 && self.rng.f64() < self.spec.load_fail_prob
+    }
+
+    /// Backoff before retry number `attempt` (0-based): bounded
+    /// exponential, `base · 2^attempt` capped at `backoff_cap_s`.
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        let r = &self.spec.retry;
+        (r.backoff_base_s * 2f64.powi(attempt.min(62) as i32)).min(r.backoff_cap_s)
+    }
+}
+
+// --------------------------------------------------------------------
+// Engine-side fault mechanism: crash kills, residency invalidation,
+// retry/backoff, permanent failure. Lives here (dispatch.rs-style
+// `impl Engine` split) so the whole subsystem reads in one file.
+
+use std::collections::BTreeMap;
+
+use crate::artifact::ArtifactKind;
+use crate::coordinator::Queued;
+use crate::metrics::RequestOutcome;
+use crate::sim::dispatch::BatchState;
+use crate::sim::engine::Engine;
+use crate::sim::events::EventKind;
+use crate::trace::Request;
+
+impl Engine {
+    /// Schedule the first crash of every GPU (dense order — the draw
+    /// order is part of the deterministic contract). Called once from
+    /// `Engine::new`; a no-op when `cfg.faults` is `None`. Crashes past
+    /// the workload horizon are not scheduled, so a faulted run still
+    /// drains.
+    pub(super) fn schedule_initial_crashes(&mut self) {
+        if self.injector.is_none() {
+            return;
+        }
+        for d in 0..self.gpu_map.len() {
+            let g = self.gpu_map.id(d);
+            let delay = self.injector.as_mut().unwrap().crash_delay_s();
+            let t = self.now + delay;
+            if t <= self.duration_s {
+                self.events.push(t, EventKind::GpuCrash(g));
+            }
+        }
+    }
+
+    /// A GPU went down: kill its in-flight batches (requests re-enqueue
+    /// for re-dispatch — no retry budget consumed, the failure was not
+    /// theirs), invalidate everything resident on it, and schedule the
+    /// repair. Routing sees the health flip immediately; billing
+    /// reclassifies through the same O(1) machinery as any state change.
+    pub(super) fn on_gpu_crash(&mut self, g: crate::cluster::GpuId) {
+        self.stats.gpu_crashes += 1;
+        self.cluster.set_gpu_health(g, false);
+        // Repair is always scheduled (never horizon-gated): a down GPU
+        // must come back up or the tail of the run serves degraded.
+        let repair = self.injector.as_mut().expect("faults on").repair_delay_s();
+        self.events.push(self.now + repair, EventKind::GpuRecover(g));
+        let victims: Vec<u64> = self
+            .batches
+            .iter()
+            .filter(|(_, b)| b.gpu == g)
+            .map(|(&id, _)| id)
+            .collect();
+        let killed_batches = victims.len();
+        let mut redispatched = 0usize;
+        for id in victims {
+            redispatched += self.kill_batch(id);
+        }
+        self.invalidate_gpu(g);
+        self.emit_fault(FaultEvent::GpuCrash { gpu: g, killed_batches, redispatched });
+        // The cluster's routable surface changed: blocked functions get
+        // a retry, and the re-enqueued requests re-route to up GPUs.
+        if !self.blocked.is_empty() {
+            self.stats.blocked_retries += self.blocked.len();
+            self.blocked.clear();
+        }
+        self.try_dispatch_all(None);
+    }
+
+    /// The repair completed: the GPU is routable again (cold — its
+    /// residency died with the crash) and, if the horizon allows, its
+    /// next crash is drawn.
+    pub(super) fn on_gpu_recover(&mut self, g: crate::cluster::GpuId) {
+        self.stats.gpu_recoveries += 1;
+        self.cluster.set_gpu_health(g, true);
+        let next = self.injector.as_mut().expect("faults on").crash_delay_s();
+        let t = self.now + next;
+        if t <= self.duration_s {
+            self.events.push(t, EventKind::GpuCrash(g));
+        }
+        self.emit_fault(FaultEvent::GpuRecover { gpu: g });
+        // A fresh GPU may unblock memory-starved functions.
+        if !self.blocked.is_empty() {
+            self.stats.blocked_retries += self.blocked.len();
+            self.blocked.clear();
+        }
+        self.try_dispatch_all(None);
+    }
+
+    /// Kill one in-flight batch on a crashing GPU, unwinding exactly the
+    /// state its lifecycle stage holds: pending load events (flat token
+    /// or segmented run + live flow), exec jobs, busy/loading counts, KV
+    /// reservation, backbone attachment. Returns how many of its
+    /// requests were re-enqueued (the rest failed their deadline).
+    fn kill_batch(&mut self, batch_id: u64) -> usize {
+        let batch = self.batches.remove(&batch_id).expect("batch exists");
+        let gpu = batch.gpu;
+        let f = batch.function;
+        let d = self.gpu_map.dense(gpu);
+        match batch.state {
+            BatchState::Loading => {
+                self.gpu_loading[d] -= 1;
+                self.gpu_busy[d] -= 1;
+                if let Some(tok) = batch.load_token {
+                    self.events.cancel(tok);
+                }
+                if let Some(run) = self.load_runs.remove(&batch_id) {
+                    if let Some(tok) = run.token {
+                        self.events.cancel(tok);
+                    }
+                    // Mid-transfer: pull the flow off the link and
+                    // re-time the survivors at their fatter share.
+                    if let Some(link) = run.segs[run.cursor].link {
+                        let (_, retimes) = self.flows.finish(run.node, link, batch_id, self.now);
+                        self.apply_load_retimes(retimes);
+                    }
+                }
+            }
+            BatchState::Prefill => {
+                self.gpu_busy[d] -= 1;
+                self.execs[d].remove(self.now, batch_id);
+                self.schedule_tick(gpu);
+            }
+            BatchState::Decode => {
+                // Busy already dropped at the Prefill → Decode edge.
+                self.execs[d].remove(self.now, batch_id);
+                self.schedule_tick(gpu);
+            }
+        }
+        self.fn_inflight[f] -= 1;
+        self.cluster.gpu_mut(gpu).release_kv(batch_id);
+        if batch.attached_backbone {
+            let model = self.spec(f).model.name.to_string();
+            let _ = self.registry.detach(
+                &mut self.cluster,
+                &crate::sharing::IpcHandle { model, gpu, function: f },
+            );
+        }
+        self.reclassify_gpu(gpu);
+        let deadline = self.injector.as_ref().expect("faults on").spec.retry.deadline_s;
+        let mut redispatched = 0usize;
+        for r in batch.requests {
+            if self.now - r.arrival_s >= deadline {
+                self.fail_request(&r);
+            } else {
+                self.queues[f].push(Queued { request: r.id, arrival_s: r.arrival_s });
+                self.active.insert(f);
+                redispatched += 1;
+            }
+        }
+        self.stats.redispatched += redispatched as u64;
+        self.arm_queue_wakeups(f);
+        redispatched
+    }
+
+    /// Drop everything resident on a crashed GPU: private artifacts and
+    /// CUDA contexts, shared backbone segments (refcounts are zero — the
+    /// batches died first), and the node's host-RAM checkpoint cache
+    /// (the crash takes the whole worker process down with it).
+    /// Keep-alive warmth is *not* force-dropped: a function warm on a
+    /// surviving GPU stays warm, and the billing warm counts reconcile
+    /// through the same per-GPU residency journal as any eviction.
+    fn invalidate_gpu(&mut self, g: crate::cluster::GpuId) {
+        let mut fns: Vec<usize> = Vec::new();
+        self.cluster.for_each_resident(g, |f| fns.push(f));
+        for f in fns {
+            let gpu = self.cluster.gpu_mut(g);
+            let _ = gpu.evict_artifact(f, ArtifactKind::Adapter);
+            let _ = gpu.evict_artifact(f, ArtifactKind::CudaKernel);
+            let _ = gpu.evict_artifact(f, ArtifactKind::Backbone);
+            gpu.destroy_cuda_context(f);
+        }
+        let models: Vec<&'static str> = self
+            .model_peers
+            .keys()
+            .copied()
+            .filter(|m| self.registry.hosts(m).contains(&g))
+            .collect();
+        for m in models {
+            let _ = self.registry.unload(&mut self.cluster, m, g);
+        }
+        let cache = &mut self.cluster.nodes[g.node].cache;
+        if cache.enabled() && cache.len() > 0 {
+            let staged: Vec<&'static str> = cache.entries().map(|(m, _)| m).collect();
+            for m in staged {
+                cache.remove(m);
+                self.stats.cache_evictions += 1;
+            }
+        }
+    }
+
+    /// A batch's cold load completed as a drawn transient failure: the
+    /// batch dies without executing and its requests enter the
+    /// retry/backoff path. Artifacts staged by the load *stay* resident
+    /// (the bytes moved; what failed is the instance bring-up), so a
+    /// retry typically finds them warm — the modeling choice that keeps
+    /// the residency ledger append-only under faults.
+    pub(super) fn on_load_failed(&mut self, batch_id: u64) {
+        let batch = self.batches.remove(&batch_id).expect("batch exists");
+        let gpu = batch.gpu;
+        let f = batch.function;
+        let d = self.gpu_map.dense(gpu);
+        self.gpu_loading[d] -= 1;
+        self.gpu_busy[d] -= 1;
+        self.fn_inflight[f] -= 1;
+        self.cluster.gpu_mut(gpu).release_kv(batch_id);
+        if batch.attached_backbone {
+            let model = self.spec(f).model.name.to_string();
+            let _ = self.registry.detach(
+                &mut self.cluster,
+                &crate::sharing::IpcHandle { model, gpu, function: f },
+            );
+        }
+        self.reclassify_gpu(gpu);
+        self.stats.load_failures += 1;
+        self.emit_fault(FaultEvent::LoadFailure { gpu, function: f });
+        for r in batch.requests {
+            self.fail_or_retry(r);
+        }
+        // KV freed: memory-blocked functions get their retry.
+        if !self.blocked.is_empty() {
+            self.stats.blocked_retries += self.blocked.len();
+            self.blocked.clear();
+        }
+        self.try_dispatch_all(None);
+    }
+
+    /// Route a transiently-failed request: permanent failure when its
+    /// deadline passed or its retry budget is spent, otherwise a
+    /// `RetryWake` after the bounded exponential backoff.
+    fn fail_or_retry(&mut self, req: Request) {
+        let retry = self.injector.as_ref().expect("faults on").spec.retry;
+        let attempt = self.retry_count.get(&req.id).copied().unwrap_or(0);
+        if self.now - req.arrival_s >= retry.deadline_s || attempt >= retry.max_retries {
+            return self.fail_request(&req);
+        }
+        self.retry_count.insert(req.id, attempt + 1);
+        let backoff = self.injector.as_ref().expect("faults on").backoff_s(attempt);
+        self.events.push(self.now + backoff, EventKind::RetryWake(req.id));
+        self.retry_pending += 1;
+        self.stats.retries += 1;
+    }
+
+    /// A retry backoff expired: re-enqueue the request (it keeps its
+    /// original arrival time — deadlines and queue-wait metrics are
+    /// measured from first arrival), unless its deadline lapsed while it
+    /// slept.
+    pub(super) fn on_retry_wake(&mut self, id: u64) {
+        self.retry_pending -= 1;
+        let req = self.requests[self.request_index[&id]].clone();
+        let retry = self.injector.as_ref().expect("faults on").spec.retry;
+        if self.now - req.arrival_s >= retry.deadline_s {
+            return self.fail_request(&req);
+        }
+        let f = req.function;
+        self.queues[f].push(Queued { request: id, arrival_s: req.arrival_s });
+        self.active.insert(f);
+        let armed = self.queue_wakeups[f];
+        self.try_dispatch_all(Some(f));
+        if self.queue_wakeups[f] == armed {
+            self.arm_queue_wakeups(f);
+        }
+    }
+
+    /// Permanent failure: deadline exceeded or retry budget exhausted.
+    /// Counted (never silently dropped — the conservation invariant
+    /// includes it) and surfaced to observers as a synthesized outcome
+    /// with `e2e_s` = arrival → failure and no phases.
+    pub(super) fn fail_request(&mut self, req: &Request) {
+        self.stats.requests_failed += 1;
+        self.metrics.failed += 1;
+        self.retry_count.remove(&req.id);
+        let outcome = RequestOutcome {
+            id: req.id,
+            function: req.function,
+            arrival_s: req.arrival_s,
+            phases: BTreeMap::new(),
+            ttft_s: 0.0,
+            tpot_s: 0.0,
+            e2e_s: self.now - req.arrival_s,
+            output_tokens: 0,
+            batch_size: 0,
+            backbone_tier: None,
+        };
+        self.emit_request_failed(&outcome);
+    }
+
+    pub(super) fn emit_fault(&mut self, event: FaultEvent) {
+        if self.series.is_none() && self.observers.is_empty() {
+            return;
+        }
+        let t = self.now;
+        if let Some(s) = self.series.as_mut() {
+            s.on_fault(t, &event);
+        }
+        for ob in &mut self.observers {
+            ob.on_fault(t, &event);
+        }
+    }
+
+    pub(super) fn emit_request_failed(&mut self, outcome: &RequestOutcome) {
+        let t = self.now;
+        if let Some(s) = self.series.as_mut() {
+            s.on_request_failed(t, outcome);
+        }
+        for ob in &mut self.observers {
+            ob.on_request_failed(t, outcome);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn injector_is_deterministic_per_seed() {
+        let spec = FaultSpec { load_fail_prob: 0.3, ..FaultSpec::default() };
+        let mut a = FaultInjector::new(spec, 42);
+        let mut b = FaultInjector::new(spec, 42);
+        for _ in 0..100 {
+            assert_eq!(a.crash_delay_s().to_bits(), b.crash_delay_s().to_bits());
+            assert_eq!(a.repair_delay_s().to_bits(), b.repair_delay_s().to_bits());
+            assert_eq!(a.load_fails(), b.load_fails());
+        }
+        let mut c = FaultInjector::new(spec, 43);
+        let differs = (0..100).any(|_| a.crash_delay_s().to_bits() != c.crash_delay_s().to_bits());
+        assert!(differs, "different seeds must diverge");
+    }
+
+    #[test]
+    fn crash_gap_mean_tracks_mtbf() {
+        let spec = FaultSpec { mtbf_s: 600.0, mttr_s: 20.0, ..FaultSpec::default() };
+        let mut inj = FaultInjector::new(spec, 7);
+        let n = 20_000;
+        let mean_crash: f64 = (0..n).map(|_| inj.crash_delay_s()).sum::<f64>() / n as f64;
+        let mean_repair: f64 = (0..n).map(|_| inj.repair_delay_s()).sum::<f64>() / n as f64;
+        assert!((mean_crash - 600.0).abs() < 30.0, "mean crash gap {mean_crash}");
+        assert!((mean_repair - 20.0).abs() < 1.0, "mean repair gap {mean_repair}");
+    }
+
+    #[test]
+    fn load_fail_prob_extremes() {
+        let mut never = FaultInjector::new(
+            FaultSpec { load_fail_prob: 0.0, ..FaultSpec::default() },
+            1,
+        );
+        assert!((0..1000).all(|_| !never.load_fails()));
+        let mut always = FaultInjector::new(
+            FaultSpec { load_fail_prob: 1.0, ..FaultSpec::default() },
+            1,
+        );
+        assert!((0..1000).all(|_| always.load_fails()));
+    }
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let spec = FaultSpec {
+            retry: RetrySpec {
+                max_retries: 10,
+                backoff_base_s: 0.5,
+                backoff_cap_s: 3.0,
+                deadline_s: 60.0,
+            },
+            ..FaultSpec::default()
+        };
+        let inj = FaultInjector::new(spec, 1);
+        assert_eq!(inj.backoff_s(0), 0.5);
+        assert_eq!(inj.backoff_s(1), 1.0);
+        assert_eq!(inj.backoff_s(2), 2.0);
+        assert_eq!(inj.backoff_s(3), 3.0, "capped");
+        assert_eq!(inj.backoff_s(40), 3.0, "stays capped, no overflow");
+    }
+
+    #[test]
+    fn fault_draws_share_one_stream_in_schedule_order() {
+        // The injector is one stream: interleaving crash and load draws
+        // consumes it in call order, which the single-threaded event
+        // loop makes deterministic.
+        let spec = FaultSpec { load_fail_prob: 0.5, ..FaultSpec::default() };
+        let mut a = FaultInjector::new(spec, 9);
+        let seq_a: Vec<u64> = (0..8).map(|_| a.crash_delay_s().to_bits()).collect();
+        let mut b = FaultInjector::new(spec, 9);
+        let _ = b.load_fails(); // one extra draw shifts everything after
+        let seq_b: Vec<u64> = (0..8).map(|_| b.crash_delay_s().to_bits()).collect();
+        assert_ne!(seq_a, seq_b);
+    }
+}

@@ -12,6 +12,7 @@ pub mod dispatch;
 pub mod engine;
 pub mod events;
 pub mod exec;
+pub mod fault;
 pub mod flow;
 pub mod observe;
 pub mod sharded;
@@ -19,6 +20,7 @@ pub mod workloads;
 
 pub use billing::BillClass;
 pub use config::{BatchingMode, CacheMode, PreloadMode, SystemConfig, TierSpec};
+pub use fault::{FaultEvent, FaultInjector, FaultSpec, RetrySpec};
 pub use flow::{FlowNet, Retime};
 pub use engine::{Engine, RunStats, Workload};
 pub use events::{Event, EventKind, EventQueue, EventToken};

@@ -53,6 +53,7 @@ use crate::coordinator::policy::{AggregateBillSample, BillingModel, ClassBillSam
 use crate::cost::CostTracker;
 use crate::metrics::{RequestOutcome, RunMetrics, RunStats};
 use crate::sim::billing::BillClass;
+use crate::sim::fault::FaultEvent;
 use crate::util::json::{arr, num, obj, Json};
 
 /// Engine output hooks. Every method has a no-op default so observers
@@ -74,6 +75,16 @@ pub trait Observer: Send {
     /// Function `function` entered (`warm`) or left (`!warm`) the
     /// keep-alive warm set at `t_s`.
     fn on_keepalive(&mut self, _t_s: f64, _function: usize, _warm: bool) {}
+
+    /// A fault fired at `t_s` (GPU crash/recover, transient load
+    /// failure). Never fires when `SystemConfig::faults` is `None`.
+    fn on_fault(&mut self, _t_s: f64, _event: &FaultEvent) {}
+
+    /// A request failed permanently at `t_s` (deadline exceeded or retry
+    /// budget exhausted). The outcome is synthesized — `e2e_s` is
+    /// arrival → failure, latency/phase fields are zero — and it never
+    /// reaches `on_request_complete`.
+    fn on_request_failed(&mut self, _t_s: f64, _outcome: &RequestOutcome) {}
 
     /// The run is over; `end_s` is the billing end instant.
     fn on_finish(&mut self, _end_s: f64) {}
@@ -256,17 +267,18 @@ impl Observer for BillSeriesSampler {
 
 // ---------------------------------------------------------- trace export
 
-/// Per-request trace exporter: buffers every [`RequestOutcome`] and
-/// writes one file at `on_finish` — CSV (fixed columns, one row per
-/// request, completion order) or JSON (a top-level array of objects).
-/// Pure observer: it only ever clones borrowed outcomes, so enabling it
-/// cannot perturb metrics or cost by a single bit. A failed write is
-/// reported on stderr (observers have no error channel) and the run's
-/// in-memory results are unaffected.
+/// Per-request trace exporter: buffers every [`RequestOutcome`] — both
+/// completions and permanent failures, each tagged with a terminal
+/// `status` — and writes one file at `on_finish`: CSV (fixed columns,
+/// one row per request, completion order) or JSON (a top-level array of
+/// objects). Pure observer: it only ever clones borrowed outcomes, so
+/// enabling it cannot perturb metrics or cost by a single bit. A failed
+/// write is reported on stderr (observers have no error channel) and
+/// the run's in-memory results are unaffected.
 pub struct TraceExport {
     path: String,
     json: bool,
-    rows: Vec<RequestOutcome>,
+    rows: Vec<(RequestOutcome, &'static str)>,
 }
 
 impl TraceExport {
@@ -278,8 +290,9 @@ impl TraceExport {
         TraceExport { path: path.to_string(), json: true, rows: Vec::new() }
     }
 
-    /// The CSV column set, in order: identity, latencies, then one
-    /// `<phase>_s` column per [`Phase`] (zero when absent).
+    /// The CSV column set, in order: identity, latencies, one `<phase>_s`
+    /// column per [`Phase`] (zero when absent), then the terminal
+    /// `status` (`completed` | `failed`).
     pub fn csv_header() -> String {
         let mut cols = vec![
             "id".to_string(),
@@ -298,6 +311,7 @@ impl TraceExport {
                 .iter()
                 .map(|p| format!("{}_s", p.name().replace('-', "_"))),
         );
+        cols.push("status".to_string());
         cols.join(",")
     }
 
@@ -305,7 +319,7 @@ impl TraceExport {
     /// tests' seam — rendering is deterministic, file I/O is not).
     pub fn render(&self) -> String {
         if self.json {
-            return arr(self.rows.iter().map(|o| {
+            return arr(self.rows.iter().map(|(o, status)| {
                 let mut fields = vec![
                     ("id", num(o.id as f64)),
                     ("function", num(o.function as f64)),
@@ -329,13 +343,14 @@ impl TraceExport {
                             .collect(),
                     ),
                 ));
+                fields.push(("status", crate::util::json::s(status)));
                 obj(fields)
             }))
             .dump();
         }
         let mut out = Self::csv_header();
         out.push('\n');
-        for o in &self.rows {
+        for (o, status) in &self.rows {
             let tier = o.backbone_tier.map(|t| t.name()).unwrap_or("");
             out.push_str(&format!(
                 "{},{},{},{},{},{},{},{},{},{}",
@@ -353,7 +368,7 @@ impl TraceExport {
             for p in crate::metrics::Phase::ALL {
                 out.push_str(&format!(",{}", o.phases.get(&p).copied().unwrap_or(0.0)));
             }
-            out.push('\n');
+            out.push_str(&format!(",{status}\n"));
         }
         out
     }
@@ -361,7 +376,11 @@ impl TraceExport {
 
 impl Observer for TraceExport {
     fn on_request_complete(&mut self, _t_s: f64, outcome: &RequestOutcome) {
-        self.rows.push(outcome.clone());
+        self.rows.push((outcome.clone(), "completed"));
+    }
+
+    fn on_request_failed(&mut self, _t_s: f64, outcome: &RequestOutcome) {
+        self.rows.push((outcome.clone(), "failed"));
     }
 
     fn on_finish(&mut self, _end_s: f64) {
@@ -446,6 +465,37 @@ mod tests {
         // active 10 GB × 2 s; idle-warm 4 GB × 2 s.
         assert!((obs.cost.gpu_active_gb_s - 20.0).abs() < 1e-9);
         assert!((obs.cost.gpu_idle_gb_s - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_export_tags_terminal_status() {
+        let o = RequestOutcome {
+            id: 1,
+            function: 0,
+            arrival_s: 0.5,
+            phases: Default::default(),
+            ttft_s: 0.2,
+            tpot_s: 0.01,
+            e2e_s: 1.0,
+            output_tokens: 10,
+            batch_size: 1,
+            backbone_tier: None,
+        };
+        let mut failed = o.clone();
+        failed.id = 2;
+        let mut t = TraceExport::csv("unused.csv");
+        Observer::on_request_complete(&mut t, 1.5, &o);
+        Observer::on_request_failed(&mut t, 2.5, &failed);
+        let csv = t.render();
+        let mut lines = csv.lines();
+        assert!(lines.next().unwrap().ends_with(",status"), "status is the last column");
+        assert!(lines.next().unwrap().ends_with(",completed"));
+        assert!(lines.next().unwrap().ends_with(",failed"));
+        let mut tj = TraceExport::json("unused.json");
+        Observer::on_request_failed(&mut tj, 2.5, &failed);
+        let json = tj.render();
+        assert!(json.contains("\"status\""), "{json}");
+        assert!(json.contains("failed"), "{json}");
     }
 
     #[test]

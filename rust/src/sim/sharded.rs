@@ -279,6 +279,9 @@ fn merge(mut outputs: Vec<RunOutput>, zones: usize) -> RunOutput {
     let mut series: Option<BillSeries> = None;
     for (zone, out) in outputs.into_iter().enumerate() {
         metrics.duration_s = metrics.duration_s.max(out.metrics.duration_s);
+        // Failed requests leave no outcome — carry the counter across
+        // zones explicitly so goodput stays global.
+        metrics.failed += out.metrics.failed;
         for mut o in out.metrics.outcomes {
             o.function = zone + o.function * zones;
             metrics.outcomes.push(o);
