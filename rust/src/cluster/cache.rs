@@ -103,6 +103,15 @@ impl HostCache {
         self.entries.remove(model).is_some()
     }
 
+    /// Wipe the whole cache (node outage: the worker process died and
+    /// its pinned host memory with it). Returns how many checkpoints
+    /// were lost, for the engine's eviction accounting.
+    pub fn drain(&mut self) -> usize {
+        let n = self.entries.len();
+        self.entries.clear();
+        n
+    }
+
     /// Least-recently-used entry, ties broken by model name — the
     /// deterministic default victim.
     pub fn lru_victim(&self) -> Option<&'static str> {
@@ -135,6 +144,9 @@ mod tests {
         assert_eq!(c.get("a").unwrap().uses, 3);
         assert!(c.remove("b") && !c.remove("b"));
         assert!((c.used_gb() - 13.5).abs() < 1e-12);
+        assert_eq!(c.drain(), 1);
+        assert!(c.is_empty());
+        assert_eq!(c.drain(), 0, "drain of an empty cache is a no-op");
     }
 
     #[test]

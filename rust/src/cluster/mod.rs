@@ -185,6 +185,36 @@ pub struct Cluster {
     /// enabled, so health checks on the routing hot paths are one
     /// `is_empty()` when the subsystem is off.
     down: BTreeSet<GpuId>,
+    /// Nodes currently down (correlated failure domains). A GPU is up
+    /// only if it is not in `down` *and* its node is not here — so a
+    /// GPU-level recover while the node is still out does not make the
+    /// GPU routable. Empty unless domain faults are enabled.
+    node_down: BTreeSet<usize>,
+    /// Observed failure history for failure-aware routing. `None` (the
+    /// default) keeps `failure_penalty` at exactly 0.0 so score
+    /// arithmetic is bit-identical to the failure-blind build.
+    fail_hist: Option<FailureHistory>,
+}
+
+/// Per-GPU failure observations the router may consult as a score
+/// penalty (behind the `failure_aware` knob, default off).
+///
+/// Crash history is an event-driven EWMA: each crash decays the stored
+/// value by `exp(-Δt/τ)` and adds 1. The value is *not* re-decayed at
+/// read time — the router has no clock — so the penalty is piecewise
+/// constant between crashes, which keeps scoring deterministic and
+/// allocation-free on the dispatch hot path.
+#[derive(Debug, Clone, Default)]
+pub struct FailureHistory {
+    /// EWMA decay time constant (seconds).
+    tau_s: f64,
+    /// Score penalty (in the router's GB-equivalent units) per unit of
+    /// decayed crash count, and per unit of excess slowdown factor.
+    penalty_gb: f64,
+    /// GPU → (decayed crash count, time of last crash).
+    crash_ewma: BTreeMap<GpuId, (f64, f64)>,
+    /// GPU → current slowdown factor while degraded (absent = healthy).
+    degraded: BTreeMap<GpuId, f64>,
 }
 
 impl Cluster {
@@ -197,6 +227,8 @@ impl Cluster {
             index: RefCell::new(ClusterIndex::default()),
             bill_dirty: Vec::new(),
             down: BTreeSet::new(),
+            node_down: BTreeSet::new(),
+            fail_hist: None,
         }
     }
 
@@ -311,10 +343,12 @@ impl Cluster {
     // ------------------------------------------------------- health state
 
     /// Is this GPU up?  Routing, replication, and staging policies must
-    /// skip down GPUs; with faults off the set is empty and this is a
-    /// single branch.
+    /// skip down GPUs; with faults off both sets are empty and this is
+    /// two branches. A GPU is down if either it crashed individually or
+    /// its whole node is out — the two dimensions recover independently.
     pub fn gpu_is_up(&self, id: GpuId) -> bool {
-        self.down.is_empty() || !self.down.contains(&id)
+        (self.down.is_empty() || !self.down.contains(&id))
+            && (self.node_down.is_empty() || !self.node_down.contains(&id.node))
     }
 
     /// Flip a GPU's health (fault injection only). The caller (engine
@@ -328,9 +362,89 @@ impl Cluster {
         }
     }
 
-    /// Number of GPUs currently down.
+    /// Flip a whole node's health (correlated-domain fault injection).
+    /// Does not touch per-GPU health: a member GPU that also crashed
+    /// individually stays down after the node repairs, and a member GPU
+    /// whose individual repair lands while the node is out stays
+    /// unroutable until the node comes back.
+    pub fn set_node_health(&mut self, node: usize, up: bool) {
+        if up {
+            self.node_down.remove(&node);
+        } else {
+            self.node_down.insert(node);
+        }
+    }
+
+    /// Is this node up (node dimension only — its GPUs may still be
+    /// individually down)?
+    pub fn node_is_up(&self, node: usize) -> bool {
+        self.node_down.is_empty() || !self.node_down.contains(&node)
+    }
+
+    /// Number of GPUs currently down (GPU dimension only).
     pub fn n_down(&self) -> usize {
         self.down.len()
+    }
+
+    /// Number of nodes currently down.
+    pub fn n_nodes_down(&self) -> usize {
+        self.node_down.len()
+    }
+
+    // ------------------------------------------------- failure history
+
+    /// Turn on failure-history tracking (the `failure_aware` knob).
+    /// Until this is called, `failure_penalty` returns exactly 0.0.
+    pub fn enable_failure_tracking(&mut self, tau_s: f64, penalty_gb: f64) {
+        self.fail_hist = Some(FailureHistory {
+            tau_s: tau_s.max(1e-9),
+            penalty_gb,
+            ..FailureHistory::default()
+        });
+    }
+
+    pub fn failure_tracking_enabled(&self) -> bool {
+        self.fail_hist.is_some()
+    }
+
+    /// Record a crash observation for `id` at `now` (individual crash or
+    /// a correlated outage taking the GPU down). No-op when tracking is
+    /// off.
+    pub fn note_crash(&mut self, id: GpuId, now_s: f64) {
+        if let Some(h) = &mut self.fail_hist {
+            let e = h.crash_ewma.entry(id).or_insert((0.0, now_s));
+            let dt = (now_s - e.1).max(0.0);
+            e.0 = e.0 * (-dt / h.tau_s).exp() + 1.0;
+            e.1 = now_s;
+        }
+    }
+
+    /// Record that `id` entered (factor > 1) or left degraded mode.
+    /// No-op when tracking is off.
+    pub fn note_degrade(&mut self, id: GpuId, factor: f64) {
+        if let Some(h) = &mut self.fail_hist {
+            if factor > 1.0 {
+                h.degraded.insert(id, factor);
+            } else {
+                h.degraded.remove(&id);
+            }
+        }
+    }
+
+    /// Routing-score penalty for `id`, in the router's GB-equivalent
+    /// units: decayed crash count plus the excess slowdown factor while
+    /// degraded, each scaled by `penalty_gb`. Exactly 0.0 when tracking
+    /// is off — `score - 0.0` is bit-identical to `score`, so enabling
+    /// the code path without the knob perturbs nothing.
+    pub fn failure_penalty(&self, id: GpuId) -> f64 {
+        match &self.fail_hist {
+            None => 0.0,
+            Some(h) => {
+                let crashes = h.crash_ewma.get(&id).map_or(0.0, |&(v, _)| v);
+                let slow = h.degraded.get(&id).map_or(0.0, |&f| f - 1.0);
+                h.penalty_gb * (crashes + slow)
+            }
+        }
     }
 
     pub fn gpus(&self) -> impl Iterator<Item = &Gpu> {
@@ -680,6 +794,51 @@ mod tests {
         c.set_gpu_health(ids[0], true);
         assert!(c.gpu_is_up(ids[0]));
         assert_eq!(c.n_down(), 0);
+    }
+
+    #[test]
+    fn node_health_is_a_second_dimension() {
+        let mut c = Cluster::new(2, 2, 1);
+        let ids = c.gpu_ids();
+        assert!(c.node_is_up(0));
+        c.set_node_health(0, false);
+        assert_eq!(c.n_nodes_down(), 1);
+        assert_eq!(c.n_down(), 0, "node outage is not per-GPU down state");
+        assert!(!c.gpu_is_up(ids[0]) && !c.gpu_is_up(ids[1]));
+        assert!(c.gpu_is_up(ids[2]) && c.gpu_is_up(ids[3]));
+        // An individual crash on a node-down GPU, then its individual
+        // repair while the node is still out: not routable.
+        c.set_gpu_health(ids[0], false);
+        c.set_gpu_health(ids[0], true);
+        assert!(!c.gpu_is_up(ids[0]), "node still down");
+        // Node repair with a member GPU individually down: only the
+        // healthy member comes back.
+        c.set_gpu_health(ids[1], false);
+        c.set_node_health(0, true);
+        assert!(c.gpu_is_up(ids[0]));
+        assert!(!c.gpu_is_up(ids[1]), "individual crash outlives node repair");
+    }
+
+    #[test]
+    fn failure_penalty_is_zero_until_enabled() {
+        let mut c = Cluster::new(1, 2, 1);
+        let ids = c.gpu_ids();
+        c.note_crash(ids[0], 10.0); // no-op: tracking off
+        c.note_degrade(ids[0], 3.0);
+        assert_eq!(c.failure_penalty(ids[0]).to_bits(), 0.0_f64.to_bits());
+        c.enable_failure_tracking(100.0, 2.0);
+        assert_eq!(c.failure_penalty(ids[0]), 0.0, "no observations yet");
+        c.note_crash(ids[0], 10.0);
+        assert!((c.failure_penalty(ids[0]) - 2.0).abs() < 1e-12);
+        // A second crash one time-constant later: e^-1 decay plus 1.
+        c.note_crash(ids[0], 110.0);
+        let want = 2.0 * ((-1.0_f64).exp() + 1.0);
+        assert!((c.failure_penalty(ids[0]) - want).abs() < 1e-12);
+        // Degrade adds (factor - 1) in the same units; restore clears it.
+        c.note_degrade(ids[1], 2.5);
+        assert!((c.failure_penalty(ids[1]) - 3.0).abs() < 1e-12);
+        c.note_degrade(ids[1], 1.0);
+        assert_eq!(c.failure_penalty(ids[1]), 0.0);
     }
 
     #[test]

@@ -277,7 +277,13 @@ impl PreloadScheduler {
                                 continue;
                             }
                         }
-                        // Least-loaded admissible GPU that fits.
+                        // Least-loaded admissible GPU that fits. Under
+                        // failure-aware routing, planned free space is
+                        // discounted by the GPU's failure-history
+                        // penalty — staging avoids crash-prone or
+                        // degraded hardware. Off (default) the penalty
+                        // is exactly 0.0 and `x - 0.0` keeps the
+                        // comparison bit-identical.
                         let best = gpu_free
                             .iter()
                             .filter(|(&g, &free)| {
@@ -294,7 +300,10 @@ impl PreloadScheduler {
                                         cluster,
                                     )
                             })
-                            .max_by(|a, b| a.1.total_cmp(b.1))
+                            .max_by(|a, b| {
+                                (*a.1 - cluster.failure_penalty(*a.0))
+                                    .total_cmp(&(*b.1 - cluster.failure_penalty(*b.0)))
+                            })
                             .map(|(&g, _)| g);
                         let Some(g) = best else { continue };
                         *gpu_free.get_mut(&g).unwrap() -= c.size_gb;

@@ -58,7 +58,11 @@ impl Router {
     }
 
     /// Score a GPU for this function: prefer warm artifacts (locality),
-    /// then KV headroom. Higher is better.
+    /// then KV headroom, minus the failure-history penalty (GB-units of
+    /// decayed crash count and active slowdown) when failure-aware
+    /// routing is enabled. With the knob off the penalty is exactly 0.0,
+    /// and `x - 0.0` is an IEEE identity — scores are bit-identical to
+    /// the failure-blind router. Higher is better.
     fn score(cluster: &Cluster, spec: &FunctionSpec, gpu: GpuId) -> f64 {
         let r = Self::readiness(cluster, spec, gpu);
         let g = cluster.gpu(gpu);
@@ -67,7 +71,7 @@ impl Router {
             + (r.kernel_on_gpu as u32 as f64) * 3.0
             + (r.adapter_on_gpu as u32 as f64) * 1.0
             + (r.cuda_context as u32 as f64) * 0.5;
-        warm + g.free_gb() / 1000.0 // free memory as tie-break
+        warm + g.free_gb() / 1000.0 - cluster.failure_penalty(gpu)
     }
 
     /// Penalised selection key: GPUs that cannot even fit the KV after
@@ -135,6 +139,12 @@ impl Router {
             best = best.max(Some(Self::key(cluster, spec, kv_need, g)));
         }
         let mut cold: Option<(u64, GpuId)> = None;
+        // Failure-aware routing breaks the "descending free order ⇒
+        // descending score" shortcut: a crash-prone GPU's penalty can
+        // demote it below a less-free candidate, so the scan must see
+        // every GPU. With tracking off (the default) the shortcut — and
+        // its exact historical tie behavior — is untouched.
+        let tracking = cluster.failure_tracking_enabled();
         cluster.scan_free_desc(|g, free| {
             if !cluster.gpu_is_up(g) {
                 return false; // down GPUs are not candidates
@@ -142,17 +152,23 @@ impl Router {
             if resident.contains(&g) {
                 return false; // already scored with its warmth
             }
+            let s = free / 1000.0 - cluster.failure_penalty(g);
             if cluster.gpu(g).total_gb < kv_need {
                 // Penalised fallback: the first one seen is the argmax
                 // (descending free order ⇒ descending penalised score).
-                if cold.is_none() {
-                    cold = Some((f64_key(free / 1000.0 - 1e6), g));
+                if tracking {
+                    cold = cold.max(Some((f64_key(s - 1e6), g)));
+                } else if cold.is_none() {
+                    cold = Some((f64_key(s - 1e6), g));
                 }
                 false
+            } else if tracking {
+                cold = cold.max(Some((f64_key(s), g)));
+                false // keep scanning: later GPUs may out-score penalties
             } else {
                 // First KV-fitting GPU on the frontier: argmax of every
                 // remaining zero-warmth candidate. Stop the scan.
-                cold = Some((f64_key(free / 1000.0), g));
+                cold = Some((f64_key(s), g));
                 true
             }
         });
@@ -245,6 +261,33 @@ mod tests {
         // Recovery restores candidacy (and the warm host wins again).
         c.set_gpu_health(g1, true);
         assert_eq!(Router::route(&c, &r, &spec(0), 1).unwrap().gpu, g1);
+    }
+
+    #[test]
+    fn failure_penalty_diverts_routing_when_enabled() {
+        let mut c = Cluster::new(1, 2, 2);
+        let r = BackboneRegistry::new();
+        let [g0, g1] = [c.gpu_ids()[0], c.gpu_ids()[1]];
+        // Cold ties resolve to the highest id — g1 — by default.
+        assert_eq!(Router::route(&c, &r, &spec(0), 1).unwrap().gpu, g1);
+        c.enable_failure_tracking(600.0, 4.0);
+        assert_eq!(
+            Router::route(&c, &r, &spec(0), 1).unwrap().gpu,
+            g1,
+            "tracking with no history changes nothing"
+        );
+        c.note_crash(g1, 0.0);
+        assert_eq!(
+            Router::route(&c, &r, &spec(0), 1).unwrap().gpu,
+            g0,
+            "crash history must penalize g1 below the clean twin"
+        );
+        // An active 3× degrade on g0 (penalty 8.0) now outweighs g1's
+        // single crash (penalty 4.0).
+        c.note_degrade(g0, 3.0);
+        assert_eq!(Router::route(&c, &r, &spec(0), 1).unwrap().gpu, g1);
+        c.note_degrade(g0, 1.0);
+        assert_eq!(Router::route(&c, &r, &spec(0), 1).unwrap().gpu, g0, "restore clears it");
     }
 
     #[test]

@@ -12,11 +12,17 @@
 //! bounded-backoff retries, and requests that exhaust the retry budget
 //! or their deadline fail permanently — goodput is the fraction that
 //! still completed.
+//!
+//! A companion table runs the correlated-domains cell (node + zone
+//! outages plus degrade episodes, `sim::fault::DomainSpec`/
+//! `DegradeSpec`) once per routing mode — failure-blind vs
+//! failure-aware — and reports SLO attainment (per-function deadline
+//! hit-rate, failures counted as misses) next to goodput throughout.
 
 use std::sync::Mutex;
 
 use crate::scenario::{self, ClusterSpec, MetricSummary, ScenarioSpec, WorkloadSpec};
-use crate::sim::{FaultSpec, RetrySpec};
+use crate::sim::{DegradeSpec, DomainLevel, DomainSpec, FaultSpec};
 use crate::trace::Pattern;
 use crate::util::json::{num, obj, Json};
 use crate::util::table::Table;
@@ -26,6 +32,10 @@ use crate::util::table::Table;
 /// when the sweep already ran in this process.
 static LAST_REFERENCE: Mutex<Option<FaultPoint>> = Mutex::new(None);
 
+/// Most recent correlated-domains measurements (failure-blind,
+/// failure-aware), cached the same way for `faults_json`.
+static LAST_CORRELATED: Mutex<Option<(CorrelatedPoint, CorrelatedPoint)>> = Mutex::new(None);
+
 /// One measured grid cell: a multi-seed summary plus the fault-path
 /// counters summed across seeds.
 #[derive(Clone)]
@@ -34,6 +44,8 @@ pub struct FaultPoint {
     pub mttr_s: f64,
     pub requests: usize,
     pub goodput: MetricSummary,
+    /// Deadline hit-rate (TTFT ≤ the per-function SLO; failures miss).
+    pub slo: MetricSummary,
     pub failed: MetricSummary,
     pub ttft_ms: MetricSummary,
     /// Fault-free reference TTFT (same workload/cluster/seeds).
@@ -50,6 +62,24 @@ impl FaultPoint {
     pub fn ttft_degradation(&self) -> f64 {
         self.ttft_ms.mean / self.ttft_ref_ms.mean.max(1e-12)
     }
+}
+
+/// One measured correlated-domains cell (node + zone outages + degrade
+/// episodes) under one routing mode.
+#[derive(Clone)]
+pub struct CorrelatedPoint {
+    pub failure_aware: bool,
+    pub requests: usize,
+    pub goodput: MetricSummary,
+    pub slo: MetricSummary,
+    pub failed: MetricSummary,
+    pub ttft_ms: MetricSummary,
+    pub node_outages: u64,
+    pub node_repairs: u64,
+    pub zone_outages: u64,
+    pub zone_repairs: u64,
+    pub degrades: u64,
+    pub degrade_retimes: u64,
 }
 
 /// Mean-time-between-failures values swept (seconds per GPU).
@@ -90,7 +120,33 @@ fn horizon(quick: bool) -> f64 {
 /// load-failure rate rides along so the retry/backoff path is exercised
 /// in every cell, with the default retry policy.
 pub fn fault_spec(mtbf_s: f64, mttr_s: f64) -> FaultSpec {
-    FaultSpec { mtbf_s, mttr_s, load_fail_prob: 0.05, retry: RetrySpec::default() }
+    FaultSpec { mtbf_s, mttr_s, load_fail_prob: 0.05, ..FaultSpec::default() }
+}
+
+/// The correlated-faults cell: GPU crashes plus node/zone outages and
+/// degrade episodes, all aggressive enough to fire within the quick
+/// horizon, with routing either failure-blind (the historical scorer)
+/// or failure-aware (crash-history EWMA penalty).
+pub fn correlated_spec(failure_aware: bool) -> FaultSpec {
+    FaultSpec {
+        mtbf_s: 600.0,
+        mttr_s: 30.0,
+        load_fail_prob: 0.02,
+        domains: Some(DomainSpec {
+            node: Some(DomainLevel { mtbf_s: 450.0, mttr_s: 40.0 }),
+            // Aggressive enough that the zone chain fires within even
+            // the quick 600 s horizon on every swept seed set.
+            zone: Some(DomainLevel { mtbf_s: 180.0, mttr_s: 40.0 }),
+        }),
+        degrade: Some(DegradeSpec {
+            mtbf_s: 400.0,
+            duration_s: 60.0,
+            factor_min: 2.0,
+            factor_max: 4.0,
+        }),
+        failure_aware,
+        ..FaultSpec::default()
+    }
 }
 
 /// Build one grid cell. Multi-node so a whole-node invalidation never
@@ -140,6 +196,7 @@ pub fn run_point(mtbf_s: f64, mttr_s: f64, quick: bool) -> FaultPoint {
         mttr_s,
         requests: sum.requests,
         goodput: sum.goodput,
+        slo: sum.slo_attainment,
         failed: sum.failed,
         ttft_ms: sum.ttft_ms,
         ttft_ref_ms: ref_sum.ttft_ms,
@@ -148,6 +205,41 @@ pub fn run_point(mtbf_s: f64, mttr_s: f64, quick: bool) -> FaultPoint {
         redispatched: tally(|s| s.redispatched),
         load_failures: tally(|s| s.load_failures),
         retries: tally(|s| s.retries),
+    }
+}
+
+/// Run the correlated-domains cell under one routing mode and fold it
+/// into a [`CorrelatedPoint`]. Conservation is asserted per seed.
+pub fn run_correlated(failure_aware: bool, quick: bool) -> CorrelatedPoint {
+    let name =
+        if failure_aware { "faults-correlated-aware" } else { "faults-correlated-blind" };
+    let report = scenario::run(&cell(Some(correlated_spec(failure_aware)), name, quick))
+        .expect("correlated cell runs");
+    for run in &report.runs {
+        assert_eq!(
+            run.metrics.outcomes.len() + run.metrics.failed as usize,
+            run.requests,
+            "seed {}: requests must be conserved under domain faults",
+            run.seed
+        );
+    }
+    let sum = scenario::summarize(&report);
+    let tally = |f: fn(&crate::metrics::RunStats) -> u64| {
+        report.runs.iter().map(|r| f(&r.stats)).sum::<u64>()
+    };
+    CorrelatedPoint {
+        failure_aware,
+        requests: sum.requests,
+        goodput: sum.goodput,
+        slo: sum.slo_attainment,
+        failed: sum.failed,
+        ttft_ms: sum.ttft_ms,
+        node_outages: tally(|s| s.node_outages),
+        node_repairs: tally(|s| s.node_repairs),
+        zone_outages: tally(|s| s.zone_outages),
+        zone_repairs: tally(|s| s.zone_repairs),
+        degrades: tally(|s| s.degrades),
+        degrade_retimes: tally(|s| s.degrade_retimes),
     }
 }
 
@@ -160,6 +252,7 @@ pub fn faults(quick: bool) -> String {
             "MTTR(s)",
             "requests",
             "goodput",
+            "SLO-att",
             "failed",
             "TTFT(ms)",
             "TTFT ×ref",
@@ -182,6 +275,7 @@ pub fn faults(quick: bool) -> String {
                 format!("{mttr_s}"),
                 p.requests.to_string(),
                 p.goodput.cell(3),
+                p.slo.cell(3),
                 p.failed.cell(1),
                 p.ttft_ms.cell(1),
                 format!("{:.2}x", p.ttft_degradation()),
@@ -193,6 +287,49 @@ pub fn faults(quick: bool) -> String {
         }
     }
     *LAST_REFERENCE.lock().unwrap() = reference;
+    let mut out = t.render();
+    out.push_str(&correlated_table(quick));
+    out
+}
+
+/// The correlated-domains companion table: node + zone outages and
+/// degrade episodes, one row per routing mode so failure-blind vs
+/// failure-aware routing read side by side.
+fn correlated_table(quick: bool) -> String {
+    let mut t = Table::new(
+        "Correlated faults — node/zone outages + degrade (mean ± 95% CI across seeds)",
+        &[
+            "routing",
+            "requests",
+            "goodput",
+            "SLO-att",
+            "failed",
+            "TTFT(ms)",
+            "node out",
+            "node rep",
+            "zone out",
+            "degrades",
+            "retimes",
+        ],
+    );
+    let blind = run_correlated(false, quick);
+    let aware = run_correlated(true, quick);
+    for p in [&blind, &aware] {
+        t.row(vec![
+            if p.failure_aware { "failure-aware" } else { "failure-blind" }.to_string(),
+            p.requests.to_string(),
+            p.goodput.cell(3),
+            p.slo.cell(3),
+            p.failed.cell(1),
+            p.ttft_ms.cell(1),
+            p.node_outages.to_string(),
+            p.node_repairs.to_string(),
+            p.zone_outages.to_string(),
+            p.degrades.to_string(),
+            p.degrade_retimes.to_string(),
+        ]);
+    }
+    *LAST_CORRELATED.lock().unwrap() = Some((blind, aware));
     t.render()
 }
 
@@ -206,11 +343,31 @@ pub fn faults_json(quick: bool) -> Json {
         Some(p) => p,
         None => run_point(mtbfs(quick)[0], mttrs(quick)[0], quick),
     };
+    let correlated = LAST_CORRELATED.lock().unwrap().clone();
+    let (blind, aware) = match correlated {
+        Some(pair) => pair,
+        None => (run_correlated(false, quick), run_correlated(true, quick)),
+    };
+    let corr = |p: &CorrelatedPoint| {
+        obj(vec![
+            ("goodput", num(p.goodput.mean)),
+            ("slo_attainment", num(p.slo.mean)),
+            ("failed_mean", num(p.failed.mean)),
+            ("ttft_ms", num(p.ttft_ms.mean)),
+            ("node_outages", num(p.node_outages as f64)),
+            ("node_repairs", num(p.node_repairs as f64)),
+            ("zone_outages", num(p.zone_outages as f64)),
+            ("zone_repairs", num(p.zone_repairs as f64)),
+            ("degrades", num(p.degrades as f64)),
+            ("degrade_retimes", num(p.degrade_retimes as f64)),
+        ])
+    };
     obj(vec![
         ("mtbf_s", num(p.mtbf_s)),
         ("mttr_s", num(p.mttr_s)),
         ("requests", num(p.requests as f64)),
         ("goodput", num(p.goodput.mean)),
+        ("slo_attainment", num(p.slo.mean)),
         ("failed_mean", num(p.failed.mean)),
         ("ttft_ms", num(p.ttft_ms.mean)),
         ("ttft_degradation", num(p.ttft_degradation())),
@@ -219,6 +376,8 @@ pub fn faults_json(quick: bool) -> Json {
         ("redispatched", num(p.redispatched as f64)),
         ("load_failures", num(p.load_failures as f64)),
         ("retries", num(p.retries as f64)),
+        ("correlated_blind", corr(&blind)),
+        ("correlated_aware", corr(&aware)),
     ])
 }
 
@@ -253,6 +412,41 @@ mod tests {
             "faults cannot meaningfully improve TTFT: {:.3}x",
             p.ttft_degradation()
         );
+        assert!(
+            p.slo.mean > 0.0 && p.slo.mean <= 1.0,
+            "SLO attainment {} out of range",
+            p.slo.mean
+        );
+    }
+
+    #[test]
+    fn correlated_point_fires_domains_under_both_routing_modes() {
+        for failure_aware in [false, true] {
+            let p = run_correlated(failure_aware, true);
+            assert!(p.requests > 0);
+            assert!(p.node_outages > 0, "450 s node MTBF over 600 s × 2 nodes must fire");
+            assert_eq!(
+                p.node_outages, p.node_repairs,
+                "every node outage must repair before the horizon drains"
+            );
+            assert!(p.zone_outages > 0, "180 s zone MTBF over 600 s must fire");
+            assert_eq!(
+                p.zone_outages, p.zone_repairs,
+                "every zone outage must drain back to all-nodes-up"
+            );
+            assert!(p.degrades > 0, "400 s degrade MTBF over 600 s × 4 GPUs must fire");
+            assert!(p.degrade_retimes > 0, "degrade episodes must re-time in-flight work");
+            assert!(
+                p.goodput.mean > 0.0 && p.goodput.mean <= 1.0,
+                "goodput {} out of range",
+                p.goodput.mean
+            );
+            assert!(
+                p.slo.mean > 0.0 && p.slo.mean <= 1.0,
+                "SLO attainment {} out of range",
+                p.slo.mean
+            );
+        }
     }
 
     #[test]
@@ -260,13 +454,22 @@ mod tests {
         let j = faults_json(true);
         for key in [
             "goodput",
+            "slo_attainment",
             "ttft_degradation",
             "gpu_crashes",
             "redispatched",
             "load_failures",
             "retries",
+            "correlated_blind",
+            "correlated_aware",
         ] {
             assert!(j.get(key).is_some(), "BENCH record missing '{key}'");
+        }
+        for mode in ["correlated_blind", "correlated_aware"] {
+            let c = j.get(mode).unwrap();
+            for key in ["slo_attainment", "node_outages", "zone_outages", "degrades"] {
+                assert!(c.get(key).is_some(), "'{mode}' record missing '{key}'");
+            }
         }
     }
 }

@@ -552,10 +552,76 @@ fn check_faults() -> Result<String, String> {
     Ok(line)
 }
 
+/// Correlated-faults leg of the regression guard: run the domains +
+/// degrade cell (`faults::run_correlated`, failure-aware routing so the
+/// penalty path is exercised end to end) and check the structural
+/// envelopes that a refactor is most likely to silently break:
+///
+/// * node outages *must* fire at a 450 s MTBF over the quick horizon,
+///   and every one must repair before the queue drains
+///   (`node_repairs == node_outages` — a miscount means a repair chain
+///   was dropped or double-armed);
+/// * the zone chain must fire and drain back to all-nodes-up
+///   (`zone_repairs == zone_outages`);
+/// * degrade episodes must fire *and* re-time in-flight work
+///   (`degrade_retimes > 0`) — zero retimes with nonzero episodes means
+///   the slowdown never reached the execution model;
+/// * SLO attainment stays a hit-rate: in (0, 1].
+fn check_correlated() -> Result<String, String> {
+    let p = super::faults::run_correlated(true, true);
+    let line = format!(
+        "correlated-check failure-aware: {} requests, node {}/{} out/rep, \
+         zone {}/{} out/rep, {} degrades / {} retimes, SLO-att {:.3}, goodput {:.3}",
+        p.requests,
+        p.node_outages,
+        p.node_repairs,
+        p.zone_outages,
+        p.zone_repairs,
+        p.degrades,
+        p.degrade_retimes,
+        p.slo.mean,
+        p.goodput.mean,
+    );
+    if p.node_outages == 0 {
+        return Err(format!(
+            "{line}\n  FAIL: no node outages at a 450 s MTBF — the domain injector is not firing"
+        ));
+    }
+    if p.node_repairs != p.node_outages {
+        return Err(format!(
+            "{line}\n  FAIL: {} node outages but {} repairs — a node stayed down",
+            p.node_outages, p.node_repairs
+        ));
+    }
+    if p.zone_outages == 0 {
+        return Err(format!(
+            "{line}\n  FAIL: no zone outages at a 180 s MTBF — the zone chain is not firing"
+        ));
+    }
+    if p.zone_repairs != p.zone_outages {
+        return Err(format!(
+            "{line}\n  FAIL: {} zone outages but {} repairs — the zone never drained",
+            p.zone_outages, p.zone_repairs
+        ));
+    }
+    if p.degrades == 0 || p.degrade_retimes == 0 {
+        return Err(format!(
+            "{line}\n  FAIL: degraded mode is not re-timing work \
+             ({} episodes, {} retimes)",
+            p.degrades, p.degrade_retimes
+        ));
+    }
+    if !(p.slo.mean > 0.0 && p.slo.mean <= 1.0) {
+        return Err(format!("{line}\n  FAIL: SLO attainment {} out of range", p.slo.mean));
+    }
+    Ok(line)
+}
+
 /// CI regression guard (`serverless-lora fleet --check`): run the quick
 /// grid and compare the deterministic counters against `QUICK_BOUNDS`,
-/// then bound the tiered-store counters on the `tiers` reference cell
-/// and the recovery counters on a fast-failure `faults` cell.
+/// then bound the tiered-store counters on the `tiers` reference cell,
+/// the recovery counters on a fast-failure `faults` cell, and the
+/// domain/degrade counters on the correlated-faults cell.
 pub fn check() -> Result<String, String> {
     let mut out = String::new();
     for b in QUICK_BOUNDS {
@@ -566,6 +632,8 @@ pub fn check() -> Result<String, String> {
     out.push_str(&check_tiers()?);
     out.push('\n');
     out.push_str(&check_faults()?);
+    out.push('\n');
+    out.push_str(&check_correlated()?);
     out.push('\n');
     out.push_str("fleet-check: all counters within committed bounds\n");
     Ok(out)
@@ -690,6 +758,16 @@ mod tests {
         let line = check_faults().expect("healthy faulty engine trips the guard");
         assert!(line.contains("retries/load-failure"));
         assert!(line.contains("redispatched"));
+    }
+
+    #[test]
+    fn correlated_leg_of_the_guard_passes() {
+        // The domain/degrade bounds must hold on a healthy engine: node
+        // and zone chains fired and drained, degrade re-timed work, SLO
+        // attainment a hit-rate.
+        let line = check_correlated().expect("healthy correlated-faults engine trips the guard");
+        assert!(line.contains("out/rep"));
+        assert!(line.contains("SLO-att"));
     }
 
     #[test]

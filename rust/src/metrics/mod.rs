@@ -169,6 +169,20 @@ pub struct RunStats {
     /// Requests re-enqueued because their in-flight batch's GPU crashed
     /// (no retry budget consumed; deadline still applies).
     pub redispatched: u64,
+    /// Correlated-domain faults: whole-node outages fired / repaired.
+    pub node_outages: u64,
+    pub node_repairs: u64,
+    /// Zone-wide outages fired / repaired (each engine is one zone).
+    pub zone_outages: u64,
+    pub zone_repairs: u64,
+    /// Degraded-mode episodes begun / restored to full speed. The two
+    /// differ only when a crash cut an episode short.
+    pub degrades: u64,
+    pub degrade_restores: u64,
+    /// In-flight work re-timed by a degrade factor change: exec
+    /// completion ticks and flat cold loads (cancel + re-push pairs),
+    /// plus loads stretched at dispatch onto a degraded GPU.
+    pub degrade_retimes: u64,
 }
 
 impl RunStats {
@@ -205,6 +219,13 @@ impl RunStats {
         self.retries += o.retries;
         self.requests_failed += o.requests_failed;
         self.redispatched += o.redispatched;
+        self.node_outages += o.node_outages;
+        self.node_repairs += o.node_repairs;
+        self.zone_outages += o.zone_outages;
+        self.zone_repairs += o.zone_repairs;
+        self.degrades += o.degrades;
+        self.degrade_restores += o.degrade_restores;
+        self.degrade_retimes += o.degrade_retimes;
     }
 }
 
@@ -216,6 +237,10 @@ pub struct RunMetrics {
     /// Requests that failed permanently (fault injection: deadline or
     /// retry exhaustion). Failed requests do not appear in `outcomes`.
     pub failed: u64,
+    /// Permanent failures broken down by function id — the denominator
+    /// side of per-class SLO attainment (a failed request is an SLO
+    /// miss, never a dropped sample).
+    pub failed_by_function: BTreeMap<usize, u64>,
 }
 
 impl RunMetrics {
@@ -293,6 +318,47 @@ impl RunMetrics {
         viol as f64 / self.outcomes.len() as f64
     }
 
+    /// Fraction of *finished* requests (completed + permanently failed)
+    /// whose TTFT met the per-function SLO. Failed requests count as
+    /// misses, so the surface cannot be gamed by dropping work; an
+    /// empty run is vacuously 1.0. Complement of `slo_violation_rate`
+    /// only in fault-free runs, where the denominators coincide.
+    pub fn slo_attainment(&self, slo_of: impl Fn(usize) -> f64) -> f64 {
+        let total = self.outcomes.len() as f64 + self.failed as f64;
+        if total <= 0.0 {
+            return 1.0;
+        }
+        let hits = self
+            .outcomes
+            .iter()
+            .filter(|o| o.ttft_s <= slo_of(o.function))
+            .count();
+        hits as f64 / total
+    }
+
+    /// Per-function-class SLO attainment (deadline hit-rate), keyed by
+    /// function id. Functions with no finished requests are absent.
+    pub fn slo_attainment_by_function(
+        &self,
+        slo_of: impl Fn(usize) -> f64,
+    ) -> BTreeMap<usize, f64> {
+        let mut hits: BTreeMap<usize, u64> = BTreeMap::new();
+        let mut totals: BTreeMap<usize, u64> = BTreeMap::new();
+        for o in &self.outcomes {
+            *totals.entry(o.function).or_insert(0) += 1;
+            if o.ttft_s <= slo_of(o.function) {
+                *hits.entry(o.function).or_insert(0) += 1;
+            }
+        }
+        for (&f, &n) in &self.failed_by_function {
+            *totals.entry(f).or_insert(0) += n;
+        }
+        totals
+            .into_iter()
+            .map(|(f, n)| (f, hits.get(&f).copied().unwrap_or(0) as f64 / n as f64))
+            .collect()
+    }
+
     /// Output-token throughput over the run (tokens/s).
     pub fn token_throughput(&self) -> f64 {
         if self.duration_s <= 0.0 {
@@ -329,8 +395,15 @@ impl RunMetrics {
         stats::cdf_at(&xs, thresholds)
     }
 
-    /// Filter outcomes to a set of functions (e.g. "7B-series" rows).
+    /// Filter outcomes (and failure counts) to a set of functions
+    /// (e.g. "7B-series" rows).
     pub fn subset(&self, functions: &[usize]) -> RunMetrics {
+        let failed_by_function: BTreeMap<usize, u64> = self
+            .failed_by_function
+            .iter()
+            .filter(|(f, _)| functions.contains(f))
+            .map(|(&f, &n)| (f, n))
+            .collect();
         RunMetrics {
             outcomes: self
                 .outcomes
@@ -339,6 +412,8 @@ impl RunMetrics {
                 .cloned()
                 .collect(),
             duration_s: self.duration_s,
+            failed: failed_by_function.values().sum(),
+            failed_by_function,
         }
     }
 }
@@ -468,9 +543,56 @@ mod tests {
         let mut m = RunMetrics::default();
         m.record(outcome(0, 1.0, 2.0));
         m.record(outcome(5, 9.0, 9.5));
+        m.failed = 3;
+        m.failed_by_function.insert(0, 2);
+        m.failed_by_function.insert(5, 1);
         let s = m.subset(&[5]);
         assert_eq!(s.outcomes.len(), 1);
         assert_eq!(s.outcomes[0].function, 5);
+        assert_eq!(s.failed, 1, "subset carries its functions' failures");
+        assert_eq!(s.failed_by_function.get(&5), Some(&1));
+        assert_eq!(s.failed_by_function.get(&0), None);
+    }
+
+    #[test]
+    fn slo_attainment_counts_failures_as_misses() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.slo_attainment(|_| 1.0), 1.0, "empty run is vacuously attained");
+        m.record(outcome(0, 1.0, 3.0)); // hit (≤ 2.5)
+        m.record(outcome(0, 3.0, 5.0)); // miss
+        m.record(outcome(1, 3.0, 5.0)); // hit (≤ 4.0)
+        let slo = |f: usize| if f == 0 { 2.5 } else { 4.0 };
+        assert!((m.slo_attainment(slo) - 2.0 / 3.0).abs() < 1e-9);
+        // Two permanent failures on function 1: misses, not dropped.
+        m.failed = 2;
+        m.failed_by_function.insert(1, 2);
+        assert!((m.slo_attainment(slo) - 2.0 / 5.0).abs() < 1e-9);
+        let per = m.slo_attainment_by_function(slo);
+        assert!((per[&0] - 0.5).abs() < 1e-9);
+        assert!((per[&1] - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn domain_and_degrade_counters_merge_additively() {
+        let mut a = RunStats { node_outages: 1, degrades: 2, ..RunStats::default() };
+        let b = RunStats {
+            node_outages: 2,
+            node_repairs: 3,
+            zone_outages: 1,
+            zone_repairs: 1,
+            degrades: 1,
+            degrade_restores: 2,
+            degrade_retimes: 7,
+            ..RunStats::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.node_outages, 3);
+        assert_eq!(a.node_repairs, 3);
+        assert_eq!(a.zone_outages, 1);
+        assert_eq!(a.zone_repairs, 1);
+        assert_eq!(a.degrades, 3);
+        assert_eq!(a.degrade_restores, 2);
+        assert_eq!(a.degrade_retimes, 7);
     }
 
     #[test]

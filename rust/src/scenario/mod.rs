@@ -47,6 +47,9 @@ pub struct SeedRun {
     pub cost: CostTracker,
     pub stats: RunStats,
     pub bill_series: Option<BillSeries>,
+    /// Fraction of offered requests whose TTFT met the per-function SLO
+    /// (the function spec's `slo_ttft_s`); failed requests count as misses.
+    pub slo_attainment: f64,
 }
 
 /// One scenario's results: one [`SeedRun`] per seed, in seed order.
@@ -113,6 +116,8 @@ pub fn run_grid(specs: &[ScenarioSpec]) -> Result<Vec<ScenarioReport>, ScenarioE
 fn run_seed(sp: &ScenarioSpec, seed: u64) -> SeedRun {
     let workload = sp.workload.materialize(sp.horizon_s);
     let requests = workload.requests.len();
+    // Per-function SLO snapshot (the workload moves into the engine).
+    let slos: Vec<f64> = workload.functions.iter().map(|f| f.slo_ttft_s).collect();
     let cfg = sp
         .system
         .resolve(sp.workload.pattern().unwrap_or(Pattern::Normal))
@@ -147,6 +152,7 @@ fn run_seed(sp: &ScenarioSpec, seed: u64) -> SeedRun {
         }
         engine.run_full()
     };
+    let slo_attainment = out.metrics.slo_attainment(|f| slos[f]);
     SeedRun {
         seed,
         requests,
@@ -155,6 +161,7 @@ fn run_seed(sp: &ScenarioSpec, seed: u64) -> SeedRun {
         cost: out.cost,
         stats: out.stats,
         bill_series: out.bill_series,
+        slo_attainment,
     }
 }
 
@@ -206,6 +213,8 @@ pub struct ScenarioSummary {
     pub completed: MetricSummary,
     pub failed: MetricSummary,
     pub goodput: MetricSummary,
+    /// Deadline hit-rate: TTFT ≤ the profile SLO, failures as misses.
+    pub slo_attainment: MetricSummary,
     pub ttft_ms: MetricSummary,
     pub e2e_ms: MetricSummary,
     pub cost_usd: MetricSummary,
@@ -224,6 +233,7 @@ pub fn summarize(report: &ScenarioReport) -> ScenarioSummary {
         completed: of(report, |r| r.metrics.outcomes.len() as f64),
         failed: of(report, |r| r.metrics.failed as f64),
         goodput: of(report, |r| r.metrics.goodput()),
+        slo_attainment: of(report, |r| r.slo_attainment),
         ttft_ms: of(report, |r| r.metrics.ttft().mean * 1000.0),
         e2e_ms: of(report, |r| r.metrics.e2e().mean * 1000.0),
         cost_usd: of(report, |r| r.cost.total_usd()),
@@ -243,6 +253,7 @@ pub fn render_summaries(summaries: &[ScenarioSummary]) -> String {
             "completed",
             "failed",
             "goodput",
+            "SLO-att",
             "TTFT(ms)",
             "E2E(ms)",
             "cost($)",
@@ -257,6 +268,7 @@ pub fn render_summaries(summaries: &[ScenarioSummary]) -> String {
             s.completed.cell(1),
             s.failed.cell(1),
             s.goodput.cell(3),
+            s.slo_attainment.cell(3),
             s.ttft_ms.cell(1),
             s.e2e_ms.cell(1),
             s.cost_usd.cell(2),
@@ -555,6 +567,11 @@ mod tests {
         assert_eq!(sum.requests, report.runs[0].requests);
         assert_eq!(sum.failed.mean, 0.0, "no faults, no failures");
         assert_eq!(sum.goodput.mean, 1.0);
+        assert!(
+            sum.slo_attainment.mean > 0.0 && sum.slo_attainment.mean <= 1.0,
+            "SLO attainment must be a hit-rate: {}",
+            sum.slo_attainment.mean
+        );
         assert!(sum.ttft_ms.mean > 0.0 && sum.ttft_ms.ci95 >= 0.0);
         let mean_cost = report.runs.iter().map(|r| r.cost.total_usd()).sum::<f64>() / 3.0;
         assert!((sum.cost_usd.mean - mean_cost).abs() < 1e-12);

@@ -14,7 +14,7 @@ use crate::artifact::ModelProfile;
 use crate::cluster::Cluster;
 use crate::sim::config::{BatchingMode, CacheMode, PreloadMode, SystemConfig, TierSpec};
 use crate::sim::workloads as wl;
-use crate::sim::{FaultSpec, RetrySpec, Workload};
+use crate::sim::{DegradeSpec, DomainLevel, DomainSpec, FaultSpec, RetrySpec, Workload};
 use crate::trace::Pattern;
 use crate::util::json::{arr, num, obj, s, Json};
 
@@ -249,6 +249,54 @@ impl SystemSpec {
                     fa.retry.deadline_s
                 )));
             }
+            if let Some(d) = fa.domains {
+                for (lvl, name) in [(d.node, "node"), (d.zone, "zone")] {
+                    let Some(l) = lvl else { continue };
+                    for (v, key) in [(l.mtbf_s, "mtbf_s"), (l.mttr_s, "mttr_s")] {
+                        if !(v.is_finite() && v > 0.0) {
+                            return Err(ScenarioError::BadOverride(format!(
+                                "faults.domains.{name}.{key} must be a positive finite \
+                                 number of seconds, got {v}"
+                            )));
+                        }
+                    }
+                }
+            }
+            if let Some(dg) = fa.degrade {
+                for (v, key) in [(dg.mtbf_s, "mtbf_s"), (dg.duration_s, "duration_s")] {
+                    if !(v.is_finite() && v > 0.0) {
+                        return Err(ScenarioError::BadOverride(format!(
+                            "faults.degrade.{key} must be a positive finite number of \
+                             seconds, got {v}"
+                        )));
+                    }
+                }
+                if !(dg.factor_min.is_finite()
+                    && dg.factor_max.is_finite()
+                    && dg.factor_min >= 1.0
+                    && dg.factor_max >= dg.factor_min)
+                {
+                    return Err(ScenarioError::BadOverride(format!(
+                        "faults.degrade factors must satisfy 1 ≤ factor_min ≤ factor_max, \
+                         got [{}, {}]",
+                        dg.factor_min, dg.factor_max
+                    )));
+                }
+            }
+            if !(fa.failure_tau_s.is_finite() && fa.failure_tau_s > 0.0) {
+                return Err(ScenarioError::BadOverride(format!(
+                    "faults.failure_tau_s must be a positive finite number of seconds, \
+                     got {}",
+                    fa.failure_tau_s
+                )));
+            }
+            if !(fa.failure_penalty_gb.is_finite() && fa.failure_penalty_gb >= 0.0) {
+                return Err(ScenarioError::BadOverride(format!(
+                    "faults.failure_penalty_gb must be a non-negative finite number, \
+                     got {}",
+                    fa.failure_penalty_gb
+                )));
+            }
             cfg = cfg.with_faults(fa);
         }
         Ok(cfg)
@@ -298,23 +346,59 @@ impl SystemSpec {
             ));
         }
         if let Some(fa) = self.faults {
-            fields.push((
-                "faults",
-                obj(vec![
-                    ("mtbf_s", num(fa.mtbf_s)),
-                    ("mttr_s", num(fa.mttr_s)),
-                    ("load_fail_prob", num(fa.load_fail_prob)),
-                    (
-                        "retry",
-                        obj(vec![
-                            ("max_retries", num(fa.retry.max_retries as f64)),
-                            ("backoff_base_s", num(fa.retry.backoff_base_s)),
-                            ("backoff_cap_s", num(fa.retry.backoff_cap_s)),
-                            ("deadline_s", num(fa.retry.deadline_s)),
-                        ]),
-                    ),
-                ]),
-            ));
+            let mut ff = vec![
+                ("mtbf_s", num(fa.mtbf_s)),
+                ("mttr_s", num(fa.mttr_s)),
+                ("load_fail_prob", num(fa.load_fail_prob)),
+                (
+                    "retry",
+                    obj(vec![
+                        ("max_retries", num(fa.retry.max_retries as f64)),
+                        ("backoff_base_s", num(fa.retry.backoff_base_s)),
+                        ("backoff_cap_s", num(fa.retry.backoff_cap_s)),
+                        ("deadline_s", num(fa.retry.deadline_s)),
+                    ]),
+                ),
+            ];
+            // The PR-9 sub-specs are emitted only when present / set, so
+            // pre-domain specs serialize exactly as they always did.
+            if let Some(d) = fa.domains {
+                let mut df = Vec::new();
+                if let Some(l) = d.node {
+                    df.push((
+                        "node",
+                        obj(vec![("mtbf_s", num(l.mtbf_s)), ("mttr_s", num(l.mttr_s))]),
+                    ));
+                }
+                if let Some(l) = d.zone {
+                    df.push((
+                        "zone",
+                        obj(vec![("mtbf_s", num(l.mtbf_s)), ("mttr_s", num(l.mttr_s))]),
+                    ));
+                }
+                ff.push(("domains", obj(df)));
+            }
+            if let Some(dg) = fa.degrade {
+                ff.push((
+                    "degrade",
+                    obj(vec![
+                        ("mtbf_s", num(dg.mtbf_s)),
+                        ("duration_s", num(dg.duration_s)),
+                        ("factor_min", num(dg.factor_min)),
+                        ("factor_max", num(dg.factor_max)),
+                    ]),
+                ));
+            }
+            if fa.failure_aware {
+                ff.push(("failure_aware", Json::Bool(true)));
+            }
+            if fa.failure_tau_s != FaultSpec::default().failure_tau_s {
+                ff.push(("failure_tau_s", num(fa.failure_tau_s)));
+            }
+            if fa.failure_penalty_gb != FaultSpec::default().failure_penalty_gb {
+                ff.push(("failure_penalty_gb", num(fa.failure_penalty_gb)));
+            }
+            fields.push(("faults", obj(ff)));
         }
         obj(fields)
     }
@@ -382,6 +466,47 @@ impl SystemSpec {
                 if let Some(x) = opt_num(rj, "deadline_s", "system.faults.retry")? {
                     fa.retry.deadline_s = x;
                 }
+            }
+            if let Some(dj) = fj.get("domains") {
+                let mut dom = DomainSpec::default();
+                if let Some(nj) = dj.get("node") {
+                    dom.node = Some(DomainLevel {
+                        mtbf_s: req_num(nj, "mtbf_s", "system.faults.domains.node")?,
+                        mttr_s: req_num(nj, "mttr_s", "system.faults.domains.node")?,
+                    });
+                }
+                if let Some(zj) = dj.get("zone") {
+                    dom.zone = Some(DomainLevel {
+                        mtbf_s: req_num(zj, "mtbf_s", "system.faults.domains.zone")?,
+                        mttr_s: req_num(zj, "mttr_s", "system.faults.domains.zone")?,
+                    });
+                }
+                fa.domains = Some(dom);
+            }
+            if let Some(gj) = fj.get("degrade") {
+                let mut dg = DegradeSpec::default();
+                if let Some(x) = opt_num(gj, "mtbf_s", "system.faults.degrade")? {
+                    dg.mtbf_s = x;
+                }
+                if let Some(x) = opt_num(gj, "duration_s", "system.faults.degrade")? {
+                    dg.duration_s = x;
+                }
+                if let Some(x) = opt_num(gj, "factor_min", "system.faults.degrade")? {
+                    dg.factor_min = x;
+                }
+                if let Some(x) = opt_num(gj, "factor_max", "system.faults.degrade")? {
+                    dg.factor_max = x;
+                }
+                fa.degrade = Some(dg);
+            }
+            if let Some(b) = opt_bool(fj, "failure_aware", "system.faults")? {
+                fa.failure_aware = b;
+            }
+            if let Some(x) = opt_num(fj, "failure_tau_s", "system.faults")? {
+                fa.failure_tau_s = x;
+            }
+            if let Some(x) = opt_num(fj, "failure_penalty_gb", "system.faults")? {
+                fa.failure_penalty_gb = x;
             }
             spec.faults = Some(fa);
         }
@@ -1759,6 +1884,19 @@ mod tests {
                     backoff_cap_s: 16.0,
                     deadline_s: 90.0,
                 },
+                domains: Some(DomainSpec {
+                    node: Some(DomainLevel { mtbf_s: 7200.0, mttr_s: 120.0 }),
+                    zone: Some(DomainLevel { mtbf_s: 86400.0, mttr_s: 300.0 }),
+                }),
+                degrade: Some(DegradeSpec {
+                    mtbf_s: 1800.0,
+                    duration_s: 90.0,
+                    factor_min: 2.0,
+                    factor_max: 5.0,
+                }),
+                failure_aware: true,
+                failure_tau_s: 300.0,
+                failure_penalty_gb: 6.0,
             })
             .build()
             .unwrap();
@@ -1770,9 +1908,42 @@ mod tests {
         let fa = cfg.faults.expect("faults resolved");
         assert_eq!(fa.mtbf_s, 600.0);
         assert_eq!(fa.retry.max_retries, 5);
+        let dom = fa.domains.expect("domains resolved");
+        assert_eq!(dom.node.expect("node level").mttr_s, 120.0);
+        assert_eq!(dom.zone.expect("zone level").mtbf_s, 86400.0);
+        assert_eq!(fa.degrade.expect("degrade resolved").factor_max, 5.0);
+        assert!(fa.failure_aware);
+        assert_eq!(fa.failure_tau_s, 300.0);
         // A spec without faults resolves to the fault-free fast path.
         let plain = ScenarioSpec::builder("plain").build().unwrap();
         assert!(plain.system.resolve(Pattern::Normal).unwrap().faults.is_none());
+    }
+
+    #[test]
+    fn partial_domains_and_degrade_parse_with_defaults() {
+        // Node-only domains; degrade with only a factor range. Absent
+        // levels stay `None` (and so draw nothing from the stream);
+        // absent degrade fields fill from `DegradeSpec::default()`.
+        let j = Json::parse(
+            r#"{"name":"t","system":{"id":"serverless-lora",
+                "faults":{"domains":{"node":{"mtbf_s":3600.0,"mttr_s":60.0}},
+                          "degrade":{"factor_min":2.0,"factor_max":2.5}}},
+                "workload":{"kind":"paper"}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&j).unwrap();
+        let fa = spec.system.faults.expect("faults parsed");
+        let dom = fa.domains.expect("domains parsed");
+        assert_eq!(dom.node.expect("node level").mtbf_s, 3600.0);
+        assert!(dom.zone.is_none(), "absent level must stay off");
+        let dg = fa.degrade.expect("degrade parsed");
+        assert_eq!(dg.factor_min, 2.0);
+        assert_eq!(dg.mtbf_s, DegradeSpec::default().mtbf_s, "unset fields default");
+        assert!(!fa.failure_aware, "failure-aware routing defaults off");
+        spec.validate().unwrap();
+        let text = spec.to_json().dump();
+        let parsed = ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, spec, "partial sub-specs must round-trip:\n{text}");
     }
 
     #[test]
@@ -1795,7 +1966,13 @@ mod tests {
 
     #[test]
     fn rejects_bad_fault_numbers() {
-        let patches: [fn(&mut FaultSpec); 7] = [
+        fn node_level(f: &mut FaultSpec, mtbf_s: f64) {
+            f.domains = Some(DomainSpec {
+                node: Some(DomainLevel { mtbf_s, mttr_s: 60.0 }),
+                zone: None,
+            });
+        }
+        let patches: [fn(&mut FaultSpec); 13] = [
             |f| f.mtbf_s = 0.0,
             |f| f.mtbf_s = f64::NAN,
             |f| f.mttr_s = -5.0,
@@ -1803,6 +1980,18 @@ mod tests {
             |f| f.retry.backoff_base_s = -0.1,
             |f| f.retry.backoff_cap_s = f64::INFINITY,
             |f| f.retry.deadline_s = 0.0,
+            |f| node_level(f, 0.0),
+            |f| node_level(f, f64::NAN),
+            |f| f.degrade = Some(DegradeSpec { duration_s: -1.0, ..DegradeSpec::default() }),
+            |f| f.degrade = Some(DegradeSpec { factor_min: 0.5, ..DegradeSpec::default() }),
+            |f| {
+                f.degrade = Some(DegradeSpec {
+                    factor_min: 3.0,
+                    factor_max: 2.0,
+                    ..DegradeSpec::default()
+                })
+            },
+            |f| f.failure_tau_s = 0.0,
         ];
         for patch in patches {
             let mut fa = FaultSpec::default();

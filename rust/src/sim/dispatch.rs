@@ -478,7 +478,23 @@ impl Engine {
             }
         }
         if !segmented {
-            let tok = self.events.push(self.now + total_load, EventKind::LoadDone(batch_id));
+            // A flat load dispatched onto an already-degraded GPU
+            // stretches by the active slowdown factor, the extra folded
+            // into its last phase so TTFT still equals the phase sum
+            // (mirrors `retime_gpu_rate` in sim/fault.rs). Factor 1.0 —
+            // the only value a fault-free run can hold — leaves the
+            // historical timing bit-identical.
+            let factor = self.degrade_factor[d];
+            let mut wall = total_load;
+            if factor != 1.0 && total_load > 0.0 {
+                wall = total_load * factor;
+                let batch = self.batches.get_mut(&batch_id).expect("just inserted");
+                if let Some((_, v)) = batch.load_phases.iter_mut().next_back() {
+                    *v += wall - total_load;
+                }
+                self.stats.degrade_retimes += 1;
+            }
+            let tok = self.events.push(self.now + wall, EventKind::LoadDone(batch_id));
             self.batches.get_mut(&batch_id).expect("just inserted").load_token = Some(tok);
         }
         // Residual queue: cancel the pre-dispatch checks and re-arm for

@@ -175,6 +175,13 @@ pub struct Engine {
     pub(super) retry_pending: usize,
     /// Per-request transient-retry attempts (fault injection only).
     pub(super) retry_count: HashMap<u64, u32>,
+    /// Degrade slowdown factor per GPU (dense arena; 1.0 = full speed).
+    /// Non-unit exactly while that GPU's restore event is outstanding.
+    pub(super) degrade_factor: Vec<f64>,
+    /// The single outstanding `GpuRestore` per degraded GPU (dense
+    /// arena). A crash mid-degrade cancels the episode through this
+    /// handle, so a restore never fires on a repaired-cold GPU.
+    pub(super) restore_tokens: Vec<Option<EventToken>>,
 }
 
 impl Engine {
@@ -204,6 +211,15 @@ impl Engine {
         // perturbs workload or policy draws, and `faults: None` builds
         // no injector at all.
         let injector = cfg.faults.map(|f| FaultInjector::new(f, seed));
+        // Failure-aware routing (off by default): install the cluster's
+        // failure-history tracker so crash/degrade observations feed the
+        // router's score penalty. When the knob is off the tracker stays
+        // `None` and `failure_penalty` is exactly 0.0.
+        if let Some(f) = cfg.faults {
+            if f.failure_aware {
+                cluster.enable_failure_tracking(f.failure_tau_s, f.failure_penalty_gb);
+            }
+        }
         let PolicyBundle { preload, batching, offload, billing, cache } =
             cfg.bundle(seed);
         let mut e = Engine {
@@ -258,6 +274,8 @@ impl Engine {
             arrived: 0,
             retry_pending: 0,
             retry_count: HashMap::new(),
+            degrade_factor: vec![1.0; n_gpus],
+            restore_tokens: vec![None; n_gpus],
         };
         e.metrics.duration_s = e.duration_s;
         e.setup();
@@ -350,6 +368,14 @@ impl Engine {
             EventKind::GpuCrash(g) => self.on_gpu_crash(g),
             EventKind::GpuRecover(g) => self.on_gpu_recover(g),
             EventKind::RetryWake(id) => self.on_retry_wake(id),
+            // Correlated failure domains + degraded mode: scheduled only
+            // when the matching `FaultSpec` sub-spec is present.
+            EventKind::NodeCrash(n) => self.on_node_crash(n),
+            EventKind::NodeRecover(n) => self.on_node_recover(n),
+            EventKind::ZoneOutage => self.on_zone_outage(),
+            EventKind::ZoneRecover => self.on_zone_recover(),
+            EventKind::GpuDegrade(g) => self.on_gpu_degrade(g),
+            EventKind::GpuRestore(g) => self.on_gpu_restore(g),
         }
         // Fold this event's memory mutations into the billing
         // aggregates (O(GPUs touched)), so the next interval samples the
@@ -665,12 +691,51 @@ impl Engine {
             "retry_pending != live RetryWake events"
         );
         // Health: a down GPU holds no in-flight batches (its batches are
-        // killed at crash time and the router never picks it).
+        // killed at crash/outage time and the router never picks it).
+        // Degraded GPUs are *not* down and may hold batches.
         for (&b, batch) in &self.batches {
             assert!(
                 self.cluster.gpu_is_up(batch.gpu),
                 "batch {b} in flight on a down GPU {:?}",
                 batch.gpu
+            );
+        }
+        // Degrade coherence: a non-unit slowdown factor exists exactly
+        // while its restore event is live, only on an up GPU, and the
+        // exec's service rate is exactly the factor's reciprocal.
+        let restore_events = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, &EventKind::GpuRestore(_)))
+            .count();
+        let live_restores = self.restore_tokens.iter().flatten().count();
+        assert_eq!(restore_events, live_restores, "untracked GpuRestore events");
+        for (d, tok) in self.restore_tokens.iter().enumerate() {
+            let g = self.gpu_map.id(d);
+            match tok {
+                Some(tok) => {
+                    let p = self.events.get(*tok).expect("tracked GpuRestore token is dead");
+                    assert!(
+                        matches!(p.kind, &EventKind::GpuRestore(eg) if eg == g),
+                        "restore token for {g} points at {:?}",
+                        p.kind
+                    );
+                    assert!(
+                        self.degrade_factor[d] >= 1.0,
+                        "degrade episode on {g} with factor {}",
+                        self.degrade_factor[d]
+                    );
+                    assert!(self.cluster.gpu_is_up(g), "degraded GPU {g} is down");
+                }
+                None => assert_eq!(
+                    self.degrade_factor[d], 1.0,
+                    "lingering degrade factor on {g}"
+                ),
+            }
+            assert_eq!(
+                self.execs[d].rate().to_bits(),
+                (1.0 / self.degrade_factor[d]).to_bits(),
+                "exec rate disagrees with degrade factor on {g}"
             );
         }
         // Timing-wheel structural invariants + the cluster's routing
@@ -1247,6 +1312,7 @@ mod tests {
             mttr_s: 40.0,
             load_fail_prob: 0.1,
             retry: RetrySpec::default(),
+            ..FaultSpec::default()
         });
         let mut total_redispatched = 0u64;
         let mut total_retries = 0u64;
@@ -1281,6 +1347,173 @@ mod tests {
         }
         assert!(total_redispatched > 0, "crashes never killed an in-flight batch");
         assert!(total_retries > 0, "10% load-fail rate never retried");
+    }
+
+    #[test]
+    fn dormant_domains_and_degrade_are_bit_identical_too() {
+        // PR 9 extension of the dormant lock: a spec that carries the
+        // new sub-specs (node + zone domains, degrade, failure-aware
+        // routing) but provably never fires must still reproduce the
+        // faultless run bit-for-bit — the extra init draws, the health
+        // second dimension, the exec rate field, and the router's
+        // `score - failure_penalty` (exactly 0.0) all cost zero
+        // perturbation.
+        use crate::sim::fault::{DegradeSpec, DomainLevel, DomainSpec, FaultSpec};
+        let w = workload(4, 0.05, 1800.0, Pattern::Bursty);
+        let (m_off, c_off, _) = run(SystemConfig::serverless_lora(), w.clone());
+        let dormant = SystemConfig::serverless_lora().with_faults(FaultSpec {
+            mtbf_s: 1e15,
+            load_fail_prob: 0.0,
+            domains: Some(DomainSpec {
+                node: Some(DomainLevel { mtbf_s: 1e15, mttr_s: 10.0 }),
+                zone: Some(DomainLevel { mtbf_s: 1e15, mttr_s: 10.0 }),
+            }),
+            degrade: Some(DegradeSpec { mtbf_s: 1e15, ..DegradeSpec::default() }),
+            failure_aware: true,
+            ..FaultSpec::default()
+        });
+        let (m_on, c_on, st) = run(dormant, w);
+        assert_eq!(st.gpu_crashes + st.node_outages + st.zone_outages, 0);
+        assert_eq!(st.degrades, 0, "dormant degrade must never fire");
+        assert_eq!(m_off.outcomes.len(), m_on.outcomes.len());
+        for (a, b) in m_off.outcomes.iter().zip(&m_on.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "request {}", a.id);
+            assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits(), "request {}", a.id);
+        }
+        assert_eq!(c_off.total_usd().to_bits(), c_on.total_usd().to_bits());
+    }
+
+    #[test]
+    fn conservation_holds_mid_run_with_node_and_zone_outages() {
+        // The tentpole invariant under correlated domains: conservation
+        // (asserted inside check_indexes) holds at every step while
+        // whole nodes — and at times the whole zone — are down, and
+        // every outage is eventually repaired.
+        use crate::sim::fault::{DomainLevel, DomainSpec, FaultSpec};
+        let cfg = SystemConfig::serverless_lora().with_faults(FaultSpec {
+            mtbf_s: 1e12, // isolate the domain levels
+            load_fail_prob: 0.0,
+            domains: Some(DomainSpec {
+                node: Some(DomainLevel { mtbf_s: 200.0, mttr_s: 30.0 }),
+                zone: Some(DomainLevel { mtbf_s: 400.0, mttr_s: 25.0 }),
+            }),
+            ..FaultSpec::default()
+        });
+        let mut saw_node_down = false;
+        let mut saw_all_down = false;
+        for seed in [1u64, 7, 23] {
+            let w = workload(4, 0.1, 600.0, Pattern::Bursty);
+            let n = w.requests.len();
+            let mut e = Engine::new(cfg.clone(), Cluster::new(2, 2, 4), w, seed);
+            let mut steps: u64 = 0;
+            while e.step() {
+                steps += 1;
+                if steps % 5 == 0 || e.cluster.n_nodes_down() > 0 {
+                    e.check_indexes();
+                    saw_node_down |= e.cluster.n_nodes_down() > 0;
+                    saw_all_down |= e.cluster.n_nodes_down() == 2;
+                }
+            }
+            e.check_indexes();
+            assert_eq!(e.cluster.n_nodes_down(), 0, "unrepaired node (seed {seed})");
+            assert_eq!(
+                e.stats.node_repairs, e.stats.node_outages,
+                "node outages and repairs must pair (seed {seed})"
+            );
+            assert_eq!(e.stats.zone_repairs, e.stats.zone_outages, "seed {seed}");
+            let (m, _, st) = e.finish();
+            assert!(st.node_outages + st.zone_outages > 0, "nothing fired (seed {seed})");
+            assert_eq!(m.outcomes.len() + m.failed as usize, n, "seed {seed}");
+        }
+        assert!(saw_node_down, "no mid-run check saw a node down");
+        assert!(saw_all_down, "no mid-run check saw the whole zone down");
+    }
+
+    #[test]
+    fn node_outage_wipes_host_cache_once_and_kills_members() {
+        // A node outage must behave like the ISSUE says: member batches
+        // die, the node's checkpoint cache is wiped once (cache_evictions
+        // counts checkpoints, not GPUs × checkpoints), and the fleet
+        // keeps conserving requests.
+        use crate::sim::fault::{DomainLevel, DomainSpec, FaultSpec};
+        let cfg = SystemConfig::serverless_lora()
+            .with_tiers(TierSpec::default())
+            .with_faults(FaultSpec {
+                mtbf_s: 1e12,
+                load_fail_prob: 0.0,
+                domains: Some(DomainSpec {
+                    node: Some(DomainLevel { mtbf_s: 150.0, mttr_s: 20.0 }),
+                    zone: None,
+                }),
+                ..FaultSpec::default()
+            });
+        let w = workload(4, 0.1, 600.0, Pattern::Bursty);
+        let n = w.requests.len();
+        let mut e = Engine::new(cfg, Cluster::new(2, 2, 4), w, 7);
+        let mut steps: u64 = 0;
+        while e.step() {
+            steps += 1;
+            if steps % 7 == 0 {
+                e.check_indexes();
+            }
+        }
+        e.check_indexes();
+        assert!(e.stats.node_outages > 0, "no node outage fired");
+        assert_eq!(e.stats.gpu_crashes, 0, "GPU-level crashes were isolated off");
+        let (m, _, st) = e.finish();
+        assert!(st.redispatched > 0, "outages never killed an in-flight batch");
+        assert_eq!(m.outcomes.len() + m.failed as usize, n);
+    }
+
+    #[test]
+    fn degrade_slows_ttft_and_restores() {
+        // Degraded mode end-to-end: episodes fire and restore, re-times
+        // are counted, conservation holds, and a heavily-degraded fleet
+        // is visibly slower than the fault-free one while completing the
+        // same request set (degraded ≠ down: nothing is killed).
+        use crate::sim::fault::{DegradeSpec, FaultSpec};
+        let w = workload(4, 0.1, 600.0, Pattern::Bursty);
+        let n = w.requests.len();
+        let (m_ref, _, _) = run(SystemConfig::serverless_lora(), w.clone());
+        let cfg = SystemConfig::serverless_lora().with_faults(FaultSpec {
+            mtbf_s: 1e12,
+            load_fail_prob: 0.0,
+            degrade: Some(DegradeSpec {
+                mtbf_s: 120.0,
+                duration_s: 60.0,
+                factor_min: 3.0,
+                factor_max: 6.0,
+            }),
+            ..FaultSpec::default()
+        });
+        let mut e = Engine::new(cfg, Cluster::new(1, 2, 4), w, 1);
+        let mut steps: u64 = 0;
+        let mut saw_degraded = false;
+        while e.step() {
+            steps += 1;
+            if steps % 5 == 0 {
+                e.check_indexes();
+                saw_degraded |= e.degrade_factor.iter().any(|&k| k != 1.0);
+            }
+        }
+        e.check_indexes();
+        assert!(saw_degraded, "no mid-run check saw a degraded GPU");
+        assert!(e.stats.degrades > 0, "no degrade episode fired");
+        assert_eq!(
+            e.stats.degrade_restores, e.stats.degrades,
+            "every episode must restore (none was cut short by a crash here)"
+        );
+        assert!(e.stats.degrade_retimes > 0, "no in-flight work was re-timed");
+        assert_eq!(e.stats.requests_failed, 0, "degraded GPUs must not fail requests");
+        let (m, _, _) = e.finish();
+        assert_eq!(m.outcomes.len(), n, "degraded ≠ down: all requests complete");
+        assert!(
+            m.ttft().mean > m_ref.ttft().mean,
+            "3-6× slowdown episodes must stretch mean TTFT: {} vs {}",
+            m.ttft().mean,
+            m_ref.ttft().mean
+        );
     }
 
     #[test]

@@ -59,6 +59,26 @@ pub enum EventKind {
     /// Retry backoff expired for request `id`: re-enqueue it for
     /// dispatch. One live wake per retrying request.
     RetryWake(u64),
+    /// Correlated-domain fault: node `n` goes down — every hosted GPU's
+    /// batches are killed and the node's host-RAM cache is wiped once.
+    /// Scheduled only when `FaultSpec::domains.node` is set.
+    NodeCrash(usize),
+    /// Correlated-domain fault: node `n` comes back up (cold).
+    NodeRecover(usize),
+    /// Correlated-domain fault: the engine's whole zone browns out —
+    /// every node goes down atomically. Scheduled only when
+    /// `FaultSpec::domains.zone` is set.
+    ZoneOutage,
+    /// The zone comes back: every node is marked up (individually
+    /// crashed GPUs stay down).
+    ZoneRecover,
+    /// Degraded-mode fault: the GPU enters a drawn slowdown for a drawn
+    /// duration (it keeps running — billing classes are unchanged).
+    /// Scheduled only when `FaultSpec::degrade` is set.
+    GpuDegrade(GpuId),
+    /// The degraded GPU returns to full speed. Exactly one is
+    /// outstanding per degraded GPU; a crash mid-degrade cancels it.
+    GpuRestore(GpuId),
 }
 
 #[derive(Debug, Clone, PartialEq)]

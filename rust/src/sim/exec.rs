@@ -15,11 +15,23 @@ use std::collections::BTreeMap;
 /// weight than prefill jobs (`DECODE_WEIGHT`): decode is memory-bound and
 /// interleaves with an incoming prefill at iteration granularity, so it
 /// contends far less than a second compute-bound prefill would.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct GpuExec {
     /// job id → (remaining dedicated-GPU seconds, weight).
     jobs: BTreeMap<u64, (f64, f64)>,
     last_update_s: f64,
+    /// Service rate of the whole server (degraded-mode fault injection):
+    /// all jobs progress at `rate × w_i / Σw`. 1.0 = healthy. At exactly
+    /// 1.0 every expression below multiplies or divides by 1.0 — an IEEE
+    /// identity — so a never-degraded run is bit-identical to the
+    /// pre-degrade build.
+    rate: f64,
+}
+
+impl Default for GpuExec {
+    fn default() -> Self {
+        GpuExec { jobs: BTreeMap::new(), last_update_s: 0.0, rate: 1.0 }
+    }
 }
 
 /// Relative PS weight of a decode-phase job vs a prefill-phase job.
@@ -36,7 +48,7 @@ impl GpuExec {
         if total > 0.0 {
             let dt = (now_s - self.last_update_s).max(0.0);
             for (r, w) in self.jobs.values_mut() {
-                *r -= dt * *w / total;
+                *r -= dt * self.rate * *w / total;
             }
         }
         self.last_update_s = now_s;
@@ -76,8 +88,21 @@ impl GpuExec {
             .iter()
             .min_by(|a, b| (a.1 .0 / a.1 .1).total_cmp(&(b.1 .0 / b.1 .1)))
             .map(|(&id, &(rem, w))| {
-                (id, self.last_update_s + (rem.max(0.0) / w) * total)
+                (id, self.last_update_s + (rem.max(0.0) / w) * total / self.rate)
             })
+    }
+
+    /// Change the server's service rate at `now`. Progress up to `now` is
+    /// settled at the old rate first, so a rate change never rewrites
+    /// history — only the future slope.
+    pub fn set_rate(&mut self, now_s: f64, rate: f64) {
+        debug_assert!(rate > 0.0);
+        self.advance(now_s);
+        self.rate = rate;
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
     }
 
     /// Complete `job` unconditionally at `now`, returning true if it was
@@ -220,6 +245,38 @@ mod tests {
             }
         }
         assert!(!e.is_active());
+    }
+
+    #[test]
+    fn degraded_rate_stretches_completion_and_restore_resumes() {
+        // 2 s of work at rate 1; at t=1 the server degrades to rate 0.5:
+        // 1 s of residual work now takes 2 s of wall time ⇒ done at t=3.
+        let mut e = GpuExec::default();
+        e.add(0.0, 1, 2.0);
+        e.set_rate(1.0, 0.5);
+        let (_, t) = e.next_completion().unwrap();
+        assert!((t - 3.0).abs() < 1e-9, "t={t}");
+        // Restore at t=2 (0.5 s of work left): finishes at t=2.5.
+        e.set_rate(2.0, 1.0);
+        let (_, t) = e.next_completion().unwrap();
+        assert!((t - 2.5).abs() < 1e-9, "t={t}");
+        assert_eq!(e.finished_at(2.5), vec![1]);
+    }
+
+    #[test]
+    fn rate_one_is_exact_identity() {
+        // Setting rate to exactly 1.0 must not perturb any stored float:
+        // ×1.0 and ÷1.0 are IEEE identities, so the dormant degrade path
+        // leaves fingerprints byte-identical.
+        let mut a = GpuExec::default();
+        let mut b = GpuExec::default();
+        a.add(0.0, 1, 1.0 / 3.0);
+        b.add(0.0, 1, 1.0 / 3.0);
+        b.set_rate(0.0, 1.0);
+        let (ia, ta) = a.next_completion().unwrap();
+        let (ib, tb) = b.next_completion().unwrap();
+        assert_eq!(ia, ib);
+        assert_eq!(ta.to_bits(), tb.to_bits());
     }
 
     #[test]

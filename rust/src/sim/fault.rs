@@ -52,9 +52,56 @@ impl Default for RetrySpec {
     }
 }
 
+/// One correlated failure-domain level: exponential outage gaps (mean
+/// `mtbf_s`) and repair times (mean `mttr_s`), drawn on the shared
+/// fault stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DomainLevel {
+    pub mtbf_s: f64,
+    pub mttr_s: f64,
+}
+
+/// Correlated failure domains above single GPUs. A **node** outage
+/// atomically takes down every GPU the node hosts and wipes its
+/// host-RAM checkpoint cache once; a **zone** outage takes the engine's
+/// whole cluster down (under zone sharding each zone engine is one
+/// zone). Either level may be absent; `None` at a level draws nothing
+/// from the stream, so a spec without it stays bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DomainSpec {
+    pub node: Option<DomainLevel>,
+    pub zone: Option<DomainLevel>,
+}
+
+/// Degraded-mode fault class: instead of dying, a GPU runs slow for a
+/// while — the SM-throttling/ECC-retirement regime. Episodes recur per
+/// GPU with exponential gaps (mean `mtbf_s`); each episode draws an
+/// exponential duration (mean `duration_s`) and a uniform slowdown
+/// factor in `[factor_min, factor_max]` (wall time of compute on the
+/// GPU stretches by that factor). Degraded is not down: routing still
+/// sees the GPU, billing classes are unchanged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradeSpec {
+    /// Mean gap between degrade episodes per GPU (seconds).
+    pub mtbf_s: f64,
+    /// Mean episode duration (seconds, exponential).
+    pub duration_s: f64,
+    /// Slowdown factor range (≥ 1; uniform draw per episode).
+    pub factor_min: f64,
+    pub factor_max: f64,
+}
+
+impl Default for DegradeSpec {
+    fn default() -> Self {
+        DegradeSpec { mtbf_s: 3600.0, duration_s: 60.0, factor_min: 1.5, factor_max: 4.0 }
+    }
+}
+
 /// Fault-injection configuration. `SystemConfig::faults: None` (the
 /// default) disables the subsystem entirely — no injector is built, no
-/// RNG is drawn, no events are scheduled.
+/// RNG is drawn, no events are scheduled. Every optional sub-spec
+/// (`domains`, `degrade`) gates its own draws the same way, so a spec
+/// without them replays the exact pre-domain stream.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultSpec {
     /// Mean time between failures per GPU (seconds, exponential).
@@ -65,6 +112,19 @@ pub struct FaultSpec {
     pub load_fail_prob: f64,
     /// Retry/timeout policy for faulted requests.
     pub retry: RetrySpec,
+    /// Correlated node/zone outages (`None` = GPU-level faults only).
+    pub domains: Option<DomainSpec>,
+    /// Degraded-mode episodes (`None` = GPUs never run slow).
+    pub degrade: Option<DegradeSpec>,
+    /// Let the router/preloader penalize crash-prone or degraded
+    /// hardware (observed failure-history EWMA). Off by default: the
+    /// penalty term is then exactly 0.0 and scores are bit-identical.
+    pub failure_aware: bool,
+    /// EWMA decay time constant for the crash history (seconds).
+    pub failure_tau_s: f64,
+    /// Router-score penalty (GB-equivalent units) per decayed crash and
+    /// per unit of excess slowdown factor.
+    pub failure_penalty_gb: f64,
 }
 
 impl Default for FaultSpec {
@@ -74,12 +134,18 @@ impl Default for FaultSpec {
             mttr_s: 30.0,
             load_fail_prob: 0.0,
             retry: RetrySpec::default(),
+            domains: None,
+            degrade: None,
+            failure_aware: false,
+            failure_tau_s: 600.0,
+            failure_penalty_gb: 4.0,
         }
     }
 }
 
-/// What happened — delivered to `Observer::on_fault`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// What happened — delivered to `Observer::on_fault`. (`Eq` is off the
+/// derive list because `GpuDegrade` carries its drawn f64 factor.)
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FaultEvent {
     /// A GPU went down: its in-flight batches were killed and their
     /// requests re-enqueued for re-dispatch.
@@ -93,6 +159,28 @@ pub enum FaultEvent {
     /// A cold load failed transiently; the batch's requests enter the
     /// retry/backoff path.
     LoadFailure { gpu: GpuId, function: usize },
+    /// A whole node went down: every hosted GPU's batches were killed
+    /// and the node's host-RAM cache was wiped once.
+    NodeOutage {
+        node: usize,
+        killed_batches: usize,
+        redispatched: usize,
+    },
+    /// The node came back up (cold). GPUs on it that also crashed
+    /// individually stay down until their own repair.
+    NodeRepair { node: usize },
+    /// The engine's whole zone went down (every node at once).
+    ZoneOutage {
+        killed_batches: usize,
+        redispatched: usize,
+    },
+    /// The zone came back: all nodes up.
+    ZoneRepair,
+    /// The GPU entered degraded mode: compute on it stretches by
+    /// `factor` until the matching `GpuRestore` (or a crash).
+    GpuDegrade { gpu: GpuId, factor: f64 },
+    /// The GPU returned to full speed.
+    GpuRestore { gpu: GpuId },
 }
 
 /// The injector: spec + its dedicated RNG stream. Owned by the engine,
@@ -132,6 +220,51 @@ impl FaultInjector {
         let r = &self.spec.retry;
         (r.backoff_base_s * 2f64.powi(attempt.min(62) as i32)).min(r.backoff_cap_s)
     }
+
+    /// Gap until a node's next outage. Callers gate on the level being
+    /// configured; drawing is unconditional so the stream position is a
+    /// pure function of the spec shape.
+    pub fn node_crash_delay_s(&mut self) -> f64 {
+        let lvl = self.spec.domains.and_then(|d| d.node).expect("node domain on");
+        self.rng.exp(1.0 / lvl.mtbf_s)
+    }
+
+    /// Downtime of a node outage (exponential, mean node MTTR).
+    pub fn node_repair_delay_s(&mut self) -> f64 {
+        let lvl = self.spec.domains.and_then(|d| d.node).expect("node domain on");
+        self.rng.exp(1.0 / lvl.mttr_s)
+    }
+
+    /// Gap until the zone's next outage.
+    pub fn zone_outage_delay_s(&mut self) -> f64 {
+        let lvl = self.spec.domains.and_then(|d| d.zone).expect("zone domain on");
+        self.rng.exp(1.0 / lvl.mtbf_s)
+    }
+
+    /// Downtime of a zone outage (exponential, mean zone MTTR).
+    pub fn zone_repair_delay_s(&mut self) -> f64 {
+        let lvl = self.spec.domains.and_then(|d| d.zone).expect("zone domain on");
+        self.rng.exp(1.0 / lvl.mttr_s)
+    }
+
+    /// Gap until a GPU's next degrade episode.
+    pub fn degrade_gap_s(&mut self) -> f64 {
+        let d = self.spec.degrade.expect("degrade on");
+        self.rng.exp(1.0 / d.mtbf_s)
+    }
+
+    /// Length of a degrade episode (exponential, mean `duration_s`).
+    pub fn degrade_duration_s(&mut self) -> f64 {
+        let d = self.spec.degrade.expect("degrade on");
+        self.rng.exp(1.0 / d.duration_s)
+    }
+
+    /// Slowdown factor of a degrade episode (uniform in the spec range,
+    /// clamped to ≥ 1 so a misconfigured range can never speed a GPU up).
+    pub fn degrade_factor(&mut self) -> f64 {
+        let d = self.spec.degrade.expect("degrade on");
+        self.rng.uniform(d.factor_min, d.factor_max).max(1.0)
+    }
 }
 
 // --------------------------------------------------------------------
@@ -151,20 +284,50 @@ use crate::trace::Request;
 
 impl Engine {
     /// Schedule the first crash of every GPU (dense order — the draw
-    /// order is part of the deterministic contract). Called once from
-    /// `Engine::new`; a no-op when `cfg.faults` is `None`. Crashes past
-    /// the workload horizon are not scheduled, so a faulted run still
-    /// drains.
+    /// order is part of the deterministic contract), then the first
+    /// outage of every node, the zone, and every GPU's first degrade
+    /// episode — in that fixed block order, each block drawing **only**
+    /// when its sub-spec is present, so a spec without `domains` /
+    /// `degrade` consumes the exact historical stream. Called once from
+    /// `Engine::new`; a no-op when `cfg.faults` is `None`. Initial
+    /// events past the workload horizon are not scheduled, so a faulted
+    /// run still drains.
     pub(super) fn schedule_initial_crashes(&mut self) {
-        if self.injector.is_none() {
+        let Some(spec) = self.injector.as_ref().map(|i| i.spec) else {
             return;
-        }
+        };
         for d in 0..self.gpu_map.len() {
             let g = self.gpu_map.id(d);
             let delay = self.injector.as_mut().unwrap().crash_delay_s();
             let t = self.now + delay;
             if t <= self.duration_s {
                 self.events.push(t, EventKind::GpuCrash(g));
+            }
+        }
+        if spec.domains.and_then(|d| d.node).is_some() {
+            for node in 0..self.cluster.nodes.len() {
+                let delay = self.injector.as_mut().unwrap().node_crash_delay_s();
+                let t = self.now + delay;
+                if t <= self.duration_s {
+                    self.events.push(t, EventKind::NodeCrash(node));
+                }
+            }
+        }
+        if spec.domains.and_then(|d| d.zone).is_some() {
+            let delay = self.injector.as_mut().unwrap().zone_outage_delay_s();
+            let t = self.now + delay;
+            if t <= self.duration_s {
+                self.events.push(t, EventKind::ZoneOutage);
+            }
+        }
+        if spec.degrade.is_some() {
+            for d in 0..self.gpu_map.len() {
+                let g = self.gpu_map.id(d);
+                let delay = self.injector.as_mut().unwrap().degrade_gap_s();
+                let t = self.now + delay;
+                if t <= self.duration_s {
+                    self.events.push(t, EventKind::GpuDegrade(g));
+                }
             }
         }
     }
@@ -181,18 +344,12 @@ impl Engine {
         // must come back up or the tail of the run serves degraded.
         let repair = self.injector.as_mut().expect("faults on").repair_delay_s();
         self.events.push(self.now + repair, EventKind::GpuRecover(g));
-        let victims: Vec<u64> = self
-            .batches
-            .iter()
-            .filter(|(_, b)| b.gpu == g)
-            .map(|(&id, _)| id)
-            .collect();
-        let killed_batches = victims.len();
-        let mut redispatched = 0usize;
-        for id in victims {
-            redispatched += self.kill_batch(id);
-        }
+        // A crash mid-degrade supersedes the episode: the restore event
+        // is cancelled and the GPU comes back from repair at full speed.
+        self.clear_degrade_on_crash(g);
+        let (killed_batches, redispatched) = self.kill_batches_on(g);
         self.invalidate_gpu(g);
+        self.cluster.note_crash(g, self.now);
         self.emit_fault(FaultEvent::GpuCrash { gpu: g, killed_batches, redispatched });
         // The cluster's routable surface changed: blocked functions get
         // a retry, and the re-enqueued requests re-route to up GPUs.
@@ -201,6 +358,39 @@ impl Engine {
             self.blocked.clear();
         }
         self.try_dispatch_all(None);
+    }
+
+    /// Kill every in-flight batch on one GPU (dense victim order).
+    /// Returns (killed batches, re-enqueued requests).
+    fn kill_batches_on(&mut self, g: crate::cluster::GpuId) -> (usize, usize) {
+        let victims: Vec<u64> = self
+            .batches
+            .iter()
+            .filter(|(_, b)| b.gpu == g)
+            .map(|(&id, _)| id)
+            .collect();
+        let killed = victims.len();
+        let mut redispatched = 0usize;
+        for id in victims {
+            redispatched += self.kill_batch(id);
+        }
+        (killed, redispatched)
+    }
+
+    /// Tear down an active degrade episode because the GPU is going
+    /// down: cancel the pending restore and reset the service rate.
+    /// Fully gated on an episode being active, so the dormant path does
+    /// not touch the exec.
+    fn clear_degrade_on_crash(&mut self, g: crate::cluster::GpuId) {
+        let d = self.gpu_map.dense(g);
+        if let Some(tok) = self.restore_tokens[d].take() {
+            self.events.cancel(tok);
+        }
+        if self.degrade_factor[d] != 1.0 {
+            self.degrade_factor[d] = 1.0;
+            self.execs[d].set_rate(self.now, 1.0);
+            self.cluster.note_degrade(g, 1.0);
+        }
     }
 
     /// The repair completed: the GPU is routable again (cold — its
@@ -221,6 +411,214 @@ impl Engine {
             self.blocked.clear();
         }
         self.try_dispatch_all(None);
+    }
+
+    /// A whole node went down. The repair is drawn and scheduled
+    /// *before* any kill work — mirroring the GPU path — so a member
+    /// GPU's independent crash landing on the same tick orders against
+    /// the repair purely by the queue's (t, seq) tie-break, never by
+    /// handler side-effects.
+    pub(super) fn on_node_crash(&mut self, node: usize) {
+        self.stats.node_outages += 1;
+        let repair = self.injector.as_mut().expect("faults on").node_repair_delay_s();
+        self.events.push(self.now + repair, EventKind::NodeRecover(node));
+        let (killed_batches, redispatched) = self.take_node_down(node);
+        self.emit_fault(FaultEvent::NodeOutage { node, killed_batches, redispatched });
+        if !self.blocked.is_empty() {
+            self.stats.blocked_retries += self.blocked.len();
+            self.blocked.clear();
+        }
+        self.try_dispatch_all(None);
+    }
+
+    /// Node repair: the node dimension comes back up (member GPUs that
+    /// crashed individually stay down until their own repair), and the
+    /// next node outage is drawn if the horizon allows.
+    pub(super) fn on_node_recover(&mut self, node: usize) {
+        self.stats.node_repairs += 1;
+        self.cluster.set_node_health(node, true);
+        let next = self.injector.as_mut().expect("faults on").node_crash_delay_s();
+        let t = self.now + next;
+        if t <= self.duration_s {
+            self.events.push(t, EventKind::NodeCrash(node));
+        }
+        self.emit_fault(FaultEvent::NodeRepair { node });
+        if !self.blocked.is_empty() {
+            self.stats.blocked_retries += self.blocked.len();
+            self.blocked.clear();
+        }
+        self.try_dispatch_all(None);
+    }
+
+    /// Zone outage: every node of this engine's cluster goes down
+    /// atomically (under zone sharding each zone engine *is* one zone).
+    /// In-flight work dies, requests re-enqueue or fail their deadline,
+    /// and new dispatches block until the zone repairs — the
+    /// conservation invariant holds throughout.
+    pub(super) fn on_zone_outage(&mut self) {
+        self.stats.zone_outages += 1;
+        let repair = self.injector.as_mut().expect("faults on").zone_repair_delay_s();
+        self.events.push(self.now + repair, EventKind::ZoneRecover);
+        let mut killed_batches = 0usize;
+        let mut redispatched = 0usize;
+        for node in 0..self.cluster.nodes.len() {
+            let (k, r) = self.take_node_down(node);
+            killed_batches += k;
+            redispatched += r;
+        }
+        self.emit_fault(FaultEvent::ZoneOutage { killed_batches, redispatched });
+        if !self.blocked.is_empty() {
+            self.stats.blocked_retries += self.blocked.len();
+            self.blocked.clear();
+        }
+        self.try_dispatch_all(None);
+    }
+
+    /// Zone repair: every node comes back up, including any that was
+    /// also down from its own node-level outage (the zone power-cycle
+    /// subsumes the node repair; the node's pending `NodeRecover` then
+    /// fires as an idempotent no-op that draws its next outage).
+    /// Individually-crashed GPUs stay down.
+    pub(super) fn on_zone_recover(&mut self) {
+        self.stats.zone_repairs += 1;
+        for node in 0..self.cluster.nodes.len() {
+            self.cluster.set_node_health(node, true);
+        }
+        let next = self.injector.as_mut().expect("faults on").zone_outage_delay_s();
+        let t = self.now + next;
+        if t <= self.duration_s {
+            self.events.push(t, EventKind::ZoneOutage);
+        }
+        self.emit_fault(FaultEvent::ZoneRepair);
+        if !self.blocked.is_empty() {
+            self.stats.blocked_retries += self.blocked.len();
+            self.blocked.clear();
+        }
+        self.try_dispatch_all(None);
+    }
+
+    /// Take one node down: health flip, then per member GPU in dense
+    /// order — degrade teardown, batch kills, residency invalidation,
+    /// failure-history note — then one host-cache wipe for the whole
+    /// node (the ISSUE's "once, not per-GPU" contract). Shared by node
+    /// and zone outages; idempotent on an already-down node.
+    fn take_node_down(&mut self, node: usize) -> (usize, usize) {
+        self.cluster.set_node_health(node, false);
+        let gpus: Vec<crate::cluster::GpuId> =
+            self.cluster.nodes[node].gpus.iter().map(|g| g.id).collect();
+        let mut killed = 0usize;
+        let mut redispatched = 0usize;
+        for g in gpus {
+            self.clear_degrade_on_crash(g);
+            let (k, r) = self.kill_batches_on(g);
+            killed += k;
+            redispatched += r;
+            self.invalidate_gpu_residency(g);
+            self.cluster.note_crash(g, self.now);
+        }
+        self.wipe_node_cache(node);
+        (killed, redispatched)
+    }
+
+    /// A degrade episode begins. The duration, factor, and next-onset
+    /// gap are always drawn (fixed order — the stream position never
+    /// depends on health state); on a down GPU the episode itself is a
+    /// no-op (the crash already superseded it). An episode never
+    /// overlaps the next onset: the gap is drawn from the episode's
+    /// *end*.
+    pub(super) fn on_gpu_degrade(&mut self, g: crate::cluster::GpuId) {
+        let inj = self.injector.as_mut().expect("faults on");
+        let duration = inj.degrade_duration_s();
+        let factor = inj.degrade_factor();
+        let gap = inj.degrade_gap_s();
+        let next = self.now + duration + gap;
+        if next <= self.duration_s {
+            self.events.push(next, EventKind::GpuDegrade(g));
+        }
+        if !self.cluster.gpu_is_up(g) {
+            return;
+        }
+        let d = self.gpu_map.dense(g);
+        // Defensive: a lingering restore (cannot arise from the
+        // non-overlapping onset chain) would be superseded here.
+        if let Some(tok) = self.restore_tokens[d].take() {
+            self.events.cancel(tok);
+        }
+        let old = self.degrade_factor[d];
+        self.degrade_factor[d] = factor;
+        self.restore_tokens[d] =
+            Some(self.events.push(self.now + duration, EventKind::GpuRestore(g)));
+        self.stats.degrades += 1;
+        self.retime_gpu_rate(g, old, factor);
+        self.cluster.note_degrade(g, factor);
+        self.emit_fault(FaultEvent::GpuDegrade { gpu: g, factor });
+    }
+
+    /// The degrade episode ends: full speed again. Only a live restore
+    /// token reaches here (crashes cancel it), so the GPU is up and
+    /// currently degraded.
+    pub(super) fn on_gpu_restore(&mut self, g: crate::cluster::GpuId) {
+        let d = self.gpu_map.dense(g);
+        self.restore_tokens[d] = None;
+        let old = self.degrade_factor[d];
+        self.degrade_factor[d] = 1.0;
+        self.stats.degrade_restores += 1;
+        self.retime_gpu_rate(g, old, 1.0);
+        self.cluster.note_degrade(g, 1.0);
+        self.emit_fault(FaultEvent::GpuRestore { gpu: g });
+    }
+
+    /// Re-time everything on `g` whose wall time depends on the GPU's
+    /// service rate, after the slowdown factor changed `old → new`:
+    ///
+    /// * exec jobs — progress settles at the old rate, then the one
+    ///   outstanding completion tick is cancelled and re-pushed
+    ///   (`set_rate` + `schedule_tick`, both O(1) per change);
+    /// * flat (single-timer) cold loads — remaining wall time scales by
+    ///   `new/old`; the delta folds into the batch's last recorded load
+    ///   phase so TTFT still equals the phase sum.
+    ///
+    /// Segmented (tiered) loads are deliberately *not* re-timed: their
+    /// wall time is DMA/link-bound, which SM throttling does not slow
+    /// (see DESIGN.md "Correlated faults & degraded mode").
+    fn retime_gpu_rate(&mut self, g: crate::cluster::GpuId, old: f64, new: f64) {
+        if old == new {
+            return;
+        }
+        let d = self.gpu_map.dense(g);
+        let had_jobs = self.execs[d].is_active();
+        self.execs[d].set_rate(self.now, 1.0 / new);
+        if had_jobs {
+            self.schedule_tick(g);
+            self.stats.degrade_retimes += 1;
+        }
+        let batches = &self.batches;
+        let runs = &self.load_runs;
+        let victims: Vec<u64> = batches
+            .iter()
+            .filter(|(id, b)| {
+                b.gpu == g
+                    && matches!(b.state, BatchState::Loading)
+                    && b.load_token.is_some()
+                    && !runs.contains_key(id)
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for id in victims {
+            let batch = self.batches.get_mut(&id).expect("victim exists");
+            let tok = batch.load_token.take().expect("flat load token");
+            let end = self.events.get(tok).expect("load event live").t;
+            let new_end = self.now + (end - self.now) * (new / old);
+            self.events.cancel(tok);
+            batch.load_token = Some(self.events.push(new_end, EventKind::LoadDone(id)));
+            let delta = new_end - end;
+            if delta != 0.0 {
+                if let Some((_, v)) = batch.load_phases.iter_mut().next_back() {
+                    *v += delta;
+                }
+            }
+            self.stats.degrade_retimes += 1;
+        }
     }
 
     /// Kill one in-flight batch on a crashing GPU, unwinding exactly the
@@ -297,6 +695,14 @@ impl Engine {
     /// surviving GPU stays warm, and the billing warm counts reconcile
     /// through the same per-GPU residency journal as any eviction.
     fn invalidate_gpu(&mut self, g: crate::cluster::GpuId) {
+        self.invalidate_gpu_residency(g);
+        self.wipe_node_cache(g.node);
+    }
+
+    /// The GPU-local half of crash invalidation (no host-cache wipe):
+    /// node outages call this per member GPU but wipe the node's cache
+    /// exactly once.
+    fn invalidate_gpu_residency(&mut self, g: crate::cluster::GpuId) {
         let mut fns: Vec<usize> = Vec::new();
         self.cluster.for_each_resident(g, |f| fns.push(f));
         for f in fns {
@@ -315,13 +721,14 @@ impl Engine {
         for m in models {
             let _ = self.registry.unload(&mut self.cluster, m, g);
         }
-        let cache = &mut self.cluster.nodes[g.node].cache;
-        if cache.enabled() && cache.len() > 0 {
-            let staged: Vec<&'static str> = cache.entries().map(|(m, _)| m).collect();
-            for m in staged {
-                cache.remove(m);
-                self.stats.cache_evictions += 1;
-            }
+    }
+
+    /// Wipe one node's host-RAM checkpoint cache (the worker process
+    /// died; staged checkpoints died with it).
+    fn wipe_node_cache(&mut self, node: usize) {
+        let cache = &mut self.cluster.nodes[node].cache;
+        if cache.enabled() {
+            self.stats.cache_evictions += cache.drain() as u64;
         }
     }
 
@@ -405,6 +812,7 @@ impl Engine {
     pub(super) fn fail_request(&mut self, req: &Request) {
         self.stats.requests_failed += 1;
         self.metrics.failed += 1;
+        *self.metrics.failed_by_function.entry(req.function).or_insert(0) += 1;
         self.retry_count.remove(&req.id);
         let outcome = RequestOutcome {
             id: req.id,
@@ -506,6 +914,191 @@ mod tests {
         assert_eq!(inj.backoff_s(2), 2.0);
         assert_eq!(inj.backoff_s(3), 3.0, "capped");
         assert_eq!(inj.backoff_s(40), 3.0, "stays capped, no overflow");
+    }
+
+    use crate::artifact::{FunctionSpec, ModelProfile};
+    use crate::cluster::Cluster;
+    use crate::sim::config::SystemConfig;
+    use crate::sim::engine::{Engine, Workload};
+
+    /// An idle engine (no requests) with faults configured but pushed
+    /// past the horizon — a blank canvas for driving the fault handlers
+    /// by hand and inspecting the health machinery.
+    fn idle_engine(spec: FaultSpec) -> Engine {
+        let w = Workload {
+            functions: vec![FunctionSpec::new(0, ModelProfile::llama2_7b(), 0)],
+            requests: Vec::new(),
+            duration_s: 10.0,
+            rates: vec![0.0],
+        };
+        let cfg = SystemConfig::serverless_lora().with_faults(spec);
+        Engine::new(cfg, Cluster::new(1, 2, 4), w, 1)
+    }
+
+    /// A spec whose every fault class is configured (so the handlers'
+    /// draws have levels to read) but can never fire on its own.
+    fn quiet_full_spec() -> FaultSpec {
+        FaultSpec {
+            mtbf_s: 1e15,
+            load_fail_prob: 0.0,
+            domains: Some(DomainSpec {
+                node: Some(DomainLevel { mtbf_s: 1e15, mttr_s: 5.0 }),
+                zone: Some(DomainLevel { mtbf_s: 1e15, mttr_s: 5.0 }),
+            }),
+            degrade: Some(DegradeSpec { mtbf_s: 1e15, ..DegradeSpec::default() }),
+            ..FaultSpec::default()
+        }
+    }
+
+    #[test]
+    fn gpu_recover_under_node_outage_stays_unroutable() {
+        // Health is two-dimensional: a GPU whose own repair lands while
+        // its node is still down must not become routable, and the node
+        // repair must not resurrect a GPU that crashed individually.
+        let mut e = idle_engine(quiet_full_spec());
+        let g = e.gpu_map.id(0);
+        e.on_gpu_crash(g);
+        e.on_node_crash(g.node);
+        assert!(!e.cluster.gpu_is_up(g));
+        e.on_gpu_recover(g);
+        assert!(
+            !e.cluster.gpu_is_up(g),
+            "GPU repair under a node outage must not mark it routable"
+        );
+        assert!(!e.cluster.node_is_up(g.node));
+        e.on_node_recover(g.node);
+        assert!(e.cluster.gpu_is_up(g), "both dimensions up ⇒ routable");
+        // Other order: node repairs first, the GPU's own crash persists.
+        let h = e.gpu_map.id(1);
+        e.on_node_crash(h.node);
+        e.on_gpu_crash(h);
+        e.on_node_recover(h.node);
+        assert!(
+            !e.cluster.gpu_is_up(h),
+            "node repair must not resurrect an individually-crashed GPU"
+        );
+        e.on_gpu_recover(h);
+        assert!(e.cluster.gpu_is_up(h));
+    }
+
+    #[test]
+    fn degrade_on_down_gpu_is_a_noop() {
+        let mut e = idle_engine(quiet_full_spec());
+        let g = e.gpu_map.id(0);
+        let d = e.gpu_map.dense(g);
+        e.on_gpu_crash(g);
+        e.on_gpu_degrade(g);
+        assert_eq!(e.stats.degrades, 0, "down GPU cannot degrade");
+        assert_eq!(e.degrade_factor[d], 1.0);
+        assert!(e.restore_tokens[d].is_none());
+        assert_eq!(e.execs[d].rate().to_bits(), 1.0f64.to_bits());
+    }
+
+    #[test]
+    fn crash_during_degrade_cancels_restore() {
+        let mut e = idle_engine(quiet_full_spec());
+        let g = e.gpu_map.id(0);
+        let d = e.gpu_map.dense(g);
+        e.on_gpu_degrade(g);
+        assert_eq!(e.stats.degrades, 1);
+        assert!(e.degrade_factor[d] > 1.0, "factor range starts above 1");
+        let tok = e.restore_tokens[d].expect("restore pending");
+        assert!(e.events.is_live(tok));
+        let cancelled_before = e.events.cancelled();
+        e.on_gpu_crash(g);
+        assert!(e.restore_tokens[d].is_none(), "crash must cancel the restore");
+        assert_eq!(e.events.cancelled(), cancelled_before + 1);
+        assert_eq!(e.degrade_factor[d], 1.0);
+        assert_eq!(e.execs[d].rate().to_bits(), 1.0f64.to_bits());
+        assert_eq!(e.stats.degrade_restores, 0, "the cancelled restore never fires");
+        e.check_indexes();
+    }
+
+    #[test]
+    fn node_outage_wipes_each_cache_once_via_take_node_down() {
+        // Two GPUs share node 0's host cache; the node outage must
+        // count the staged checkpoint as one eviction, not one per GPU.
+        let mut e = idle_engine(quiet_full_spec());
+        e.cluster.nodes[0].cache = crate::cluster::HostCache::new(64.0);
+        e.cluster.nodes[0].cache.insert("llama2-7b", 13.5, 0.0);
+        let before = e.stats.cache_evictions;
+        e.on_node_crash(0);
+        assert_eq!(
+            e.stats.cache_evictions,
+            before + 1,
+            "node outage wipes the host cache exactly once"
+        );
+        assert!(e.cluster.nodes[0].cache.is_empty());
+    }
+
+    #[test]
+    fn same_tick_node_repair_and_gpu_crash_order_by_push_seq() {
+        // The ordering lock from the ISSUE: when a node repair and a
+        // member GPU's independent crash land on the same tick, the
+        // queue's (t, seq) tie-break — push order — decides, never
+        // handler side-effects. Here the repair was pushed first, so
+        // after the tick the node is up but the GPU is freshly down.
+        let mut e = idle_engine(quiet_full_spec());
+        let g = e.gpu_map.id(0);
+        e.cluster.set_node_health(g.node, false);
+        e.events.push(1.0, EventKind::NodeRecover(g.node));
+        e.events.push(1.0, EventKind::GpuCrash(g));
+        assert!(e.step(), "node repair pops first");
+        assert!(e.cluster.node_is_up(g.node));
+        assert!(e.cluster.gpu_is_up(g), "crash has not fired yet");
+        assert_eq!((e.stats.node_repairs, e.stats.gpu_crashes), (1, 0));
+        assert!(e.step(), "member crash pops second");
+        assert!(!e.cluster.gpu_is_up(g));
+        assert!(e.cluster.node_is_up(g.node), "crash must not re-down the node");
+        assert_eq!((e.stats.node_repairs, e.stats.gpu_crashes), (1, 1));
+        e.check_indexes();
+    }
+
+    #[test]
+    fn zone_recover_revives_node_outage_and_keeps_chains_paired() {
+        // A zone power-cycle subsumes a pending node repair: the node
+        // comes back at zone-recover time, and the node's own
+        // `NodeRecover` later fires as an idempotent no-op that still
+        // draws the next node outage — crash/repair chains stay 1:1.
+        let mut e = idle_engine(quiet_full_spec());
+        e.on_node_crash(0);
+        e.on_zone_outage();
+        assert_eq!(e.cluster.n_nodes_down(), 1);
+        e.on_zone_recover();
+        assert_eq!(e.cluster.n_nodes_down(), 0, "zone repair revives every node");
+        e.on_node_recover(0); // the pending repair, now a health no-op
+        assert!(e.cluster.node_is_up(0));
+        assert_eq!(e.stats.node_repairs, e.stats.node_outages);
+        assert_eq!(e.stats.zone_repairs, e.stats.zone_outages);
+    }
+
+    #[test]
+    fn domain_draw_means_track_their_levels() {
+        let spec = FaultSpec {
+            domains: Some(DomainSpec {
+                node: Some(DomainLevel { mtbf_s: 300.0, mttr_s: 40.0 }),
+                zone: Some(DomainLevel { mtbf_s: 900.0, mttr_s: 15.0 }),
+            }),
+            degrade: Some(DegradeSpec {
+                mtbf_s: 500.0,
+                duration_s: 80.0,
+                factor_min: 2.0,
+                factor_max: 3.0,
+            }),
+            ..FaultSpec::default()
+        };
+        let mut inj = FaultInjector::new(spec, 11);
+        let n = 20_000;
+        let node: f64 = (0..n).map(|_| inj.node_crash_delay_s()).sum::<f64>() / n as f64;
+        let zone: f64 = (0..n).map(|_| inj.zone_repair_delay_s()).sum::<f64>() / n as f64;
+        let dur: f64 = (0..n).map(|_| inj.degrade_duration_s()).sum::<f64>() / n as f64;
+        assert!((node - 300.0).abs() < 15.0, "node outage gap mean {node}");
+        assert!((zone - 15.0).abs() < 1.0, "zone repair mean {zone}");
+        assert!((dur - 80.0).abs() < 4.0, "degrade duration mean {dur}");
+        for _ in 0..1000 {
+            let f = inj.degrade_factor();
+            assert!((2.0..3.0).contains(&f), "factor {f} outside the spec range");
+        }
     }
 
     #[test]

@@ -32,6 +32,14 @@
 //! 0 for *scheduling* only (an `N`-way split can leave `-1 ulp` of work
 //! on a flow whose end coincides with the draining event), never in the
 //! drain itself — the oracle mirrors both choices.
+//!
+//! ## Degraded-mode boundary
+//!
+//! GPU degrade episodes (`sim/fault.rs`) deliberately do **not** re-time
+//! flows: segmented tiered loads are DMA/link-bandwidth-bound, and SM
+//! throttling slows compute, not the copy engines — so only exec ticks
+//! and the flat (single-timer) load path stretch under a degrade factor
+//! (see DESIGN.md "Correlated faults & degraded mode").
 
 use crate::artifact::LinkKind;
 

@@ -20,7 +20,9 @@ pub mod workloads;
 
 pub use billing::BillClass;
 pub use config::{BatchingMode, CacheMode, PreloadMode, SystemConfig, TierSpec};
-pub use fault::{FaultEvent, FaultInjector, FaultSpec, RetrySpec};
+pub use fault::{
+    DegradeSpec, DomainLevel, DomainSpec, FaultEvent, FaultInjector, FaultSpec, RetrySpec,
+};
 pub use flow::{FlowNet, Retime};
 pub use engine::{Engine, RunStats, Workload};
 pub use events::{Event, EventKind, EventQueue, EventToken};

@@ -279,9 +279,13 @@ fn merge(mut outputs: Vec<RunOutput>, zones: usize) -> RunOutput {
     let mut series: Option<BillSeries> = None;
     for (zone, out) in outputs.into_iter().enumerate() {
         metrics.duration_s = metrics.duration_s.max(out.metrics.duration_s);
-        // Failed requests leave no outcome — carry the counter across
-        // zones explicitly so goodput stays global.
+        // Failed requests leave no outcome — carry the counters across
+        // zones explicitly (with function ids restored to global) so
+        // goodput and SLO attainment stay global.
         metrics.failed += out.metrics.failed;
+        for (local, n) in out.metrics.failed_by_function {
+            *metrics.failed_by_function.entry(zone + local * zones).or_insert(0) += n;
+        }
         for mut o in out.metrics.outcomes {
             o.function = zone + o.function * zones;
             metrics.outcomes.push(o);
@@ -416,6 +420,53 @@ mod tests {
             assert_eq!(oracle, fp(&run(Mode::Parallel)), "seed {seed}");
             assert_eq!(oracle, fp(&run(Mode::Parallel)), "seed {seed} (rerun)");
         }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_under_domain_faults_multi_seed() {
+        // The tentpole determinism lock: correlated node/zone outages and
+        // degraded-mode episodes inside every zone engine must leave
+        // Mode::Parallel bit-identical to the single-threaded oracle —
+        // fault draws ride each zone's own injector stream, so thread
+        // scheduling has nothing to reorder. Conservation (arrivals ==
+        // completed + failed) must hold globally with whole zones dying.
+        use crate::sim::fault::{DegradeSpec, DomainLevel, DomainSpec, FaultSpec};
+        let cfg = SystemConfig::serverless_lora().with_faults(FaultSpec {
+            mtbf_s: 400.0,
+            mttr_s: 20.0,
+            domains: Some(DomainSpec {
+                node: Some(DomainLevel { mtbf_s: 300.0, mttr_s: 25.0 }),
+                zone: Some(DomainLevel { mtbf_s: 600.0, mttr_s: 30.0 }),
+            }),
+            degrade: Some(DegradeSpec {
+                mtbf_s: 200.0,
+                duration_s: 40.0,
+                factor_min: 2.0,
+                factor_max: 4.0,
+            }),
+            ..FaultSpec::default()
+        });
+        let zones = || vec![Cluster::new(1, 2, 4), Cluster::new(1, 2, 4)];
+        let mut fired = false;
+        for seed in [1u64, 7, 23] {
+            let w = workload(8, 0.05, 1200.0);
+            let n = w.requests.len();
+            let run = |mode| run_zones(&cfg, zones(), w.clone(), seed, mode, false, Some(300.0));
+            let seq = run(Mode::Sequential);
+            assert_eq!(fp(&seq), fp(&run(Mode::Parallel)), "seed {seed}");
+            assert_eq!(
+                seq.metrics.outcomes.len() + seq.metrics.failed as usize,
+                n,
+                "conservation across dying zones (seed {seed})"
+            );
+            assert_eq!(
+                seq.metrics.failed_by_function.values().sum::<u64>(),
+                seq.metrics.failed,
+                "per-function failure counts must sum to the total (seed {seed})"
+            );
+            fired |= seq.stats.zone_outages > 0 && seq.stats.node_outages > 0;
+        }
+        assert!(fired, "no seed exercised both domain levels");
     }
 
     #[test]
