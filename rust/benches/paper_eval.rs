@@ -69,6 +69,7 @@ fn main() {
     let ran_fleet = ids.contains(&"fleet");
     let ran_tiers = ids.contains(&"tiers");
     let ran_faults = ids.contains(&"faults");
+    let ran_coldstarts = ids.contains(&"coldstarts");
     let mut records: Vec<Json> = Vec::new();
     for id in ids {
         let t0 = Instant::now();
@@ -110,6 +111,13 @@ fn main() {
         // TTFT degradation and recovery counters, tracked across PRs.
         // Reuses the sweep's measurement — no extra simulation.
         fields.push(("faults", exp::faults::faults_json(!full)));
+    }
+    if ran_coldstarts {
+        // Cold-start strategy record (shortest keep-alive column):
+        // snapshot-restore repeat-cold speedup + surcharge and pipelined
+        // first-touch speedup vs the tiered baseline, tracked across
+        // PRs. Reuses the sweep's measurement — no extra simulation.
+        fields.push(("coldstarts", exp::coldstarts::coldstarts_json(!full)));
     }
     let doc = obj(fields);
     let path = "BENCH_sim.json";

@@ -69,6 +69,17 @@ impl HostCache {
         (self.capacity_gb - self.used_gb()).max(0.0)
     }
 
+    /// Occupied bytes of entries whose key starts with `prefix` — the
+    /// snapshot-storage surcharge ("snap:" keys) reads this after every
+    /// ledger mutation.
+    pub fn prefixed_gb(&self, prefix: &str) -> f64 {
+        self.entries
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(_, e)| e.size_gb)
+            .sum()
+    }
+
     /// Entries in model-name order (deterministic iteration for policies).
     pub fn entries(&self) -> impl Iterator<Item = (&'static str, &CacheEntry)> {
         self.entries.iter().map(|(k, v)| (*k, v))
@@ -147,6 +158,19 @@ mod tests {
         assert_eq!(c.drain(), 1);
         assert!(c.is_empty());
         assert_eq!(c.drain(), 0, "drain of an empty cache is a no-op");
+    }
+
+    #[test]
+    fn prefixed_occupancy_splits_snapshots_from_checkpoints() {
+        let mut c = HostCache::new(100.0);
+        c.insert("llama2-7b", 13.5, 1.0);
+        c.insert("snap:llama2-7b-lora0", 14.0, 2.0);
+        c.insert("snap:llama2-7b-lora1", 14.0, 3.0);
+        assert!((c.prefixed_gb("snap:") - 28.0).abs() < 1e-12);
+        assert!((c.prefixed_gb("") - c.used_gb()).abs() < 1e-12);
+        c.remove("snap:llama2-7b-lora0");
+        assert!((c.prefixed_gb("snap:") - 14.0).abs() < 1e-12);
+        assert_eq!(c.prefixed_gb("other:"), 0.0);
     }
 
     #[test]

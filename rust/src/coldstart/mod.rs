@@ -1,0 +1,255 @@
+//! Cold-start strategy subsystem — the *spec* side of the sixth policy
+//! axis (see `coordinator::policy::ColdStartPolicy` for the trait and
+//! DESIGN.md "Cold-start strategies" for the design).
+//!
+//! A cold-start strategy owns the plan for bringing a cold function up:
+//!
+//! * **Tiered** (default) — today's segmented tiered load, bit-for-bit.
+//!   `cold_start: None` in `SystemConfig` selects it implicitly and
+//!   performs zero additional work — the same dormancy discipline as
+//!   `tiers: None` and `faults: None`.
+//! * **SnapshotRestore** — SnapStart + memfd: after a function's first
+//!   full load a snapshot is built into the node's host cache; later
+//!   cold starts pay a near-constant restore instead of the tiered
+//!   walk, bought with a snapshot-*storage* billing surcharge.
+//! * **Pipelined** — HydraServe/ParaServe: a backbone cold load splits
+//!   across K nodes as concurrent flows, prefill overlaps the tail of
+//!   loading, and an explicit consolidation transfer pays the bytes
+//!   back onto the target GPU.
+//!
+//! This module holds only plain data (kinds, parameter blocks, the
+//! per-request `ColdPath` tag, and the snapshot-key interner); the
+//! mechanism lives in `sim::coldstart` and the policy boxes in
+//! `coordinator::policy`.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::artifact::params;
+
+/// Which cold-start strategy a function class uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColdStartKind {
+    /// The segmented tiered load (the pre-subsystem behaviour).
+    Tiered,
+    /// SnapStart-style snapshot build + near-constant restore.
+    SnapshotRestore,
+    /// K-way pipelined multi-GPU load with late consolidation.
+    Pipelined,
+}
+
+impl ColdStartKind {
+    /// Stable string ids (scenario JSON / CLI).
+    pub const IDS: [&'static str; 3] = ["tiered", "snapshot-restore", "pipelined"];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            ColdStartKind::Tiered => "tiered",
+            ColdStartKind::SnapshotRestore => "snapshot-restore",
+            ColdStartKind::Pipelined => "pipelined",
+        }
+    }
+
+    pub fn from_id(s: &str) -> Option<Self> {
+        match s {
+            "tiered" => Some(ColdStartKind::Tiered),
+            "snapshot-restore" => Some(ColdStartKind::SnapshotRestore),
+            "pipelined" => Some(ColdStartKind::Pipelined),
+            _ => None,
+        }
+    }
+}
+
+/// SnapStart parameters: what a snapshot costs to build, to restore
+/// from, and to keep resident.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SnapshotParams {
+    /// Wall time to serialize a loaded function into its snapshot
+    /// (memfd dump), measured from the load that seeded it.
+    pub build_s: f64,
+    /// Fixed restore overhead (process re-hydration) paid instead of
+    /// container init + library import + JIT; the snapshot body still
+    /// streams host RAM → HBM over PCIe.
+    pub restore_s: f64,
+    /// Storage surcharge for resident snapshot bytes, USD per GB·hour.
+    /// Defaults to the host-memory price — a snapshot pins host RAM.
+    pub storage_usd_per_gb_h: f64,
+}
+
+impl Default for SnapshotParams {
+    fn default() -> Self {
+        SnapshotParams {
+            build_s: 2.0,
+            restore_s: 0.5,
+            storage_usd_per_gb_h: params::PRICE_MEM_GB_S * 3600.0,
+        }
+    }
+}
+
+/// Pipelined multi-GPU load parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineParams {
+    /// Maximum pipeline width: the load splits across up to `k` nodes
+    /// (the target plus `k-1` siblings with an idle up GPU). Effective
+    /// width shrinks to what the cluster can offer; width 1 falls back
+    /// to the tiered path.
+    pub k: usize,
+    /// Consolidation trigger: the transfer starts once
+    /// `ceil(frac · siblings)` sibling shards have landed (1.0 = wait
+    /// for all of them).
+    pub consolidate_frac: f64,
+}
+
+impl Default for PipelineParams {
+    fn default() -> Self {
+        PipelineParams { k: 4, consolidate_frac: 1.0 }
+    }
+}
+
+/// The full cold-start strategy configuration carried by
+/// `SystemConfig::cold_start` / scenario JSON. Strategies can be mixed
+/// per function class: the `head_fns` hottest functions (Zipf orders
+/// functions hottest-first, so low ids are the head) use `head`, the
+/// rest use `strategy`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ColdStartSpec {
+    /// Strategy for every function (the tail, when `head` is set).
+    pub strategy: ColdStartKind,
+    /// Optional head-class override for function ids `< head_fns`.
+    pub head: Option<ColdStartKind>,
+    /// Size of the head class (ignored when `head` is `None`).
+    pub head_fns: usize,
+    pub snapshot: SnapshotParams,
+    pub pipeline: PipelineParams,
+}
+
+impl Default for ColdStartSpec {
+    fn default() -> Self {
+        ColdStartSpec {
+            strategy: ColdStartKind::Tiered,
+            head: None,
+            head_fns: 0,
+            snapshot: SnapshotParams::default(),
+            pipeline: PipelineParams::default(),
+        }
+    }
+}
+
+impl ColdStartSpec {
+    /// All-functions single-strategy spec with default parameters.
+    pub fn uniform(strategy: ColdStartKind) -> Self {
+        ColdStartSpec { strategy, ..ColdStartSpec::default() }
+    }
+
+    /// The strategy class of one function id (head vs tail).
+    pub fn strategy_for(&self, function: usize) -> ColdStartKind {
+        match self.head {
+            Some(h) if function < self.head_fns => h,
+            _ => self.strategy,
+        }
+    }
+}
+
+/// Which path a request's batch took through the cold-start machinery —
+/// exported per request on `RequestOutcome` and the trace sink.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ColdPath {
+    /// No cold phase at all: the function was warm on its GPU.
+    #[default]
+    Warm,
+    /// The segmented tiered load (the default cold path).
+    Tiered,
+    /// Restored from a host-resident snapshot.
+    SnapshotRestore,
+    /// K-way pipelined load with consolidation.
+    Pipelined,
+}
+
+impl ColdPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            ColdPath::Warm => "warm",
+            ColdPath::Tiered => "tiered",
+            ColdPath::SnapshotRestore => "snapshot-restore",
+            ColdPath::Pipelined => "pipelined",
+        }
+    }
+}
+
+/// Intern the host-cache key of one function's snapshot. `HostCache`
+/// keys are `&'static str`; function names are bounded by the
+/// deployment (one key per function), so leaking each distinct key once
+/// keeps the map — and the leak — bounded.
+pub fn snap_key(function_name: &str) -> &'static str {
+    static KEYS: OnceLock<Mutex<BTreeMap<String, &'static str>>> = OnceLock::new();
+    let mut keys = KEYS.get_or_init(|| Mutex::new(BTreeMap::new())).lock().unwrap();
+    if let Some(&k) = keys.get(function_name) {
+        return k;
+    }
+    let leaked: &'static str = Box::leak(format!("snap:{function_name}").into_boxed_str());
+    keys.insert(function_name.to_string(), leaked);
+    leaked
+}
+
+/// Prefix shared by every snapshot key — the billing surcharge and the
+/// invariants tell snapshot bytes from model checkpoints with it.
+pub const SNAP_PREFIX: &str = "snap:";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_ids_round_trip() {
+        for (i, id) in ColdStartKind::IDS.iter().enumerate() {
+            let k = ColdStartKind::from_id(id).expect("listed id parses");
+            assert_eq!(k.id(), *id);
+            // IDS order is the enum order (scenario docs rely on it).
+            let by_order = [
+                ColdStartKind::Tiered,
+                ColdStartKind::SnapshotRestore,
+                ColdStartKind::Pipelined,
+            ][i];
+            assert_eq!(k, by_order);
+        }
+        assert_eq!(ColdStartKind::from_id("nope"), None);
+    }
+
+    #[test]
+    fn head_tail_mixing_splits_on_head_fns() {
+        let spec = ColdStartSpec {
+            strategy: ColdStartKind::Pipelined,
+            head: Some(ColdStartKind::SnapshotRestore),
+            head_fns: 2,
+            ..ColdStartSpec::default()
+        };
+        assert_eq!(spec.strategy_for(0), ColdStartKind::SnapshotRestore);
+        assert_eq!(spec.strategy_for(1), ColdStartKind::SnapshotRestore);
+        assert_eq!(spec.strategy_for(2), ColdStartKind::Pipelined);
+        // No head class: everything is the tail strategy.
+        let uni = ColdStartSpec::uniform(ColdStartKind::SnapshotRestore);
+        assert_eq!(uni.strategy_for(0), ColdStartKind::SnapshotRestore);
+        assert_eq!(uni.strategy_for(99), ColdStartKind::SnapshotRestore);
+    }
+
+    #[test]
+    fn snap_keys_intern_stably() {
+        let a = snap_key("llama2-7b-lora0");
+        let b = snap_key("llama2-7b-lora0");
+        let c = snap_key("llama2-7b-lora1");
+        assert!(std::ptr::eq(a, b), "same name must intern to the same key");
+        assert_eq!(a, "snap:llama2-7b-lora0");
+        assert_ne!(a, c);
+        assert!(a.starts_with(SNAP_PREFIX) && c.starts_with(SNAP_PREFIX));
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let s = SnapshotParams::default();
+        assert!(s.build_s > 0.0 && s.restore_s > 0.0 && s.storage_usd_per_gb_h > 0.0);
+        let p = PipelineParams::default();
+        assert!(p.k >= 2 && p.consolidate_frac > 0.0 && p.consolidate_frac <= 1.0);
+        assert_eq!(ColdStartSpec::default().strategy, ColdStartKind::Tiered);
+        assert_eq!(ColdPath::default(), ColdPath::Warm);
+    }
+}

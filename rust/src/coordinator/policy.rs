@@ -20,6 +20,7 @@ use crate::artifact::{
     params, ArtifactKind, FunctionSpec, LinkKind, ModelProfile, PhaseCost, Term,
 };
 use crate::cluster::{Cluster, ContainerId, GpuId, HostCache};
+use crate::coldstart::{ColdStartKind, ColdStartSpec, PipelineParams, SnapshotParams};
 use crate::coordinator::batching::BatchQueue;
 use crate::coordinator::offload::{DynamicOffloader, OffloadPlan};
 use crate::coordinator::preload::{FunctionDemand, Placement, PreloadScheduler};
@@ -243,6 +244,26 @@ pub trait CachePolicy: Send {
     ) -> u64;
 }
 
+/// The sixth policy axis: the cold-start *strategy* — which plan brings
+/// a cold function up (`coldstart` module, mechanism in
+/// `sim::coldstart`). The dispatch layer asks for the per-function
+/// strategy class at every cold load; the snapshot/pipeline parameter
+/// blocks configure the two non-default paths. The default
+/// [`TieredColdStart`] answers `Tiered` for everything and the engine
+/// then takes the historical segmented path bit-for-bit.
+pub trait ColdStartPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Strategy class of one function id (head vs tail mixing).
+    fn strategy(&self, function: usize) -> ColdStartKind;
+
+    /// SnapStart parameters (build / restore / storage surcharge).
+    fn snapshot(&self) -> &SnapshotParams;
+
+    /// Pipelined-load parameters (width K, consolidation trigger).
+    fn pipeline(&self) -> &PipelineParams;
+}
+
 /// The full policy complement one engine run is driven by.
 pub struct PolicyBundle {
     pub preload: Box<dyn PreloadPolicy>,
@@ -250,6 +271,7 @@ pub struct PolicyBundle {
     pub offload: Box<dyn OffloadPolicy>,
     pub billing: Box<dyn BillingModel>,
     pub cache: Box<dyn CachePolicy>,
+    pub cold_start: Box<dyn ColdStartPolicy>,
 }
 
 // ------------------------------------------------- shared phase helpers
@@ -1065,6 +1087,76 @@ impl CachePolicy for PinHotCache {
             cache.insert(model, size_gb, now_s);
         }
         evicted
+    }
+}
+
+// --------------------------------------------------- cold-start policies
+
+/// The default cold-start policy: every function takes the segmented
+/// tiered load. `cold_start: None` selects this and the engine performs
+/// zero additional work — the dormant fast path.
+pub struct TieredColdStart {
+    snapshot: SnapshotParams,
+    pipeline: PipelineParams,
+}
+
+impl Default for TieredColdStart {
+    fn default() -> Self {
+        TieredColdStart {
+            snapshot: SnapshotParams::default(),
+            pipeline: PipelineParams::default(),
+        }
+    }
+}
+
+impl ColdStartPolicy for TieredColdStart {
+    fn name(&self) -> &'static str {
+        "tiered"
+    }
+
+    fn strategy(&self, _function: usize) -> ColdStartKind {
+        ColdStartKind::Tiered
+    }
+
+    fn snapshot(&self) -> &SnapshotParams {
+        &self.snapshot
+    }
+
+    fn pipeline(&self) -> &PipelineParams {
+        &self.pipeline
+    }
+}
+
+/// Spec-driven cold-start policy: per-function-class strategy mixing
+/// (head vs tail) with the spec's snapshot/pipeline parameter blocks.
+pub struct SpecColdStart {
+    spec: ColdStartSpec,
+}
+
+impl SpecColdStart {
+    pub fn new(spec: ColdStartSpec) -> Self {
+        SpecColdStart { spec }
+    }
+}
+
+impl ColdStartPolicy for SpecColdStart {
+    fn name(&self) -> &'static str {
+        match self.spec.head {
+            Some(_) => "mixed",
+            None => self.spec.strategy.id(),
+        }
+    }
+
+    fn strategy(&self, function: usize) -> ColdStartKind {
+        self.spec.strategy_for(function)
+    }
+
+    fn snapshot(&self) -> &SnapshotParams {
+        &self.spec.snapshot
+    }
+
+    fn pipeline(&self) -> &PipelineParams {
+        &self.spec.pipeline
     }
 }
 

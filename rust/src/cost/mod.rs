@@ -17,6 +17,10 @@ pub struct CostTracker {
     pub mem_gb_s: f64,
     /// Serverful: dedicated whole-GPU seconds (billed regardless of use).
     pub serverful_gpu_s: f64,
+    /// Snapshot-storage surcharge, USD (already priced — the cold-start
+    /// subsystem integrates resident snapshot GB × its storage rate).
+    /// Identically 0.0 unless the snapshot-restore strategy is active.
+    pub snapshot_usd: f64,
 }
 
 impl CostTracker {
@@ -37,13 +41,17 @@ impl CostTracker {
         self.serverful_gpu_s += n_gpus * dur_s;
     }
 
-    /// Total monetary cost in dollars.
+    /// Total monetary cost in dollars.  The snapshot surcharge is added
+    /// last: `x + 0.0` is bit-exact for the non-negative sums here, so
+    /// runs without snapshots price bit-identically to pre-subsystem
+    /// builds.
     pub fn total_usd(&self) -> f64 {
         self.gpu_active_gb_s * params::PRICE_GPU_GB_S
             + self.gpu_idle_gb_s * params::PRICE_GPU_IDLE_GB_S
             + self.cpu_core_s * params::PRICE_CPU_CORE_S
             + self.mem_gb_s * params::PRICE_MEM_GB_S
             + self.serverful_gpu_s * params::PRICE_SERVERFUL_GPU_S
+            + self.snapshot_usd
     }
 
     /// Share of the bill attributable to GPU resources — the paper states
@@ -66,6 +74,7 @@ impl CostTracker {
         self.cpu_core_s += other.cpu_core_s;
         self.mem_gb_s += other.mem_gb_s;
         self.serverful_gpu_s += other.serverful_gpu_s;
+        self.snapshot_usd += other.snapshot_usd;
     }
 }
 
@@ -140,6 +149,21 @@ mod tests {
         let tb = b.total_usd();
         a.merge(&b);
         assert!((a.total_usd() - ta - tb).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_surcharge_prices_into_total_not_gpu_share() {
+        let mut c = CostTracker::default();
+        c.add_active(20.0, 3.0, 4.0, 16.0);
+        let base = c.total_usd();
+        let share = c.gpu_share();
+        c.snapshot_usd = 5e-4;
+        assert!((c.total_usd() - base - 5e-4).abs() < 1e-15);
+        assert!(c.gpu_share() < share, "surcharge dilutes the GPU share");
+        let mut other = CostTracker::default();
+        other.snapshot_usd = 1e-4;
+        c.merge(&other);
+        assert!((c.snapshot_usd - 6e-4).abs() < 1e-15);
     }
 
     #[test]

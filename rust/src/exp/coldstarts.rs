@@ -1,0 +1,318 @@
+//! Cold-start strategy experiment (`coldstarts`): sweep the three
+//! cold-start strategies × keep-alive (the cold-start-rate knob) on the
+//! no-preload baseline and report where each strategy earns its keep —
+//! snapshot-restore on *repeat* colds (the snapshot exists by then),
+//! pipelined on *first-touch* colds (no snapshot can exist yet, but K
+//! idle GPUs can each pull a slice), and the snapshot storage surcharge
+//! the restores are bought with.
+//!
+//! The sweep runs `npl` with the tiered store on a multi-node cluster:
+//! nothing is pre-staged, so every cold start takes the strategy under
+//! test, and sibling nodes exist for the pipelined splits. Shorter
+//! keep-alive ⇒ more colds ⇒ more strategy exposure; the tiered column
+//! at each keep-alive is the baseline the other two are judged against.
+
+use std::sync::Mutex;
+
+use crate::coldstart::{ColdPath, ColdStartKind, ColdStartSpec};
+use crate::scenario::{ClusterSpec, ScenarioSpec, SeedRun, WorkloadSpec};
+use crate::sim::TierSpec;
+use crate::trace::Pattern;
+use crate::util::json::{num, obj, Json};
+use crate::util::table::{ms, Table};
+
+/// Most recent snapshot-restore and pipelined reference cells (shortest
+/// keep-alive), reused by `coldstarts_json` when the sweep already ran.
+static LAST_REFERENCE: Mutex<Option<(ColdPoint, ColdPoint, ColdPoint)>> = Mutex::new(None);
+
+/// One measured grid cell.
+#[derive(Clone)]
+pub struct ColdPoint {
+    pub strategy: ColdStartKind,
+    pub keepalive_s: f64,
+    pub requests: usize,
+    /// Cold outcomes (any non-warm path) / all outcomes.
+    pub cold: usize,
+    /// Mean TTFT over each function's *first* cold outcome.
+    pub first_ttft_s: f64,
+    /// Mean TTFT over every later cold outcome (repeat colds).
+    pub repeat_ttft_s: f64,
+    pub restores: u64,
+    pub pipelined: u64,
+    pub total_usd: f64,
+    pub snapshot_usd: f64,
+}
+
+/// Keep-alive values swept (seconds) — the cold-start-rate axis.
+pub fn keepalives(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![20.0, 120.0]
+    } else {
+        vec![20.0, 120.0, 600.0]
+    }
+}
+
+/// The three strategies, tiered (the baseline) first.
+pub const STRATEGIES: [ColdStartKind; 3] = [
+    ColdStartKind::Tiered,
+    ColdStartKind::SnapshotRestore,
+    ColdStartKind::Pipelined,
+];
+
+fn horizon(quick: bool) -> f64 {
+    if quick {
+        600.0
+    } else {
+        1800.0
+    }
+}
+
+/// Build one grid cell: no-preload system, tiered store, the strategy
+/// under test, a 4-node cluster (sibling nodes for the pipelined
+/// splits), paper workload at bursty arrivals.
+fn cell(strategy: ColdStartKind, keepalive_s: f64, horizon_s: f64, seed: u64) -> ScenarioSpec {
+    ScenarioSpec::builder(&format!("coldstarts-{}-ka{keepalive_s}", strategy.id()))
+        .system("npl")
+        .keepalive_s(keepalive_s)
+        .tiers(TierSpec::default())
+        .cold_start(ColdStartSpec::uniform(strategy))
+        .cluster(ClusterSpec::Uniform {
+            nodes: 4,
+            gpus_per_node: 2,
+            containers_per_node: 8,
+            trim_gpus: None,
+            zones: 1,
+        })
+        .workload(WorkloadSpec::Paper { pattern: Pattern::Bursty, seed })
+        .horizon_s(horizon_s)
+        .seed(seed)
+        .build()
+        .expect("coldstarts cell validates")
+}
+
+/// Split the run's cold outcomes into per-function first touch vs
+/// repeats and average each side's TTFT.
+fn fold(strategy: ColdStartKind, keepalive_s: f64, run: &SeedRun) -> ColdPoint {
+    let mut outcomes: Vec<_> = run
+        .metrics
+        .outcomes
+        .iter()
+        .filter(|o| o.cold_path != ColdPath::Warm)
+        .collect();
+    outcomes.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
+    let mut seen = std::collections::BTreeSet::new();
+    let (mut first, mut repeat) = (Vec::new(), Vec::new());
+    for o in &outcomes {
+        if seen.insert(o.function) {
+            first.push(o.ttft_s);
+        } else {
+            repeat.push(o.ttft_s);
+        }
+    }
+    let mean = |xs: &[f64]| {
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    };
+    ColdPoint {
+        strategy,
+        keepalive_s,
+        requests: run.requests,
+        cold: outcomes.len(),
+        first_ttft_s: mean(&first),
+        repeat_ttft_s: mean(&repeat),
+        restores: run.stats.snapshot_restores,
+        pipelined: run.stats.pipelined_loads,
+        total_usd: run.cost.total_usd(),
+        snapshot_usd: run.cost.snapshot_usd,
+    }
+}
+
+/// Run one cell and fold it into a [`ColdPoint`].
+pub fn run_point(
+    strategy: ColdStartKind,
+    keepalive_s: f64,
+    horizon_s: f64,
+    seed: u64,
+) -> ColdPoint {
+    let spec = cell(strategy, keepalive_s, horizon_s, seed);
+    let report = crate::scenario::run(&spec).expect("coldstarts cell runs");
+    let (_, run) = report.into_only();
+    assert_eq!(
+        run.metrics.outcomes.len(),
+        run.requests,
+        "coldstarts cell lost requests"
+    );
+    let st = &run.stats;
+    assert_eq!(
+        st.pipeline_consolidations + st.pipeline_cancellations,
+        st.pipelined_loads,
+        "pipelined loads do not conserve (fault-free run)"
+    );
+    match strategy {
+        ColdStartKind::Tiered => assert_eq!(
+            st.snapshot_restores + st.pipelined_loads,
+            0,
+            "tiered cells must not touch the other strategies' machinery"
+        ),
+        ColdStartKind::SnapshotRestore => {
+            assert_eq!(st.pipelined_loads, 0);
+        }
+        ColdStartKind::Pipelined => {
+            assert_eq!(st.snapshot_restores, 0);
+        }
+    }
+    fold(strategy, keepalive_s, &run)
+}
+
+/// The rendered sweep (experiment id `coldstarts`).
+pub fn coldstarts(quick: bool) -> String {
+    let mut t = Table::new(
+        "Cold-start strategies — strategy × keep-alive sweep (no-preload baseline)",
+        &[
+            "strategy",
+            "keepalive s",
+            "requests",
+            "cold",
+            "first-TTFT(ms)",
+            "repeat-TTFT(ms)",
+            "restores",
+            "pipelined",
+            "cost $",
+            "snapshot $",
+        ],
+    );
+    let dur = horizon(quick);
+    let shortest = keepalives(quick)[0];
+    let mut reference: (Option<ColdPoint>, Option<ColdPoint>, Option<ColdPoint>) =
+        (None, None, None);
+    for keepalive_s in keepalives(quick) {
+        for strategy in STRATEGIES {
+            let p = run_point(strategy, keepalive_s, dur, 11);
+            if keepalive_s == shortest {
+                match strategy {
+                    ColdStartKind::Tiered => reference.0 = Some(p.clone()),
+                    ColdStartKind::SnapshotRestore => reference.1 = Some(p.clone()),
+                    ColdStartKind::Pipelined => reference.2 = Some(p.clone()),
+                }
+            }
+            t.row(vec![
+                strategy.id().to_string(),
+                format!("{keepalive_s}"),
+                p.requests.to_string(),
+                p.cold.to_string(),
+                ms(p.first_ttft_s),
+                ms(p.repeat_ttft_s),
+                p.restores.to_string(),
+                p.pipelined.to_string(),
+                format!("{:.4}", p.total_usd),
+                format!("{:.6}", p.snapshot_usd),
+            ]);
+        }
+    }
+    if let (Some(a), Some(b), Some(c)) = reference {
+        *LAST_REFERENCE.lock().unwrap() = Some((a, b, c));
+    }
+    t.render()
+}
+
+/// Machine-readable record of the shortest-keep-alive column (all three
+/// strategies) for cross-PR tracking in `BENCH_sim.json`. Reuses the
+/// sweep's measurements when a `coldstarts()` run covered them.
+pub fn coldstarts_json(quick: bool) -> Json {
+    let cached = LAST_REFERENCE.lock().unwrap().clone();
+    let (tiered, snap, pipe) = match cached {
+        Some(t) => t,
+        None => {
+            let ka = keepalives(quick)[0];
+            let dur = horizon(quick);
+            (
+                run_point(ColdStartKind::Tiered, ka, dur, 11),
+                run_point(ColdStartKind::SnapshotRestore, ka, dur, 11),
+                run_point(ColdStartKind::Pipelined, ka, dur, 11),
+            )
+        }
+    };
+    obj(vec![
+        ("keepalive_s", num(tiered.keepalive_s)),
+        ("tiered_first_ttft_ms", num(tiered.first_ttft_s * 1000.0)),
+        ("tiered_repeat_ttft_ms", num(tiered.repeat_ttft_s * 1000.0)),
+        ("snapshot_repeat_ttft_ms", num(snap.repeat_ttft_s * 1000.0)),
+        (
+            "snapshot_repeat_speedup",
+            num(tiered.repeat_ttft_s / snap.repeat_ttft_s.max(1e-12)),
+        ),
+        ("snapshot_restores", num(snap.restores as f64)),
+        ("snapshot_usd", num(snap.snapshot_usd)),
+        ("pipelined_first_ttft_ms", num(pipe.first_ttft_s * 1000.0)),
+        (
+            "pipelined_first_speedup",
+            num(tiered.first_ttft_s / pipe.first_ttft_s.max(1e-12)),
+        ),
+        ("pipelined_loads", num(pipe.pipelined as f64)),
+        ("tiered_cost_usd", num(tiered.total_usd)),
+        ("snapshot_cost_usd", num(snap.total_usd)),
+        ("pipelined_cost_usd", num(pipe.total_usd)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_grow_with_full_mode() {
+        assert!(keepalives(true).len() < keepalives(false).len());
+        assert_eq!(STRATEGIES[0], ColdStartKind::Tiered, "the baseline leads");
+    }
+
+    #[test]
+    fn snapshot_restore_beats_tiered_on_repeat_colds() {
+        // The acceptance cell: same workload, same keep-alive — repeat
+        // colds restore from the host-resident snapshot instead of
+        // re-walking the tiers, and the storage surcharge shows up in
+        // the cost split.
+        let tiered = run_point(ColdStartKind::Tiered, 20.0, 600.0, 11);
+        let snap = run_point(ColdStartKind::SnapshotRestore, 20.0, 600.0, 11);
+        assert!(snap.restores > 0, "short keep-alive must trigger restores");
+        assert!(tiered.repeat_ttft_s > 0.0, "baseline must see repeat colds");
+        assert!(
+            snap.repeat_ttft_s < tiered.repeat_ttft_s,
+            "restores must beat tiered repeat colds: {} vs {}",
+            snap.repeat_ttft_s,
+            tiered.repeat_ttft_s
+        );
+        assert!(snap.snapshot_usd > 0.0, "the surcharge must be visible");
+        assert_eq!(tiered.snapshot_usd, 0.0, "tiered pays no surcharge");
+    }
+
+    #[test]
+    fn pipelined_beats_tiered_on_first_touch() {
+        let tiered = run_point(ColdStartKind::Tiered, 20.0, 600.0, 11);
+        let pipe = run_point(ColdStartKind::Pipelined, 20.0, 600.0, 11);
+        assert!(pipe.pipelined > 0, "first touches must pipeline");
+        assert!(
+            pipe.first_ttft_s < tiered.first_ttft_s,
+            "K-way splits must beat solo first-touch loads: {} vs {}",
+            pipe.first_ttft_s,
+            tiered.first_ttft_s
+        );
+    }
+
+    #[test]
+    fn json_record_names_the_tracked_counters() {
+        let j = coldstarts_json(true);
+        for key in [
+            "snapshot_repeat_speedup",
+            "snapshot_restores",
+            "snapshot_usd",
+            "pipelined_first_speedup",
+            "pipelined_loads",
+            "tiered_cost_usd",
+        ] {
+            assert!(j.get(key).is_some(), "BENCH record missing '{key}'");
+        }
+    }
+}

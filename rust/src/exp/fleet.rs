@@ -617,11 +617,74 @@ fn check_correlated() -> Result<String, String> {
     Ok(line)
 }
 
+/// Cold-start leg of the regression guard: run the `coldstarts`
+/// experiment's short-keep-alive cells (fault-free) and check the
+/// strategy invariants a refactor is most likely to silently break:
+///
+/// * snapshots *must* fire at a 20 s keep-alive (`restores > 0`) — zero
+///   means build/admit/restore stopped chaining;
+/// * repeat colds under snapshot-restore must come in at or under the
+///   tiered baseline's repeat colds (the whole point of the snapshot);
+/// * first touches *must* pipeline (`pipelined > 0`) on a multi-node
+///   cluster with idle siblings;
+/// * pipelined loads conserve on a fault-free run: every split either
+///   consolidated or was cancelled, and here nothing crashes, so
+///   `consolidations == pipelined` exactly (checked inside
+///   `coldstarts::run_point`, which also checks
+///   `consolidations + cancellations == pipelined`).
+fn check_coldstarts() -> Result<String, String> {
+    use crate::coldstart::ColdStartKind;
+    let tiered = super::coldstarts::run_point(ColdStartKind::Tiered, 20.0, 600.0, 11);
+    let snap = super::coldstarts::run_point(ColdStartKind::SnapshotRestore, 20.0, 600.0, 11);
+    let pipe = super::coldstarts::run_point(ColdStartKind::Pipelined, 20.0, 600.0, 11);
+    let line = format!(
+        "coldstarts-check ka20: {} requests, {} colds; snapshot {} restores, \
+         repeat-TTFT {:.1} ms vs tiered {:.1} ms, surcharge ${:.6}; \
+         pipelined {} loads, first-TTFT {:.1} ms vs tiered {:.1} ms",
+        tiered.requests,
+        tiered.cold,
+        snap.restores,
+        snap.repeat_ttft_s * 1000.0,
+        tiered.repeat_ttft_s * 1000.0,
+        snap.snapshot_usd,
+        pipe.pipelined,
+        pipe.first_ttft_s * 1000.0,
+        tiered.first_ttft_s * 1000.0,
+    );
+    if snap.restores == 0 {
+        return Err(format!(
+            "{line}\n  FAIL: no snapshot restores at a 20 s keep-alive — \
+             the build/restore chain is not engaged"
+        ));
+    }
+    if snap.repeat_ttft_s > tiered.repeat_ttft_s {
+        return Err(format!(
+            "{line}\n  FAIL: snapshot-restore repeat colds slower than tiered \
+             ({:.1} ms vs {:.1} ms)",
+            snap.repeat_ttft_s * 1000.0,
+            tiered.repeat_ttft_s * 1000.0
+        ));
+    }
+    if snap.snapshot_usd <= 0.0 {
+        return Err(format!(
+            "{line}\n  FAIL: restores fired but the storage surcharge is zero"
+        ));
+    }
+    if pipe.pipelined == 0 {
+        return Err(format!(
+            "{line}\n  FAIL: no pipelined loads with idle sibling nodes — \
+             the K-way split is not engaged"
+        ));
+    }
+    Ok(line)
+}
+
 /// CI regression guard (`serverless-lora fleet --check`): run the quick
 /// grid and compare the deterministic counters against `QUICK_BOUNDS`,
 /// then bound the tiered-store counters on the `tiers` reference cell,
-/// the recovery counters on a fast-failure `faults` cell, and the
-/// domain/degrade counters on the correlated-faults cell.
+/// the recovery counters on a fast-failure `faults` cell, the
+/// domain/degrade counters on the correlated-faults cell, and the
+/// cold-start strategy invariants on the `coldstarts` reference cells.
 pub fn check() -> Result<String, String> {
     let mut out = String::new();
     for b in QUICK_BOUNDS {
@@ -634,6 +697,8 @@ pub fn check() -> Result<String, String> {
     out.push_str(&check_faults()?);
     out.push('\n');
     out.push_str(&check_correlated()?);
+    out.push('\n');
+    out.push_str(&check_coldstarts()?);
     out.push('\n');
     out.push_str("fleet-check: all counters within committed bounds\n");
     Ok(out)
@@ -768,6 +833,16 @@ mod tests {
         let line = check_correlated().expect("healthy correlated-faults engine trips the guard");
         assert!(line.contains("out/rep"));
         assert!(line.contains("SLO-att"));
+    }
+
+    #[test]
+    fn coldstarts_leg_of_the_guard_passes() {
+        // The cold-start strategy invariants must hold on a healthy
+        // engine: restores fired and beat tiered repeat colds, first
+        // touches pipelined, surcharge visible.
+        let line = check_coldstarts().expect("healthy cold-start engine trips the guard");
+        assert!(line.contains("restores"));
+        assert!(line.contains("pipelined"));
     }
 
     #[test]

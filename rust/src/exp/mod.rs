@@ -16,6 +16,7 @@
 
 pub mod ablation;
 pub mod breakdown;
+pub mod coldstarts;
 pub mod cost_eff;
 pub mod faults;
 pub mod fleet;
@@ -106,10 +107,12 @@ pub fn headline_json() -> Json {
 /// All experiment ids: the paper artifacts in paper order, then the
 /// engine-health experiments (`fleet`: cluster-size scaling sweep;
 /// `tiers`: host-cache capacity × burstiness sweep over the tiered
-/// artifact store; `faults`: MTBF × MTTR fault-injection sweep).
-pub const ALL_EXPERIMENTS: [&str; 17] = [
+/// artifact store; `faults`: MTBF × MTTR fault-injection sweep;
+/// `coldstarts`: cold-start strategy × keep-alive sweep).
+pub const ALL_EXPERIMENTS: [&str; 18] = [
     "fig1", "fig2", "fig5", "fig6", "fig7", "fig8", "fig9", "tab1", "tab2",
     "fig10", "tab3", "fig11", "fig12", "overhead", "fleet", "tiers", "faults",
+    "coldstarts",
 ];
 
 /// Dispatch an experiment by id. Returns the rendered report.
@@ -136,6 +139,7 @@ pub fn run_experiment(id: &str, quick: bool) -> String {
         "fleet" => fleet::fleet(quick),
         "tiers" => tiers::tiers(quick),
         "faults" => faults::faults(quick),
+        "coldstarts" => coldstarts::coldstarts(quick),
         other => format!("unknown experiment '{other}'; known: {ALL_EXPERIMENTS:?}\n"),
     }
 }
@@ -163,5 +167,6 @@ mod tests {
         assert!(ALL_EXPERIMENTS.contains(&"fleet"));
         assert!(ALL_EXPERIMENTS.contains(&"tiers"));
         assert!(ALL_EXPERIMENTS.contains(&"faults"));
+        assert!(ALL_EXPERIMENTS.contains(&"coldstarts"));
     }
 }

@@ -7,6 +7,9 @@
 //! * `coordinator` — the paper's contribution: PCKP pre-loading (§4.1),
 //!   two-layer adaptive batching (§4.2), dynamic GPU offloading (§4.3),
 //!   locality-aware routing.
+//! * `coldstart` — pluggable cold-start strategies (tiered /
+//!   snapshot-restore / pipelined multi-GPU) behind the sixth policy
+//!   trait (`ColdStartPolicy`); mechanism in `sim::coldstart`.
 //! * `sharing` — backbone-sharing registry (§4.4, CUDA-IPC analogue).
 //! * `cluster` — simulated GPU/container substrate with strict ledgers.
 //! * `trace`, `cost`, `metrics` — workload, pricing and measurement.
@@ -31,6 +34,7 @@
 
 pub mod artifact;
 pub mod cluster;
+pub mod coldstart;
 pub mod coordinator;
 pub mod cost;
 pub mod exp;

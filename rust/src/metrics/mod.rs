@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 
 use crate::artifact::Tier;
+use crate::coldstart::ColdPath;
 use crate::trace::Request;
 use crate::util::stats::{self, Summary};
 
@@ -78,6 +79,10 @@ pub struct RequestOutcome {
     /// cold load (tiered store only; `None` = warm dispatch or flat
     /// fast path).
     pub backbone_tier: Option<Tier>,
+    /// Which cold-start path this request's batch took (warm / tiered /
+    /// snapshot-restore / pipelined) — the cold-start subsystem's
+    /// per-request tag, exported by the trace sink.
+    pub cold_path: ColdPath,
 }
 
 impl RequestOutcome {
@@ -183,6 +188,33 @@ pub struct RunStats {
     /// completion ticks and flat cold loads (cancel + re-push pairs),
     /// plus loads stretched at dispatch onto a degraded GPU.
     pub degrade_retimes: u64,
+    /// Cold-start subsystem: snapshot builds started after a full
+    /// tiered load. Conservation: `snapshot_builds == snapshots_built +
+    /// snapshot_builds_cancelled + snapshot_builds_declined +
+    /// in-flight builds` (checked by `Engine::check_indexes`).
+    pub snapshot_builds: u64,
+    /// Snapshot builds that completed and were admitted into the node's
+    /// host cache.
+    pub snapshots_built: u64,
+    /// In-flight snapshot builds cancelled by a GPU/node failure.
+    pub snapshot_builds_cancelled: u64,
+    /// Completed builds the cache policy declined to admit (no room).
+    pub snapshot_builds_declined: u64,
+    /// Cold starts served by restoring a host-resident snapshot instead
+    /// of the tiered walk.
+    pub snapshot_restores: u64,
+    /// Cold backbone loads split across K nodes (pipelined strategy).
+    pub pipelined_loads: u64,
+    /// Sibling shards created by pipelined loads (K-1 per load).
+    pub pipelined_shards: u64,
+    /// Consolidation transfers completed. End-of-run conservation:
+    /// `pipeline_consolidations + pipeline_cancellations ==
+    /// pipelined_loads` — every pipelined load either consolidates or
+    /// is cancelled by a failure.
+    pub pipeline_consolidations: u64,
+    /// Pipelined loads cancelled (shards + consolidation torn down) by
+    /// a GPU/node failure; the retry falls back to the tiered path.
+    pub pipeline_cancellations: u64,
 }
 
 impl RunStats {
@@ -226,6 +258,15 @@ impl RunStats {
         self.degrades += o.degrades;
         self.degrade_restores += o.degrade_restores;
         self.degrade_retimes += o.degrade_retimes;
+        self.snapshot_builds += o.snapshot_builds;
+        self.snapshots_built += o.snapshots_built;
+        self.snapshot_builds_cancelled += o.snapshot_builds_cancelled;
+        self.snapshot_builds_declined += o.snapshot_builds_declined;
+        self.snapshot_restores += o.snapshot_restores;
+        self.pipelined_loads += o.pipelined_loads;
+        self.pipelined_shards += o.pipelined_shards;
+        self.pipeline_consolidations += o.pipeline_consolidations;
+        self.pipeline_cancellations += o.pipeline_cancellations;
     }
 }
 
@@ -442,6 +483,7 @@ pub fn outcome_from_phases(
         batch_size,
         phases,
         backbone_tier: None,
+        cold_path: ColdPath::Warm,
     }
 }
 
@@ -461,6 +503,7 @@ mod tests {
             output_tokens: 100,
             batch_size: 4,
             backbone_tier: None,
+            cold_path: ColdPath::Warm,
         }
     }
 
@@ -593,6 +636,38 @@ mod tests {
         assert_eq!(a.degrades, 3);
         assert_eq!(a.degrade_restores, 2);
         assert_eq!(a.degrade_retimes, 7);
+    }
+
+    #[test]
+    fn coldstart_counters_merge_additively() {
+        let mut a = RunStats {
+            snapshot_builds: 2,
+            snapshot_restores: 1,
+            pipelined_loads: 1,
+            ..RunStats::default()
+        };
+        let b = RunStats {
+            snapshot_builds: 1,
+            snapshots_built: 1,
+            snapshot_builds_cancelled: 1,
+            snapshot_builds_declined: 1,
+            snapshot_restores: 4,
+            pipelined_loads: 2,
+            pipelined_shards: 6,
+            pipeline_consolidations: 1,
+            pipeline_cancellations: 1,
+            ..RunStats::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.snapshot_builds, 3);
+        assert_eq!(a.snapshots_built, 1);
+        assert_eq!(a.snapshot_builds_cancelled, 1);
+        assert_eq!(a.snapshot_builds_declined, 1);
+        assert_eq!(a.snapshot_restores, 5);
+        assert_eq!(a.pipelined_loads, 3);
+        assert_eq!(a.pipelined_shards, 6);
+        assert_eq!(a.pipeline_consolidations, 1);
+        assert_eq!(a.pipeline_cancellations, 1);
     }
 
     #[test]

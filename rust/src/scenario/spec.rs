@@ -12,6 +12,7 @@
 
 use crate::artifact::ModelProfile;
 use crate::cluster::Cluster;
+use crate::coldstart::{ColdStartKind, ColdStartSpec};
 use crate::sim::config::{BatchingMode, CacheMode, PreloadMode, SystemConfig, TierSpec};
 use crate::sim::workloads as wl;
 use crate::sim::{DegradeSpec, DomainLevel, DomainSpec, FaultSpec, RetrySpec, Workload};
@@ -119,6 +120,11 @@ pub struct SystemSpec {
     /// MTBF/MTTR, transient cold-load failures, and the retry/deadline
     /// policy. `None` (the default) keeps the fault-free fast path.
     pub faults: Option<FaultSpec>,
+    /// Cold-start strategy (`crate::coldstart::ColdStartSpec`): tiered
+    /// (the historical path), snapshot-restore, or pipelined multi-GPU
+    /// loading, optionally mixed head-vs-tail per function class.
+    /// Requires `tiers`; `None` keeps the pre-subsystem path bit-for-bit.
+    pub cold_start: Option<ColdStartSpec>,
 }
 
 impl SystemSpec {
@@ -132,6 +138,7 @@ impl SystemSpec {
             hit_rate: None,
             tiers: None,
             faults: None,
+            cold_start: None,
         }
     }
 
@@ -299,6 +306,59 @@ impl SystemSpec {
             }
             cfg = cfg.with_faults(fa);
         }
+        if let Some(cs) = self.cold_start {
+            if self.tiers.is_none() {
+                return Err(ScenarioError::BadOverride(
+                    "cold_start requires tiers (the strategies restructure the \
+                     tiered load path; there is nothing to restructure on the \
+                     flat-latency path)"
+                        .to_string(),
+                ));
+            }
+            if cs.head.is_some() && cs.head_fns == 0 {
+                return Err(ScenarioError::BadOverride(
+                    "cold_start.head_fns must be >= 1 when a head strategy is set"
+                        .to_string(),
+                ));
+            }
+            for (v, key) in [
+                (cs.snapshot.build_s, "snapshot.build_s"),
+                (cs.snapshot.restore_s, "snapshot.restore_s"),
+            ] {
+                if !(v.is_finite() && v > 0.0) {
+                    return Err(ScenarioError::BadOverride(format!(
+                        "cold_start.{key} must be a positive finite number of \
+                         seconds, got {v}"
+                    )));
+                }
+            }
+            if !(cs.snapshot.storage_usd_per_gb_h.is_finite()
+                && cs.snapshot.storage_usd_per_gb_h >= 0.0)
+            {
+                return Err(ScenarioError::BadOverride(format!(
+                    "cold_start.snapshot.storage_usd_per_gb_h must be a non-negative \
+                     finite rate, got {}",
+                    cs.snapshot.storage_usd_per_gb_h
+                )));
+            }
+            if !(2..=8).contains(&cs.pipeline.k) {
+                return Err(ScenarioError::BadOverride(format!(
+                    "cold_start.pipeline.k must be in 2..=8 (one target + up to 7 \
+                     sibling shards), got {}",
+                    cs.pipeline.k
+                )));
+            }
+            if !(cs.pipeline.consolidate_frac.is_finite()
+                && cs.pipeline.consolidate_frac > 0.0
+                && cs.pipeline.consolidate_frac <= 1.0)
+            {
+                return Err(ScenarioError::BadOverride(format!(
+                    "cold_start.pipeline.consolidate_frac must be in (0, 1], got {}",
+                    cs.pipeline.consolidate_frac
+                )));
+            }
+            cfg = cfg.with_cold_start(cs);
+        }
         Ok(cfg)
     }
 
@@ -399,6 +459,34 @@ impl SystemSpec {
                 ff.push(("failure_penalty_gb", num(fa.failure_penalty_gb)));
             }
             fields.push(("faults", obj(ff)));
+        }
+        if let Some(cs) = self.cold_start {
+            let mut cf = vec![("strategy", s(cs.strategy.id()))];
+            if let Some(h) = cs.head {
+                cf.push(("head", s(h.id())));
+                cf.push(("head_fns", num(cs.head_fns as f64)));
+            }
+            let d = ColdStartSpec::default();
+            if cs.snapshot != d.snapshot {
+                cf.push((
+                    "snapshot",
+                    obj(vec![
+                        ("build_s", num(cs.snapshot.build_s)),
+                        ("restore_s", num(cs.snapshot.restore_s)),
+                        ("storage_usd_per_gb_h", num(cs.snapshot.storage_usd_per_gb_h)),
+                    ]),
+                ));
+            }
+            if cs.pipeline != d.pipeline {
+                cf.push((
+                    "pipeline",
+                    obj(vec![
+                        ("k", num(cs.pipeline.k as f64)),
+                        ("consolidate_frac", num(cs.pipeline.consolidate_frac)),
+                    ]),
+                ));
+            }
+            fields.push(("cold_start", obj(cf)));
         }
         obj(fields)
     }
@@ -509,6 +597,60 @@ impl SystemSpec {
                 fa.failure_penalty_gb = x;
             }
             spec.faults = Some(fa);
+        }
+        if let Some(cj) = j.get("cold_start") {
+            let kind_field = |key: &str| -> Result<Option<ColdStartKind>, ScenarioError> {
+                match cj.get(key) {
+                    None => Ok(None),
+                    Some(x) => {
+                        let id = x.as_str().ok_or_else(|| {
+                            ScenarioError::Parse(format!(
+                                "system.cold_start.{key} must be a strategy id string"
+                            ))
+                        })?;
+                        ColdStartKind::from_id(id)
+                            .map(Some)
+                            .ok_or_else(|| {
+                                ScenarioError::Parse(format!(
+                                    "system.cold_start.{key} must be one of {}, got '{id}'",
+                                    ColdStartKind::IDS.join(", ")
+                                ))
+                            })
+                    }
+                }
+            };
+            let mut cs = ColdStartSpec::default();
+            if let Some(k) = kind_field("strategy")? {
+                cs.strategy = k;
+            }
+            cs.head = kind_field("head")?;
+            if let Some(n) = opt_usize(cj, "head_fns", "system.cold_start")? {
+                cs.head_fns = n;
+            }
+            if let Some(sj) = cj.get("snapshot") {
+                if let Some(x) = opt_num(sj, "build_s", "system.cold_start.snapshot")? {
+                    cs.snapshot.build_s = x;
+                }
+                if let Some(x) = opt_num(sj, "restore_s", "system.cold_start.snapshot")? {
+                    cs.snapshot.restore_s = x;
+                }
+                if let Some(x) =
+                    opt_num(sj, "storage_usd_per_gb_h", "system.cold_start.snapshot")?
+                {
+                    cs.snapshot.storage_usd_per_gb_h = x;
+                }
+            }
+            if let Some(pj) = cj.get("pipeline") {
+                if let Some(x) = opt_usize(pj, "k", "system.cold_start.pipeline")? {
+                    cs.pipeline.k = x;
+                }
+                if let Some(x) =
+                    opt_num(pj, "consolidate_frac", "system.cold_start.pipeline")?
+                {
+                    cs.pipeline.consolidate_frac = x;
+                }
+            }
+            spec.cold_start = Some(cs);
         }
         if let Some(b) = j.get("batching") {
             let kind = req_str(b, "kind", "system.batching")?;
@@ -1303,6 +1445,13 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Select a cold-start strategy (snapshot-restore, pipelined, or an
+    /// explicit tiered policy; requires [`ScenarioBuilder::tiers`]).
+    pub fn cold_start(mut self, cs: ColdStartSpec) -> Self {
+        self.spec.system.cold_start = Some(cs);
+        self
+    }
+
     pub fn cluster(mut self, c: ClusterSpec) -> Self {
         self.spec.cluster = c;
         self
@@ -1962,6 +2111,104 @@ mod tests {
         assert_eq!(fa.retry.max_retries, 1);
         assert_eq!(fa.retry.deadline_s, RetrySpec::default().deadline_s);
         spec.validate().unwrap();
+    }
+
+    // ------------------------------------------- cold-start strategies
+
+    #[test]
+    fn cold_start_survives_json_roundtrip() {
+        use crate::coldstart::{PipelineParams, SnapshotParams};
+        // Head-vs-tail mix with every parameter off its default.
+        let spec = ScenarioSpec::builder("coldstarts")
+            .tiers(TierSpec::default())
+            .cold_start(ColdStartSpec {
+                strategy: ColdStartKind::Pipelined,
+                head: Some(ColdStartKind::SnapshotRestore),
+                head_fns: 3,
+                snapshot: SnapshotParams {
+                    build_s: 4.0,
+                    restore_s: 0.25,
+                    storage_usd_per_gb_h: 1e-4,
+                },
+                pipeline: PipelineParams { k: 3, consolidate_frac: 0.5 },
+            })
+            .build()
+            .unwrap();
+        let text = spec.to_json().dump();
+        let parsed = ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, spec, "round-trip changed the spec:\n{text}");
+        // The resolved config carries the strategy mix through.
+        let cfg = parsed.system.resolve(Pattern::Normal).unwrap();
+        let cs = cfg.cold_start.expect("cold_start resolved");
+        assert_eq!(cs.strategy, ColdStartKind::Pipelined);
+        assert_eq!(cs.head, Some(ColdStartKind::SnapshotRestore));
+        assert_eq!(cs.head_fns, 3);
+        assert_eq!(cs.pipeline.k, 3);
+        assert_eq!(cs.snapshot.restore_s, 0.25);
+        assert_eq!(cs.strategy_for(0), ColdStartKind::SnapshotRestore);
+        assert_eq!(cs.strategy_for(3), ColdStartKind::Pipelined);
+        // A spec without cold_start resolves to the pre-subsystem path.
+        let plain = ScenarioSpec::builder("plain").build().unwrap();
+        assert!(plain.system.resolve(Pattern::Normal).unwrap().cold_start.is_none());
+    }
+
+    #[test]
+    fn cold_start_parse_fills_defaults() {
+        let j = Json::parse(
+            r#"{"name":"t","system":{"id":"npl","tiers":{},
+                "cold_start":{"strategy":"snapshot-restore"}},
+                "workload":{"kind":"paper"}}"#,
+        )
+        .unwrap();
+        let spec = ScenarioSpec::from_json(&j).unwrap();
+        let cs = spec.system.cold_start.expect("cold_start parsed");
+        assert_eq!(cs.strategy, ColdStartKind::SnapshotRestore);
+        assert!(cs.head.is_none());
+        assert_eq!(cs.snapshot, ColdStartSpec::default().snapshot, "unset fields default");
+        assert_eq!(cs.pipeline, ColdStartSpec::default().pipeline);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn cold_start_rejects_missing_tiers_bad_params_and_bad_ids() {
+        // Without tiers there is no tiered path to restructure.
+        let err = ScenarioSpec::builder("t")
+            .cold_start(ColdStartSpec::uniform(ColdStartKind::SnapshotRestore))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ScenarioError::BadOverride(_)), "{err}");
+        assert!(err.to_string().contains("tiers"), "{err}");
+
+        let patches: [fn(&mut ColdStartSpec); 5] = [
+            |c| c.pipeline.k = 1,
+            |c| c.pipeline.k = 9,
+            |c| c.pipeline.consolidate_frac = 0.0,
+            |c| c.snapshot.build_s = -1.0,
+            |c| c.snapshot.restore_s = f64::NAN,
+        ];
+        for patch in patches {
+            let mut cs = ColdStartSpec::uniform(ColdStartKind::Pipelined);
+            patch(&mut cs);
+            let err = ScenarioSpec::builder("t")
+                .tiers(TierSpec::default())
+                .cold_start(cs)
+                .build()
+                .unwrap_err();
+            assert!(matches!(err, ScenarioError::BadOverride(_)), "{cs:?}: {err}");
+        }
+
+        // An unknown strategy id names the valid vocabulary.
+        let j = Json::parse(
+            r#"{"name":"t","system":{"id":"npl","tiers":{},
+                "cold_start":{"strategy":"lazy"}},
+                "workload":{"kind":"paper"}}"#,
+        )
+        .unwrap();
+        let err = ScenarioSpec::from_json(&j).unwrap_err();
+        assert!(matches!(err, ScenarioError::Parse(_)));
+        for id in ColdStartKind::IDS {
+            assert!(err.to_string().contains(id), "lists '{id}': {err}");
+        }
     }
 
     #[test]

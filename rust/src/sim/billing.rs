@@ -231,6 +231,15 @@ impl Engine {
         Observer::on_bill_sample(&mut self.cost_obs, t0, dt, &sample);
         self.stats.bill_samples += 1;
         self.last_bill_t = until;
+        // Snapshot-storage surcharge (cold-start subsystem): resident
+        // snapshot GB × interval × the policy's storage rate, directly in
+        // dollars (no rate class — snapshots live in host RAM the cache
+        // already owns). The guard keeps every snapshot-free run — and
+        // the historical goldens — float-op free here.
+        if self.snap_gb_total > 0.0 {
+            let rate = self.cold_start.snapshot().storage_usd_per_gb_h;
+            self.cost_obs.cost.snapshot_usd += self.snap_gb_total * dt / 3600.0 * rate;
+        }
         if let Some(s) = self.series.as_mut() {
             s.on_bill_sample(t0, dt, &sample);
         }

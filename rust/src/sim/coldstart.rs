@@ -1,0 +1,880 @@
+//! Cold-start strategy mechanism — the engine half of the sixth policy
+//! axis (`coordinator::policy::ColdStartPolicy`; plain data in
+//! `crate::coldstart`, design in DESIGN.md "Cold-start strategies").
+//!
+//! * **Tiered** — nothing in this module runs: every helper is gated on
+//!   the `cold_start` knob and the per-function strategy class, so
+//!   `cold_start: None` (and the explicit tiered policy) keeps the
+//!   historical segmented load path bit-for-bit.
+//! * **SnapshotRestore** — `try_snapshot_restore` replaces the bring-up
+//!   plan wholesale when the node's host cache holds the function's
+//!   snapshot; `on_cold_load_completed` seeds the build after a full
+//!   tiered load; `on_snapshot_ready` admits it through the cache
+//!   policy (fifth trait); `refresh_snap_gb` keeps the storage
+//!   surcharge integrand current (priced in `sim::billing`).
+//! * **Pipelined** — `plan_pipelined` shrinks the target's backbone
+//!   fetch to `1/K` and `start_pipe_shards` launches the `K-1` sibling
+//!   slices as `FlowNet` flows on *their* nodes' links (the speedup is
+//!   real link hardware, not accounting); the batch holds in `Loading`
+//!   until the last shard lands, and the consolidation transfer —
+//!   gathering the sibling slices over the target's NIC — gates
+//!   instance release, not TTFT: prefill and decode overlap it.
+//!
+//! Shards and consolidations carry synthetic flow ids disjoint from
+//! batch ids (`>= PIPE_ID_BASE`), so they ride the fair-share machinery
+//! — including its retime path — without colliding with load runs.
+
+use std::collections::BTreeMap;
+
+use crate::artifact::{params, LinkKind, PhaseCost, Tier};
+use crate::cluster::GpuId;
+use crate::coldstart::{snap_key, ColdPath, ColdStartKind, SNAP_PREFIX};
+use crate::metrics::Phase;
+use crate::sim::engine::Engine;
+use crate::sim::events::{EventKind, EventToken};
+
+/// Synthetic flow ids for pipelined shards/consolidations live above
+/// every real batch id (batch ids count up from 1).
+pub(super) const PIPE_ID_BASE: u64 = 1 << 48;
+
+/// Is this `FlowNet` flow id a pipelined shard or consolidation (as
+/// opposed to a batch's own load run)?
+pub(super) fn is_pipe_id(id: u64) -> bool {
+    id >= PIPE_ID_BASE
+}
+
+/// Shard `idx` (0-based, < 15) of the pipelined load owned by `batch`.
+fn shard_id(batch: u64, idx: usize) -> u64 {
+    debug_assert!(idx < 0xF, "pipeline width exceeds the shard id nibble");
+    PIPE_ID_BASE | (batch << 4) | idx as u64
+}
+
+/// The consolidation transfer of the pipelined load owned by `batch`
+/// (low nibble 0xF, disjoint from every shard index).
+fn consol_id(batch: u64) -> u64 {
+    PIPE_ID_BASE | (batch << 4) | 0xF
+}
+
+/// The owning batch id of a synthetic pipe flow id.
+fn pipe_batch(id: u64) -> u64 {
+    (id & !PIPE_ID_BASE) >> 4
+}
+
+fn is_consol(id: u64) -> bool {
+    id & 0xF == 0xF
+}
+
+/// The plan for one pipelined cold load, produced by
+/// [`Engine::plan_pipelined`] (which already shrank the target's own
+/// backbone slice) and consumed by [`Engine::start_pipe_shards`] once
+/// the batch exists.
+#[derive(Debug, Clone)]
+pub(super) struct PipePlan {
+    /// Sibling nodes pulling one slice each (node-index order).
+    sibling_nodes: Vec<usize>,
+    /// The transfer legs of one slice: `(link, solo duration)` — the
+    /// same link kinds the target's (tier-resolved) fetch uses, walked
+    /// on the *sibling's* node.
+    segs: Vec<(LinkKind, f64)>,
+    /// Bytes the consolidation pays to gather the sibling slices onto
+    /// the target GPU: `payload × (K-1)/K` over the target node's NIC.
+    consol_gb: f64,
+}
+
+/// One in-flight sibling shard (keyed by its synthetic id in
+/// `Engine::pipe_shards`). Removed when its last leg finishes or its
+/// run aborts; a live entry always holds a live token and a live flow.
+#[derive(Debug, Clone)]
+pub(super) struct PipeShard {
+    /// The sibling node whose links this shard streams over.
+    pub(super) node: usize,
+    pub(super) segs: Vec<(LinkKind, f64)>,
+    pub(super) cursor: usize,
+    /// The completion time currently in the event queue (`token`).
+    pub(super) cur_end_s: f64,
+    pub(super) token: Option<EventToken>,
+}
+
+/// Per-batch pipelined-load state (keyed by the owning batch id in
+/// `Engine::pipe_runs`). Lives from dispatch until the batch finalizes
+/// (the consolidation gates release) or its run aborts.
+#[derive(Debug, Clone)]
+pub(super) struct PipeRun {
+    pub(super) function: usize,
+    /// The target node (consolidation pulls over its NIC).
+    pub(super) node: usize,
+    pub(super) n_shards: usize,
+    pub(super) shards_done: usize,
+    /// The target's own (1/K) load slice finished; the batch is holding
+    /// in `Loading` for the sibling shards.
+    pub(super) own_done: bool,
+    /// When the own slice finished — the shard-wait delta folded into
+    /// the batch's `BackboneLoad` phase is measured from here.
+    pub(super) own_end_s: f64,
+    pub(super) consol_gb: f64,
+    pub(super) consolidating: bool,
+    pub(super) consolidation_done: bool,
+    /// The end time currently scheduled for the consolidation event.
+    pub(super) consol_end_s: f64,
+    pub(super) consol_token: Option<EventToken>,
+    /// Decode finished while the consolidation was still in flight; the
+    /// `ConsolidateDone` event re-enters `finalize_batch`.
+    pub(super) done_pending: bool,
+}
+
+impl Engine {
+    // ------------------------------------------------- snapshot-restore
+
+    /// SnapStart path of `make_resident`: if function `f` uses the
+    /// snapshot-restore strategy and its snapshot sits in the node's
+    /// host cache, replace the whole bring-up plan with the restore —
+    /// a fixed re-hydration plus one PCIe stream of the snapshot body
+    /// (still a contended flow). Returns whether it hit.
+    pub(super) fn try_snapshot_restore(
+        &mut self,
+        f: usize,
+        gpu: GpuId,
+        plan: &mut BTreeMap<Phase, PhaseCost>,
+    ) -> bool {
+        if self.cold_start.strategy(f) != ColdStartKind::SnapshotRestore {
+            return false;
+        }
+        // Only a cold backbone bring-up restores; a warm (or RAM-staged,
+        // transfer-free) dispatch is already cheaper than any restore.
+        if !plan.get(&Phase::BackboneLoad).map_or(false, PhaseCost::has_xfer) {
+            return false;
+        }
+        let (key, gb) = {
+            let spec = &self.functions[f];
+            (snap_key(&spec.name), spec.model.weights_gb + params::CUDA_CONTEXT_GB)
+        };
+        let cache = &mut self.cluster.nodes[gpu.node].cache;
+        if !cache.enabled() || !cache.contains(key) {
+            return false;
+        }
+        self.cache.on_hit(cache, key, self.now);
+        let restore_s = self.cold_start.snapshot().restore_s;
+        plan.clear();
+        plan.insert(Phase::ContainerInit, PhaseCost::fixed(restore_s));
+        plan.insert(Phase::BackboneLoad, PhaseCost::xfer(LinkKind::Pcie, gb));
+        self.stats.snapshot_restores += 1;
+        true
+    }
+
+    /// A cold bring-up completed (`complete_load`). Clears any
+    /// crash-forced tiered fallback for `f`, and — for a
+    /// snapshot-restore function whose load took the full tiered path —
+    /// seeds the snapshot build: `build_s` later a `SnapshotReady`
+    /// event offers it to the node's cache. At most one build per
+    /// `(function, node)` is ever in flight.
+    pub(super) fn on_cold_load_completed(&mut self, f: usize, node: usize, cold_path: ColdPath) {
+        self.pipe_fallback.remove(&f);
+        if cold_path != ColdPath::Tiered
+            || self.cold_start.strategy(f) != ColdStartKind::SnapshotRestore
+            || self.cfg.tiers.is_none()
+        {
+            return;
+        }
+        if !self.cluster.nodes[node].cache.enabled() {
+            return;
+        }
+        let key = snap_key(&self.functions[f].name);
+        if self.cluster.nodes[node].cache.contains(key)
+            || self.snap_builds.contains_key(&(f, node))
+        {
+            return;
+        }
+        let build_s = self.cold_start.snapshot().build_s;
+        self.stats.snapshot_builds += 1;
+        let tok = self.events.push(self.now + build_s, EventKind::SnapshotReady(f, node));
+        self.snap_builds.insert((f, node), tok);
+    }
+
+    /// The snapshot of `f` finished serializing on `node`: offer it to
+    /// the host cache through the cache policy. The policy may evict to
+    /// make room or decline outright (both counted); admission flips
+    /// the surcharge integrand.
+    pub(super) fn on_snapshot_ready(&mut self, f: usize, node: usize) {
+        self.snap_builds.remove(&(f, node));
+        let (key, gb) = {
+            let spec = &self.functions[f];
+            (snap_key(&spec.name), spec.model.weights_gb + params::CUDA_CONTEXT_GB)
+        };
+        let cache = &mut self.cluster.nodes[node].cache;
+        let evicted = self.cache.admit(cache, key, gb, self.now);
+        self.stats.cache_evictions += evicted;
+        if self.cluster.nodes[node].cache.contains(key) {
+            self.stats.snapshots_built += 1;
+        } else {
+            self.stats.snapshot_builds_declined += 1;
+        }
+        self.refresh_snap_gb();
+    }
+
+    /// Recompute the resident-snapshot GB total (the storage-surcharge
+    /// integrand, integrated by `bill_interval`) from the node caches.
+    /// Called after every ledger mutation that can touch `snap:` keys;
+    /// a `cold_start: None` run returns before any float work.
+    pub(super) fn refresh_snap_gb(&mut self) {
+        if self.cfg.cold_start.is_none() {
+            return;
+        }
+        self.snap_gb_total = self
+            .cluster
+            .nodes
+            .iter()
+            .map(|n| n.cache.prefixed_gb(SNAP_PREFIX))
+            .sum();
+    }
+
+    // ------------------------------------------------- pipelined loads
+
+    /// Pipelined path of `dispatch`: if function `f` uses the pipelined
+    /// strategy, its (tier-resolved) backbone fetch reads below host
+    /// RAM, and at least one other up node has an idle up GPU, shrink
+    /// the plan's backbone slice to `1/K_eff` and return the shard plan
+    /// for `start_pipe_shards`. A crash-forced fallback (`pipe_fallback`)
+    /// retries tiered instead.
+    pub(super) fn plan_pipelined(
+        &mut self,
+        f: usize,
+        gpu: GpuId,
+        plan: &mut BTreeMap<Phase, PhaseCost>,
+    ) -> Option<PipePlan> {
+        if self.cold_start.strategy(f) != ColdStartKind::Pipelined
+            || self.pipe_fallback.contains(&f)
+        {
+            return None;
+        }
+        let k = self.cold_start.pipeline().k;
+        if k < 2 {
+            return None;
+        }
+        // A RAM-or-better source (host cache hit, staged copy) is a
+        // single PCIe stream — splitting it across nodes would *add* a
+        // network consolidation for nothing.
+        if !plan.get(&Phase::BackboneLoad).map_or(false, PhaseCost::fetches_below_ram) {
+            return None;
+        }
+        // Sibling nodes in index order: up, not the target, with at
+        // least one idle up GPU to stage the slice into.
+        let mut sibling_nodes = Vec::new();
+        for node in &self.cluster.nodes {
+            if node.id == gpu.node || !self.cluster.node_is_up(node.id) {
+                continue;
+            }
+            let has_idle = node.gpus.iter().any(|g| {
+                self.cluster.gpu_is_up(g.id) && self.gpu_busy[self.gpu_map.dense(g.id)] == 0
+            });
+            if has_idle {
+                sibling_nodes.push(node.id);
+                if sibling_nodes.len() == k - 1 {
+                    break;
+                }
+            }
+        }
+        if sibling_nodes.is_empty() {
+            return None;
+        }
+        let k_eff = 1 + sibling_nodes.len();
+        let caps = self.cfg.tiers.expect("pipelined requires tiers").caps();
+        let cost = plan.get_mut(&Phase::BackboneLoad).expect("checked above");
+        let payload = cost.payload_gb();
+        cost.scale(1.0 / k_eff as f64);
+        let segs: Vec<(LinkKind, f64)> = cost
+            .0
+            .iter()
+            .filter_map(|t| match *t {
+                crate::artifact::Term::Xfer { link, gb } if gb > 0.0 => {
+                    Some((link, gb / caps.gbps(link)))
+                }
+                _ => None,
+            })
+            .collect();
+        debug_assert!(!segs.is_empty(), "a below-RAM fetch has transfer legs");
+        let consol_gb = payload * (k_eff - 1) as f64 / k_eff as f64;
+        Some(PipePlan { sibling_nodes, segs, consol_gb })
+    }
+
+    /// Launch the sibling shards of `batch_id`'s pipelined load (after
+    /// the target's own scaled run joined its links, so join order —
+    /// and every retime it causes — is deterministic). Sibling GPUs are
+    /// *not* marked busy: the slice DMA-streams into idle HBM and the
+    /// router may still dispatch onto them (their links contend, which
+    /// is the honest cost).
+    pub(super) fn start_pipe_shards(&mut self, batch_id: u64, pipe: PipePlan) {
+        let (f, node) = {
+            let b = &self.batches[&batch_id];
+            (b.function, b.gpu.node)
+        };
+        self.stats.pipelined_loads += 1;
+        self.stats.pipelined_shards += pipe.sibling_nodes.len() as u64;
+        self.pipe_runs.insert(
+            batch_id,
+            PipeRun {
+                function: f,
+                node,
+                n_shards: pipe.sibling_nodes.len(),
+                shards_done: 0,
+                own_done: false,
+                own_end_s: 0.0,
+                consol_gb: pipe.consol_gb,
+                consolidating: false,
+                consolidation_done: false,
+                consol_end_s: 0.0,
+                consol_token: None,
+                done_pending: false,
+            },
+        );
+        for (idx, &sib) in pipe.sibling_nodes.iter().enumerate() {
+            let sid = shard_id(batch_id, idx);
+            self.pipe_shards.insert(
+                sid,
+                PipeShard {
+                    node: sib,
+                    segs: pipe.segs.clone(),
+                    cursor: 0,
+                    cur_end_s: 0.0,
+                    token: None,
+                },
+            );
+            self.start_shard_segment(sid);
+        }
+    }
+
+    /// Join the current leg of shard `sid` onto its sibling node's link.
+    fn start_shard_segment(&mut self, sid: u64) {
+        let (node, link, dur) = {
+            let s = &self.pipe_shards[&sid];
+            let (link, dur) = s.segs[s.cursor];
+            (s.node, link, dur)
+        };
+        let (end, retimes) = self.flows.join(node, link, sid, dur, self.now + dur, self.now);
+        let tok = self.events.push(end, EventKind::ShardDone(sid));
+        let s = self.pipe_shards.get_mut(&sid).expect("shard exists");
+        s.cur_end_s = end;
+        s.token = Some(tok);
+        self.apply_load_retimes(retimes);
+    }
+
+    /// A shard leg finished. Advance to the next leg, or retire the
+    /// shard: count it toward its run, start the consolidation once the
+    /// trigger fraction of shards has landed, and — when the last shard
+    /// meets an already-finished target slice — fold the wait into the
+    /// batch's `BackboneLoad` phase and complete the load.
+    pub(super) fn on_shard_done(&mut self, sid: u64) {
+        let (node, link) = {
+            let s = &self.pipe_shards[&sid];
+            (s.node, s.segs[s.cursor].0)
+        };
+        let (_, retimes) = self.flows.finish(node, link, sid, self.now);
+        self.apply_load_retimes(retimes);
+        let retired = {
+            let s = self.pipe_shards.get_mut(&sid).expect("shard exists");
+            s.token = None;
+            s.cursor += 1;
+            s.cursor == s.segs.len()
+        };
+        if !retired {
+            return self.start_shard_segment(sid);
+        }
+        self.pipe_shards.remove(&sid);
+        let batch_id = pipe_batch(sid);
+        let frac = self.cold_start.pipeline().consolidate_frac;
+        let (start_consol, all_landed) = {
+            let run = self.pipe_runs.get_mut(&batch_id).expect("shard without a pipe run");
+            run.shards_done += 1;
+            let trigger = ((frac * run.n_shards as f64).ceil() as usize).max(1);
+            (
+                !run.consolidating && !run.consolidation_done && run.shards_done >= trigger,
+                run.shards_done == run.n_shards && run.own_done,
+            )
+        };
+        if start_consol {
+            self.start_consolidation(batch_id);
+        }
+        if all_landed {
+            let delta = {
+                let run = &self.pipe_runs[&batch_id];
+                self.now - run.own_end_s
+            };
+            // Prefill needed the shard tail: attribute the wait to the
+            // backbone phase so TTFT stays the sum of its phases. An
+            // exactly-synchronous landing adds no term.
+            if delta != 0.0 {
+                let batch = self.batches.get_mut(&batch_id).expect("batch exists");
+                *batch.load_phases.entry(Phase::BackboneLoad).or_insert(0.0) += delta;
+            }
+            self.complete_load(batch_id);
+        }
+    }
+
+    /// Start the consolidation transfer: one flow of `consol_gb` over
+    /// the target node's NIC (the sibling slices stream back across the
+    /// datacenter network), contending fairly with any other load.
+    fn start_consolidation(&mut self, batch_id: u64) {
+        let (node, gb) = {
+            let run = &self.pipe_runs[&batch_id];
+            (run.node, run.consol_gb)
+        };
+        let caps = self.cfg.tiers.expect("pipelined requires tiers").caps();
+        let dur = gb / caps.gbps(LinkKind::Nic);
+        let cid = consol_id(batch_id);
+        let (end, retimes) =
+            self.flows.join(node, LinkKind::Nic, cid, dur, self.now + dur, self.now);
+        let tok = self.events.push(end, EventKind::ConsolidateDone(cid));
+        let run = self.pipe_runs.get_mut(&batch_id).expect("pipe run exists");
+        run.consolidating = true;
+        run.consol_end_s = end;
+        run.consol_token = Some(tok);
+        self.apply_load_retimes(retimes);
+    }
+
+    /// The consolidation landed: every byte of the checkpoint now sits
+    /// on the target GPU. If decode already finished (`done_pending`),
+    /// the batch finalizes now.
+    pub(super) fn on_consolidate_done(&mut self, cid: u64) {
+        let batch_id = pipe_batch(cid);
+        let node = self.pipe_runs[&batch_id].node;
+        let (_, retimes) = self.flows.finish(node, LinkKind::Nic, cid, self.now);
+        self.apply_load_retimes(retimes);
+        let finalize = {
+            let run = self.pipe_runs.get_mut(&batch_id).expect("pipe run exists");
+            run.consolidating = false;
+            run.consolidation_done = true;
+            run.consol_token = None;
+            run.done_pending
+        };
+        self.stats.pipeline_consolidations += 1;
+        if finalize {
+            self.finalize_batch(batch_id);
+        }
+    }
+
+    /// `on_load_done` hook: the target's own slice is done — hold the
+    /// batch in `Loading` while sibling shards are still streaming
+    /// (`on_shard_done` completes the load), else proceed.
+    pub(super) fn pipe_hold_for_shards(&mut self, batch_id: u64) -> bool {
+        let Some(run) = self.pipe_runs.get_mut(&batch_id) else { return false };
+        run.own_done = true;
+        run.own_end_s = self.now;
+        run.shards_done < run.n_shards
+    }
+
+    /// `finalize_batch` hook: a pipelined instance cannot release until
+    /// its consolidation lands. Defers (the `ConsolidateDone` event
+    /// re-enters) or retires the run and lets finalization proceed.
+    pub(super) fn pipe_defer_finalize(&mut self, batch_id: u64) -> bool {
+        let Some(run) = self.pipe_runs.get_mut(&batch_id) else { return false };
+        if !run.consolidation_done {
+            run.done_pending = true;
+            return true;
+        }
+        self.pipe_runs.remove(&batch_id);
+        false
+    }
+
+    /// A `FlowNet` retime hit a synthetic pipe flow: re-arm its own
+    /// event kind (shards and consolidations never ride `LoadDone`).
+    pub(super) fn retime_pipe_flow(&mut self, id: u64, end_s: f64) {
+        if is_consol(id) {
+            let run = self
+                .pipe_runs
+                .get_mut(&pipe_batch(id))
+                .expect("retimed consolidation has a run");
+            if let Some(tok) = run.consol_token.take() {
+                self.events.cancel(tok);
+            }
+            run.consol_end_s = end_s;
+            run.consol_token = Some(self.events.push(end_s, EventKind::ConsolidateDone(id)));
+        } else {
+            let s = self.pipe_shards.get_mut(&id).expect("retimed shard exists");
+            if let Some(tok) = s.token.take() {
+                self.events.cancel(tok);
+            }
+            s.cur_end_s = end_s;
+            s.token = Some(self.events.push(end_s, EventKind::ShardDone(id)));
+        }
+        self.stats.load_retimes += 1;
+    }
+
+    /// Tear down `batch_id`'s pipelined run (load failure or crash):
+    /// cancel shard and consolidation events, pull their flows off the
+    /// links (survivors re-time at their fatter share), and force the
+    /// function's next cold start onto the tiered path. Idempotent —
+    /// a batch without a pipe run is a no-op.
+    pub(super) fn abort_pipe_run(&mut self, batch_id: u64) {
+        let Some(run) = self.pipe_runs.remove(&batch_id) else { return };
+        for idx in 0..run.n_shards {
+            let sid = shard_id(batch_id, idx);
+            if let Some(shard) = self.pipe_shards.remove(&sid) {
+                if let Some(tok) = shard.token {
+                    self.events.cancel(tok);
+                }
+                let (link, _) = shard.segs[shard.cursor];
+                let (_, retimes) = self.flows.finish(shard.node, link, sid, self.now);
+                self.apply_load_retimes(retimes);
+            }
+        }
+        if run.consolidating {
+            if let Some(tok) = run.consol_token {
+                self.events.cancel(tok);
+            }
+            let (_, retimes) =
+                self.flows.finish(run.node, LinkKind::Nic, consol_id(batch_id), self.now);
+            self.apply_load_retimes(retimes);
+        }
+        self.stats.pipeline_cancellations += 1;
+        self.pipe_fallback.insert(run.function);
+    }
+
+    /// Is this `Loading` batch holding for sibling shards (its own load
+    /// run already retired)? Used by the flow invariants.
+    pub(super) fn pipe_held(&self, batch_id: u64) -> bool {
+        self.pipe_runs.get(&batch_id).map_or(false, |r| r.own_done)
+    }
+
+    // ---------------------------------------------------- fault plumbing
+
+    /// A node (or a GPU and therefore its worker process) failed:
+    /// cancel snapshot builds serializing on it (the memfd died with
+    /// the process; the cache wipe already dropped finished snapshots)
+    /// and kill the pipelined runs streaming a shard from it — their
+    /// batches redispatch, falling back to the tiered path.
+    pub(super) fn coldstart_node_failed(&mut self, node: usize) {
+        if self.cfg.cold_start.is_none() {
+            return;
+        }
+        let builds: Vec<(usize, usize)> = self
+            .snap_builds
+            .keys()
+            .copied()
+            .filter(|&(_, n)| n == node)
+            .collect();
+        for key in builds {
+            let tok = self.snap_builds.remove(&key).expect("listed build exists");
+            self.events.cancel(tok);
+            self.stats.snapshot_builds_cancelled += 1;
+        }
+        let mut victims: Vec<u64> = self
+            .pipe_shards
+            .iter()
+            .filter(|(_, s)| s.node == node)
+            .map(|(&sid, _)| pipe_batch(sid))
+            .collect();
+        victims.sort_unstable();
+        victims.dedup();
+        for b in victims {
+            self.kill_batch(b);
+        }
+        self.refresh_snap_gb();
+    }
+
+    // -------------------------------------------------------- invariants
+
+    /// Brute-force cold-start invariants, called from `check_indexes`:
+    /// build/shard/consolidation events mirror their trackers exactly
+    /// (bit-equal scheduled times, matching flows), the snapshot-build
+    /// counters conserve, and the surcharge integrand equals its ledger
+    /// recomputation.
+    pub(super) fn check_coldstart(&self) {
+        let snap_events = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, &EventKind::SnapshotReady(..)))
+            .count();
+        assert_eq!(snap_events, self.snap_builds.len(), "untracked SnapshotReady events");
+        for (&(f, node), &tok) in &self.snap_builds {
+            let p = self.events.get(tok).expect("tracked SnapshotReady token is dead");
+            assert!(
+                matches!(p.kind, &EventKind::SnapshotReady(ef, en) if ef == f && en == node),
+                "build token for ({f}, {node}) points at {:?}",
+                p.kind
+            );
+        }
+        assert_eq!(
+            self.stats.snapshot_builds,
+            self.stats.snapshots_built
+                + self.stats.snapshot_builds_cancelled
+                + self.stats.snapshot_builds_declined
+                + self.snap_builds.len() as u64,
+            "snapshot builds do not conserve"
+        );
+        let shard_events = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, &EventKind::ShardDone(_)))
+            .count();
+        assert_eq!(shard_events, self.pipe_shards.len(), "untracked ShardDone events");
+        for (&sid, s) in &self.pipe_shards {
+            assert!(s.cursor < s.segs.len(), "shard cursor past end for {sid}");
+            let tok = s.token.expect("live shard without a token");
+            let p = self.events.get(tok).expect("tracked ShardDone token is dead");
+            assert!(
+                matches!(p.kind, &EventKind::ShardDone(id) if id == sid),
+                "shard token for {sid} points at {:?}",
+                p.kind
+            );
+            assert_eq!(
+                p.t.to_bits(),
+                s.cur_end_s.to_bits(),
+                "scheduled shard event drifted for {sid}"
+            );
+            let (link, _) = s.segs[s.cursor];
+            let end = self
+                .flows
+                .scheduled_end(s.node, link, sid)
+                .expect("live shard without a flow");
+            assert_eq!(
+                end.to_bits(),
+                s.cur_end_s.to_bits(),
+                "shard flow/event times diverged for {sid}"
+            );
+            assert!(
+                self.pipe_runs.contains_key(&pipe_batch(sid)),
+                "orphan shard {sid}"
+            );
+        }
+        let consol_events = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, &EventKind::ConsolidateDone(_)))
+            .count();
+        let consolidating = self.pipe_runs.values().filter(|r| r.consolidating).count();
+        assert_eq!(consol_events, consolidating, "untracked ConsolidateDone events");
+        for (&b, run) in &self.pipe_runs {
+            assert!(self.batches.contains_key(&b), "pipe run without a batch {b}");
+            assert!(run.shards_done <= run.n_shards, "over-counted shards for {b}");
+            if run.consolidating {
+                let tok = run.consol_token.expect("consolidating run without a token");
+                let p = self.events.get(tok).expect("tracked ConsolidateDone token is dead");
+                assert!(
+                    matches!(p.kind, &EventKind::ConsolidateDone(id) if id == consol_id(b)),
+                    "consolidation token for {b} points at {:?}",
+                    p.kind
+                );
+                assert_eq!(
+                    p.t.to_bits(),
+                    run.consol_end_s.to_bits(),
+                    "scheduled consolidation drifted for {b}"
+                );
+            } else {
+                assert!(run.consol_token.is_none(), "idle consolidation holds a token");
+            }
+        }
+        let brute: f64 = self
+            .cluster
+            .nodes
+            .iter()
+            .map(|n| n.cache.prefixed_gb(SNAP_PREFIX))
+            .sum();
+        assert_eq!(
+            brute.to_bits(),
+            self.snap_gb_total.to_bits(),
+            "snapshot surcharge integrand drifted"
+        );
+    }
+}
+
+/// A restored backbone is sourced from host RAM by construction.
+#[allow(dead_code)]
+pub(super) const RESTORE_TIER: Tier = Tier::ContainerRam;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::{FunctionSpec, ModelProfile};
+    use crate::cluster::Cluster;
+    use crate::coldstart::ColdStartSpec;
+    use crate::sim::config::{SystemConfig, TierSpec};
+    use crate::sim::engine::{Engine, Workload};
+    use crate::trace::Request;
+
+    /// `n` requests to one function, spaced far beyond keep-alive — every
+    /// request is an isolated cold start.
+    fn spaced(n: usize, gap_s: f64) -> Workload {
+        let functions = vec![FunctionSpec::new(0, ModelProfile::llama2_7b(), 0)];
+        let requests: Vec<Request> = (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                function: 0,
+                arrival_s: i as f64 * gap_s,
+                prompt_tokens: 256,
+                output_tokens: 64,
+            })
+            .collect();
+        Workload {
+            functions,
+            requests,
+            duration_s: n as f64 * gap_s,
+            rates: vec![1.0 / gap_s],
+        }
+    }
+
+    fn run_checked(mut e: Engine) -> Engine {
+        let mut steps = 0u64;
+        while e.step() {
+            steps += 1;
+            if steps % 5 == 0 {
+                e.check_indexes();
+            }
+        }
+        e.check_indexes();
+        e
+    }
+
+    #[test]
+    fn snapshot_restore_beats_tiered_on_repeat_colds() {
+        let w = spaced(4, 400.0);
+        let tiered_cfg = SystemConfig::npl().with_tiers(TierSpec::default());
+        let snap_cfg = tiered_cfg
+            .clone()
+            .with_cold_start(ColdStartSpec::uniform(ColdStartKind::SnapshotRestore));
+        let (mt, ct, _) =
+            Engine::new(tiered_cfg, Cluster::new(1, 2, 4), w.clone(), 1).run();
+        let e = run_checked(Engine::new(snap_cfg, Cluster::new(1, 2, 4), w, 1));
+        assert!(e.stats.snapshot_builds >= 1, "first cold load must seed a build");
+        assert!(e.stats.snapshots_built >= 1, "the build never landed in cache");
+        assert!(e.stats.snapshot_restores >= 2, "repeat colds must restore");
+        let (ms, cs, _) = e.finish();
+        assert_eq!(ms.outcomes.len(), mt.outcomes.len());
+        let t0 = mt.outcomes.iter().find(|o| o.id == 0).unwrap();
+        let s0 = ms.outcomes.iter().find(|o| o.id == 0).unwrap();
+        assert_eq!(s0.cold_path, ColdPath::Tiered, "first touch takes the tiered path");
+        assert_eq!(
+            s0.ttft_s.to_bits(),
+            t0.ttft_s.to_bits(),
+            "the seeding load is the tiered path bit-for-bit"
+        );
+        for id in [1u64, 2, 3] {
+            let t = mt.outcomes.iter().find(|o| o.id == id).unwrap();
+            let s = ms.outcomes.iter().find(|o| o.id == id).unwrap();
+            assert_eq!(s.cold_path, ColdPath::SnapshotRestore, "request {id}");
+            assert!(
+                s.ttft_s < t.ttft_s,
+                "restore must beat the tiered repeat cold: {} vs {} (request {id})",
+                s.ttft_s,
+                t.ttft_s
+            );
+        }
+        assert!(cs.snapshot_usd > 0.0, "resident snapshot must bill storage");
+        assert_eq!(ct.snapshot_usd, 0.0, "tiered runs pay no surcharge");
+        assert!(cs.total_usd() > 0.0);
+    }
+
+    #[test]
+    fn pipelined_splits_first_touch_across_nodes() {
+        let w = spaced(1, 200.0);
+        let base = SystemConfig::npl().with_tiers(TierSpec::default());
+        let pipe_cfg = base
+            .clone()
+            .with_cold_start(ColdStartSpec::uniform(ColdStartKind::Pipelined));
+        let (mt, _, _) = Engine::new(base, Cluster::new(4, 1, 4), w.clone(), 1).run();
+        let e = run_checked(Engine::new(pipe_cfg, Cluster::new(4, 1, 4), w, 1));
+        assert_eq!(e.stats.pipelined_loads, 1);
+        assert_eq!(e.stats.pipelined_shards, 3, "k=4 means 3 sibling shards");
+        assert_eq!(e.stats.pipeline_consolidations, 1);
+        assert_eq!(e.stats.pipeline_cancellations, 0);
+        assert!(e.pipe_runs.is_empty() && e.pipe_shards.is_empty());
+        let (mp, _, _) = e.finish();
+        let t = &mt.outcomes[0];
+        let p = &mp.outcomes[0];
+        assert_eq!(p.cold_path, ColdPath::Pipelined);
+        assert!(
+            p.ttft_s < t.ttft_s,
+            "a 4-way split must beat the solo tiered first touch: {} vs {}",
+            p.ttft_s,
+            t.ttft_s
+        );
+        assert!(
+            p.e2e_s > p.ttft_s,
+            "the consolidation tail gates release, not first token"
+        );
+    }
+
+    #[test]
+    fn pipelined_narrow_cluster_falls_back_to_tiered() {
+        // One node: no siblings exist, so the pipelined strategy
+        // degrades to the tiered path (width 1) with zero pipe state.
+        let w = spaced(2, 400.0);
+        let base = SystemConfig::npl().with_tiers(TierSpec::default());
+        let cfg = base
+            .clone()
+            .with_cold_start(ColdStartSpec::uniform(ColdStartKind::Pipelined));
+        let (mt, _, _) = Engine::new(base, Cluster::new(1, 2, 4), w.clone(), 1).run();
+        let e = run_checked(Engine::new(cfg, Cluster::new(1, 2, 4), w, 1));
+        assert_eq!(e.stats.pipelined_loads, 0, "no siblings, no pipeline");
+        let (mp, _, _) = e.finish();
+        for (a, b) in mt.outcomes.iter().zip(&mp.outcomes) {
+            assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "request {}", a.id);
+        }
+    }
+
+    #[test]
+    fn node_failure_mid_build_cancels_and_rebuilds() {
+        let cfg = SystemConfig::npl()
+            .with_tiers(TierSpec::default())
+            .with_cold_start(ColdStartSpec::uniform(ColdStartKind::SnapshotRestore));
+        let w = spaced(3, 400.0);
+        let n = w.requests.len();
+        let mut e = Engine::new(cfg, Cluster::new(1, 2, 4), w, 1);
+        while e.snap_builds.is_empty() {
+            assert!(e.step(), "a build never started");
+        }
+        e.check_indexes();
+        e.coldstart_node_failed(0);
+        assert!(e.snap_builds.is_empty(), "the in-flight build must cancel");
+        assert_eq!(e.stats.snapshot_builds_cancelled, 1);
+        e.check_indexes();
+        while e.step() {}
+        e.check_indexes();
+        assert!(e.stats.snapshot_builds >= 2, "the next cold load must re-seed");
+        assert!(e.stats.snapshots_built >= 1);
+        assert!(e.stats.snapshot_restores >= 1, "the rebuilt snapshot must serve");
+        let (m, _, _) = e.finish();
+        assert_eq!(m.outcomes.len(), n);
+    }
+
+    #[test]
+    fn crash_mid_consolidation_cancels_and_falls_back() {
+        use crate::sim::fault::FaultSpec;
+        // Dormant injector: the retry plumbing exists, nothing fires on
+        // its own — the kill below is the only fault.
+        let cfg = SystemConfig::npl()
+            .with_tiers(TierSpec::default())
+            .with_cold_start(ColdStartSpec::uniform(ColdStartKind::Pipelined))
+            .with_faults(FaultSpec {
+                mtbf_s: 1e15,
+                load_fail_prob: 0.0,
+                ..FaultSpec::default()
+            });
+        let w = spaced(1, 400.0);
+        let mut e = Engine::new(cfg, Cluster::new(4, 1, 4), w, 1);
+        while !e.pipe_runs.values().any(|r| r.consolidating) {
+            assert!(e.step(), "a consolidation never started");
+        }
+        e.check_indexes();
+        let (&b, _) = e.pipe_runs.iter().next().expect("run exists");
+        e.kill_batch(b);
+        e.check_indexes();
+        assert!(e.pipe_runs.is_empty() && e.pipe_shards.is_empty());
+        assert_eq!(e.stats.pipeline_cancellations, 1);
+        assert_eq!(e.stats.pipeline_consolidations, 0, "cancelled before landing");
+        assert!(e.pipe_fallback.contains(&0), "the retry must fall back to tiered");
+        let mut steps = 0u64;
+        while e.step() {
+            steps += 1;
+            if steps % 5 == 0 {
+                e.check_indexes();
+            }
+        }
+        e.check_indexes();
+        assert_eq!(e.stats.pipelined_loads, 1, "the retry must not re-pipeline");
+        let (m, _, st) = e.finish();
+        assert!(st.redispatched >= 1, "the killed batch must redispatch");
+        assert_eq!(m.outcomes.len() + m.failed as usize, 1, "conservation");
+        if let Some(o) = m.outcomes.first() {
+            assert_eq!(o.cold_path, ColdPath::Tiered, "fallback path on retry");
+        }
+    }
+}

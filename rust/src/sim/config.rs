@@ -11,11 +11,13 @@
 //! adding a bundle constructor here — never touching the engine core.
 
 use crate::artifact::{params, LinkCaps};
+use crate::coldstart::ColdStartSpec;
 use crate::coordinator::policy::{
-    AdaptiveBatching, BatchingPolicy, BillingModel, CachePolicy, DynamicOffload,
-    FastCheckpointPreload, FixedBatching, FullPreload, LruCache, NoOffload, NoPreload,
-    OffloadPolicy, OpportunisticPreload, PinHotCache, PolicyBundle, PredictivePreload,
-    PreloadPolicy, ServerfulBilling, ServerfulResident, ServerlessBilling, SizeAwareLruCache,
+    AdaptiveBatching, BatchingPolicy, BillingModel, CachePolicy, ColdStartPolicy,
+    DynamicOffload, FastCheckpointPreload, FixedBatching, FullPreload, LruCache, NoOffload,
+    NoPreload, OffloadPolicy, OpportunisticPreload, PinHotCache, PolicyBundle,
+    PredictivePreload, PreloadPolicy, ServerfulBilling, ServerfulResident,
+    ServerlessBilling, SizeAwareLruCache, SpecColdStart, TieredColdStart,
 };
 use crate::sim::fault::FaultSpec;
 use crate::trace::Pattern;
@@ -158,6 +160,13 @@ pub struct SystemConfig {
     /// system) builds no injector, draws no RNG, schedules no events —
     /// bit-identical to a faultless build.
     pub faults: Option<FaultSpec>,
+    /// Cold-start strategy (sixth policy axis): snapshot-restore and
+    /// pipelined multi-GPU loading as alternatives to the tiered walk.
+    /// `None` (the default for every named system) selects the tiered
+    /// strategy and performs zero additional work — bit-identical to
+    /// pre-subsystem builds.  Requires `tiers` to be set to take effect
+    /// (the alternative paths are defined over the tiered machinery).
+    pub cold_start: Option<ColdStartSpec>,
 }
 
 impl SystemConfig {
@@ -174,6 +183,7 @@ impl SystemConfig {
             keepalive_s: 180.0,
             tiers: None,
             faults: None,
+            cold_start: None,
         }
     }
 
@@ -190,6 +200,7 @@ impl SystemConfig {
             keepalive_s: 180.0,
             tiers: None,
             faults: None,
+            cold_start: None,
         }
     }
 
@@ -209,6 +220,7 @@ impl SystemConfig {
             keepalive_s: 180.0,
             tiers: None,
             faults: None,
+            cold_start: None,
         }
     }
 
@@ -226,6 +238,7 @@ impl SystemConfig {
             keepalive_s: f64::INFINITY,
             tiers: None,
             faults: None,
+            cold_start: None,
         }
     }
 
@@ -240,6 +253,7 @@ impl SystemConfig {
             keepalive_s: f64::INFINITY,
             tiers: None,
             faults: None,
+            cold_start: None,
         }
     }
 
@@ -315,6 +329,12 @@ impl SystemConfig {
         self
     }
 
+    /// Select a cold-start strategy on any named system (builder style).
+    pub fn with_cold_start(mut self, cold_start: ColdStartSpec) -> Self {
+        self.cold_start = Some(cold_start);
+        self
+    }
+
     // ------------------------------------------------------ policy bundles
 
     /// Build the policy bundle this configuration describes. `seed` feeds
@@ -356,7 +376,13 @@ impl SystemConfig {
                 CacheMode::SizeAwareLru => Box::new(SizeAwareLruCache),
                 CacheMode::PinHot => Box::new(PinHotCache::default()),
             };
-        PolicyBundle { preload, batching, offload, billing, cache }
+        let cold_start: Box<dyn ColdStartPolicy> = match self.cold_start {
+            Some(cs) => Box::new(SpecColdStart::new(cs)),
+            // `None` carries the inert tiered default; the engine never
+            // walks the cold-start branches without the spec anyway.
+            None => Box::new(TieredColdStart::default()),
+        };
+        PolicyBundle { preload, batching, offload, billing, cache, cold_start }
     }
 }
 
@@ -472,5 +498,42 @@ mod tests {
             assert_eq!(CacheMode::from_id(id).unwrap().id(), id);
         }
         assert!(CacheMode::from_id("mru").is_none());
+    }
+
+    #[test]
+    fn cold_start_knob_maps_onto_the_sixth_policy() {
+        use crate::coldstart::{ColdStartKind, ColdStartSpec};
+        // Every named system ships without a cold-start spec (tiered).
+        assert!(SystemConfig::serverless_lora().cold_start.is_none());
+        assert!(SystemConfig::vllm().cold_start.is_none());
+        let b = SystemConfig::serverless_lora().bundle(1);
+        assert_eq!(b.cold_start.name(), "tiered");
+        assert_eq!(b.cold_start.strategy(0), ColdStartKind::Tiered);
+
+        let cfg = SystemConfig::npl()
+            .with_tiers(TierSpec::default())
+            .with_cold_start(ColdStartSpec::uniform(ColdStartKind::SnapshotRestore));
+        let b = cfg.bundle(1);
+        assert_eq!(b.cold_start.name(), "snapshot-restore");
+        assert_eq!(b.cold_start.strategy(7), ColdStartKind::SnapshotRestore);
+
+        // Head/tail mixing answers per function id.
+        let mixed = SystemConfig::npl().with_cold_start(ColdStartSpec {
+            strategy: ColdStartKind::Pipelined,
+            head: Some(ColdStartKind::SnapshotRestore),
+            head_fns: 1,
+            ..ColdStartSpec::default()
+        });
+        let b = mixed.bundle(1);
+        assert_eq!(b.cold_start.name(), "mixed");
+        assert_eq!(b.cold_start.strategy(0), ColdStartKind::SnapshotRestore);
+        assert_eq!(b.cold_start.strategy(1), ColdStartKind::Pipelined);
+        assert!(b.cold_start.pipeline().k >= 2);
+        assert!(b.cold_start.snapshot().restore_s > 0.0);
+
+        for id in ColdStartKind::IDS {
+            assert_eq!(ColdStartKind::from_id(id).unwrap().id(), id);
+        }
+        assert!(ColdStartKind::from_id("flash").is_none());
     }
 }

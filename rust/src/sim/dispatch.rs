@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 
 use crate::artifact::{params, ArtifactKind, FunctionSpec, LinkCaps, LinkKind, PhaseCost, Term, Tier};
 use crate::cluster::{ContainerId, GpuId};
+use crate::coldstart::ColdPath;
 use crate::coordinator::policy::{LoadQuery, PolicyEnv};
 use crate::coordinator::{Queued, Readiness, Router};
 use crate::metrics::{Phase, RequestOutcome};
@@ -47,6 +48,10 @@ pub(super) struct Batch {
     /// the [`LoadRun`]). Held so a GPU crash can cancel it in O(1);
     /// cleared when the event fires.
     pub(super) load_token: Option<EventToken>,
+    /// Which cold-start path this batch's bring-up took (`Warm` when
+    /// nothing had to load). Stamped at dispatch, surfaced on every
+    /// request outcome (`RequestOutcome::cold_path`).
+    pub(super) cold_path: ColdPath,
 }
 
 /// One segment of a tiered load: a contended transfer (`link: Some`) or a
@@ -376,7 +381,16 @@ impl Engine {
         // Mutate ledgers: make everything resident, reserve KV.
         let batch_id = self.next_batch;
         self.next_batch += 1;
-        let (mut plan, backbone_tier) = self.make_resident(f, &spec, gpu, readiness);
+        let (mut plan, backbone_tier, restored) = self.make_resident(f, &spec, gpu, readiness);
+        // Cold-start subsystem: a pipelined-strategy function splits a
+        // below-RAM backbone fetch across idle sibling nodes — the
+        // target's slice shrinks to 1/K here; the K-1 sibling shards
+        // start after the batch exists (`start_pipe_shards`).
+        let pipe = if self.cfg.cold_start.is_some() && self.cfg.tiers.is_some() {
+            self.plan_pipelined(f, gpu, &mut plan)
+        } else {
+            None
+        };
         let kv_gb = spec.model.kv_per_request_gb * b as f64;
         self.cluster
             .gpu_mut(gpu)
@@ -420,6 +434,13 @@ impl Engine {
         } else {
             self.stats.warm_dispatches += 1;
         }
+        let mut cold_path = if total_load > 0.0 { ColdPath::Tiered } else { ColdPath::Warm };
+        if restored {
+            cold_path = ColdPath::SnapshotRestore;
+        }
+        if pipe.is_some() {
+            cold_path = ColdPath::Pipelined;
+        }
         // Fault injection: a cold load may fail in transit. The draw
         // happens only when an injector exists AND there is a load to
         // fail, so the faultless path performs zero RNG draws (the
@@ -444,6 +465,7 @@ impl Engine {
                 backbone_tier,
                 failed_load,
                 load_token: None,
+                cold_path,
             },
         );
         self.fn_inflight[f] += 1;
@@ -497,6 +519,13 @@ impl Engine {
             let tok = self.events.push(self.now + wall, EventKind::LoadDone(batch_id));
             self.batches.get_mut(&batch_id).expect("just inserted").load_token = Some(tok);
         }
+        // Cold-start subsystem: launch the K-1 sibling shards after the
+        // target's own (scaled) segmented load joined its links, so the
+        // join order — and every retime it causes — is deterministic.
+        if let Some(pipe) = pipe {
+            debug_assert!(segmented, "a pipelined backbone fetch is always segmented");
+            self.start_pipe_shards(batch_id, pipe);
+        }
         // Residual queue: cancel the pre-dispatch checks and re-arm for
         // what is left.
         self.arm_queue_wakeups(f);
@@ -543,18 +572,19 @@ impl Engine {
     }
 
     /// Make all artifacts of `f` resident on `gpu`, returning the phase →
-    /// cost-term plan for whatever had to be loaded (§6.3 breakdown) plus
-    /// the memory tier the cold backbone was sourced from (None when warm
-    /// or when the tiered store is disabled). The preload policy prices
-    /// the phases; the ledger mutations below are mechanism, identical
-    /// for every policy.
+    /// cost-term plan for whatever had to be loaded (§6.3 breakdown), the
+    /// memory tier the cold backbone was sourced from (None when warm
+    /// or when the tiered store is disabled), and whether a resident
+    /// snapshot short-circuited the bring-up (`sim::coldstart`). The
+    /// preload policy prices the phases; the ledger mutations below are
+    /// mechanism, identical for every policy.
     pub(super) fn make_resident(
         &mut self,
         f: usize,
         spec: &FunctionSpec,
         gpu: GpuId,
         ready: Readiness,
-    ) -> (BTreeMap<Phase, PhaseCost>, Option<Tier>) {
+    ) -> (BTreeMap<Phase, PhaseCost>, Option<Tier>, bool) {
         let m = &spec.model;
         // A pre-warmed instance (policy-staged kernels + CUDA context) is
         // as good as a keep-alive-warm one — the §6.3 claim that fully
@@ -607,13 +637,27 @@ impl Engine {
                 }
             }
         }
+        // Cold-start subsystem: a snapshot-restore-strategy function
+        // whose snapshot sits in the node's host cache skips the whole
+        // segmented bring-up for a near-constant restore (the plan is
+        // replaced wholesale; see `sim::coldstart`). Fully gated on the
+        // `cold_start` knob, so `None` runs never reach the helper.
+        let mut restored = false;
+        if self.cfg.cold_start.is_some() && self.cfg.tiers.is_some() {
+            restored = self.try_snapshot_restore(f, gpu, &mut plan);
+        }
         // Tiered store: resolve where the cold backbone actually comes
         // from by walking the memory hierarchy — host-RAM checkpoint
         // cache, then node NVMe (when seeded), then the remote store —
         // and retarget the transfer terms accordingly. The cache policy
         // (fifth trait in the bundle) decides admission and eviction.
         let mut backbone_tier = None;
-        if let Some(tiers) = self.cfg.tiers {
+        if restored {
+            // The restore replaced the plan; the hierarchy walk must not
+            // re-source it (a restore is not a tiered cold load in the
+            // tier-hit ledger — it never touched the checkpoint store).
+            backbone_tier = Some(Tier::ContainerRam);
+        } else if let Some(tiers) = self.cfg.tiers {
             if let Some(cost) = plan.get_mut(&Phase::BackboneLoad) {
                 if cost.has_xfer() {
                     self.stats.tiered_cold_loads += 1;
@@ -681,7 +725,11 @@ impl Engine {
                 .create_cuda_context(f)
                 .expect("sized in dispatch");
         }
-        (plan, backbone_tier)
+        // Checkpoint admissions above may have evicted snapshots; keep
+        // the storage-surcharge integrand current (no-op with the
+        // cold-start knob off).
+        self.refresh_snap_gb();
+        (plan, backbone_tier, restored)
     }
 
     // ------------------------------------------------- tiered load path
@@ -719,8 +767,14 @@ impl Engine {
     /// Re-arm the completion events of flows whose fair share changed:
     /// O(1) cancel of the stale token, push at the new end. The touched
     /// runs lose nominal status — their clocks now belong to `FlowNet`.
+    /// Pipelined shard/consolidation flows carry synthetic ids disjoint
+    /// from batch ids and re-arm their own event kinds instead.
     pub(super) fn apply_load_retimes(&mut self, retimes: Vec<Retime>) {
         for r in retimes {
+            if crate::sim::coldstart::is_pipe_id(r.batch) {
+                self.retime_pipe_flow(r.batch, r.end_s);
+                continue;
+            }
             let run = self.load_runs.get_mut(&r.batch).expect("retimed run exists");
             if let Some(tok) = run.token.take() {
                 self.events.cancel(tok);
@@ -779,14 +833,30 @@ impl Engine {
         // Fault injection: the load was drawn as a transient failure at
         // dispatch time — the batch dies here instead of starting
         // prefill (its requests retry with backoff; see `sim::fault`).
+        // Any sibling shards die with it (they DMAed for nothing).
         if self.batches[&batch_id].failed_load {
+            self.abort_pipe_run(batch_id);
             return self.on_load_failed(batch_id);
         }
-        let (gpu, f, b) = {
+        // Pipelined cold start: the target's own 1/K slice is done, but
+        // prefill needs the whole checkpoint — hold in `Loading` until
+        // the last sibling shard lands (`sim::coldstart::on_shard_done`
+        // folds the wait into the phase map and completes the load).
+        if self.pipe_hold_for_shards(batch_id) {
+            return;
+        }
+        self.complete_load(batch_id);
+    }
+
+    /// Loading → Prefill: every byte of the batch's bring-up has landed.
+    /// The tail of `on_load_done`, split out so a pipelined load can
+    /// complete from its last shard event instead of its own `LoadDone`.
+    pub(super) fn complete_load(&mut self, batch_id: u64) {
+        let (gpu, f, b, cold_path) = {
             let batch = self.batches.get_mut(&batch_id).expect("batch exists");
             batch.state = BatchState::Prefill;
             batch.t_exec_start = self.now;
-            (batch.gpu, batch.function, batch.requests.len())
+            (batch.gpu, batch.function, batch.requests.len(), batch.cold_path)
         };
         // Loading → Prefill: the loading count drops as the exec job
         // starts; the schedule_tick below reclassifies over both.
@@ -795,6 +865,12 @@ impl Engine {
         let work = self.spec(f).model.prefill_s(b);
         self.execs[d].add(self.now, batch_id, work);
         self.schedule_tick(gpu);
+        // Cold-start subsystem: a completed bring-up may seed a snapshot
+        // build (snapshot-restore strategy) and clears any crash-forced
+        // tiered fallback. Gated so `cold_start: None` skips the call.
+        if self.cfg.cold_start.is_some() {
+            self.on_cold_load_completed(f, gpu.node, cold_path);
+        }
     }
 
     /// (Re)schedule the single completion tick for `gpu`: the superseded
@@ -874,6 +950,12 @@ impl Engine {
     }
 
     pub(super) fn finalize_batch(&mut self, batch_id: u64) {
+        // Pipelined cold start: the instance cannot release until its
+        // consolidation transfer (gathering the sibling slices) lands —
+        // decode may outrun it; the `ConsolidateDone` event re-enters.
+        if self.pipe_defer_finalize(batch_id) {
+            return;
+        }
         let batch = self.batches.remove(&batch_id).expect("batch exists");
         let f = batch.function;
         self.fn_inflight[f] -= 1;
@@ -901,6 +983,7 @@ impl Engine {
             let mut outcome: RequestOutcome =
                 crate::metrics::outcome_from_phases(r, phases, tpot, b);
             outcome.backbone_tier = batch.backbone_tier;
+            outcome.cold_path = batch.cold_path;
             if self.injector.is_some() {
                 self.retry_count.remove(&r.id);
             }

@@ -15,8 +15,8 @@ use std::collections::{BTreeMap, BTreeSet, HashMap};
 use crate::artifact::{ArtifactKind, FunctionSpec};
 use crate::cluster::{Cluster, GpuDenseMap, GpuId};
 use crate::coordinator::policy::{
-    BatchingPolicy, CachePolicy, OffloadPolicy, PolicyBundle, PolicyEnv,
-    PreloadPolicy,
+    BatchingPolicy, CachePolicy, ColdStartPolicy, OffloadPolicy, PolicyBundle,
+    PolicyEnv, PreloadPolicy,
 };
 use crate::coordinator::{BatchQueue, KeepAlive};
 use crate::cost::CostTracker;
@@ -24,6 +24,7 @@ use crate::metrics::{RequestOutcome, RunMetrics};
 pub use crate::metrics::RunStats;
 use crate::sharing::BackboneRegistry;
 use crate::sim::billing::{BillClass, BillingIndex};
+use crate::sim::coldstart::{PipeRun, PipeShard};
 use crate::sim::config::SystemConfig;
 use crate::sim::dispatch::{Batch, LoadRun};
 use crate::sim::events::{EventKind, EventQueue, EventToken};
@@ -182,6 +183,25 @@ pub struct Engine {
     /// arena). A crash mid-degrade cancels the episode through this
     /// handle, so a restore never fires on a repaired-cold GPU.
     pub(super) restore_tokens: Vec<Option<EventToken>>,
+    /// §"Cold-start strategies" policy (sixth trait in the bundle):
+    /// tiered (historical path), snapshot-restore, or pipelined. Only
+    /// consulted when `cfg.cold_start` is `Some`.
+    pub(super) cold_start: Box<dyn ColdStartPolicy>,
+    /// In-flight snapshot builds: `(function, node)` → the pending
+    /// `SnapshotReady` token (`sim::coldstart`).
+    pub(super) snap_builds: BTreeMap<(usize, usize), EventToken>,
+    /// In-flight pipelined sibling shards, keyed by synthetic flow id.
+    pub(super) pipe_shards: BTreeMap<u64, PipeShard>,
+    /// Pipelined-load state per owning batch id.
+    pub(super) pipe_runs: BTreeMap<u64, PipeRun>,
+    /// Functions whose next cold start is forced onto the tiered path
+    /// (their last pipelined load was killed by a fault). Cleared on
+    /// the next completed cold load.
+    pub(super) pipe_fallback: BTreeSet<usize>,
+    /// Resident snapshot GB across all node caches — the storage
+    /// surcharge integrand (`sim::billing::bill_interval`). Identically
+    /// 0.0 when `cfg.cold_start` is `None`.
+    pub(super) snap_gb_total: f64,
 }
 
 impl Engine {
@@ -220,7 +240,7 @@ impl Engine {
                 cluster.enable_failure_tracking(f.failure_tau_s, f.failure_penalty_gb);
             }
         }
-        let PolicyBundle { preload, batching, offload, billing, cache } =
+        let PolicyBundle { preload, batching, offload, billing, cache, cold_start } =
             cfg.bundle(seed);
         let mut e = Engine {
             keepalive: KeepAlive::new(cfg.keepalive_s.min(1e12)),
@@ -276,6 +296,12 @@ impl Engine {
             retry_count: HashMap::new(),
             degrade_factor: vec![1.0; n_gpus],
             restore_tokens: vec![None; n_gpus],
+            cold_start,
+            snap_builds: BTreeMap::new(),
+            pipe_shards: BTreeMap::new(),
+            pipe_runs: BTreeMap::new(),
+            pipe_fallback: BTreeSet::new(),
+            snap_gb_total: 0.0,
         };
         e.metrics.duration_s = e.duration_s;
         e.setup();
@@ -376,6 +402,11 @@ impl Engine {
             EventKind::ZoneRecover => self.on_zone_recover(),
             EventKind::GpuDegrade(g) => self.on_gpu_degrade(g),
             EventKind::GpuRestore(g) => self.on_gpu_restore(g),
+            // Cold-start strategies (`sim::coldstart`) — scheduled only
+            // when `cfg.cold_start` selects a non-tiered strategy.
+            EventKind::SnapshotReady(f, n) => self.on_snapshot_ready(f, n),
+            EventKind::ShardDone(id) => self.on_shard_done(id),
+            EventKind::ConsolidateDone(id) => self.on_consolidate_done(id),
         }
         // Fold this event's memory mutations into the billing
         // aggregates (O(GPUs touched)), so the next interval samples the
@@ -821,6 +852,7 @@ impl Engine {
             }
         }
         self.check_flows();
+        self.check_coldstart();
     }
 
     /// Tiered-load invariants: flows ↔ load runs ↔ batches ↔ events stay
@@ -833,6 +865,11 @@ impl Engine {
         // transfer segment, scheduled at the event time the run tracks.
         let mut flow_count = 0usize;
         for (node, link, f) in self.flows.iter() {
+            // Pipelined shard/consolidation flows carry synthetic ids and
+            // are audited by `check_coldstart`, not the load-run index.
+            if crate::sim::coldstart::is_pipe_id(f.batch) {
+                continue;
+            }
             flow_count += 1;
             let run = self.load_runs.get(&f.batch).expect("flow without a load run");
             assert_eq!(run.node, node, "flow node drifted for batch {}", f.batch);
@@ -886,6 +923,13 @@ impl Engine {
                     batch.load_token.is_none(),
                     "segmented batch {b} carries a flat token"
                 );
+            } else if self.pipe_held(b) {
+                // A pipelined batch holding for its sibling shards has
+                // retired its own run; the next event is a ShardDone.
+                assert!(
+                    batch.load_token.is_none(),
+                    "shard-held batch {b} carries a flat token"
+                );
             } else {
                 let tok = batch.load_token.expect("flat loading batch without a token");
                 let p = self.events.get(tok).expect("flat LoadDone token is dead");
@@ -904,8 +948,10 @@ impl Engine {
             .count();
         let loading = self
             .batches
-            .values()
-            .filter(|b| b.state == BatchState::Loading)
+            .iter()
+            .filter(|(&b, batch)| {
+                batch.state == BatchState::Loading && !self.pipe_held(b)
+            })
             .count();
         assert_eq!(load_events, loading, "LoadDone events ≠ loading batches");
         // Host caches honor their capacity; tier hits conserve.
@@ -1298,6 +1344,43 @@ mod tests {
             assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits(), "request {}", a.id);
         }
         assert_eq!(c_off.total_usd().to_bits(), c_on.total_usd().to_bits());
+    }
+
+    #[test]
+    fn dormant_cold_start_is_bit_identical_multi_seed() {
+        // `cold_start: None` bit-identity, probed from the other side:
+        // the explicit tiered policy walks every cold-start-gated branch
+        // (plan hooks, completion hook, surcharge integrand refresh) yet
+        // must reproduce the knobless tiered run bit-for-bit, across
+        // seeds. The `None` side of the identity is the historical
+        // golden/parity suite itself, which this PR leaves untouched.
+        use crate::coldstart::{ColdStartKind, ColdStartSpec};
+        use crate::sim::config::TierSpec;
+        for seed in [1u64, 7, 23] {
+            let w = workload(4, 0.05, 1800.0, Pattern::Bursty);
+            let base = SystemConfig::serverless_lora().with_tiers(TierSpec::default());
+            let (m_off, c_off, _) =
+                Engine::new(base.clone(), Cluster::new(1, 2, 4), w.clone(), seed).run();
+            let tiered = base.with_cold_start(ColdStartSpec::uniform(ColdStartKind::Tiered));
+            let (m_on, c_on, st) =
+                Engine::new(tiered, Cluster::new(1, 2, 4), w, seed).run();
+            assert_eq!(
+                st.snapshot_builds + st.snapshot_restores + st.pipelined_loads,
+                0,
+                "the tiered strategy must touch no snapshot/pipeline machinery"
+            );
+            assert_eq!(m_off.outcomes.len(), m_on.outcomes.len());
+            for (a, b) in m_off.outcomes.iter().zip(&m_on.outcomes) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.ttft_s.to_bits(), b.ttft_s.to_bits(), "request {}", a.id);
+                assert_eq!(a.e2e_s.to_bits(), b.e2e_s.to_bits(), "request {}", a.id);
+            }
+            assert_eq!(
+                c_off.total_usd().to_bits(),
+                c_on.total_usd().to_bits(),
+                "seed {seed}"
+            );
+        }
     }
 
     #[test]

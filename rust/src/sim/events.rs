@@ -79,6 +79,18 @@ pub enum EventKind {
     /// The degraded GPU returns to full speed. Exactly one is
     /// outstanding per degraded GPU; a crash mid-degrade cancels it.
     GpuRestore(GpuId),
+    /// Cold-start subsystem: the snapshot of function `f` being built on
+    /// node `n` is ready for admission into the node's host cache.
+    /// Scheduled only when `SystemConfig::cold_start` selects the
+    /// snapshot-restore strategy; a node/GPU failure cancels it.
+    SnapshotReady(usize, usize),
+    /// Cold-start subsystem: one sibling shard of a pipelined multi-GPU
+    /// backbone load finished its transfer. The id is synthetic
+    /// (`>= 1 << 48`, see `sim::coldstart`), disjoint from batch ids.
+    ShardDone(u64),
+    /// Cold-start subsystem: the post-load consolidation transfer of a
+    /// pipelined load finished; the batch may now finalize.
+    ConsolidateDone(u64),
 }
 
 #[derive(Debug, Clone, PartialEq)]

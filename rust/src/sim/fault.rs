@@ -517,6 +517,7 @@ impl Engine {
             self.cluster.note_crash(g, self.now);
         }
         self.wipe_node_cache(node);
+        self.coldstart_node_failed(node);
         (killed, redispatched)
     }
 
@@ -626,7 +627,12 @@ impl Engine {
     /// or segmented run + live flow), exec jobs, busy/loading counts, KV
     /// reservation, backbone attachment. Returns how many of its
     /// requests were re-enqueued (the rest failed their deadline).
-    fn kill_batch(&mut self, batch_id: u64) -> usize {
+    pub(super) fn kill_batch(&mut self, batch_id: u64) -> usize {
+        // A pipelined cold load dies with its batch: cancel the sibling
+        // shards and any consolidation first (idempotent no-op for the
+        // overwhelmingly common non-pipelined batch), and force the
+        // function's retry onto the tiered path.
+        self.abort_pipe_run(batch_id);
         let batch = self.batches.remove(&batch_id).expect("batch exists");
         let gpu = batch.gpu;
         let f = batch.function;
@@ -697,6 +703,11 @@ impl Engine {
     fn invalidate_gpu(&mut self, g: crate::cluster::GpuId) {
         self.invalidate_gpu_residency(g);
         self.wipe_node_cache(g.node);
+        // The worker process died: snapshot builds serializing on this
+        // node cancel, pipelined shards streaming from it kill their
+        // batches, and the surcharge integrand drops with the wiped
+        // cache (no-op when the cold-start subsystem is off).
+        self.coldstart_node_failed(g.node);
     }
 
     /// The GPU-local half of crash invalidation (no host-cache wipe):
@@ -825,6 +836,7 @@ impl Engine {
             output_tokens: 0,
             batch_size: 0,
             backbone_tier: None,
+            cold_path: Default::default(),
         };
         self.emit_request_failed(&outcome);
     }

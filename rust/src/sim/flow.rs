@@ -585,4 +585,119 @@ mod tests {
             assert_eq!(net.total_active(), 0);
         }
     }
+
+    /// Shape of a pipelined cold load (`sim::coldstart`): one backbone
+    /// payload split into K equal slices, each streaming on its *own*
+    /// node's NIC while random background traffic contends for the same
+    /// links. Every slice's completion must match the oracle's
+    /// re-integration bit-for-bit, and the slices together must drain
+    /// exactly the payload's solo seconds — splitting never creates or
+    /// destroys bytes.
+    #[test]
+    fn pipelined_k_way_slices_conserve_bytes_and_match_oracle() {
+        for seed in [3u64, 11, 29] {
+            let mut rng = Lcg(seed);
+            let k = 2 + rng.below(4) as usize; // 2..=5 slices
+            let mut net = FlowNet::new(k);
+            let mut history: Vec<Record> = Vec::new();
+            let total_solo = 5.0 + rng.f01() * 20.0; // payload at solo bw
+            let slice = total_solo / k as f64;
+
+            // Slices are batches 0..k, all joining at the same instant
+            // (the coldstart module launches them in one event); the
+            // background flows (ids 1000+) arrive throughout.
+            let t0 = 0.25;
+            let mut arrivals: Vec<(f64, usize, LinkKind, u64, f64)> = (0..k)
+                .map(|i| (t0, i, NIC, i as u64, slice))
+                .collect();
+            for b in 0..12u64 {
+                let t = rng.f01() * total_solo;
+                let node = rng.below(k as u64) as usize;
+                let solo = 0.5 + rng.f01() * 6.0;
+                arrivals.push((t, node, NIC, 1000 + b, solo));
+            }
+            arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.3.cmp(&b.3)));
+            arrivals.reverse();
+
+            let mut active: Vec<(f64, u64, usize, LinkKind, u64)> = Vec::new();
+            let mut seq = 0u64;
+            let mut completions = 0u64;
+            let mut sliced_drained = 0.0f64;
+            let mut residue = 0.0f64;
+
+            loop {
+                let next_arrival = arrivals.last().map(|a| a.0);
+                let next_done = active
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0).then(a.1 .1.cmp(&b.1 .1)))
+                    .map(|(i, c)| (i, *c));
+                let (t, is_arrival) = match (next_arrival, next_done) {
+                    (None, None) => break,
+                    (Some(ta), None) => (ta, true),
+                    (None, Some((_, c))) => (c.0, false),
+                    (Some(ta), Some((_, c))) => {
+                        if ta < c.0 {
+                            (ta, true)
+                        } else {
+                            (c.0, false)
+                        }
+                    }
+                };
+
+                if is_arrival {
+                    let (t, node, link, batch, solo) = arrivals.pop().unwrap();
+                    let nominal = t + solo;
+                    history.push((
+                        t,
+                        Op::Join { node, link, batch, solo_s: solo, nominal_end_s: nominal },
+                    ));
+                    let (end, retimes) = net.join(node, link, batch, solo, nominal, t);
+                    active.push((end, seq, node, link, batch));
+                    seq += 1;
+                    for r in retimes {
+                        let slot =
+                            active.iter_mut().find(|c| c.4 == r.batch).expect("retime target");
+                        slot.0 = r.end_s;
+                        slot.1 = seq;
+                        seq += 1;
+                    }
+                } else {
+                    let (idx, (end, _, node, link, batch)) = next_done.unwrap();
+                    active.swap_remove(idx);
+                    let (remaining, predicted, epochs) = integrate(&history, batch);
+                    assert_eq!(
+                        predicted.to_bits(),
+                        end.to_bits(),
+                        "seed {seed}: flow {batch} end diverged from the oracle"
+                    );
+                    if batch < k as u64 {
+                        sliced_drained += epochs.iter().map(|(dt, n)| dt / n).sum::<f64>();
+                        residue += remaining.abs();
+                    }
+                    history.push((end, Op::Finish { node, link, batch }));
+                    let (_, retimes) = net.finish(node, link, batch, end);
+                    completions += 1;
+                    for r in retimes {
+                        let slot =
+                            active.iter_mut().find(|c| c.4 == r.batch).expect("retime target");
+                        slot.0 = r.end_s;
+                        slot.1 = seq;
+                        seq += 1;
+                    }
+                }
+                net.check(t);
+            }
+
+            assert_eq!(completions, k as u64 + 12, "seed {seed}: lost flows");
+            assert_eq!(net.total_active(), 0);
+            // Conservation across the split: K slices of payload/K drain
+            // the whole payload (up to the scheduler's sub-ulp clamp
+            // residue per slice).
+            assert!(
+                (sliced_drained - total_solo).abs() <= 1e-9 * total_solo + residue,
+                "seed {seed}: k={k} slices drained {sliced_drained} of {total_solo}"
+            );
+        }
+    }
 }

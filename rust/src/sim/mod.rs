@@ -7,6 +7,7 @@
 //! it all (see DESIGN.md §3 and §"Scenario API & observers").
 
 pub mod billing;
+pub mod coldstart;
 pub mod config;
 pub mod dispatch;
 pub mod engine;

@@ -305,6 +305,7 @@ impl TraceExport {
             "batch_size".to_string(),
             "cold_start_s".to_string(),
             "backbone_tier".to_string(),
+            "cold_path".to_string(),
         ];
         cols.extend(
             crate::metrics::Phase::ALL
@@ -334,6 +335,7 @@ impl TraceExport {
                 if let Some(t) = o.backbone_tier {
                     fields.push(("backbone_tier", crate::util::json::s(t.name())));
                 }
+                fields.push(("cold_path", crate::util::json::s(o.cold_path.name())));
                 fields.push((
                     "phases",
                     Json::Obj(
@@ -353,7 +355,7 @@ impl TraceExport {
         for (o, status) in &self.rows {
             let tier = o.backbone_tier.map(|t| t.name()).unwrap_or("");
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{}",
                 o.id,
                 o.function,
                 o.arrival_s,
@@ -363,7 +365,8 @@ impl TraceExport {
                 o.output_tokens,
                 o.batch_size,
                 o.cold_start_s(),
-                tier
+                tier,
+                o.cold_path.name()
             ));
             for p in crate::metrics::Phase::ALL {
                 out.push_str(&format!(",{}", o.phases.get(&p).copied().unwrap_or(0.0)));
@@ -480,6 +483,7 @@ mod tests {
             output_tokens: 10,
             batch_size: 1,
             backbone_tier: None,
+            cold_path: Default::default(),
         };
         let mut failed = o.clone();
         failed.id = 2;
@@ -512,6 +516,7 @@ mod tests {
             output_tokens: 10,
             batch_size: 1,
             backbone_tier: None,
+            cold_path: Default::default(),
         };
         Observer::on_request_complete(&mut m, 3.0, &o);
         assert_eq!(m.outcomes.len(), 1);
